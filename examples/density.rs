@@ -1,0 +1,28 @@
+//! Deployment-density experiment (§1/§4.2): pack real sandboxes into a
+//! committed-memory budget, parked Warm vs WokenUp vs Hibernate.
+//!
+//! ```sh
+//! cargo run --release --example density -- [budget-MiB]
+//! ```
+
+use quark_hibernate::bench_support::density_exp;
+
+fn main() {
+    let budget_mib: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256);
+    let quick = std::env::args().any(|a| a == "--quick");
+    let results = density_exp::run(budget_mib << 20, quick);
+    let warm = results.iter().find(|r| r.mode.label() == "warm").unwrap();
+    let hib = results
+        .iter()
+        .find(|r| r.mode.label() == "hibernate")
+        .unwrap();
+    if warm.instances > 0 {
+        println!(
+            "density gain (hibernate vs warm): {:.1}x",
+            hib.instances as f64 / warm.instances as f64
+        );
+    }
+}

@@ -1,0 +1,124 @@
+//! Quickstart: one container through the full Fig. 3 lifecycle.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Cold-starts a Node.js-profile sandbox, serves a request, deflates it to
+//! Hibernate (watch the committed memory drop), wakes it by request
+//! (page-fault swap-in, REAP record), hibernates again (REAP batch
+//! swap-out) and wakes once more via the batched prefetch — printing
+//! latency and footprint at every step.
+
+use anyhow::Result;
+use quark_hibernate::bench_support::best_runner;
+use quark_hibernate::config::SharingConfig;
+use quark_hibernate::container::sandbox::{Sandbox, SandboxServices};
+use quark_hibernate::simtime::{Clock, CostModel};
+use quark_hibernate::util::{human_bytes, human_ns};
+use quark_hibernate::workloads::functionbench::nodejs_hello;
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    let runner = best_runner();
+    let svc = SandboxServices::new_local(
+        2 << 30,
+        CostModel::paper(),
+        SharingConfig::default(),
+        runner,
+        "quickstart",
+    )?;
+    let svc = Arc::new(SandboxServices {
+        reap_enabled: true,
+        host: svc.host.clone(),
+        heap: svc.heap.clone(),
+        cache: svc.cache.clone(),
+        registry: svc.registry.clone(),
+        cost: svc.cost.clone(),
+        sharing: svc.sharing.clone(),
+        swap_dir: svc.swap_dir.clone(),
+        runner: svc.runner.clone(),
+        hostenv: svc.hostenv.clone(),
+    });
+
+    let spec = nodejs_hello();
+    let clock = Clock::new();
+    let mem = |label: &str, sb: &Sandbox| {
+        println!(
+            "  [{label:<18}] state={:<17} pss={:>10}  host committed={:>10}",
+            sb.state().to_string(),
+            human_bytes(sb.footprint().total_bytes()),
+            human_bytes(svc.host.committed_bytes()),
+        );
+    };
+
+    println!("== quark-hibernate quickstart: {} ==", spec.name);
+
+    // ① Cold start + first request.
+    let t = clock.total_ns();
+    let mut sb = Sandbox::cold_start(1, spec, svc.clone(), &clock)?;
+    sb.handle_request(&clock)?;
+    println!("cold start + request:   {}", human_ns(clock.total_ns() - t));
+    mem("warm", &sb);
+
+    // ② Warm request.
+    let t = clock.total_ns();
+    sb.handle_request(&clock)?;
+    println!("warm request:           {}", human_ns(clock.total_ns() - t));
+
+    // ④ SIGSTOP → deflate.
+    let t = clock.total_ns();
+    let rpt = sb.hibernate(&clock)?;
+    println!(
+        "hibernate (deflate):    {}  [{} pages swapped, {} freed pages reclaimed, {} file pages dropped]",
+        human_ns(clock.total_ns() - t),
+        rpt.pages_swapped_out,
+        rpt.freed_pages_reclaimed,
+        rpt.file_pages_released
+    );
+    mem("hibernate", &sb);
+
+    // ⑦ Demand wake: page-fault swap-in + REAP record (sample request).
+    let t = clock.total_ns();
+    let out = sb.handle_request(&clock)?;
+    println!(
+        "wake by request:        {}  [{} pages faulted in, sample_request={}]",
+        human_ns(clock.total_ns() - t),
+        out.anon_faults,
+        out.sample_request
+    );
+    mem("woken-up", &sb);
+
+    // ⑨ SIGSTOP again → REAP batch swap-out this time.
+    let t = clock.total_ns();
+    let rpt = sb.hibernate(&clock)?;
+    println!(
+        "hibernate (REAP):       {}  [used_reap={}, {} working-set pages]",
+        human_ns(clock.total_ns() - t),
+        rpt.used_reap,
+        rpt.pages_swapped_out
+    );
+    mem("hibernate+reap", &sb);
+
+    // ⑦ Wake again: one batched sequential prefetch instead of faults.
+    let t = clock.total_ns();
+    let out = sb.handle_request(&clock)?;
+    println!(
+        "wake by request (REAP): {}  [{} pages prefetched, {} faulted]",
+        human_ns(clock.total_ns() - t),
+        out.reap_prefetched,
+        out.anon_faults
+    );
+    mem("woken-up", &sb);
+
+    // Working-set telemetry (§3.4.1's "10 MB out, 4 MB back" shape).
+    let reap = sb.reap_recorder();
+    println!(
+        "working set: {} swapped out, {} reloaded by the sample request ({:.0}%)",
+        human_bytes(reap.swapped_out_bytes()),
+        human_bytes(reap.recorded_bytes()),
+        reap.working_set_fraction().unwrap_or(0.0) * 100.0
+    );
+    sb.terminate()?;
+    Ok(())
+}

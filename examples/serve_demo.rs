@@ -1,0 +1,145 @@
+//! **End-to-end serving demo** — the required whole-stack validation run.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_demo
+//! ```
+//!
+//! Loads the AOT-compiled `tiny_lm` transformer (Layer 2/1: JAX + Pallas
+//! attention/matmul kernels, lowered to HLO text) into the PJRT runtime,
+//! deploys it plus the paper's FunctionBench suite on the platform, and
+//! serves a trace-driven request mix through the threaded server with the
+//! hibernate policy active. Reports per-path latency (cold / warm /
+//! hibernate / woken-up), throughput, and memory — the numbers EXPERIMENTS
+//! .md records. Every request executes real HLO on the request path:
+//! Python is not running.
+
+use anyhow::{Context, Result};
+use quark_hibernate::config::PlatformConfig;
+use quark_hibernate::platform::server::Server;
+use quark_hibernate::platform::{trace, Platform};
+use quark_hibernate::runtime::PjrtRunner;
+use quark_hibernate::util::{human_bytes, human_ns};
+use quark_hibernate::workloads::functionbench::{
+    float_operation, nodejs_hello, tiny_lm_serving,
+};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> Result<()> {
+    let mut cfg = PlatformConfig::default();
+    cfg.host_memory = 8 << 30;
+    cfg.policy.hibernate_idle_ms = 150;
+    cfg.policy.memory_budget = 2 << 30;
+    cfg.workers = 4;
+
+    // The real runtime — no fallback here: this demo *must* prove the
+    // three-layer stack composes.
+    let runner = PjrtRunner::new(&cfg.artifacts_dir)
+        .context("artifacts missing — run `make artifacts` first")?;
+    runner.precompile_all()?;
+    println!(
+        "PJRT runtime up: {} artifacts {:?}",
+        runner.manifest().artifacts.len(),
+        runner.manifest().names()
+    );
+    // Smoke-check the model output before serving.
+    let logits = runner.execute("tiny_lm", 7)?;
+    println!(
+        "tiny_lm sanity: {} logits, first={:.4}, all finite={}",
+        logits.len(),
+        logits[0],
+        logits.iter().all(|v| v.is_finite())
+    );
+
+    let platform = Arc::new(Platform::new(cfg, Arc::new(runner))?);
+    for spec in [tiny_lm_serving(), nodejs_hello(), float_operation()] {
+        platform.deploy(spec)?;
+    }
+
+    // Trace: tiny_lm gets steady traffic; the others are sparse (so the
+    // hibernate policy has idle gaps to monetize).
+    let duration_ms = 20_000u64;
+    let specs = vec![
+        trace::TraceSpec {
+            workload: "tiny-lm".into(),
+            arrival: trace::Arrival::Poisson {
+                mean_gap_ns: 250_000_000,
+            },
+        },
+        trace::TraceSpec {
+            workload: "nodejs-hello".into(),
+            arrival: trace::Arrival::Bursty {
+                median_gap_ns: 2_000_000_000,
+                sigma: 0.6,
+                burst: 3,
+            },
+        },
+        trace::TraceSpec {
+            workload: "float-operation".into(),
+            arrival: trace::Arrival::Poisson {
+                mean_gap_ns: 1_500_000_000,
+            },
+        },
+    ];
+    let events = trace::generate(&specs, duration_ms * 1_000_000, 0xE2E);
+    println!(
+        "serving {} requests over {}s (3 workloads, hibernate policy on)...",
+        events.len(),
+        duration_ms / 1000
+    );
+
+    let server = Server::start(platform.clone(), 4, Duration::from_millis(25));
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for ev in &events {
+        let due = Duration::from_nanos(ev.at_ns);
+        if let Some(sleep) = due.checked_sub(t0.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        pending.push(server.submit(&ev.workload));
+    }
+    let mut ok = 0u64;
+    let mut errors = 0u64;
+    for rx in pending {
+        match rx.recv() {
+            Ok(Ok(_)) => ok += 1,
+            _ => errors += 1,
+        }
+    }
+    let wall = t0.elapsed();
+    server.shutdown();
+
+    println!("\n== results ==");
+    println!("{}", platform.metrics.report());
+    println!(
+        "served {ok} ok / {errors} errors in {:.1}s → {:.1} req/s",
+        wall.as_secs_f64(),
+        ok as f64 / wall.as_secs_f64()
+    );
+    println!("host committed at end: {}", human_bytes(platform.memory_used()));
+    for (w, rows) in platform.pool_snapshot() {
+        for (i, (state, pss)) in rows.iter().enumerate() {
+            println!("  {w}[{i}]: {state} pss={}", human_bytes(*pss));
+        }
+    }
+
+    // The E2E acceptance checks (EXPERIMENTS.md quotes these):
+    let warm = platform
+        .metrics
+        .mean_latency("tiny-lm", quark_hibernate::platform::metrics::ServedFrom::Warm);
+    let cold = platform
+        .metrics
+        .mean_latency("tiny-lm", quark_hibernate::platform::metrics::ServedFrom::ColdStart);
+    if let (Some(warm), Some(cold)) = (warm, cold) {
+        println!(
+            "tiny-lm: cold {} vs warm {} ({}x)",
+            human_ns(cold as u64),
+            human_ns(warm as u64),
+            (cold / warm) as u64
+        );
+        assert!(warm < cold, "warm must beat cold");
+    }
+    assert!(errors == 0, "no request may fail");
+    println!("E2E OK");
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Trace replay: the full paper workload mix through the virtual-time
+//! platform, comparing the Hibernate policy against the conventional
+//! warm-only (evict) baseline on the *same* trace.
+//!
+//! ```sh
+//! cargo run --release --example trace_replay -- [duration-ms] [mean-gap-ms]
+//! ```
+//!
+//! Prints, per policy: cold-start count, mean/p99 latency and peak memory —
+//! the systems argument of §1 ("higher deployment density, lower latency")
+//! as one experiment.
+
+use anyhow::Result;
+use quark_hibernate::config::PlatformConfig;
+use quark_hibernate::container::NoopRunner;
+use quark_hibernate::platform::policy::Mode;
+use quark_hibernate::platform::{trace, Platform};
+use quark_hibernate::util::{human_bytes, human_ns};
+use quark_hibernate::workloads;
+use std::sync::Arc;
+
+fn run_mode(mode: Mode, events: &[trace::TraceEvent]) -> Result<()> {
+    let mut cfg = PlatformConfig::default();
+    cfg.host_memory = 16 << 30;
+    cfg.policy.hibernate_idle_ms = 500;
+    cfg.policy.memory_budget = 4 << 30;
+    cfg.swap_dir = std::env::temp_dir()
+        .join(format!("qh-replay-{mode:?}-{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    let platform = Platform::with_mode(cfg, Arc::new(NoopRunner), mode)?;
+    for w in workloads::all_workloads() {
+        platform.deploy(w)?;
+    }
+    let reports = platform.run_trace(events)?;
+    let mut lat: Vec<u64> = reports.iter().map(|r| r.latency_ns).collect();
+    lat.sort_unstable();
+    let mean = lat.iter().sum::<u64>() / lat.len().max(1) as u64;
+    let p99 = lat[(lat.len() * 99 / 100).min(lat.len() - 1)];
+    let c = &platform.metrics.counters;
+    use std::sync::atomic::Ordering::Relaxed;
+    println!(
+        "{:<10} requests={:<5} cold={:<4} hibernations={:<4} evictions={:<4} mean={} p99={} mem={}",
+        format!("{mode:?}"),
+        reports.len(),
+        c.cold_starts.load(Relaxed),
+        c.hibernations.load(Relaxed),
+        c.evictions.load(Relaxed),
+        human_ns(mean),
+        human_ns(p99),
+        human_bytes(platform.memory_used()),
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let duration_ms: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30_000);
+    let mean_gap_ms: u64 = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2_000);
+    let events = trace::paper_mix(duration_ms * 1_000_000, mean_gap_ms, 0x7EACE);
+    println!(
+        "== trace replay: {} events, {} workloads, virtual {}s ==",
+        events.len(),
+        8,
+        duration_ms / 1000
+    );
+    run_mode(Mode::WarmOnly, &events)?;
+    run_mode(Mode::Hibernate, &events)?;
+    println!("(Hibernate mode should show fewer cold starts at lower memory)");
+    Ok(())
+}

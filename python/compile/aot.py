@@ -1,0 +1,88 @@
+"""AOT compile path: lower every Layer-2 entry point to **HLO text** and
+write ``artifacts/manifest.json`` for the Rust runtime.
+
+HLO *text* — not ``lowered.compile().serialize()`` — is the interchange
+format: the image's xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos
+(64-bit instruction ids, ``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out ../artifacts`` (what `make artifacts`
+runs). Idempotent; Python never runs after this step.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Entry points and their example input shapes (all f32).
+ENTRY_POINTS = {
+    "float_operation": (model.float_operation, [(256, 256)]),
+    "image_processing": (model.image_processing, [(256, 256, 3)]),
+    "video_processing": (model.video_processing, [(8, 128, 128, 3)]),
+    "tiny_lm": (model.tiny_lm, [(4, 64, model.LM_DIM)]),
+    # Kernel-level artifacts (used by runtime integration tests).
+    "grayscale": (lambda x: __import__(
+        "compile.kernels", fromlist=["grayscale"]
+    ).grayscale(x), [(128, 128, 3)]),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for the loader)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name: str):
+    """Lower one entry point; returns (hlo_text, input_shapes, out_shapes)."""
+    fn, shapes = ENTRY_POINTS[name]
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    out = jax.eval_shape(fn, *specs)
+    out_shapes = [list(out.shape)]
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered), [list(s) for s in shapes], out_shapes
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--only", nargs="*", default=None, help="subset of entry points"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = args.only or list(ENTRY_POINTS)
+    manifest = {"format": "hlo-text-v1", "artifacts": []}
+    for name in names:
+        print(f"lowering {name} ...", flush=True)
+        hlo, in_shapes, out_shapes = lower_entry(name)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(hlo)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": in_shapes,
+                "outputs": out_shapes,
+            }
+        )
+        print(f"  wrote {fname} ({len(hlo)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the AOT artifacts).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode is the correctness + interchange
+path; real-TPU viability is argued from BlockSpec/VMEM analysis in
+DESIGN.md §Hardware-Adaptation and EXPERIMENTS.md §Perf.
+"""
+
+from .grayscale import grayscale, grayscale_video
+from .matmul import matmul
+from .attention import attention
+
+__all__ = ["grayscale", "grayscale_video", "matmul", "attention"]

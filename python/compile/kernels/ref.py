@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness ground truth.
+
+pytest + hypothesis sweep shapes and assert the kernels match these to
+float32 tolerance; the AOT artifacts embed the kernels, so this is the
+core numerical signal for the whole stack.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .grayscale import LUMA_B, LUMA_G, LUMA_R
+
+
+def grayscale_ref(img: jax.Array) -> jax.Array:
+    return img[..., 0] * LUMA_R + img[..., 1] * LUMA_G + img[..., 2] * LUMA_B
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    d = q.shape[-1]
+    s = jnp.einsum("btd,bsd->bts", q, k) / (d**0.5)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bts,bsd->btd", p, v)

@@ -1,0 +1,179 @@
+"""Layer-2 JAX compute graphs: the guest functions' real work.
+
+Each entry point is the compute a serverless request performs in the
+paper's evaluation workloads, expressed over the Layer-1 Pallas kernels:
+
+* ``float_operation``   — FunctionBench's float arithmetic loop;
+* ``image_processing``  — grayscale (Pallas) → normalize → rotate →
+  downsample, FunctionBench's Pillow pipeline analog;
+* ``video_processing``  — the Pallas grayscale kernel vmapped over a frame
+  stack + temporal motion energy, the OpenCV analog;
+* ``tiny_lm``           — a small transformer block stack (Pallas attention
+  + Pallas matmul MLP), the E2E serving demo model.
+
+These are lowered once by ``aot.py`` to HLO text and executed from Rust via
+PJRT; Python never serves requests.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention, grayscale, grayscale_video, matmul
+
+# ---------------------------------------------------------------------------
+# float_operation
+# ---------------------------------------------------------------------------
+
+
+def float_operation(x: jax.Array) -> jax.Array:
+    """FunctionBench float-operation: sqrt/sin/mul chain, 16 rounds.
+
+    The input is mixed back in every round so the result depends on the
+    request payload (a pure sqrt/sin chain would converge to an
+    input-independent fixed point).
+    """
+
+    def body(_, acc):
+        acc = jnp.sqrt(jnp.abs(acc) + 1.0) + 0.25 * x
+        acc = acc * 1.000001 + jnp.sin(acc) * 0.5
+        return acc
+
+    return jax.lax.fori_loop(0, 16, body, x)
+
+
+# ---------------------------------------------------------------------------
+# image_processing
+# ---------------------------------------------------------------------------
+
+
+def _downsample2(img: jax.Array) -> jax.Array:
+    """2× average-pool downsample of a (H, W) image."""
+    h, w = img.shape
+    return img.reshape(h // 2, 2, w // 2, 2).mean(axis=(1, 3))
+
+
+def image_processing(img: jax.Array) -> jax.Array:
+    """Grayscale → contrast normalize → rotate 90° → 2× downsample.
+
+    Mirrors FunctionBench's Pillow transform set. Output (H/2, W/2).
+    """
+    g = grayscale(img)  # Pallas kernel
+    mean = jnp.mean(g)
+    std = jnp.std(g) + 1e-6
+    norm = (g - mean) / std
+    rot = jnp.rot90(norm)  # "image transformation"
+    return _downsample2(rot)
+
+
+# ---------------------------------------------------------------------------
+# video_processing
+# ---------------------------------------------------------------------------
+
+
+def video_processing(frames: jax.Array) -> jax.Array:
+    """Grayscale every frame (Pallas, vmapped) + motion energy.
+
+    frames: (F, H, W, 3) → (F, H, W) grayscale with the last frame replaced
+    by the temporal |diff| sum (a cheap motion map) so the output depends on
+    every frame.
+    """
+    g = grayscale_video(frames)  # (F, H, W)
+    motion = jnp.sum(jnp.abs(jnp.diff(g, axis=0)), axis=0)
+    return g.at[-1].set(motion)
+
+
+# ---------------------------------------------------------------------------
+# tiny_lm — a small transformer (the serve-demo model)
+# ---------------------------------------------------------------------------
+
+LM_LAYERS = 2
+LM_HEADS = 4
+LM_DIM = 256
+LM_MLP = 512
+LM_VOCAB = 512
+
+
+def _lm_params(key: jax.Array):
+    """Deterministic parameters (constant-folded into the artifact)."""
+    ks = jax.random.split(key, 4 + LM_LAYERS * 6)
+    scale = 0.02
+    params = {
+        "out": jax.random.normal(ks[0], (LM_DIM, LM_VOCAB)) * scale,
+    }
+    layers = []
+    for i in range(LM_LAYERS):
+        base = 4 + i * 6
+        layers.append(
+            {
+                "wq": jax.random.normal(ks[base + 0], (LM_DIM, LM_DIM)) * scale,
+                "wk": jax.random.normal(ks[base + 1], (LM_DIM, LM_DIM)) * scale,
+                "wv": jax.random.normal(ks[base + 2], (LM_DIM, LM_DIM)) * scale,
+                "wo": jax.random.normal(ks[base + 3], (LM_DIM, LM_DIM)) * scale,
+                "w1": jax.random.normal(ks[base + 4], (LM_DIM, LM_MLP)) * scale,
+                "w2": jax.random.normal(ks[base + 5], (LM_MLP, LM_DIM)) * scale,
+            }
+        )
+    params["layers"] = layers
+    return params
+
+
+def _layernorm(x: jax.Array) -> jax.Array:
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + 1e-5)
+
+
+def _block(x: jax.Array, p) -> jax.Array:
+    """One pre-LN transformer block over (B, T, D)."""
+    b, t, d = x.shape
+    h = _layernorm(x)
+    flat = h.reshape(b * t, d)
+    q = matmul(flat, p["wq"]).reshape(b, t, LM_HEADS, d // LM_HEADS)
+    k = matmul(flat, p["wk"]).reshape(b, t, LM_HEADS, d // LM_HEADS)
+    v = matmul(flat, p["wv"]).reshape(b, t, LM_HEADS, d // LM_HEADS)
+    # (B, T, H, dh) → (B·H, T, dh) for the fused attention kernel.
+    def to_cells(a):
+        return a.transpose(0, 2, 1, 3).reshape(b * LM_HEADS, t, d // LM_HEADS)
+
+    o = attention(to_cells(q), to_cells(k), to_cells(v))
+    o = o.reshape(b, LM_HEADS, t, d // LM_HEADS).transpose(0, 2, 1, 3).reshape(b * t, d)
+    x = x + matmul(o, p["wo"]).reshape(b, t, d)
+    h = _layernorm(x).reshape(b * t, d)
+    mlp = matmul(jax.nn.gelu(matmul(h, p["w1"])), p["w2"]).reshape(b, t, d)
+    return x + mlp
+
+
+def tiny_lm(embedded: jax.Array) -> jax.Array:
+    """(B, T, D) embeddings → (B, T, V) logits.
+
+    The embedding lookup stays outside (the Rust side feeds embedded
+    activations) so the artifact's interface is pure f32 tensors.
+    """
+    params = _lm_params(jax.random.PRNGKey(42))
+    x = embedded
+    for p in params["layers"]:
+        x = _block(x, p)
+    b, t, d = x.shape
+    logits = matmul(_layernorm(x).reshape(b * t, d), params["out"])
+    return logits.reshape(b, t, LM_VOCAB)
+
+
+# ---------------------------------------------------------------------------
+# Reference (kernel-free) variants for L2-level parity tests
+# ---------------------------------------------------------------------------
+
+
+def image_processing_ref(img: jax.Array) -> jax.Array:
+    from .kernels.ref import grayscale_ref
+
+    g = grayscale_ref(img)
+    norm = (g - jnp.mean(g)) / (jnp.std(g) + 1e-6)
+    return _downsample2(jnp.rot90(norm))
+
+
+def video_processing_ref(frames: jax.Array) -> jax.Array:
+    from .kernels.ref import grayscale_ref
+
+    g = jax.vmap(grayscale_ref)(frames)
+    motion = jnp.sum(jnp.abs(jnp.diff(g, axis=0)), axis=0)
+    return g.at[-1].set(motion)

@@ -1,0 +1,45 @@
+"""AOT path tests: every entry point lowers to parseable HLO text with the
+declared shapes, and the manifest is consistent."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+
+
+@pytest.mark.parametrize("name", list(aot.ENTRY_POINTS))
+def test_entry_point_lowers_to_hlo_text(name):
+    hlo, in_shapes, out_shapes = aot.lower_entry(name)
+    assert "HloModule" in hlo, "must be HLO text, not a serialized proto"
+    assert "ENTRY" in hlo
+    assert len(in_shapes) == len(aot.ENTRY_POINTS[name][1])
+    assert len(out_shapes) == 1
+    assert all(d > 0 for s in out_shapes for d in s)
+
+
+def test_hlo_text_is_ascii():
+    hlo, _, _ = aot.lower_entry("float_operation")
+    hlo.encode("ascii")  # raises on non-ascii — the Rust parser expects text
+
+
+def test_cli_writes_manifest(tmp_path):
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out),
+         "--only", "float_operation"],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["format"] == "hlo-text-v1"
+    (entry,) = manifest["artifacts"]
+    assert entry["name"] == "float_operation"
+    assert (out / entry["file"]).exists()
+    assert entry["inputs"] == [[256, 256]]
+    assert entry["outputs"] == [[256, 256]]

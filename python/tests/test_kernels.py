@@ -1,0 +1,143 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes; assert_allclose at float32 tolerance. This is the
+core numerical signal for everything the Rust side executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, grayscale, grayscale_video, matmul
+from compile.kernels.ref import attention_ref, grayscale_ref, matmul_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, jnp.float32, -1, 1)
+
+
+# ---------------------------------------------------------------------------
+# grayscale
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    h=st.integers(1, 24).map(lambda k: k * 8),
+    w=st.sampled_from([16, 64, 100, 256]),
+    seed=st.integers(0, 2**31),
+)
+def test_grayscale_matches_ref(h, w, seed):
+    img = rand(seed, (h, w, 3))
+    np.testing.assert_allclose(
+        grayscale(img), grayscale_ref(img), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_grayscale_odd_height_uses_unit_block():
+    img = rand(0, (7, 16, 3))  # H=7: only block 1 divides it
+    np.testing.assert_allclose(grayscale(img), grayscale_ref(img), rtol=1e-6, atol=1e-6)
+
+
+def test_grayscale_video_vmaps():
+    frames = rand(1, (4, 32, 32, 3))
+    got = grayscale_video(frames)
+    want = jax.vmap(grayscale_ref)(frames)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_grayscale_luma_weights_sum_to_one():
+    # A constant-gray image must map to itself.
+    img = jnp.full((8, 8, 3), 0.5, jnp.float32)
+    np.testing.assert_allclose(grayscale(img), jnp.full((8, 8), 0.5), rtol=1e-5)
+
+
+def test_grayscale_rejects_non_rgb():
+    with pytest.raises(AssertionError):
+        grayscale(jnp.zeros((8, 8, 4), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.sampled_from([8, 32, 128, 192]),
+    k=st.sampled_from([16, 64, 256]),
+    n=st.sampled_from([8, 128, 160]),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    x = rand(seed, (m, k))
+    y = rand(seed + 1, (k, n))
+    np.testing.assert_allclose(
+        matmul(x, y), matmul_ref(x, y), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_matmul_identity():
+    x = rand(3, (64, 64))
+    eye = jnp.eye(64, dtype=jnp.float32)
+    np.testing.assert_allclose(matmul(x, eye), x, rtol=1e-5, atol=1e-6)
+
+
+def test_matmul_shape_mismatch_rejected():
+    with pytest.raises(AssertionError):
+        matmul(jnp.zeros((8, 16), jnp.float32), jnp.zeros((8, 16), jnp.float32))
+
+
+def test_matmul_prime_dims_fall_back_to_small_blocks():
+    # 13 and 7 are coprime to every preferred block: forces bm=bn=1 path.
+    x = rand(5, (13, 32))
+    y = rand(6, (32, 7))
+    np.testing.assert_allclose(matmul(x, y), matmul_ref(x, y), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bh=st.sampled_from([1, 2, 8]),
+    t=st.sampled_from([4, 16, 64]),
+    d=st.sampled_from([8, 32, 64]),
+    seed=st.integers(0, 2**31),
+)
+def test_attention_matches_ref(bh, t, d, seed):
+    q = rand(seed, (bh, t, d))
+    k = rand(seed + 1, (bh, t, d))
+    v = rand(seed + 2, (bh, t, d))
+    np.testing.assert_allclose(
+        attention(q, k, v), attention_ref(q, k, v), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_attention_rows_are_convex_combinations():
+    # Softmax rows sum to 1 → output is within [min(v), max(v)] per dim.
+    q = rand(7, (2, 8, 16))
+    k = rand(8, (2, 8, 16))
+    v = rand(9, (2, 8, 16))
+    out = np.asarray(attention(q, k, v))
+    v_np = np.asarray(v)
+    assert out.max() <= v_np.max() + 1e-5
+    assert out.min() >= v_np.min() - 1e-5
+
+
+def test_attention_uniform_when_q_zero():
+    # q = 0 → uniform attention → output is the mean of v.
+    t = 8
+    q = jnp.zeros((1, t, 16), jnp.float32)
+    k = rand(10, (1, t, 16))
+    v = rand(11, (1, t, 16))
+    out = attention(q, k, v)
+    np.testing.assert_allclose(
+        out, jnp.broadcast_to(v.mean(axis=1, keepdims=True), v.shape), rtol=1e-5, atol=1e-5
+    )

@@ -1,0 +1,80 @@
+"""Layer-2 model tests: shapes, determinism, kernel/ref parity at the graph
+level, and numerical sanity of the transformer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, jnp.float32, -1, 1)
+
+
+def test_float_operation_shape_and_finite():
+    x = rand(0, (64, 64))
+    y = model.float_operation(x)
+    assert y.shape == (64, 64)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_float_operation_deterministic():
+    x = rand(1, (32, 32))
+    np.testing.assert_array_equal(model.float_operation(x), model.float_operation(x))
+
+
+def test_image_processing_matches_ref():
+    img = rand(2, (64, 64, 3))
+    np.testing.assert_allclose(
+        model.image_processing(img),
+        model.image_processing_ref(img),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_image_processing_halves_resolution():
+    img = rand(3, (128, 96, 3))
+    out = model.image_processing(img)
+    # rot90 of (128, 96) → (96, 128), then downsample → (48, 64)
+    assert out.shape == (48, 64)
+
+
+def test_video_processing_matches_ref():
+    frames = rand(4, (4, 32, 32, 3))
+    np.testing.assert_allclose(
+        model.video_processing(frames),
+        model.video_processing_ref(frames),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_video_processing_motion_map_nonnegative():
+    frames = rand(5, (4, 16, 16, 3))
+    out = model.video_processing(frames)
+    assert out.shape == (4, 16, 16)
+    assert bool(jnp.all(out[-1] >= 0)), "motion energy is a sum of |diffs|"
+
+
+def test_tiny_lm_shapes_and_finite():
+    x = rand(6, (2, 16, model.LM_DIM))
+    logits = model.tiny_lm(x)
+    assert logits.shape == (2, 16, model.LM_VOCAB)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_tiny_lm_deterministic_params():
+    x = rand(7, (1, 8, model.LM_DIM))
+    np.testing.assert_array_equal(model.tiny_lm(x), model.tiny_lm(x))
+
+
+def test_tiny_lm_input_sensitivity():
+    a = rand(8, (1, 8, model.LM_DIM))
+    b = a.at[0, 0, 0].add(1.0)
+    assert not np.allclose(model.tiny_lm(a), model.tiny_lm(b)), (
+        "logits must depend on the input"
+    )

@@ -1,0 +1,93 @@
+//! `cargo bench --bench ablation_policy` — design-choice ablations the
+//! DESIGN.md experiment index calls out, on one fixed trace:
+//!
+//! 1. **REAP on/off**: hibernate wakes with batch prefetch vs pure
+//!    page-fault swap-in (platform-level version of the §3.4 micro
+//!    comparison);
+//! 2. **predictive wake-up on/off**: Fig. 3 ⑤'s anticipatory SIGCONT vs
+//!    demand-only wakes, on strictly periodic traffic where prediction is
+//!    easy (the best case the mechanism is designed for).
+
+use quark_hibernate::config::PlatformConfig;
+use quark_hibernate::container::NoopRunner;
+use quark_hibernate::platform::metrics::ServedFrom;
+use quark_hibernate::platform::trace::{Arrival, TraceSpec};
+use quark_hibernate::platform::{trace, Platform};
+use quark_hibernate::util::human_ns;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+fn base_cfg(tag: &str) -> PlatformConfig {
+    let mut cfg = PlatformConfig::default();
+    cfg.host_memory = 8 << 30;
+    cfg.policy.hibernate_idle_ms = 100;
+    cfg.swap_dir = std::env::temp_dir()
+        .join(format!("qh-ablpolicy-{tag}-{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    cfg
+}
+
+fn periodic_trace(gap_ms: u64, duration_ms: u64) -> Vec<trace::TraceEvent> {
+    trace::generate(
+        &[TraceSpec {
+            workload: "nodejs-hello".into(),
+            arrival: Arrival::Uniform {
+                gap_ns: gap_ms * 1_000_000,
+            },
+        }],
+        duration_ms * 1_000_000,
+        7,
+    )
+}
+
+fn run(reap: bool, predictive: bool, tag: &str) -> (f64, u64, u64) {
+    let mut cfg = base_cfg(tag);
+    cfg.policy.reap_enabled = reap;
+    cfg.policy.predictive_wakeup = predictive;
+    let p = Platform::new(cfg, Arc::new(NoopRunner)).unwrap();
+    p.deploy(quark_hibernate::workloads::functionbench::nodejs_hello())
+        .unwrap();
+    let events = periodic_trace(500, 20_000);
+    p.run_trace(&events).unwrap();
+    let hib_mean = p
+        .metrics
+        .mean_latency("nodejs-hello", ServedFrom::Hibernate)
+        .unwrap_or(0.0);
+    let wok_serves = p.metrics.sample_count("nodejs-hello", ServedFrom::WokenUp) as u64;
+    let anticipatory = p
+        .metrics
+        .counters
+        .anticipatory_wakes
+        .load(Ordering::Relaxed);
+    (hib_mean, wok_serves, anticipatory)
+}
+
+fn main() {
+    println!("== ablation: REAP batch swap-in (predictive wake off) ==");
+    let (fault_mean, _, _) = run(false, false, "noreap");
+    let (reap_mean, _, _) = run(true, false, "reap");
+    println!(
+        "hibernate-wake mean: page-fault {} vs REAP {}  ({:.2}x)",
+        human_ns(fault_mean as u64),
+        human_ns(reap_mean as u64),
+        fault_mean / reap_mean.max(1.0)
+    );
+    assert!(
+        reap_mean < fault_mean,
+        "REAP must cut platform-level hibernate-wake latency"
+    );
+
+    println!("\n== ablation: anticipatory wake-up (REAP on) ==");
+    let (_, wok_off, ant_off) = run(true, false, "nopred");
+    let (_, wok_on, ant_on) = run(true, true, "pred");
+    println!(
+        "woken-up serves: {wok_off} → {wok_on}; anticipatory wakes: {ant_off} → {ant_on}"
+    );
+    assert!(ant_on > ant_off, "predictor must fire on periodic traffic");
+    assert!(
+        wok_on > wok_off,
+        "anticipatory wakes must convert hibernate serves into woken-up serves"
+    );
+    println!("\nablation_policy OK");
+}

@@ -1,0 +1,72 @@
+//! `cargo bench --bench density` — the deployment-density experiment
+//! (§1/§4.2): instances packed into a fixed committed-memory budget, parked
+//! Warm vs WokenUp vs Hibernate.
+
+/// Router micro-measurement (the L3 "should not be the bottleneck" check):
+/// routing decisions/s over a mixed-state 16-instance pool.
+fn bench_router() {
+    use quark_hibernate::config::SharingConfig;
+    use quark_hibernate::container::sandbox::{Sandbox, SandboxServices};
+    use quark_hibernate::container::NoopRunner;
+    use quark_hibernate::platform::pool::FunctionPool;
+    use quark_hibernate::platform::router::route;
+    use quark_hibernate::simtime::{Clock, CostModel};
+    use quark_hibernate::workloads::functionbench::{golang_hello, scaled_for_test};
+    use std::sync::Arc;
+
+    let svc = SandboxServices::new_local(
+        2 << 30,
+        CostModel::free(),
+        SharingConfig::default(),
+        Arc::new(NoopRunner),
+        "router-bench",
+    )
+    .unwrap();
+    let clock = Clock::new();
+    let mut pool = FunctionPool::new();
+    for i in 0..16u64 {
+        let mut sb = Sandbox::cold_start(
+            i,
+            scaled_for_test(golang_hello(), 32),
+            svc.clone(),
+            &clock,
+        )
+        .unwrap();
+        if i % 3 == 0 {
+            sb.hibernate(&clock).unwrap();
+        }
+        pool.add(sb, i);
+    }
+    let n = 200_000u64;
+    let t0 = std::time::Instant::now();
+    let mut acc = 0usize;
+    for _ in 0..n {
+        if let quark_hibernate::platform::router::Route::Existing { idx, .. } = route(&pool) {
+            acc = acc.wrapping_add(idx);
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "router: {:.2}M decisions/s over a 16-instance mixed pool (acc {acc})",
+        n as f64 / dt.as_secs_f64() / 1e6
+    );
+}
+
+fn main() {
+    bench_router();
+    let quick = std::env::var("QH_QUICK").is_ok();
+    let budget: u64 = if quick { 64 << 20 } else { 256 << 20 };
+    let results = quark_hibernate::bench_support::density_exp::run(budget, quick);
+    let warm = &results[0];
+    let hib = &results[2];
+    assert!(
+        hib.instances > warm.instances,
+        "hibernate must pack more instances ({} vs {})",
+        hib.instances,
+        warm.instances
+    );
+    println!(
+        "density gain (hibernate/warm): {:.1}x",
+        hib.instances as f64 / warm.instances.max(1) as f64
+    );
+}

@@ -1,0 +1,39 @@
+//! `cargo bench --bench fig6_latency` — regenerates **Figure 6**:
+//! request-response latency of Cold / Warm / Hibernate(page-fault) /
+//! Hibernate(REAP) / WokenUp for all eight evaluation workloads.
+//!
+//! Expected shape (paper §4.1): warm ≈ woken-up < hib-reap ≤ hib-fault ≪
+//! cold; REAP at 3–67% of cold. Set QH_QUICK=1 for the scaled-down run.
+
+fn main() {
+    let quick = std::env::var("QH_QUICK").is_ok();
+    let rows = quark_hibernate::bench_support::fig6::run(quick);
+    // Assert the paper's shape so `cargo bench` is also a regression gate.
+    let mut violations = Vec::new();
+    for (name, r) in &rows {
+        if r.warm_ns >= r.cold_ns {
+            violations.push(format!("{name}: warm ≥ cold"));
+        }
+        if r.hib_reap_ns >= r.cold_ns {
+            violations.push(format!("{name}: hib-reap ≥ cold"));
+        }
+        if r.hib_fault_ns >= r.cold_ns {
+            violations.push(format!("{name}: hib-fault ≥ cold"));
+        }
+    }
+    // REAP/cold band check across the suite (3%–67% in the paper; allow
+    // a generous band since our compute substrate differs).
+    let ratios: Vec<f64> = rows
+        .iter()
+        .map(|(_, r)| r.hib_reap_ns as f64 / r.cold_ns as f64)
+        .collect();
+    let min = ratios.iter().cloned().fold(f64::MAX, f64::min);
+    let max = ratios.iter().cloned().fold(0.0f64, f64::max);
+    println!("REAP/cold ratio across workloads: {:.0}%..{:.0}% (paper: 3%..67%)",
+        min * 100.0, max * 100.0);
+    if !violations.is_empty() {
+        eprintln!("SHAPE VIOLATIONS:\n  {}", violations.join("\n  "));
+        std::process::exit(1);
+    }
+    println!("fig6 shape OK");
+}

@@ -1,0 +1,32 @@
+//! `cargo bench --bench fig7_memory` — regenerates **Figure 7**: PSS of
+//! Warm / Hibernate / WokenUp, 10 instances per workload.
+//!
+//! Expected shape (paper §4.2): hibernate at 7–25% of warm; woken-up at
+//! 28–90% of warm. Set QH_QUICK=1 for the scaled-down run.
+
+fn main() {
+    let quick = std::env::var("QH_QUICK").is_ok();
+    let rows = quark_hibernate::bench_support::fig7::run(quick);
+    let mut violations = Vec::new();
+    for (name, r) in &rows {
+        let hib_ratio = r.hibernate as f64 / r.warm as f64;
+        let wok_ratio = r.wokenup as f64 / r.warm as f64;
+        if hib_ratio > 0.40 {
+            violations.push(format!(
+                "{name}: hibernate at {:.0}% of warm (paper band 7-25%)",
+                hib_ratio * 100.0
+            ));
+        }
+        if wok_ratio >= 1.0 {
+            violations.push(format!("{name}: woken-up not below warm"));
+        }
+        if r.hibernate >= r.wokenup {
+            violations.push(format!("{name}: hibernate not below woken-up"));
+        }
+    }
+    if !violations.is_empty() {
+        eprintln!("SHAPE VIOLATIONS:\n  {}", violations.join("\n  "));
+        std::process::exit(1);
+    }
+    println!("fig7 shape OK");
+}

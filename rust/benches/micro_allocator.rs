@@ -1,0 +1,150 @@
+//! `cargo bench --bench micro_allocator` — Fig. 4 / §3.3 allocator
+//! measurements:
+//!
+//! 1. Bitmap Page Allocator alloc/free throughput (the page-fault-handler
+//!    hot path) and lock-free refcount throughput;
+//! 2. buddy-allocator baseline throughput;
+//! 3. the reclamation argument, executed: naive madvise reclaim corrupts
+//!    the buddy's intrusive free list, while the Bitmap allocator reclaims
+//!    and keeps working;
+//! 4. reclaim bandwidth (pages returned to the host per second).
+
+use quark_hibernate::mem::bitmap_alloc::BitmapPageAllocator;
+use quark_hibernate::mem::buddy::{BuddyAllocator, BuddyError};
+use quark_hibernate::mem::host::HostMemory;
+use quark_hibernate::util::human_ns;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn ops_per_sec(n: u64, elapsed: std::time::Duration) -> String {
+    format!("{:.1}M ops/s", n as f64 / elapsed.as_secs_f64() / 1e6)
+}
+
+fn main() {
+    let quick = std::env::var("QH_QUICK").is_ok();
+    let n: u64 = if quick { 100_000 } else { 1_000_000 };
+
+    let host = Arc::new(HostMemory::new(6 << 30).unwrap());
+    let heap = Arc::new(BuddyAllocator::new(host.clone(), 0, host.size() as u64).unwrap());
+    let alloc = BitmapPageAllocator::new(host.clone(), heap.clone());
+
+    // --- 1. bitmap alloc/free ---
+    println!("== Bitmap Page Allocator (Fig. 4) ==");
+    let mut pages = Vec::with_capacity(n as usize);
+    let t0 = Instant::now();
+    for _ in 0..n {
+        pages.push(alloc.alloc_page().unwrap());
+    }
+    let alloc_t = t0.elapsed();
+    println!(
+        "alloc_page x{n}: {} ({}, {} per op)",
+        ops_per_sec(n, alloc_t),
+        human_ns(alloc_t.as_nanos() as u64),
+        human_ns(alloc_t.as_nanos() as u64 / n),
+    );
+
+    let t0 = Instant::now();
+    for &g in &pages {
+        alloc.inc_ref(g);
+    }
+    for &g in &pages {
+        alloc.dec_ref(g); // back to 1, lock-free
+    }
+    let rc_t = t0.elapsed();
+    println!("inc_ref+dec_ref x{n}: {} (lock-free)", ops_per_sec(2 * n, rc_t));
+
+    let t0 = Instant::now();
+    for &g in &pages {
+        alloc.dec_ref(g); // frees
+    }
+    let free_t = t0.elapsed();
+    println!("free x{n}: {}", ops_per_sec(n, free_t));
+
+    // --- 2. buddy baseline ---
+    println!("\n== binary buddy baseline ==");
+    let m = n.min(200_000);
+    let mut chunks = Vec::with_capacity(m as usize);
+    let t0 = Instant::now();
+    for _ in 0..m {
+        chunks.push(heap.alloc_order(0).unwrap());
+    }
+    let buddy_alloc_t = t0.elapsed();
+    let t0 = Instant::now();
+    for g in chunks {
+        heap.free(g).unwrap();
+    }
+    let buddy_free_t = t0.elapsed();
+    println!(
+        "buddy alloc x{m}: {}; free x{m}: {}",
+        ops_per_sec(m, buddy_alloc_t),
+        ops_per_sec(m, buddy_free_t)
+    );
+
+    // --- 3. the §3.3 reclamation argument, executed ---
+    println!("\n== zero-fill reclamation: buddy breaks, bitmap survives ==");
+    {
+        let host2 = Arc::new(HostMemory::new(64 << 20).unwrap());
+        let buddy = BuddyAllocator::new(host2.clone(), 0, host2.size() as u64).unwrap();
+        let a = buddy.alloc_order(0).unwrap();
+        buddy.free(a).unwrap();
+        let free_chunks: Vec<_> = buddy.free_chunks().iter().map(|&(g, _)| g).collect();
+        host2.discard_pages(&free_chunks).unwrap();
+        match buddy.validate_free_lists() {
+            Err(BuddyError::Corrupted { .. }) => {
+                println!("buddy: free list CORRUPTED after madvise reclaim (as §3.3 predicts)")
+            }
+            other => panic!("buddy should have been corrupted, got {other:?}"),
+        }
+    }
+    {
+        let host2 = Arc::new(HostMemory::new(64 << 20).unwrap());
+        let heap2 = Arc::new(BuddyAllocator::new(host2.clone(), 0, host2.size() as u64).unwrap());
+        let alloc2 = BitmapPageAllocator::new(host2.clone(), heap2);
+        let keep = alloc2.alloc_page().unwrap();
+        host2.fill_page(keep, 1).unwrap();
+        let pages: Vec<_> = (0..1000).map(|_| alloc2.alloc_page().unwrap()).collect();
+        for &g in &pages {
+            host2.fill_page(g, 2).unwrap();
+        }
+        for &g in &pages {
+            alloc2.dec_ref(g);
+        }
+        let t0 = Instant::now();
+        let reclaimed = alloc2.reclaim_free_pages().unwrap();
+        let t = t0.elapsed();
+        alloc2.check_invariants().unwrap();
+        // Still fully functional afterwards.
+        for _ in 0..1000 {
+            alloc2.alloc_page().unwrap();
+        }
+        alloc2.check_invariants().unwrap();
+        println!(
+            "bitmap: reclaimed {reclaimed} pages in {} ({:.1}M pages/s), allocator intact",
+            human_ns(t.as_nanos() as u64),
+            reclaimed as f64 / t.as_secs_f64() / 1e6
+        );
+    }
+
+    // --- 4. O(2) lookup claim ---
+    println!("\n== O(2) free-page lookup: per-alloc cost vs occupancy ==");
+    let host3 = Arc::new(HostMemory::new(1 << 30).unwrap());
+    let heap3 = Arc::new(BuddyAllocator::new(host3.clone(), 0, host3.size() as u64).unwrap());
+    let alloc3 = BitmapPageAllocator::new(host3, heap3);
+    for fill in [0u64, 50_000, 150_000] {
+        for _ in 0..fill.saturating_sub(alloc3.stats().allocated_pages) {
+            alloc3.alloc_page().unwrap();
+        }
+        let k = 10_000;
+        let t0 = Instant::now();
+        let mut tmp = Vec::with_capacity(k);
+        for _ in 0..k {
+            tmp.push(alloc3.alloc_page().unwrap());
+        }
+        let per = t0.elapsed().as_nanos() as u64 / k as u64;
+        for g in tmp {
+            alloc3.dec_ref(g);
+        }
+        println!("occupancy {:>7}: {} per alloc (flat = O(2) holds)", fill, human_ns(per));
+    }
+    println!("\nmicro_allocator OK");
+}

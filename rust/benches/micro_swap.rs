@@ -1,0 +1,190 @@
+//! `cargo bench --bench micro_swap` — the §3.4 micro-measurements:
+//!
+//! 1. device model: random-4K vs sequential batched read time across
+//!    working-set sizes (the 100 MB/s vs >1 GB/s asymmetry REAP exploits);
+//! 2. page-fault swap-in vs REAP batch swap-in over the *real* mechanism
+//!    (real swap files, real page contents), charged + CPU time separately;
+//! 3. the §3.4.1 working-set table: bytes swapped out vs bytes a request
+//!    reloads (Node.js hello: ~10 MB out, ~4 MB back);
+//! 4. real-file I/O throughput of the swap path (CPU-side cost that the
+//!    §Perf pass optimizes).
+
+use quark_hibernate::bench_support::rig;
+use quark_hibernate::config::SharingConfig;
+use quark_hibernate::container::sandbox::Sandbox;
+use quark_hibernate::container::NoopRunner;
+use quark_hibernate::mem::page_table::{PageTable, Pte};
+use quark_hibernate::mem::Gva;
+use quark_hibernate::simtime::{Clock, CostModel};
+use quark_hibernate::swap::file::SwapFileSet;
+use quark_hibernate::swap::SwapMgr;
+use quark_hibernate::util::{human_bytes, human_ns};
+use quark_hibernate::workloads::functionbench::{all_workloads, nodejs_hello, scaled_for_test};
+use quark_hibernate::PAGE_SIZE;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn device_model_table() {
+    println!("== §3.4 device model: random vs sequential (charged time) ==");
+    println!("{:<12} {:>14} {:>14} {:>8}", "working set", "random(fault)", "seq(REAP)", "ratio");
+    let m = CostModel::paper();
+    for mib in [1u64, 4, 10, 32, 64, 128] {
+        let bytes = mib << 20;
+        let pages = bytes / PAGE_SIZE as u64;
+        let random = pages * m.pagefault_swapin_ns();
+        let seq = m.seq_read_ns(bytes);
+        println!(
+            "{:<12} {:>14} {:>14} {:>7.1}x",
+            human_bytes(bytes),
+            human_ns(random),
+            human_ns(seq),
+            random as f64 / seq as f64
+        );
+    }
+    println!();
+}
+
+fn mechanism_comparison(pages: u64) {
+    println!("== page-fault vs REAP swap-in over the real mechanism ({pages} pages) ==");
+    let quick = std::env::var("QH_QUICK").is_ok();
+    let pages = if quick { pages.min(512) } else { pages };
+    let svc = rig(
+        1 << 30,
+        SharingConfig::default(),
+        true,
+        Arc::new(NoopRunner),
+        "micro-swap",
+    );
+    let dir = svc.swap_dir.join("micro");
+    let files = SwapFileSet::create(&dir, 99).unwrap();
+    let mut mgr = SwapMgr::new(files, CostModel::paper());
+    let clock = Clock::new();
+
+    // Build one big page table with filled pages.
+    let alloc = quark_hibernate::mem::bitmap_alloc::BitmapPageAllocator::new(
+        svc.host.clone(),
+        svc.heap.clone(),
+    );
+    let mut pt = PageTable::new();
+    for i in 0..pages {
+        let gpa = alloc.alloc_page().unwrap();
+        svc.host.fill_page(gpa, i).unwrap();
+        pt.map(Gva(i * 0x1000), Pte::new_present(gpa, Pte::WRITABLE));
+    }
+
+    // Swap out (measures the real CPU cost of walk+dedup+write+madvise).
+    let t0 = Instant::now();
+    let rpt = mgr.swap_out(&mut [&mut pt], &svc.host, &clock).unwrap();
+    let swapout_cpu = t0.elapsed();
+    println!(
+        "swap-out: {} pages, charged {}, cpu {} ({:.0}k pages/s cpu)",
+        rpt.unique_pages,
+        human_ns(clock.take().0),
+        human_ns(swapout_cpu.as_nanos() as u64),
+        pages as f64 / swapout_cpu.as_secs_f64() / 1e3,
+    );
+
+    // Fault path: every page back one by one.
+    let t0 = Instant::now();
+    for i in 0..pages {
+        mgr.fault_swap_in(&mut pt, Gva(i * 0x1000), &svc.host, &clock)
+            .unwrap();
+    }
+    let fault_cpu = t0.elapsed();
+    let fault_charged = clock.take().0;
+    println!(
+        "fault swap-in: charged {}, cpu {} ({:.0}k pages/s cpu)",
+        human_ns(fault_charged),
+        human_ns(fault_cpu.as_nanos() as u64),
+        pages as f64 / fault_cpu.as_secs_f64() / 1e3,
+    );
+
+    // REAP path: hibernate again (REAP write) + batched prefetch.
+    mgr.reap_swap_out(&[&pt], &svc.host, &clock).unwrap();
+    let reap_out_charged = clock.take().0;
+    let t0 = Instant::now();
+    mgr.reap_swap_in(&svc.host, &clock).unwrap();
+    let reap_cpu = t0.elapsed();
+    let reap_charged = clock.take().0;
+    println!(
+        "REAP swap-out: charged {}; swap-in: charged {}, cpu {}",
+        human_ns(reap_out_charged),
+        human_ns(reap_charged),
+        human_ns(reap_cpu.as_nanos() as u64),
+    );
+    println!(
+        "charged speedup fault→REAP: {:.1}x (paper: ~10x at 10 MB)",
+        fault_charged as f64 / reap_charged as f64
+    );
+    assert!(
+        fault_charged > 5 * reap_charged,
+        "REAP must be ≫ faster in charged device+switch time"
+    );
+    println!();
+}
+
+fn working_set_table() {
+    println!("== §3.4.1 working set: swapped-out vs reloaded per request ==");
+    println!(
+        "{:<18} {:>12} {:>12} {:>8}",
+        "workload", "swapped out", "reloaded", "frac"
+    );
+    let quick = std::env::var("QH_QUICK").is_ok();
+    for spec in all_workloads() {
+        let spec = if quick { scaled_for_test(spec, 16) } else { spec };
+        let svc = rig(
+            2 << 30,
+            SharingConfig::default(),
+            true,
+            Arc::new(NoopRunner),
+            &format!("ws-{}", spec.name),
+        );
+        let clock = Clock::new();
+        let mut sb = Sandbox::cold_start(1, spec.clone(), svc, &clock).unwrap();
+        sb.handle_request(&clock).unwrap();
+        sb.hibernate(&clock).unwrap();
+        sb.handle_request(&clock).unwrap(); // sample request
+        let r = sb.reap_recorder();
+        println!(
+            "{:<18} {:>12} {:>12} {:>7.0}%",
+            spec.name,
+            human_bytes(r.swapped_out_bytes()),
+            human_bytes(r.recorded_bytes()),
+            r.working_set_fraction().unwrap_or(0.0) * 100.0
+        );
+        sb.terminate().unwrap();
+    }
+    println!("(paper: requests reload 30–90% of swapped pages; nodejs ~10MB out/~4MB back)");
+    println!();
+}
+
+fn main() {
+    device_model_table();
+    mechanism_comparison(2560); // 10 MB — the paper's Node.js example size
+    working_set_table();
+    // Shape check for the nodejs claim.
+    let quick = std::env::var("QH_QUICK").is_ok();
+    let spec = if quick {
+        scaled_for_test(nodejs_hello(), 16)
+    } else {
+        nodejs_hello()
+    };
+    let svc = rig(
+        1 << 30,
+        SharingConfig::default(),
+        true,
+        Arc::new(NoopRunner),
+        "ws-check",
+    );
+    let clock = Clock::new();
+    let mut sb = Sandbox::cold_start(1, spec, svc, &clock).unwrap();
+    sb.handle_request(&clock).unwrap();
+    sb.hibernate(&clock).unwrap();
+    sb.handle_request(&clock).unwrap();
+    let frac = sb.reap_recorder().working_set_fraction().unwrap();
+    assert!(
+        (0.25..=0.95).contains(&frac),
+        "nodejs working-set fraction {frac} outside the paper band"
+    );
+    println!("micro_swap shape OK (nodejs ws frac {:.0}%)", frac * 100.0);
+}

@@ -1,0 +1,51 @@
+//! Deployment-density experiment driver (§1/§4.2's "higher deployment
+//! density" claim): pack real sandboxes into a committed-memory budget in
+//! each park mode and report instances-per-budget.
+
+use super::{maybe_scale, mib, row};
+use crate::config::SharingConfig;
+use crate::platform::density::{pack, DensityResult, ParkMode};
+use crate::workloads::functionbench::nodejs_hello;
+
+/// Run the packing comparison for the node.js workload (the paper's
+/// sharing-ablation subject — density benefits combine deflation and
+/// runtime-binary sharing).
+pub fn run(budget: u64, quick: bool) -> Vec<DensityResult> {
+    println!("== Deployment density: instances within {} ==", mib(budget));
+    println!(
+        "{}",
+        row(
+            "park mode",
+            &["instances".into(), "committed".into(), "mean PSS".into()],
+        )
+    );
+    let spec = maybe_scale(nodejs_hello(), quick);
+    let host_bytes = (budget as usize) * 16;
+    let max = if quick { 64 } else { 512 };
+    let mut out = Vec::new();
+    for mode in [ParkMode::Warm, ParkMode::WokenUp, ParkMode::Hibernate] {
+        let r = pack(
+            &spec,
+            mode,
+            budget,
+            host_bytes,
+            max,
+            SharingConfig::default(),
+        )
+        .unwrap();
+        println!(
+            "{}",
+            row(
+                mode.label(),
+                &[
+                    r.instances.to_string(),
+                    mib(r.committed_bytes),
+                    mib(r.mean_pss),
+                ],
+            )
+        );
+        out.push(r);
+    }
+    println!();
+    out
+}

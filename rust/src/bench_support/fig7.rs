@@ -1,0 +1,153 @@
+//! **Figure 7** — memory consumption (PSS) of different container states,
+//! measured with 10 running instances per workload exactly as §4.2 does
+//! ("we collect the PSS data with 10 running benchmark application
+//! instances", sharing the Quark runtime binary).
+//!
+//! Paper shape to hold: `hibernate ≪ woken-up < warm`; hibernate at
+//! 7–25 % of warm; woken-up at 28–90 % of warm.
+
+use super::{best_runner, maybe_scale, mib, pct, rig, row};
+use crate::config::SharingConfig;
+use crate::container::sandbox::Sandbox;
+use crate::simtime::Clock;
+use crate::workloads::functionbench::all_workloads;
+use crate::workloads::WorkloadSpec;
+
+/// PSS readings (bytes, mean over instances).
+#[derive(Debug, Clone, Copy)]
+pub struct Fig7Row {
+    pub warm: u64,
+    pub hibernate: u64,
+    pub wokenup: u64,
+}
+
+/// Measure mean PSS for `instances` sandboxes in each of the three states.
+pub fn measure(spec: &WorkloadSpec, instances: usize, host_bytes: usize) -> Fig7Row {
+    measure_with(spec, instances, host_bytes, best_runner())
+}
+
+/// Measure with an explicit runner (tests use NoopRunner for speed — PSS
+/// does not depend on payload compute).
+pub fn measure_with(
+    spec: &WorkloadSpec,
+    instances: usize,
+    host_bytes: usize,
+    runner: std::sync::Arc<dyn crate::container::PayloadRunner>,
+) -> Fig7Row {
+    let svc = rig(
+        host_bytes,
+        SharingConfig::default(),
+        true,
+        runner,
+        &format!("fig7-{}", spec.name),
+    );
+    let clock = Clock::new();
+    let mut sbs: Vec<Sandbox> = (0..instances)
+        .map(|i| {
+            let mut sb =
+                Sandbox::cold_start(i as u64 + 1, spec.clone(), svc.clone(), &clock).unwrap();
+            // "The container processes a few user requests."
+            for _ in 0..3 {
+                sb.handle_request(&clock).unwrap();
+            }
+            sb
+        })
+        .collect();
+
+    let mean_pss = |sbs: &[Sandbox]| -> u64 {
+        let total: u64 = sbs.iter().map(|s| s.footprint().total_bytes()).sum();
+        total / sbs.len() as u64
+    };
+
+    let warm = mean_pss(&sbs);
+    for sb in &mut sbs {
+        sb.hibernate(&clock).unwrap();
+    }
+    let hibernate = mean_pss(&sbs);
+    for sb in &mut sbs {
+        sb.handle_request(&clock).unwrap(); // demand wake → WokenUp
+    }
+    let wokenup = mean_pss(&sbs);
+
+    Fig7Row {
+        warm,
+        hibernate,
+        wokenup,
+    }
+}
+
+/// Print the figure; returns rows for assertions.
+pub fn run(quick: bool) -> Vec<(String, Fig7Row)> {
+    println!("== Figure 7: PSS by container state (10 instances) ==");
+    println!(
+        "{}",
+        row(
+            "workload",
+            &[
+                "warm".into(),
+                "hibernate".into(),
+                "woken-up".into(),
+                "hib/warm".into(),
+                "wok/warm".into(),
+            ],
+        )
+    );
+    let instances = if quick { 4 } else { 10 };
+    let host_bytes = if quick { 1 << 30 } else { 6 << 30 };
+    let mut out = Vec::new();
+    for spec in all_workloads() {
+        let spec = maybe_scale(spec, quick);
+        let r = measure(&spec, instances, host_bytes);
+        println!(
+            "{}",
+            row(
+                &spec.name,
+                &[
+                    mib(r.warm),
+                    mib(r.hibernate),
+                    mib(r.wokenup),
+                    pct(r.hibernate, r.warm),
+                    pct(r.wokenup, r.warm),
+                ],
+            )
+        );
+        out.push((spec.name.clone(), r));
+    }
+    println!();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::functionbench::{scaled_for_test, video_processing};
+
+    #[test]
+    fn memory_ordering_holds() {
+        let spec = scaled_for_test(video_processing(), 16);
+        let r = measure_with(
+            &spec,
+            3,
+            512 << 20,
+            std::sync::Arc::new(crate::container::NoopRunner),
+        );
+        assert!(
+            r.hibernate < r.warm / 3,
+            "hibernate {} must be ≪ warm {}",
+            r.hibernate,
+            r.warm
+        );
+        assert!(
+            r.wokenup < r.warm,
+            "wokenup {} < warm {}",
+            r.wokenup,
+            r.warm
+        );
+        assert!(
+            r.hibernate < r.wokenup,
+            "hibernate {} < wokenup {}",
+            r.hibernate,
+            r.wokenup
+        );
+    }
+}

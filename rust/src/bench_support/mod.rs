@@ -1,0 +1,103 @@
+//! Shared experiment drivers: the code that regenerates every table and
+//! figure of the paper's evaluation. The `rust/benches/*` binaries and the
+//! `repro fig6|fig7|density` CLI commands are thin wrappers over these, so
+//! `cargo bench` and the launcher print identical rows.
+
+pub mod density_exp;
+pub mod fig6;
+pub mod fig7;
+
+use crate::config::SharingConfig;
+use crate::container::sandbox::SandboxServices;
+use crate::container::{NoopRunner, PayloadRunner};
+use crate::runtime::PjrtRunner;
+use crate::simtime::CostModel;
+use crate::workloads::functionbench::scaled_for_test;
+use crate::workloads::WorkloadSpec;
+use std::sync::Arc;
+
+/// Pick the PJRT runner when artifacts exist (the real three-layer stack),
+/// otherwise fall back to NoopRunner so memory experiments still run.
+pub fn best_runner() -> Arc<dyn PayloadRunner> {
+    let dir = std::env::var("QH_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    match PjrtRunner::new(&dir) {
+        Ok(r) => {
+            if r.precompile_all().is_ok() {
+                eprintln!("# payloads: PJRT ({} artifacts)", r.manifest().artifacts.len());
+                return Arc::new(r);
+            }
+            eprintln!("# payloads: PJRT manifest loaded but compile failed; using no-op");
+            Arc::new(NoopRunner)
+        }
+        Err(_) => {
+            eprintln!("# payloads: no artifacts (run `make artifacts`); using no-op");
+            Arc::new(NoopRunner)
+        }
+    }
+}
+
+/// Scale a spec for quick mode.
+pub fn maybe_scale(spec: WorkloadSpec, quick: bool) -> WorkloadSpec {
+    if quick {
+        scaled_for_test(spec, 16)
+    } else {
+        spec
+    }
+}
+
+/// A fresh service rig for one measurement (own host region + swap dir).
+pub fn rig(
+    host_bytes: usize,
+    sharing: SharingConfig,
+    reap_enabled: bool,
+    runner: Arc<dyn PayloadRunner>,
+    tag: &str,
+) -> Arc<SandboxServices> {
+    let svc = SandboxServices::new_local(
+        host_bytes,
+        CostModel::paper(),
+        sharing,
+        runner,
+        tag,
+    )
+    .expect("building service rig");
+    Arc::new(SandboxServices {
+        host: svc.host.clone(),
+        heap: svc.heap.clone(),
+        cache: svc.cache.clone(),
+        registry: svc.registry.clone(),
+        cost: svc.cost.clone(),
+        sharing: svc.sharing.clone(),
+        swap_dir: svc.swap_dir.clone(),
+        runner: svc.runner.clone(),
+        reap_enabled,
+        hostenv: svc.hostenv.clone(),
+    })
+}
+
+/// Render one table row: label + value columns.
+pub fn row(label: &str, cells: &[String]) -> String {
+    let mut out = format!("{label:<22}");
+    for c in cells {
+        out.push_str(&format!(" {c:>14}"));
+    }
+    out
+}
+
+/// ms with 1 decimal.
+pub fn ms(ns: u64) -> String {
+    format!("{:.1} ms", ns as f64 / 1e6)
+}
+
+/// MiB with 1 decimal.
+pub fn mib(bytes: u64) -> String {
+    format!("{:.1} MiB", bytes as f64 / (1 << 20) as f64)
+}
+
+/// percentage with 0 decimals.
+pub fn pct(part: u64, whole: u64) -> String {
+    if whole == 0 {
+        return "-".into();
+    }
+    format!("{:.0}%", 100.0 * part as f64 / whole as f64)
+}

@@ -1,0 +1,198 @@
+//! A TOML subset parser: `[section]` headers, `key = value`, `#` comments.
+//!
+//! Values: booleans, integers (with `_` separators), floats, quoted strings,
+//! and **size literals** — quoted strings like `"512MiB"` / `"2GB"` that
+//! `Value::as_u64` resolves to bytes, which configs use for memory budgets.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+}
+
+impl Value {
+    /// Integer or size-literal string → u64 bytes.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as u64),
+            Value::Str(s) => parse_size(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+}
+
+/// Parse `"512MiB"`-style size literals. Supports B, KB/KiB, MB/MiB,
+/// GB/GiB, TB/TiB (decimal vs binary prefixes) and bare digits.
+pub fn parse_size(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let split = s.find(|c: char| !c.is_ascii_digit() && c != '.')?;
+    let (num, unit) = s.split_at(split);
+    let num: f64 = num.parse().ok()?;
+    let mult: u64 = match unit.trim() {
+        "B" | "" => 1,
+        "KB" => 1_000,
+        "KiB" => 1 << 10,
+        "MB" => 1_000_000,
+        "MiB" => 1 << 20,
+        "GB" => 1_000_000_000,
+        "GiB" => 1 << 30,
+        "TB" => 1_000_000_000_000,
+        "TiB" => 1 << 40,
+        _ => return None,
+    };
+    Some((num * mult as f64).round() as u64)
+}
+
+/// Parsed document: flat map of (section, key) → value. The root section is
+/// the empty string.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    entries: BTreeMap<(String, String), Value>,
+}
+
+impl Table {
+    pub fn get2(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn insert(&mut self, section: &str, key: &str, v: Value) {
+        self.entries
+            .insert((section.to_string(), key.to_string()), v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+fn parse_value(raw: &str, line_no: usize) -> Result<Value> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        bail!("line {line_no}: missing value");
+    }
+    if raw == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if raw == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(stripped) = raw.strip_prefix('"') {
+        let Some(inner) = stripped.strip_suffix('"') else {
+            bail!("line {line_no}: unterminated string");
+        };
+        if inner.contains('"') {
+            bail!("line {line_no}: embedded quote in string (escapes unsupported)");
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    let cleaned: String = raw.chars().filter(|&c| c != '_').collect();
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("line {line_no}: cannot parse value `{raw}`");
+}
+
+/// Parse a document.
+pub fn parse(text: &str) -> Result<Table> {
+    let mut table = Table::default();
+    let mut section = String::new();
+    for (i, line) in text.lines().enumerate() {
+        let line_no = i + 1;
+        // Strip comments outside strings (naive: configs don't put '#' in strings).
+        let line = match line.find('#') {
+            Some(idx) if !line[..idx].contains('"') || line[..idx].matches('"').count() % 2 == 0 => {
+                &line[..idx]
+            }
+            _ => line,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            let Some(name) = inner.strip_suffix(']') else {
+                bail!("line {line_no}: malformed section header");
+            };
+            section = name.trim().to_string();
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            bail!("line {line_no}: expected key = value");
+        };
+        let key = key.trim();
+        if key.is_empty() {
+            bail!("line {line_no}: empty key");
+        }
+        table.insert(&section, key, parse_value(value, line_no)?);
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = parse(
+            r#"
+            # top comment
+            a = 1
+            b = 2.5          # trailing comment
+            c = "hello"
+            d = true
+            big = 1_000_000
+
+            [sec]
+            e = false
+            size = "512MiB"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(t.get2("", "a"), Some(&Value::Int(1)));
+        assert_eq!(t.get2("", "b").unwrap().as_f64(), Some(2.5));
+        assert_eq!(t.get2("", "c"), Some(&Value::Str("hello".into())));
+        assert_eq!(t.get2("", "d"), Some(&Value::Bool(true)));
+        assert_eq!(t.get2("", "big").unwrap().as_u64(), Some(1_000_000));
+        assert_eq!(t.get2("sec", "e"), Some(&Value::Bool(false)));
+        assert_eq!(t.get2("sec", "size").unwrap().as_u64(), Some(512 << 20));
+    }
+
+    #[test]
+    fn size_literals() {
+        assert_eq!(parse_size("128MiB"), Some(128 << 20));
+        assert_eq!(parse_size("1GB"), Some(1_000_000_000));
+        assert_eq!(parse_size("4KiB"), Some(4096));
+        assert_eq!(parse_size("1.5GiB"), Some(3 << 29));
+        assert_eq!(parse_size("12"), None); // no unit split point
+        assert_eq!(parse_size("xMiB"), None);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("novalue\n").is_err());
+        assert!(parse("k = \"unterminated\n").is_err());
+        assert!(parse("k = zzz\n").is_err());
+    }
+}

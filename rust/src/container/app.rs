@@ -1,0 +1,169 @@
+//! The guest application model: processes, address-space layout and the
+//! deterministic page-touch phases the workload specs describe.
+//!
+//! A guest app has one primary process plus optional clones (fork children
+//! sharing the init pages copy-on-write — what gives swap-out its dedup
+//! work and the refcount array its traffic). Init and request phases touch
+//! pages in a *stable* order, which is the empirical property REAP banks on
+//! ("functions access the same stable working set of pages across different
+//! invocations").
+
+use crate::mem::vma::AddressSpace;
+use crate::mem::Gva;
+use crate::workloads::WorkloadSpec;
+use crate::PAGE_SIZE;
+use anyhow::Result;
+
+/// One guest process: an address space (VMAs + page table).
+pub struct GuestProcess {
+    pub asp: AddressSpace,
+}
+
+impl GuestProcess {
+    pub fn new() -> Self {
+        Self {
+            asp: AddressSpace::new(),
+        }
+    }
+}
+
+impl Default for GuestProcess {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Fixed address-space layout for a workload instance (primary process).
+#[derive(Debug, Clone)]
+pub struct AppLayout {
+    /// Anonymous heap (init pages live here).
+    pub heap_base: Gva,
+    pub heap_pages: u64,
+    /// Per-request scratch arena.
+    pub scratch_base: Gva,
+    pub scratch_pages: u64,
+    /// Language runtime binary mapping.
+    pub binary_base: Gva,
+    pub binary_pages: u64,
+}
+
+impl AppLayout {
+    /// Reserve the three regions in a fresh address space.
+    pub fn install(spec: &WorkloadSpec, asp: &mut AddressSpace, binary_file: crate::mem::mmap_file::FileId, shared: bool) -> Result<Self> {
+        let heap_pages = spec.init_anon_pages;
+        let scratch_pages = spec.request_scratch_pages.max(1);
+        let binary_pages = spec.binary_pages();
+        let heap_base = asp.mmap_anon(heap_pages * PAGE_SIZE as u64, "heap")?;
+        let scratch_base = asp.mmap_anon(scratch_pages * PAGE_SIZE as u64, "scratch")?;
+        let binary_base = asp.mmap_file(
+            binary_file,
+            0,
+            binary_pages * PAGE_SIZE as u64,
+            shared,
+            spec.lang.binary_name(),
+        )?;
+        Ok(Self {
+            heap_base,
+            heap_pages,
+            scratch_base,
+            scratch_pages,
+            binary_base,
+            binary_pages,
+        })
+    }
+
+    pub fn heap_page(&self, i: u64) -> Gva {
+        debug_assert!(i < self.heap_pages);
+        Gva(self.heap_base.0 + i * PAGE_SIZE as u64)
+    }
+
+    pub fn scratch_page(&self, i: u64) -> Gva {
+        debug_assert!(i < self.scratch_pages);
+        Gva(self.scratch_base.0 + i * PAGE_SIZE as u64)
+    }
+
+    pub fn binary_page(&self, i: u64) -> Gva {
+        debug_assert!(i < self.binary_pages);
+        Gva(self.binary_base.0 + i * PAGE_SIZE as u64)
+    }
+
+    /// The stable anon working set of a request: the first
+    /// `spec.request_ws_pages()` heap pages. Deterministic by construction.
+    pub fn request_anon_ws(&self, spec: &WorkloadSpec) -> impl Iterator<Item = Gva> + '_ {
+        let n = spec.request_ws_pages().min(self.heap_pages);
+        (0..n).map(move |i| self.heap_page(i))
+    }
+
+    /// The binary (code) working set of a request.
+    pub fn request_binary_ws(&self, spec: &WorkloadSpec) -> impl Iterator<Item = Gva> + '_ {
+        let n = spec.binary_request_pages().min(self.binary_pages);
+        (0..n).map(move |i| self.binary_page(i))
+    }
+}
+
+/// Deterministic content seed for an anon page of a sandbox — lets tests
+/// verify that page contents survive hibernate round trips.
+pub fn anon_content_seed(sandbox_id: u64, gva: Gva) -> u64 {
+    sandbox_id
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(gva.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::mmap_file::FileId;
+    use crate::workloads::{Lang, WorkloadSpec};
+
+    fn spec() -> WorkloadSpec {
+        WorkloadSpec {
+            name: "t".into(),
+            lang: Lang::NodeJs,
+            binary_bytes: 20 * PAGE_SIZE as u64,
+            binary_init_frac: 0.5,
+            binary_request_frac: 0.25,
+            init_ns: 0,
+            init_anon_pages: 64,
+            request_ws_frac: 0.5,
+            request_scratch_pages: 8,
+            request_extra_ns: 0,
+            payload: None,
+            processes: 1,
+        }
+    }
+
+    #[test]
+    fn layout_reserves_disjoint_regions() {
+        let s = spec();
+        let mut p = GuestProcess::new();
+        let l = AppLayout::install(&s, &mut p.asp, FileId(0), true).unwrap();
+        assert_eq!(l.heap_pages, 64);
+        assert_eq!(l.scratch_pages, 8);
+        assert_eq!(l.binary_pages, 20);
+        assert_eq!(p.asp.vma_count(), 3);
+        // Regions don't overlap.
+        let heap_end = l.heap_base.0 + 64 * 4096;
+        assert!(l.scratch_base.0 >= heap_end);
+    }
+
+    #[test]
+    fn working_sets_are_stable_prefixes() {
+        let s = spec();
+        let mut p = GuestProcess::new();
+        let l = AppLayout::install(&s, &mut p.asp, FileId(0), true).unwrap();
+        let ws1: Vec<Gva> = l.request_anon_ws(&s).collect();
+        let ws2: Vec<Gva> = l.request_anon_ws(&s).collect();
+        assert_eq!(ws1, ws2, "REAP's stable-working-set assumption");
+        assert_eq!(ws1.len(), 32);
+        assert_eq!(ws1[0], l.heap_page(0));
+        let bws: Vec<Gva> = l.request_binary_ws(&s).collect();
+        assert_eq!(bws.len(), 5);
+    }
+
+    #[test]
+    fn content_seed_distinguishes_sandboxes_and_pages() {
+        let g = Gva(0x1000);
+        assert_ne!(anon_content_seed(1, g), anon_content_seed(2, g));
+        assert_ne!(anon_content_seed(1, g), anon_content_seed(1, Gva(0x2000)));
+    }
+}

@@ -1,0 +1,693 @@
+//! A Quark sandbox: the unit the platform schedules and the paper
+//! hibernates.
+//!
+//! Owns a per-sandbox Bitmap Page Allocator (each sandbox is its own
+//! QKernel instance drawing 4 MiB blocks from the global heap), its guest
+//! processes' address spaces, the Swapping Manager with its two files, and
+//! the REAP recorder. Implements:
+//!
+//! * **cold start**: sandbox startup + runtime/app init (Fig. 3 ①);
+//! * **request handling** from Warm *and* from Hibernate/WokenUp (②⑥⑦);
+//! * **the 4-step deflation** of §3.2 (pause → reclaim freed pages →
+//!   swap out committed anon pages → drop file-backed mmap pages);
+//! * **the 2 wake triggers**: demand (a request lands on a Hibernate
+//!   container and the parked runtime thread unblocks) and anticipatory
+//!   (platform SIGCONT, Fig. 3 ⑤).
+
+use super::app::{anon_content_seed, AppLayout, GuestProcess};
+use super::hostenv::{HostEnv, HostEnvCost, HostEnvRegistry};
+use super::signal::{ControlSignal, SignalQueue};
+use super::state::{ContainerState, Event};
+use super::PayloadRunner;
+use crate::config::SharingConfig;
+use crate::mem::bitmap_alloc::BitmapPageAllocator;
+use crate::mem::buddy::BuddyAllocator;
+use crate::mem::host::HostMemory;
+use crate::mem::mmap_file::{FileClass, FilePageCache, FileRegistry};
+use crate::mem::page_table::{PageTable, Pte};
+use crate::mem::pss::{pss, PssBreakdown};
+use crate::mem::vma::VmaKind;
+use crate::mem::{Gpa, Gva};
+use crate::simtime::{Clock, CostModel};
+use crate::swap::file::SwapFileSet;
+use crate::swap::{ReapRecorder, SwapMgr};
+use crate::workloads::WorkloadSpec;
+use crate::PAGE_SIZE;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// The Quark runtime binary every sandbox maps (qkernel + qvisor image).
+pub const QUARK_BINARY_NAME: &str = "quark-qkernel.bin";
+/// Size of the runtime binary mapping.
+pub const QUARK_BINARY_BYTES: u64 = 12 << 20;
+/// Fraction of the runtime binary touched by a running sandbox.
+pub const QUARK_BINARY_TOUCH_FRAC: f64 = 0.4;
+/// QKernel's own resident heap (kernel stacks, task structs, page-metadata
+/// arrays): a base plus a per-guest-page component. These pages are what
+/// Hibernate *keeps* — "Host OS objects … consume little system memory but
+/// keeping them alive saves much reinitialization cost" (§1) — and are the
+/// floor under the paper's 7–25 %-of-Warm hibernate footprint.
+pub const KERNEL_BASE_PAGES: u64 = 512; // 2 MiB
+pub const KERNEL_PER_ANON_FRAC: f64 = 0.05;
+
+/// Host-side services shared by all sandboxes on a node.
+pub struct SandboxServices {
+    pub host: Arc<HostMemory>,
+    pub heap: Arc<BuddyAllocator>,
+    pub cache: Arc<FilePageCache>,
+    pub registry: Arc<FileRegistry>,
+    pub cost: CostModel,
+    pub sharing: SharingConfig,
+    pub swap_dir: PathBuf,
+    pub runner: Arc<dyn PayloadRunner>,
+    /// Policy: may sandboxes use REAP batch swap-in?
+    pub reap_enabled: bool,
+    /// Host-object registry (cgroups, netns, rootfs mounts).
+    pub hostenv: Arc<HostEnvRegistry>,
+}
+
+impl SandboxServices {
+    /// Build a full service rig over a fresh host region (tests, examples).
+    pub fn new_local(
+        host_bytes: usize,
+        cost: CostModel,
+        sharing: SharingConfig,
+        runner: Arc<dyn PayloadRunner>,
+        swap_tag: &str,
+    ) -> Result<Arc<Self>> {
+        let host = Arc::new(HostMemory::new(host_bytes)?);
+        let len = host.size() as u64;
+        let heap = Arc::new(BuddyAllocator::new(host.clone(), 0, len)?);
+        // The file page cache draws from its own allocator (platform-level
+        // page cache, not owned by any sandbox).
+        let cache_alloc = Arc::new(BitmapPageAllocator::new(host.clone(), heap.clone()));
+        let cache = Arc::new(FilePageCache::new(cache_alloc));
+        let swap_dir = std::env::temp_dir().join(format!(
+            "quark-hibernate-{}-{}",
+            swap_tag,
+            std::process::id()
+        ));
+        Ok(Arc::new(Self {
+            host,
+            heap,
+            cache,
+            registry: Arc::new(FileRegistry::new()),
+            cost,
+            sharing,
+            swap_dir,
+            runner,
+            reap_enabled: true,
+            hostenv: HostEnvRegistry::new(),
+        }))
+    }
+
+    fn share_file(&self, class: FileClass) -> bool {
+        match class {
+            FileClass::QuarkRuntime => self.sharing.share_runtime_binary,
+            FileClass::LanguageRuntime => self.sharing.share_language_runtime,
+            FileClass::AppData => false,
+        }
+    }
+}
+
+/// Report of one deflation (§3.2's four steps).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HibernateReport {
+    /// Step 2: freed pages returned to the host.
+    pub freed_pages_reclaimed: u64,
+    /// Step 3: unique anon pages written (swap or REAP file).
+    pub pages_swapped_out: u64,
+    /// Step 3: used the REAP batch path?
+    pub used_reap: bool,
+    /// Step 4: file-backed pages dropped from this sandbox's tables.
+    pub file_pages_released: u64,
+}
+
+/// Per-request outcome (latency lives on the caller's clock).
+#[derive(Debug, Clone, Copy)]
+pub struct RequestOutcome {
+    pub from: ContainerState,
+    /// Was this the REAP sample request?
+    pub sample_request: bool,
+    /// Anon pages faulted in from the swap file.
+    pub anon_faults: u64,
+    /// File-backed bytes re-read from the image (cache misses).
+    pub file_miss_bytes: u64,
+    /// Working-set pages prefetched by REAP before processing.
+    pub reap_prefetched: u64,
+}
+
+/// A sandboxed container instance.
+pub struct Sandbox {
+    pub id: u64,
+    spec: WorkloadSpec,
+    svc: Arc<SandboxServices>,
+    state: ContainerState,
+    alloc: Arc<BitmapPageAllocator>,
+    procs: Vec<GuestProcess>,
+    layout: AppLayout,
+    /// Quark runtime binary mapping (own VMA in process 0).
+    quark_base: Gva,
+    quark_pages: u64,
+    swap: SwapMgr,
+    reap: ReapRecorder,
+    /// QKernel resident heap: buddy chunk start + page count. Committed at
+    /// cold start, survives hibernation, released at termination.
+    kernel_chunk: Gpa,
+    kernel_pages: u64,
+    /// Host OS objects (cgroup/netns/rootfs) — created at cold start,
+    /// *kept alive* across hibernation (§1), released at termination.
+    env: Option<HostEnv>,
+    /// Pending control signals from the platform (SIGSTOP/SIGCONT).
+    pub signals: SignalQueue,
+    requests_served: u64,
+    paused: bool,
+}
+
+impl Sandbox {
+    /// Cold start (Fig. 3 ①): sandbox startup + runtime & app init. On
+    /// return the container is Warm and fully initialized.
+    pub fn cold_start(
+        id: u64,
+        spec: WorkloadSpec,
+        svc: Arc<SandboxServices>,
+        clock: &Clock,
+    ) -> Result<Sandbox> {
+        spec.validate().map_err(|e| anyhow::anyhow!(e))?;
+        // Container runtime startup. The host-object components (cgroup,
+        // netns, rootfs, threads) are charged itemized by the registry; the
+        // remainder is VM creation (KVM fd, memory region, vCPU setup).
+        let env_cost = HostEnvCost::default_split();
+        clock.charge(
+            svc.cost
+                .sandbox_startup_ns
+                .saturating_sub(env_cost.total_ns()),
+        );
+        let env = svc.hostenv.create(
+            id,
+            &["quark-base.img", spec.lang.binary_name()],
+            (spec.init_anon_pages + spec.request_scratch_pages) * PAGE_SIZE as u64 * 2,
+            env_cost,
+            clock,
+        )?;
+
+        let alloc = Arc::new(BitmapPageAllocator::new(svc.host.clone(), svc.heap.clone()));
+        let binary_file = svc.registry.get_or_register(
+            spec.lang.binary_name(),
+            spec.binary_bytes,
+            FileClass::LanguageRuntime,
+        );
+        let quark_file = svc.registry.get_or_register(
+            QUARK_BINARY_NAME,
+            QUARK_BINARY_BYTES,
+            FileClass::QuarkRuntime,
+        );
+
+        let mut proc0 = GuestProcess::new();
+        let share_lang = svc.share_file(FileClass::LanguageRuntime);
+        let layout = AppLayout::install(&spec, &mut proc0.asp, binary_file, share_lang)?;
+        let quark_pages = QUARK_BINARY_BYTES / PAGE_SIZE as u64;
+        let share_quark = svc.share_file(FileClass::QuarkRuntime);
+        let quark_base = proc0.asp.mmap_file(
+            quark_file,
+            0,
+            quark_pages * PAGE_SIZE as u64,
+            share_quark,
+            QUARK_BINARY_NAME,
+        )?;
+
+        let files = SwapFileSet::create(&svc.swap_dir, id)
+            .context("creating sandbox swap files")?;
+        let swap = SwapMgr::new(files, svc.cost.clone());
+        let reap = ReapRecorder::new(svc.reap_enabled);
+
+        // QKernel's resident heap: committed now, never deflated.
+        let kernel_pages =
+            KERNEL_BASE_PAGES + (spec.init_anon_pages as f64 * KERNEL_PER_ANON_FRAC) as u64;
+        let kernel_chunk = svc
+            .heap
+            .alloc_bytes(kernel_pages * PAGE_SIZE as u64)
+            .map_err(|e| anyhow::anyhow!("kernel heap: {e}"))?;
+        for i in 0..kernel_pages {
+            svc.host
+                .fill_page(Gpa(kernel_chunk.0 + i * PAGE_SIZE as u64), id ^ i)?;
+        }
+
+        let mut sb = Sandbox {
+            id,
+            spec,
+            svc,
+            state: ContainerState::ColdStarting,
+            alloc,
+            procs: vec![proc0],
+            layout,
+            quark_base,
+            quark_pages,
+            swap,
+            reap,
+            kernel_chunk,
+            kernel_pages,
+            env: Some(env),
+            signals: SignalQueue::new(),
+            requests_served: 0,
+            paused: false,
+        };
+
+        // --- Init phase: touch runtime + binary + heap. ---
+        let mut miss_bytes = 0u64;
+        let quark_touch = ((quark_pages as f64) * QUARK_BINARY_TOUCH_FRAC).round() as u64;
+        for i in 0..quark_touch {
+            let gva = Gva(sb.quark_base.0 + i * PAGE_SIZE as u64);
+            sb.fault_file(0, gva, clock, &mut miss_bytes)?;
+        }
+        for i in 0..sb.spec.binary_init_pages() {
+            let gva = sb.layout.binary_page(i);
+            sb.fault_file(0, gva, clock, &mut miss_bytes)?;
+        }
+        // Cold image loads stream from the registry (container image on
+        // local disk): sequential, not scattered.
+        clock.charge(sb.svc.cost.seq_read_ns(miss_bytes));
+        for i in 0..sb.layout.heap_pages {
+            sb.fault_anon(0, sb.layout.heap_page(i), true, clock)?;
+        }
+        clock.charge(sb.spec.init_ns);
+
+        // --- Clones: fork children COW-sharing the init heap. ---
+        for _ in 1..sb.spec.processes {
+            sb.clone_process()?;
+        }
+
+        sb.state = sb.state.transition(Event::ColdStartDone)?;
+        Ok(sb)
+    }
+
+    pub fn state(&self) -> ContainerState {
+        self.state
+    }
+
+    pub fn spec(&self) -> &WorkloadSpec {
+        &self.spec
+    }
+
+    pub fn requests_served(&self) -> u64 {
+        self.requests_served
+    }
+
+    pub fn swap_stats(&self) -> crate::swap::SwapStats {
+        self.swap.stats()
+    }
+
+    pub fn reap_recorder(&self) -> &ReapRecorder {
+        &self.reap
+    }
+
+    /// Fork a guest process: map every *present anon* heap page COW into the
+    /// child (refcount++), downgrading the parent's PTE to read-only COW.
+    fn clone_process(&mut self) -> Result<()> {
+        let mut child = GuestProcess::new();
+        let mut shares: Vec<(Gva, Pte)> = Vec::new();
+        self.procs[0].asp.pt.for_each(|gva, pte| {
+            if pte.present() && !pte.is_file() {
+                shares.push((gva, pte));
+            }
+        });
+        for (gva, pte) in shares {
+            let gpa = pte.gpa();
+            self.alloc.inc_ref(gpa);
+            let cow = Pte::new_present(gpa, Pte::COW);
+            self.procs[0].asp.pt.map(gva, cow);
+            child.asp.pt.map(gva, cow);
+        }
+        self.procs.push(child);
+        Ok(())
+    }
+
+    /// Anonymous page fault (or plain access) at `gva` of process `p`.
+    fn fault_anon(&mut self, p: usize, gva: Gva, write: bool, clock: &Clock) -> Result<()> {
+        let pte = self.procs[p].asp.pt.get(gva);
+        if pte.is_empty() {
+            // First touch: allocate from the Bitmap Page Allocator in the
+            // page-fault handler (§3.3) and fill deterministic content.
+            let gpa = self.alloc.alloc_page()?;
+            self.svc
+                .host
+                .fill_page(gpa, anon_content_seed(self.id, gva))?;
+            self.procs[p]
+                .asp
+                .pt
+                .map(gva, Pte::new_present(gpa, Pte::WRITABLE));
+            clock.charge(
+                self.svc.cost.page_fault_handling_ns + self.svc.cost.host_commit_per_page_ns,
+            );
+            return Ok(());
+        }
+        if pte.swapped() {
+            let Sandbox { swap, procs, svc, reap, .. } = self;
+            swap.fault_swap_in(&mut procs[p].asp.pt, gva, &svc.host, clock)?;
+            reap.on_fault_in();
+            // fall through for the COW/write handling on the restored pte
+        }
+        let pte = self.procs[p].asp.pt.get(gva);
+        debug_assert!(pte.present());
+        if write && pte.is_cow() {
+            let gpa = pte.gpa();
+            if self.alloc.refcount(gpa) > 1 {
+                // COW break: copy to a private page.
+                let new_gpa = self.alloc.alloc_page()?;
+                let mut buf = vec![0u8; PAGE_SIZE];
+                self.svc.host.read_page(gpa, &mut buf)?;
+                self.svc.host.write_page(new_gpa, &buf)?;
+                self.alloc.dec_ref(gpa);
+                self.procs[p]
+                    .asp
+                    .pt
+                    .map(gva, Pte::new_present(new_gpa, Pte::WRITABLE));
+                clock.charge(
+                    self.svc.cost.page_fault_handling_ns
+                        + self.svc.cost.host_commit_per_page_ns,
+                );
+                return Ok(());
+            }
+            // Last owner: take the page back exclusively.
+            self.procs[p]
+                .asp
+                .pt
+                .update(gva, |q| q.without(Pte::COW).with(Pte::WRITABLE));
+        }
+        self.svc.host.touch_page(pte.gpa())?;
+        Ok(())
+    }
+
+    /// File-backed page fault at `gva` of process `p`. Accumulates cache
+    /// misses in `miss_bytes` (charged by the caller as one scattered or
+    /// sequential read, modelling readahead batching).
+    fn fault_file(
+        &mut self,
+        p: usize,
+        gva: Gva,
+        clock: &Clock,
+        miss_bytes: &mut u64,
+    ) -> Result<()> {
+        let pte = self.procs[p].asp.pt.get(gva);
+        if pte.present() {
+            self.svc.host.touch_page(pte.gpa())?;
+            return Ok(());
+        }
+        let (shared, file_id, page_no) = {
+            let vma = self.procs[p]
+                .asp
+                .find_vma(gva)
+                .with_context(|| format!("file fault outside any vma at {gva:?}"))?;
+            let VmaKind::File { shared, .. } = &vma.kind else {
+                bail!("fault_file on anon vma at {gva:?}");
+            };
+            let (file_id, page_no) = vma.file_page(gva).unwrap();
+            (*shared, file_id, page_no)
+        };
+        let file = self.svc.registry.get(file_id);
+        let gpa = if shared {
+            let (gpa, hit) = self.svc.cache.map_shared(&file, page_no)?;
+            if !hit {
+                *miss_bytes += PAGE_SIZE as u64;
+            }
+            gpa
+        } else {
+            *miss_bytes += PAGE_SIZE as u64;
+            self.svc.cache.map_private_for(&file, page_no, &self.alloc)?
+        };
+        self.procs[p].asp.pt.map(gva, Pte::new_present(gpa, Pte::FILE));
+        // Minor fault: guest fault handling + one guest/host switch.
+        clock.charge(self.svc.cost.page_fault_handling_ns + self.svc.cost.guest_host_switch_ns);
+        Ok(())
+    }
+
+    /// Handle one request (Fig. 3 ②⑥⑦): touch the stable working set, run
+    /// the real payload, release scratch memory, transition back (③⑧).
+    pub fn handle_request(&mut self, clock: &Clock) -> Result<RequestOutcome> {
+        let from = self.state;
+        self.state = self.state.transition(Event::Request)?;
+        let mut outcome = RequestOutcome {
+            from,
+            sample_request: false,
+            anon_faults: 0,
+            file_miss_bytes: 0,
+            reap_prefetched: 0,
+        };
+        clock.charge(self.svc.cost.request_dispatch_ns);
+
+        if from == ContainerState::Hibernate {
+            // The parked runtime host thread unblocks (sys_accept returns).
+            clock.charge(self.svc.cost.thread_wake_ns);
+            self.paused = false;
+            // Wake processing: REAP prefetch first if an image exists.
+            if self.swap.has_reap_image() {
+                outcome.reap_prefetched = self.swap.reap_swap_in(&self.svc.host, clock)?;
+            }
+            outcome.sample_request = self.reap.on_wake_request();
+        } else if from == ContainerState::WokenUp {
+            outcome.sample_request = self.reap.on_wake_request();
+        }
+
+        // Touch the stable anon working set.
+        let faults_before = self.swap.stats().pages_faulted_in;
+        let anon_ws: Vec<Gva> = self.layout.request_anon_ws(&self.spec).collect();
+        for gva in anon_ws {
+            self.fault_anon(0, gva, false, clock)?;
+        }
+        outcome.anon_faults = self.swap.stats().pages_faulted_in - faults_before;
+
+        // Touch the binary (code) working set + a slice of the runtime.
+        let mut miss_bytes = 0u64;
+        let bin_ws: Vec<Gva> = self.layout.request_binary_ws(&self.spec).collect();
+        for gva in bin_ws {
+            self.fault_file(0, gva, clock, &mut miss_bytes)?;
+        }
+        let quark_ws = ((self.quark_pages as f64) * 0.1).round() as u64;
+        for i in 0..quark_ws {
+            let gva = Gva(self.quark_base.0 + i * PAGE_SIZE as u64);
+            self.fault_file(0, gva, clock, &mut miss_bytes)?;
+        }
+        // Demand-paged reload of scattered binary pages.
+        clock.charge(self.svc.cost.scattered_read_ns(miss_bytes));
+        outcome.file_miss_bytes = miss_bytes;
+
+        // Scratch allocations (freed below → deflation step #2 fodder).
+        for i in 0..self.layout.scratch_pages.min(self.spec.request_scratch_pages) {
+            self.fault_anon(0, self.layout.scratch_page(i), true, clock)?;
+        }
+
+        // The real compute: AOT-compiled JAX/Pallas via PJRT.
+        if let Some(payload) = self.spec.payload.clone() {
+            self.svc.runner.run(&payload, clock)?;
+        }
+        clock.charge(self.spec.request_extra_ns);
+
+        // Free scratch pages back to the allocator.
+        let scratch: Vec<Gva> = (0..self.layout.scratch_pages.min(self.spec.request_scratch_pages))
+            .map(|i| self.layout.scratch_page(i))
+            .collect();
+        for gva in scratch {
+            let pte = self.procs[0].asp.pt.unmap(gva);
+            if pte.present() || pte.swapped() {
+                self.alloc.dec_ref(pte.gpa());
+            }
+        }
+
+        self.reap.on_request_done();
+        self.state = self.state.transition(Event::RequestDone)?;
+        self.requests_served += 1;
+        Ok(outcome)
+    }
+
+    /// SIGSTOP → deflate (§3.2's four steps). Legal from Warm and WokenUp.
+    pub fn hibernate(&mut self, clock: &Clock) -> Result<HibernateReport> {
+        self.state = self.state.transition(Event::SigStop)?;
+        let mut report = HibernateReport::default();
+
+        // Step 1: pause guest applications, park the runtime host threads.
+        self.paused = true;
+
+        // Step 2: reclaim freed application memory (scratch pages etc.).
+        report.freed_pages_reclaimed = self.alloc.reclaim_free_pages()?;
+        clock.charge(self.svc.cost.madvise_ns(report.freed_pages_reclaimed));
+
+        // Step 3: swap out committed anon pages.
+        if self.reap.use_reap_swapout() {
+            let Sandbox { swap, procs, svc, .. } = self;
+            let tables: Vec<&PageTable> = procs.iter().map(|p| &p.asp.pt).collect();
+            let rpt = swap.reap_swap_out(&tables, &svc.host, clock)?;
+            report.pages_swapped_out = rpt.unique_pages;
+            report.used_reap = true;
+        } else {
+            let Sandbox { swap, procs, svc, reap, .. } = self;
+            let mut tables: Vec<&mut PageTable> =
+                procs.iter_mut().map(|p| &mut p.asp.pt).collect();
+            let rpt = swap.swap_out(&mut tables, &svc.host, clock)?;
+            report.pages_swapped_out = rpt.unique_pages;
+            reap.on_full_swapout(rpt.unique_pages);
+        }
+
+        // Step 4: clean up file-backed mmap memory (runtime binary spared).
+        report.file_pages_released = self.release_file_pages(true)?;
+        self.svc.cache.trim_unmapped();
+        // Private file copies became free pages in our allocator: reclaim.
+        let extra = self.alloc.reclaim_free_pages()?;
+        clock.charge(self.svc.cost.madvise_ns(extra + report.file_pages_released));
+
+        Ok(report)
+    }
+
+    /// Drop every file-backed PTE of every process, releasing cache
+    /// mappings (shared) or private copies. Returns pages released.
+    ///
+    /// The **Quark runtime binary** is spared when `keep_runtime` — the
+    /// runtime process is still alive in the Hibernate state (its parked
+    /// threads are what make the demand wake fast), so its text pages stay
+    /// mapped; only application file mappings (language runtime, data) are
+    /// dropped per deflation step #4.
+    fn release_file_pages(&mut self, keep_runtime: bool) -> Result<u64> {
+        let mut released = 0u64;
+        for p in 0..self.procs.len() {
+            let vmas: Vec<(u64, u64, bool, Option<(crate::mem::mmap_file::FileId, u64)>)> = self
+                .procs[p]
+                .asp
+                .iter_vmas()
+                .filter_map(|v| match v.kind {
+                    VmaKind::File { file, offset, shared } => {
+                        Some((v.start, v.pages(), shared, Some((file, offset / PAGE_SIZE as u64))))
+                    }
+                    VmaKind::Anon => None,
+                })
+                .collect();
+            for (start, pages, shared, file_info) in vmas {
+                let (file_id, first_page) = file_info.unwrap();
+                if keep_runtime
+                    && self.svc.registry.get(file_id).class == FileClass::QuarkRuntime
+                {
+                    continue;
+                }
+                for i in 0..pages {
+                    let gva = Gva(start + i * PAGE_SIZE as u64);
+                    let pte = self.procs[p].asp.pt.get(gva);
+                    if !pte.present() {
+                        continue;
+                    }
+                    self.procs[p].asp.pt.unmap(gva);
+                    if shared {
+                        self.svc.cache.unmap_shared(file_id, first_page + i);
+                    } else {
+                        self.alloc.dec_ref(pte.gpa());
+                    }
+                    released += 1;
+                }
+            }
+        }
+        Ok(released)
+    }
+
+    /// SIGCONT → anticipatory wake (Fig. 3 ⑤): inflate ahead of the
+    /// predicted request so it sees WokenUp (Warm-like) latency.
+    pub fn wake(&mut self, clock: &Clock) -> Result<u64> {
+        self.state = self.state.transition(Event::SigCont)?;
+        clock.charge(self.svc.cost.thread_wake_ns);
+        self.paused = false;
+        let prefetched = if self.swap.has_reap_image() {
+            self.swap.reap_swap_in(&self.svc.host, clock)?
+        } else {
+            0
+        };
+        Ok(prefetched)
+    }
+
+    /// Evict: tear down guest memory, return every page, delete swap files
+    /// (via SwapFileSet::drop when the sandbox is dropped).
+    pub fn terminate(&mut self) -> Result<()> {
+        self.state = self.state.transition(Event::Evict)?;
+        self.release_file_pages(false)?;
+        self.svc.cache.trim_unmapped();
+        // Release the QKernel heap.
+        let kernel: Vec<Gpa> = (0..self.kernel_pages)
+            .map(|i| Gpa(self.kernel_chunk.0 + i * PAGE_SIZE as u64))
+            .collect();
+        self.svc.host.discard_pages(&kernel)?;
+        self.svc
+            .heap
+            .free(self.kernel_chunk)
+            .map_err(|e| anyhow::anyhow!("freeing kernel heap: {e}"))?;
+        for p in &mut self.procs {
+            let mut anon: Vec<Gpa> = Vec::new();
+            p.asp.pt.for_each(|_gva, pte| {
+                if (pte.present() || pte.swapped()) && !pte.is_file() {
+                    anon.push(pte.gpa());
+                }
+            });
+            p.asp.pt.for_each_mut(|_gva, _pte| Pte::EMPTY);
+            for gpa in anon {
+                self.alloc.dec_ref(gpa);
+            }
+        }
+        self.alloc.reclaim_free_pages()?;
+        if let Some(env) = self.env.take() {
+            env.release()?;
+        }
+        Ok(())
+    }
+
+    /// Drain pending control signals at a safe point (the container is
+    /// idle): SIGSTOP deflates, SIGCONT anticipatorily inflates. Illegal
+    /// edges (e.g. Cont while Warm) are dropped, like real signals whose
+    /// handler finds nothing to do. Returns signals acted upon.
+    pub fn drain_signals(&mut self, clock: &Clock) -> Result<u32> {
+        let mut acted = 0;
+        while let Some(sig) = self.signals.take() {
+            match (sig, self.state) {
+                (ControlSignal::Stop, ContainerState::Warm | ContainerState::WokenUp) => {
+                    self.hibernate(clock)?;
+                    acted += 1;
+                }
+                (ControlSignal::Cont, ContainerState::Hibernate) => {
+                    self.wake(clock)?;
+                    acted += 1;
+                }
+                _ => {}
+            }
+        }
+        Ok(acted)
+    }
+
+    /// Host-object view (None after termination).
+    pub fn host_env(&self) -> Option<&HostEnv> {
+        self.env.as_ref()
+    }
+
+    /// PSS of this sandbox (the Fig. 7 metric): guest mappings plus the
+    /// QKernel resident heap and allocator metadata (control pages) — the
+    /// runtime-process memory pmap would attribute to the sandbox.
+    pub fn footprint(&self) -> PssBreakdown {
+        let tables: Vec<&PageTable> = self.procs.iter().map(|p| &p.asp.pt).collect();
+        let mut b = pss(&tables, &self.svc.host, &self.alloc, &self.svc.cache);
+        b.anon_bytes += self.kernel_pages * PAGE_SIZE as u64 + self.alloc.metadata_bytes();
+        b
+    }
+
+    /// Allocator occupancy (debug/metrics).
+    pub fn alloc_stats(&self) -> crate::mem::bitmap_alloc::AllocStats {
+        self.alloc.stats()
+    }
+
+    pub fn is_paused(&self) -> bool {
+        self.paused
+    }
+}
+
+impl std::fmt::Debug for Sandbox {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Sandbox")
+            .field("id", &self.id)
+            .field("workload", &self.spec.name)
+            .field("state", &self.state)
+            .field("requests", &self.requests_served)
+            .finish()
+    }
+}

@@ -1,0 +1,106 @@
+//! Control-signal plumbing: the platform drives deflation and anticipatory
+//! wake-up with SIGSTOP/SIGCONT (§3.1 "Serverless Platform may initiate
+//! deflation of a Warm Container by sending a SIGSTOP signal"; Fig. 3 ④⑤⑨).
+//!
+//! [`SignalQueue`] models the per-sandbox signal delivery path: signals are
+//! queued by the control plane and drained by the runtime at safe points
+//! (between requests — a busy container defers the stop until its request
+//! finishes, exactly like a real SIGSTOP'd runtime that masks signals in
+//! the request critical section).
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// The two control edges of Fig. 3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControlSignal {
+    /// Deflate (SIGSTOP): Warm/WokenUp → Hibernate.
+    Stop,
+    /// Anticipatory inflate (SIGCONT): Hibernate → WokenUp.
+    Cont,
+}
+
+/// Per-sandbox pending-signal queue. Coalesces redundant edges the way the
+/// kernel coalesces standard signals: consecutive identical signals merge,
+/// and a Stop+Cont pair cancels out (the container would stop and
+/// immediately continue — the net effect the platform wants is "stay up").
+#[derive(Debug, Default)]
+pub struct SignalQueue {
+    pending: Mutex<VecDeque<ControlSignal>>,
+}
+
+impl SignalQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Queue a signal (control-plane side).
+    pub fn send(&self, sig: ControlSignal) {
+        let mut q = self.pending.lock().unwrap();
+        match (q.back().copied(), sig) {
+            // Coalesce identical consecutive signals.
+            (Some(last), s) if last == s => {}
+            // Stop followed by Cont cancels (and vice versa).
+            (Some(ControlSignal::Stop), ControlSignal::Cont)
+            | (Some(ControlSignal::Cont), ControlSignal::Stop) => {
+                q.pop_back();
+            }
+            _ => q.push_back(sig),
+        }
+    }
+
+    /// Take the next pending signal (runtime side, at a safe point).
+    pub fn take(&self) -> Option<ControlSignal> {
+        self.pending.lock().unwrap().pop_front()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use ControlSignal::*;
+
+    #[test]
+    fn fifo_delivery() {
+        let q = SignalQueue::new();
+        q.send(Stop);
+        assert_eq!(q.take(), Some(Stop));
+        assert_eq!(q.take(), None);
+    }
+
+    #[test]
+    fn coalesces_duplicates() {
+        let q = SignalQueue::new();
+        q.send(Stop);
+        q.send(Stop);
+        q.send(Stop);
+        assert_eq!(q.pending(), 1);
+    }
+
+    #[test]
+    fn stop_cont_cancels() {
+        let q = SignalQueue::new();
+        q.send(Stop);
+        q.send(Cont);
+        assert_eq!(q.pending(), 0, "stop+cont is a no-op pair");
+        q.send(Cont);
+        q.send(Stop);
+        assert_eq!(q.pending(), 0);
+    }
+
+    #[test]
+    fn non_adjacent_signals_kept() {
+        let q = SignalQueue::new();
+        q.send(Stop);
+        assert_eq!(q.take(), Some(Stop));
+        q.send(Cont);
+        q.send(Stop); // cancels the Cont
+        q.send(Stop);
+        assert_eq!(q.take(), Some(Stop));
+        assert_eq!(q.take(), None);
+    }
+}

@@ -1,0 +1,223 @@
+//! The container state machine (Fig. 3).
+//!
+//! Conventional states: `Warm`, `Running`. The paper's three new states:
+//! `Hibernate` (deflated), `HibernateRunning` (processing while inflating),
+//! `WokenUp` (inflated-on-demand, cheaper than Warm). The nine numbered
+//! transitions of Fig. 3 are the only legal ones; anything else is a bug
+//! and [`ContainerState::transition`] rejects it.
+
+use std::fmt;
+
+/// Container lifecycle states. `Dead` models eviction/termination (the exit
+/// arc of the figure).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ContainerState {
+    /// Being cold-started (runtime + app init in progress).
+    ColdStarting,
+    /// Fully initialized, idle, full memory footprint.
+    Warm,
+    /// Processing a request from Warm.
+    Running,
+    /// Deflated: paused, memory swapped/reclaimed (the paper's mode).
+    Hibernate,
+    /// Processing a request while inflating from Hibernate/WokenUp.
+    HibernateRunning,
+    /// Finished a post-hibernate request (or anticipatorily woken):
+    /// Warm-like latency, smaller footprint.
+    WokenUp,
+    /// Evicted / terminated.
+    Dead,
+}
+
+impl fmt::Display for ContainerState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            ContainerState::ColdStarting => "cold-starting",
+            ContainerState::Warm => "warm",
+            ContainerState::Running => "running",
+            ContainerState::Hibernate => "hibernate",
+            ContainerState::HibernateRunning => "hibernate-running",
+            ContainerState::WokenUp => "woken-up",
+            ContainerState::Dead => "dead",
+        };
+        f.write_str(s)
+    }
+}
+
+/// The events that drive transitions (Fig. 3's arrows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// ① cold start completed.
+    ColdStartDone,
+    /// ②⑥⑦ a user request arrives.
+    Request,
+    /// ③⑧ request processing finished.
+    RequestDone,
+    /// ④⑨ SIGSTOP from the platform: deflate.
+    SigStop,
+    /// ⑤ SIGCONT from the platform: anticipatory wake.
+    SigCont,
+    /// Eviction.
+    Evict,
+}
+
+/// Error for an illegal transition.
+#[derive(Debug, Clone, thiserror::Error, PartialEq, Eq)]
+#[error("illegal transition: {from} on {event:?}")]
+pub struct IllegalTransition {
+    pub from: ContainerState,
+    pub event: Event,
+}
+
+impl ContainerState {
+    /// Apply an event per Fig. 3. Returns the next state or an error.
+    pub fn transition(self, event: Event) -> Result<ContainerState, IllegalTransition> {
+        use ContainerState::*;
+        use Event::*;
+        let next = match (self, event) {
+            // ① cold start spawns a Warm container.
+            (ColdStarting, ColdStartDone) => Warm,
+            // ② Warm + request → Running; ③ done → Warm.
+            (Warm, Request) => Running,
+            (Running, RequestDone) => Warm,
+            // ④ Warm --SIGSTOP--> Hibernate.
+            (Warm, SigStop) => Hibernate,
+            // ⑤ Hibernate --SIGCONT--> WokenUp (anticipatory).
+            (Hibernate, SigCont) => WokenUp,
+            // ⑥ WokenUp + request → HibernateRunning.
+            (WokenUp, Request) => HibernateRunning,
+            // ⑦ Hibernate + request → HibernateRunning (demand wake).
+            (Hibernate, Request) => HibernateRunning,
+            // ⑧ HibernateRunning done → WokenUp.
+            (HibernateRunning, RequestDone) => WokenUp,
+            // ⑨ WokenUp --SIGSTOP--> Hibernate.
+            (WokenUp, SigStop) => Hibernate,
+            // Eviction is legal from any idle state.
+            (Warm | Hibernate | WokenUp, Evict) => Dead,
+            _ => return Err(IllegalTransition { from: self, event }),
+        };
+        Ok(next)
+    }
+
+    /// Can this container accept a request right now?
+    pub fn accepts_requests(self) -> bool {
+        matches!(
+            self,
+            ContainerState::Warm | ContainerState::Hibernate | ContainerState::WokenUp
+        )
+    }
+
+    /// Is the container currently processing?
+    pub fn is_busy(self) -> bool {
+        matches!(
+            self,
+            ContainerState::Running | ContainerState::HibernateRunning | ContainerState::ColdStarting
+        )
+    }
+
+    /// Is this one of the paper's deflated/derived states?
+    pub fn is_hibernate_family(self) -> bool {
+        matches!(
+            self,
+            ContainerState::Hibernate | ContainerState::HibernateRunning | ContainerState::WokenUp
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use ContainerState::*;
+    use Event::*;
+
+    /// The exact legal-transition set of Fig. 3 (plus eviction arcs):
+    /// anything not listed must be rejected. This test *is* Fig. 3.
+    #[test]
+    fn figure3_transition_table_exact() {
+        let legal = [
+            (ColdStarting, ColdStartDone, Warm),
+            (Warm, Request, Running),            // ②
+            (Running, RequestDone, Warm),        // ③
+            (Warm, SigStop, Hibernate),          // ④
+            (Hibernate, SigCont, WokenUp),       // ⑤
+            (WokenUp, Request, HibernateRunning), // ⑥
+            (Hibernate, Request, HibernateRunning), // ⑦
+            (HibernateRunning, RequestDone, WokenUp), // ⑧
+            (WokenUp, SigStop, Hibernate),       // ⑨
+            (Warm, Evict, Dead),
+            (Hibernate, Evict, Dead),
+            (WokenUp, Evict, Dead),
+        ];
+        let states = [
+            ColdStarting,
+            Warm,
+            Running,
+            Hibernate,
+            HibernateRunning,
+            WokenUp,
+            Dead,
+        ];
+        let events = [ColdStartDone, Request, RequestDone, SigStop, SigCont, Evict];
+        for &s in &states {
+            for &e in &events {
+                let expected = legal
+                    .iter()
+                    .find(|&&(fs, fe, _)| fs == s && fe == e)
+                    .map(|&(_, _, to)| to);
+                match (s.transition(e), expected) {
+                    (Ok(got), Some(want)) => assert_eq!(got, want, "{s} on {e:?}"),
+                    (Err(_), None) => {}
+                    (Ok(got), None) => panic!("{s} on {e:?} illegally allowed → {got}"),
+                    (Err(err), Some(want)) => {
+                        panic!("{s} on {e:?} should go to {want}, got {err}")
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn request_cycle_through_hibernate() {
+        // The canonical life of a Hibernate Container:
+        // cold → warm → running → warm → hibernate → hibernate-running →
+        // woken-up → hibernate-running → woken-up → hibernate.
+        let mut s = ColdStarting;
+        for (e, want) in [
+            (ColdStartDone, Warm),
+            (Request, Running),
+            (RequestDone, Warm),
+            (SigStop, Hibernate),
+            (Request, HibernateRunning),
+            (RequestDone, WokenUp),
+            (Request, HibernateRunning),
+            (RequestDone, WokenUp),
+            (SigStop, Hibernate),
+            (SigCont, WokenUp),
+            (Evict, Dead),
+        ] {
+            s = s.transition(e).unwrap();
+            assert_eq!(s, want);
+        }
+    }
+
+    #[test]
+    fn predicates() {
+        assert!(Warm.accepts_requests());
+        assert!(Hibernate.accepts_requests());
+        assert!(WokenUp.accepts_requests());
+        assert!(!Running.accepts_requests());
+        assert!(!Dead.accepts_requests());
+        assert!(Running.is_busy());
+        assert!(HibernateRunning.is_busy());
+        assert!(Hibernate.is_hibernate_family());
+        assert!(WokenUp.is_hibernate_family());
+        assert!(!Warm.is_hibernate_family());
+    }
+
+    #[test]
+    fn dead_is_terminal() {
+        for e in [ColdStartDone, Request, RequestDone, SigStop, SigCont, Evict] {
+            assert!(Dead.transition(e).is_err());
+        }
+    }
+}

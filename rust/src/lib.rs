@@ -1,0 +1,52 @@
+//! # quark-hibernate
+//!
+//! Reproduction of **"Hibernate Container: A Deflated Container Mode for Fast
+//! Startup and High-density Deployment in Serverless Computing"** (Sun, Vij,
+//! Li, Guo, Xiong — 2023) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate implements, from scratch:
+//!
+//! * the Quark-style guest memory substrate the paper's mechanism lives in:
+//!   a real-`mmap` host memory region ([`mem::host`]), the reclaim-oriented
+//!   **Bitmap Page Allocator** of Fig. 4 ([`mem::bitmap_alloc`]), the binary
+//!   buddy baseline it replaces ([`mem::buddy`]), guest page tables with the
+//!   paper's custom swap bit #9 ([`mem::page_table`]), VMAs with cross-sandbox
+//!   file-page sharing ([`mem::vma`], [`mem::mmap_file`]) and PSS accounting
+//!   ([`mem::pss`]);
+//! * the **Swapping Manager** of Fig. 5: page-fault based swap-out/in and the
+//!   REAP record-and-prefetch batch path, over real per-sandbox swap files
+//!   ([`swap`]);
+//! * the **container state machine** of Fig. 3 with the three new states
+//!   (`Hibernate`, `HibernateRunning`, `WokenUp`) and the 4-step
+//!   deflate / 2-trigger inflate orchestration ([`container`]);
+//! * a serverless **platform** around it: router, per-function pools,
+//!   keep-alive/hibernate policy under a host memory budget, anticipatory
+//!   wake-up predictor, trace generation/replay and metrics ([`platform`]);
+//! * the **PJRT runtime** that executes the AOT-compiled JAX/Pallas function
+//!   payloads (`artifacts/*.hlo.txt`) on the request path ([`runtime`]);
+//! * the paper's **evaluation workloads** (FunctionBench trio + four
+//!   language-runtime hello-worlds), calibrated to the paper's testbed
+//!   ([`workloads`]).
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every figure/table of the paper to a bench target.
+
+pub mod bench_support;
+pub mod config;
+pub mod container;
+pub mod mem;
+pub mod platform;
+pub mod runtime;
+pub mod simtime;
+pub mod swap;
+pub mod util;
+pub mod workloads;
+
+/// Guest page size, 4 KiB (the only size the Bitmap Page Allocator serves).
+pub const PAGE_SIZE: usize = 4096;
+/// Bitmap-allocator block size: 4 MiB, 4 MiB-aligned (Fig. 4).
+pub const BLOCK_SIZE: usize = 4 << 20;
+/// Pages per 4 MiB block (first one is the Control Page).
+pub const PAGES_PER_BLOCK: usize = BLOCK_SIZE / PAGE_SIZE;
+/// Data pages available per block (all but the Control Page).
+pub const DATA_PAGES_PER_BLOCK: usize = PAGES_PER_BLOCK - 1;

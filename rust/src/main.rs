@@ -1,0 +1,221 @@
+//! `repro` — the quark-hibernate launcher.
+//!
+//! Subcommands (hand-rolled parser; the offline registry has no clap):
+//!
+//! ```text
+//! repro serve  [--config FILE] [--workers N] [--duration-ms N] [-o k=v ...]
+//! repro replay [--config FILE] [--duration-ms N] [--mean-gap-ms N]
+//!              [--trace FILE.csv] [-o k=v ...]
+//! repro fig6   [--quick]          # Figure 6: latency per container state
+//! repro fig7   [--quick]          # Figure 7: PSS per container state
+//! repro density [--budget-mib N]  # deployment-density experiment
+//! repro list-artifacts            # show what the runtime can load
+//! ```
+
+use anyhow::{bail, Context, Result};
+use quark_hibernate::config::PlatformConfig;
+use quark_hibernate::container::{NoopRunner, PayloadRunner};
+use quark_hibernate::platform::server::Server;
+use quark_hibernate::platform::{trace, Platform};
+use quark_hibernate::runtime::PjrtRunner;
+use quark_hibernate::util::{human_bytes, human_ns};
+use quark_hibernate::workloads;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Minimal flag parser: `--key value`, `--flag`, `-o k=v` (repeatable).
+struct Args {
+    flags: Vec<(String, Option<String>)>,
+    overrides: Vec<String>,
+}
+
+impl Args {
+    fn parse(mut argv: std::env::Args) -> (Option<String>, Args) {
+        let _bin = argv.next();
+        let cmd = argv.next();
+        let mut flags = Vec::new();
+        let mut overrides = Vec::new();
+        let rest: Vec<String> = argv.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = &rest[i];
+            if a == "-o" {
+                if let Some(v) = rest.get(i + 1) {
+                    overrides.push(v.clone());
+                    i += 2;
+                    continue;
+                }
+            }
+            if let Some(name) = a.strip_prefix("--") {
+                let next_is_value = rest
+                    .get(i + 1)
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false);
+                if next_is_value {
+                    flags.push((name.to_string(), Some(rest[i + 1].clone())));
+                    i += 2;
+                } else {
+                    flags.push((name.to_string(), None));
+                    i += 1;
+                }
+                continue;
+            }
+            i += 1;
+        }
+        (cmd, Args { flags, overrides })
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .find(|(n, _)| n == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(n, _)| n == name)
+    }
+
+    fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} {v}")),
+        }
+    }
+}
+
+fn load_config(args: &Args) -> Result<PlatformConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => PlatformConfig::from_file(path)?,
+        None => PlatformConfig::default(),
+    };
+    cfg.apply_overrides(&args.overrides)?;
+    Ok(cfg)
+}
+
+fn make_runner(cfg: &PlatformConfig) -> Arc<dyn PayloadRunner> {
+    match PjrtRunner::new(&cfg.artifacts_dir) {
+        Ok(r) => {
+            eprintln!(
+                "runtime: PJRT loaded, artifacts: {:?}",
+                r.manifest().names()
+            );
+            Arc::new(r)
+        }
+        Err(e) => {
+            eprintln!("runtime: artifacts unavailable ({e:#}); payloads disabled");
+            Arc::new(NoopRunner)
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let workers = args.get_u64("workers", cfg.workers as u64)? as usize;
+    let duration_ms = args.get_u64("duration-ms", 10_000)?;
+    let mean_gap_ms = args.get_u64("mean-gap-ms", 300)?;
+    let runner = make_runner(&cfg);
+    let seed = cfg.seed;
+    let platform = Arc::new(Platform::new(cfg, runner)?);
+    for w in workloads::all_workloads() {
+        platform.deploy(w)?;
+    }
+    let server = Server::start(platform.clone(), workers, Duration::from_millis(20));
+    let events = trace::paper_mix(duration_ms * 1_000_000, mean_gap_ms, seed);
+    println!("serving {} requests over {duration_ms} ms...", events.len());
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for ev in &events {
+        let due = Duration::from_nanos(ev.at_ns);
+        if let Some(sleep) = due.checked_sub(t0.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        pending.push(server.submit(&ev.workload));
+    }
+    let mut ok = 0u64;
+    for rx in pending {
+        if rx.recv()?.is_ok() {
+            ok += 1;
+        }
+    }
+    println!("served {ok}/{} requests", events.len());
+    println!("{}", platform.metrics.report());
+    println!("host committed: {}", human_bytes(platform.memory_used()));
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_replay(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let duration_ms = args.get_u64("duration-ms", 60_000)?;
+    let mean_gap_ms = args.get_u64("mean-gap-ms", 500)?;
+    let runner = make_runner(&cfg);
+    let seed = cfg.seed;
+    let platform = Platform::new(cfg, runner)?;
+    for w in workloads::all_workloads() {
+        platform.deploy(w)?;
+    }
+    let events = match args.get("trace") {
+        Some(path) => quark_hibernate::platform::trace_file::load(path)?,
+        None => trace::paper_mix(duration_ms * 1_000_000, mean_gap_ms, seed),
+    };
+    println!(
+        "replaying {} events (virtual {duration_ms} ms)...",
+        events.len()
+    );
+    let reports = platform.run_trace(&events)?;
+    println!("{}", platform.metrics.report());
+    let total: u64 = reports.iter().map(|r| r.latency_ns).sum();
+    println!(
+        "requests={} mean latency={}",
+        reports.len(),
+        human_ns(total / reports.len().max(1) as u64)
+    );
+    Ok(())
+}
+
+fn cmd_list_artifacts(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let m = quark_hibernate::runtime::Manifest::load(&cfg.artifacts_dir)?;
+    for a in &m.artifacts {
+        println!(
+            "{:<20} {} inputs={:?} outputs={:?}",
+            a.name,
+            a.path.display(),
+            a.inputs,
+            a.outputs
+        );
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let (cmd, args) = Args::parse(std::env::args());
+    match cmd.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("replay") => cmd_replay(&args),
+        Some("fig6") => {
+            quark_hibernate::bench_support::fig6::run(args.has("quick"));
+            Ok(())
+        }
+        Some("fig7") => {
+            quark_hibernate::bench_support::fig7::run(args.has("quick"));
+            Ok(())
+        }
+        Some("density") => {
+            let budget = args.get_u64("budget-mib", 512)?;
+            quark_hibernate::bench_support::density_exp::run(budget << 20, args.has("quick"));
+            Ok(())
+        }
+        Some("list-artifacts") => cmd_list_artifacts(&args),
+        Some(other) => bail!(
+            "unknown command `{other}` (try serve|replay|fig6|fig7|density|list-artifacts)"
+        ),
+        None => {
+            eprintln!(
+                "usage: repro <serve|replay|fig6|fig7|density|list-artifacts> [--config FILE] [-o key=value]"
+            );
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,324 @@
+//! The 4 MiB block + Control Page of the Bitmap Page Allocator (Fig. 4).
+//!
+//! The control structure lives **inside the block's first 4 KiB page**,
+//! exactly as the paper lays it out:
+//!
+//! ```text
+//! ┌──────────── 4 MiB block (4 MiB-aligned) ────────────┐
+//! │ Control Page │ data page 1 │ data page 2 │ ... 1023  │
+//! └──────────────┴─────────────┴─────────────┴───────────┘
+//! Control Page = { "next" pointer          (free-list link)
+//!                , L1 bitmap: 1 × u64      (is L2 word non-zero?)
+//!                , L2 bitmap: 16 × u64     (1 bit per page, 1 = free)
+//!                , refcount: 1023 × u16    (atomic, lockless) }
+//! ```
+//!
+//! Because the free/allocated state is in the control page and **not in the
+//! free pages themselves**, the free data pages can be `madvise`d away and
+//! zero-filled without corrupting the allocator — the property the buddy
+//! allocator lacks (see [`super::buddy`]).
+
+use super::{host::HostMemory, Gpa};
+use crate::{DATA_PAGES_PER_BLOCK, PAGE_SIZE, PAGES_PER_BLOCK};
+use std::sync::atomic::{AtomicU16, AtomicU64, Ordering};
+
+/// Sentinel for "no next block" in the control-page free list link.
+pub const NEXT_NULL: u64 = u64::MAX;
+
+/// The control page, overlaid on the block's first page.
+///
+/// All fields are atomics: the bitmaps are only mutated under the allocator
+/// lock, but refcounts are updated lock-free from any thread (§3.3 "through
+/// Rust's atomic operation ... which is lockless operation").
+#[repr(C)]
+pub struct ControlPage {
+    /// Free-list link: gpa of the next block's control page, or NEXT_NULL.
+    pub next: AtomicU64,
+    /// L1 bitmap: bit `i` set ⇔ `l2[i] != 0` (some free page there).
+    l1: AtomicU64,
+    /// L2 bitmap: 1024 bits, bit per page, **1 = free**. Bit 0 (the control
+    /// page itself) is always 0.
+    l2: [AtomicU64; 16],
+    /// Page reference counts for data pages 1..=1023 (index `page_idx - 1`).
+    refcounts: [AtomicU16; DATA_PAGES_PER_BLOCK],
+}
+
+// Compile-time check: the control structure must fit in one page.
+const _: () = assert!(std::mem::size_of::<ControlPage>() <= PAGE_SIZE);
+
+impl ControlPage {
+    /// View the control page of the 4 MiB block starting at `block` (must be
+    /// block-aligned).
+    ///
+    /// # Safety contract (enforced by the allocator)
+    /// The block is owned by the Bitmap Page Allocator and `block` is
+    /// 4 MiB-aligned inside the host region.
+    pub fn at(host: &HostMemory, block: Gpa) -> &ControlPage {
+        debug_assert_eq!(block.control_page(), block, "not block-aligned");
+        // SAFETY: in-bounds page, layout fits one page (const-asserted),
+        // all fields are atomics so aliasing through &self is sound.
+        unsafe { &*(host.page_ptr(block) as *const ControlPage) }
+    }
+
+    /// Initialize a freshly acquired block: everything free except the
+    /// control page. Overwrites whatever the global heap left behind.
+    pub fn init(&self) {
+        self.next.store(NEXT_NULL, Ordering::Relaxed);
+        // Word 0: bit 0 (control page) allocated, bits 1..63 free.
+        self.l2[0].store(!1u64, Ordering::Relaxed);
+        for w in 1..16 {
+            self.l2[w].store(!0u64, Ordering::Relaxed);
+        }
+        self.l1.store(0xFFFF, Ordering::Relaxed);
+        for rc in &self.refcounts {
+            rc.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Allocate the first free page: "O(2)" lookup — one L1 probe, one L2
+    /// probe. Returns `(page index within the block, block now full)` with
+    /// the page's refcount set to 1, or None if the block is full. The
+    /// fullness flag is free here (it is exactly `L1 == 0` after the
+    /// update), sparing the allocator a 16-word popcount per alloc
+    /// (§Perf #4).
+    pub fn alloc_page(&self) -> Option<(usize, bool)> {
+        let l1 = self.l1.load(Ordering::Relaxed);
+        if l1 == 0 {
+            return None;
+        }
+        let w = l1.trailing_zeros() as usize;
+        let l2 = self.l2[w].load(Ordering::Relaxed);
+        debug_assert_ne!(l2, 0, "L1 bit set but L2 word empty");
+        let b = l2.trailing_zeros() as usize;
+        let new_l2 = l2 & !(1u64 << b);
+        self.l2[w].store(new_l2, Ordering::Relaxed);
+        let mut new_l1 = l1;
+        if new_l2 == 0 {
+            new_l1 = l1 & !(1u64 << w);
+            self.l1.store(new_l1, Ordering::Relaxed);
+        }
+        let idx = w * 64 + b;
+        debug_assert!(idx >= 1 && idx < PAGES_PER_BLOCK);
+        self.refcounts[idx - 1].store(1, Ordering::Relaxed);
+        Some((idx, new_l1 == 0))
+    }
+
+    /// Is every data page allocated? O(1): the L1 cache word.
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.l1.load(Ordering::Relaxed) == 0
+    }
+
+    /// Return a page (refcount must already be 0). Marks the bit free.
+    /// Returns the free count after the operation.
+    pub fn free_page(&self, idx: usize) -> usize {
+        assert!((1..PAGES_PER_BLOCK).contains(&idx), "bad page idx {idx}");
+        debug_assert_eq!(self.refcounts[idx - 1].load(Ordering::Relaxed), 0);
+        let (w, b) = (idx / 64, idx % 64);
+        let l2 = self.l2[w].load(Ordering::Relaxed);
+        assert_eq!(l2 & (1u64 << b), 0, "double free of page {idx}");
+        self.l2[w].store(l2 | (1u64 << b), Ordering::Relaxed);
+        self.l1
+            .fetch_or(1u64 << w, Ordering::Relaxed);
+        self.free_count()
+    }
+
+    /// Lock-free refcount increment (process clone / COW sharing).
+    #[inline]
+    pub fn inc_ref(&self, idx: usize) -> u16 {
+        self.refcounts[idx - 1].fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Lock-free refcount decrement. Returns the remaining count; the caller
+    /// frees the page through the allocator when it reaches 0.
+    #[inline]
+    pub fn dec_ref(&self, idx: usize) -> u16 {
+        let prev = self.refcounts[idx - 1].fetch_sub(1, Ordering::Relaxed);
+        assert!(prev > 0, "refcount underflow on page {idx}");
+        prev - 1
+    }
+
+    #[inline]
+    pub fn refcount(&self, idx: usize) -> u16 {
+        self.refcounts[idx - 1].load(Ordering::Relaxed)
+    }
+
+    /// Number of free data pages in the block.
+    pub fn free_count(&self) -> usize {
+        self.l2
+            .iter()
+            .map(|w| w.load(Ordering::Relaxed).count_ones() as usize)
+            .sum()
+    }
+
+    /// Is the given page free?
+    pub fn is_free(&self, idx: usize) -> bool {
+        let (w, b) = (idx / 64, idx % 64);
+        self.l2[w].load(Ordering::Relaxed) & (1u64 << b) != 0
+    }
+
+    /// Indices of all free data pages (for the reclaim walk).
+    pub fn free_pages(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.free_count());
+        for w in 0..16 {
+            let mut word = self.l2[w].load(Ordering::Relaxed);
+            while word != 0 {
+                let b = word.trailing_zeros() as usize;
+                out.push(w * 64 + b);
+                word &= word - 1;
+            }
+        }
+        out
+    }
+
+    /// Check the L1 cache invariant: `l1 bit w ⇔ l2[w] != 0`.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let l1 = self.l1.load(Ordering::Relaxed);
+        for w in 0..16 {
+            let l2 = self.l2[w].load(Ordering::Relaxed);
+            let bit = l1 & (1u64 << w) != 0;
+            if bit != (l2 != 0) {
+                return Err(format!("L1 bit {w}={bit} but L2 word is {l2:#x}"));
+            }
+        }
+        if self.is_free(0) {
+            return Err("control page marked free".into());
+        }
+        // Allocated pages must have refcount > 0 only if genuinely in use;
+        // a free page must have refcount 0.
+        for idx in 1..PAGES_PER_BLOCK {
+            if self.is_free(idx) && self.refcount(idx) != 0 {
+                return Err(format!("free page {idx} has refcount {}", self.refcount(idx)));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// gpa of data page `idx` within `block`.
+#[inline]
+pub fn page_gpa(block: Gpa, idx: usize) -> Gpa {
+    debug_assert!((1..PAGES_PER_BLOCK).contains(&idx));
+    Gpa(block.0 + (idx * PAGE_SIZE) as u64)
+}
+
+/// Inverse of [`page_gpa`]: page index of `gpa` within its block.
+#[inline]
+pub fn page_idx(gpa: Gpa) -> usize {
+    ((gpa.0 as usize) % crate::BLOCK_SIZE) / PAGE_SIZE
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::host::test_region;
+
+    #[test]
+    fn control_page_fits() {
+        assert!(std::mem::size_of::<ControlPage>() <= PAGE_SIZE);
+        // next(8) + l1(8) + l2(128) + refcounts(2046) = 2190, padded to 2192.
+        assert_eq!(std::mem::size_of::<ControlPage>(), 2192);
+    }
+
+    #[test]
+    fn init_and_alloc_all() {
+        let host = test_region(8);
+        let cp = ControlPage::at(&host, Gpa(0));
+        cp.init();
+        assert_eq!(cp.free_count(), DATA_PAGES_PER_BLOCK);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..DATA_PAGES_PER_BLOCK {
+            let (idx, now_full) = cp.alloc_page().unwrap();
+            assert!(seen.insert(idx), "duplicate allocation {idx}");
+            assert!(idx >= 1);
+            assert_eq!(now_full, i == DATA_PAGES_PER_BLOCK - 1);
+        }
+        assert_eq!(cp.alloc_page(), None);
+        assert_eq!(cp.free_count(), 0);
+        cp.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn alloc_is_first_fit_low_to_high() {
+        let host = test_region(8);
+        let cp = ControlPage::at(&host, Gpa(0));
+        cp.init();
+        assert_eq!(cp.alloc_page(), Some((1, false)));
+        assert_eq!(cp.alloc_page(), Some((2, false)));
+        // free 1 → next alloc returns 1 again
+        cp.dec_ref(1);
+        cp.free_page(1);
+        assert_eq!(cp.alloc_page(), Some((1, false)));
+    }
+
+    #[test]
+    fn refcounts_lockless_cycle() {
+        let host = test_region(8);
+        let cp = ControlPage::at(&host, Gpa(0));
+        cp.init();
+        let (idx, _) = cp.alloc_page().unwrap();
+        assert_eq!(cp.refcount(idx), 1);
+        assert_eq!(cp.inc_ref(idx), 2); // clone
+        assert_eq!(cp.dec_ref(idx), 1);
+        assert_eq!(cp.dec_ref(idx), 0);
+        cp.free_page(idx);
+        assert!(cp.is_free(idx));
+        cp.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let host = test_region(8);
+        let cp = ControlPage::at(&host, Gpa(0));
+        cp.init();
+        let (idx, _) = cp.alloc_page().unwrap();
+        cp.dec_ref(idx);
+        cp.free_page(idx);
+        cp.free_page(idx);
+    }
+
+    #[test]
+    fn survives_zero_fill_of_free_data_pages() {
+        // The paper's key property: madvise free *data* pages; the metadata
+        // in the control page survives and the block keeps working.
+        let host = test_region(8);
+        let block = Gpa(0);
+        let cp = ControlPage::at(&host, block);
+        cp.init();
+        let (a, _) = cp.alloc_page().unwrap();
+        let (b, _) = cp.alloc_page().unwrap();
+        host.fill_page(page_gpa(block, a), 1).unwrap();
+        host.fill_page(page_gpa(block, b), 2).unwrap();
+        cp.dec_ref(a);
+        cp.free_page(a);
+        // Reclaim all free pages with real madvise — including page `a`.
+        let free: Vec<Gpa> = cp.free_pages().iter().map(|&i| page_gpa(block, i)).collect();
+        host.discard_pages(&free).unwrap();
+        cp.check_invariants().unwrap();
+        // Allocator still functions and hands the zero-filled page back out.
+        let (again, _) = cp.alloc_page().unwrap();
+        assert_eq!(again, a);
+        assert!(!cp.is_free(b));
+    }
+
+    #[test]
+    fn free_pages_enumeration() {
+        let host = test_region(8);
+        let cp = ControlPage::at(&host, Gpa(0));
+        cp.init();
+        let all = cp.free_pages();
+        assert_eq!(all.len(), DATA_PAGES_PER_BLOCK);
+        assert_eq!(all[0], 1);
+        assert_eq!(*all.last().unwrap(), 1023);
+    }
+
+    #[test]
+    fn gpa_index_round_trip() {
+        let block = Gpa(8 << 20);
+        for idx in [1usize, 7, 63, 64, 512, 1023] {
+            assert_eq!(page_idx(page_gpa(block, idx)), idx);
+            assert_eq!(page_gpa(block, idx).control_page(), block);
+        }
+    }
+}

@@ -1,0 +1,438 @@
+//! Binary buddy allocator — Quark's original global heap and the baseline
+//! the Bitmap Page Allocator replaces (§3.3).
+//!
+//! Faithful to the property the paper's argument hinges on: the free lists
+//! are **intrusive** — each free chunk stores `{magic|order, next}` in its
+//! own first 16 bytes. That is exactly why naive `madvise(MADV_DONTNEED)`
+//! reclamation corrupts it: the kernel zero-fills the page, the "next"
+//! pointer is gone, the list is broken (demonstrated by
+//! `reclaim_breaks_intrusive_free_list` below and benchmarked in
+//! `micro_allocator`).
+//!
+//! The allocator serves two roles here:
+//! 1. the **global heap** that hands 4 MiB blocks to the Bitmap Page
+//!    Allocator ("the Bitmap Page Allocator allocates another 4MB memory
+//!    block from the global heap, i.e. the global binary buddy allocator");
+//! 2. the **baseline** in the reclamation comparison bench.
+
+use super::{host::HostMemory, Gpa};
+use crate::PAGE_SIZE;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::sync::Mutex;
+
+/// Magic tag stored in free-chunk headers (low byte carries the order).
+const MAGIC: u64 = 0xB0DD_1E5F_EE11_5700;
+const MAGIC_MASK: u64 = 0xFFFF_FFFF_FFFF_FF00;
+/// Null link.
+const NIL: u64 = u64::MAX;
+
+/// Order of a 4 MiB block when the unit is a 4 KiB page: 2^10 pages.
+pub const BLOCK_ORDER: usize = 10;
+
+#[derive(Debug, thiserror::Error)]
+pub enum BuddyError {
+    #[error("buddy free list corrupted at {gpa:#x}: header {found:#x} (expected magic {expected:#x}) — \
+             this is the §3.3 failure mode: zero-fill reclaim destroyed an intrusive free-list node")]
+    Corrupted { gpa: u64, found: u64, expected: u64 },
+    #[error("out of memory: no free chunk of order {0}")]
+    OutOfMemory(usize),
+    #[error("free of unallocated chunk {0:#x}")]
+    BadFree(u64),
+}
+
+struct Inner {
+    /// Head gpa of the intrusive free list per order.
+    free_heads: Vec<u64>,
+    /// Merge index: free chunk gpa → order. (The kernel keeps equivalent
+    /// state in struct page; the intrusive list alone cannot support O(1)
+    /// buddy lookup.)
+    free_index: HashMap<u64, u8>,
+    /// Allocated chunk gpa → order, for free() validation.
+    allocated: HashMap<u64, u8>,
+    allocated_bytes: u64,
+}
+
+/// The buddy allocator over a `[base, base+len)` slice of the host region.
+pub struct BuddyAllocator {
+    host: Arc<HostMemory>,
+    base: u64,
+    #[allow(dead_code)] // part of the managed-range contract; used in asserts
+    len: u64,
+    max_order: usize,
+    inner: Mutex<Inner>,
+}
+
+impl BuddyAllocator {
+    /// Manage `[base, base+len)` of `host`. `base` must be 4 MiB-aligned so
+    /// that order-10 chunks are 4 MiB-aligned (the Bitmap Page Allocator
+    /// relies on block alignment for control-page masking).
+    pub fn new(host: Arc<HostMemory>, base: u64, len: u64) -> Result<Self> {
+        if base % crate::BLOCK_SIZE as u64 != 0 {
+            bail!("buddy base must be 4MiB-aligned");
+        }
+        if base + len > host.size() as u64 {
+            bail!("buddy range exceeds host region");
+        }
+        let max_order = (63 - (len / PAGE_SIZE as u64).leading_zeros() as usize).max(BLOCK_ORDER);
+        let alloc = Self {
+            host,
+            base,
+            len,
+            max_order,
+            inner: Mutex::new(Inner {
+                free_heads: vec![NIL; max_order + 1],
+                free_index: HashMap::new(),
+                allocated: HashMap::new(),
+                allocated_bytes: 0,
+            }),
+        };
+        {
+            // Carve the region greedily into maximal power-of-two chunks.
+            let mut inner = alloc.inner.lock().unwrap();
+            let mut off = base;
+            let end = base + crate::util::align_down(len, PAGE_SIZE as u64);
+            while off < end {
+                let align_order = if off == 0 {
+                    alloc.max_order
+                } else {
+                    ((off / PAGE_SIZE as u64).trailing_zeros() as usize).min(alloc.max_order)
+                };
+                let mut order = align_order;
+                while off + Self::order_bytes(order) > end {
+                    order -= 1;
+                }
+                alloc.push_free(&mut inner, Gpa(off), order);
+                off += Self::order_bytes(order);
+            }
+        }
+        Ok(alloc)
+    }
+
+    #[inline]
+    pub fn order_bytes(order: usize) -> u64 {
+        (PAGE_SIZE as u64) << order
+    }
+
+    /// Smallest order whose chunk holds `bytes`.
+    pub fn order_for(bytes: u64) -> usize {
+        let pages = bytes.div_ceil(PAGE_SIZE as u64).max(1);
+        (64 - (pages - 1).leading_zeros() as usize).min(63)
+    }
+
+    fn read_header(&self, gpa: Gpa) -> (u64, u64) {
+        let p = self.host.page_ptr(gpa) as *const u64;
+        // SAFETY: chunk is owned by the allocator; header is in-bounds.
+        unsafe { (p.read(), p.add(1).read()) }
+    }
+
+    fn write_header(&self, gpa: Gpa, order: usize, next: u64) {
+        let p = self.host.page_ptr(gpa) as *mut u64;
+        // SAFETY: chunk owned by the allocator.
+        unsafe {
+            p.write(MAGIC | order as u64);
+            p.add(1).write(next);
+        }
+        // Writing the header commits the page — the kernel-heap metadata
+        // footprint the paper's design keeps out of the data pages.
+        self.host.note_commit(gpa);
+    }
+
+    fn push_free(&self, inner: &mut Inner, gpa: Gpa, order: usize) {
+        self.write_header(gpa, order, inner.free_heads[order]);
+        inner.free_heads[order] = gpa.0;
+        inner.free_index.insert(gpa.0, order as u8);
+    }
+
+    /// Pop the head of the order's free list, verifying the intrusive header.
+    fn pop_free(&self, inner: &mut Inner, order: usize) -> Result<Option<Gpa>, BuddyError> {
+        let head = inner.free_heads[order];
+        if head == NIL {
+            return Ok(None);
+        }
+        let gpa = Gpa(head);
+        let (tag, next) = self.read_header(gpa);
+        if tag & MAGIC_MASK != MAGIC || (tag & 0xFF) as usize != order {
+            return Err(BuddyError::Corrupted {
+                gpa: head,
+                found: tag,
+                expected: MAGIC | order as u64,
+            });
+        }
+        inner.free_heads[order] = next;
+        inner.free_index.remove(&head);
+        Ok(Some(gpa))
+    }
+
+    /// Unlink a specific chunk (buddy merge path) by walking the list.
+    fn unlink(&self, inner: &mut Inner, gpa: Gpa, order: usize) -> Result<(), BuddyError> {
+        let mut prev: Option<u64> = None;
+        let mut cur = inner.free_heads[order];
+        while cur != NIL {
+            let (tag, next) = self.read_header(Gpa(cur));
+            if tag & MAGIC_MASK != MAGIC || (tag & 0xFF) as usize != order {
+                return Err(BuddyError::Corrupted {
+                    gpa: cur,
+                    found: tag,
+                    expected: MAGIC | order as u64,
+                });
+            }
+            if cur == gpa.0 {
+                match prev {
+                    None => inner.free_heads[order] = next,
+                    Some(p) => {
+                        let (ptag, _) = self.read_header(Gpa(p));
+                        debug_assert_eq!(ptag & MAGIC_MASK, MAGIC);
+                        let ptr = self.host.page_ptr(Gpa(p)) as *mut u64;
+                        // SAFETY: owned free chunk header.
+                        unsafe { ptr.add(1).write(next) };
+                    }
+                }
+                inner.free_index.remove(&gpa.0);
+                return Ok(());
+            }
+            prev = Some(cur);
+            cur = next;
+        }
+        Err(BuddyError::BadFree(gpa.0))
+    }
+
+    /// Allocate a chunk of the given order.
+    pub fn alloc_order(&self, order: usize) -> Result<Gpa, BuddyError> {
+        let mut inner = self.inner.lock().unwrap();
+        if order > self.max_order {
+            return Err(BuddyError::OutOfMemory(order));
+        }
+        // Find the smallest populated order ≥ requested.
+        let mut o = order;
+        let gpa = loop {
+            if o > self.max_order {
+                return Err(BuddyError::OutOfMemory(order));
+            }
+            if let Some(gpa) = self.pop_free(&mut inner, o)? {
+                break gpa;
+            }
+            o += 1;
+        };
+        // Split down, freeing the upper halves.
+        while o > order {
+            o -= 1;
+            let upper = Gpa(gpa.0 + Self::order_bytes(o));
+            self.push_free(&mut inner, upper, o);
+        }
+        inner.allocated.insert(gpa.0, order as u8);
+        inner.allocated_bytes += Self::order_bytes(order);
+        Ok(gpa)
+    }
+
+    /// Allocate at least `bytes`.
+    pub fn alloc_bytes(&self, bytes: u64) -> Result<Gpa, BuddyError> {
+        self.alloc_order(Self::order_for(bytes))
+    }
+
+    /// Allocate one 4 MiB block (the Bitmap Page Allocator's grow path).
+    pub fn alloc_block(&self) -> Result<Gpa, BuddyError> {
+        let gpa = self.alloc_order(BLOCK_ORDER)?;
+        debug_assert_eq!(gpa.control_page(), gpa, "block not 4MiB-aligned");
+        Ok(gpa)
+    }
+
+    /// Free a previously allocated chunk, coalescing with free buddies.
+    pub fn free(&self, gpa: Gpa) -> Result<(), BuddyError> {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(order) = inner.allocated.remove(&gpa.0) else {
+            return Err(BuddyError::BadFree(gpa.0));
+        };
+        let mut order = order as usize;
+        inner.allocated_bytes -= Self::order_bytes(order);
+        let mut gpa = gpa;
+        while order < self.max_order {
+            let rel = gpa.0 - self.base;
+            let buddy = Gpa(self.base + (rel ^ Self::order_bytes(order)));
+            if inner.free_index.get(&buddy.0) != Some(&(order as u8)) {
+                break;
+            }
+            self.unlink(&mut inner, buddy, order)?;
+            gpa = Gpa(gpa.0.min(buddy.0));
+            order += 1;
+        }
+        self.push_free(&mut inner, gpa, order);
+        Ok(())
+    }
+
+    /// Walk every free list and verify each intrusive header. After a naive
+    /// zero-fill reclaim of free chunks this fails with
+    /// [`BuddyError::Corrupted`] — the paper's §3.3 argument, executable.
+    pub fn validate_free_lists(&self) -> Result<(), BuddyError> {
+        let inner = self.inner.lock().unwrap();
+        for order in 0..=self.max_order {
+            let mut cur = inner.free_heads[order];
+            let mut hops = 0u64;
+            while cur != NIL {
+                let (tag, next) = self.read_header(Gpa(cur));
+                if tag & MAGIC_MASK != MAGIC || (tag & 0xFF) as usize != order {
+                    return Err(BuddyError::Corrupted {
+                        gpa: cur,
+                        found: tag,
+                        expected: MAGIC | order as u64,
+                    });
+                }
+                cur = next;
+                hops += 1;
+                if hops > inner.free_index.len() as u64 + 1 {
+                    return Err(BuddyError::Corrupted {
+                        gpa: cur,
+                        found: 0,
+                        expected: MAGIC,
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The gpas of all free chunks (used by the naive-reclaim demo).
+    pub fn free_chunks(&self) -> Vec<(Gpa, usize)> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .free_index
+            .iter()
+            .map(|(&g, &o)| (Gpa(g), o as usize))
+            .collect()
+    }
+
+    pub fn allocated_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().allocated_bytes
+    }
+
+    pub fn free_bytes(&self) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .free_index
+            .values()
+            .map(|&o| Self::order_bytes(o as usize))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::host::test_region;
+
+    fn mk(mib: usize) -> (Arc<HostMemory>, BuddyAllocator) {
+        let host = Arc::new(test_region(mib));
+        let len = host.size() as u64;
+        let b = BuddyAllocator::new(host.clone(), 0, len).unwrap();
+        (host, b)
+    }
+
+    #[test]
+    fn order_math() {
+        assert_eq!(BuddyAllocator::order_for(1), 0);
+        assert_eq!(BuddyAllocator::order_for(4096), 0);
+        assert_eq!(BuddyAllocator::order_for(4097), 1);
+        assert_eq!(BuddyAllocator::order_for(4 << 20), BLOCK_ORDER);
+        assert_eq!(BuddyAllocator::order_bytes(BLOCK_ORDER), 4 << 20);
+    }
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let (_h, b) = mk(16);
+        let total_free = b.free_bytes();
+        let a = b.alloc_bytes(8192).unwrap();
+        let c = b.alloc_bytes(4096).unwrap();
+        assert_ne!(a, c);
+        assert_eq!(b.allocated_bytes(), 8192 + 4096);
+        b.free(a).unwrap();
+        b.free(c).unwrap();
+        assert_eq!(b.allocated_bytes(), 0);
+        assert_eq!(b.free_bytes(), total_free, "coalescing must restore the pool");
+        b.validate_free_lists().unwrap();
+    }
+
+    #[test]
+    fn blocks_are_4mib_aligned() {
+        let (_h, b) = mk(32);
+        for _ in 0..4 {
+            let blk = b.alloc_block().unwrap();
+            assert_eq!(blk.0 % (4 << 20), 0);
+        }
+    }
+
+    #[test]
+    fn exhaustion_reports_oom() {
+        let (_h, b) = mk(8);
+        let mut got = Vec::new();
+        loop {
+            match b.alloc_block() {
+                Ok(g) => got.push(g),
+                Err(BuddyError::OutOfMemory(_)) => break,
+                Err(e) => panic!("unexpected: {e}"),
+            }
+        }
+        assert_eq!(got.len(), 2, "8 MiB region holds two 4 MiB blocks");
+        for g in got {
+            b.free(g).unwrap();
+        }
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let (_h, b) = mk(8);
+        let a = b.alloc_bytes(4096).unwrap();
+        b.free(a).unwrap();
+        assert!(matches!(b.free(a), Err(BuddyError::BadFree(_))));
+    }
+
+    #[test]
+    fn coalesce_merges_buddies() {
+        let (_h, b) = mk(8);
+        // Allocate two order-0 buddies by splitting, then free both: they
+        // must merge back so a block-size alloc succeeds again.
+        let a = b.alloc_order(0).unwrap();
+        let c = b.alloc_order(0).unwrap();
+        let blk1 = b.alloc_block().unwrap(); // consumes one full block
+        b.free(a).unwrap();
+        b.free(c).unwrap();
+        let blk2 = b.alloc_block().unwrap(); // only works if merge happened
+        b.free(blk1).unwrap();
+        b.free(blk2).unwrap();
+        b.validate_free_lists().unwrap();
+    }
+
+    #[test]
+    fn reclaim_breaks_intrusive_free_list() {
+        // §3.3, executable: madvise the free chunks (naive reclamation) →
+        // zero-fill destroys the intrusive headers → the allocator detects
+        // corruption. This is why the Bitmap Page Allocator exists.
+        let (host, b) = mk(16);
+        let a = b.alloc_bytes(4096).unwrap();
+        b.free(a).unwrap();
+        b.validate_free_lists().unwrap();
+        let free_pages: Vec<Gpa> = b.free_chunks().iter().map(|&(g, _)| g).collect();
+        host.discard_pages(&free_pages).unwrap();
+        let err = b.validate_free_lists().unwrap_err();
+        assert!(matches!(err, BuddyError::Corrupted { .. }), "{err}");
+        // And allocation through the corrupted list fails loudly, not silently.
+        assert!(b.alloc_bytes(4096).is_err());
+    }
+
+    #[test]
+    fn split_and_refill_many_sizes() {
+        let (_h, b) = mk(64);
+        let mut chunks = Vec::new();
+        for i in 0..100 {
+            let bytes = 4096u64 << (i % 5);
+            chunks.push(b.alloc_bytes(bytes).unwrap());
+        }
+        let before = b.allocated_bytes();
+        assert!(before > 0);
+        for g in chunks {
+            b.free(g).unwrap();
+        }
+        assert_eq!(b.allocated_bytes(), 0);
+        b.validate_free_lists().unwrap();
+    }
+}

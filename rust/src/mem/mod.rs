@@ -1,0 +1,104 @@
+//! Guest memory substrate: everything §2.2/§3.3 of the paper depends on.
+//!
+//! * [`host`] — the "host Linux kernel" view: a real `mmap` region acting as
+//!   guest-physical memory, commit-on-touch accounting and real
+//!   `madvise(MADV_DONTNEED)` reclaim.
+//! * [`bitmap_alloc`] / [`bitmap_block`] — the paper's reclaim-oriented
+//!   **Bitmap Page Allocator** (Fig. 4), with the control-page layout kept
+//!   *inside the block's first page*, exactly as published.
+//! * [`buddy`] — the binary buddy allocator the paper replaces; its free
+//!   list is intrusive (next pointers live in the free memory), which is
+//!   precisely why zero-fill reclaim breaks it (§3.3).
+//! * [`page_table`] — guest page tables with the Present bit and the
+//!   paper's custom swap marker **bit #9**.
+//! * [`vma`] — guest virtual address space (anonymous + file-backed VMAs).
+//! * [`mmap_file`] — cross-sandbox file-backed page sharing (§3.5).
+//! * [`pss`] — Proportional Set Size accounting (the Fig. 7 metric).
+//! * [`reclaim`] — the Memory Reclaim Manager (deflation step #2).
+
+pub mod bitmap_alloc;
+pub mod bitmap_block;
+pub mod buddy;
+pub mod host;
+pub mod mmap_file;
+pub mod page_table;
+pub mod pss;
+pub mod reclaim;
+pub mod vma;
+
+use crate::PAGE_SIZE;
+
+/// Guest-physical address: byte offset into the [`host::HostMemory`] region.
+/// The host virtual address of the backing page is `base + gpa`, so — as in
+/// the paper — guest-physical memory *is* host virtual memory.
+#[derive(Copy, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Gpa(pub u64);
+
+impl Gpa {
+    pub const NULL: Gpa = Gpa(u64::MAX);
+
+    #[inline]
+    pub fn page_index(self) -> u64 {
+        self.0 / PAGE_SIZE as u64
+    }
+
+    #[inline]
+    pub fn is_page_aligned(self) -> bool {
+        self.0 % PAGE_SIZE as u64 == 0
+    }
+
+    /// Control page of the 4 MiB block containing this address — "clearing
+    /// its address's least 22 bits" (§3.3), no lookup table needed.
+    #[inline]
+    pub fn control_page(self) -> Gpa {
+        Gpa(self.0 & !((crate::BLOCK_SIZE as u64) - 1))
+    }
+}
+
+impl std::fmt::Debug for Gpa {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Gpa({:#x})", self.0)
+    }
+}
+
+/// Guest-virtual address (what guest application page tables translate).
+#[derive(Copy, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Gva(pub u64);
+
+impl Gva {
+    #[inline]
+    pub fn page_aligned_down(self) -> Gva {
+        Gva(self.0 & !(PAGE_SIZE as u64 - 1))
+    }
+
+    #[inline]
+    pub fn page_index(self) -> u64 {
+        self.0 / PAGE_SIZE as u64
+    }
+}
+
+impl std::fmt::Debug for Gva {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Gva({:#x})", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn control_page_masking() {
+        assert_eq!(Gpa(0).control_page(), Gpa(0));
+        assert_eq!(Gpa(0x3F_FFFF).control_page(), Gpa(0));
+        assert_eq!(Gpa(0x40_0000).control_page(), Gpa(0x40_0000));
+        assert_eq!(Gpa(0x40_1000).control_page(), Gpa(0x40_0000));
+        assert_eq!(Gpa(0x7F_F000).control_page(), Gpa(0x40_0000));
+    }
+
+    #[test]
+    fn page_indexing() {
+        assert_eq!(Gpa(0x1000).page_index(), 1);
+        assert_eq!(Gva(0x1FFF).page_aligned_down(), Gva(0x1000));
+    }
+}

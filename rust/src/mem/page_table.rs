@@ -1,0 +1,463 @@
+//! Guest application page tables: a 4-level radix tree of 64-bit PTEs,
+//! x86-64-shaped, with the paper's **custom flag bit #9** marking
+//! swapped-out pages (§3.4.1: "Set the page table entry's flags bit#9,
+//! which is a customer bit, to indicate the page fault is due to page
+//! swap-out").
+//!
+//! The Swapping Manager walks these tables during deflation (marking anon
+//! pages Not-Present + bit9) and the fault path consults them on every
+//! guest access.
+
+use super::{Gpa, Gva};
+use crate::PAGE_SIZE;
+
+/// Page-table entry. Bit layout (subset of x86-64 plus the paper's bit):
+///
+/// | bit | meaning |
+/// |-----|---------|
+/// | 0   | PRESENT |
+/// | 1   | WRITABLE |
+/// | 5   | ACCESSED |
+/// | 6   | DIRTY |
+/// | 9   | **SWAPPED** (paper's custom bit: fault = swap-in) |
+/// | 10  | FILE (file-backed mapping) |
+/// | 11  | COW (write fault must copy) |
+/// | 12–51 | frame (guest-physical page number) |
+#[derive(Copy, Clone, PartialEq, Eq)]
+pub struct Pte(pub u64);
+
+impl Pte {
+    pub const PRESENT: u64 = 1 << 0;
+    pub const WRITABLE: u64 = 1 << 1;
+    pub const ACCESSED: u64 = 1 << 5;
+    pub const DIRTY: u64 = 1 << 6;
+    /// The paper's custom swap marker.
+    pub const SWAPPED: u64 = 1 << 9;
+    pub const FILE: u64 = 1 << 10;
+    pub const COW: u64 = 1 << 11;
+    const ADDR_MASK: u64 = 0x000F_FFFF_FFFF_F000;
+
+    pub const EMPTY: Pte = Pte(0);
+
+    pub fn new_present(gpa: Gpa, extra_flags: u64) -> Pte {
+        debug_assert!(gpa.is_page_aligned());
+        Pte((gpa.0 & Self::ADDR_MASK) | Self::PRESENT | extra_flags)
+    }
+
+    #[inline]
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+
+    #[inline]
+    pub fn present(self) -> bool {
+        self.0 & Self::PRESENT != 0
+    }
+
+    #[inline]
+    pub fn swapped(self) -> bool {
+        self.0 & Self::SWAPPED != 0
+    }
+
+    #[inline]
+    pub fn writable(self) -> bool {
+        self.0 & Self::WRITABLE != 0
+    }
+
+    #[inline]
+    pub fn is_file(self) -> bool {
+        self.0 & Self::FILE != 0
+    }
+
+    #[inline]
+    pub fn is_cow(self) -> bool {
+        self.0 & Self::COW != 0
+    }
+
+    #[inline]
+    pub fn dirty(self) -> bool {
+        self.0 & Self::DIRTY != 0
+    }
+
+    /// Frame address. Valid when present **or** swapped (the swap path keeps
+    /// the gpa in the entry so the dedup hash table can key on it).
+    #[inline]
+    pub fn gpa(self) -> Gpa {
+        Gpa(self.0 & Self::ADDR_MASK)
+    }
+
+    /// Mark swapped-out: clear PRESENT, set bit #9, keep the frame bits.
+    #[inline]
+    pub fn to_swapped(self) -> Pte {
+        Pte((self.0 & !Self::PRESENT) | Self::SWAPPED)
+    }
+
+    /// Complete a swap-in: set PRESENT, clear bit #9.
+    #[inline]
+    pub fn to_present(self) -> Pte {
+        Pte((self.0 | Self::PRESENT) & !Self::SWAPPED)
+    }
+
+    #[inline]
+    pub fn with(self, flags: u64) -> Pte {
+        Pte(self.0 | flags)
+    }
+
+    #[inline]
+    pub fn without(self, flags: u64) -> Pte {
+        Pte(self.0 & !flags)
+    }
+}
+
+impl std::fmt::Debug for Pte {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Pte({:?}{}{}{}{}{}{})",
+            self.gpa(),
+            if self.present() { " P" } else { "" },
+            if self.writable() { " W" } else { "" },
+            if self.swapped() { " SWP" } else { "" },
+            if self.is_file() { " FILE" } else { "" },
+            if self.is_cow() { " COW" } else { "" },
+            if self.dirty() { " D" } else { "" },
+        )
+    }
+}
+
+const FANOUT: usize = 512;
+const LEVELS: usize = 4;
+/// Max virtual address covered: 512^4 * 4KiB = 256 TiB (48-bit).
+pub const MAX_GVA: u64 = (FANOUT as u64).pow(LEVELS as u32) * PAGE_SIZE as u64;
+
+enum Node {
+    Dir(Box<[Option<Node>; FANOUT]>),
+    Leaf(Box<[u64; FANOUT]>),
+}
+
+impl Node {
+    fn new_dir() -> Node {
+        Node::Dir(Box::new(std::array::from_fn(|_| None)))
+    }
+
+    fn new_leaf() -> Node {
+        Node::Leaf(Box::new([0u64; FANOUT]))
+    }
+}
+
+/// A guest process's page table.
+pub struct PageTable {
+    root: Node,
+    present: u64,
+    swapped: u64,
+}
+
+#[inline]
+fn indices(gva: Gva) -> [usize; LEVELS] {
+    let page = gva.page_index();
+    [
+        ((page >> 27) & 0x1FF) as usize,
+        ((page >> 18) & 0x1FF) as usize,
+        ((page >> 9) & 0x1FF) as usize,
+        (page & 0x1FF) as usize,
+    ]
+}
+
+impl Default for PageTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PageTable {
+    pub fn new() -> Self {
+        Self {
+            root: Node::new_dir(),
+            present: 0,
+            swapped: 0,
+        }
+    }
+
+    pub fn present_count(&self) -> u64 {
+        self.present
+    }
+
+    pub fn swapped_count(&self) -> u64 {
+        self.swapped
+    }
+
+    fn leaf_slot(&mut self, gva: Gva, create: bool) -> Option<&mut u64> {
+        assert!(gva.0 < MAX_GVA, "gva out of range");
+        let idx = indices(gva);
+        let mut node = &mut self.root;
+        for (level, &i) in idx.iter().enumerate().take(LEVELS - 1) {
+            let Node::Dir(children) = node else {
+                unreachable!("leaf at non-terminal level");
+            };
+            if children[i].is_none() {
+                if !create {
+                    return None;
+                }
+                children[i] = Some(if level == LEVELS - 2 {
+                    Node::new_leaf()
+                } else {
+                    Node::new_dir()
+                });
+            }
+            node = children[i].as_mut().unwrap();
+        }
+        let Node::Leaf(ptes) = node else {
+            unreachable!("dir at terminal level");
+        };
+        Some(&mut ptes[idx[LEVELS - 1]])
+    }
+
+    /// Read the PTE for `gva` (page-aligned-down).
+    pub fn get(&self, gva: Gva) -> Pte {
+        assert!(gva.0 < MAX_GVA, "gva out of range");
+        let idx = indices(gva);
+        let mut node = &self.root;
+        for &i in idx.iter().take(LEVELS - 1) {
+            let Node::Dir(children) = node else {
+                unreachable!()
+            };
+            match &children[i] {
+                None => return Pte::EMPTY,
+                Some(n) => node = n,
+            }
+        }
+        let Node::Leaf(ptes) = node else { unreachable!() };
+        Pte(ptes[idx[LEVELS - 1]])
+    }
+
+    fn book_delta(&mut self, old: Pte, new: Pte) {
+        if old.present() {
+            self.present -= 1;
+        }
+        if new.present() {
+            self.present += 1;
+        }
+        if old.swapped() {
+            self.swapped -= 1;
+        }
+        if new.swapped() {
+            self.swapped += 1;
+        }
+    }
+
+    /// Install a PTE (overwrites any previous mapping).
+    pub fn map(&mut self, gva: Gva, pte: Pte) {
+        let slot = self.leaf_slot(gva, true).unwrap();
+        let old = Pte(*slot);
+        *slot = pte.0;
+        self.book_delta(old, pte);
+    }
+
+    /// Remove a mapping, returning the previous PTE.
+    pub fn unmap(&mut self, gva: Gva) -> Pte {
+        match self.leaf_slot(gva, false) {
+            None => Pte::EMPTY,
+            Some(slot) => {
+                let old = Pte(*slot);
+                *slot = 0;
+                self.book_delta(old, Pte::EMPTY);
+                old
+            }
+        }
+    }
+
+    /// Apply `f` to the PTE if one exists; returns the new value.
+    pub fn update(&mut self, gva: Gva, f: impl FnOnce(Pte) -> Pte) -> Option<Pte> {
+        let slot = self.leaf_slot(gva, false)?;
+        let old = Pte(*slot);
+        if old.is_empty() {
+            return None;
+        }
+        let new = f(old);
+        *slot = new.0;
+        let (o, n) = (old, new);
+        self.book_delta(o, n);
+        Some(new)
+    }
+
+    /// Visit every non-empty PTE: `f(gva, pte)`. This is the "walk through
+    /// all the guest application page tables" of the swap-out process.
+    pub fn for_each(&self, mut f: impl FnMut(Gva, Pte)) {
+        Self::walk(&self.root, 0, 0, &mut f);
+    }
+
+    fn walk(node: &Node, level: usize, base_page: u64, f: &mut impl FnMut(Gva, Pte)) {
+        match node {
+            Node::Dir(children) => {
+                for (i, c) in children.iter().enumerate() {
+                    if let Some(c) = c {
+                        let shift = 9 * (LEVELS - 1 - level);
+                        Self::walk(c, level + 1, base_page | ((i as u64) << shift), f);
+                    }
+                }
+            }
+            Node::Leaf(ptes) => {
+                for (i, &p) in ptes.iter().enumerate() {
+                    if p != 0 {
+                        let page = base_page | i as u64;
+                        f(Gva(page * PAGE_SIZE as u64), Pte(p));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Mutating visit: `f` returns the replacement PTE (possibly unchanged).
+    pub fn for_each_mut(&mut self, mut f: impl FnMut(Gva, Pte) -> Pte) {
+        let mut present = self.present;
+        let mut swapped = self.swapped;
+        Self::walk_mut(&mut self.root, 0, 0, &mut |gva, old| {
+            let new = f(gva, old);
+            if old.present() {
+                present -= 1;
+            }
+            if new.present() {
+                present += 1;
+            }
+            if old.swapped() {
+                swapped -= 1;
+            }
+            if new.swapped() {
+                swapped += 1;
+            }
+            new
+        });
+        self.present = present;
+        self.swapped = swapped;
+    }
+
+    fn walk_mut(
+        node: &mut Node,
+        level: usize,
+        base_page: u64,
+        f: &mut impl FnMut(Gva, Pte) -> Pte,
+    ) {
+        match node {
+            Node::Dir(children) => {
+                for (i, c) in children.iter_mut().enumerate() {
+                    if let Some(c) = c {
+                        let shift = 9 * (LEVELS - 1 - level);
+                        Self::walk_mut(c, level + 1, base_page | ((i as u64) << shift), f);
+                    }
+                }
+            }
+            Node::Leaf(ptes) => {
+                for (i, p) in ptes.iter_mut().enumerate() {
+                    if *p != 0 {
+                        let page = base_page | i as u64;
+                        *p = f(Gva(page * PAGE_SIZE as u64), Pte(*p)).0;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pte_flag_round_trips() {
+        let gpa = Gpa(0x12345000);
+        let pte = Pte::new_present(gpa, Pte::WRITABLE);
+        assert!(pte.present() && pte.writable() && !pte.swapped());
+        assert_eq!(pte.gpa(), gpa);
+        let swapped = pte.to_swapped();
+        assert!(!swapped.present() && swapped.swapped());
+        assert_eq!(swapped.gpa(), gpa, "frame must survive the swap marker");
+        let back = swapped.to_present();
+        assert!(back.present() && !back.swapped());
+        assert_eq!(back, pte);
+    }
+
+    #[test]
+    fn map_get_unmap() {
+        let mut pt = PageTable::new();
+        let gva = Gva(0x7000_0000);
+        assert!(pt.get(gva).is_empty());
+        pt.map(gva, Pte::new_present(Gpa(0x1000), Pte::WRITABLE));
+        assert_eq!(pt.get(gva).gpa(), Gpa(0x1000));
+        assert_eq!(pt.present_count(), 1);
+        let old = pt.unmap(gva);
+        assert!(old.present());
+        assert!(pt.get(gva).is_empty());
+        assert_eq!(pt.present_count(), 0);
+    }
+
+    #[test]
+    fn sparse_addresses_dont_collide() {
+        let mut pt = PageTable::new();
+        // Addresses chosen to hit distinct top-level slots.
+        let gvas = [
+            Gva(0x0000_0000_1000),
+            Gva(0x0000_4000_0000),
+            Gva(0x0080_0000_0000),
+            Gva(0x7F00_0000_0000),
+        ];
+        for (i, &gva) in gvas.iter().enumerate() {
+            pt.map(gva, Pte::new_present(Gpa((i as u64 + 1) * 0x1000), 0));
+        }
+        for (i, &gva) in gvas.iter().enumerate() {
+            assert_eq!(pt.get(gva).gpa(), Gpa((i as u64 + 1) * 0x1000));
+        }
+    }
+
+    #[test]
+    fn walk_enumerates_everything_in_order() {
+        let mut pt = PageTable::new();
+        let mut expect = Vec::new();
+        for i in 0..1000u64 {
+            let gva = Gva(i * 0x1000 * 37); // strided
+            pt.map(gva, Pte::new_present(Gpa(i * 0x1000), 0));
+            expect.push(gva.0);
+        }
+        expect.sort_unstable();
+        let mut got = Vec::new();
+        pt.for_each(|gva, pte| {
+            assert!(pte.present());
+            got.push(gva.0);
+        });
+        assert_eq!(got, expect, "walk must be sorted and complete");
+    }
+
+    #[test]
+    fn for_each_mut_swaps_all_and_fixes_counts() {
+        let mut pt = PageTable::new();
+        for i in 0..100u64 {
+            pt.map(Gva(i * 0x1000), Pte::new_present(Gpa(i * 0x1000), Pte::WRITABLE));
+        }
+        pt.for_each_mut(|_gva, pte| pte.to_swapped());
+        assert_eq!(pt.present_count(), 0);
+        assert_eq!(pt.swapped_count(), 100);
+        pt.for_each(|_, pte| {
+            assert!(pte.swapped());
+            assert!(!pte.present());
+        });
+        pt.for_each_mut(|_gva, pte| pte.to_present());
+        assert_eq!(pt.present_count(), 100);
+        assert_eq!(pt.swapped_count(), 0);
+    }
+
+    #[test]
+    fn update_counts() {
+        let mut pt = PageTable::new();
+        pt.map(Gva(0), Pte::new_present(Gpa(0x1000), 0));
+        assert!(pt.update(Gva(0x9999_000), |p| p).is_none(), "no entry there");
+        pt.update(Gva(0), |p| p.to_swapped()).unwrap();
+        assert_eq!(pt.present_count(), 0);
+        assert_eq!(pt.swapped_count(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_out_of_range() {
+        let pt = PageTable::new();
+        pt.get(Gva(MAX_GVA));
+    }
+}

@@ -1,0 +1,214 @@
+//! Proportional Set Size accounting — the Fig. 7 metric.
+//!
+//! The paper measures container memory as PSS via `pmap`: private resident
+//! pages count fully, shared resident pages count `PAGE_SIZE / nshares`.
+//! We compute the same quantity from first principles:
+//!
+//! * a page counts only if the **host** has it committed (swapped-out or
+//!   madvise-reclaimed pages cost nothing — that's the entire point of
+//!   Hibernate);
+//! * anonymous pages are divided by their Bitmap-allocator refcount
+//!   (COW shares within a sandbox's processes);
+//! * file pages are divided by the page-cache mapcount (shares **across**
+//!   sandboxes — the §3.5 runtime-binary sharing).
+
+use super::bitmap_alloc::BitmapPageAllocator;
+use super::host::HostMemory;
+use super::mmap_file::FilePageCache;
+use super::page_table::PageTable;
+use crate::PAGE_SIZE;
+use std::collections::HashMap;
+
+/// PSS breakdown for one sandbox.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PssBreakdown {
+    /// Bytes from anonymous pages (scaled by intra-sandbox refcount).
+    pub anon_bytes: u64,
+    /// Bytes from file-backed pages (scaled by cross-sandbox mapcount).
+    pub file_bytes: u64,
+    /// Resident (host-committed) pages seen.
+    pub present_pages: u64,
+    /// Swap-marked pages (bit #9) — cost nothing, reported for Fig. 6/7
+    /// narration.
+    pub swapped_pages: u64,
+    /// Mapped-but-uncommitted pages (reclaimed or never touched).
+    pub uncommitted_pages: u64,
+}
+
+impl PssBreakdown {
+    pub fn total_bytes(&self) -> u64 {
+        self.anon_bytes + self.file_bytes
+    }
+}
+
+/// Compute PSS over a set of page tables (one per guest process of the
+/// sandbox). A gpa mapped by several of the sandbox's own processes is
+/// divided by its refcount, matching how pmap treats fork-shared pages.
+pub fn pss(
+    tables: &[&PageTable],
+    host: &HostMemory,
+    alloc: &BitmapPageAllocator,
+    cache: &FilePageCache,
+) -> PssBreakdown {
+    let mut out = PssBreakdown::default();
+    // Dedup within the sandbox: each distinct gpa contributes per mapping,
+    // scaled by total shares — collect mappings first.
+    let mut file_pages: HashMap<u64, u32> = HashMap::new(); // gpa -> local mapping count
+    let mut anon_pages: HashMap<u64, u32> = HashMap::new();
+    for pt in tables {
+        pt.for_each(|_gva, pte| {
+            if pte.swapped() {
+                out.swapped_pages += 1;
+                return;
+            }
+            if !pte.present() {
+                return;
+            }
+            let gpa = pte.gpa();
+            if !host.is_committed(gpa) {
+                out.uncommitted_pages += 1;
+                return;
+            }
+            out.present_pages += 1;
+            if pte.is_file() {
+                *file_pages.entry(gpa.0).or_insert(0) += 1;
+            } else {
+                *anon_pages.entry(gpa.0).or_insert(0) += 1;
+            }
+        });
+    }
+    for (&gpa, &local) in &anon_pages {
+        // Global shares of an anon page = allocator refcount; each of our
+        // `local` mappings contributes PAGE/shares.
+        let shares = alloc.refcount(super::Gpa(gpa)).max(1) as u64;
+        out.anon_bytes += (PAGE_SIZE as u64 * local as u64) / shares;
+    }
+    for (&gpa, &local) in &file_pages {
+        let shares = cache
+            .mapcount_by_gpa(super::Gpa(gpa))
+            .unwrap_or(local)
+            .max(1) as u64;
+        out.file_bytes += (PAGE_SIZE as u64 * local as u64) / shares;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::buddy::BuddyAllocator;
+    use crate::mem::host::test_region;
+    use crate::mem::mmap_file::{FileClass, FileRegistry};
+    use crate::mem::page_table::Pte;
+    use crate::mem::{Gpa, Gva};
+    use std::sync::Arc;
+
+    struct Rig {
+        host: Arc<HostMemory>,
+        alloc: Arc<BitmapPageAllocator>,
+        cache: FilePageCache,
+        reg: FileRegistry,
+    }
+
+    fn rig() -> Rig {
+        let host = Arc::new(test_region(32));
+        let len = host.size() as u64;
+        let heap = Arc::new(BuddyAllocator::new(host.clone(), 0, len).unwrap());
+        let alloc = Arc::new(BitmapPageAllocator::new(host.clone(), heap));
+        let cache = FilePageCache::new(alloc.clone());
+        Rig {
+            host,
+            alloc,
+            cache,
+            reg: FileRegistry::new(),
+        }
+    }
+
+    #[test]
+    fn private_anon_counts_fully() {
+        let r = rig();
+        let mut pt = PageTable::new();
+        for i in 0..10u64 {
+            let gpa = r.alloc.alloc_page().unwrap();
+            r.host.fill_page(gpa, i).unwrap();
+            pt.map(Gva(i * 4096), Pte::new_present(gpa, Pte::WRITABLE));
+        }
+        let b = pss(&[&pt], &r.host, &r.alloc, &r.cache);
+        assert_eq!(b.anon_bytes, 10 * 4096);
+        assert_eq!(b.present_pages, 10);
+        assert_eq!(b.total_bytes(), 10 * 4096);
+    }
+
+    #[test]
+    fn swapped_and_uncommitted_cost_nothing() {
+        let r = rig();
+        let mut pt = PageTable::new();
+        // committed page, then swap-marked
+        let g1 = r.alloc.alloc_page().unwrap();
+        r.host.fill_page(g1, 1).unwrap();
+        pt.map(Gva(0), Pte::new_present(g1, 0).to_swapped());
+        // mapped but never touched (uncommitted)
+        let g2 = r.alloc.alloc_page().unwrap();
+        pt.map(Gva(4096), Pte::new_present(g2, 0));
+        let b = pss(&[&pt], &r.host, &r.alloc, &r.cache);
+        assert_eq!(b.total_bytes(), 0);
+        assert_eq!(b.swapped_pages, 1);
+        assert_eq!(b.uncommitted_pages, 1);
+    }
+
+    #[test]
+    fn cow_shared_anon_is_divided() {
+        let r = rig();
+        let gpa = r.alloc.alloc_page().unwrap();
+        r.host.fill_page(gpa, 7).unwrap();
+        r.alloc.inc_ref(gpa); // second process shares it
+        let mut pt1 = PageTable::new();
+        let mut pt2 = PageTable::new();
+        pt1.map(Gva(0), Pte::new_present(gpa, Pte::COW));
+        pt2.map(Gva(0), Pte::new_present(gpa, Pte::COW));
+        let b = pss(&[&pt1, &pt2], &r.host, &r.alloc, &r.cache);
+        // two mappings × PAGE/2 = one full page
+        assert_eq!(b.total_bytes(), 4096);
+    }
+
+    #[test]
+    fn file_pages_divided_by_cross_sandbox_mapcount() {
+        let r = rig();
+        let f = r.reg.get(r.reg.register("quark-bin", 1 << 20, FileClass::QuarkRuntime));
+        // Sandbox A and B both map page 0 of the runtime binary.
+        let (gpa, _) = r.cache.map_shared(&f, 0).unwrap();
+        let (gpa2, _) = r.cache.map_shared(&f, 0).unwrap();
+        assert_eq!(gpa, gpa2);
+        let mut pt_a = PageTable::new();
+        pt_a.map(Gva(0), Pte::new_present(gpa, Pte::FILE));
+        let b = pss(&[&pt_a], &r.host, &r.alloc, &r.cache);
+        // A maps it once; 2 sandboxes share → PAGE/2.
+        assert_eq!(b.file_bytes, 2048);
+        assert_eq!(b.anon_bytes, 0);
+    }
+
+    #[test]
+    fn reclaim_drops_pss() {
+        let r = rig();
+        let mut pt = PageTable::new();
+        let mut gpas = Vec::new();
+        for i in 0..20u64 {
+            let gpa = r.alloc.alloc_page().unwrap();
+            r.host.fill_page(gpa, i).unwrap();
+            pt.map(Gva(i * 4096), Pte::new_present(gpa, 0));
+            gpas.push(gpa);
+        }
+        let before = pss(&[&pt], &r.host, &r.alloc, &r.cache).total_bytes();
+        assert_eq!(before, 20 * 4096);
+        // Guest frees half; allocator reclaim returns them to the host.
+        for (i, &g) in gpas.iter().enumerate() {
+            if i % 2 == 0 {
+                pt.unmap(Gva(i as u64 * 4096));
+                r.alloc.dec_ref(g);
+            }
+        }
+        r.alloc.reclaim_free_pages().unwrap();
+        let after = pss(&[&pt], &r.host, &r.alloc, &r.cache).total_bytes();
+        assert_eq!(after, 10 * 4096);
+    }
+}

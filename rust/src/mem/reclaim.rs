@@ -1,0 +1,119 @@
+//! The Memory Reclaim Manager — deflation steps #2 and #4 (§3.2, §3.3).
+//!
+//! Coordinates the two reclamation sources the paper identifies:
+//! 1. **freed guest-application pages** sitting in the Bitmap Page
+//!    Allocator's bitmaps → returned to the host via `madvise` (step #2,
+//!    "avoids need for a complex Ballooning technique");
+//! 2. **file-backed mmap pages** whose mapcount dropped to zero after the
+//!    hibernating sandbox unmapped them (step #4) — shared pages still used
+//!    by other sandboxes are spared, exactly as §3.5 requires.
+
+use super::bitmap_alloc::BitmapPageAllocator;
+use super::mmap_file::FilePageCache;
+use crate::simtime::{Clock, CostModel};
+use std::sync::Arc;
+
+/// Outcome of a reclamation pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReclaimReport {
+    /// Free allocator pages whose host commitment was dropped.
+    pub free_pages_reclaimed: u64,
+    /// Unmapped file-cache pages freed (then reclaimed with the above).
+    pub file_pages_trimmed: u64,
+}
+
+impl ReclaimReport {
+    pub fn total_pages(&self) -> u64 {
+        self.free_pages_reclaimed + self.file_pages_trimmed
+    }
+}
+
+/// Reclaim coordinator shared by all sandboxes on a host.
+pub struct ReclaimManager {
+    alloc: Arc<BitmapPageAllocator>,
+    cache: Arc<FilePageCache>,
+    cost: CostModel,
+}
+
+impl ReclaimManager {
+    pub fn new(alloc: Arc<BitmapPageAllocator>, cache: Arc<FilePageCache>, cost: CostModel) -> Self {
+        Self { alloc, cache, cost }
+    }
+
+    /// Full reclamation pass: trim unmapped file pages into the allocator's
+    /// free bitmaps, then madvise every free page back to the host. Charges
+    /// the madvise cost to `clock`.
+    pub fn reclaim(&self, clock: &Clock) -> anyhow::Result<ReclaimReport> {
+        let file_pages_trimmed = self.cache.trim_unmapped();
+        let free_pages_reclaimed = self.alloc.reclaim_free_pages()?;
+        clock.charge(self.cost.madvise_ns(free_pages_reclaimed));
+        Ok(ReclaimReport {
+            free_pages_reclaimed,
+            file_pages_trimmed,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::buddy::BuddyAllocator;
+    use crate::mem::host::{test_region, HostMemory};
+    use crate::mem::mmap_file::{FileClass, FileRegistry};
+
+    fn rig() -> (Arc<HostMemory>, Arc<BitmapPageAllocator>, Arc<FilePageCache>, ReclaimManager) {
+        let host = Arc::new(test_region(32));
+        let len = host.size() as u64;
+        let heap = Arc::new(BuddyAllocator::new(host.clone(), 0, len).unwrap());
+        let alloc = Arc::new(BitmapPageAllocator::new(host.clone(), heap));
+        let cache = Arc::new(FilePageCache::new(alloc.clone()));
+        let mgr = ReclaimManager::new(alloc.clone(), cache.clone(), CostModel::paper());
+        (host, alloc, cache, mgr)
+    }
+
+    #[test]
+    fn reclaims_freed_and_trimmed_pages() {
+        let (host, alloc, cache, mgr) = rig();
+        let reg = FileRegistry::new();
+        let f = reg.get(reg.register("bin", 1 << 20, FileClass::QuarkRuntime));
+        // An anchor allocation keeps the block owned (a fully-free block
+        // would return to the global heap and be discarded there instead).
+        let _anchor = alloc.alloc_page().unwrap();
+        // 5 distinct anon pages freed by the guest, 3 file pages unmapped.
+        let anon: Vec<_> = (0..5u64)
+            .map(|i| {
+                let g = alloc.alloc_page().unwrap();
+                host.fill_page(g, i).unwrap();
+                g
+            })
+            .collect();
+        for g in anon {
+            alloc.dec_ref(g);
+        }
+        for p in 0..3 {
+            cache.map_shared(&f, p).unwrap();
+            cache.unmap_shared(f.id, p);
+        }
+        let clock = Clock::new();
+        let rpt = mgr.reclaim(&clock).unwrap();
+        assert_eq!(rpt.file_pages_trimmed, 3);
+        // First-fit reuse: the 3 file pages landed on 3 of the 5 freed anon
+        // frames, so 5 distinct committed frames go back to the host.
+        assert_eq!(rpt.free_pages_reclaimed, 5);
+        assert!(clock.charged_ns() > 0, "madvise cost charged");
+    }
+
+    #[test]
+    fn shared_file_pages_spared() {
+        let (_host, _alloc, cache, mgr) = rig();
+        let reg = FileRegistry::new();
+        let f = reg.get(reg.register("bin", 1 << 20, FileClass::QuarkRuntime));
+        cache.map_shared(&f, 0).unwrap(); // sandbox A
+        cache.map_shared(&f, 0).unwrap(); // sandbox B
+        cache.unmap_shared(f.id, 0); // A hibernates
+        let clock = Clock::new();
+        let rpt = mgr.reclaim(&clock).unwrap();
+        assert_eq!(rpt.file_pages_trimmed, 0, "B still maps the page");
+        assert_eq!(cache.mapcount(f.id, 0), 1);
+    }
+}

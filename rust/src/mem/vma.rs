@@ -1,0 +1,225 @@
+//! Guest virtual address space: VMAs + the per-process page table.
+//!
+//! Mirrors the paper's split (§3.3): `sys_brk`/`sys_mmap` only create
+//! address ranges; pages are committed lazily by the page-fault handler
+//! (which allocates from the Bitmap Page Allocator). The fault *policy*
+//! lives in the container layer; this module owns the address-space
+//! bookkeeping.
+
+use super::mmap_file::FileId;
+use super::page_table::PageTable;
+use super::Gva;
+use crate::PAGE_SIZE;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// What backs a VMA.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum VmaKind {
+    /// Anonymous memory (heap, stacks, arenas).
+    Anon,
+    /// File-backed mapping; `shared` follows the §3.5 sharing policy.
+    File {
+        file: FileId,
+        /// File offset (bytes) of the mapping start.
+        offset: u64,
+        shared: bool,
+    },
+}
+
+/// A virtual memory area.
+#[derive(Clone, Debug)]
+pub struct Vma {
+    pub start: u64,
+    pub len: u64,
+    pub kind: VmaKind,
+    /// Debug label ("heap", "node-binary", ...).
+    pub name: String,
+}
+
+impl Vma {
+    pub fn end(&self) -> u64 {
+        self.start + self.len
+    }
+
+    pub fn contains(&self, gva: Gva) -> bool {
+        (self.start..self.end()).contains(&gva.0)
+    }
+
+    pub fn pages(&self) -> u64 {
+        self.len / PAGE_SIZE as u64
+    }
+
+    /// File page number backing `gva` (for file VMAs).
+    pub fn file_page(&self, gva: Gva) -> Option<(FileId, u64)> {
+        match &self.kind {
+            VmaKind::File { file, offset, .. } => {
+                Some((*file, (offset + (gva.0 - self.start)) / PAGE_SIZE as u64))
+            }
+            VmaKind::Anon => None,
+        }
+    }
+}
+
+/// Base of the mmap arena (leaves low addresses for brk-style heaps).
+const MMAP_BASE: u64 = 0x10_0000_0000; // 64 GiB
+/// Guard gap between mappings.
+const GUARD: u64 = 16 * PAGE_SIZE as u64;
+
+/// A guest process's address space: VMAs + page table.
+pub struct AddressSpace {
+    vmas: BTreeMap<u64, Vma>,
+    next_mmap: u64,
+    pub pt: PageTable,
+}
+
+impl Default for AddressSpace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AddressSpace {
+    pub fn new() -> Self {
+        Self {
+            vmas: BTreeMap::new(),
+            next_mmap: MMAP_BASE,
+            pt: PageTable::new(),
+        }
+    }
+
+    fn place(&mut self, len: u64) -> u64 {
+        let start = self.next_mmap;
+        self.next_mmap += len + GUARD;
+        start
+    }
+
+    /// `sys_mmap(MAP_ANONYMOUS)`: reserve address space only.
+    pub fn mmap_anon(&mut self, len: u64, name: &str) -> Result<Gva> {
+        if len == 0 || len % PAGE_SIZE as u64 != 0 {
+            bail!("anon mmap length must be a positive multiple of the page size");
+        }
+        let start = self.place(len);
+        self.vmas.insert(
+            start,
+            Vma {
+                start,
+                len,
+                kind: VmaKind::Anon,
+                name: name.to_string(),
+            },
+        );
+        Ok(Gva(start))
+    }
+
+    /// `sys_mmap(fd)`: map `len` bytes of `file` at `offset`.
+    pub fn mmap_file(
+        &mut self,
+        file: FileId,
+        offset: u64,
+        len: u64,
+        shared: bool,
+        name: &str,
+    ) -> Result<Gva> {
+        if len == 0 || len % PAGE_SIZE as u64 != 0 || offset % PAGE_SIZE as u64 != 0 {
+            bail!("file mmap length/offset must be page aligned, len > 0");
+        }
+        let start = self.place(len);
+        self.vmas.insert(
+            start,
+            Vma {
+                start,
+                len,
+                kind: VmaKind::File {
+                    file,
+                    offset,
+                    shared,
+                },
+                name: name.to_string(),
+            },
+        );
+        Ok(Gva(start))
+    }
+
+    /// Find the VMA containing `gva`.
+    pub fn find_vma(&self, gva: Gva) -> Option<&Vma> {
+        self.vmas
+            .range(..=gva.0)
+            .next_back()
+            .map(|(_, v)| v)
+            .filter(|v| v.contains(gva))
+    }
+
+    /// Remove a VMA by start address, returning it. PTEs for its range must
+    /// be torn down by the caller (which owns the physical-page policy).
+    pub fn remove_vma(&mut self, start: Gva) -> Option<Vma> {
+        self.vmas.remove(&start.0)
+    }
+
+    pub fn iter_vmas(&self) -> impl Iterator<Item = &Vma> {
+        self.vmas.values()
+    }
+
+    pub fn vma_count(&self) -> usize {
+        self.vmas.len()
+    }
+
+    /// Total reserved address space (bytes).
+    pub fn reserved_bytes(&self) -> u64 {
+        self.vmas.values().map(|v| v.len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mmap_places_disjoint_regions() {
+        let mut asp = AddressSpace::new();
+        let a = asp.mmap_anon(64 * 4096, "heap").unwrap();
+        let b = asp.mmap_anon(64 * 4096, "arena").unwrap();
+        assert!(b.0 >= a.0 + 64 * 4096 + GUARD);
+        assert_eq!(asp.vma_count(), 2);
+        assert_eq!(asp.reserved_bytes(), 2 * 64 * 4096);
+    }
+
+    #[test]
+    fn find_vma_hits_and_misses() {
+        let mut asp = AddressSpace::new();
+        let a = asp.mmap_anon(4 * 4096, "x").unwrap();
+        assert!(asp.find_vma(a).is_some());
+        assert!(asp.find_vma(Gva(a.0 + 3 * 4096)).is_some());
+        assert!(asp.find_vma(Gva(a.0 + 4 * 4096)).is_none(), "end exclusive");
+        assert!(asp.find_vma(Gva(0)).is_none());
+    }
+
+    #[test]
+    fn file_page_mapping() {
+        let mut asp = AddressSpace::new();
+        let f = FileId(3);
+        let base = asp
+            .mmap_file(f, 8 * 4096, 4 * 4096, true, "bin")
+            .unwrap();
+        let vma = asp.find_vma(base).unwrap().clone();
+        assert_eq!(vma.file_page(base), Some((f, 8)));
+        assert_eq!(vma.file_page(Gva(base.0 + 2 * 4096)), Some((f, 10)));
+    }
+
+    #[test]
+    fn rejects_unaligned() {
+        let mut asp = AddressSpace::new();
+        assert!(asp.mmap_anon(100, "bad").is_err());
+        assert!(asp.mmap_file(FileId(0), 1, 4096, true, "bad").is_err());
+        assert!(asp.mmap_anon(0, "zero").is_err());
+    }
+
+    #[test]
+    fn remove_vma() {
+        let mut asp = AddressSpace::new();
+        let a = asp.mmap_anon(4096, "x").unwrap();
+        assert!(asp.remove_vma(a).is_some());
+        assert!(asp.find_vma(a).is_none());
+        assert!(asp.remove_vma(a).is_none());
+    }
+}

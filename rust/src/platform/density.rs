@@ -1,0 +1,159 @@
+//! Deployment-density experiment (§1/§4.2): how many keep-alive containers
+//! fit in a host memory budget?
+//!
+//! The paper's headline systems claim: because a Hibernate container keeps
+//! 7–25% of the Warm footprint (and WokenUp 28–90%), co-deploying
+//! Hibernate/WokenUp containers yields a much higher density than keeping
+//! everything Warm. This module packs real sandboxes (not arithmetic
+//! estimates) into a budget and reports the achieved density per mode.
+
+use crate::config::SharingConfig;
+use crate::container::sandbox::{Sandbox, SandboxServices};
+use crate::container::NoopRunner;
+use crate::simtime::{Clock, CostModel};
+use crate::workloads::WorkloadSpec;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Which keep-alive state instances are parked in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParkMode {
+    Warm,
+    Hibernate,
+    /// Hibernate, then wake and serve one request (WokenUp parking).
+    WokenUp,
+}
+
+impl ParkMode {
+    pub fn label(self) -> &'static str {
+        match self {
+            ParkMode::Warm => "warm",
+            ParkMode::Hibernate => "hibernate",
+            ParkMode::WokenUp => "woken-up",
+        }
+    }
+}
+
+/// Result of one packing run.
+#[derive(Debug, Clone)]
+pub struct DensityResult {
+    pub mode: ParkMode,
+    /// Instances successfully parked within the budget.
+    pub instances: u64,
+    /// Committed bytes when the budget filled.
+    pub committed_bytes: u64,
+    /// Mean PSS per parked instance.
+    pub mean_pss: u64,
+}
+
+/// Pack instances of `spec` into `budget` bytes of committed host memory,
+/// parking each in `mode`, until the next instance would exceed the budget
+/// (or `max_instances` is hit — a safety valve for tests).
+pub fn pack(
+    spec: &WorkloadSpec,
+    mode: ParkMode,
+    budget: u64,
+    host_bytes: usize,
+    max_instances: u64,
+    sharing: SharingConfig,
+) -> Result<DensityResult> {
+    let svc = SandboxServices::new_local(
+        host_bytes,
+        CostModel::paper(),
+        sharing,
+        Arc::new(NoopRunner),
+        &format!("density-{}", mode.label()),
+    )?;
+    let clock = Clock::new();
+    let mut parked: Vec<Sandbox> = Vec::new();
+    let mut pss_sum = 0u64;
+
+    loop {
+        if parked.len() as u64 >= max_instances {
+            break;
+        }
+        let id = parked.len() as u64 + 1;
+        let mut sb = Sandbox::cold_start(id, spec.clone(), svc.clone(), &clock)?;
+        // Serve one request so the working set exists (a realistic parked
+        // container has handled traffic).
+        sb.handle_request(&clock)?;
+        match mode {
+            ParkMode::Warm => {}
+            ParkMode::Hibernate => {
+                sb.hibernate(&clock)?;
+            }
+            ParkMode::WokenUp => {
+                sb.hibernate(&clock)?;
+                // Demand-wake with one request, leaving it WokenUp.
+                sb.handle_request(&clock)?;
+            }
+        }
+        let used = svc.host.committed_bytes();
+        if used > budget {
+            // This instance blew the budget: count up to the previous one.
+            let _ = sb.terminate();
+            break;
+        }
+        pss_sum += sb.footprint().total_bytes();
+        parked.push(sb);
+    }
+
+    let n = parked.len() as u64;
+    Ok(DensityResult {
+        mode,
+        instances: n,
+        committed_bytes: svc.host.committed_bytes(),
+        mean_pss: if n > 0 { pss_sum / n } else { 0 },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::functionbench::{nodejs_hello, scaled_for_test};
+
+    #[test]
+    fn hibernate_packs_denser_than_warm() {
+        let spec = scaled_for_test(nodejs_hello(), 16);
+        let budget = 48 << 20;
+        let warm = pack(
+            &spec,
+            ParkMode::Warm,
+            budget,
+            4 << 30,
+            150,
+            SharingConfig::default(),
+        )
+        .unwrap();
+        let hib = pack(
+            &spec,
+            ParkMode::Hibernate,
+            budget,
+            4 << 30,
+            150,
+            SharingConfig::default(),
+        )
+        .unwrap();
+        // At 1/16 scale the fixed QKernel resident heap dominates both
+        // modes, compressing the ratio; the full-scale bench asserts the
+        // paper's ≥3x. Here: strictly denser and clearly smaller PSS.
+        assert!(
+            hib.instances as f64 >= 1.5 * warm.instances as f64,
+            "hibernate {} vs warm {} instances",
+            hib.instances,
+            warm.instances
+        );
+        assert!(hib.mean_pss < warm.mean_pss * 3 / 4);
+    }
+
+    #[test]
+    fn wokenup_between_warm_and_hibernate() {
+        let spec = scaled_for_test(nodejs_hello(), 16);
+        let budget = 48 << 20;
+        let warm = pack(&spec, ParkMode::Warm, budget, 4 << 30, 150, SharingConfig::default()).unwrap();
+        let wok = pack(&spec, ParkMode::WokenUp, budget, 4 << 30, 150, SharingConfig::default()).unwrap();
+        let hib = pack(&spec, ParkMode::Hibernate, budget, 4 << 30, 150, SharingConfig::default()).unwrap();
+        assert!(warm.instances <= wok.instances);
+        assert!(wok.instances <= hib.instances);
+    }
+}

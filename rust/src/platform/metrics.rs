@@ -1,0 +1,212 @@
+//! Platform metrics: latency summaries keyed by (workload, serving state),
+//! lifecycle counters, and text/JSON export — what the Fig. 6/7 benches and
+//! the serve demo report from.
+
+use crate::container::state::ContainerState;
+use crate::util::json::{obj, Json};
+use crate::util::stats::Summary;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Which serving path a request took (Fig. 6's bar groups).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ServedFrom {
+    ColdStart,
+    Warm,
+    Hibernate,
+    WokenUp,
+}
+
+impl ServedFrom {
+    pub fn label(self) -> &'static str {
+        match self {
+            ServedFrom::ColdStart => "cold",
+            ServedFrom::Warm => "warm",
+            ServedFrom::Hibernate => "hibernate",
+            ServedFrom::WokenUp => "woken-up",
+        }
+    }
+
+    pub fn from_state(s: ContainerState) -> Self {
+        match s {
+            ContainerState::Warm => ServedFrom::Warm,
+            ContainerState::Hibernate => ServedFrom::Hibernate,
+            ContainerState::WokenUp => ServedFrom::WokenUp,
+            _ => ServedFrom::ColdStart,
+        }
+    }
+}
+
+/// Lifecycle counters.
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub requests: AtomicU64,
+    pub cold_starts: AtomicU64,
+    pub hibernations: AtomicU64,
+    pub reap_hibernations: AtomicU64,
+    pub anticipatory_wakes: AtomicU64,
+    pub demand_wakes: AtomicU64,
+    pub evictions: AtomicU64,
+    pub pages_reclaimed: AtomicU64,
+    pub pages_swapped_out: AtomicU64,
+}
+
+macro_rules! counter_snapshot {
+    ($self:ident, $($f:ident),+) => {
+        vec![$((stringify!($f), $self.$f.load(Ordering::Relaxed))),+]
+    };
+}
+
+impl Counters {
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        counter_snapshot!(
+            self,
+            requests,
+            cold_starts,
+            hibernations,
+            reap_hibernations,
+            anticipatory_wakes,
+            demand_wakes,
+            evictions,
+            pages_reclaimed,
+            pages_swapped_out
+        )
+    }
+}
+
+/// The registry.
+#[derive(Default)]
+pub struct Metrics {
+    latencies: Mutex<BTreeMap<(String, ServedFrom), Summary>>,
+    pub counters: Counters,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one request latency (virtual ns).
+    pub fn record_latency(&self, workload: &str, from: ServedFrom, ns: u64) {
+        self.counters.requests.fetch_add(1, Ordering::Relaxed);
+        self.latencies
+            .lock()
+            .unwrap()
+            .entry((workload.to_string(), from))
+            .or_default()
+            .add(ns);
+    }
+
+    /// Mean latency for a (workload, path) cell, if sampled.
+    pub fn mean_latency(&self, workload: &str, from: ServedFrom) -> Option<f64> {
+        self.latencies
+            .lock()
+            .unwrap()
+            .get(&(workload.to_string(), from))
+            .filter(|s| !s.is_empty())
+            .map(|s| s.mean())
+    }
+
+    pub fn sample_count(&self, workload: &str, from: ServedFrom) -> usize {
+        self.latencies
+            .lock()
+            .unwrap()
+            .get(&(workload.to_string(), from))
+            .map(|s| s.len())
+            .unwrap_or(0)
+    }
+
+    /// Text report: one row per (workload, path) — the Fig. 6 layout.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        let mut map = self.latencies.lock().unwrap();
+        for ((w, from), summary) in map.iter_mut() {
+            out.push_str(&summary.report_ns(&format!("{w}/{}", from.label())));
+            out.push('\n');
+        }
+        out.push_str("counters:");
+        for (k, v) in self.counters.snapshot() {
+            out.push_str(&format!(" {k}={v}"));
+        }
+        out.push('\n');
+        out
+    }
+
+    /// JSON export (dashboards, EXPERIMENTS.md tooling).
+    pub fn to_json(&self) -> Json {
+        let mut map = self.latencies.lock().unwrap();
+        let rows: Vec<Json> = map
+            .iter_mut()
+            .map(|((w, from), s)| {
+                obj(vec![
+                    ("workload", Json::Str(w.clone())),
+                    ("path", Json::Str(from.label().to_string())),
+                    ("n", Json::Num(s.len() as f64)),
+                    ("mean_ns", Json::Num(s.mean())),
+                    ("p50_ns", Json::Num(s.p50() as f64)),
+                    ("p99_ns", Json::Num(s.p99() as f64)),
+                ])
+            })
+            .collect();
+        let counters: Vec<(&str, Json)> = self
+            .counters
+            .snapshot()
+            .into_iter()
+            .map(|(k, v)| (k, Json::Num(v as f64)))
+            .collect();
+        obj(vec![
+            ("latencies", Json::Arr(rows)),
+            ("counters", obj(counters)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_query() {
+        let m = Metrics::new();
+        m.record_latency("w", ServedFrom::Warm, 100);
+        m.record_latency("w", ServedFrom::Warm, 200);
+        m.record_latency("w", ServedFrom::ColdStart, 5000);
+        assert_eq!(m.mean_latency("w", ServedFrom::Warm), Some(150.0));
+        assert_eq!(m.sample_count("w", ServedFrom::ColdStart), 1);
+        assert_eq!(m.mean_latency("w", ServedFrom::Hibernate), None);
+        assert_eq!(m.counters.requests.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn report_and_json_render() {
+        let m = Metrics::new();
+        m.record_latency("video", ServedFrom::Hibernate, 1_000_000);
+        m.counters.hibernations.fetch_add(1, Ordering::Relaxed);
+        let r = m.report();
+        assert!(r.contains("video/hibernate"));
+        assert!(r.contains("hibernations=1"));
+        let j = m.to_json().to_string();
+        let back = crate::util::json::parse(&j).unwrap();
+        assert_eq!(
+            back.get("latencies").unwrap().as_arr().unwrap().len(),
+            1
+        );
+    }
+
+    #[test]
+    fn served_from_mapping() {
+        assert_eq!(
+            ServedFrom::from_state(ContainerState::Warm),
+            ServedFrom::Warm
+        );
+        assert_eq!(
+            ServedFrom::from_state(ContainerState::Hibernate),
+            ServedFrom::Hibernate
+        );
+        assert_eq!(
+            ServedFrom::from_state(ContainerState::WokenUp),
+            ServedFrom::WokenUp
+        );
+    }
+}

@@ -1,0 +1,498 @@
+//! The serverless platform around Hibernate Container: router, per-function
+//! pools, deflate-instead-of-evict policy, anticipatory wake-up, trace
+//! replay and metrics — the control plane of §3.1/§3.2.
+//!
+//! Two driving modes share all the machinery:
+//! * **virtual-time replay** ([`Platform::run_trace`]) — deterministic
+//!   discrete-event execution of a generated trace; what the figure benches
+//!   use;
+//! * **threaded serving** ([`server`]) — real worker threads and a policy
+//!   thread, used by the end-to-end serve demo.
+
+pub mod density;
+pub mod metrics;
+pub mod policy;
+pub mod pool;
+pub mod predictor;
+pub mod router;
+pub mod server;
+pub mod trace;
+pub mod trace_file;
+
+use crate::config::PlatformConfig;
+use crate::container::sandbox::{RequestOutcome, Sandbox, SandboxServices};
+use crate::container::state::ContainerState;
+use crate::container::PayloadRunner;
+use crate::simtime::Clock;
+use crate::workloads::WorkloadSpec;
+use anyhow::{bail, Context, Result};
+use metrics::{Metrics, ServedFrom};
+use policy::{Action, Mode, PolicyEngine};
+use pool::FunctionPool;
+use predictor::Predictor;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use trace::TraceEvent;
+
+/// Report for one served request.
+#[derive(Debug, Clone)]
+pub struct RequestReport {
+    pub workload: String,
+    pub served_from: ServedFrom,
+    /// End-to-end virtual latency (charged model time + real compute).
+    pub latency_ns: u64,
+    pub charged_ns: u64,
+    pub measured_ns: u64,
+    pub outcome: RequestOutcome,
+}
+
+/// The platform.
+pub struct Platform {
+    pub cfg: PlatformConfig,
+    svc: Arc<SandboxServices>,
+    pools: Mutex<HashMap<String, FunctionPool>>,
+    specs: Mutex<HashMap<String, WorkloadSpec>>,
+    engine: PolicyEngine,
+    predictor: Predictor,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+}
+
+impl Platform {
+    /// Build a platform. `runner` executes payloads (PJRT in production,
+    /// [`crate::container::NoopRunner`] in memory-only experiments).
+    pub fn new(cfg: PlatformConfig, runner: Arc<dyn PayloadRunner>) -> Result<Self> {
+        Self::with_mode(cfg, runner, Mode::Hibernate)
+    }
+
+    /// Build with an explicit policy mode (the density bench's baseline
+    /// uses [`Mode::WarmOnly`]).
+    pub fn with_mode(
+        cfg: PlatformConfig,
+        runner: Arc<dyn PayloadRunner>,
+        mode: Mode,
+    ) -> Result<Self> {
+        let svc = SandboxServices::new_local(
+            cfg.host_memory as usize,
+            cfg.cost.clone(),
+            cfg.sharing.clone(),
+            runner,
+            "platform",
+        )?;
+        // new_local defaults reap on; honor config.
+        let svc = Arc::new(SandboxServices {
+            host: svc.host.clone(),
+            heap: svc.heap.clone(),
+            cache: svc.cache.clone(),
+            registry: svc.registry.clone(),
+            cost: cfg.cost.clone(),
+            sharing: cfg.sharing.clone(),
+            swap_dir: std::path::PathBuf::from(&cfg.swap_dir),
+            runner: svc.runner.clone(),
+            reap_enabled: cfg.policy.reap_enabled,
+            hostenv: svc.hostenv.clone(),
+        });
+        Ok(Self {
+            engine: PolicyEngine::new(cfg.policy.clone(), mode),
+            predictor: Predictor::new(0.3),
+            metrics: Arc::new(Metrics::new()),
+            svc,
+            cfg,
+            pools: Mutex::new(HashMap::new()),
+            specs: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+        })
+    }
+
+    pub fn services(&self) -> &Arc<SandboxServices> {
+        &self.svc
+    }
+
+    /// Register a function (workload) with the platform.
+    pub fn deploy(&self, spec: WorkloadSpec) -> Result<()> {
+        spec.validate().map_err(|e| anyhow::anyhow!(e))?;
+        self.pools
+            .lock()
+            .unwrap()
+            .entry(spec.name.clone())
+            .or_default();
+        self.specs
+            .lock()
+            .unwrap()
+            .insert(spec.name.clone(), spec);
+        Ok(())
+    }
+
+    pub fn deployed(&self) -> Vec<String> {
+        self.specs.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Host memory currently committed (the pressure signal).
+    pub fn memory_used(&self) -> u64 {
+        self.svc.host.committed_bytes()
+    }
+
+    /// Serve one request at virtual time `now_vns`. Synchronous: routes,
+    /// cold-starts if needed, executes, records metrics.
+    pub fn request_at(&self, workload: &str, now_vns: u64) -> Result<RequestReport> {
+        let spec = self
+            .specs
+            .lock()
+            .unwrap()
+            .get(workload)
+            .cloned()
+            .with_context(|| format!("workload `{workload}` not deployed"))?;
+        self.predictor.observe(workload, now_vns);
+
+        let clock = Clock::new();
+        // Route under the pools lock; run outside it.
+        let (sandbox, last_active, served_from) = {
+            let mut pools = self.pools.lock().unwrap();
+            let pool = pools.get_mut(workload).unwrap();
+            match router::route(pool) {
+                router::Route::Existing { idx, state } => {
+                    let inst = &pool.instances[idx];
+                    (
+                        inst.sandbox.clone(),
+                        inst.last_active.clone(),
+                        ServedFrom::from_state(state),
+                    )
+                }
+                router::Route::ColdStart => {
+                    let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+                    drop(pools); // cold start is slow; don't hold the lock
+                    let sb = Sandbox::cold_start(id, spec.clone(), self.svc.clone(), &clock)?;
+                    self.metrics
+                        .counters
+                        .cold_starts
+                        .fetch_add(1, Ordering::Relaxed);
+                    let mut pools = self.pools.lock().unwrap();
+                    let pool = pools.get_mut(workload).unwrap();
+                    let inst = pool.add(sb, now_vns);
+                    (
+                        inst.sandbox.clone(),
+                        inst.last_active.clone(),
+                        ServedFrom::ColdStart,
+                    )
+                }
+            }
+        };
+
+        let outcome = {
+            let mut sb = sandbox.lock().unwrap();
+            if !sb.state().accepts_requests() {
+                bail!(
+                    "routed to non-accepting container in state {}",
+                    sb.state()
+                );
+            }
+            if sb.state() == ContainerState::Hibernate {
+                self.metrics
+                    .counters
+                    .demand_wakes
+                    .fetch_add(1, Ordering::Relaxed);
+            }
+            sb.handle_request(&clock)?
+        };
+
+        let charged_ns = clock.charged_ns();
+        let measured_ns = clock.measured_ns();
+        let latency_ns = charged_ns + measured_ns;
+        last_active.fetch_max(now_vns + latency_ns, Ordering::Relaxed);
+        self.metrics.record_latency(workload, served_from, latency_ns);
+        Ok(RequestReport {
+            workload: workload.to_string(),
+            served_from,
+            latency_ns,
+            charged_ns,
+            measured_ns,
+            outcome,
+        })
+    }
+
+    /// Run one policy tick at virtual time `now_vns`: hibernate idle
+    /// containers, evict stale ones, anticipatorily wake predicted ones.
+    pub fn policy_tick(&self, now_vns: u64) -> Result<Vec<Action>> {
+        let memory_used = self.memory_used();
+        let mut applied = Vec::new();
+        let workloads: Vec<String> = self.pools.lock().unwrap().keys().cloned().collect();
+        for w in workloads {
+            let actions = {
+                let pools = self.pools.lock().unwrap();
+                let Some(pool) = pools.get(&w) else { continue };
+                self.engine
+                    .decide(&w, pool, now_vns, memory_used, Some(&self.predictor))
+            };
+            for action in actions {
+                let ok = self.apply(&action, now_vns)?;
+                if ok {
+                    applied.push(action);
+                }
+            }
+            self.pools.lock().unwrap().get_mut(&w).map(|p| p.sweep_dead());
+        }
+        Ok(applied)
+    }
+
+    fn apply(&self, action: &Action, now_vns: u64) -> Result<bool> {
+        let clock = Clock::new();
+        let (sandbox, last_active) = {
+            let pools = self.pools.lock().unwrap();
+            let (w, idx) = match action {
+                Action::Hibernate { workload, idx }
+                | Action::Evict { workload, idx }
+                | Action::Wake { workload, idx } => (workload, *idx),
+            };
+            let Some(pool) = pools.get(w) else {
+                return Ok(false);
+            };
+            let Some(inst) = pool.instances.get(idx) else {
+                return Ok(false);
+            };
+            (inst.sandbox.clone(), inst.last_active.clone())
+        };
+        let mut sb = sandbox.lock().unwrap();
+        match action {
+            Action::Hibernate { .. } => {
+                if !matches!(
+                    sb.state(),
+                    ContainerState::Warm | ContainerState::WokenUp
+                ) {
+                    return Ok(false); // raced with a request
+                }
+                // Deliver SIGSTOP through the signal queue (§3.1) and let
+                // the runtime act on it at the safe point.
+                sb.signals.send(crate::container::signal::ControlSignal::Stop);
+                let before = sb.swap_stats();
+                if sb.drain_signals(&clock)? == 0 {
+                    return Ok(false);
+                }
+                let after = sb.swap_stats();
+                let used_reap = after.reap_swapouts > before.reap_swapouts;
+                self.metrics
+                    .counters
+                    .hibernations
+                    .fetch_add(1, Ordering::Relaxed);
+                if used_reap {
+                    self.metrics
+                        .counters
+                        .reap_hibernations
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+                self.metrics.counters.pages_swapped_out.fetch_add(
+                    (after.pages_swapped_out + after.reap_pages_out)
+                        - (before.pages_swapped_out + before.reap_pages_out),
+                    Ordering::Relaxed,
+                );
+            }
+            Action::Evict { .. } => {
+                if !sb.state().accepts_requests() {
+                    return Ok(false);
+                }
+                sb.terminate()?;
+                self.metrics
+                    .counters
+                    .evictions
+                    .fetch_add(1, Ordering::Relaxed);
+            }
+            Action::Wake { .. } => {
+                if sb.state() != ContainerState::Hibernate {
+                    return Ok(false);
+                }
+                // SIGCONT through the signal queue (Fig. 3 ⑤).
+                sb.signals.send(crate::container::signal::ControlSignal::Cont);
+                if sb.drain_signals(&clock)? == 0 {
+                    return Ok(false);
+                }
+                // Waking resets idleness: the wake is in anticipation of an
+                // imminent request, so the instance must not be re-deflated
+                // by the very next tick.
+                last_active.fetch_max(now_vns, Ordering::Relaxed);
+                self.metrics
+                    .counters
+                    .anticipatory_wakes
+                    .fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        Ok(true)
+    }
+
+    /// Deterministic virtual-time replay: process events in order, running
+    /// a policy tick before each event and at a fixed cadence in gaps.
+    pub fn run_trace(&self, events: &[TraceEvent]) -> Result<Vec<RequestReport>> {
+        let tick_ns = (self.cfg.policy.hibernate_idle_ms * 1_000_000 / 2).max(1_000_000);
+        let mut reports = Vec::with_capacity(events.len());
+        let mut next_tick = 0u64;
+        for ev in events {
+            while next_tick <= ev.at_ns {
+                self.policy_tick(next_tick)?;
+                next_tick += tick_ns;
+            }
+            reports.push(self.request_at(&ev.workload, ev.at_ns)?);
+        }
+        Ok(reports)
+    }
+
+    /// Snapshot: per-workload instance states + PSS (the Fig. 7 data).
+    pub fn pool_snapshot(&self) -> Vec<(String, Vec<(ContainerState, u64)>)> {
+        let pools = self.pools.lock().unwrap();
+        pools
+            .iter()
+            .map(|(w, pool)| {
+                let rows = pool
+                    .instances
+                    .iter()
+                    .map(|i| {
+                        let sb = i.sandbox.lock().unwrap();
+                        (sb.state(), sb.footprint().total_bytes())
+                    })
+                    .collect();
+                (w.clone(), rows)
+            })
+            .collect()
+    }
+
+    /// Direct access for tests/benches that need a single sandbox.
+    pub fn with_instance<T>(
+        &self,
+        workload: &str,
+        idx: usize,
+        f: impl FnOnce(&mut Sandbox) -> T,
+    ) -> Option<T> {
+        let sandbox = {
+            let pools = self.pools.lock().unwrap();
+            pools
+                .get(workload)?
+                .instances
+                .get(idx)?
+                .sandbox
+                .clone()
+        };
+        let mut sb = sandbox.lock().unwrap();
+        Some(f(&mut sb))
+    }
+
+    pub fn instance_count(&self, workload: &str) -> usize {
+        self.pools
+            .lock()
+            .unwrap()
+            .get(workload)
+            .map(|p| p.len())
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::NoopRunner;
+    use crate::simtime::CostModel;
+    use crate::workloads::functionbench::{golang_hello, scaled_for_test};
+
+    fn test_platform(hibernate_idle_ms: u64) -> Platform {
+        let mut cfg = PlatformConfig::default();
+        cfg.host_memory = 512 << 20;
+        cfg.cost = CostModel::paper();
+        cfg.policy.hibernate_idle_ms = hibernate_idle_ms;
+        cfg.policy.predictive_wakeup = false;
+        cfg.swap_dir = std::env::temp_dir()
+            .join(format!("qh-platform-test-{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let p = Platform::new(cfg, Arc::new(NoopRunner)).unwrap();
+        p.deploy(scaled_for_test(golang_hello(), 16)).unwrap();
+        p
+    }
+
+    #[test]
+    fn first_request_cold_starts_then_warm() {
+        let p = test_platform(1000);
+        let r1 = p.request_at("golang-hello", 0).unwrap();
+        assert_eq!(r1.served_from, ServedFrom::ColdStart);
+        let r2 = p.request_at("golang-hello", r1.latency_ns + 1).unwrap();
+        assert_eq!(r2.served_from, ServedFrom::Warm);
+        assert!(
+            r2.latency_ns < r1.latency_ns / 5,
+            "warm {} vs cold {}",
+            r2.latency_ns,
+            r1.latency_ns
+        );
+        assert_eq!(p.instance_count("golang-hello"), 1);
+    }
+
+    #[test]
+    fn idle_container_hibernates_then_serves() {
+        let p = test_platform(10);
+        let r1 = p.request_at("golang-hello", 0).unwrap();
+        let t1 = r1.latency_ns;
+        // Idle long past the threshold → policy hibernates it.
+        let actions = p.policy_tick(t1 + 50_000_000).unwrap();
+        assert!(
+            actions.iter().any(|a| matches!(a, Action::Hibernate { .. })),
+            "{actions:?}"
+        );
+        let r2 = p
+            .request_at("golang-hello", t1 + 60_000_000)
+            .unwrap();
+        assert_eq!(r2.served_from, ServedFrom::Hibernate);
+        // Hibernate-wake is slower than warm but much faster than cold.
+        assert!(r2.latency_ns < r1.latency_ns / 2);
+        // And the next one is WokenUp ≈ warm.
+        let r3 = p
+            .request_at("golang-hello", t1 + 70_000_000 + r2.latency_ns)
+            .unwrap();
+        assert_eq!(r3.served_from, ServedFrom::WokenUp);
+    }
+
+    #[test]
+    fn trace_replay_records_metrics() {
+        let p = test_platform(20);
+        let events: Vec<TraceEvent> = (0..5)
+            .map(|i| TraceEvent {
+                at_ns: i * 200_000_000,
+                workload: "golang-hello".into(),
+            })
+            .collect();
+        let reports = p.run_trace(&events).unwrap();
+        assert_eq!(reports.len(), 5);
+        assert_eq!(reports[0].served_from, ServedFrom::ColdStart);
+        // 200 ms gaps ≫ 20 ms idle threshold → later requests hit
+        // hibernated containers, not cold starts.
+        assert!(reports[1..]
+            .iter()
+            .all(|r| r.served_from != ServedFrom::ColdStart));
+        assert!(p.metrics.counters.hibernations.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn unknown_workload_rejected() {
+        let p = test_platform(10);
+        assert!(p.request_at("nope", 0).is_err());
+    }
+
+    #[test]
+    fn memory_pressure_triggers_deflation() {
+        let mut cfg = PlatformConfig::default();
+        cfg.host_memory = 512 << 20;
+        cfg.policy.hibernate_idle_ms = 1_000_000; // effectively never idle
+        cfg.policy.memory_budget = 1 << 20; // absurdly tight → always pressure
+        cfg.policy.predictive_wakeup = false;
+        cfg.swap_dir = std::env::temp_dir()
+            .join(format!("qh-pressure-test-{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let p = Platform::new(cfg, Arc::new(NoopRunner)).unwrap();
+        p.deploy(scaled_for_test(golang_hello(), 16)).unwrap();
+        p.request_at("golang-hello", 0).unwrap();
+        let used_before = p.memory_used();
+        let actions = p.policy_tick(1).unwrap();
+        assert!(actions.iter().any(|a| matches!(a, Action::Hibernate { .. })));
+        assert!(
+            p.memory_used() < used_before,
+            "deflation must reduce committed memory: {} -> {}",
+            used_before,
+            p.memory_used()
+        );
+    }
+}

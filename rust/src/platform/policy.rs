@@ -1,0 +1,278 @@
+//! Keep-alive / hibernation policy (§3.1): *deflate instead of evict*.
+//!
+//! The conventional platform evicts idle Warm containers under memory
+//! pressure and eats the next cold start. The paper's platform instead
+//! sends SIGSTOP — turning the Warm container into a Hibernate one at a
+//! fraction of the memory — and only evicts after a much longer idle
+//! period. This module decides, per policy tick:
+//!
+//! * which idle Warm/WokenUp containers to hibernate (idle > threshold, or
+//!   memory pressure above the watermark — most-idle first);
+//! * which Hibernate containers to evict outright (idle > eviction
+//!   threshold);
+//! * which Hibernate containers to wake anticipatorily (predictor says a
+//!   request is imminent).
+//!
+//! A `warm_only` baseline mode reproduces the conventional platform for the
+//! density comparison bench.
+
+use super::pool::FunctionPool;
+use super::predictor::Predictor;
+use crate::config::PolicyConfig;
+use crate::container::state::ContainerState;
+
+/// What the policy wants done to one instance.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Action {
+    /// SIGSTOP instance `idx` of `workload` (deflate).
+    Hibernate { workload: String, idx: usize },
+    /// Terminate instance (free everything).
+    Evict { workload: String, idx: usize },
+    /// SIGCONT instance (anticipatory inflate).
+    Wake { workload: String, idx: usize },
+}
+
+/// Policy operating mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// The paper's platform: hibernate idle containers, evict late.
+    Hibernate,
+    /// Conventional baseline: evict idle containers (no hibernation).
+    WarmOnly,
+}
+
+/// The policy engine (stateless between ticks; all state is in the pools).
+pub struct PolicyEngine {
+    pub cfg: PolicyConfig,
+    pub mode: Mode,
+    /// Anticipatory wake lead time (ns).
+    pub wake_lead_ns: u64,
+}
+
+impl PolicyEngine {
+    pub fn new(cfg: PolicyConfig, mode: Mode) -> Self {
+        Self {
+            cfg,
+            mode,
+            wake_lead_ns: 50_000_000,
+        }
+    }
+
+    /// Compute actions for one workload's pool at virtual time `now_vns`.
+    /// `memory_used` / `budget` drive the pressure path.
+    pub fn decide(
+        &self,
+        workload: &str,
+        pool: &FunctionPool,
+        now_vns: u64,
+        memory_used: u64,
+        predictor: Option<&Predictor>,
+    ) -> Vec<Action> {
+        let mut actions = Vec::new();
+        let pressure =
+            memory_used as f64 >= self.cfg.pressure_watermark * self.cfg.memory_budget as f64;
+        let hibernate_idle_ns = self.cfg.hibernate_idle_ms * 1_000_000;
+        let evict_idle_ns = self.cfg.evict_idle_ms * 1_000_000;
+
+        // Idle Warm/WokenUp instances, most idle first.
+        let mut idle: Vec<(usize, u64, ContainerState)> = pool
+            .instances
+            .iter()
+            .enumerate()
+            .filter_map(|(idx, inst)| {
+                let s = inst.state();
+                match s {
+                    ContainerState::Warm | ContainerState::WokenUp => {
+                        Some((idx, inst.idle_ns(now_vns), s))
+                    }
+                    _ => None,
+                }
+            })
+            .collect();
+        idle.sort_by_key(|&(_, idle_ns, _)| std::cmp::Reverse(idle_ns));
+
+        for (idx, idle_ns, _s) in &idle {
+            let over_idle = *idle_ns >= hibernate_idle_ns;
+            if !(over_idle || pressure) {
+                continue;
+            }
+            match self.mode {
+                Mode::Hibernate => actions.push(Action::Hibernate {
+                    workload: workload.to_string(),
+                    idx: *idx,
+                }),
+                Mode::WarmOnly => {
+                    // Conventional platform: under pressure or past
+                    // keep-alive, the container is simply evicted.
+                    actions.push(Action::Evict {
+                        workload: workload.to_string(),
+                        idx: *idx,
+                    });
+                }
+            }
+        }
+
+        // Old Hibernate containers are eventually evicted too.
+        for (idx, inst) in pool.instances.iter().enumerate() {
+            if inst.state() == ContainerState::Hibernate
+                && inst.idle_ns(now_vns) >= evict_idle_ns
+            {
+                actions.push(Action::Evict {
+                    workload: workload.to_string(),
+                    idx,
+                });
+            }
+        }
+
+        // Anticipatory wake (only meaningful in Hibernate mode, never under
+        // memory pressure).
+        if self.mode == Mode::Hibernate && self.cfg.predictive_wakeup && !pressure {
+            if let Some(pred) = predictor {
+                if pred.should_wake(workload, now_vns, self.wake_lead_ns) {
+                    if let Some((idx, _)) = pool
+                        .instances
+                        .iter()
+                        .enumerate()
+                        .find(|(_, i)| i.state() == ContainerState::Hibernate)
+                    {
+                        actions.push(Action::Wake {
+                            workload: workload.to_string(),
+                            idx,
+                        });
+                    }
+                }
+            }
+        }
+
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SharingConfig;
+    use crate::container::sandbox::{Sandbox, SandboxServices};
+    use crate::container::NoopRunner;
+    use crate::simtime::{Clock, CostModel};
+    use crate::workloads::functionbench::{golang_hello, scaled_for_test};
+    use std::sync::Arc;
+
+    fn rig() -> (Arc<SandboxServices>, FunctionPool) {
+        let svc = SandboxServices::new_local(
+            512 << 20,
+            CostModel::free(),
+            SharingConfig::default(),
+            Arc::new(NoopRunner),
+            "policy-test",
+        )
+        .unwrap();
+        (svc, FunctionPool::new())
+    }
+
+    fn spawn(svc: &Arc<SandboxServices>, id: u64) -> Sandbox {
+        Sandbox::cold_start(
+            id,
+            scaled_for_test(golang_hello(), 32),
+            svc.clone(),
+            &Clock::new(),
+        )
+        .unwrap()
+    }
+
+    fn cfg() -> PolicyConfig {
+        PolicyConfig {
+            hibernate_idle_ms: 10,
+            evict_idle_ms: 1000,
+            memory_budget: 1 << 30,
+            pressure_watermark: 0.8,
+            predictive_wakeup: true,
+            reap_enabled: true,
+        }
+    }
+
+    #[test]
+    fn idle_warm_hibernated() {
+        let (svc, mut pool) = rig();
+        pool.add(spawn(&svc, 1), 0);
+        let engine = PolicyEngine::new(cfg(), Mode::Hibernate);
+        // 5 ms idle: nothing.
+        assert!(engine
+            .decide("w", &pool, 5_000_000, 0, None)
+            .is_empty());
+        // 20 ms idle: hibernate.
+        let actions = engine.decide("w", &pool, 20_000_000, 0, None);
+        assert_eq!(
+            actions,
+            vec![Action::Hibernate {
+                workload: "w".into(),
+                idx: 0
+            }]
+        );
+    }
+
+    #[test]
+    fn pressure_hibernates_even_fresh_instances() {
+        let (svc, mut pool) = rig();
+        pool.add(spawn(&svc, 1), 0);
+        let engine = PolicyEngine::new(cfg(), Mode::Hibernate);
+        let used = (0.9 * (1u64 << 30) as f64) as u64;
+        let actions = engine.decide("w", &pool, 1_000_000, used, None);
+        assert!(matches!(actions[0], Action::Hibernate { .. }));
+    }
+
+    #[test]
+    fn warm_only_evicts_instead() {
+        let (svc, mut pool) = rig();
+        pool.add(spawn(&svc, 1), 0);
+        let engine = PolicyEngine::new(cfg(), Mode::WarmOnly);
+        let actions = engine.decide("w", &pool, 20_000_000, 0, None);
+        assert_eq!(
+            actions,
+            vec![Action::Evict {
+                workload: "w".into(),
+                idx: 0
+            }]
+        );
+    }
+
+    #[test]
+    fn stale_hibernate_evicted() {
+        let (svc, mut pool) = rig();
+        let clock = Clock::new();
+        let mut s = spawn(&svc, 1);
+        s.hibernate(&clock).unwrap();
+        pool.add(s, 0);
+        let engine = PolicyEngine::new(cfg(), Mode::Hibernate);
+        // idle 2 s > evict_idle 1 s
+        let actions = engine.decide("w", &pool, 2_000_000_000, 0, None);
+        assert_eq!(
+            actions,
+            vec![Action::Evict {
+                workload: "w".into(),
+                idx: 0
+            }]
+        );
+    }
+
+    #[test]
+    fn predictor_triggers_wake() {
+        let (svc, mut pool) = rig();
+        let clock = Clock::new();
+        let mut s = spawn(&svc, 1);
+        s.hibernate(&clock).unwrap();
+        pool.add(s, 0);
+        let engine = PolicyEngine::new(cfg(), Mode::Hibernate);
+        let pred = Predictor::new(0.5);
+        pred.observe("w", 0);
+        pred.observe("w", 100_000_000); // next expected ≈ 200 ms
+        let actions = engine.decide("w", &pool, 190_000_000, 0, Some(&pred));
+        assert!(
+            actions.contains(&Action::Wake {
+                workload: "w".into(),
+                idx: 0
+            }),
+            "{actions:?}"
+        );
+    }
+}

@@ -1,0 +1,124 @@
+//! Per-function container pools.
+//!
+//! A pool owns every sandbox instance of one workload, plus the scheduling
+//! metadata the policy loop needs (virtual-time idleness, serve counts).
+//! Sandboxes are mutex-wrapped: one request at a time per container (the
+//! paper's model — concurrency comes from more instances).
+
+use crate::container::sandbox::Sandbox;
+use crate::container::state::ContainerState;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A pooled instance.
+pub struct Instance {
+    pub sandbox: Arc<Mutex<Sandbox>>,
+    /// Virtual time of last activity (request completion / wake). Shared
+    /// with in-flight request handlers (updated outside the pool lock).
+    pub last_active: Arc<AtomicU64>,
+    /// Virtual time the instance was created.
+    pub created_vns: u64,
+}
+
+impl Instance {
+    pub fn state(&self) -> ContainerState {
+        self.sandbox.lock().unwrap().state()
+    }
+
+    pub fn last_active_vns(&self) -> u64 {
+        self.last_active.load(Ordering::Relaxed)
+    }
+
+    pub fn touch(&self, now_vns: u64) {
+        self.last_active.fetch_max(now_vns, Ordering::Relaxed);
+    }
+
+    pub fn idle_ns(&self, now_vns: u64) -> u64 {
+        now_vns.saturating_sub(self.last_active_vns())
+    }
+}
+
+/// All instances of one workload.
+#[derive(Default)]
+pub struct FunctionPool {
+    pub instances: Vec<Instance>,
+}
+
+impl FunctionPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, sandbox: Sandbox, now_vns: u64) -> &Instance {
+        self.instances.push(Instance {
+            sandbox: Arc::new(Mutex::new(sandbox)),
+            last_active: Arc::new(AtomicU64::new(now_vns)),
+            created_vns: now_vns,
+        });
+        self.instances.last().unwrap()
+    }
+
+    /// Count instances by state.
+    pub fn count_state(&self, s: ContainerState) -> usize {
+        self.instances.iter().filter(|i| i.state() == s).count()
+    }
+
+    pub fn len(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instances.is_empty()
+    }
+
+    /// Drop Dead instances (post-eviction cleanup).
+    pub fn sweep_dead(&mut self) -> usize {
+        let before = self.instances.len();
+        self.instances.retain(|i| i.state() != ContainerState::Dead);
+        before - self.instances.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SharingConfig;
+    use crate::container::sandbox::SandboxServices;
+    use crate::container::NoopRunner;
+    use crate::simtime::{Clock, CostModel};
+    use crate::workloads::functionbench::{golang_hello, scaled_for_test};
+    use std::sync::Arc;
+
+    fn mini_sandbox(id: u64, svc: &Arc<SandboxServices>) -> Sandbox {
+        let spec = scaled_for_test(golang_hello(), 32);
+        Sandbox::cold_start(id, spec, svc.clone(), &Clock::new()).unwrap()
+    }
+
+    #[test]
+    fn pool_lifecycle() {
+        let svc = SandboxServices::new_local(
+            256 << 20,
+            CostModel::free(),
+            SharingConfig::default(),
+            Arc::new(NoopRunner),
+            "pool-test",
+        )
+        .unwrap();
+        let mut pool = FunctionPool::new();
+        pool.add(mini_sandbox(1, &svc), 0);
+        pool.add(mini_sandbox(2, &svc), 1000);
+        assert_eq!(pool.len(), 2);
+        assert_eq!(pool.count_state(ContainerState::Warm), 2);
+        assert_eq!(pool.instances[0].idle_ns(5000), 5000);
+        assert_eq!(pool.instances[1].idle_ns(5000), 4000);
+        // Evict one and sweep.
+        pool.instances[0]
+            .sandbox
+            .lock()
+            .unwrap()
+            .terminate()
+            .unwrap();
+        assert_eq!(pool.sweep_dead(), 1);
+        assert_eq!(pool.len(), 1);
+    }
+}

@@ -1,0 +1,150 @@
+//! Anticipatory wake-up prediction (Fig. 3 ⑤).
+//!
+//! "When Serverless Platform predicts there is an incoming user request, it
+//! may also wake up a Hibernate Container … in anticipation by sending a
+//! SIGCONT." We keep a per-workload EWMA of inter-arrival gaps; the policy
+//! loop asks the predictor whether a request is expected within the wake
+//! lead time, and if so issues the SIGCONT so the request lands on a
+//! WokenUp container (Warm-like latency) instead of a Hibernate one.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Per-workload arrival statistics.
+#[derive(Debug, Clone, Copy)]
+struct Track {
+    last_arrival_ns: u64,
+    ewma_gap_ns: f64,
+    samples: u64,
+}
+
+/// EWMA-based next-arrival predictor.
+pub struct Predictor {
+    alpha: f64,
+    tracks: Mutex<HashMap<String, Track>>,
+}
+
+impl Predictor {
+    pub fn new(alpha: f64) -> Self {
+        Self {
+            alpha,
+            tracks: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Observe an arrival for `workload` at virtual time `now_ns`.
+    pub fn observe(&self, workload: &str, now_ns: u64) {
+        let mut tracks = self.tracks.lock().unwrap();
+        match tracks.get_mut(workload) {
+            None => {
+                tracks.insert(
+                    workload.to_string(),
+                    Track {
+                        last_arrival_ns: now_ns,
+                        ewma_gap_ns: 0.0,
+                        samples: 1,
+                    },
+                );
+            }
+            Some(t) => {
+                let gap = now_ns.saturating_sub(t.last_arrival_ns) as f64;
+                t.ewma_gap_ns = if t.samples == 1 {
+                    gap
+                } else {
+                    self.alpha * gap + (1.0 - self.alpha) * t.ewma_gap_ns
+                };
+                t.last_arrival_ns = now_ns;
+                t.samples += 1;
+            }
+        }
+    }
+
+    /// Predicted next arrival time, if we have ≥ 2 samples.
+    pub fn predicted_next(&self, workload: &str) -> Option<u64> {
+        let tracks = self.tracks.lock().unwrap();
+        let t = tracks.get(workload)?;
+        if t.samples < 2 {
+            return None;
+        }
+        Some(t.last_arrival_ns + t.ewma_gap_ns as u64)
+    }
+
+    /// Should the platform wake a hibernated container for `workload` now?
+    /// True when the predicted arrival falls within `lead_ns` of `now_ns`
+    /// (and has not already passed by more than one gap — stale tracks
+    /// shouldn't cause wake storms).
+    pub fn should_wake(&self, workload: &str, now_ns: u64, lead_ns: u64) -> bool {
+        let Some(next) = self.predicted_next(workload) else {
+            return false;
+        };
+        let gap = {
+            let tracks = self.tracks.lock().unwrap();
+            tracks.get(workload).map(|t| t.ewma_gap_ns as u64).unwrap_or(0)
+        };
+        next.saturating_sub(now_ns) <= lead_ns && now_ns.saturating_sub(next) < gap.max(1)
+    }
+
+    /// Mean observed gap (diagnostics).
+    pub fn mean_gap(&self, workload: &str) -> Option<f64> {
+        let tracks = self.tracks.lock().unwrap();
+        tracks
+            .get(workload)
+            .filter(|t| t.samples >= 2)
+            .map(|t| t.ewma_gap_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn learns_uniform_gap() {
+        let p = Predictor::new(0.3);
+        for i in 0..10u64 {
+            p.observe("w", i * 1_000_000);
+        }
+        let gap = p.mean_gap("w").unwrap();
+        assert!((gap - 1_000_000.0).abs() < 1.0, "{gap}");
+        assert_eq!(p.predicted_next("w"), Some(10_000_000));
+    }
+
+    #[test]
+    fn needs_two_samples() {
+        let p = Predictor::new(0.3);
+        assert!(p.predicted_next("w").is_none());
+        p.observe("w", 100);
+        assert!(p.predicted_next("w").is_none());
+        p.observe("w", 200);
+        assert!(p.predicted_next("w").is_some());
+    }
+
+    #[test]
+    fn wake_window() {
+        let p = Predictor::new(0.5);
+        p.observe("w", 0);
+        p.observe("w", 100_000_000); // gap 100 ms → next at 200 ms
+        assert!(!p.should_wake("w", 100_000_001, 10_000_000), "too early");
+        assert!(p.should_wake("w", 195_000_000, 10_000_000), "inside lead");
+        assert!(
+            !p.should_wake("w", 400_000_000, 10_000_000),
+            "stale prediction must not wake"
+        );
+    }
+
+    #[test]
+    fn adapts_to_rate_change() {
+        let p = Predictor::new(0.5);
+        let mut t = 0;
+        for _ in 0..5 {
+            t += 100_000_000;
+            p.observe("w", t);
+        }
+        for _ in 0..20 {
+            t += 10_000_000;
+            p.observe("w", t);
+        }
+        let gap = p.mean_gap("w").unwrap();
+        assert!(gap < 15_000_000.0, "EWMA must track the new 10ms rate: {gap}");
+    }
+}

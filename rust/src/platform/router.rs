@@ -1,0 +1,150 @@
+//! Request routing: pick the container that minimizes response latency.
+//!
+//! Selection order encodes the paper's latency hierarchy (Fig. 6):
+//! `Warm ≈ WokenUp < Hibernate ≪ cold start` — so route to an idle Warm
+//! container first, then a WokenUp one, then wake a Hibernate one, and only
+//! cold-start when nothing reusable exists. Busy containers are skipped
+//! (one in-flight request per instance).
+
+use super::pool::FunctionPool;
+use crate::container::state::ContainerState;
+
+/// Routing outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// Use instance `idx` of the pool (state at selection time included).
+    Existing { idx: usize, state: ContainerState },
+    /// Nothing reusable: cold-start a new instance.
+    ColdStart,
+}
+
+/// Pick per the Warm > WokenUp > Hibernate > cold order. Among equals,
+/// prefer the most-recently-active instance (better cache locality, and it
+/// lets older instances age toward hibernation/eviction — LIFO keep-alive,
+/// as in production FaaS schedulers).
+pub fn route(pool: &FunctionPool) -> Route {
+    let mut best: Option<(usize, ContainerState, u64)> = None;
+    for (idx, inst) in pool.instances.iter().enumerate() {
+        let state = inst.state();
+        if !state.accepts_requests() {
+            continue;
+        }
+        let rank = match state {
+            ContainerState::Warm => 0,
+            ContainerState::WokenUp => 1,
+            ContainerState::Hibernate => 2,
+            _ => continue,
+        };
+        let better = match best {
+            None => true,
+            Some((_, bstate, blast)) => {
+                let brank = match bstate {
+                    ContainerState::Warm => 0,
+                    ContainerState::WokenUp => 1,
+                    _ => 2,
+                };
+                rank < brank || (rank == brank && inst.last_active_vns() > blast)
+            }
+        };
+        if better {
+            best = Some((idx, state, inst.last_active_vns()));
+        }
+    }
+    match best {
+        Some((idx, state, _)) => Route::Existing { idx, state },
+        None => Route::ColdStart,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SharingConfig;
+    use crate::container::sandbox::{Sandbox, SandboxServices};
+    use crate::container::NoopRunner;
+    use crate::simtime::{Clock, CostModel};
+    use crate::workloads::functionbench::{golang_hello, scaled_for_test};
+    use std::sync::Arc;
+
+    fn rig() -> (Arc<SandboxServices>, FunctionPool) {
+        let svc = SandboxServices::new_local(
+            512 << 20,
+            CostModel::free(),
+            SharingConfig::default(),
+            Arc::new(NoopRunner),
+            "router-test",
+        )
+        .unwrap();
+        (svc, FunctionPool::new())
+    }
+
+    fn spawn(svc: &Arc<SandboxServices>, id: u64) -> Sandbox {
+        Sandbox::cold_start(
+            id,
+            scaled_for_test(golang_hello(), 32),
+            svc.clone(),
+            &Clock::new(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn empty_pool_cold_starts() {
+        let (_svc, pool) = rig();
+        assert_eq!(route(&pool), Route::ColdStart);
+    }
+
+    #[test]
+    fn warm_beats_hibernate() {
+        let (svc, mut pool) = rig();
+        let clock = Clock::new();
+        let mut a = spawn(&svc, 1);
+        a.hibernate(&clock).unwrap(); // instance 0: Hibernate
+        pool.add(a, 0);
+        pool.add(spawn(&svc, 2), 1); // instance 1: Warm
+        match route(&pool) {
+            Route::Existing { idx, state } => {
+                assert_eq!(idx, 1);
+                assert_eq!(state, ContainerState::Warm);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn wokenup_beats_hibernate_loses_to_warm() {
+        let (svc, mut pool) = rig();
+        let clock = Clock::new();
+        let mut h = spawn(&svc, 1);
+        h.hibernate(&clock).unwrap();
+        let mut w = spawn(&svc, 2);
+        w.hibernate(&clock).unwrap();
+        w.wake(&clock).unwrap(); // WokenUp
+        pool.add(h, 0);
+        pool.add(w, 1);
+        match route(&pool) {
+            Route::Existing { idx, state } => {
+                assert_eq!(idx, 1);
+                assert_eq!(state, ContainerState::WokenUp);
+            }
+            other => panic!("{other:?}"),
+        }
+        pool.add(spawn(&svc, 3), 2); // Warm now exists
+        match route(&pool) {
+            Route::Existing { state, .. } => assert_eq!(state, ContainerState::Warm),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn most_recent_warm_preferred() {
+        let (svc, mut pool) = rig();
+        pool.add(spawn(&svc, 1), 100);
+        pool.add(spawn(&svc, 2), 900);
+        pool.add(spawn(&svc, 3), 500);
+        match route(&pool) {
+            Route::Existing { idx, .. } => assert_eq!(idx, 1, "LIFO keep-alive"),
+            other => panic!("{other:?}"),
+        }
+    }
+}

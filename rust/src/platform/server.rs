@@ -1,0 +1,183 @@
+//! Threaded serving front-end: real worker threads over the same platform
+//! primitives the virtual-time replay uses. This is what the end-to-end
+//! serve demo runs: a request bus (std mpsc — no async runtime in the
+//! offline registry), N workers, and a background policy thread issuing
+//! SIGSTOP/SIGCONT per the paper's control plane.
+//!
+//! Wall-clock time doubles as the virtual timeline (1 ns = 1 ns): idleness
+//! for the hibernate policy is real idleness.
+
+use super::{Platform, RequestReport};
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// A request submitted to the server.
+pub struct Submission {
+    pub workload: String,
+    /// Filled with the report when done.
+    pub reply: mpsc::Sender<Result<RequestReport>>,
+}
+
+/// Handle to a running server.
+pub struct Server {
+    tx: mpsc::Sender<Submission>,
+    stop: Arc<AtomicBool>,
+    workers: Vec<JoinHandle<()>>,
+    policy_thread: Option<JoinHandle<()>>,
+    epoch: Instant,
+}
+
+impl Server {
+    /// Start `workers` serving threads plus the policy loop.
+    pub fn start(platform: Arc<Platform>, workers: usize, policy_interval: Duration) -> Server {
+        let (tx, rx) = mpsc::channel::<Submission>();
+        let rx = Arc::new(Mutex::new(rx));
+        let stop = Arc::new(AtomicBool::new(false));
+        let epoch = Instant::now();
+
+        let mut handles = Vec::new();
+        for _ in 0..workers.max(1) {
+            let rx = rx.clone();
+            let platform = platform.clone();
+            let stop = stop.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let msg = {
+                    let rx = rx.lock().unwrap();
+                    rx.recv_timeout(Duration::from_millis(50))
+                };
+                match msg {
+                    Ok(sub) => {
+                        let now_vns = epoch_ns(epoch);
+                        let report = platform.request_at(&sub.workload, now_vns);
+                        let _ = sub.reply.send(report);
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                }
+            }));
+        }
+
+        let policy_thread = {
+            let platform = platform.clone();
+            let stop = stop.clone();
+            Some(std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(policy_interval);
+                    let _ = platform.policy_tick(epoch_ns(epoch));
+                }
+            }))
+        };
+
+        Server {
+            tx,
+            stop,
+            workers: handles,
+            policy_thread,
+            epoch,
+        }
+    }
+
+    /// Submit a request; returns a receiver for the report.
+    pub fn submit(&self, workload: &str) -> mpsc::Receiver<Result<RequestReport>> {
+        let (reply, rx) = mpsc::channel();
+        let _ = self.tx.send(Submission {
+            workload: workload.to_string(),
+            reply,
+        });
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn call(&self, workload: &str) -> Result<RequestReport> {
+        self.submit(workload)
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server dropped the request"))?
+    }
+
+    pub fn uptime_ns(&self) -> u64 {
+        epoch_ns(self.epoch)
+    }
+
+    /// Stop workers and the policy loop; joins all threads.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(h) = self.policy_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn epoch_ns(epoch: Instant) -> u64 {
+    epoch.elapsed().as_nanos() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+    use crate::container::NoopRunner;
+    use crate::platform::metrics::ServedFrom;
+    use crate::simtime::CostModel;
+    use crate::workloads::functionbench::{golang_hello, scaled_for_test};
+
+    fn platform() -> Arc<Platform> {
+        let mut cfg = PlatformConfig::default();
+        cfg.host_memory = 512 << 20;
+        cfg.cost = CostModel::free();
+        cfg.policy.hibernate_idle_ms = 30;
+        cfg.policy.predictive_wakeup = false;
+        cfg.swap_dir = std::env::temp_dir()
+            .join(format!("qh-server-test-{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let p = Platform::new(cfg, Arc::new(NoopRunner)).unwrap();
+        p.deploy(scaled_for_test(golang_hello(), 32)).unwrap();
+        Arc::new(p)
+    }
+
+    #[test]
+    fn serves_concurrent_requests() {
+        let p = platform();
+        let server = Server::start(p.clone(), 4, Duration::from_millis(10));
+        let rxs: Vec<_> = (0..8).map(|_| server.submit("golang-hello")).collect();
+        let mut served = 0;
+        for rx in rxs {
+            let report = rx.recv().unwrap().unwrap();
+            assert_eq!(report.workload, "golang-hello");
+            served += 1;
+        }
+        assert_eq!(served, 8);
+        server.shutdown();
+        assert_eq!(
+            p.metrics.counters.requests.load(Ordering::Relaxed),
+            8
+        );
+    }
+
+    #[test]
+    fn policy_thread_hibernates_idle_containers() {
+        let p = platform();
+        let server = Server::start(p.clone(), 2, Duration::from_millis(10));
+        server.call("golang-hello").unwrap();
+        // Wait past the 30 ms idle threshold for the policy thread to act.
+        std::thread::sleep(Duration::from_millis(150));
+        let r = server.call("golang-hello").unwrap();
+        assert!(
+            matches!(r.served_from, ServedFrom::Hibernate | ServedFrom::WokenUp),
+            "expected a hibernate-path serve, got {:?}",
+            r.served_from
+        );
+        server.shutdown();
+        assert!(p.metrics.counters.hibernations.load(Ordering::Relaxed) >= 1);
+    }
+}

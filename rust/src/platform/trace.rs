@@ -1,0 +1,176 @@
+//! Workload traces: Azure-FaaS-shaped arrival generation and replay input.
+//!
+//! The paper motivates Hibernate with the serverless workload studies it
+//! cites (Shahrad et al.: most functions are invoked rarely; Datadog: small
+//! memory). The generator produces per-function arrival processes with
+//! Poisson or bursty (lognormal think-time) inter-arrivals so the policy
+//! experiments see realistic idle gaps — the gaps Hibernate monetizes.
+
+use crate::util::rng::Rng;
+
+/// One request arrival in virtual time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Virtual arrival time (ns since trace start).
+    pub at_ns: u64,
+    /// Target workload name.
+    pub workload: String,
+}
+
+/// Arrival process for one function.
+#[derive(Debug, Clone)]
+pub enum Arrival {
+    /// Poisson with the given mean inter-arrival (ns).
+    Poisson { mean_gap_ns: u64 },
+    /// Bursts: lognormal gaps between bursts, `burst` back-to-back requests.
+    Bursty {
+        median_gap_ns: u64,
+        sigma: f64,
+        burst: u32,
+    },
+    /// Fixed-rate (deterministic gap).
+    Uniform { gap_ns: u64 },
+}
+
+/// Generator configuration for one workload.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    pub workload: String,
+    pub arrival: Arrival,
+}
+
+/// Generate a merged, time-sorted trace of `duration_ns` for all specs.
+pub fn generate(specs: &[TraceSpec], duration_ns: u64, seed: u64) -> Vec<TraceEvent> {
+    let mut events = Vec::new();
+    for (i, spec) in specs.iter().enumerate() {
+        let mut rng = Rng::new(seed ^ ((i as u64 + 1) * 0x9E37_79B9));
+        let mut t = 0u64;
+        loop {
+            let gap = match &spec.arrival {
+                Arrival::Poisson { mean_gap_ns } => rng.exp(*mean_gap_ns as f64) as u64,
+                Arrival::Uniform { gap_ns } => *gap_ns,
+                Arrival::Bursty {
+                    median_gap_ns,
+                    sigma,
+                    burst,
+                } => {
+                    // Emit a burst then one long gap.
+                    let gap = rng.lognormal(*median_gap_ns as f64, *sigma) as u64;
+                    for b in 1..*burst {
+                        let bt = t + b as u64 * 1_000_000; // 1 ms apart inside the burst
+                        if bt < duration_ns {
+                            events.push(TraceEvent {
+                                at_ns: bt,
+                                workload: spec.workload.clone(),
+                            });
+                        }
+                    }
+                    gap
+                }
+            };
+            t = t.saturating_add(gap.max(1));
+            if t >= duration_ns {
+                break;
+            }
+            events.push(TraceEvent {
+                at_ns: t,
+                workload: spec.workload.clone(),
+            });
+        }
+    }
+    events.sort_by_key(|e| e.at_ns);
+    events
+}
+
+/// A convenience mix: every paper workload with an idle-heavy Poisson
+/// process (mean gap ≫ processing time, so hibernation opportunities exist).
+pub fn paper_mix(duration_ns: u64, mean_gap_ms: u64, seed: u64) -> Vec<TraceEvent> {
+    let specs: Vec<TraceSpec> = crate::workloads::all_workloads()
+        .into_iter()
+        .map(|w| TraceSpec {
+            workload: w.name,
+            arrival: Arrival::Poisson {
+                mean_gap_ns: mean_gap_ms * 1_000_000,
+            },
+        })
+        .collect();
+    generate(&specs, duration_ns, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sorted_and_bounded() {
+        let specs = vec![
+            TraceSpec {
+                workload: "a".into(),
+                arrival: Arrival::Poisson {
+                    mean_gap_ns: 10_000_000,
+                },
+            },
+            TraceSpec {
+                workload: "b".into(),
+                arrival: Arrival::Uniform { gap_ns: 25_000_000 },
+            },
+        ];
+        let t = generate(&specs, 1_000_000_000, 42);
+        assert!(!t.is_empty());
+        assert!(t.windows(2).all(|w| w[0].at_ns <= w[1].at_ns));
+        assert!(t.iter().all(|e| e.at_ns < 1_000_000_000));
+        // Uniform at 25 ms over 1 s → ~39 events of "b".
+        let b = t.iter().filter(|e| e.workload == "b").count();
+        assert_eq!(b, 39);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let specs = vec![TraceSpec {
+            workload: "a".into(),
+            arrival: Arrival::Poisson {
+                mean_gap_ns: 5_000_000,
+            },
+        }];
+        let t1 = generate(&specs, 500_000_000, 7);
+        let t2 = generate(&specs, 500_000_000, 7);
+        let t3 = generate(&specs, 500_000_000, 8);
+        assert_eq!(t1, t2);
+        assert_ne!(t1, t3);
+    }
+
+    #[test]
+    fn poisson_rate_roughly_right() {
+        let specs = vec![TraceSpec {
+            workload: "a".into(),
+            arrival: Arrival::Poisson {
+                mean_gap_ns: 1_000_000,
+            },
+        }];
+        let t = generate(&specs, 1_000_000_000, 3);
+        // expect ~1000 events ± 20%
+        assert!((800..1200).contains(&t.len()), "{}", t.len());
+    }
+
+    #[test]
+    fn bursts_cluster() {
+        let specs = vec![TraceSpec {
+            workload: "a".into(),
+            arrival: Arrival::Bursty {
+                median_gap_ns: 100_000_000,
+                sigma: 0.5,
+                burst: 4,
+            },
+        }];
+        let t = generate(&specs, 2_000_000_000, 11);
+        assert!(t.len() >= 8, "bursts must multiply events: {}", t.len());
+    }
+
+    #[test]
+    fn paper_mix_covers_all_workloads() {
+        let t = paper_mix(3_000_000_000, 200, 1);
+        let names: std::collections::HashSet<_> =
+            t.iter().map(|e| e.workload.clone()).collect();
+        assert_eq!(names.len(), 8);
+    }
+}

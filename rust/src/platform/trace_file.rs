@@ -1,0 +1,120 @@
+//! Trace file I/O: load and save request traces in a simple CSV format so
+//! experiments can replay recorded/production-shaped traces instead of
+//! synthetic generators.
+//!
+//! Format (header required, `#` comments allowed):
+//!
+//! ```csv
+//! timestamp_ms,workload
+//! 0.000,nodejs-hello
+//! 12.500,video-processing
+//! ```
+//!
+//! This mirrors the Azure Functions trace release's (invocation time,
+//! function) essence, which the paper's motivation leans on.
+
+use super::trace::TraceEvent;
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Parse trace text. Events are sorted by timestamp on return.
+pub fn parse(text: &str) -> Result<Vec<TraceEvent>> {
+    let mut lines = text
+        .lines()
+        .map(str::trim)
+        .enumerate()
+        .filter(|(_, l)| !l.is_empty() && !l.starts_with('#'));
+    let (_, header) = lines.next().context("empty trace file")?;
+    let cols: Vec<&str> = header.split(',').map(str::trim).collect();
+    if cols != ["timestamp_ms", "workload"] {
+        bail!("bad header {header:?} (expected `timestamp_ms,workload`)");
+    }
+    let mut events = Vec::new();
+    for (no, line) in lines {
+        let Some((ts, workload)) = line.split_once(',') else {
+            bail!("line {}: expected `timestamp_ms,workload`", no + 1);
+        };
+        let ts_ms: f64 = ts
+            .trim()
+            .parse()
+            .with_context(|| format!("line {}: bad timestamp `{ts}`", no + 1))?;
+        if ts_ms < 0.0 {
+            bail!("line {}: negative timestamp", no + 1);
+        }
+        let workload = workload.trim();
+        if workload.is_empty() {
+            bail!("line {}: empty workload", no + 1);
+        }
+        events.push(TraceEvent {
+            at_ns: (ts_ms * 1e6) as u64,
+            workload: workload.to_string(),
+        });
+    }
+    events.sort_by_key(|e| e.at_ns);
+    Ok(events)
+}
+
+/// Load a trace from a file.
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<TraceEvent>> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading trace {}", path.as_ref().display()))?;
+    parse(&text)
+}
+
+/// Save a trace (e.g. a generated one, for reproducible replays elsewhere).
+pub fn save(path: impl AsRef<Path>, events: &[TraceEvent]) -> Result<()> {
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    writeln!(f, "timestamp_ms,workload")?;
+    for e in events {
+        writeln!(f, "{:.3},{}", e.at_ns as f64 / 1e6, e.workload)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let t = parse(
+            "# comment\ntimestamp_ms,workload\n0.0,a\n12.5,b\n3,a\n",
+        )
+        .unwrap();
+        assert_eq!(t.len(), 3);
+        // Sorted by time.
+        assert_eq!(t[0].workload, "a");
+        assert_eq!(t[1].at_ns, 3_000_000);
+        assert_eq!(t[2].at_ns, 12_500_000);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("").is_err());
+        assert!(parse("wrong,header\n1,a\n").is_err());
+        assert!(parse("timestamp_ms,workload\nnotanumber,a\n").is_err());
+        assert!(parse("timestamp_ms,workload\n-5,a\n").is_err());
+        assert!(parse("timestamp_ms,workload\n5,\n").is_err());
+        assert!(parse("timestamp_ms,workload\nmissing-comma\n").is_err());
+    }
+
+    #[test]
+    fn round_trip_through_file() {
+        let events = crate::platform::trace::paper_mix(500_000_000, 50, 9);
+        let path = std::env::temp_dir().join(format!(
+            "qh-trace-{}.csv",
+            std::process::id()
+        ));
+        save(&path, &events).unwrap();
+        let back = load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(events.len(), back.len());
+        for (a, b) in events.iter().zip(&back) {
+            assert_eq!(a.workload, b.workload);
+            // ms-precision round trip.
+            assert!(a.at_ns.abs_diff(b.at_ns) < 1_000_000);
+        }
+    }
+}

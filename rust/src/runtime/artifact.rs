@@ -1,0 +1,167 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! `artifacts/manifest.json` lists every compiled entry point with its input
+//! shapes (all f32 tensors) and the HLO text file to load:
+//!
+//! ```json
+//! {
+//!   "format": "hlo-text-v1",
+//!   "artifacts": [
+//!     {"name": "float_operation", "file": "float_operation.hlo.txt",
+//!      "inputs": [[256, 256]], "outputs": [[256, 256]]}
+//!   ]
+//! }
+//! ```
+
+use crate::util::json::{parse, Json};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Artifact {
+    pub name: String,
+    /// HLO text path (absolute, resolved against the manifest dir).
+    pub path: PathBuf,
+    /// Input tensor shapes (f32).
+    pub inputs: Vec<Vec<usize>>,
+    /// Output tensor shapes (f32).
+    pub outputs: Vec<Vec<usize>>,
+}
+
+impl Artifact {
+    pub fn input_elems(&self, i: usize) -> usize {
+        self.inputs[i].iter().product()
+    }
+
+    pub fn output_elems(&self, i: usize) -> usize {
+        self.outputs[i].iter().product()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<Artifact>,
+}
+
+fn shape_list(j: &Json, what: &str) -> Result<Vec<Vec<usize>>> {
+    let arr = j
+        .as_arr()
+        .with_context(|| format!("{what} must be an array of shapes"))?;
+    arr.iter()
+        .map(|s| {
+            s.as_arr()
+                .with_context(|| format!("{what} entries must be arrays"))?
+                .iter()
+                .map(|d| {
+                    d.as_u64()
+                        .map(|v| v as usize)
+                        .with_context(|| format!("{what} dims must be non-negative ints"))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        Self::parse_with_dir(&text, dir)
+    }
+
+    /// Parse manifest text, resolving artifact files against `dir`.
+    pub fn parse_with_dir(text: &str, dir: &Path) -> Result<Self> {
+        let j = parse(text).map_err(|e| anyhow::anyhow!("manifest JSON: {e}"))?;
+        match j.get("format").and_then(|f| f.as_str()) {
+            Some("hlo-text-v1") => {}
+            other => bail!("unsupported manifest format {other:?}"),
+        }
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .context("manifest missing `artifacts` array")?;
+        let mut artifacts = Vec::new();
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(|n| n.as_str())
+                .context("artifact missing name")?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(|f| f.as_str())
+                .with_context(|| format!("artifact {name} missing file"))?;
+            let inputs = shape_list(a.get("inputs").context("missing inputs")?, "inputs")?;
+            let outputs = shape_list(a.get("outputs").context("missing outputs")?, "outputs")?;
+            artifacts.push(Artifact {
+                name,
+                path: dir.join(file),
+                inputs,
+                outputs,
+            });
+        }
+        Ok(Self { artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.iter().map(|a| a.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "format": "hlo-text-v1",
+        "artifacts": [
+            {"name": "float_operation", "file": "float_operation.hlo.txt",
+             "inputs": [[256, 256]], "outputs": [[256, 256]]},
+            {"name": "tiny_lm", "file": "tiny_lm.hlo.txt",
+             "inputs": [[4, 64]], "outputs": [[4, 64, 512]]}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse_with_dir(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let f = m.get("float_operation").unwrap();
+        assert_eq!(f.path, PathBuf::from("/tmp/a/float_operation.hlo.txt"));
+        assert_eq!(f.inputs, vec![vec![256, 256]]);
+        assert_eq!(f.input_elems(0), 65536);
+        let lm = m.get("tiny_lm").unwrap();
+        assert_eq!(lm.output_elems(0), 4 * 64 * 512);
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = r#"{"format": "v0", "artifacts": []}"#;
+        assert!(Manifest::parse_with_dir(bad, Path::new("/")).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let bad = r#"{"format": "hlo-text-v1", "artifacts": [{"name": "x"}]}"#;
+        assert!(Manifest::parse_with_dir(bad, Path::new("/")).is_err());
+        let bad = r#"{"format": "hlo-text-v1"}"#;
+        assert!(Manifest::parse_with_dir(bad, Path::new("/")).is_err());
+    }
+
+    #[test]
+    fn names_listing() {
+        let m = Manifest::parse_with_dir(SAMPLE, Path::new("/")).unwrap();
+        assert_eq!(m.names(), vec!["float_operation", "tiny_lm"]);
+    }
+}

@@ -1,0 +1,158 @@
+//! PJRT execution: compile once, execute many, never touch Python.
+//!
+//! Mirrors `/opt/xla-example/src/bin/load_hlo.rs`: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Executables are compiled lazily (first request for an artifact) and
+//! cached for the life of the process; inputs are deterministic per
+//! artifact so results are checkable.
+
+use super::artifact::{Artifact, Manifest};
+use crate::container::PayloadRunner;
+use crate::simtime::Clock;
+use crate::workloads::PayloadSpec;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// A compiled artifact ready to run.
+struct Loaded {
+    exe: xla::PjRtLoadedExecutable,
+    artifact: Artifact,
+}
+
+/// PJRT-backed payload runner shared by all sandboxes.
+pub struct PjrtRunner {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    loaded: Mutex<HashMap<String, &'static Loaded>>,
+}
+
+// The xla crate's client/executable types wrap PJRT handles that are safe
+// to share across threads (PJRT CPU client is thread-safe); the crate just
+// doesn't declare it. We serialize compilation behind the mutex and PJRT
+// serializes execution internally.
+unsafe impl Send for PjrtRunner {}
+unsafe impl Sync for PjrtRunner {}
+
+impl PjrtRunner {
+    /// Create a CPU PJRT client and load the manifest from `artifacts_dir`.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            loaded: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn load(&self, name: &str) -> Result<&'static Loaded> {
+        let mut loaded = self.loaded.lock().unwrap();
+        if let Some(l) = loaded.get(name) {
+            return Ok(l);
+        }
+        let artifact = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("artifact `{name}` not in manifest"))?
+            .clone();
+        let path = artifact
+            .path
+            .to_str()
+            .context("artifact path not UTF-8")?
+            .to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        // Executables live for the process lifetime; leaking gives us a
+        // stable &'static without self-referential structs.
+        let entry: &'static Loaded = Box::leak(Box::new(Loaded { exe, artifact }));
+        loaded.insert(name.to_string(), entry);
+        Ok(entry)
+    }
+
+    /// Deterministic input tensor for an artifact (values in [0,1)).
+    fn input_literal(shape: &[usize], seed: u64) -> Result<xla::Literal> {
+        let n: usize = shape.iter().product();
+        let mut vals = Vec::with_capacity(n);
+        let mut x = seed ^ 0x9E37_79B9_7F4A_7C15;
+        for _ in 0..n {
+            x = x
+                .wrapping_mul(0x2545_F491_4F6C_DD1D)
+                .wrapping_add(0x1234_5678);
+            vals.push(((x >> 40) as f32) / (1u64 << 24) as f32);
+        }
+        let lit = xla::Literal::vec1(&vals);
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        lit.reshape(&dims).context("reshaping input literal")
+    }
+
+    /// Execute an artifact once with deterministic inputs; returns the
+    /// first output tensor flattened to f32.
+    pub fn execute(&self, name: &str, seed: u64) -> Result<Vec<f32>> {
+        let l = self.load(name)?;
+        let inputs: Vec<xla::Literal> = l
+            .artifact
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Self::input_literal(s, seed.wrapping_add(i as u64)))
+            .collect::<Result<_>>()?;
+        let result = l.exe.execute::<xla::Literal>(&inputs)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        let vals = out.to_vec::<f32>().context("reading f32 output")?;
+        if !l.artifact.outputs.is_empty() {
+            let expect: usize = l.artifact.outputs[0].iter().product();
+            if vals.len() != expect {
+                bail!(
+                    "{name}: output has {} elems, manifest says {expect}",
+                    vals.len()
+                );
+            }
+        }
+        Ok(vals)
+    }
+
+    /// Warm the executable cache (compile everything up front — used by the
+    /// platform at boot so compilation never lands on a request).
+    pub fn precompile_all(&self) -> Result<()> {
+        let names: Vec<String> = self
+            .manifest
+            .artifacts
+            .iter()
+            .map(|a| a.name.clone())
+            .collect();
+        for n in names {
+            self.load(&n)?;
+        }
+        Ok(())
+    }
+}
+
+impl PayloadRunner for PjrtRunner {
+    fn run(&self, payload: &PayloadSpec, clock: &Clock) -> Result<()> {
+        clock.time(|| -> Result<()> {
+            for it in 0..payload.iterations {
+                let out = self.execute(&payload.artifact, 0xC0DE + it as u64)?;
+                // Results must be finite — a NaN here means the kernel or
+                // the AOT path regressed.
+                if let Some(bad) = out.iter().find(|v| !v.is_finite()) {
+                    bail!("{}: non-finite output {bad}", payload.artifact);
+                }
+            }
+            Ok(())
+        })
+    }
+}

@@ -1,0 +1,14 @@
+//! The PJRT runtime: loads the AOT artifacts produced by `python/compile`
+//! (HLO **text** — see `/opt/xla-example/README.md` for why not serialized
+//! protos) and executes them on the request path. Python never runs here.
+//!
+//! * [`artifact`] — `artifacts/manifest.json` parsing + artifact metadata.
+//! * [`executor`] — PJRT client wrapper, one compiled executable per
+//!   artifact (compiled once, cached), typed f32 execution, and the
+//!   [`crate::container::PayloadRunner`] implementation sandboxes call.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{Artifact, Manifest};
+pub use executor::PjrtRunner;

@@ -1,0 +1,140 @@
+//! Per-request virtual clock.
+//!
+//! A [`Clock`] accumulates charged nanoseconds (device + OS model costs)
+//! and measured nanoseconds (real compute through PJRT, real page-content
+//! work), kept separately so benches can report both the paper-shaped total
+//! and the real-CPU fraction.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Accumulates virtual time. Cloneable handle (`SharedClock`) for use from
+/// the fault handlers deep in the memory subsystem.
+#[derive(Debug, Default)]
+pub struct Clock {
+    charged_ns: AtomicU64,
+    measured_ns: AtomicU64,
+}
+
+impl Clock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge modeled time (device/OS cost).
+    #[inline]
+    pub fn charge(&self, ns: u64) {
+        self.charged_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Record real measured time.
+    #[inline]
+    pub fn record(&self, ns: u64) {
+        self.measured_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Run `f` and attribute its wall-clock to the measured component.
+    pub fn time<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(t0.elapsed().as_nanos() as u64);
+        out
+    }
+
+    pub fn charged_ns(&self) -> u64 {
+        self.charged_ns.load(Ordering::Relaxed)
+    }
+
+    pub fn measured_ns(&self) -> u64 {
+        self.measured_ns.load(Ordering::Relaxed)
+    }
+
+    /// Total virtual latency: charged model time + real compute time.
+    pub fn total_ns(&self) -> u64 {
+        self.charged_ns() + self.measured_ns()
+    }
+
+    /// Snapshot and reset — used between request phases.
+    pub fn take(&self) -> (u64, u64) {
+        (
+            self.charged_ns.swap(0, Ordering::Relaxed),
+            self.measured_ns.swap(0, Ordering::Relaxed),
+        )
+    }
+}
+
+/// Shared handle to a clock.
+pub type SharedClock = Arc<Clock>;
+
+/// A scoped split: measures the difference of a clock across a region.
+pub struct Span {
+    start_charged: u64,
+    start_measured: u64,
+}
+
+impl Span {
+    pub fn begin(clock: &Clock) -> Self {
+        Self {
+            start_charged: clock.charged_ns(),
+            start_measured: clock.measured_ns(),
+        }
+    }
+
+    /// (charged delta, measured delta) since `begin`.
+    pub fn end(&self, clock: &Clock) -> (u64, u64) {
+        (
+            clock.charged_ns() - self.start_charged,
+            clock.measured_ns() - self.start_measured,
+        )
+    }
+
+    /// Total virtual time elapsed in the span.
+    pub fn total(&self, clock: &Clock) -> u64 {
+        let (c, m) = self.end(clock);
+        c + m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_and_record_accumulate() {
+        let c = Clock::new();
+        c.charge(100);
+        c.charge(50);
+        c.record(25);
+        assert_eq!(c.charged_ns(), 150);
+        assert_eq!(c.measured_ns(), 25);
+        assert_eq!(c.total_ns(), 175);
+    }
+
+    #[test]
+    fn take_resets() {
+        let c = Clock::new();
+        c.charge(10);
+        c.record(20);
+        assert_eq!(c.take(), (10, 20));
+        assert_eq!(c.total_ns(), 0);
+    }
+
+    #[test]
+    fn time_measures_real_work() {
+        let c = Clock::new();
+        c.time(|| std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(c.measured_ns() >= 2_000_000);
+    }
+
+    #[test]
+    fn span_deltas() {
+        let c = Clock::new();
+        c.charge(5);
+        let span = Span::begin(&c);
+        c.charge(7);
+        c.record(3);
+        assert_eq!(span.end(&c), (7, 3));
+        assert_eq!(span.total(&c), 10);
+    }
+}

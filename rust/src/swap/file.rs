@@ -1,0 +1,405 @@
+//! Per-sandbox swap files: real files, real I/O (Fig. 5).
+//!
+//! Two files per sandbox:
+//! * **swap file** — written page-by-page at swap-out, read with random
+//!   `pread` at page-fault swap-in;
+//! * **REAP file** — written with one scatter `pwritev` of the recorded
+//!   working set, read back with one `preadv` batch.
+//!
+//! Both are deleted when the [`SwapFileSet`] drops (sandbox termination).
+
+use crate::mem::Gpa;
+use crate::PAGE_SIZE;
+use anyhow::{bail, Context, Result};
+use std::fs::{File, OpenOptions};
+use std::os::unix::io::AsRawFd;
+use std::path::{Path, PathBuf};
+
+/// Offset (bytes) of a page image within a swap file.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct SwapSlot(pub u64);
+
+/// The pair of files backing one sandbox's hibernation.
+pub struct SwapFileSet {
+    dir: PathBuf,
+    swap_path: PathBuf,
+    reap_path: PathBuf,
+    swap: File,
+    reap: File,
+    swap_len: u64,
+}
+
+impl SwapFileSet {
+    /// Create the file pair under `dir` for sandbox `id`.
+    pub fn create(dir: &Path, id: u64) -> Result<Self> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating swap dir {}", dir.display()))?;
+        let swap_path = dir.join(format!("sandbox-{id}.swap"));
+        let reap_path = dir.join(format!("sandbox-{id}.reap"));
+        let open = |p: &Path| -> Result<File> {
+            OpenOptions::new()
+                .read(true)
+                .write(true)
+                .create(true)
+                .truncate(true)
+                .open(p)
+                .with_context(|| format!("opening {}", p.display()))
+        };
+        Ok(Self {
+            swap: open(&swap_path)?,
+            reap: open(&reap_path)?,
+            dir: dir.to_path_buf(),
+            swap_path,
+            reap_path,
+            swap_len: 0,
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Append one page image to the swap file, returning its slot.
+    pub fn append_page(&mut self, data: &[u8]) -> Result<SwapSlot> {
+        if data.len() != PAGE_SIZE {
+            bail!("swap pages are exactly {PAGE_SIZE} bytes");
+        }
+        let slot = SwapSlot(self.swap_len);
+        pwrite_all(&self.swap, data, slot.0)?;
+        self.swap_len += PAGE_SIZE as u64;
+        Ok(slot)
+    }
+
+    /// Append many page images with scatter `pwritev` (one syscall per 1024
+    /// pages instead of one per page — §Perf #1). Returns the slot of the
+    /// first page; subsequent pages occupy consecutive slots.
+    pub fn append_pages(&mut self, pages: &[&[u8]]) -> Result<SwapSlot> {
+        let start = SwapSlot(self.swap_len);
+        if pages.is_empty() {
+            return Ok(start);
+        }
+        let iovs: Vec<libc::iovec> = pages
+            .iter()
+            .map(|p| {
+                assert_eq!(p.len(), PAGE_SIZE);
+                libc::iovec {
+                    iov_base: p.as_ptr() as *mut libc::c_void,
+                    iov_len: p.len(),
+                }
+            })
+            .collect();
+        let mut written = 0u64;
+        let mut iov_idx = 0usize;
+        while iov_idx < iovs.len() {
+            let batch = &iovs[iov_idx..(iov_idx + 1024).min(iovs.len())];
+            // SAFETY: iovecs point into caller-held page slices.
+            let n = unsafe {
+                libc::pwritev(
+                    self.swap.as_raw_fd(),
+                    batch.as_ptr(),
+                    batch.len() as libc::c_int,
+                    (start.0 + written) as libc::off_t,
+                )
+            };
+            if n < 0 {
+                bail!("pwritev failed: {}", std::io::Error::last_os_error());
+            }
+            if n as usize % PAGE_SIZE != 0 {
+                bail!("short pwritev not page-multiple: {n}");
+            }
+            written += n as u64;
+            iov_idx += n as usize / PAGE_SIZE;
+        }
+        self.swap_len += written;
+        Ok(start)
+    }
+
+    /// Random read of one page image directly into a caller buffer that is
+    /// the guest frame itself (§Perf #3: no bounce copy on the fault path).
+    pub fn read_page_into(&self, slot: SwapSlot, dst: *mut u8) -> Result<()> {
+        // SAFETY: caller guarantees dst points at one owned page.
+        let buf = unsafe { std::slice::from_raw_parts_mut(dst, PAGE_SIZE) };
+        pread_all(&self.swap, buf, slot.0)
+    }
+
+    /// Random read of one page image (the page-fault swap-in path).
+    pub fn read_page(&self, slot: SwapSlot, out: &mut [u8]) -> Result<()> {
+        if out.len() != PAGE_SIZE {
+            bail!("swap pages are exactly {PAGE_SIZE} bytes");
+        }
+        pread_all(&self.swap, out, slot.0)
+    }
+
+    /// Reset the swap file for a fresh hibernation cycle.
+    pub fn reset_swap(&mut self) -> Result<()> {
+        self.swap.set_len(0)?;
+        self.swap_len = 0;
+        Ok(())
+    }
+
+    pub fn swap_len(&self) -> u64 {
+        self.swap_len
+    }
+
+    /// REAP swap-out: write all working-set pages with one scatter
+    /// `pwritev` at offset 0 (§3.4.2 step c). `pages` are borrowed page
+    /// images in record order.
+    pub fn write_reap(&mut self, pages: &[&[u8]]) -> Result<u64> {
+        self.reap.set_len(0)?;
+        if pages.is_empty() {
+            return Ok(0);
+        }
+        let iovs: Vec<libc::iovec> = pages
+            .iter()
+            .map(|p| {
+                assert_eq!(p.len(), PAGE_SIZE);
+                libc::iovec {
+                    iov_base: p.as_ptr() as *mut libc::c_void,
+                    iov_len: p.len(),
+                }
+            })
+            .collect();
+        let total = (pages.len() * PAGE_SIZE) as u64;
+        let mut written = 0u64;
+        let mut iov_idx = 0usize;
+        // IOV_MAX batching: pwritev accepts at most IOV_MAX iovecs per call.
+        while iov_idx < iovs.len() {
+            let batch = &iovs[iov_idx..(iov_idx + 1024).min(iovs.len())];
+            // SAFETY: iovecs point into caller-held page slices.
+            let n = unsafe {
+                libc::pwritev(
+                    self.reap.as_raw_fd(),
+                    batch.as_ptr(),
+                    batch.len() as libc::c_int,
+                    written as libc::off_t,
+                )
+            };
+            if n < 0 {
+                bail!("pwritev failed: {}", std::io::Error::last_os_error());
+            }
+            if n as usize % PAGE_SIZE != 0 {
+                bail!("short pwritev not page-multiple: {n}");
+            }
+            written += n as u64;
+            iov_idx += n as usize / PAGE_SIZE;
+        }
+        debug_assert_eq!(written, total);
+        Ok(written)
+    }
+
+    /// REAP swap-in: one batched sequential `preadv` of the whole REAP file
+    /// into the caller's scatter buffers (§3.4.2 swap-in step 1).
+    pub fn read_reap(&self, bufs: &mut [&mut [u8]]) -> Result<u64> {
+        if bufs.is_empty() {
+            return Ok(0);
+        }
+        let mut iovs: Vec<libc::iovec> = bufs
+            .iter_mut()
+            .map(|b| {
+                assert_eq!(b.len(), PAGE_SIZE);
+                libc::iovec {
+                    iov_base: b.as_mut_ptr() as *mut libc::c_void,
+                    iov_len: b.len(),
+                }
+            })
+            .collect();
+        let mut read = 0u64;
+        let mut iov_idx = 0usize;
+        while iov_idx < iovs.len() {
+            let batch = &mut iovs[iov_idx..(iov_idx + 1024).min(bufs.len())];
+            // SAFETY: iovecs point into caller-held distinct buffers.
+            let n = unsafe {
+                libc::preadv(
+                    self.reap.as_raw_fd(),
+                    batch.as_ptr(),
+                    batch.len() as libc::c_int,
+                    read as libc::off_t,
+                )
+            };
+            if n < 0 {
+                bail!("preadv failed: {}", std::io::Error::last_os_error());
+            }
+            if n == 0 {
+                bail!("REAP file shorter than expected");
+            }
+            if n as usize % PAGE_SIZE != 0 {
+                bail!("short preadv not page-multiple: {n}");
+            }
+            read += n as u64;
+            iov_idx += n as usize / PAGE_SIZE;
+        }
+        Ok(read)
+    }
+
+    pub fn reap_len(&self) -> Result<u64> {
+        Ok(self.reap.metadata()?.len())
+    }
+}
+
+impl Drop for SwapFileSet {
+    fn drop(&mut self) {
+        // "these files are deleted when the sandbox terminates"
+        let _ = std::fs::remove_file(&self.swap_path);
+        let _ = std::fs::remove_file(&self.reap_path);
+    }
+}
+
+fn pwrite_all(f: &File, mut buf: &[u8], mut off: u64) -> Result<()> {
+    while !buf.is_empty() {
+        // SAFETY: buf in-bounds.
+        let n = unsafe {
+            libc::pwrite(
+                f.as_raw_fd(),
+                buf.as_ptr() as *const libc::c_void,
+                buf.len(),
+                off as libc::off_t,
+            )
+        };
+        if n < 0 {
+            bail!("pwrite failed: {}", std::io::Error::last_os_error());
+        }
+        buf = &buf[n as usize..];
+        off += n as u64;
+    }
+    Ok(())
+}
+
+fn pread_all(f: &File, mut buf: &mut [u8], mut off: u64) -> Result<()> {
+    while !buf.is_empty() {
+        // SAFETY: buf in-bounds.
+        let n = unsafe {
+            libc::pread(
+                f.as_raw_fd(),
+                buf.as_mut_ptr() as *mut libc::c_void,
+                buf.len(),
+                off as libc::off_t,
+            )
+        };
+        if n < 0 {
+            bail!("pread failed: {}", std::io::Error::last_os_error());
+        }
+        if n == 0 {
+            bail!("pread hit EOF (offset {off})");
+        }
+        let n = n as usize;
+        buf = &mut buf[n..];
+        off += n as u64;
+    }
+    Ok(())
+}
+
+/// Map a gpa to a deterministic test pattern (test helper).
+pub fn test_pattern(gpa: Gpa) -> Vec<u8> {
+    let mut page = vec![0u8; PAGE_SIZE];
+    for (i, b) in page.iter_mut().enumerate() {
+        *b = ((gpa.0 >> 12) as u8).wrapping_add(i as u8);
+    }
+    page
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "qh-swapfile-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn swap_append_and_random_read() {
+        let dir = tmpdir("a");
+        let mut fs = SwapFileSet::create(&dir, 1).unwrap();
+        let p1 = test_pattern(Gpa(0x1000));
+        let p2 = test_pattern(Gpa(0x2000));
+        let s1 = fs.append_page(&p1).unwrap();
+        let s2 = fs.append_page(&p2).unwrap();
+        assert_eq!(s1, SwapSlot(0));
+        assert_eq!(s2, SwapSlot(PAGE_SIZE as u64));
+        let mut out = vec![0u8; PAGE_SIZE];
+        fs.read_page(s2, &mut out).unwrap();
+        assert_eq!(out, p2);
+        fs.read_page(s1, &mut out).unwrap();
+        assert_eq!(out, p1);
+    }
+
+    #[test]
+    fn reap_scatter_roundtrip() {
+        let dir = tmpdir("b");
+        let mut fs = SwapFileSet::create(&dir, 2).unwrap();
+        let pages: Vec<Vec<u8>> = (0..50)
+            .map(|i| test_pattern(Gpa(i * 0x1000)))
+            .collect();
+        let refs: Vec<&[u8]> = pages.iter().map(|p| p.as_slice()).collect();
+        let written = fs.write_reap(&refs).unwrap();
+        assert_eq!(written, 50 * PAGE_SIZE as u64);
+        assert_eq!(fs.reap_len().unwrap(), written);
+        let mut bufs: Vec<Vec<u8>> = (0..50).map(|_| vec![0u8; PAGE_SIZE]).collect();
+        let mut mrefs: Vec<&mut [u8]> = bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+        let read = fs.read_reap(&mut mrefs).unwrap();
+        assert_eq!(read, written);
+        assert_eq!(bufs, pages);
+    }
+
+    #[test]
+    fn reap_rewrite_truncates() {
+        let dir = tmpdir("c");
+        let mut fs = SwapFileSet::create(&dir, 3).unwrap();
+        let big: Vec<Vec<u8>> = (0..10).map(|i| test_pattern(Gpa(i * 0x1000))).collect();
+        let refs: Vec<&[u8]> = big.iter().map(|p| p.as_slice()).collect();
+        fs.write_reap(&refs).unwrap();
+        let small = [test_pattern(Gpa(0))];
+        let refs: Vec<&[u8]> = small.iter().map(|p| p.as_slice()).collect();
+        fs.write_reap(&refs).unwrap();
+        assert_eq!(fs.reap_len().unwrap(), PAGE_SIZE as u64);
+    }
+
+    #[test]
+    fn files_deleted_on_drop() {
+        let dir = tmpdir("d");
+        let (swap_path, reap_path);
+        {
+            let mut fs = SwapFileSet::create(&dir, 4).unwrap();
+            fs.append_page(&test_pattern(Gpa(0))).unwrap();
+            swap_path = dir.join("sandbox-4.swap");
+            reap_path = dir.join("sandbox-4.reap");
+            assert!(swap_path.exists());
+            assert!(reap_path.exists());
+        }
+        assert!(!swap_path.exists(), "swap file must be deleted on drop");
+        assert!(!reap_path.exists(), "REAP file must be deleted on drop");
+    }
+
+    #[test]
+    fn reset_swap_clears() {
+        let dir = tmpdir("e");
+        let mut fs = SwapFileSet::create(&dir, 5).unwrap();
+        fs.append_page(&test_pattern(Gpa(0))).unwrap();
+        assert_eq!(fs.swap_len(), PAGE_SIZE as u64);
+        fs.reset_swap().unwrap();
+        assert_eq!(fs.swap_len(), 0);
+        let s = fs.append_page(&test_pattern(Gpa(0x5000))).unwrap();
+        assert_eq!(s, SwapSlot(0));
+    }
+
+    #[test]
+    fn large_reap_batches_over_iov_max() {
+        // > 1024 iovecs exercises the batching loop.
+        let dir = tmpdir("f");
+        let mut fs = SwapFileSet::create(&dir, 6).unwrap();
+        let pages: Vec<Vec<u8>> = (0..1500)
+            .map(|i| test_pattern(Gpa(i * 0x1000)))
+            .collect();
+        let refs: Vec<&[u8]> = pages.iter().map(|p| p.as_slice()).collect();
+        let written = fs.write_reap(&refs).unwrap();
+        assert_eq!(written, 1500 * PAGE_SIZE as u64);
+        let mut bufs: Vec<Vec<u8>> = (0..1500).map(|_| vec![0u8; PAGE_SIZE]).collect();
+        let mut mrefs: Vec<&mut [u8]> = bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+        fs.read_reap(&mut mrefs).unwrap();
+        assert_eq!(bufs, pages);
+    }
+}

@@ -1,0 +1,29 @@
+//! The Swapping Manager (§3.4, Fig. 5).
+//!
+//! Each sandbox owns **two real files** on disk — a swap file for
+//! page-fault based swap-in and a REAP file for batch prefetch — "dedicated
+//! for one sandbox and won't be shared between sandboxes to mitigate
+//! potential secure vulnerability; these files are deleted when the sandbox
+//! terminates".
+//!
+//! * [`file`] — per-sandbox swap/REAP file management (real file I/O,
+//!   `pwritev`/`preadv` scatter-gather).
+//! * [`swap_mgr`] — page-fault based swap-out and swap-in (§3.4.1): page
+//!   table walk, Not-Present + custom bit #9, gpa-keyed dedup hash table,
+//!   madvise return.
+//! * [`reap`] — REAP record-and-prefetch (§3.4.2): working-set recording on
+//!   the first post-hibernate request, scatter `pwritev` on REAP swap-out,
+//!   one batched sequential `preadv` prefetch on wake.
+//!
+//! Device time (random vs sequential SSD reads — the asymmetry REAP
+//! exploits) is charged to the virtual clock by the [`crate::simtime`] cost
+//! model; the data itself really round-trips through the files and is
+//! integrity-checked in tests.
+
+pub mod file;
+pub mod reap;
+pub mod swap_mgr;
+
+pub use file::SwapFileSet;
+pub use reap::{ReapRecorder, ReapState};
+pub use swap_mgr::{SwapMgr, SwapOutReport, SwapStats};

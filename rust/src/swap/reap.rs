@@ -1,0 +1,172 @@
+//! REAP lifecycle tracking (§3.4.2): Record-and-Prefetch state machine and
+//! working-set metrics.
+//!
+//! The mechanics of REAP I/O live in [`super::swap_mgr`] (the working set is
+//! implicit in the page tables: after a full swap-out, the only present anon
+//! pages are the ones the sample request faulted back). This module tracks
+//! the *protocol* state — has a record pass happened? is the container
+//! currently serving its sample request? — and the §3.4.1 working-set
+//! statistics ("page fault based swap-in only loads 30% to 90% swap-out
+//! pages"; Node.js hello: ~10 MB swapped out, ~4 MB swapped back).
+
+use crate::PAGE_SIZE;
+
+/// Where a sandbox is in the REAP protocol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReapState {
+    /// REAP disabled by policy: every hibernate is a full page-fault
+    /// swap-out, every wake is demand-driven.
+    Disabled,
+    /// No record yet: the first hibernate must use the page-fault swap-out,
+    /// and the next request doubles as the REAP **sample request**.
+    NeedRecord,
+    /// Sample request in flight: page faults are recording the working set.
+    Recording,
+    /// A REAP image exists: hibernates use REAP swap-out, wakes prefetch.
+    Recorded,
+}
+
+/// Tracks REAP protocol state plus working-set telemetry for one sandbox.
+#[derive(Debug)]
+pub struct ReapRecorder {
+    state: ReapState,
+    /// Pages written by the last full swap-out.
+    pub swapped_out_pages: u64,
+    /// Pages faulted back during the recording (sample) request.
+    pub recorded_pages: u64,
+}
+
+impl ReapRecorder {
+    pub fn new(enabled: bool) -> Self {
+        Self {
+            state: if enabled {
+                ReapState::NeedRecord
+            } else {
+                ReapState::Disabled
+            },
+            swapped_out_pages: 0,
+            recorded_pages: 0,
+        }
+    }
+
+    pub fn state(&self) -> ReapState {
+        self.state
+    }
+
+    /// A full page-fault swap-out happened (`pages` unique pages written).
+    pub fn on_full_swapout(&mut self, pages: u64) {
+        self.swapped_out_pages = pages;
+        self.recorded_pages = 0;
+        if self.state != ReapState::Disabled {
+            self.state = ReapState::NeedRecord;
+        }
+    }
+
+    /// First request after a hibernate begins: start recording if needed.
+    /// Returns true if this request is the sample request.
+    pub fn on_wake_request(&mut self) -> bool {
+        if self.state == ReapState::NeedRecord {
+            self.state = ReapState::Recording;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// A page fault brought a page in while recording.
+    pub fn on_fault_in(&mut self) {
+        if self.state == ReapState::Recording {
+            self.recorded_pages += 1;
+        }
+    }
+
+    /// The sample request finished: the working set is now implicit in the
+    /// page tables and the next hibernate may take the REAP path.
+    pub fn on_request_done(&mut self) {
+        if self.state == ReapState::Recording {
+            self.state = ReapState::Recorded;
+        }
+    }
+
+    /// Should the next hibernate use REAP swap-out?
+    pub fn use_reap_swapout(&self) -> bool {
+        self.state == ReapState::Recorded
+    }
+
+    /// Fraction of swapped-out pages the request actually needed
+    /// (§3.4.1's 30–90% observation). None before any record.
+    pub fn working_set_fraction(&self) -> Option<f64> {
+        if self.swapped_out_pages == 0 {
+            return None;
+        }
+        Some(self.recorded_pages as f64 / self.swapped_out_pages as f64)
+    }
+
+    pub fn swapped_out_bytes(&self) -> u64 {
+        self.swapped_out_pages * PAGE_SIZE as u64
+    }
+
+    pub fn recorded_bytes(&self) -> u64 {
+        self.recorded_pages * PAGE_SIZE as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn protocol_happy_path() {
+        let mut r = ReapRecorder::new(true);
+        assert_eq!(r.state(), ReapState::NeedRecord);
+        r.on_full_swapout(1000);
+        assert!(!r.use_reap_swapout(), "first hibernate is page-fault based");
+        assert!(r.on_wake_request(), "first wake request is the sample");
+        for _ in 0..400 {
+            r.on_fault_in();
+        }
+        r.on_request_done();
+        assert_eq!(r.state(), ReapState::Recorded);
+        assert!(r.use_reap_swapout());
+        assert_eq!(r.working_set_fraction(), Some(0.4));
+        assert_eq!(r.swapped_out_bytes(), 1000 * 4096);
+        assert_eq!(r.recorded_bytes(), 400 * 4096);
+    }
+
+    #[test]
+    fn disabled_never_records() {
+        let mut r = ReapRecorder::new(false);
+        r.on_full_swapout(100);
+        assert!(!r.on_wake_request());
+        r.on_fault_in();
+        r.on_request_done();
+        assert_eq!(r.state(), ReapState::Disabled);
+        assert!(!r.use_reap_swapout());
+        assert_eq!(r.recorded_pages, 0);
+    }
+
+    #[test]
+    fn full_swapout_resets_record() {
+        let mut r = ReapRecorder::new(true);
+        r.on_full_swapout(100);
+        r.on_wake_request();
+        for _ in 0..30 {
+            r.on_fault_in();
+        }
+        r.on_request_done();
+        assert!(r.use_reap_swapout());
+        // Platform chose a full swap-out again (e.g. policy): re-record.
+        r.on_full_swapout(120);
+        assert!(!r.use_reap_swapout());
+        assert_eq!(r.state(), ReapState::NeedRecord);
+    }
+
+    #[test]
+    fn subsequent_requests_not_sampled() {
+        let mut r = ReapRecorder::new(true);
+        r.on_full_swapout(10);
+        assert!(r.on_wake_request());
+        r.on_request_done();
+        assert!(!r.on_wake_request(), "already recorded");
+    }
+}

@@ -1,0 +1,571 @@
+//! Page-fault based swap-out / swap-in (§3.4.1) — the Swapping Mgr of
+//! Fig. 5.
+//!
+//! Swap-out (applications already paused by the SIGSTOP handler, so no
+//! race-condition handling is needed — §2.3):
+//! 1. walk all guest page tables, select **anonymous present** pages;
+//! 2. mark each PTE Not-Present and set custom **bit #9**;
+//! 3. de-duplicate by guest-physical address in a hash table (a gpa mapped
+//!    from several page tables is written once);
+//! 4. write the page images to the per-sandbox swap file, recording each
+//!    page's file offset in the hash table;
+//! 5. return the pages to the host with `madvise(MADV_DONTNEED)`.
+//!
+//! Swap-in (page-fault path): a guest access to a bit-#9 PTE vm-exits,
+//! reads the page image back with a random `pread`, clears bit #9 and
+//! re-marks Present. Each fault costs guest fault handling + a guest/host
+//! mode switch (15 µs) + a random 4 KiB device read — the cost stack REAP
+//! exists to avoid.
+
+use super::file::{SwapFileSet, SwapSlot};
+use crate::mem::host::HostMemory;
+use crate::mem::page_table::PageTable;
+use crate::mem::{Gpa, Gva};
+use crate::simtime::{Clock, CostModel};
+use crate::PAGE_SIZE;
+use anyhow::{bail, Result};
+use std::collections::{HashMap, HashSet};
+
+/// Outcome of one swap-out pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SwapOutReport {
+    /// Distinct pages written to the swap file.
+    pub unique_pages: u64,
+    /// PTEs marked swapped (≥ unique_pages when page tables share frames).
+    pub ptes_marked: u64,
+    /// Bytes written to the swap file.
+    pub bytes_written: u64,
+    /// Pages whose host commitment was dropped.
+    pub pages_discarded: u64,
+}
+
+/// Cumulative counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SwapStats {
+    pub swapouts: u64,
+    pub pages_swapped_out: u64,
+    pub fault_swapins: u64,
+    pub pages_faulted_in: u64,
+    pub reap_swapouts: u64,
+    pub reap_pages_out: u64,
+    pub reap_swapins: u64,
+    pub reap_pages_in: u64,
+}
+
+/// Per-sandbox swapping manager.
+pub struct SwapMgr {
+    files: SwapFileSet,
+    /// The de-duplication hash table: gpa → swap-file slot (§3.4.1 step 2c
+    /// and 3). Entries persist until the next full swap-out resets the file.
+    slots: HashMap<u64, SwapSlot>,
+    /// gpas restored to host memory since the last swap-out (a second PTE
+    /// faulting on an already-loaded frame skips the device read).
+    resident: HashSet<u64>,
+    /// Host swap-readahead window over the swap file: `[start, end)` byte
+    /// offsets already fetched into the page cache by the last cluster read.
+    ra_window: (u64, u64),
+    /// REAP working set in record order (gpas), if a REAP image exists.
+    reap_set: Vec<Gpa>,
+    cost: CostModel,
+    stats: SwapStats,
+}
+
+impl SwapMgr {
+    pub fn new(files: SwapFileSet, cost: CostModel) -> Self {
+        Self {
+            files,
+            slots: HashMap::new(),
+            resident: HashSet::new(),
+            ra_window: (0, 0),
+            reap_set: Vec::new(),
+            cost,
+            stats: SwapStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> SwapStats {
+        self.stats
+    }
+
+    pub fn swapped_bytes(&self) -> u64 {
+        self.files.swap_len()
+    }
+
+    pub fn reap_set_pages(&self) -> u64 {
+        self.reap_set.len() as u64
+    }
+
+    /// Page-fault based swap-out of every anonymous present page in
+    /// `tables` (deflation step #3). Guest must be paused.
+    ///
+    /// Pages still bit-#9-marked from a *previous* cycle (never faulted
+    /// back) keep their images: the swap file is rewritten, so their old
+    /// images are carried over into the new file first. Without this a
+    /// second full swap-out would orphan them (caught by the
+    /// `prop_swap` interleaving property).
+    pub fn swap_out(
+        &mut self,
+        tables: &mut [&mut PageTable],
+        host: &HostMemory,
+        clock: &Clock,
+    ) -> Result<SwapOutReport> {
+        let mut report = SwapOutReport::default();
+
+        // Classify by gpa: committed frames are written from memory;
+        // uncommitted-but-swap-marked frames carry over from the old file.
+        let expected = tables.iter().map(|t| t.present_count() as usize).sum();
+        let mut from_memory: Vec<Gpa> = Vec::with_capacity(expected);
+        let mut carry: Vec<(Gpa, Vec<u8>)> = Vec::new();
+        let mut seen = HashSet::with_capacity(expected);
+        for pt in tables.iter() {
+            pt.for_each(|_gva, pte| {
+                if pte.is_file() || (!pte.present() && !pte.swapped()) {
+                    return;
+                }
+                let gpa = pte.gpa();
+                if pte.present() {
+                    report.ptes_marked += 1;
+                }
+                if !seen.insert(gpa.0) {
+                    return;
+                }
+                if host.is_committed(gpa) {
+                    from_memory.push(gpa);
+                } else if let Some(&slot) = self.slots.get(&gpa.0) {
+                    let mut buf = vec![0u8; PAGE_SIZE];
+                    if self.files.read_page(slot, &mut buf).is_ok() {
+                        carry.push((gpa, buf));
+                    }
+                }
+            });
+        }
+
+        // Fresh cycle: rewrite the file, rebuild the slot table.
+        self.files.reset_swap()?;
+        self.slots.clear();
+        self.resident.clear();
+        self.ra_window = (0, 0);
+        self.reap_set.clear();
+
+        // Mark every anon PTE swapped (present ones transition; previously
+        // swapped ones stay marked).
+        for pt in tables.iter_mut() {
+            pt.for_each_mut(|_gva, pte| {
+                if pte.present() && !pte.is_file() {
+                    pte.to_swapped()
+                } else {
+                    pte
+                }
+            });
+        }
+
+        // Step 3: write page images, record offsets. One scatter `pwritev`
+        // straight out of guest-physical memory (§Perf #1) — the guest is
+        // paused, so the frames are stable for the duration of the call.
+        let page_refs: Vec<&[u8]> = from_memory
+            .iter()
+            // SAFETY: frames owned by this sandbox; guest paused.
+            .map(|&gpa| unsafe {
+                std::slice::from_raw_parts(host.page_ptr(gpa), PAGE_SIZE)
+            })
+            .chain(carry.iter().map(|(_, image)| image.as_slice()))
+            .collect();
+        let start = self.files.append_pages(&page_refs)?;
+        for (i, gpa) in from_memory
+            .iter()
+            .chain(carry.iter().map(|(g, _)| g))
+            .enumerate()
+        {
+            self.slots
+                .insert(gpa.0, SwapSlot(start.0 + (i * PAGE_SIZE) as u64));
+        }
+        report.unique_pages = from_memory.len() as u64;
+        report.bytes_written =
+            (from_memory.len() + carry.len()) as u64 * PAGE_SIZE as u64;
+        clock.charge(self.cost.seq_write_ns(report.bytes_written));
+
+        // Step 4: return the memory to the host.
+        report.pages_discarded = host.discard_pages(&from_memory)?;
+        clock.charge(self.cost.madvise_ns(report.unique_pages));
+
+        self.stats.swapouts += 1;
+        self.stats.pages_swapped_out += report.unique_pages;
+        Ok(report)
+    }
+
+    /// Handle a page fault on a bit-#9 PTE: load the page image back and
+    /// re-present the entry. Returns the number of device reads performed
+    /// (0 when the frame was already restored through another PTE).
+    pub fn fault_swap_in(
+        &mut self,
+        pt: &mut PageTable,
+        gva: Gva,
+        host: &HostMemory,
+        clock: &Clock,
+    ) -> Result<u64> {
+        let pte = pt.get(gva);
+        if !pte.swapped() {
+            bail!("fault_swap_in on non-swapped pte {pte:?} at {gva:?}");
+        }
+        let gpa = pte.gpa();
+        // Fault handling + one guest→host→guest round trip, always.
+        clock.charge(self.cost.page_fault_handling_ns + self.cost.guest_host_switch_ns);
+        let mut reads = 0;
+        if !self.resident.contains(&gpa.0) {
+            let Some(&slot) = self.slots.get(&gpa.0) else {
+                bail!("swapped pte {pte:?} has no swap slot");
+            };
+            // §Perf #3: pread straight into the guest frame, no bounce copy.
+            self.files.read_page_into(slot, host.page_ptr(gpa))?;
+            host.note_commit(gpa);
+            // Device cost with host swap readahead: a hit inside the
+            // current readahead window is already in the page cache; a miss
+            // costs one cluster fill. Truly random access degenerates to
+            // one cluster fill per fault (≈ the paper's 100 MB/s random
+            // measurement); in-order streams amortize 32×.
+            let (ra_start, ra_end) = self.ra_window;
+            if !(ra_start..ra_end).contains(&slot.0) {
+                clock.charge(self.cost.readahead_cluster_ns());
+                self.ra_window = (
+                    slot.0,
+                    slot.0 + CostModel::READAHEAD_PAGES * PAGE_SIZE as u64,
+                );
+            }
+            self.resident.insert(gpa.0);
+            reads = 1;
+            self.stats.pages_faulted_in += 1;
+        }
+        pt.update(gva, |p| p.to_present())
+            .expect("pte vanished during swap-in");
+        self.stats.fault_swapins += 1;
+        Ok(reads)
+    }
+
+    /// REAP swap-out (§3.4.2): the Woken-up container hibernates again;
+    /// every **present anonymous** page — i.e. exactly the working set that
+    /// was faulted back in, plus request-time allocations — is written to
+    /// the REAP file with one scatter `pwritev`, *without touching the
+    /// PTEs*, then the frames are madvised away. Untouched pages remain
+    /// bit-#9-marked against the original swap file.
+    pub fn reap_swap_out(
+        &mut self,
+        tables: &[&PageTable],
+        host: &HostMemory,
+        clock: &Clock,
+    ) -> Result<SwapOutReport> {
+        let mut report = SwapOutReport::default();
+        let mut seen = HashSet::new();
+        let mut working_set: Vec<Gpa> = Vec::new();
+        for pt in tables {
+            pt.for_each(|_gva, pte| {
+                if pte.present() && !pte.is_file() {
+                    report.ptes_marked += 1;
+                    let gpa = pte.gpa();
+                    if seen.insert(gpa.0) {
+                        working_set.push(gpa);
+                    }
+                }
+            });
+        }
+        // Scatter-gather directly out of guest-physical (= host virtual)
+        // memory: iovecs point at the live pages, zero copies.
+        let page_refs: Vec<&[u8]> = working_set
+            .iter()
+            // SAFETY: pages are owned by this sandbox and the guest is
+            // paused; the slices live for the duration of the call.
+            .map(|&gpa| unsafe {
+                std::slice::from_raw_parts(host.page_ptr(gpa), PAGE_SIZE)
+            })
+            .collect();
+        report.bytes_written = self.files.write_reap(&page_refs)?;
+        report.unique_pages = working_set.len() as u64;
+        clock.charge(self.cost.seq_write_ns(report.bytes_written));
+
+        report.pages_discarded = host.discard_pages(&working_set)?;
+        clock.charge(self.cost.madvise_ns(report.unique_pages));
+        self.resident.clear();
+
+        self.reap_set = working_set;
+        self.stats.reap_swapouts += 1;
+        self.stats.reap_pages_out += report.unique_pages;
+        Ok(report)
+    }
+
+    /// REAP swap-in (§3.4.2): one batched sequential `preadv` straight into
+    /// the recorded frames, then the guest resumes with its working set hot.
+    /// Returns pages prefetched.
+    pub fn reap_swap_in(&mut self, host: &HostMemory, clock: &Clock) -> Result<u64> {
+        if self.reap_set.is_empty() {
+            return Ok(0);
+        }
+        let mut bufs: Vec<&mut [u8]> = self
+            .reap_set
+            .iter()
+            // SAFETY: distinct frames owned by this sandbox; guest paused.
+            .map(|&gpa| unsafe {
+                std::slice::from_raw_parts_mut(host.page_ptr(gpa), PAGE_SIZE)
+            })
+            .collect();
+        let bytes = self.files.read_reap(&mut bufs)?;
+        for &gpa in &self.reap_set {
+            host.note_commit(gpa);
+            self.resident.insert(gpa.0);
+        }
+        clock.charge(self.cost.seq_read_ns(bytes));
+        let pages = self.reap_set.len() as u64;
+        self.stats.reap_swapins += 1;
+        self.stats.reap_pages_in += pages;
+        Ok(pages)
+    }
+
+    /// Does a REAP image exist (i.e. has a record/REAP-hibernate cycle
+    /// completed)?
+    pub fn has_reap_image(&self) -> bool {
+        !self.reap_set.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::bitmap_alloc::BitmapPageAllocator;
+    use crate::mem::page_table::Pte;
+    use crate::mem::buddy::BuddyAllocator;
+    use crate::mem::host::test_region;
+    use std::path::PathBuf;
+    use std::sync::Arc;
+
+    struct Rig {
+        host: Arc<HostMemory>,
+        alloc: Arc<BitmapPageAllocator>,
+        mgr: SwapMgr,
+        clock: Clock,
+    }
+
+    fn rig(tag: &str) -> Rig {
+        let host = Arc::new(test_region(64));
+        let len = host.size() as u64;
+        let heap = Arc::new(BuddyAllocator::new(host.clone(), 0, len).unwrap());
+        let alloc = Arc::new(BitmapPageAllocator::new(host.clone(), heap));
+        let dir = PathBuf::from(std::env::temp_dir())
+            .join(format!("qh-swapmgr-{tag}-{}", std::process::id()));
+        let files = SwapFileSet::create(&dir, 0).unwrap();
+        Rig {
+            host,
+            alloc,
+            mgr: SwapMgr::new(files, CostModel::paper()),
+            clock: Clock::new(),
+        }
+    }
+
+    /// Map `n` anon pages with verifiable contents; returns (pt, gpas, sums).
+    fn populate(r: &Rig, n: u64) -> (PageTable, Vec<Gpa>, Vec<u64>) {
+        let mut pt = PageTable::new();
+        let mut gpas = Vec::new();
+        let mut sums = Vec::new();
+        for i in 0..n {
+            let gpa = r.alloc.alloc_page().unwrap();
+            r.host.fill_page(gpa, 0xAA00 + i).unwrap();
+            pt.map(Gva(i * 0x1000), Pte::new_present(gpa, Pte::WRITABLE));
+            sums.push(r.host.checksum_page(gpa).unwrap());
+            gpas.push(gpa);
+        }
+        (pt, gpas, sums)
+    }
+
+    #[test]
+    fn swap_out_marks_writes_discards() {
+        let mut r = rig("basic");
+        let (mut pt, gpas, _) = populate(&r, 30);
+        let committed_before = r.host.committed_pages();
+        let rpt = r
+            .mgr
+            .swap_out(&mut [&mut pt], &r.host, &r.clock)
+            .unwrap();
+        assert_eq!(rpt.unique_pages, 30);
+        assert_eq!(rpt.ptes_marked, 30);
+        assert_eq!(rpt.pages_discarded, 30);
+        assert_eq!(pt.present_count(), 0);
+        assert_eq!(pt.swapped_count(), 30);
+        assert_eq!(r.host.committed_pages(), committed_before - 30);
+        assert_eq!(r.mgr.swapped_bytes(), 30 * PAGE_SIZE as u64);
+        // All gpas preserved in the PTEs for the dedup/lookup path.
+        pt.for_each(|gva, pte| {
+            let i = (gva.0 / 0x1000) as usize;
+            assert_eq!(pte.gpa(), gpas[i]);
+        });
+    }
+
+    #[test]
+    fn fault_swap_in_restores_content() {
+        let mut r = rig("faultin");
+        let (mut pt, gpas, sums) = populate(&r, 10);
+        r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        // Fault page 3 back in.
+        let reads = r
+            .mgr
+            .fault_swap_in(&mut pt, Gva(3 * 0x1000), &r.host, &r.clock)
+            .unwrap();
+        assert_eq!(reads, 1);
+        let pte = pt.get(Gva(3 * 0x1000));
+        assert!(pte.present() && !pte.swapped());
+        assert_eq!(r.host.checksum_page(gpas[3]).unwrap(), sums[3], "content survives");
+        assert_eq!(pt.present_count(), 1);
+        assert_eq!(pt.swapped_count(), 9);
+    }
+
+    #[test]
+    fn fault_costs_charged_per_paper() {
+        let mut r = rig("cost");
+        let (mut pt, _, _) = populate(&r, 2);
+        r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        let (c0, _) = r.clock.take();
+        assert!(c0 > 0, "swap-out charged write+madvise");
+        r.mgr
+            .fault_swap_in(&mut pt, Gva(0), &r.host, &r.clock)
+            .unwrap();
+        let (c1, _) = r.clock.take();
+        let m = CostModel::paper();
+        assert_eq!(
+            c1,
+            m.page_fault_handling_ns + m.guest_host_switch_ns + m.readahead_cluster_ns()
+        );
+        // The next in-order fault hits the readahead window: no device cost.
+        r.mgr
+            .fault_swap_in(&mut pt, Gva(0x1000), &r.host, &r.clock)
+            .unwrap();
+        let (c2, _) = r.clock.take();
+        assert_eq!(c2, m.page_fault_handling_ns + m.guest_host_switch_ns);
+    }
+
+    #[test]
+    fn shared_frame_deduped_and_single_read() {
+        let mut r = rig("dedup");
+        // Two page tables mapping the same frame (post-clone COW).
+        let gpa = r.alloc.alloc_page().unwrap();
+        r.host.fill_page(gpa, 0x77).unwrap();
+        r.alloc.inc_ref(gpa);
+        let sum = r.host.checksum_page(gpa).unwrap();
+        let mut pt1 = PageTable::new();
+        let mut pt2 = PageTable::new();
+        pt1.map(Gva(0x1000), Pte::new_present(gpa, Pte::COW));
+        pt2.map(Gva(0x8000), Pte::new_present(gpa, Pte::COW));
+        let rpt = r
+            .mgr
+            .swap_out(&mut [&mut pt1, &mut pt2], &r.host, &r.clock)
+            .unwrap();
+        assert_eq!(rpt.ptes_marked, 2);
+        assert_eq!(rpt.unique_pages, 1, "hash table dedups the shared frame");
+        // First fault does the device read; the second is read-free.
+        assert_eq!(
+            r.mgr.fault_swap_in(&mut pt1, Gva(0x1000), &r.host, &r.clock).unwrap(),
+            1
+        );
+        assert_eq!(
+            r.mgr.fault_swap_in(&mut pt2, Gva(0x8000), &r.host, &r.clock).unwrap(),
+            0,
+            "frame already resident"
+        );
+        assert_eq!(r.host.checksum_page(gpa).unwrap(), sum);
+    }
+
+    #[test]
+    fn file_pages_excluded_from_swap() {
+        let mut r = rig("file");
+        let (mut pt, _, _) = populate(&r, 5);
+        let fgpa = r.alloc.alloc_page().unwrap();
+        r.host.fill_page(fgpa, 0xF11E).unwrap();
+        pt.map(Gva(0x100000), Pte::new_present(fgpa, Pte::FILE));
+        let rpt = r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        assert_eq!(rpt.unique_pages, 5, "file-backed page not swapped");
+        assert!(pt.get(Gva(0x100000)).present(), "file pte untouched");
+    }
+
+    #[test]
+    fn reap_cycle_roundtrip() {
+        let mut r = rig("reap");
+        let (mut pt, gpas, sums) = populate(&r, 20);
+        // 1st hibernate: full page-fault swap-out.
+        r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        // Sample request touches pages 0..8 (the working set).
+        for i in 0..8u64 {
+            r.mgr
+                .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
+                .unwrap();
+        }
+        // REAP hibernate from Woken-up.
+        let rpt = r.mgr.reap_swap_out(&[&pt], &r.host, &r.clock).unwrap();
+        assert_eq!(rpt.unique_pages, 8, "only the working set");
+        assert!(r.mgr.has_reap_image());
+        assert_eq!(pt.present_count(), 8, "REAP swap-out leaves PTEs present");
+        // Host memory for the working set is gone.
+        for i in 0..8usize {
+            assert!(!r.host.is_committed(gpas[i]));
+        }
+        // REAP wake: batch prefetch restores every working-set page.
+        let n = r.mgr.reap_swap_in(&r.host, &r.clock).unwrap();
+        assert_eq!(n, 8);
+        for i in 0..8usize {
+            assert_eq!(r.host.checksum_page(gpas[i]).unwrap(), sums[i]);
+        }
+        // A straggler outside the working set still swap-ins by fault.
+        r.mgr
+            .fault_swap_in(&mut pt, Gva(15 * 0x1000), &r.host, &r.clock)
+            .unwrap();
+        assert_eq!(r.host.checksum_page(gpas[15]).unwrap(), sums[15]);
+    }
+
+    #[test]
+    fn reap_cheaper_than_faults_for_same_working_set() {
+        // The §3.4 claim, at the mechanism level: total charged time of a
+        // REAP prefetch ≪ the same pages faulted one by one.
+        let mut r = rig("reapcost");
+        let (mut pt, _, _) = populate(&r, 256);
+        r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        for i in 0..256u64 {
+            r.mgr
+                .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
+                .unwrap();
+        }
+        r.clock.take();
+        // Fault path cost for 256 pages:
+        let fault_cost = 256 * CostModel::paper().pagefault_swapin_ns();
+        // REAP path:
+        r.mgr.reap_swap_out(&[&pt], &r.host, &r.clock).unwrap();
+        r.clock.take();
+        r.mgr.reap_swap_in(&r.host, &r.clock).unwrap();
+        let (reap_cost, _) = r.clock.take();
+        assert!(
+            fault_cost > 10 * reap_cost,
+            "fault {fault_cost} vs reap {reap_cost}"
+        );
+    }
+
+    #[test]
+    fn second_swap_out_resets_state() {
+        let mut r = rig("cycle2");
+        let (mut pt, _, sums) = populate(&r, 6);
+        r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        for i in 0..6u64 {
+            r.mgr
+                .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
+                .unwrap();
+        }
+        // Everything is back; hibernate again via the page-fault path.
+        let rpt = r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        assert_eq!(rpt.unique_pages, 6);
+        for i in 0..6u64 {
+            r.mgr
+                .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
+                .unwrap();
+        }
+        let gpas: Vec<Gpa> = {
+            let mut v = Vec::new();
+            pt.for_each(|_, pte| v.push(pte.gpa()));
+            v
+        };
+        for (i, gpa) in gpas.iter().enumerate() {
+            assert_eq!(r.host.checksum_page(*gpa).unwrap(), sums[i]);
+        }
+    }
+}

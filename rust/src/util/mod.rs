@@ -1,0 +1,82 @@
+//! Small shared utilities: deterministic RNG, statistics, byte formatting,
+//! a minimal property-testing harness and a hand-rolled JSON emitter.
+//!
+//! The offline crate registry has no `rand`, `serde`, `proptest` or
+//! `criterion`, so these are in-repo (see DESIGN.md §8).
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Format a byte count with binary units (`12.3 MiB`).
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut unit = 0;
+    while v >= 1024.0 && unit < UNITS.len() - 1 {
+        v /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{} {}", bytes, UNITS[0])
+    } else {
+        format!("{:.1} {}", v, UNITS[unit])
+    }
+}
+
+/// Format nanoseconds as an adaptive human duration (`1.25 ms`, `17.3 µs`).
+pub fn human_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.2} s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.1} µs", ns as f64 / 1e3)
+    } else {
+        format!("{} ns", ns)
+    }
+}
+
+/// Round `v` up to the next multiple of `align` (power-of-two not required).
+pub fn align_up(v: u64, align: u64) -> u64 {
+    debug_assert!(align > 0);
+    v.div_ceil(align) * align
+}
+
+/// Round `v` down to a multiple of `align`.
+pub fn align_down(v: u64, align: u64) -> u64 {
+    debug_assert!(align > 0);
+    v - v % align
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(0), "0 B");
+        assert_eq!(human_bytes(1023), "1023 B");
+        assert_eq!(human_bytes(1024), "1.0 KiB");
+        assert_eq!(human_bytes(4 << 20), "4.0 MiB");
+        assert_eq!(human_bytes(5 * (1 << 30)), "5.0 GiB");
+    }
+
+    #[test]
+    fn human_ns_units() {
+        assert_eq!(human_ns(12), "12 ns");
+        assert_eq!(human_ns(1500), "1.5 µs");
+        assert_eq!(human_ns(2_500_000), "2.50 ms");
+        assert_eq!(human_ns(3_000_000_000), "3.00 s");
+    }
+
+    #[test]
+    fn align_roundtrip() {
+        assert_eq!(align_up(0, 4096), 0);
+        assert_eq!(align_up(1, 4096), 4096);
+        assert_eq!(align_up(4096, 4096), 4096);
+        assert_eq!(align_down(4097, 4096), 4096);
+        assert_eq!(align_up(10, 3), 12);
+    }
+}

@@ -1,0 +1,75 @@
+//! Minimal property-testing harness (the registry has no proptest).
+//!
+//! A property is run over `cases` deterministic RNG-seeded inputs; on
+//! failure the harness retries with the failing seed and reports it so the
+//! case can be replayed (`PROP_SEED=<n> cargo test ...`).
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+pub struct PropConfig {
+    pub cases: u32,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        let seed = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Self { cases: 128, seed }
+    }
+}
+
+/// Run `prop` over `cfg.cases` cases. Each case gets its own RNG derived
+/// from the base seed; a panic is augmented with the case seed.
+pub fn check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Rng),
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property `{name}` failed at case {case} (replay with PROP_SEED={case_seed})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Shorthand with the default config.
+pub fn check_default<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng),
+{
+    check(name, PropConfig::default(), prop);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially() {
+        check_default("tautology", |rng| {
+            let x = rng.below(100);
+            assert!(x < 100);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn reports_failures() {
+        check(
+            "always-false",
+            PropConfig { cases: 4, seed: 1 },
+            |_| panic!("boom"),
+        );
+    }
+}

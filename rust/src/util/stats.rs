@@ -1,0 +1,237 @@
+//! Latency/size statistics: summaries and fixed-bucket histograms.
+//!
+//! This powers the in-repo bench harness (the registry has no criterion):
+//! each bench collects samples, and `Summary` prints mean/p50/p95/p99 rows
+//! in the same grouping the paper's figures use.
+
+/// Online summary over `u64` samples (typically nanoseconds or bytes).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<u64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, v: u64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn extend(&mut self, vs: impl IntoIterator<Item = u64>) {
+        self.samples.extend(vs);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().map(|&v| v as f64).sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> u64 {
+        self.samples.iter().copied().min().unwrap_or(0)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.samples.iter().copied().max().unwrap_or(0)
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples.sort_unstable();
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile via nearest-rank on the sorted samples. `q` in `[0,100]`.
+    pub fn percentile(&mut self, q: f64) -> u64 {
+        if self.samples.is_empty() {
+            return 0;
+        }
+        self.ensure_sorted();
+        let rank = ((q / 100.0) * (self.samples.len() as f64 - 1.0)).round() as usize;
+        self.samples[rank.min(self.samples.len() - 1)]
+    }
+
+    pub fn p50(&mut self) -> u64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&mut self) -> u64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&mut self) -> u64 {
+        self.percentile(99.0)
+    }
+
+    /// Sample standard deviation.
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let mean = self.mean();
+        let var = self
+            .samples
+            .iter()
+            .map(|&v| {
+                let d = v as f64 - mean;
+                d * d
+            })
+            .sum::<f64>()
+            / (n as f64 - 1.0);
+        var.sqrt()
+    }
+
+    /// One-line report with a label, in time units.
+    pub fn report_ns(&mut self, label: &str) -> String {
+        use crate::util::human_ns;
+        format!(
+            "{label:<40} n={:<6} mean={:>10} p50={:>10} p95={:>10} p99={:>10} max={:>10}",
+            self.len(),
+            human_ns(self.mean() as u64),
+            human_ns(self.p50()),
+            human_ns(self.p95()),
+            human_ns(self.p99()),
+            human_ns(self.max()),
+        )
+    }
+}
+
+/// Log-scaled histogram (powers of two), cheap enough for the hot path.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: Vec<u64>, // bucket i counts values in [2^i, 2^(i+1))
+    count: u64,
+    sum: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: vec![0; 64],
+            count: 0,
+            sum: 0,
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        let idx = 64 - v.max(1).leading_zeros() as usize - 1;
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of bucket).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        u64::MAX
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let mut s = Summary::new();
+        s.extend([1, 2, 3, 4, 5, 6, 7, 8, 9, 10]);
+        assert_eq!(s.len(), 10);
+        assert!((s.mean() - 5.5).abs() < 1e-9);
+        assert_eq!(s.min(), 1);
+        assert_eq!(s.max(), 10);
+        assert_eq!(s.p50(), 6); // nearest-rank on 0-indexed
+        assert_eq!(s.percentile(0.0), 1);
+        assert_eq!(s.percentile(100.0), 10);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let mut s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.p99(), 0);
+        assert_eq!(s.stddev(), 0.0);
+    }
+
+    #[test]
+    fn stddev_known() {
+        let mut s = Summary::new();
+        s.extend([2, 4, 4, 4, 5, 5, 7, 9]);
+        // population stddev is 2; sample stddev = sqrt(32/7)
+        assert!((s.stddev() - (32.0f64 / 7.0).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 1000);
+        // p50 of 1..1000 is ~500 → bucket upper bound 512
+        assert_eq!(h.quantile(0.5), 512);
+        assert!(h.quantile(0.99) >= 512);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(10);
+        b.record(1000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+}

@@ -1,0 +1,12 @@
+//! The paper's evaluation workloads (§4): FunctionBench-style Python
+//! micro-benchmarks plus four language-runtime hello-worlds, expressed as
+//! [`spec::WorkloadSpec`] profiles whose *compute* is real (AOT-compiled
+//! JAX/Pallas payloads executed through PJRT) and whose *memory shape*
+//! (runtime binary size, init footprint, request working set) is calibrated
+//! to the paper's Fig. 6/7 readings (see DESIGN.md §5).
+
+pub mod functionbench;
+pub mod spec;
+
+pub use functionbench::{all_workloads, workload_by_name};
+pub use spec::{Lang, PayloadSpec, WorkloadSpec};

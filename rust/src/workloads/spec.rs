@@ -1,0 +1,187 @@
+//! Workload specification: the shape of a guest function.
+//!
+//! A workload is (a) a **language runtime profile** — binary size, init
+//! time, init memory; (b) an **application profile** — anonymous memory and
+//! the per-request working set; (c) a **payload** — the real compute, an
+//! AOT-compiled JAX/Pallas artifact executed through PJRT on every request.
+//!
+//! The memory-phase parameters are the knobs DESIGN.md §5 calibrates to the
+//! paper's Fig. 6/7; the invariants the paper's evaluation rests on (working
+//! set is a stable 30–90% subset; hibernate drops anon + file pages; REAP
+//! restores exactly the working set) all emerge from these.
+
+use crate::PAGE_SIZE;
+
+/// Guest language runtime (§4's four hello-world runtimes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Lang {
+    Python,
+    NodeJs,
+    Golang,
+    Java,
+}
+
+impl Lang {
+    pub fn name(self) -> &'static str {
+        match self {
+            Lang::Python => "python",
+            Lang::NodeJs => "nodejs",
+            Lang::Golang => "golang",
+            Lang::Java => "java",
+        }
+    }
+
+    /// The mmap'd runtime binary file name (one per language, so sandboxes
+    /// of the same language can share pages when policy allows).
+    pub fn binary_name(self) -> &'static str {
+        match self {
+            Lang::Python => "cpython-3.10.so",
+            Lang::NodeJs => "node-v16-libv8.so",
+            Lang::Golang => "golang-rt.a",
+            Lang::Java => "jvm-17-libjvm.so",
+        }
+    }
+}
+
+/// The real compute bound to a request: which AOT artifact to execute and
+/// with what batch of iterations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PayloadSpec {
+    /// Artifact name in `artifacts/manifest.json` (e.g. `float_operation`).
+    pub artifact: String,
+    /// Executions per request (scales compute time).
+    pub iterations: u32,
+}
+
+/// Full workload profile.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// Unique name ("nodejs-hello", "video-processing", ...).
+    pub name: String,
+    pub lang: Lang,
+    /// Language runtime binary size (bytes) — the §3.5 shareable mapping.
+    pub binary_bytes: u64,
+    /// Fraction of binary pages touched during runtime init.
+    pub binary_init_frac: f64,
+    /// Fraction of binary pages touched per request (code working set).
+    pub binary_request_frac: f64,
+    /// Virtual time for language-runtime + app initialization (ns).
+    pub init_ns: u64,
+    /// Anonymous pages committed during initialization (heap, arenas, JIT).
+    pub init_anon_pages: u64,
+    /// Fraction of init anon pages a request actually touches — the stable
+    /// REAP working set (paper §3.4.1: 30–90%).
+    pub request_ws_frac: f64,
+    /// Fresh anon pages allocated per request and freed afterwards (these
+    /// become the reclaimable free pages of deflation step #2).
+    pub request_scratch_pages: u64,
+    /// Virtual time for non-modeled request work (parsing, framework, ...).
+    pub request_extra_ns: u64,
+    /// The real compute payload (None = pure memory workload).
+    pub payload: Option<PayloadSpec>,
+    /// Guest processes (≥1; extra processes are clones sharing init pages
+    /// COW — exercises refcounts and swap-out dedup).
+    pub processes: usize,
+}
+
+impl WorkloadSpec {
+    pub fn binary_pages(&self) -> u64 {
+        self.binary_bytes.div_ceil(PAGE_SIZE as u64)
+    }
+
+    /// Pages of the binary touched during init.
+    pub fn binary_init_pages(&self) -> u64 {
+        ((self.binary_pages() as f64) * self.binary_init_frac).round() as u64
+    }
+
+    /// Pages of the binary a request touches.
+    pub fn binary_request_pages(&self) -> u64 {
+        ((self.binary_pages() as f64) * self.binary_request_frac).round() as u64
+    }
+
+    /// Anon pages of the init set a request touches (the REAP working set).
+    pub fn request_ws_pages(&self) -> u64 {
+        ((self.init_anon_pages as f64) * self.request_ws_frac).round() as u64
+    }
+
+    /// Rough expected warm anon footprint (bytes) — used in tests to sanity
+    /// check calibration, not by the mechanism.
+    pub fn expected_warm_anon_bytes(&self) -> u64 {
+        self.init_anon_pages * PAGE_SIZE as u64
+    }
+
+    /// Validate parameter sanity.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.name.is_empty() {
+            return Err("empty workload name".into());
+        }
+        for (label, f) in [
+            ("binary_init_frac", self.binary_init_frac),
+            ("binary_request_frac", self.binary_request_frac),
+            ("request_ws_frac", self.request_ws_frac),
+        ] {
+            if !(0.0..=1.0).contains(&f) {
+                return Err(format!("{label} = {f} out of [0,1]"));
+            }
+        }
+        if self.processes == 0 {
+            return Err("processes must be ≥ 1".into());
+        }
+        if self.init_anon_pages == 0 {
+            return Err("init_anon_pages must be > 0".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> WorkloadSpec {
+        WorkloadSpec {
+            name: "t".into(),
+            lang: Lang::Python,
+            binary_bytes: 10 * PAGE_SIZE as u64,
+            binary_init_frac: 0.5,
+            binary_request_frac: 0.2,
+            init_ns: 1_000_000,
+            init_anon_pages: 100,
+            request_ws_frac: 0.4,
+            request_scratch_pages: 10,
+            request_extra_ns: 0,
+            payload: None,
+            processes: 1,
+        }
+    }
+
+    #[test]
+    fn page_math() {
+        let s = spec();
+        assert_eq!(s.binary_pages(), 10);
+        assert_eq!(s.binary_init_pages(), 5);
+        assert_eq!(s.binary_request_pages(), 2);
+        assert_eq!(s.request_ws_pages(), 40);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_catches_bad_params() {
+        let mut s = spec();
+        s.request_ws_frac = 1.5;
+        assert!(s.validate().is_err());
+        let mut s = spec();
+        s.processes = 0;
+        assert!(s.validate().is_err());
+        let mut s = spec();
+        s.init_anon_pages = 0;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn binary_pages_round_up() {
+        let mut s = spec();
+        s.binary_bytes = PAGE_SIZE as u64 + 1;
+        assert_eq!(s.binary_pages(), 2);
+    }
+}

@@ -1,0 +1,168 @@
+//! Failure injection: the mechanism must fail loudly and safely when its
+//! environment misbehaves — truncated swap files, exhausted heaps, illegal
+//! lifecycle edges, and platform-level races.
+
+use quark_hibernate::config::SharingConfig;
+use quark_hibernate::container::sandbox::{Sandbox, SandboxServices};
+use quark_hibernate::container::NoopRunner;
+use quark_hibernate::mem::bitmap_alloc::BitmapPageAllocator;
+use quark_hibernate::mem::buddy::BuddyAllocator;
+use quark_hibernate::mem::host::HostMemory;
+use quark_hibernate::mem::page_table::{PageTable, Pte};
+use quark_hibernate::mem::Gva;
+use quark_hibernate::simtime::{Clock, CostModel};
+use quark_hibernate::swap::file::SwapFileSet;
+use quark_hibernate::swap::SwapMgr;
+use quark_hibernate::workloads::functionbench::{golang_hello, scaled_for_test};
+use std::sync::Arc;
+
+#[test]
+fn truncated_swap_file_is_detected_not_corrupting() {
+    // Simulate the host deleting/truncating the swap file behind the
+    // sandbox's back (disk pressure, operator error): the swap-in must
+    // error out, not return a zero page as real data.
+    let host = Arc::new(HostMemory::new(64 << 20).unwrap());
+    let heap = Arc::new(BuddyAllocator::new(host.clone(), 0, host.size() as u64).unwrap());
+    let alloc = BitmapPageAllocator::new(host.clone(), heap);
+    let dir = std::env::temp_dir().join(format!("qh-failinj-{}", std::process::id()));
+    let files = SwapFileSet::create(&dir, 1).unwrap();
+    let mut mgr = SwapMgr::new(files, CostModel::paper());
+    let clock = Clock::new();
+
+    let mut pt = PageTable::new();
+    for i in 0..8u64 {
+        let gpa = alloc.alloc_page().unwrap();
+        host.fill_page(gpa, i).unwrap();
+        pt.map(Gva(i * 0x1000), Pte::new_present(gpa, Pte::WRITABLE));
+    }
+    mgr.swap_out(&mut [&mut pt], &host, &clock).unwrap();
+
+    // Truncate the swap file out from under the manager.
+    let swap_path = dir.join("sandbox-1.swap");
+    std::fs::OpenOptions::new()
+        .write(true)
+        .truncate(true)
+        .open(&swap_path)
+        .unwrap();
+
+    let err = mgr
+        .fault_swap_in(&mut pt, Gva(0), &host, &clock)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("EOF") || msg.contains("pread"),
+        "unexpected error: {msg}"
+    );
+    // The PTE must still be swap-marked (no silent to_present on failure).
+    assert!(pt.get(Gva(0)).swapped());
+}
+
+#[test]
+fn heap_exhaustion_fails_cold_start_cleanly() {
+    // A host region too small for the workload: cold start must return an
+    // error (not panic), and the registry must not leak the host env.
+    let svc = SandboxServices::new_local(
+        16 << 20, // 16 MiB region: too small for kernel heap + app
+        CostModel::free(),
+        SharingConfig::default(),
+        Arc::new(NoopRunner),
+        "failinj-oom",
+    )
+    .unwrap();
+    let clock = Clock::new();
+    let spec = golang_hello(); // 11 MiB anon + binaries won't fit with heap carving
+    let mut failures = 0;
+    for id in 0..4 {
+        if Sandbox::cold_start(id, spec.clone(), svc.clone(), &clock).is_err() {
+            failures += 1;
+        }
+    }
+    assert!(failures > 0, "tiny region must eventually refuse cold starts");
+}
+
+#[test]
+fn illegal_lifecycle_edges_are_errors_not_corruption() {
+    let svc = SandboxServices::new_local(
+        512 << 20,
+        CostModel::free(),
+        SharingConfig::default(),
+        Arc::new(NoopRunner),
+        "failinj-edges",
+    )
+    .unwrap();
+    let clock = Clock::new();
+    let mut sb = Sandbox::cold_start(1, scaled_for_test(golang_hello(), 16), svc, &clock).unwrap();
+    // Warm: wake is illegal.
+    assert!(sb.wake(&clock).is_err());
+    // After the failed call the sandbox still works end to end.
+    sb.handle_request(&clock).unwrap();
+    sb.hibernate(&clock).unwrap();
+    // Double-terminate: second must fail (Dead is terminal).
+    sb.handle_request(&clock).unwrap();
+    sb.terminate().unwrap();
+    assert!(sb.terminate().is_err());
+    assert!(sb.handle_request(&clock).is_err());
+}
+
+#[test]
+fn signal_queue_storm_is_safe() {
+    // The platform spamming signals must net out per the coalescing rules
+    // and never wedge the sandbox.
+    use quark_hibernate::container::signal::ControlSignal;
+    let svc = SandboxServices::new_local(
+        512 << 20,
+        CostModel::free(),
+        SharingConfig::default(),
+        Arc::new(NoopRunner),
+        "failinj-signals",
+    )
+    .unwrap();
+    let clock = Clock::new();
+    let mut sb = Sandbox::cold_start(1, scaled_for_test(golang_hello(), 16), svc, &clock).unwrap();
+    sb.handle_request(&clock).unwrap();
+    for _ in 0..100 {
+        sb.signals.send(ControlSignal::Stop);
+        sb.signals.send(ControlSignal::Cont);
+    }
+    // All pairs cancel → nothing to do.
+    assert_eq!(sb.drain_signals(&clock).unwrap(), 0);
+    // One outstanding stop → exactly one hibernate.
+    sb.signals.send(ControlSignal::Stop);
+    sb.signals.send(ControlSignal::Stop); // coalesces
+    assert_eq!(sb.drain_signals(&clock).unwrap(), 1);
+    assert_eq!(
+        sb.state(),
+        quark_hibernate::container::state::ContainerState::Hibernate
+    );
+    // Cont-while-warm garbage after wake is dropped harmlessly.
+    sb.signals.send(ControlSignal::Cont);
+    assert_eq!(sb.drain_signals(&clock).unwrap(), 1);
+    sb.signals.send(ControlSignal::Cont);
+    assert_eq!(sb.drain_signals(&clock).unwrap(), 0, "already woken");
+    sb.handle_request(&clock).unwrap();
+}
+
+#[test]
+fn hostenv_exhaustion_reported() {
+    // Pod IP space is /16; creating past it must error. (Scaled probe: we
+    // drain the allocator by creating without releasing.)
+    use quark_hibernate::container::hostenv::{HostEnvCost, HostEnvRegistry};
+    let reg = HostEnvRegistry::new();
+    let clock = Clock::new();
+    let cost = HostEnvCost::default_split();
+    let mut envs = Vec::new();
+    let mut failed = false;
+    for i in 0..70_000u64 {
+        match reg.create(i, &[], 0, cost, &clock) {
+            Ok(e) => envs.push(e),
+            Err(_) => {
+                failed = true;
+                break;
+            }
+        }
+    }
+    assert!(failed, "address exhaustion must surface as an error");
+    for e in envs {
+        e.release().unwrap();
+    }
+}

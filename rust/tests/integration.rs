@@ -1,0 +1,204 @@
+//! Whole-mechanism integration tests: a sandbox through multiple
+//! hibernate/wake cycles with data-integrity, footprint and kernel
+//! cross-checks (mincore vs our commit accounting).
+
+use quark_hibernate::config::SharingConfig;
+use quark_hibernate::container::sandbox::{Sandbox, SandboxServices};
+use quark_hibernate::container::state::ContainerState;
+use quark_hibernate::container::NoopRunner;
+use quark_hibernate::simtime::{Clock, CostModel};
+use quark_hibernate::workloads::functionbench::{
+    golang_hello, java_hello, nodejs_hello, scaled_for_test,
+};
+use std::sync::Arc;
+
+fn svc(tag: &str, sharing: SharingConfig) -> Arc<SandboxServices> {
+    SandboxServices::new_local(
+        1 << 30,
+        CostModel::paper(),
+        sharing,
+        Arc::new(NoopRunner),
+        tag,
+    )
+    .unwrap()
+}
+
+#[test]
+fn full_lifecycle_with_footprint_checks() {
+    let svc = svc("int-lifecycle", SharingConfig::default());
+    let clock = Clock::new();
+    let spec = nodejs_hello(); // full scale: the QKernel resident floor is ~7% here
+    let mut sb = Sandbox::cold_start(1, spec, svc.clone(), &clock).unwrap();
+    assert_eq!(sb.state(), ContainerState::Warm);
+    sb.handle_request(&clock).unwrap();
+
+    let warm_pss = sb.footprint().total_bytes();
+    assert!(warm_pss > 0);
+
+    // Deflate: PSS must collapse (paper: to 7–25% of warm).
+    let rpt = sb.hibernate(&clock).unwrap();
+    assert!(rpt.pages_swapped_out > 0);
+    assert!(rpt.file_pages_released > 0);
+    let hib_pss = sb.footprint().total_bytes();
+    assert!(
+        hib_pss < warm_pss / 3,
+        "hibernate PSS {hib_pss} vs warm {warm_pss}"
+    );
+
+    // Demand wake: the working set comes back, contents verified inside
+    // (deterministic fill + swap-file round trip), footprint between.
+    let out = sb.handle_request(&clock).unwrap();
+    assert_eq!(out.from, ContainerState::Hibernate);
+    assert!(out.anon_faults > 0, "page-fault swap-in must happen");
+    assert!(out.sample_request);
+    let wok_pss = sb.footprint().total_bytes();
+    assert!(wok_pss > hib_pss && wok_pss < warm_pss);
+    assert_eq!(sb.state(), ContainerState::WokenUp);
+
+    // REAP cycle.
+    let rpt = sb.hibernate(&clock).unwrap();
+    assert!(rpt.used_reap, "second hibernate takes the REAP path");
+    let out = sb.handle_request(&clock).unwrap();
+    assert!(out.reap_prefetched > 0, "REAP prefetch must fire");
+    assert_eq!(out.anon_faults, 0, "working set fully prefetched");
+
+    sb.terminate().unwrap();
+    assert_eq!(sb.state(), ContainerState::Dead);
+}
+
+#[test]
+fn commit_accounting_matches_kernel_mincore() {
+    // Our committed-pages metric must agree with the real kernel's
+    // residency for the sandbox's memory (spot check on a small region).
+    let svc = svc("int-mincore", SharingConfig::default());
+    let clock = Clock::new();
+    let spec = golang_hello(); // full scale
+    let mut sb = Sandbox::cold_start(1, spec, svc.clone(), &clock).unwrap();
+    sb.handle_request(&clock).unwrap();
+    let committed = svc.host.committed_pages();
+    let resident = svc
+        .host
+        .mincore_resident_pages(quark_hibernate::mem::Gpa(0), (svc.host.size() / 4096).min(1 << 18))
+        .unwrap();
+    // Kernel may have a few extra resident pages (buddy headers etc.), and
+    // lazily-shared zero pages can make it smaller; require ballpark match.
+    let diff = resident.abs_diff(committed);
+    assert!(
+        diff <= committed / 5 + 16,
+        "mincore {resident} vs accounted {committed}"
+    );
+    // After hibernate both must drop together.
+    sb.hibernate(&clock).unwrap();
+    let committed2 = svc.host.committed_pages();
+    let resident2 = svc
+        .host
+        .mincore_resident_pages(quark_hibernate::mem::Gpa(0), (svc.host.size() / 4096).min(1 << 18))
+        .unwrap();
+    assert!(committed2 < committed / 2);
+    assert!(
+        resident2 < resident / 2,
+        "the real kernel must see the madvise: {resident} -> {resident2}"
+    );
+}
+
+#[test]
+fn multi_process_workload_dedups_and_survives_cycles() {
+    // java profile has 2 processes → COW-shared pages exercise the dedup
+    // hash table and the refcount array across hibernate cycles.
+    let svc = svc("int-multiproc", SharingConfig::default());
+    let clock = Clock::new();
+    let spec = scaled_for_test(java_hello(), 16);
+    let mut sb = Sandbox::cold_start(1, spec, svc, &clock).unwrap();
+    for cycle in 0..3 {
+        sb.handle_request(&clock)
+            .unwrap_or_else(|e| panic!("cycle {cycle}: {e}"));
+        sb.hibernate(&clock).unwrap();
+        let out = sb.handle_request(&clock).unwrap();
+        assert_eq!(out.from, ContainerState::Hibernate);
+    }
+    sb.terminate().unwrap();
+}
+
+#[test]
+fn hibernate_from_illegal_states_rejected() {
+    let svc = svc("int-illegal", SharingConfig::default());
+    let clock = Clock::new();
+    let spec = scaled_for_test(golang_hello(), 16);
+    let mut sb = Sandbox::cold_start(1, spec, svc, &clock).unwrap();
+    sb.hibernate(&clock).unwrap();
+    // Hibernate → SIGSTOP again is illegal per Fig. 3.
+    assert!(sb.hibernate(&clock).is_err());
+    // Wake (SIGCONT) then double-wake is illegal too.
+    sb.wake(&clock).unwrap();
+    assert!(sb.wake(&clock).is_err());
+}
+
+#[test]
+fn anticipatory_wake_gives_wokenup_latency() {
+    let svc = svc("int-anticipate", SharingConfig::default());
+    let clock = Clock::new();
+    let spec = scaled_for_test(nodejs_hello(), 8);
+    let mut sb = Sandbox::cold_start(1, spec, svc, &clock).unwrap();
+    sb.handle_request(&clock).unwrap();
+    // Build a REAP image.
+    sb.hibernate(&clock).unwrap();
+    sb.handle_request(&clock).unwrap();
+    sb.hibernate(&clock).unwrap();
+
+    // Demand-wake cost (for comparison): measured on a twin... here just
+    // measure SIGCONT-prefetch then request; the request itself must be
+    // warm-like (no faults, no prefetch work left).
+    sb.wake(&clock).unwrap();
+    assert_eq!(sb.state(), ContainerState::WokenUp);
+    let out = sb.handle_request(&clock).unwrap();
+    assert_eq!(out.anon_faults, 0);
+    assert_eq!(out.reap_prefetched, 0, "prefetch already done by SIGCONT");
+    // The first post-wake request re-faults the dropped binary pages; the
+    // *second* is the steady WokenUp state the paper compares to Warm.
+    let before = clock.total_ns();
+    let out = sb.handle_request(&clock).unwrap();
+    let req_ns = clock.total_ns() - before;
+    assert_eq!(out.anon_faults, 0);
+    assert_eq!(out.file_miss_bytes, 0, "binary pages already restored");
+    assert!(req_ns < 20_000_000, "woken-up request took {req_ns}ns");
+}
+
+#[test]
+fn terminate_returns_all_memory() {
+    let svc = svc("int-terminate", SharingConfig::default());
+    let clock = Clock::new();
+    let spec = scaled_for_test(nodejs_hello(), 8);
+    let committed0 = svc.host.committed_bytes();
+    let mut sb = Sandbox::cold_start(1, spec, svc.clone(), &clock).unwrap();
+    sb.handle_request(&clock).unwrap();
+    assert!(svc.host.committed_bytes() > committed0);
+    sb.terminate().unwrap();
+    svc.cache.trim_unmapped();
+    // All sandbox pages must be back with the host (buddy headers of free
+    // chunks may remain: allow a small remainder).
+    let leaked = svc.host.committed_bytes();
+    assert!(
+        leaked <= committed0 + 64 * 4096,
+        "leaked {} bytes after terminate",
+        leaked
+    );
+}
+
+#[test]
+fn swap_files_cleaned_up_on_drop() {
+    let svc = svc("int-files", SharingConfig::default());
+    let clock = Clock::new();
+    let spec = scaled_for_test(golang_hello(), 16);
+    let dir = svc.swap_dir.clone();
+    {
+        let mut sb = Sandbox::cold_start(77, spec, svc.clone(), &clock).unwrap();
+        sb.handle_request(&clock).unwrap();
+        sb.hibernate(&clock).unwrap();
+        assert!(dir.join("sandbox-77.swap").exists());
+    }
+    assert!(
+        !dir.join("sandbox-77.swap").exists(),
+        "per-sandbox swap file must be deleted on termination (§3.4)"
+    );
+    assert!(!dir.join("sandbox-77.reap").exists());
+}

@@ -1,0 +1,168 @@
+//! Platform-level integration: trace replay with the full policy loop,
+//! warm-only vs hibernate comparison, predictor-driven anticipatory wakes,
+//! and the threaded server under concurrency.
+
+use quark_hibernate::config::PlatformConfig;
+use quark_hibernate::container::NoopRunner;
+use quark_hibernate::platform::metrics::ServedFrom;
+use quark_hibernate::platform::policy::Mode;
+use quark_hibernate::platform::server::Server;
+use quark_hibernate::platform::trace::{self, Arrival, TraceSpec};
+use quark_hibernate::platform::Platform;
+use quark_hibernate::simtime::CostModel;
+use quark_hibernate::workloads::functionbench::{
+    golang_hello, nodejs_hello, python_hello, scaled_for_test,
+};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn cfg(tag: &str) -> PlatformConfig {
+    let mut cfg = PlatformConfig::default();
+    cfg.host_memory = 4 << 30;
+    cfg.cost = CostModel::paper();
+    cfg.policy.hibernate_idle_ms = 50;
+    cfg.policy.predictive_wakeup = false;
+    cfg.swap_dir = std::env::temp_dir()
+        .join(format!("qh-intplat-{tag}-{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    cfg
+}
+
+#[test]
+fn replay_mixed_workloads_end_to_end() {
+    let p = Platform::new(cfg("replay"), Arc::new(NoopRunner)).unwrap();
+    for w in [golang_hello(), nodejs_hello(), python_hello()] {
+        p.deploy(scaled_for_test(w, 16)).unwrap();
+    }
+    let specs: Vec<TraceSpec> = ["golang-hello", "nodejs-hello", "python-hello"]
+        .iter()
+        .map(|w| TraceSpec {
+            workload: w.to_string(),
+            arrival: Arrival::Poisson {
+                mean_gap_ns: 400_000_000,
+            },
+        })
+        .collect();
+    let events = trace::generate(&specs, 6_000_000_000, 99);
+    assert!(events.len() > 20);
+    let reports = p.run_trace(&events).unwrap();
+    assert_eq!(reports.len(), events.len());
+    // Each workload cold-starts at most a couple of instances; the rest of
+    // the traffic lands on warm/hibernate/woken-up containers.
+    let cold = reports
+        .iter()
+        .filter(|r| r.served_from == ServedFrom::ColdStart)
+        .count();
+    assert!(
+        cold <= 6,
+        "{cold} cold starts for {} requests is too many",
+        reports.len()
+    );
+    assert!(p.metrics.counters.hibernations.load(Ordering::Relaxed) > 0);
+    // Latency hierarchy per the paper, aggregated over the replay.
+    for w in ["golang-hello", "nodejs-hello", "python-hello"] {
+        let cold = p.metrics.mean_latency(w, ServedFrom::ColdStart);
+        let warm = p.metrics.mean_latency(w, ServedFrom::Warm);
+        if let (Some(c), Some(wm)) = (cold, warm) {
+            assert!(wm < c, "{w}: warm {wm} must beat cold {c}");
+        }
+        if let (Some(h), Some(c)) =
+            (p.metrics.mean_latency(w, ServedFrom::Hibernate), cold)
+        {
+            assert!(h < c, "{w}: hibernate-wake {h} must beat cold {c}");
+        }
+    }
+}
+
+#[test]
+fn hibernate_mode_beats_warm_only_on_cold_starts_and_memory() {
+    let events = {
+        let specs = vec![TraceSpec {
+            workload: "nodejs-hello".into(),
+            arrival: Arrival::Uniform {
+                gap_ns: 300_000_000,
+            },
+        }];
+        trace::generate(&specs, 8_000_000_000, 5)
+    };
+
+    let run = |mode: Mode, tag: &str| {
+        let mut c = cfg(tag);
+        // Tight budget → pressure forces the keep-alive decision.
+        c.policy.memory_budget = 24 << 20;
+        c.policy.hibernate_idle_ms = 100;
+        let p = Platform::with_mode(c, Arc::new(NoopRunner), mode).unwrap();
+        p.deploy(scaled_for_test(nodejs_hello(), 16)).unwrap();
+        p.run_trace(&events).unwrap();
+        (
+            p.metrics.counters.cold_starts.load(Ordering::Relaxed),
+            p.memory_used(),
+        )
+    };
+    let (cold_warmonly, _mem_w) = run(Mode::WarmOnly, "warmonly");
+    let (cold_hib, _mem_h) = run(Mode::Hibernate, "hibmode");
+    assert!(
+        cold_hib < cold_warmonly,
+        "hibernate mode must avoid cold starts: {cold_hib} vs {cold_warmonly}"
+    );
+}
+
+#[test]
+fn predictor_converts_hibernate_serves_into_wokenup_serves() {
+    let mut c = cfg("predictor");
+    c.policy.predictive_wakeup = true;
+    c.policy.hibernate_idle_ms = 30;
+    let p = Platform::new(c, Arc::new(NoopRunner)).unwrap();
+    p.deploy(scaled_for_test(golang_hello(), 16)).unwrap();
+    // Strictly periodic arrivals, gap ≫ idle threshold: every serve would
+    // hit a Hibernate container without the predictor.
+    let events = {
+        let specs = vec![TraceSpec {
+            workload: "golang-hello".into(),
+            arrival: Arrival::Uniform {
+                gap_ns: 500_000_000,
+            },
+        }];
+        trace::generate(&specs, 10_000_000_000, 1)
+    };
+    p.run_trace(&events).unwrap();
+    let anticipatory = p
+        .metrics
+        .counters
+        .anticipatory_wakes
+        .load(Ordering::Relaxed);
+    let wokenup_serves = p.metrics.sample_count("golang-hello", ServedFrom::WokenUp);
+    assert!(
+        anticipatory >= 3,
+        "predictor should fire on periodic traffic: {anticipatory}"
+    );
+    assert!(
+        wokenup_serves >= 3,
+        "anticipatory wakes must convert serves to WokenUp: {wokenup_serves}"
+    );
+}
+
+#[test]
+fn threaded_server_parallel_load_is_consistent() {
+    let mut c = cfg("server");
+    c.cost = CostModel::free(); // keep the test fast
+    let p = Arc::new(Platform::new(c, Arc::new(NoopRunner)).unwrap());
+    p.deploy(scaled_for_test(golang_hello(), 32)).unwrap();
+    let server = Server::start(p.clone(), 4, Duration::from_millis(5));
+    let mut rxs = Vec::new();
+    for _ in 0..40 {
+        rxs.push(server.submit("golang-hello"));
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let mut ok = 0;
+    for rx in rxs {
+        if rx.recv().unwrap().is_ok() {
+            ok += 1;
+        }
+    }
+    server.shutdown();
+    assert_eq!(ok, 40);
+    assert_eq!(p.metrics.counters.requests.load(Ordering::Relaxed), 40);
+}

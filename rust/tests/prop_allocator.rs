@@ -1,0 +1,181 @@
+//! Property tests over the Bitmap Page Allocator and the buddy heap:
+//! random alloc/free/refcount/reclaim interleavings must preserve every
+//! structural invariant (Fig. 4's control-page consistency, free-list
+//! integrity, no double-hand-out, conservation of pages).
+
+use quark_hibernate::mem::bitmap_alloc::BitmapPageAllocator;
+use quark_hibernate::mem::buddy::BuddyAllocator;
+use quark_hibernate::mem::host::HostMemory;
+use quark_hibernate::mem::Gpa;
+use quark_hibernate::util::prop::{check, PropConfig};
+use quark_hibernate::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn rig(mib: usize) -> (Arc<HostMemory>, Arc<BuddyAllocator>, BitmapPageAllocator) {
+    let host = Arc::new(HostMemory::new(mib << 20).unwrap());
+    let heap = Arc::new(BuddyAllocator::new(host.clone(), 0, host.size() as u64).unwrap());
+    let alloc = BitmapPageAllocator::new(host.clone(), heap.clone());
+    (host, heap, alloc)
+}
+
+#[test]
+fn random_alloc_free_interleaving_preserves_invariants() {
+    check(
+        "alloc-free-interleave",
+        PropConfig { cases: 40, seed: PropConfig::default().seed },
+        |rng: &mut Rng| {
+            let (host, _heap, alloc) = rig(64);
+            let mut live: Vec<Gpa> = Vec::new();
+            let mut refcounts: HashMap<u64, u16> = HashMap::new();
+            for _ in 0..rng.range(200, 2000) {
+                match rng.below(10) {
+                    // 60%: allocate (sometimes touch)
+                    0..=5 => {
+                        let g = alloc.alloc_page().unwrap();
+                        assert!(
+                            !refcounts.contains_key(&g.0),
+                            "page {g:?} handed out twice"
+                        );
+                        refcounts.insert(g.0, 1);
+                        if rng.chance(0.5) {
+                            host.fill_page(g, g.0).unwrap();
+                        }
+                        live.push(g);
+                    }
+                    // 20%: drop a reference
+                    6..=7 if !live.is_empty() => {
+                        let i = rng.below(live.len() as u64) as usize;
+                        let g = live[i];
+                        let rc = refcounts.get_mut(&g.0).unwrap();
+                        *rc -= 1;
+                        let freed = alloc.dec_ref(g);
+                        assert_eq!(freed, *rc == 0);
+                        live.swap_remove(i);
+                        if *rc == 0 {
+                            refcounts.remove(&g.0);
+                        }
+                    }
+                    // 10%: add a reference (clone)
+                    8 if !live.is_empty() => {
+                        let g = *rng.choose(&live);
+                        let rc = refcounts.get_mut(&g.0).unwrap();
+                        *rc += 1;
+                        assert_eq!(alloc.inc_ref(g), *rc);
+                        live.push(g);
+                    }
+                    // 10%: reclaim pass
+                    _ => {
+                        alloc.reclaim_free_pages().unwrap();
+                    }
+                }
+            }
+            alloc.check_invariants().unwrap();
+            // Model agreement: allocator count == our model count.
+            let distinct = refcounts.len() as u64;
+            assert_eq!(alloc.stats().allocated_pages, distinct);
+            // Every live page still has its recorded refcount.
+            for (&g, &rc) in &refcounts {
+                assert_eq!(alloc.refcount(Gpa(g)), rc);
+            }
+        },
+    );
+}
+
+#[test]
+fn reclaim_never_discards_live_data() {
+    check(
+        "reclaim-preserves-live",
+        PropConfig { cases: 24, seed: PropConfig::default().seed },
+        |rng: &mut Rng| {
+            let (host, _heap, alloc) = rig(32);
+            let mut live: Vec<(Gpa, u64)> = Vec::new();
+            for i in 0..rng.range(50, 500) {
+                let g = alloc.alloc_page().unwrap();
+                host.fill_page(g, i).unwrap();
+                if rng.chance(0.4) {
+                    alloc.dec_ref(g);
+                } else {
+                    live.push((g, host.checksum_page(g).unwrap()));
+                }
+            }
+            alloc.reclaim_free_pages().unwrap();
+            for &(g, sum) in &live {
+                assert_eq!(
+                    host.checksum_page(g).unwrap(),
+                    sum,
+                    "live page {g:?} corrupted by reclaim"
+                );
+            }
+            alloc.check_invariants().unwrap();
+        },
+    );
+}
+
+#[test]
+fn buddy_conserves_bytes_under_random_churn() {
+    check(
+        "buddy-conservation",
+        PropConfig { cases: 30, seed: PropConfig::default().seed },
+        |rng: &mut Rng| {
+            let host = Arc::new(HostMemory::new(64 << 20).unwrap());
+            let buddy = BuddyAllocator::new(host.clone(), 0, host.size() as u64).unwrap();
+            let total_free = buddy.free_bytes();
+            let mut live: Vec<Gpa> = Vec::new();
+            for _ in 0..rng.range(50, 400) {
+                if live.is_empty() || rng.chance(0.6) {
+                    let order = rng.below(6) as usize;
+                    if let Ok(g) = buddy.alloc_order(order) {
+                        live.push(g);
+                    }
+                } else {
+                    let i = rng.below(live.len() as u64) as usize;
+                    buddy.free(live.swap_remove(i)).unwrap();
+                }
+                assert_eq!(
+                    buddy.free_bytes() + buddy.allocated_bytes(),
+                    total_free,
+                    "bytes must be conserved"
+                );
+            }
+            for g in live {
+                buddy.free(g).unwrap();
+            }
+            assert_eq!(buddy.free_bytes(), total_free, "full coalescing");
+            buddy.validate_free_lists().unwrap();
+        },
+    );
+}
+
+#[test]
+fn blocks_flow_back_to_heap_and_are_reusable() {
+    check(
+        "block-recycling",
+        PropConfig { cases: 16, seed: PropConfig::default().seed },
+        |rng: &mut Rng| {
+            let (host, heap, alloc) = rig(32);
+            let heap_free0 = heap.free_bytes();
+            // Fill several blocks, then free everything in random order.
+            let n = rng.range(1100, 3000);
+            let mut pages: Vec<Gpa> = (0..n).map(|_| alloc.alloc_page().unwrap()).collect();
+            rng.shuffle(&mut pages);
+            for g in pages {
+                alloc.dec_ref(g);
+            }
+            assert_eq!(alloc.stats().allocated_pages, 0);
+            assert_eq!(alloc.stats().blocks, 0, "all blocks must return");
+            assert_eq!(heap.free_bytes(), heap_free0);
+            // Host got the data pages back too.
+            assert!(
+                host.committed_bytes() <= (heap_free0 / (4 << 20)) * 4096 + (64 << 12),
+                "committed after full free: {}",
+                host.committed_bytes()
+            );
+            // And the allocator still works.
+            for _ in 0..100 {
+                alloc.alloc_page().unwrap();
+            }
+            alloc.check_invariants().unwrap();
+        },
+    );
+}

@@ -1,0 +1,110 @@
+//! Property tests over the guest page table: the radix tree must behave
+//! exactly like a flat map from page-aligned GVAs to PTEs under random
+//! map/unmap/update/swap-mark interleavings, and the walk must visit every
+//! entry exactly once in address order — the swap-out pass depends on it.
+
+use quark_hibernate::mem::page_table::{PageTable, Pte, MAX_GVA};
+use quark_hibernate::mem::{Gpa, Gva};
+use quark_hibernate::util::prop::{check, PropConfig};
+use quark_hibernate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+fn arb_gva(rng: &mut Rng) -> Gva {
+    // Mix of clustered and scattered addresses to hit shared and distinct
+    // radix paths.
+    let page = match rng.below(3) {
+        0 => rng.below(512),                          // one leaf
+        1 => rng.below(1 << 18),                      // a few dirs
+        _ => rng.below(MAX_GVA / 4096),               // anywhere
+    };
+    Gva(page * 4096)
+}
+
+#[test]
+fn behaves_like_flat_map() {
+    check(
+        "pagetable-vs-btreemap",
+        PropConfig { cases: 60, seed: PropConfig::default().seed },
+        |rng: &mut Rng| {
+            let mut pt = PageTable::new();
+            let mut model: BTreeMap<u64, u64> = BTreeMap::new();
+            for _ in 0..rng.range(100, 1200) {
+                let gva = arb_gva(rng);
+                match rng.below(4) {
+                    0 | 1 => {
+                        let gpa = Gpa(rng.below(1 << 30) * 4096);
+                        let flags = if rng.chance(0.5) { Pte::WRITABLE } else { 0 };
+                        let pte = Pte::new_present(gpa, flags);
+                        pt.map(gva, pte);
+                        model.insert(gva.0, pte.0);
+                    }
+                    2 => {
+                        let old = pt.unmap(gva);
+                        let expect = model.remove(&gva.0).unwrap_or(0);
+                        assert_eq!(old.0, expect);
+                    }
+                    _ => {
+                        let got = pt.update(gva, |p| p.to_swapped());
+                        match model.get_mut(&gva.0) {
+                            Some(v) => {
+                                *v = Pte(*v).to_swapped().0;
+                                assert_eq!(got.unwrap().0, *v);
+                            }
+                            None => assert!(got.is_none()),
+                        }
+                    }
+                }
+            }
+            // Point lookups agree.
+            for (&gva, &pte) in &model {
+                assert_eq!(pt.get(Gva(gva)).0, pte);
+            }
+            // Walk agrees and is sorted.
+            let mut walked: Vec<(u64, u64)> = Vec::new();
+            pt.for_each(|gva, pte| walked.push((gva.0, pte.0)));
+            let expect: Vec<(u64, u64)> = model.iter().map(|(&k, &v)| (k, v)).collect();
+            assert_eq!(walked, expect);
+            // Counters agree.
+            let present = model.values().filter(|&&v| Pte(v).present()).count() as u64;
+            let swapped = model.values().filter(|&&v| Pte(v).swapped()).count() as u64;
+            assert_eq!(pt.present_count(), present);
+            assert_eq!(pt.swapped_count(), swapped);
+        },
+    );
+}
+
+#[test]
+fn swap_mark_roundtrip_preserves_everything_else() {
+    check(
+        "swap-mark-roundtrip",
+        PropConfig { cases: 40, seed: PropConfig::default().seed },
+        |rng: &mut Rng| {
+            let mut pt = PageTable::new();
+            let mut entries: Vec<(Gva, Pte)> = Vec::new();
+            for _ in 0..rng.range(10, 400) {
+                let gva = arb_gva(rng);
+                let flags = match rng.below(4) {
+                    0 => Pte::WRITABLE,
+                    1 => Pte::WRITABLE | Pte::DIRTY,
+                    2 => Pte::COW,
+                    _ => 0,
+                };
+                let pte = Pte::new_present(Gpa(rng.below(1 << 20) * 4096), flags);
+                pt.map(gva, pte);
+                entries.retain(|(g, _)| *g != gva);
+                entries.push((gva, pte));
+            }
+            // Swap-out pass: mark everything, then swap-in pass: restore.
+            pt.for_each_mut(|_g, p| if p.present() { p.to_swapped() } else { p });
+            assert_eq!(pt.present_count(), 0);
+            pt.for_each_mut(|_g, p| if p.swapped() { p.to_present() } else { p });
+            for (gva, pte) in entries {
+                assert_eq!(
+                    pt.get(gva).0,
+                    pte.0,
+                    "flags/frame must survive the round trip at {gva:?}"
+                );
+            }
+        },
+    );
+}

@@ -1,0 +1,175 @@
+//! Property tests over the Swapping Manager: arbitrary interleavings of
+//! swap-out cycles, partial fault-ins, REAP cycles and guest writes must
+//! never lose or corrupt page contents, and the accounting (present/swapped
+//! counts, resident tracking) must match a naive model.
+
+use quark_hibernate::mem::bitmap_alloc::BitmapPageAllocator;
+use quark_hibernate::mem::buddy::BuddyAllocator;
+use quark_hibernate::mem::host::HostMemory;
+use quark_hibernate::mem::page_table::{PageTable, Pte};
+use quark_hibernate::mem::{Gpa, Gva};
+use quark_hibernate::simtime::{Clock, CostModel};
+use quark_hibernate::swap::file::SwapFileSet;
+use quark_hibernate::swap::SwapMgr;
+use quark_hibernate::util::prop::{check, PropConfig};
+use quark_hibernate::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+struct Rig {
+    host: Arc<HostMemory>,
+    alloc: BitmapPageAllocator,
+    mgr: SwapMgr,
+    clock: Clock,
+}
+
+fn rig(tag: u64) -> Rig {
+    let host = Arc::new(HostMemory::new(128 << 20).unwrap());
+    let heap = Arc::new(BuddyAllocator::new(host.clone(), 0, host.size() as u64).unwrap());
+    let alloc = BitmapPageAllocator::new(host.clone(), heap);
+    let dir = std::env::temp_dir().join(format!(
+        "qh-propswap-{tag}-{}",
+        std::process::id()
+    ));
+    let files = SwapFileSet::create(&dir, tag).unwrap();
+    Rig {
+        host,
+        alloc,
+        mgr: SwapMgr::new(files, CostModel::paper()),
+        clock: Clock::new(),
+    }
+}
+
+#[test]
+fn contents_survive_arbitrary_swap_interleavings() {
+    let mut case = 0u64;
+    check(
+        "swap-interleavings",
+        PropConfig { cases: 20, seed: PropConfig::default().seed },
+        move |rng: &mut Rng| {
+            case += 1;
+            let mut r = rig(case);
+            let n = rng.range(20, 200);
+            let mut pt = PageTable::new();
+            // model: gva page index -> expected checksum
+            let mut model: HashMap<u64, u64> = HashMap::new();
+            for i in 0..n {
+                let gpa = r.alloc.alloc_page().unwrap();
+                r.host.fill_page(gpa, 0xBEEF ^ i).unwrap();
+                pt.map(Gva(i * 0x1000), Pte::new_present(gpa, Pte::WRITABLE));
+                model.insert(i, r.host.checksum_page(gpa).unwrap());
+            }
+            for _ in 0..rng.range(2, 8) {
+                match rng.below(3) {
+                    // full page-fault swap-out (only legal when something
+                    // is present)
+                    0 if pt.present_count() > 0 => {
+                        r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+                        assert_eq!(pt.present_count(), 0);
+                        assert_eq!(pt.swapped_count(), n);
+                    }
+                    // fault a random subset back in, verify each page
+                    1 if pt.swapped_count() > 0 => {
+                        let k = rng.range(1, n + 1);
+                        for _ in 0..k {
+                            let i = rng.below(n);
+                            let gva = Gva(i * 0x1000);
+                            if pt.get(gva).swapped() {
+                                r.mgr
+                                    .fault_swap_in(&mut pt, gva, &r.host, &r.clock)
+                                    .unwrap();
+                                let gpa = pt.get(gva).gpa();
+                                assert_eq!(
+                                    r.host.checksum_page(gpa).unwrap(),
+                                    model[&i],
+                                    "page {i} corrupted by fault swap-in"
+                                );
+                            }
+                        }
+                    }
+                    // guest writes a present page (contents change)
+                    _ => {
+                        let i = rng.below(n);
+                        let gva = Gva(i * 0x1000);
+                        let pte = pt.get(gva);
+                        if pte.present() {
+                            r.host.fill_page(pte.gpa(), rng.next_u64()).unwrap();
+                            model.insert(i, r.host.checksum_page(pte.gpa()).unwrap());
+                        }
+                    }
+                }
+            }
+            // Drain: bring everything back and verify the full image.
+            for i in 0..n {
+                let gva = Gva(i * 0x1000);
+                if pt.get(gva).swapped() {
+                    r.mgr.fault_swap_in(&mut pt, gva, &r.host, &r.clock).unwrap();
+                }
+                let gpa = pt.get(gva).gpa();
+                assert_eq!(r.host.checksum_page(gpa).unwrap(), model[&i], "page {i}");
+            }
+            assert_eq!(pt.present_count(), n);
+        },
+    );
+}
+
+#[test]
+fn reap_cycles_preserve_working_set_exactly() {
+    let mut case = 1000u64;
+    check(
+        "reap-cycles",
+        PropConfig { cases: 15, seed: PropConfig::default().seed },
+        move |rng: &mut Rng| {
+            case += 1;
+            let mut r = rig(case);
+            let n = rng.range(30, 150);
+            let mut pt = PageTable::new();
+            let mut sums: HashMap<u64, u64> = HashMap::new();
+            let mut gpas: Vec<Gpa> = Vec::new();
+            for i in 0..n {
+                let gpa = r.alloc.alloc_page().unwrap();
+                r.host.fill_page(gpa, i).unwrap();
+                pt.map(Gva(i * 0x1000), Pte::new_present(gpa, Pte::WRITABLE));
+                sums.insert(i, r.host.checksum_page(gpa).unwrap());
+                gpas.push(gpa);
+            }
+            // Cycle 1: full swap-out, random working set faults back.
+            r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+            let ws: Vec<u64> = (0..n).filter(|_| rng.chance(0.5)).collect();
+            for &i in &ws {
+                r.mgr
+                    .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
+                    .unwrap();
+            }
+            // Arbitrary number of REAP hibernate/wake cycles.
+            for _ in 0..rng.range(1, 5) {
+                r.mgr.reap_swap_out(&[&pt], &r.host, &r.clock).unwrap();
+                assert_eq!(r.mgr.reap_set_pages(), ws.len() as u64);
+                // Working-set pages decommitted, PTEs still present.
+                for &i in &ws {
+                    assert!(pt.get(Gva(i * 0x1000)).present());
+                    assert!(!r.host.is_committed(gpas[i as usize]));
+                }
+                r.mgr.reap_swap_in(&r.host, &r.clock).unwrap();
+                for &i in &ws {
+                    assert_eq!(
+                        r.host.checksum_page(gpas[i as usize]).unwrap(),
+                        sums[&i],
+                        "REAP lost page {i}"
+                    );
+                }
+            }
+            // Cold pages still recoverable via the original swap file.
+            for i in 0..n {
+                let gva = Gva(i * 0x1000);
+                if pt.get(gva).swapped() {
+                    r.mgr.fault_swap_in(&mut pt, gva, &r.host, &r.clock).unwrap();
+                    assert_eq!(
+                        r.host.checksum_page(gpas[i as usize]).unwrap(),
+                        sums[&i]
+                    );
+                }
+            }
+        },
+    );
+}
