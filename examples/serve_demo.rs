@@ -88,7 +88,7 @@ fn main() -> Result<()> {
         duration_ms / 1000
     );
 
-    let server = Server::start(platform.clone(), 4, Duration::from_millis(25));
+    let mut server = Server::start(platform.clone(), 4, Duration::from_millis(25));
     let t0 = Instant::now();
     let mut pending = Vec::new();
     for ev in &events {
@@ -96,7 +96,7 @@ fn main() -> Result<()> {
         if let Some(sleep) = due.checked_sub(t0.elapsed()) {
             std::thread::sleep(sleep);
         }
-        pending.push(server.submit(&ev.workload));
+        pending.push(server.submit(&ev.workload)?);
     }
     let mut ok = 0u64;
     let mut errors = 0u64;

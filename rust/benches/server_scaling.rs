@@ -1,0 +1,50 @@
+//! `cargo bench --bench server_scaling` — threaded-server throughput vs
+//! worker count on a multi-function workload (the sharded-control-plane
+//! acceptance measurement). Each request spins a fixed real compute time,
+//! so ideal scaling is linear in workers until the machine runs out of
+//! cores. `QH_QUICK=1` shrinks the sweep.
+
+use quark_hibernate::bench_support::server_scaling;
+
+fn main() {
+    let quick = std::env::var("QH_QUICK").is_ok();
+    let (funcs, per_fn, spin_ns) = if quick {
+        (8, 10, 500_000) // 0.5 ms/request
+    } else {
+        (8, 50, 2_000_000) // 2 ms/request
+    };
+    let worker_counts = [1usize, 2, 4, 8];
+    let results = server_scaling::run(&worker_counts, funcs, per_fn, spin_ns);
+    println!("workers  requests      wall         req/s   speedup");
+    let base_rps = results.first().map(|r| r.rps()).unwrap_or(0.0);
+    for r in &results {
+        println!(
+            "{:>7} {:>9} {:>9.1} ms {:>9.0} {:>8.2}x",
+            r.workers,
+            r.requests,
+            r.wall_ns as f64 / 1e6,
+            r.rps(),
+            if base_rps > 0.0 { r.rps() / base_rps } else { 0.0 },
+        );
+    }
+    // The point of the sharded control plane: more workers, more
+    // throughput. Allow generous slack for small or loaded machines.
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    if cores >= 4 {
+        let rps_at = |workers: usize| {
+            results
+                .iter()
+                .find(|r| r.workers == workers)
+                .map(|r| r.rps())
+                .expect("worker count missing from sweep")
+        };
+        let r1 = rps_at(1);
+        let r4 = rps_at(4);
+        assert!(
+            r4 > 1.5 * r1,
+            "4 workers must out-serve 1 worker: {r4:.0} vs {r1:.0} req/s"
+        );
+    }
+}

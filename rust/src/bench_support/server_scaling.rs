@@ -1,0 +1,107 @@
+//! Threaded-server throughput scaling: the acceptance measurement for the
+//! sharded control plane. Serves a multi-function workload (one spinning
+//! payload per request, so a request occupies a worker for a fixed real
+//! compute time) through the threaded server at increasing worker counts
+//! and reports requests/second — which must grow with workers now that no
+//! global pools lock or shared receiver serializes the data plane.
+
+use crate::config::PlatformConfig;
+use crate::container::SpinRunner;
+use crate::platform::server::{Server, ServerConfig};
+use crate::platform::Platform;
+use crate::simtime::CostModel;
+use crate::workloads::functionbench::{golang_hello, scaled_for_test};
+use crate::workloads::PayloadSpec;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One measurement row.
+#[derive(Debug, Clone)]
+pub struct ScalingResult {
+    pub workers: usize,
+    pub requests: u64,
+    pub wall_ns: u64,
+}
+
+impl ScalingResult {
+    pub fn rps(&self) -> f64 {
+        if self.wall_ns == 0 {
+            return 0.0;
+        }
+        self.requests as f64 / (self.wall_ns as f64 / 1e9)
+    }
+}
+
+/// Run the scaling sweep: `funcs` functions × `requests_per_fn` requests at
+/// each worker count, every request spinning `spin_ns` of real compute.
+pub fn run(
+    worker_counts: &[usize],
+    funcs: usize,
+    requests_per_fn: usize,
+    spin_ns: u64,
+) -> Vec<ScalingResult> {
+    let mut results = Vec::new();
+    for &workers in worker_counts {
+        let mut cfg = PlatformConfig::default();
+        cfg.host_memory = 4 << 30;
+        cfg.cost = CostModel::free();
+        cfg.shards = funcs.max(1);
+        cfg.policy.hibernate_idle_ms = 60_000; // out of the measurement's way
+        cfg.policy.predictive_wakeup = false;
+        cfg.swap_dir = std::env::temp_dir()
+            .join(format!(
+                "qh-server-scaling-{workers}-{}",
+                std::process::id()
+            ))
+            .to_string_lossy()
+            .into_owned();
+        let runner = Arc::new(SpinRunner {
+            ns_per_iteration: spin_ns,
+        });
+        let platform = Arc::new(Platform::new(cfg, runner).expect("platform"));
+        for i in 0..funcs {
+            let mut spec = scaled_for_test(golang_hello(), 32);
+            spec.name = format!("fn-{i}");
+            spec.payload = Some(PayloadSpec {
+                artifact: "spin".into(),
+                iterations: 1,
+            });
+            platform.deploy(spec).expect("deploy");
+        }
+        // Pre-warm: one request per function outside the timed window so
+        // cold starts don't pollute the throughput number.
+        for i in 0..funcs {
+            platform
+                .request_at(&format!("fn-{i}"), 0)
+                .expect("pre-warm request");
+        }
+
+        let mut server = Server::start_with(
+            platform.clone(),
+            ServerConfig {
+                workers,
+                policy_interval: Duration::from_secs(3600),
+                spill_threshold: Some(2),
+            },
+        );
+        let total = (funcs * requests_per_fn) as u64;
+        let t0 = Instant::now();
+        let mut rxs = Vec::with_capacity(total as usize);
+        for _ in 0..requests_per_fn {
+            for i in 0..funcs {
+                rxs.push(server.submit(&format!("fn-{i}")).expect("submit"));
+            }
+        }
+        for rx in rxs {
+            rx.recv().expect("reply").expect("request");
+        }
+        let wall_ns = t0.elapsed().as_nanos() as u64;
+        server.shutdown();
+        results.push(ScalingResult {
+            workers,
+            requests: total,
+            wall_ns,
+        });
+    }
+    results
+}

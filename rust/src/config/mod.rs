@@ -76,6 +76,9 @@ pub struct PlatformConfig {
     pub swap_dir: String,
     /// Number of platform worker threads.
     pub workers: usize,
+    /// Control-plane shards (per-shard pool/spec locking). `0` = auto: one
+    /// shard per available CPU.
+    pub shards: usize,
     /// Deterministic seed for traces and page content.
     pub seed: u64,
     pub policy: PolicyConfig,
@@ -93,6 +96,7 @@ impl Default for PlatformConfig {
                 .to_string_lossy()
                 .into_owned(),
             workers: 4,
+            shards: 0,
             seed: 0xFEED_BEEF,
             policy: PolicyConfig::default(),
             sharing: SharingConfig::default(),
@@ -163,6 +167,9 @@ impl PlatformConfig {
         let mut workers = self.workers as u64;
         get_u64(t, "", "workers", &mut workers)?;
         self.workers = workers.max(1) as usize;
+        let mut shards = self.shards as u64;
+        get_u64(t, "", "shards", &mut shards)?;
+        self.shards = shards as usize;
         get_u64(t, "", "seed", &mut self.seed)?;
 
         get_u64(t, "policy", "hibernate_idle_ms", &mut self.policy.hibernate_idle_ms)?;
@@ -231,6 +238,7 @@ mod tests {
             r#"
             host_memory = "1GiB"
             workers = 8
+            shards = 16
             seed = 7
 
             [policy]
@@ -249,6 +257,7 @@ mod tests {
         .unwrap();
         assert_eq!(c.host_memory, 1 << 30);
         assert_eq!(c.workers, 8);
+        assert_eq!(c.shards, 16);
         assert_eq!(c.policy.hibernate_idle_ms, 500);
         assert_eq!(c.policy.memory_budget, 256 << 20);
         assert!(!c.policy.reap_enabled);

@@ -120,7 +120,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for w in workloads::all_workloads() {
         platform.deploy(w)?;
     }
-    let server = Server::start(platform.clone(), workers, Duration::from_millis(20));
+    let mut server = Server::start(platform.clone(), workers, Duration::from_millis(20));
     let events = trace::paper_mix(duration_ms * 1_000_000, mean_gap_ms, seed);
     println!("serving {} requests over {duration_ms} ms...", events.len());
     let t0 = std::time::Instant::now();
@@ -130,7 +130,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if let Some(sleep) = due.checked_sub(t0.elapsed()) {
             std::thread::sleep(sleep);
         }
-        pending.push(server.submit(&ev.workload));
+        pending.push(server.submit(&ev.workload)?);
     }
     let mut ok = 0u64;
     for rx in pending {

@@ -1,13 +1,24 @@
 //! Platform metrics: latency summaries keyed by (workload, serving state),
 //! lifecycle counters, and text/JSON export — what the Fig. 6/7 benches and
 //! the serve demo report from.
+//!
+//! Latency summaries are **striped** by workload-name hash: every request
+//! records into one of [`LATENCY_STRIPES`] independently-locked maps, so
+//! the hot-path `record_latency` for function A never contends with
+//! function B's (matching the sharded control plane — no global lock on
+//! the request path). Readers merge the stripes; a workload's rows always
+//! live in exactly one stripe, so the merge is collision-free.
 
 use crate::container::state::ContainerState;
+use crate::util::fnv1a;
 use crate::util::json::{obj, Json};
 use crate::util::stats::Summary;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+/// Lock stripes for the latency registry.
+pub const LATENCY_STRIPES: usize = 16;
 
 /// Which serving path a request took (Fig. 6's bar groups).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -76,21 +87,34 @@ impl Counters {
 }
 
 /// The registry.
-#[derive(Default)]
 pub struct Metrics {
-    latencies: Mutex<BTreeMap<(String, ServedFrom), Summary>>,
+    stripes: Vec<Mutex<BTreeMap<(String, ServedFrom), Summary>>>,
     pub counters: Counters,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Metrics {
     pub fn new() -> Self {
-        Self::default()
+        Self {
+            stripes: (0..LATENCY_STRIPES).map(|_| Mutex::new(BTreeMap::new())).collect(),
+            counters: Counters::default(),
+        }
+    }
+
+    /// The stripe owning `workload`'s rows.
+    fn stripe(&self, workload: &str) -> &Mutex<BTreeMap<(String, ServedFrom), Summary>> {
+        &self.stripes[(fnv1a(workload) % LATENCY_STRIPES as u64) as usize]
     }
 
     /// Record one request latency (virtual ns).
     pub fn record_latency(&self, workload: &str, from: ServedFrom, ns: u64) {
         self.counters.requests.fetch_add(1, Ordering::Relaxed);
-        self.latencies
+        self.stripe(workload)
             .lock()
             .unwrap()
             .entry((workload.to_string(), from))
@@ -100,7 +124,7 @@ impl Metrics {
 
     /// Mean latency for a (workload, path) cell, if sampled.
     pub fn mean_latency(&self, workload: &str, from: ServedFrom) -> Option<f64> {
-        self.latencies
+        self.stripe(workload)
             .lock()
             .unwrap()
             .get(&(workload.to_string(), from))
@@ -109,7 +133,7 @@ impl Metrics {
     }
 
     pub fn sample_count(&self, workload: &str, from: ServedFrom) -> usize {
-        self.latencies
+        self.stripe(workload)
             .lock()
             .unwrap()
             .get(&(workload.to_string(), from))
@@ -117,12 +141,31 @@ impl Metrics {
             .unwrap_or(0)
     }
 
+    /// Render one row per (workload, path) cell across every stripe,
+    /// sorted by key. Each key lives in exactly one stripe, so rows never
+    /// collide; only the keys are cloned, never the sample vectors.
+    fn render_rows<T>(
+        &self,
+        mut render: impl FnMut(&str, ServedFrom, &mut Summary) -> T,
+    ) -> Vec<T> {
+        let mut rows: Vec<((String, ServedFrom), T)> = Vec::new();
+        for stripe in &self.stripes {
+            let mut map = stripe.lock().unwrap();
+            for ((w, from), summary) in map.iter_mut() {
+                rows.push(((w.clone(), *from), render(w, *from, summary)));
+            }
+        }
+        rows.sort_by(|a, b| a.0.cmp(&b.0));
+        rows.into_iter().map(|(_, r)| r).collect()
+    }
+
     /// Text report: one row per (workload, path) — the Fig. 6 layout.
     pub fn report(&self) -> String {
         let mut out = String::new();
-        let mut map = self.latencies.lock().unwrap();
-        for ((w, from), summary) in map.iter_mut() {
-            out.push_str(&summary.report_ns(&format!("{w}/{}", from.label())));
+        for row in self.render_rows(|w, from, summary| {
+            summary.report_ns(&format!("{w}/{}", from.label()))
+        }) {
+            out.push_str(&row);
             out.push('\n');
         }
         out.push_str("counters:");
@@ -135,20 +178,16 @@ impl Metrics {
 
     /// JSON export (dashboards, EXPERIMENTS.md tooling).
     pub fn to_json(&self) -> Json {
-        let mut map = self.latencies.lock().unwrap();
-        let rows: Vec<Json> = map
-            .iter_mut()
-            .map(|((w, from), s)| {
-                obj(vec![
-                    ("workload", Json::Str(w.clone())),
-                    ("path", Json::Str(from.label().to_string())),
-                    ("n", Json::Num(s.len() as f64)),
-                    ("mean_ns", Json::Num(s.mean())),
-                    ("p50_ns", Json::Num(s.p50() as f64)),
-                    ("p99_ns", Json::Num(s.p99() as f64)),
-                ])
-            })
-            .collect();
+        let rows = self.render_rows(|w, from, s| {
+            obj(vec![
+                ("workload", Json::Str(w.to_string())),
+                ("path", Json::Str(from.label().to_string())),
+                ("n", Json::Num(s.len() as f64)),
+                ("mean_ns", Json::Num(s.mean())),
+                ("p50_ns", Json::Num(s.p50() as f64)),
+                ("p99_ns", Json::Num(s.p99() as f64)),
+            ])
+        });
         let counters: Vec<(&str, Json)> = self
             .counters
             .snapshot()
@@ -192,6 +231,29 @@ mod tests {
             back.get("latencies").unwrap().as_arr().unwrap().len(),
             1
         );
+    }
+
+    #[test]
+    fn stripes_merge_completely() {
+        let m = Metrics::new();
+        // More workloads than stripes → every stripe exercised, and the
+        // merged report must still contain one row per workload.
+        for i in 0..64 {
+            m.record_latency(&format!("fn-{i}"), ServedFrom::Warm, 1000 + i);
+        }
+        for i in 0..64 {
+            let w = format!("fn-{i}");
+            assert_eq!(m.sample_count(&w, ServedFrom::Warm), 1, "{w}");
+            assert_eq!(m.mean_latency(&w, ServedFrom::Warm), Some((1000 + i) as f64));
+        }
+        let r = m.report();
+        for i in 0..64 {
+            assert!(r.contains(&format!("fn-{i}/warm")), "missing fn-{i}");
+        }
+        assert_eq!(m.counters.requests.load(Ordering::Relaxed), 64);
+        let j = m.to_json().to_string();
+        let back = crate::util::json::parse(&j).unwrap();
+        assert_eq!(back.get("latencies").unwrap().as_arr().unwrap().len(), 64);
     }
 
     #[test]

@@ -8,6 +8,25 @@
 //!   use;
 //! * **threaded serving** ([`server`]) — real worker threads and a policy
 //!   thread, used by the end-to-end serve demo.
+//!
+//! # Sharded control plane
+//!
+//! The platform's mutable state is partitioned across a fixed array of
+//! [`shard`]s (default: one per CPU) keyed by a deterministic hash of the
+//! function name. Each shard owns the [`pool::FunctionPool`]s and
+//! [`crate::workloads::WorkloadSpec`]s of the functions hashed to it behind
+//! its own lock, so the request hot path for function A never blocks on a
+//! lock held for function B, and [`Platform::policy_tick`] walks shards
+//! incrementally instead of freezing the whole control plane.
+//!
+//! Within a shard, *instance reservations* keep critical sections short:
+//! the router marks the chosen instance busy under the shard lock, the
+//! shard lock is dropped, and the slow work (cold start, request
+//! execution, swap I/O) runs against the sandbox alone. Routing and policy
+//! decisions skip reserved instances instead of blocking on their sandbox
+//! mutexes, which is what lets concurrent requests for the *same* function
+//! scale out to more instances (the paper's model: one in-flight request
+//! per container; concurrency comes from more containers).
 
 pub mod density;
 pub mod metrics;
@@ -16,6 +35,7 @@ pub mod pool;
 pub mod predictor;
 pub mod router;
 pub mod server;
+pub mod shard;
 pub mod trace;
 pub mod trace_file;
 
@@ -28,9 +48,8 @@ use crate::workloads::WorkloadSpec;
 use anyhow::{bail, Context, Result};
 use metrics::{Metrics, ServedFrom};
 use policy::{Action, Mode, PolicyEngine};
-use pool::FunctionPool;
 use predictor::Predictor;
-use std::collections::HashMap;
+use shard::ShardSet;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use trace::TraceEvent;
@@ -51,10 +70,12 @@ pub struct RequestReport {
 pub struct Platform {
     pub cfg: PlatformConfig,
     svc: Arc<SandboxServices>,
-    pools: Mutex<HashMap<String, FunctionPool>>,
-    specs: Mutex<HashMap<String, WorkloadSpec>>,
+    shards: ShardSet,
     engine: PolicyEngine,
-    predictor: Predictor,
+    /// One predictor per shard: arrival tracks are keyed by workload and
+    /// workloads are shard-partitioned, so prediction state needs no
+    /// cross-shard lock either.
+    predictors: Vec<Predictor>,
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
 }
@@ -93,14 +114,20 @@ impl Platform {
             reap_enabled: cfg.policy.reap_enabled,
             hostenv: svc.hostenv.clone(),
         });
+        let shard_count = if cfg.shards > 0 {
+            cfg.shards
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        };
         Ok(Self {
             engine: PolicyEngine::new(cfg.policy.clone(), mode),
-            predictor: Predictor::new(0.3),
+            predictors: (0..shard_count).map(|_| Predictor::new(0.3)).collect(),
             metrics: Arc::new(Metrics::new()),
             svc,
             cfg,
-            pools: Mutex::new(HashMap::new()),
-            specs: Mutex::new(HashMap::new()),
+            shards: ShardSet::new(shard_count),
             next_id: AtomicU64::new(1),
         })
     }
@@ -109,23 +136,31 @@ impl Platform {
         &self.svc
     }
 
-    /// Register a function (workload) with the platform.
+    /// Number of control-plane shards (fixed at construction).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Register a function (workload) with the platform. The function's
+    /// pool and spec land on the shard its name hashes to.
     pub fn deploy(&self, spec: WorkloadSpec) -> Result<()> {
         spec.validate().map_err(|e| anyhow::anyhow!(e))?;
-        self.pools
-            .lock()
-            .unwrap()
-            .entry(spec.name.clone())
-            .or_default();
-        self.specs
-            .lock()
-            .unwrap()
-            .insert(spec.name.clone(), spec);
+        let mut guard = self.shards.shard_for(&spec.name).lock();
+        guard.pools.entry(spec.name.clone()).or_default();
+        guard.specs.insert(spec.name.clone(), spec);
         Ok(())
     }
 
+    /// All deployed workload names (sorted — shard iteration order is not
+    /// meaningful).
     pub fn deployed(&self) -> Vec<String> {
-        self.specs.lock().unwrap().keys().cloned().collect()
+        let mut names: Vec<String> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.lock().specs.keys().cloned().collect::<Vec<_>>())
+            .collect();
+        names.sort();
+        names
     }
 
     /// Host memory currently committed (the pressure signal).
@@ -134,72 +169,87 @@ impl Platform {
     }
 
     /// Serve one request at virtual time `now_vns`. Synchronous: routes,
-    /// cold-starts if needed, executes, records metrics.
+    /// cold-starts if needed, executes, records metrics. Only the target
+    /// function's shard lock is taken, and only for the route/insert steps
+    /// — never across the cold start or the request execution.
     pub fn request_at(&self, workload: &str, now_vns: u64) -> Result<RequestReport> {
-        let spec = self
-            .specs
-            .lock()
-            .unwrap()
-            .get(workload)
-            .cloned()
-            .with_context(|| format!("workload `{workload}` not deployed"))?;
-        self.predictor.observe(workload, now_vns);
+        let shard_idx = self.shards.index_for(workload);
+        let shard = self.shards.get(shard_idx);
 
         let clock = Clock::new();
-        // Route under the pools lock; run outside it.
-        let (sandbox, last_active, served_from) = {
-            let mut pools = self.pools.lock().unwrap();
-            let pool = pools.get_mut(workload).unwrap();
+        // Route — and reserve the chosen instance — under the shard lock;
+        // run outside it. The warm path allocates nothing under the lock;
+        // the spec is cloned only when a cold start actually needs it.
+        let (sandbox, last_active, reservation, served_from) = {
+            let mut guard = shard.lock();
+            let pool = guard
+                .pools
+                .get_mut(workload)
+                .with_context(|| format!("workload `{workload}` not deployed"))?;
+            // Feed the arrival into this shard's predictor now that the
+            // workload is known to be deployed — even if the serve below
+            // fails, the arrival happened and must shape the EWMA.
+            self.predictors[shard_idx].observe(workload, now_vns);
             match router::route(pool) {
                 router::Route::Existing { idx, state } => {
                     let inst = &pool.instances[idx];
+                    let reservation = inst
+                        .try_reserve()
+                        .expect("routed instance must be reservable under the shard lock");
                     (
                         inst.sandbox.clone(),
                         inst.last_active.clone(),
+                        reservation,
                         ServedFrom::from_state(state),
                     )
                 }
                 router::Route::ColdStart => {
+                    let spec = guard
+                        .specs
+                        .get(workload)
+                        .cloned()
+                        .expect("deployed workload must have a spec");
                     let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-                    drop(pools); // cold start is slow; don't hold the lock
-                    let sb = Sandbox::cold_start(id, spec.clone(), self.svc.clone(), &clock)?;
+                    drop(guard); // cold start is slow; don't hold the lock
+                    let sb = Sandbox::cold_start(id, spec, self.svc.clone(), &clock)?;
                     self.metrics
                         .counters
                         .cold_starts
                         .fetch_add(1, Ordering::Relaxed);
-                    let mut pools = self.pools.lock().unwrap();
-                    let pool = pools.get_mut(workload).unwrap();
+                    let mut guard = shard.lock();
+                    let pool = guard
+                        .pools
+                        .get_mut(workload)
+                        .expect("deployed workload must have a pool");
                     let inst = pool.add(sb, now_vns);
+                    let reservation = inst
+                        .try_reserve()
+                        .expect("fresh instance must be reservable");
                     (
                         inst.sandbox.clone(),
                         inst.last_active.clone(),
+                        reservation,
                         ServedFrom::ColdStart,
                     )
                 }
             }
         };
 
-        let outcome = {
-            let mut sb = sandbox.lock().unwrap();
-            if !sb.state().accepts_requests() {
-                bail!(
-                    "routed to non-accepting container in state {}",
-                    sb.state()
-                );
-            }
-            if sb.state() == ContainerState::Hibernate {
-                self.metrics
-                    .counters
-                    .demand_wakes
-                    .fetch_add(1, Ordering::Relaxed);
-            }
-            sb.handle_request(&clock)?
-        };
+        let result = self.execute_request(&sandbox, &clock);
 
         let charged_ns = clock.charged_ns();
         let measured_ns = clock.measured_ns();
         let latency_ns = charged_ns + measured_ns;
-        last_active.fetch_max(now_vns + latency_ns, Ordering::Relaxed);
+        // Bump last-activity — only for served requests, so a persistently
+        // failing instance still ages toward hibernation/eviction — before
+        // releasing the reservation, so the policy loop never sees a
+        // just-served instance with stale idleness.
+        if result.is_ok() {
+            last_active.fetch_max(now_vns + latency_ns, Ordering::Relaxed);
+        }
+        drop(reservation); // panic-safe: would also release on unwind
+        let outcome = result?;
+
         self.metrics.record_latency(workload, served_from, latency_ns);
         Ok(RequestReport {
             workload: workload.to_string(),
@@ -211,47 +261,102 @@ impl Platform {
         })
     }
 
+    /// Run a routed request against its reserved sandbox. The caller holds
+    /// the reservation and releases it afterwards.
+    fn execute_request(
+        &self,
+        sandbox: &Arc<Mutex<Sandbox>>,
+        clock: &Clock,
+    ) -> Result<RequestOutcome> {
+        let mut sb = sandbox.lock().unwrap();
+        if !sb.state().accepts_requests() {
+            bail!(
+                "routed to non-accepting container in state {}",
+                sb.state()
+            );
+        }
+        if sb.state() == ContainerState::Hibernate {
+            self.metrics
+                .counters
+                .demand_wakes
+                .fetch_add(1, Ordering::Relaxed);
+        }
+        sb.handle_request(clock)
+    }
+
     /// Run one policy tick at virtual time `now_vns`: hibernate idle
     /// containers, evict stale ones, anticipatorily wake predicted ones.
+    /// Shards are walked incrementally — each decide/apply/sweep step takes
+    /// only the one shard's lock, so a tick never freezes the whole
+    /// control plane.
+    ///
+    /// Ticks are meant to be driven by a single policy thread (plus
+    /// explicit calls in replay/tests): actions carry pool indices, so two
+    /// ticks racing each other's `sweep_dead` could retarget an action.
+    /// Concurrent *requests* are always safe — they only append instances
+    /// and reservations re-validate state before any action applies.
     pub fn policy_tick(&self, now_vns: u64) -> Result<Vec<Action>> {
         let memory_used = self.memory_used();
         let mut applied = Vec::new();
-        let workloads: Vec<String> = self.pools.lock().unwrap().keys().cloned().collect();
-        for w in workloads {
-            let actions = {
-                let pools = self.pools.lock().unwrap();
-                let Some(pool) = pools.get(&w) else { continue };
-                self.engine
-                    .decide(&w, pool, now_vns, memory_used, Some(&self.predictor))
-            };
-            for action in actions {
-                let ok = self.apply(&action, now_vns)?;
-                if ok {
-                    applied.push(action);
+        for si in 0..self.shards.len() {
+            let shard = self.shards.get(si);
+            let workloads: Vec<String> = shard.lock().pools.keys().cloned().collect();
+            for w in workloads {
+                let actions = {
+                    let guard = shard.lock();
+                    let Some(pool) = guard.pools.get(&w) else { continue };
+                    self.engine
+                        .decide(&w, pool, now_vns, memory_used, Some(&self.predictors[si]))
+                };
+                for action in actions {
+                    let ok = self.apply(&action, now_vns)?;
+                    if ok {
+                        applied.push(action);
+                    }
+                }
+                if let Some(p) = shard.lock().pools.get_mut(&w) {
+                    p.sweep_dead();
                 }
             }
-            self.pools.lock().unwrap().get_mut(&w).map(|p| p.sweep_dead());
         }
         Ok(applied)
     }
 
     fn apply(&self, action: &Action, now_vns: u64) -> Result<bool> {
         let clock = Clock::new();
-        let (sandbox, last_active) = {
-            let pools = self.pools.lock().unwrap();
-            let (w, idx) = match action {
-                Action::Hibernate { workload, idx }
-                | Action::Evict { workload, idx }
-                | Action::Wake { workload, idx } => (workload, *idx),
-            };
-            let Some(pool) = pools.get(w) else {
+        let (w, idx) = match action {
+            Action::Hibernate { workload, idx }
+            | Action::Evict { workload, idx }
+            | Action::Wake { workload, idx } => (workload.as_str(), *idx),
+        };
+        let (sandbox, last_active, reservation) = {
+            let guard = self.shards.shard_for(w).lock();
+            let Some(pool) = guard.pools.get(w) else {
                 return Ok(false);
             };
             let Some(inst) = pool.instances.get(idx) else {
                 return Ok(false);
             };
-            (inst.sandbox.clone(), inst.last_active.clone())
+            let Some(reservation) = inst.try_reserve() else {
+                return Ok(false); // raced with a request
+            };
+            (inst.sandbox.clone(), inst.last_active.clone(), reservation)
         };
+        let result = self.apply_to_sandbox(action, &sandbox, &last_active, now_vns, &clock);
+        drop(reservation);
+        result
+    }
+
+    /// Apply one policy action to its reserved sandbox. The caller holds
+    /// the reservation and releases it afterwards.
+    fn apply_to_sandbox(
+        &self,
+        action: &Action,
+        sandbox: &Arc<Mutex<Sandbox>>,
+        last_active: &AtomicU64,
+        now_vns: u64,
+        clock: &Clock,
+    ) -> Result<bool> {
         let mut sb = sandbox.lock().unwrap();
         match action {
             Action::Hibernate { .. } => {
@@ -261,11 +366,18 @@ impl Platform {
                 ) {
                     return Ok(false); // raced with a request
                 }
+                // Note: an instance served between decide() and here is
+                // still deflated (its state is back to Warm/WokenUp). That
+                // race is benign — the next request demand-wakes it — and
+                // an idleness re-check can't be applied here because
+                // pressure-driven deflation legitimately targets non-idle
+                // instances (and virtual-time replay ticks may run at
+                // `now_vns` before a prior request's completion stamp).
                 // Deliver SIGSTOP through the signal queue (§3.1) and let
                 // the runtime act on it at the safe point.
                 sb.signals.send(crate::container::signal::ControlSignal::Stop);
                 let before = sb.swap_stats();
-                if sb.drain_signals(&clock)? == 0 {
+                if sb.drain_signals(clock)? == 0 {
                     return Ok(false);
                 }
                 let after = sb.swap_stats();
@@ -302,7 +414,7 @@ impl Platform {
                 }
                 // SIGCONT through the signal queue (Fig. 3 ⑤).
                 sb.signals.send(crate::container::signal::ControlSignal::Cont);
-                if sb.drain_signals(&clock)? == 0 {
+                if sb.drain_signals(clock)? == 0 {
                     return Ok(false);
                 }
                 // Waking resets idleness: the wake is in anticipation of an
@@ -334,23 +446,40 @@ impl Platform {
         Ok(reports)
     }
 
-    /// Snapshot: per-workload instance states + PSS (the Fig. 7 data).
+    /// Snapshot: per-workload instance states + PSS (the Fig. 7 data),
+    /// sorted by workload name. Diagnostic — may wait on in-flight
+    /// requests' sandboxes, but never while holding a shard lock, so a
+    /// slow request can't stall routing for the rest of its shard.
     pub fn pool_snapshot(&self) -> Vec<(String, Vec<(ContainerState, u64)>)> {
-        let pools = self.pools.lock().unwrap();
-        pools
-            .iter()
-            .map(|(w, pool)| {
-                let rows = pool
-                    .instances
+        let mut out: Vec<(String, Vec<(ContainerState, u64)>)> = Vec::new();
+        for shard in self.shards.iter() {
+            // Clone sandbox handles under the shard lock; read them after
+            // dropping it.
+            let handles: Vec<(String, Vec<Arc<Mutex<Sandbox>>>)> = {
+                let guard = shard.lock();
+                guard
+                    .pools
                     .iter()
-                    .map(|i| {
-                        let sb = i.sandbox.lock().unwrap();
+                    .map(|(w, pool)| {
+                        let sandboxes =
+                            pool.instances.iter().map(|i| i.sandbox.clone()).collect();
+                        (w.clone(), sandboxes)
+                    })
+                    .collect()
+            };
+            for (w, sandboxes) in handles {
+                let rows = sandboxes
+                    .iter()
+                    .map(|s| {
+                        let sb = s.lock().unwrap();
                         (sb.state(), sb.footprint().total_bytes())
                     })
                     .collect();
-                (w.clone(), rows)
-            })
-            .collect()
+                out.push((w, rows));
+            }
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
     }
 
     /// Direct access for tests/benches that need a single sandbox.
@@ -361,8 +490,9 @@ impl Platform {
         f: impl FnOnce(&mut Sandbox) -> T,
     ) -> Option<T> {
         let sandbox = {
-            let pools = self.pools.lock().unwrap();
-            pools
+            let guard = self.shards.shard_for(workload).lock();
+            guard
+                .pools
                 .get(workload)?
                 .instances
                 .get(idx)?
@@ -374,9 +504,10 @@ impl Platform {
     }
 
     pub fn instance_count(&self, workload: &str) -> usize {
-        self.pools
+        self.shards
+            .shard_for(workload)
             .lock()
-            .unwrap()
+            .pools
             .get(workload)
             .map(|p| p.len())
             .unwrap_or(0)
@@ -494,5 +625,45 @@ mod tests {
             used_before,
             p.memory_used()
         );
+    }
+
+    #[test]
+    fn deploys_partition_across_shards() {
+        let mut cfg = PlatformConfig::default();
+        cfg.host_memory = 512 << 20;
+        cfg.shards = 4;
+        cfg.cost = CostModel::free();
+        cfg.policy.predictive_wakeup = false;
+        cfg.swap_dir = std::env::temp_dir()
+            .join(format!("qh-shards-test-{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let p = Platform::new(cfg, Arc::new(NoopRunner)).unwrap();
+        assert_eq!(p.shard_count(), 4);
+        let mut names = Vec::new();
+        for i in 0..8 {
+            let mut s = scaled_for_test(golang_hello(), 32);
+            s.name = format!("fn-{i}");
+            names.push(s.name.clone());
+            p.deploy(s).unwrap();
+        }
+        names.sort();
+        assert_eq!(p.deployed(), names);
+        // Every function serves independently of its shard placement.
+        for n in &names {
+            let r = p.request_at(n, 0).unwrap();
+            assert_eq!(r.served_from, ServedFrom::ColdStart);
+            assert_eq!(p.instance_count(n), 1);
+        }
+        assert_eq!(p.metrics.counters.requests.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn shard_count_defaults_to_parallelism() {
+        let p = test_platform(1000);
+        let want = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        assert_eq!(p.shard_count(), want);
     }
 }

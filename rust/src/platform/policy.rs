@@ -80,6 +80,11 @@ impl PolicyEngine {
             .iter()
             .enumerate()
             .filter_map(|(idx, inst)| {
+                // Reserved = request/policy action in flight: not idle, and
+                // reading `state()` would block on the sandbox mutex.
+                if inst.is_reserved() {
+                    return None;
+                }
                 let s = inst.state();
                 match s {
                     ContainerState::Warm | ContainerState::WokenUp => {
@@ -114,7 +119,8 @@ impl PolicyEngine {
 
         // Old Hibernate containers are eventually evicted too.
         for (idx, inst) in pool.instances.iter().enumerate() {
-            if inst.state() == ContainerState::Hibernate
+            if !inst.is_reserved()
+                && inst.state() == ContainerState::Hibernate
                 && inst.idle_ns(now_vns) >= evict_idle_ns
             {
                 actions.push(Action::Evict {
@@ -133,7 +139,7 @@ impl PolicyEngine {
                         .instances
                         .iter()
                         .enumerate()
-                        .find(|(_, i)| i.state() == ContainerState::Hibernate)
+                        .find(|(_, i)| !i.is_reserved() && i.state() == ContainerState::Hibernate)
                     {
                         actions.push(Action::Wake {
                             workload: workload.to_string(),

@@ -7,7 +7,7 @@
 
 use crate::container::sandbox::Sandbox;
 use crate::container::state::ContainerState;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// A pooled instance.
@@ -18,6 +18,12 @@ pub struct Instance {
     pub last_active: Arc<AtomicU64>,
     /// Virtual time the instance was created.
     pub created_vns: u64,
+    /// Reservation flag: exactly one owner (a request handler or the policy
+    /// loop) drives the sandbox through a state transition at a time. The
+    /// router and the policy engine *skip* reserved instances instead of
+    /// blocking on the sandbox mutex, which keeps shard critical sections
+    /// short — a busy sandbox (mid-request, mid-swap) never stalls routing.
+    busy: Arc<AtomicBool>,
 }
 
 impl Instance {
@@ -35,6 +41,39 @@ impl Instance {
 
     pub fn idle_ns(&self, now_vns: u64) -> u64 {
         now_vns.saturating_sub(self.last_active_vns())
+    }
+
+    /// Is the instance currently reserved (request in flight or policy
+    /// action in progress)?
+    pub fn is_reserved(&self) -> bool {
+        self.busy.load(Ordering::Acquire)
+    }
+
+    /// Try to reserve the instance. Returns the reservation guard, or
+    /// `None` if another owner holds it. Callers reserve under the shard
+    /// lock (so routing decisions and reservations are atomic); the guard
+    /// releases on drop — including on panic, so a poisoned request can
+    /// never leak a permanently-invisible instance.
+    pub fn try_reserve(&self) -> Option<Reservation> {
+        if self
+            .busy
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            Some(Reservation(self.busy.clone()))
+        } else {
+            None
+        }
+    }
+}
+
+/// Exclusive ownership of an instance's transition rights, released on
+/// drop. Holds no lock — routing/policy simply skip reserved instances.
+pub struct Reservation(Arc<AtomicBool>);
+
+impl Drop for Reservation {
+    fn drop(&mut self) {
+        self.0.store(false, Ordering::Release);
     }
 }
 
@@ -54,6 +93,7 @@ impl FunctionPool {
             sandbox: Arc::new(Mutex::new(sandbox)),
             last_active: Arc::new(AtomicU64::new(now_vns)),
             created_vns: now_vns,
+            busy: Arc::new(AtomicBool::new(false)),
         });
         self.instances.last().unwrap()
     }
@@ -71,10 +111,15 @@ impl FunctionPool {
         self.instances.is_empty()
     }
 
-    /// Drop Dead instances (post-eviction cleanup).
+    /// Drop Dead instances (post-eviction cleanup). Reserved instances are
+    /// skipped without touching their sandbox mutex: a reserved instance is
+    /// never Dead (eviction happens under the reservation and releases it
+    /// only afterwards), and callers hold the shard lock — blocking here on
+    /// a busy sandbox would stall the whole shard behind one slow request.
     pub fn sweep_dead(&mut self) -> usize {
         let before = self.instances.len();
-        self.instances.retain(|i| i.state() != ContainerState::Dead);
+        self.instances
+            .retain(|i| i.is_reserved() || i.state() != ContainerState::Dead);
         before - self.instances.len()
     }
 }
@@ -120,5 +165,67 @@ mod tests {
             .unwrap();
         assert_eq!(pool.sweep_dead(), 1);
         assert_eq!(pool.len(), 1);
+    }
+
+    #[test]
+    fn reservation_is_exclusive_until_dropped() {
+        let svc = SandboxServices::new_local(
+            256 << 20,
+            CostModel::free(),
+            SharingConfig::default(),
+            Arc::new(NoopRunner),
+            "pool-reserve-test",
+        )
+        .unwrap();
+        let mut pool = FunctionPool::new();
+        pool.add(mini_sandbox(1, &svc), 0);
+        let inst = &pool.instances[0];
+        assert!(!inst.is_reserved());
+        let guard = inst.try_reserve().expect("first reserve succeeds");
+        assert!(inst.is_reserved());
+        assert!(inst.try_reserve().is_none(), "second reserve must fail");
+        drop(guard);
+        assert!(!inst.is_reserved(), "drop releases");
+        assert!(
+            inst.try_reserve().is_some(),
+            "released instance is reservable again"
+        );
+    }
+
+    #[test]
+    fn sweep_skips_reserved_instances_without_blocking() {
+        let svc = SandboxServices::new_local(
+            256 << 20,
+            CostModel::free(),
+            SharingConfig::default(),
+            Arc::new(NoopRunner),
+            "pool-sweep-test",
+        )
+        .unwrap();
+        let mut pool = FunctionPool::new();
+        pool.add(mini_sandbox(1, &svc), 0);
+        pool.add(mini_sandbox(2, &svc), 0);
+        pool.instances[0]
+            .sandbox
+            .lock()
+            .unwrap()
+            .terminate()
+            .unwrap();
+        // Reserve instance 1 and hold its sandbox mutex on another thread —
+        // the sweep must neither remove it nor block on it.
+        let guard = pool.instances[1].try_reserve().unwrap();
+        let sb = pool.instances[1].sandbox.clone();
+        let (release_tx, release_rx) = std::sync::mpsc::channel::<()>();
+        let holder = std::thread::spawn(move || {
+            let _sb = sb.lock().unwrap();
+            release_rx.recv().unwrap();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(pool.sweep_dead(), 1, "only the dead instance is swept");
+        assert_eq!(pool.len(), 1);
+        release_tx.send(()).unwrap();
+        holder.join().unwrap();
+        drop(guard);
+        assert_eq!(pool.sweep_dead(), 0);
     }
 }

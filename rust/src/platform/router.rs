@@ -4,7 +4,10 @@
 //! `Warm ≈ WokenUp < Hibernate ≪ cold start` — so route to an idle Warm
 //! container first, then a WokenUp one, then wake a Hibernate one, and only
 //! cold-start when nothing reusable exists. Busy containers are skipped
-//! (one in-flight request per instance).
+//! (one in-flight request per instance): an instance reserved by an
+//! in-flight request or a policy action is passed over *without touching
+//! its sandbox mutex*, so routing never blocks behind slow work and the
+//! shard critical section stays short.
 
 use super::pool::FunctionPool;
 use crate::container::state::ContainerState;
@@ -25,6 +28,12 @@ pub enum Route {
 pub fn route(pool: &FunctionPool) -> Route {
     let mut best: Option<(usize, ContainerState, u64)> = None;
     for (idx, inst) in pool.instances.iter().enumerate() {
+        // Reserved = a request or policy action owns the sandbox right now.
+        // Skip before reading `state()` — the state read locks the sandbox
+        // mutex, which the owner may hold for the whole request.
+        if inst.is_reserved() {
+            continue;
+        }
         let state = inst.state();
         if !state.accepts_requests() {
             continue;
@@ -134,6 +143,23 @@ mod tests {
             Route::Existing { state, .. } => assert_eq!(state, ContainerState::Warm),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn reserved_instances_skipped() {
+        let (svc, mut pool) = rig();
+        pool.add(spawn(&svc, 1), 100);
+        pool.add(spawn(&svc, 2), 900);
+        // Reserve the better (most recent) instance: routing must fall back
+        // to the other Warm one.
+        let _r1 = pool.instances[1].try_reserve().unwrap();
+        match route(&pool) {
+            Route::Existing { idx, .. } => assert_eq!(idx, 0),
+            other => panic!("{other:?}"),
+        }
+        // Both reserved → nothing reusable → cold start.
+        let _r0 = pool.instances[0].try_reserve().unwrap();
+        assert_eq!(route(&pool), Route::ColdStart);
     }
 
     #[test]

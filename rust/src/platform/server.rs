@@ -1,16 +1,30 @@
 //! Threaded serving front-end: real worker threads over the same platform
 //! primitives the virtual-time replay uses. This is what the end-to-end
-//! serve demo runs: a request bus (std mpsc — no async runtime in the
-//! offline registry), N workers, and a background policy thread issuing
-//! SIGSTOP/SIGCONT per the paper's control plane.
+//! serve demo runs: per-worker request queues (std mpsc — no async runtime
+//! in the offline registry), N workers, and a background policy thread
+//! issuing SIGSTOP/SIGCONT per the paper's control plane.
+//!
+//! # Dispatch
+//!
+//! Each worker owns a private channel; there is no shared queue (and so no
+//! shared-receiver mutex for every worker to contend on). Submissions are
+//! dispatched with **function affinity**: a workload hashes to a preferred
+//! worker, so requests for the same function land on the same worker —
+//! FIFO per worker then gives per-function serve ordering, warm instances
+//! stay warm under one worker's cache, and a single function cannot occupy
+//! more than one worker unless the dispatcher spills. When the preferred
+//! worker's queue runs more than `spill_threshold` deeper than the
+//! least-loaded worker's, the request spills to the least-loaded worker
+//! instead (sacrificing per-function ordering for throughput under skew).
 //!
 //! Wall-clock time doubles as the virtual timeline (1 ns = 1 ns): idleness
 //! for the hibernate policy is real idleness.
 
 use super::{Platform, RequestReport};
-use anyhow::Result;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use crate::util::fnv1a;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -21,9 +35,40 @@ pub struct Submission {
     pub reply: mpsc::Sender<Result<RequestReport>>,
 }
 
+/// Server tuning knobs.
+pub struct ServerConfig {
+    /// Worker threads (clamped to ≥ 1).
+    pub workers: usize,
+    /// Policy tick cadence.
+    pub policy_interval: Duration,
+    /// How much deeper than the least-loaded worker the affinity worker's
+    /// queue may run before a submission spills off it. `None` = strict
+    /// affinity (never spill — preserves per-function serve ordering
+    /// unconditionally).
+    pub spill_threshold: Option<usize>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            policy_interval: Duration::from_millis(20),
+            spill_threshold: Some(2),
+        }
+    }
+}
+
+/// One worker's dispatch endpoint: its private queue plus a depth gauge
+/// (queued + in-flight) the dispatcher load-balances on.
+struct WorkerSlot {
+    tx: mpsc::Sender<Submission>,
+    depth: Arc<AtomicUsize>,
+}
+
 /// Handle to a running server.
 pub struct Server {
-    tx: mpsc::Sender<Submission>,
+    slots: Vec<WorkerSlot>,
+    spill_threshold: Option<usize>,
     stop: Arc<AtomicBool>,
     workers: Vec<JoinHandle<()>>,
     policy_thread: Option<JoinHandle<()>>,
@@ -31,52 +76,88 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start `workers` serving threads plus the policy loop.
+    /// Start `workers` serving threads plus the policy loop, with default
+    /// spill behavior.
     pub fn start(platform: Arc<Platform>, workers: usize, policy_interval: Duration) -> Server {
-        let (tx, rx) = mpsc::channel::<Submission>();
-        let rx = Arc::new(Mutex::new(rx));
+        Self::start_with(
+            platform,
+            ServerConfig {
+                workers,
+                policy_interval,
+                ..ServerConfig::default()
+            },
+        )
+    }
+
+    /// Start with explicit tuning.
+    pub fn start_with(platform: Arc<Platform>, cfg: ServerConfig) -> Server {
         let stop = Arc::new(AtomicBool::new(false));
         let epoch = Instant::now();
+        let n = cfg.workers.max(1);
 
-        let mut handles = Vec::new();
-        for _ in 0..workers.max(1) {
-            let rx = rx.clone();
+        let mut slots = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = mpsc::channel::<Submission>();
+            let depth = Arc::new(AtomicUsize::new(0));
+            let worker_depth = depth.clone();
             let platform = platform.clone();
             let stop = stop.clone();
-            handles.push(std::thread::spawn(move || loop {
-                let msg = {
-                    let rx = rx.lock().unwrap();
-                    rx.recv_timeout(Duration::from_millis(50))
+            handles.push(std::thread::spawn(move || {
+                let serve = |sub: Submission| {
+                    let now_vns = epoch_ns(epoch);
+                    let report = platform.request_at(&sub.workload, now_vns);
+                    worker_depth.fetch_sub(1, Ordering::Release);
+                    let _ = sub.reply.send(report);
                 };
-                match msg {
-                    Ok(sub) => {
-                        let now_vns = epoch_ns(epoch);
-                        let report = platform.request_at(&sub.workload, now_vns);
-                        let _ = sub.reply.send(report);
-                    }
-                    Err(mpsc::RecvTimeoutError::Timeout) => {
-                        if stop.load(Ordering::Relaxed) {
-                            return;
+                loop {
+                    match rx.recv_timeout(Duration::from_millis(50)) {
+                        Ok(sub) => serve(sub),
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            if stop.load(Ordering::Relaxed) {
+                                // A submission accepted just before shutdown
+                                // may have landed after this recv timed out:
+                                // drain before exiting so an accepted request
+                                // is never abandoned.
+                                while let Ok(sub) = rx.try_recv() {
+                                    serve(sub);
+                                }
+                                return;
+                            }
                         }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => return,
                     }
-                    Err(mpsc::RecvTimeoutError::Disconnected) => return,
                 }
             }));
+            slots.push(WorkerSlot { tx, depth });
         }
 
         let policy_thread = {
             let platform = platform.clone();
             let stop = stop.clone();
+            let interval = cfg.policy_interval;
+            // Sleep in small steps so shutdown never waits out a long
+            // policy interval.
+            let step = Duration::from_millis(10).min(interval.max(Duration::from_millis(1)));
             Some(std::thread::spawn(move || {
-                while !stop.load(Ordering::Relaxed) {
-                    std::thread::sleep(policy_interval);
-                    let _ = platform.policy_tick(epoch_ns(epoch));
+                let mut since_tick = Duration::ZERO;
+                loop {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    std::thread::sleep(step);
+                    since_tick += step;
+                    if since_tick >= interval {
+                        since_tick = Duration::ZERO;
+                        let _ = platform.policy_tick(epoch_ns(epoch));
+                    }
                 }
             }))
         };
 
         Server {
-            tx,
+            slots,
+            spill_threshold: cfg.spill_threshold,
             stop,
             workers: handles,
             policy_thread,
@@ -84,36 +165,97 @@ impl Server {
         }
     }
 
-    /// Submit a request; returns a receiver for the report.
-    pub fn submit(&self, workload: &str) -> mpsc::Receiver<Result<RequestReport>> {
+    /// Pick the worker for `workload`: the affinity worker unless its queue
+    /// runs past the spill threshold, in which case the least-loaded one.
+    fn pick_worker(&self, workload: &str) -> usize {
+        let n = self.slots.len();
+        let preferred = (fnv1a(workload) % n as u64) as usize;
+        let Some(threshold) = self.spill_threshold else {
+            return preferred;
+        };
+        let preferred_depth = self.slots[preferred].depth.load(Ordering::Acquire);
+        if preferred_depth <= threshold {
+            // min_depth ≥ 0, so no spill is possible: skip the full scan.
+            return preferred;
+        }
+        let (min_idx, min_depth) = self
+            .slots
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (i, s.depth.load(Ordering::Acquire)))
+            .min_by_key(|&(i, d)| (d, i))
+            .expect("server has at least one worker");
+        if preferred_depth > min_depth + threshold {
+            min_idx
+        } else {
+            preferred
+        }
+    }
+
+    /// Submit a request; returns a receiver for the report. Errors if the
+    /// server has shut down (or the target worker died) — the submission
+    /// was *not* enqueued and will never be served.
+    pub fn submit(&self, workload: &str) -> Result<mpsc::Receiver<Result<RequestReport>>> {
+        if self.slots.is_empty() {
+            bail!("server is shut down; submission for `{workload}` rejected");
+        }
         let (reply, rx) = mpsc::channel();
-        let _ = self.tx.send(Submission {
-            workload: workload.to_string(),
-            reply,
-        });
-        rx
+        let idx = self.pick_worker(workload);
+        let slot = &self.slots[idx];
+        slot.depth.fetch_add(1, Ordering::AcqRel);
+        if slot
+            .tx
+            .send(Submission {
+                workload: workload.to_string(),
+                reply,
+            })
+            .is_err()
+        {
+            slot.depth.fetch_sub(1, Ordering::AcqRel);
+            bail!("server worker {idx} is gone; submission for `{workload}` rejected");
+        }
+        Ok(rx)
     }
 
     /// Submit and wait.
     pub fn call(&self, workload: &str) -> Result<RequestReport> {
-        self.submit(workload)
+        self.submit(workload)?
             .recv()
-            .map_err(|_| anyhow::anyhow!("server dropped the request"))?
+            .map_err(|_| anyhow::anyhow!("server dropped the request for `{workload}`"))?
     }
 
     pub fn uptime_ns(&self) -> u64 {
         epoch_ns(self.epoch)
     }
 
-    /// Stop workers and the policy loop; joins all threads.
-    pub fn shutdown(mut self) {
+    /// Stop workers and the policy loop; joins all threads. Queued
+    /// submissions are drained before the workers exit. After shutdown,
+    /// [`Server::submit`] reports the shutdown instead of handing back a
+    /// receiver that can only fail.
+    pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
+        // Dropping the senders lets each worker drain its backlog and exit
+        // on `Disconnected` without waiting out the recv timeout.
+        self.slots.clear();
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
         if let Some(h) = self.policy_thread.take() {
             let _ = h.join();
         }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            // Don't block the unwind on a backlog drain: signal stop and
+            // let the field drop release the senders — workers finish
+            // their queues and exit detached.
+            self.stop.store(true, Ordering::Relaxed);
+            return;
+        }
+        self.shutdown();
     }
 }
 
@@ -148,8 +290,10 @@ mod tests {
     #[test]
     fn serves_concurrent_requests() {
         let p = platform();
-        let server = Server::start(p.clone(), 4, Duration::from_millis(10));
-        let rxs: Vec<_> = (0..8).map(|_| server.submit("golang-hello")).collect();
+        let mut server = Server::start(p.clone(), 4, Duration::from_millis(10));
+        let rxs: Vec<_> = (0..8)
+            .map(|_| server.submit("golang-hello").unwrap())
+            .collect();
         let mut served = 0;
         for rx in rxs {
             let report = rx.recv().unwrap().unwrap();
@@ -158,16 +302,13 @@ mod tests {
         }
         assert_eq!(served, 8);
         server.shutdown();
-        assert_eq!(
-            p.metrics.counters.requests.load(Ordering::Relaxed),
-            8
-        );
+        assert_eq!(p.metrics.counters.requests.load(Ordering::Relaxed), 8);
     }
 
     #[test]
     fn policy_thread_hibernates_idle_containers() {
         let p = platform();
-        let server = Server::start(p.clone(), 2, Duration::from_millis(10));
+        let mut server = Server::start(p.clone(), 2, Duration::from_millis(10));
         server.call("golang-hello").unwrap();
         // Wait past the 30 ms idle threshold for the policy thread to act.
         std::thread::sleep(Duration::from_millis(150));
@@ -179,5 +320,76 @@ mod tests {
         );
         server.shutdown();
         assert!(p.metrics.counters.hibernations.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn submit_after_shutdown_reports_real_error() {
+        let p = platform();
+        let mut server = Server::start(p, 2, Duration::from_millis(10));
+        server.call("golang-hello").unwrap();
+        server.shutdown();
+        let err = server.submit("golang-hello").unwrap_err();
+        assert!(
+            err.to_string().contains("shut down"),
+            "error must name the shutdown, got: {err}"
+        );
+        let err = server.call("golang-hello").unwrap_err();
+        assert!(err.to_string().contains("shut down"), "{err}");
+    }
+
+    #[test]
+    fn shutdown_drains_backlog() {
+        let p = platform();
+        let mut server = Server::start(p.clone(), 1, Duration::from_millis(500));
+        let rxs: Vec<_> = (0..16)
+            .map(|_| server.submit("golang-hello").unwrap())
+            .collect();
+        server.shutdown();
+        for rx in rxs {
+            rx.recv().expect("queued submission must still be served").unwrap();
+        }
+        assert_eq!(p.metrics.counters.requests.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn affinity_is_deterministic() {
+        let p = platform();
+        let server = Server::start_with(
+            p,
+            ServerConfig {
+                workers: 4,
+                policy_interval: Duration::from_secs(3600),
+                spill_threshold: None,
+            },
+        );
+        let w0 = server.pick_worker("golang-hello");
+        for _ in 0..10 {
+            assert_eq!(server.pick_worker("golang-hello"), w0);
+        }
+        assert!(w0 < 4);
+    }
+
+    #[test]
+    fn spill_moves_to_least_loaded_only_past_threshold() {
+        let p = platform();
+        let server = Server::start_with(
+            p,
+            ServerConfig {
+                workers: 4,
+                policy_interval: Duration::from_secs(3600),
+                spill_threshold: Some(2),
+            },
+        );
+        let preferred = server.pick_worker("golang-hello");
+        // At exactly the threshold over the least-loaded worker (0), the
+        // submission stays on its affinity worker...
+        server.slots[preferred].depth.store(2, Ordering::Release);
+        assert_eq!(server.pick_worker("golang-hello"), preferred);
+        // ...one deeper, it spills to a least-loaded worker.
+        server.slots[preferred].depth.store(3, Ordering::Release);
+        let picked = server.pick_worker("golang-hello");
+        assert_ne!(picked, preferred, "must spill off the overloaded worker");
+        assert_eq!(server.slots[picked].depth.load(Ordering::Acquire), 0);
+        server.slots[preferred].depth.store(0, Ordering::Release);
     }
 }

@@ -1,0 +1,135 @@
+//! Control-plane sharding: the lock-granularity layer under [`super::Platform`].
+//!
+//! The platform's mutable state — per-function [`FunctionPool`]s and
+//! [`WorkloadSpec`]s — is partitioned across a fixed array of shards by a
+//! deterministic hash of the function name ([`crate::util::fnv1a`]). Each
+//! shard guards its slice behind its own mutex, so the request hot path for
+//! function A never contends with — let alone blocks on — a lock held for
+//! function B on a different shard, and the policy loop walks shards
+//! incrementally instead of freezing the whole control plane per tick.
+//!
+//! Invariants:
+//! * a function's pool and spec always live on the same shard (single lock
+//!   acquisition per request);
+//! * shard count is fixed at platform construction (default: one per CPU),
+//!   so `name → shard` never changes over the platform's lifetime — no
+//!   rebalancing, no cross-shard moves;
+//! * lock ordering is `shard → sandbox`; no code path acquires a shard lock
+//!   while holding a sandbox mutex, and no path ever holds two shard locks
+//!   at once.
+
+use super::pool::FunctionPool;
+use crate::util::fnv1a;
+use crate::workloads::WorkloadSpec;
+use std::collections::HashMap;
+use std::sync::{Mutex, MutexGuard};
+
+/// The state one shard owns: the pools and specs of every function hashed
+/// to it.
+#[derive(Default)]
+pub struct ShardState {
+    pub pools: HashMap<String, FunctionPool>,
+    pub specs: HashMap<String, WorkloadSpec>,
+}
+
+/// One shard: a mutex around its slice of the control-plane state.
+#[derive(Default)]
+pub struct Shard {
+    state: Mutex<ShardState>,
+}
+
+impl Shard {
+    /// Lock this shard's state. Callers must keep the critical section
+    /// short (route + bookkeeping); slow work (cold start, swap I/O,
+    /// request execution) happens outside the guard.
+    pub fn lock(&self) -> MutexGuard<'_, ShardState> {
+        self.state.lock().unwrap()
+    }
+}
+
+/// The fixed shard array.
+pub struct ShardSet {
+    shards: Vec<Shard>,
+}
+
+impl ShardSet {
+    /// Build `n` shards (clamped to ≥ 1).
+    pub fn new(n: usize) -> Self {
+        Self {
+            shards: (0..n.max(1)).map(|_| Shard::default()).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// Shard index owning `name` (stable for the platform's lifetime).
+    pub fn index_for(&self, name: &str) -> usize {
+        (fnv1a(name) % self.shards.len() as u64) as usize
+    }
+
+    /// The shard owning `name`.
+    pub fn shard_for(&self, name: &str) -> &Shard {
+        &self.shards[self.index_for(name)]
+    }
+
+    pub fn get(&self, idx: usize) -> &Shard {
+        &self.shards[idx]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Shard> {
+        self.shards.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_is_stable_and_in_range() {
+        let set = ShardSet::new(8);
+        for name in ["a", "golang-hello", "fn-3", ""] {
+            let i = set.index_for(name);
+            assert!(i < 8);
+            assert_eq!(i, set.index_for(name), "placement must be stable");
+        }
+    }
+
+    #[test]
+    fn zero_shards_clamped_to_one() {
+        let set = ShardSet::new(0);
+        assert_eq!(set.len(), 1);
+        assert_eq!(set.index_for("anything"), 0);
+    }
+
+    #[test]
+    fn pool_and_spec_colocated() {
+        let set = ShardSet::new(4);
+        let name = "nodejs-hello";
+        {
+            let mut s = set.shard_for(name).lock();
+            s.pools.entry(name.to_string()).or_default();
+        }
+        // The same shard sees the pool; the others don't.
+        let own = set.index_for(name);
+        for i in 0..set.len() {
+            let has = set.get(i).lock().pools.contains_key(name);
+            assert_eq!(has, i == own);
+        }
+    }
+
+    #[test]
+    fn different_names_spread() {
+        let set = ShardSet::new(8);
+        let hit: std::collections::HashSet<usize> = (0..64)
+            .map(|i| set.index_for(&format!("workload-{i}")))
+            .collect();
+        assert!(hit.len() >= 4, "64 names must land on ≥ 4 of 8 shards");
+    }
+}

@@ -38,6 +38,20 @@ pub fn human_ns(ns: u64) -> String {
     }
 }
 
+/// FNV-1a 64-bit string hash. Deterministic across runs, processes and
+/// platforms — which is what the control plane needs for stable placement
+/// (workload → shard, workload → affinity worker). `std`'s `DefaultHasher`
+/// makes no cross-release stability promise, so placement-sensitive code
+/// uses this instead.
+pub fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
 /// Round `v` up to the next multiple of `align` (power-of-two not required).
 pub fn align_up(v: u64, align: u64) -> u64 {
     debug_assert!(align > 0);
@@ -69,6 +83,17 @@ mod tests {
         assert_eq!(human_ns(1500), "1.5 µs");
         assert_eq!(human_ns(2_500_000), "2.50 ms");
         assert_eq!(human_ns(3_000_000_000), "3.00 s");
+    }
+
+    #[test]
+    fn fnv1a_known_vectors() {
+        // Published FNV-1a 64-bit test vectors.
+        assert_eq!(fnv1a(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a("a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a("foobar"), 0x85944171f73967e8);
+        // Deterministic and spread-out enough to place shards.
+        assert_eq!(fnv1a("nodejs-hello"), fnv1a("nodejs-hello"));
+        assert_ne!(fnv1a("nodejs-hello") % 8, fnv1a("golang-hello") % 8);
     }
 
     #[test]

@@ -150,10 +150,10 @@ fn threaded_server_parallel_load_is_consistent() {
     c.cost = CostModel::free(); // keep the test fast
     let p = Arc::new(Platform::new(c, Arc::new(NoopRunner)).unwrap());
     p.deploy(scaled_for_test(golang_hello(), 32)).unwrap();
-    let server = Server::start(p.clone(), 4, Duration::from_millis(5));
+    let mut server = Server::start(p.clone(), 4, Duration::from_millis(5));
     let mut rxs = Vec::new();
     for _ in 0..40 {
-        rxs.push(server.submit("golang-hello"));
+        rxs.push(server.submit("golang-hello").unwrap());
         std::thread::sleep(Duration::from_millis(2));
     }
     let mut ok = 0;

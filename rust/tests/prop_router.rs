@@ -1,0 +1,142 @@
+//! Property test for `platform::router::route`: under randomly generated
+//! pool states — instances in any mix of Warm / WokenUp / Hibernate / Dead,
+//! random last-activity stamps, random reservations — the pick always
+//! respects the `Warm > WokenUp > Hibernate` rank and the LIFO
+//! most-recently-active tie-break, never lands on a Dead or reserved
+//! instance, and cold-starts exactly when nothing is reusable.
+
+use quark_hibernate::config::SharingConfig;
+use quark_hibernate::container::sandbox::{Sandbox, SandboxServices};
+use quark_hibernate::container::state::ContainerState;
+use quark_hibernate::container::NoopRunner;
+use quark_hibernate::platform::pool::{FunctionPool, Reservation};
+use quark_hibernate::platform::router::{route, Route};
+use quark_hibernate::simtime::{Clock, CostModel};
+use quark_hibernate::util::prop::{check, PropConfig};
+use quark_hibernate::util::rng::Rng;
+use quark_hibernate::workloads::functionbench::{golang_hello, scaled_for_test};
+use std::cmp::Reverse;
+use std::sync::Arc;
+
+/// The paper's serving preference (lower = better); `None` = not routable.
+fn rank(s: ContainerState) -> Option<u32> {
+    match s {
+        ContainerState::Warm => Some(0),
+        ContainerState::WokenUp => Some(1),
+        ContainerState::Hibernate => Some(2),
+        _ => None,
+    }
+}
+
+/// Build a random pool; returns it plus the live reservation guards (the
+/// services Arc keeps the sandboxes alive).
+fn random_pool(rng: &mut Rng) -> (Arc<SandboxServices>, FunctionPool, Vec<Reservation>) {
+    let svc = SandboxServices::new_local(
+        1 << 30,
+        CostModel::free(),
+        SharingConfig::default(),
+        Arc::new(NoopRunner),
+        "prop-router",
+    )
+    .unwrap();
+    let clock = Clock::new();
+    let mut pool = FunctionPool::new();
+    let mut guards = Vec::new();
+    let n = rng.below(7); // 0..=6 instances; 0 exercises the empty pool
+    for id in 0..n {
+        let mut sb = Sandbox::cold_start(
+            id + 1,
+            scaled_for_test(golang_hello(), 32),
+            svc.clone(),
+            &clock,
+        )
+        .unwrap();
+        match rng.below(4) {
+            0 => {} // Warm
+            1 => {
+                sb.hibernate(&clock).unwrap(); // Hibernate
+            }
+            2 => {
+                sb.hibernate(&clock).unwrap();
+                sb.wake(&clock).unwrap(); // WokenUp
+            }
+            _ => {
+                sb.terminate().unwrap(); // Dead
+            }
+        }
+        pool.add(sb, 0);
+        let inst = pool.instances.last().unwrap();
+        // Random recency; `below` may repeat values, exercising the
+        // equal-recency tie (route must keep the lowest index then).
+        inst.touch(rng.below(1000));
+        if rng.chance(0.3) {
+            guards.push(inst.try_reserve().expect("fresh instance reservable"));
+        }
+    }
+    (svc, pool, guards)
+}
+
+#[test]
+fn route_picks_best_rank_then_most_recent_then_lowest_index() {
+    check(
+        "router-rank-lifo",
+        PropConfig {
+            cases: 32,
+            seed: PropConfig::default().seed,
+        },
+        |rng: &mut Rng| {
+            let (_svc, pool, _guards) = random_pool(rng);
+            // Model: best routable instance by (rank asc, recency desc,
+            // index asc) over non-reserved, routable states.
+            let expected = pool
+                .instances
+                .iter()
+                .enumerate()
+                .filter(|(_, inst)| !inst.is_reserved())
+                .filter_map(|(i, inst)| {
+                    rank(inst.state()).map(|r| (i, r, inst.last_active_vns()))
+                })
+                .min_by_key(|&(i, r, last)| (r, Reverse(last), i));
+            match (route(&pool), expected) {
+                (Route::ColdStart, None) => {}
+                (Route::Existing { idx, state }, Some((want_idx, want_rank, _))) => {
+                    assert_eq!(idx, want_idx, "picked wrong instance");
+                    assert_eq!(rank(state), Some(want_rank), "state/rank mismatch");
+                    assert!(
+                        !pool.instances[idx].is_reserved(),
+                        "routed to a reserved instance"
+                    );
+                    assert_eq!(
+                        pool.instances[idx].state(),
+                        state,
+                        "reported state must match the instance"
+                    );
+                }
+                (got, want) => panic!("route={got:?} but model wants {want:?}"),
+            }
+        },
+    );
+}
+
+#[test]
+fn route_never_routes_to_busy_or_dead() {
+    check(
+        "router-skips-unroutable",
+        PropConfig {
+            cases: 24,
+            seed: PropConfig::default().seed ^ 0xDEAD,
+        },
+        |rng: &mut Rng| {
+            let (_svc, pool, _guards) = random_pool(rng);
+            if let Route::Existing { idx, .. } = route(&pool) {
+                let inst = &pool.instances[idx];
+                assert!(!inst.is_reserved(), "routed to a reserved instance");
+                assert!(
+                    inst.state().accepts_requests(),
+                    "routed to {:?}",
+                    inst.state()
+                );
+            }
+        },
+    );
+}

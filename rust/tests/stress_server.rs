@@ -1,0 +1,247 @@
+//! Sharded control-plane stress: many functions × many workers × many
+//! requests through the threaded server.
+//!
+//! What these tests pin down:
+//! * **exact accounting** — every submission is served exactly once; the
+//!   request counter and per-function latency samples match the submitted
+//!   load to the unit, and a post-drain policy tick hibernates exactly one
+//!   instance per live container;
+//! * **no deadlock** — every reply arrives within a bounded wait despite
+//!   8 workers hammering 8 functions concurrently;
+//! * **per-function serve ordering** — under strict affinity dispatch,
+//!   requests for one function execute serially in submission order, so a
+//!   function never grows past one instance and only its first request
+//!   cold-starts;
+//! * **no cross-function blocking** — a request for function A completes
+//!   while function B's only instance is stuck mid-request (the
+//!   acceptance criterion for the sharded platform), and concurrent
+//!   requests for the *same* function scale out to a second instance
+//!   instead of queueing behind the busy one.
+
+use quark_hibernate::config::PlatformConfig;
+use quark_hibernate::container::{NoopRunner, PayloadRunner, SpinRunner};
+use quark_hibernate::platform::metrics::ServedFrom;
+use quark_hibernate::platform::policy::Action;
+use quark_hibernate::platform::server::{Server, ServerConfig};
+use quark_hibernate::platform::Platform;
+use quark_hibernate::simtime::CostModel;
+use quark_hibernate::workloads::functionbench::{golang_hello, scaled_for_test};
+use quark_hibernate::workloads::PayloadSpec;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const FUNCS: usize = 8;
+const WORKERS: usize = 8;
+const REQUESTS_PER_FN: usize = 50; // 8 × 50 = 400 total
+
+fn fn_names() -> Vec<String> {
+    (0..FUNCS).map(|i| format!("fn-{i}")).collect()
+}
+
+fn stress_platform(tag: &str, runner: Arc<dyn PayloadRunner>) -> Arc<Platform> {
+    let mut cfg = PlatformConfig::default();
+    cfg.host_memory = 2 << 30;
+    cfg.cost = CostModel::free();
+    cfg.shards = 8;
+    // Policy must not fire mid-test: idleness threshold far beyond the
+    // test's wall-clock, and the ticks themselves are driven manually.
+    cfg.policy.hibernate_idle_ms = 10_000;
+    cfg.policy.predictive_wakeup = false;
+    cfg.swap_dir = std::env::temp_dir()
+        .join(format!("qh-stress-{tag}-{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    let p = Platform::new(cfg, runner).unwrap();
+    for name in fn_names() {
+        let mut spec = scaled_for_test(golang_hello(), 32);
+        spec.name = name;
+        p.deploy(spec).unwrap();
+    }
+    Arc::new(p)
+}
+
+fn quiet_policy() -> Duration {
+    // Effectively never: ticks are issued manually where a test needs them.
+    Duration::from_secs(3600)
+}
+
+#[test]
+fn stress_counters_are_exact_and_drain_hibernates_every_instance() {
+    let p = stress_platform("counters", Arc::new(NoopRunner));
+    let mut server = Server::start_with(
+        p.clone(),
+        ServerConfig {
+            workers: WORKERS,
+            policy_interval: quiet_policy(),
+            spill_threshold: Some(2),
+        },
+    );
+    let names = fn_names();
+    let mut rxs = Vec::with_capacity(FUNCS * REQUESTS_PER_FN);
+    for _round in 0..REQUESTS_PER_FN {
+        for name in &names {
+            rxs.push(server.submit(name).unwrap());
+        }
+    }
+    // Bounded wait: a deadlock fails loudly instead of hanging the suite.
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(60))
+            .expect("request must complete within 60s (deadlock?)")
+            .expect("request must succeed");
+    }
+    server.shutdown();
+
+    let total = (FUNCS * REQUESTS_PER_FN) as u64;
+    assert_eq!(
+        p.metrics.counters.requests.load(Ordering::Relaxed),
+        total,
+        "request counter must match submissions exactly"
+    );
+    // Per-function accounting: every submission shows up in exactly one
+    // latency cell. With no policy activity the only paths are cold/warm.
+    for name in &names {
+        let served: usize = [
+            ServedFrom::ColdStart,
+            ServedFrom::Warm,
+            ServedFrom::Hibernate,
+            ServedFrom::WokenUp,
+        ]
+        .iter()
+        .map(|&path| p.metrics.sample_count(name, path))
+        .sum();
+        assert_eq!(served, REQUESTS_PER_FN, "{name} must serve its exact load");
+        assert_eq!(p.metrics.sample_count(name, ServedFrom::Hibernate), 0);
+        assert_eq!(p.metrics.sample_count(name, ServedFrom::WokenUp), 0);
+    }
+    assert_eq!(
+        p.metrics.counters.hibernations.load(Ordering::Relaxed),
+        0,
+        "policy never ran during the stress"
+    );
+
+    // Post-drain: one manual tick at a far-future instant hibernates every
+    // live instance — exactly one hibernation per container.
+    let live: u64 = names.iter().map(|n| p.instance_count(n) as u64).sum();
+    assert!(live >= FUNCS as u64, "every function has ≥ 1 instance");
+    let actions = p.policy_tick(1_000_000_000_000_000).unwrap();
+    assert_eq!(
+        actions
+            .iter()
+            .filter(|a| matches!(a, Action::Hibernate { .. }))
+            .count() as u64,
+        live,
+        "one hibernate action per live instance"
+    );
+    assert_eq!(
+        p.metrics.counters.hibernations.load(Ordering::Relaxed),
+        live,
+        "hibernation counter must be exact"
+    );
+}
+
+#[test]
+fn strict_affinity_preserves_per_function_serve_order() {
+    let p = stress_platform("affinity", Arc::new(NoopRunner));
+    let mut server = Server::start_with(
+        p.clone(),
+        ServerConfig {
+            workers: WORKERS,
+            policy_interval: quiet_policy(),
+            spill_threshold: None, // never spill: per-function FIFO holds
+        },
+    );
+    let names = fn_names();
+    let per_fn = 30usize;
+    // Burst-submit with no pacing: maximal queue pressure.
+    let mut rxs: Vec<Vec<_>> = names.iter().map(|_| Vec::with_capacity(per_fn)).collect();
+    for _ in 0..per_fn {
+        for (fi, name) in names.iter().enumerate() {
+            rxs[fi].push(server.submit(name).unwrap());
+        }
+    }
+    for (fi, fn_rxs) in rxs.into_iter().enumerate() {
+        for (k, rx) in fn_rxs.into_iter().enumerate() {
+            let report = rx
+                .recv_timeout(Duration::from_secs(60))
+                .expect("no deadlock")
+                .expect("request must succeed");
+            // Serve-order invariant: the first submission for a function —
+            // and only the first — cold-starts; every later one finds the
+            // instance Warm because same-function requests execute
+            // serially, in submission order, on the affinity worker.
+            if k == 0 {
+                assert_eq!(
+                    report.served_from,
+                    ServedFrom::ColdStart,
+                    "fn-{fi} first request"
+                );
+            } else {
+                assert_eq!(
+                    report.served_from,
+                    ServedFrom::Warm,
+                    "fn-{fi} request #{k} must hit the warm instance"
+                );
+            }
+        }
+    }
+    server.shutdown();
+    // Serial per-function execution ⇒ the pool never scaled out.
+    for name in &names {
+        assert_eq!(p.instance_count(name), 1, "{name} must stay at 1 instance");
+    }
+    assert_eq!(
+        p.metrics.counters.cold_starts.load(Ordering::Relaxed),
+        FUNCS as u64,
+        "exactly one cold start per function"
+    );
+}
+
+#[test]
+fn slow_function_never_blocks_other_functions() {
+    // fn-slow spins ~2 s of real compute per request; fn-fast is free.
+    // They hash to different shards (5 and 6 of 8).
+    let runner = Arc::new(SpinRunner {
+        ns_per_iteration: 2_000_000_000,
+    });
+    let p = stress_platform("noblock", runner);
+    for name in ["fn-slow", "fn-fast"] {
+        let mut spec = scaled_for_test(golang_hello(), 32);
+        spec.name = name.to_string();
+        spec.payload = if name == "fn-slow" {
+            Some(PayloadSpec {
+                artifact: "spin".into(),
+                iterations: 1,
+            })
+        } else {
+            None // fn-fast must not hit the spinning runner
+        };
+        p.deploy(spec).unwrap();
+    }
+
+    // Occupy fn-slow's only instance with a 2 s request.
+    let slow_p = p.clone();
+    let slow = std::thread::spawn(move || slow_p.request_at("fn-slow", 0));
+    std::thread::sleep(Duration::from_millis(200));
+
+    // While fn-slow is mid-request, fn-fast must serve immediately: no
+    // global pools lock exists for the slow request to hold.
+    let t0 = Instant::now();
+    let fast = p.request_at("fn-fast", 0).unwrap();
+    let fast_elapsed = t0.elapsed();
+    assert_eq!(fast.served_from, ServedFrom::ColdStart);
+    assert!(
+        fast_elapsed < Duration::from_millis(1500),
+        "fn-fast blocked for {fast_elapsed:?} behind fn-slow's request"
+    );
+
+    // A concurrent request for fn-slow itself must not queue behind the
+    // busy instance either: the router skips it and cold-starts a second
+    // instance (the paper's scale-out model).
+    let second = p.request_at("fn-slow", 0).unwrap();
+    assert_eq!(second.served_from, ServedFrom::ColdStart);
+    assert_eq!(p.instance_count("fn-slow"), 2);
+
+    slow.join().unwrap().unwrap();
+    assert_eq!(p.metrics.counters.requests.load(Ordering::Relaxed), 3);
+}
