@@ -1,0 +1,64 @@
+//! `cargo bench --bench replay_scaling` — parallel trace-replay wall-clock
+//! vs worker count on an Azure-shaped thousand-function scenario, with the
+//! determinism contract asserted: every worker count must produce the same
+//! report fingerprint. `QH_QUICK=1` shrinks the scenario.
+
+use quark_hibernate::bench_support::replay_scaling;
+
+fn main() {
+    let quick = std::env::var("QH_QUICK").is_ok();
+    let (funcs, duration_ms) = if quick {
+        (200usize, 30_000u64)
+    } else {
+        (1000usize, 300_000u64)
+    };
+    let worker_counts = [1usize, 2, 4, 8];
+    let results = replay_scaling::run(&worker_counts, funcs, duration_ms * 1_000_000, 0xA21);
+    println!("workers    events      wall      events/s   speedup   fingerprint");
+    let base = results.first().map(|r| r.events_per_sec()).unwrap_or(0.0);
+    for r in &results {
+        println!(
+            "{:>7} {:>9} {:>9.1} ms {:>9.0} {:>8.2}x   {:016x}",
+            r.workers,
+            r.events,
+            r.wall_ns as f64 / 1e6,
+            r.events_per_sec(),
+            if base > 0.0 {
+                r.events_per_sec() / base
+            } else {
+                0.0
+            },
+            r.fingerprint,
+        );
+    }
+
+    // The determinism contract: worker count changes wall-clock, never
+    // results.
+    let f0 = results[0].fingerprint;
+    for r in &results {
+        assert_eq!(
+            r.fingerprint, f0,
+            "replay results must be bit-identical at any worker count"
+        );
+    }
+
+    // The scaling claim, with generous slack for small or loaded machines.
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    if cores >= 4 && !quick {
+        let eps = |workers: usize| {
+            results
+                .iter()
+                .find(|r| r.workers == workers)
+                .map(|r| r.events_per_sec())
+                .expect("worker count missing from sweep")
+        };
+        assert!(
+            eps(4) > 1.1 * eps(1),
+            "4 replay workers must out-pace 1: {:.0} vs {:.0} events/s",
+            eps(4),
+            eps(1)
+        );
+    }
+}

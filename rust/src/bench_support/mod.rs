@@ -6,6 +6,7 @@
 pub mod density_exp;
 pub mod fig6;
 pub mod fig7;
+pub mod replay_scaling;
 pub mod server_scaling;
 
 use crate::config::SharingConfig;

@@ -1,0 +1,70 @@
+//! Parallel-replay scaling: the acceptance measurement for the replay
+//! engine. Replays one fixed Azure-shaped scenario at increasing worker
+//! counts and reports wall-clock + events/second — which must grow with
+//! workers — while asserting the report fingerprints stay **bit-identical**
+//! (the determinism contract: worker count is a performance knob, never a
+//! results knob).
+
+use crate::config::PlatformConfig;
+use crate::replay::{self, scenario};
+
+/// One measurement row.
+#[derive(Debug, Clone)]
+pub struct ReplayScalingResult {
+    pub workers: usize,
+    pub events: usize,
+    pub wall_ns: u64,
+    pub fingerprint: u64,
+}
+
+impl ReplayScalingResult {
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_ns == 0 {
+            return 0.0;
+        }
+        self.events as f64 / (self.wall_ns as f64 / 1e9)
+    }
+}
+
+/// Replay the `azure-heavy-tail` scenario (`funcs` functions over
+/// `duration_ns` virtual time, fixed `seed`) once per worker count.
+pub fn run(
+    worker_counts: &[usize],
+    funcs: usize,
+    duration_ns: u64,
+    seed: u64,
+) -> Vec<ReplayScalingResult> {
+    let scenario_run =
+        scenario::build("azure-heavy-tail", funcs, duration_ns, seed).expect("scenario");
+    eprintln!(
+        "# replay_scaling: {} functions, {} events",
+        scenario_run.specs.len(),
+        scenario_run.events.len()
+    );
+    worker_counts
+        .iter()
+        .map(|&workers| {
+            let mut cfg = PlatformConfig::default();
+            cfg.seed = seed;
+            // Enough shards that 8 workers all own several, regardless of
+            // the bench machine's core count.
+            cfg.shards = 32;
+            cfg.policy.hibernate_idle_ms = 500;
+            cfg.swap_dir = std::env::temp_dir()
+                .join(format!(
+                    "qh-replay-scaling-w{workers}-{}",
+                    std::process::id()
+                ))
+                .to_string_lossy()
+                .into_owned();
+            let (report, _platform) =
+                replay::run_scenario(&cfg, &scenario_run, workers).expect("replay");
+            ReplayScalingResult {
+                workers: report.workers,
+                events: report.events,
+                wall_ns: report.wall_ns,
+                fingerprint: report.fingerprint(),
+            }
+        })
+        .collect()
+}

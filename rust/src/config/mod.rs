@@ -29,6 +29,13 @@ pub struct PolicyConfig {
     pub predictive_wakeup: bool,
     /// Use REAP batch swap-in (vs page-fault swap-in) on wake.
     pub reap_enabled: bool,
+    /// Incremental policy cadence: each [`policy_tick`] call covers only
+    /// `ceil(shards / tick_stride)` shards, rotating round-robin, so at high
+    /// function counts a single tick never freezes behind a full control
+    /// plane walk. `1` (the default) = every tick covers every shard.
+    ///
+    /// [`policy_tick`]: crate::platform::Platform::policy_tick
+    pub tick_stride: usize,
 }
 
 impl Default for PolicyConfig {
@@ -40,6 +47,41 @@ impl Default for PolicyConfig {
             pressure_watermark: 0.85,
             predictive_wakeup: true,
             reap_enabled: true,
+            tick_stride: 1,
+        }
+    }
+}
+
+/// Parallel trace-replay knobs (`[replay]` section) — see
+/// [`crate::replay`] for the determinism model these feed.
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    /// Replay worker threads. `0` = auto: one per available CPU (clamped to
+    /// the shard count — a worker without shards has nothing to do).
+    pub workers: usize,
+    /// Epoch barrier cadence in *virtual* milliseconds: global memory
+    /// pressure is reconciled once per epoch, which is what keeps policy
+    /// decisions reproducible across worker counts.
+    pub epoch_ms: u64,
+    /// Policy tick cadence in virtual milliseconds. `0` = derive from the
+    /// policy (half the hibernate idle threshold, ≥ 1 ms) — the same rule
+    /// single-threaded replay has always used.
+    pub tick_ms: u64,
+    /// Disable cross-sandbox file-page sharing for replay platforms. Shared
+    /// page-cache hits depend on which sandbox faulted a page first — a
+    /// worker-interleaving artifact — so bit-identical replay turns sharing
+    /// off. Set to `false` to measure sharing effects (per-run results stay
+    /// reproducible only at `workers = 1`).
+    pub strict_determinism: bool,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        Self {
+            workers: 0,
+            epoch_ms: 100,
+            tick_ms: 0,
+            strict_determinism: true,
         }
     }
 }
@@ -81,8 +123,15 @@ pub struct PlatformConfig {
     pub shards: usize,
     /// Deterministic seed for traces and page content.
     pub seed: u64,
+    /// Sidecar file for per-workload predictor arrival tracks (versioned
+    /// CSV). Non-empty: loaded at platform construction, written by
+    /// [`crate::platform::Platform::save_predictor_state`] (the threaded
+    /// server saves on shutdown), so anticipatory wake-up survives
+    /// restarts. Empty = persistence off.
+    pub predictor_state_file: String,
     pub policy: PolicyConfig,
     pub sharing: SharingConfig,
+    pub replay: ReplayConfig,
     pub cost: CostModel,
 }
 
@@ -98,8 +147,10 @@ impl Default for PlatformConfig {
             workers: 4,
             shards: 0,
             seed: 0xFEED_BEEF,
+            predictor_state_file: String::new(),
             policy: PolicyConfig::default(),
             sharing: SharingConfig::default(),
+            replay: ReplayConfig::default(),
             cost: CostModel::paper(),
         }
     }
@@ -171,6 +222,7 @@ impl PlatformConfig {
         get_u64(t, "", "shards", &mut shards)?;
         self.shards = shards as usize;
         get_u64(t, "", "seed", &mut self.seed)?;
+        get_str(t, "", "predictor_state_file", &mut self.predictor_state_file)?;
 
         get_u64(t, "policy", "hibernate_idle_ms", &mut self.policy.hibernate_idle_ms)?;
         get_u64(t, "policy", "evict_idle_ms", &mut self.policy.evict_idle_ms)?;
@@ -178,6 +230,21 @@ impl PlatformConfig {
         get_f64(t, "policy", "pressure_watermark", &mut self.policy.pressure_watermark)?;
         get_bool(t, "policy", "predictive_wakeup", &mut self.policy.predictive_wakeup)?;
         get_bool(t, "policy", "reap_enabled", &mut self.policy.reap_enabled)?;
+        let mut tick_stride = self.policy.tick_stride as u64;
+        get_u64(t, "policy", "tick_stride", &mut tick_stride)?;
+        self.policy.tick_stride = (tick_stride as usize).max(1);
+
+        let mut replay_workers = self.replay.workers as u64;
+        get_u64(t, "replay", "workers", &mut replay_workers)?;
+        self.replay.workers = replay_workers as usize;
+        get_u64(t, "replay", "epoch_ms", &mut self.replay.epoch_ms)?;
+        get_u64(t, "replay", "tick_ms", &mut self.replay.tick_ms)?;
+        get_bool(
+            t,
+            "replay",
+            "strict_determinism",
+            &mut self.replay.strict_determinism,
+        )?;
 
         get_bool(t, "sharing", "share_runtime_binary", &mut self.sharing.share_runtime_binary)?;
         get_bool(
@@ -196,6 +263,9 @@ impl PlatformConfig {
 
         if self.policy.pressure_watermark <= 0.0 || self.policy.pressure_watermark > 1.0 {
             bail!("policy.pressure_watermark must be in (0, 1]");
+        }
+        if self.replay.epoch_ms == 0 {
+            bail!("replay.epoch_ms must be ≥ 1");
         }
         Ok(())
     }
@@ -282,6 +352,46 @@ mod tests {
     #[test]
     fn rejects_bad_watermark() {
         assert!(PlatformConfig::from_str("[policy]\npressure_watermark = 1.5\n").is_err());
+    }
+
+    #[test]
+    fn replay_section_parses_with_defaults() {
+        let c = PlatformConfig::default();
+        assert_eq!(c.replay.workers, 0);
+        assert_eq!(c.replay.epoch_ms, 100);
+        assert_eq!(c.replay.tick_ms, 0);
+        assert!(c.replay.strict_determinism);
+        assert_eq!(c.policy.tick_stride, 1);
+        assert!(c.predictor_state_file.is_empty());
+
+        let c = PlatformConfig::from_str(
+            r#"
+            predictor_state_file = "/tmp/tracks.csv"
+
+            [policy]
+            tick_stride = 4
+
+            [replay]
+            workers = 8
+            epoch_ms = 50
+            tick_ms = 10
+            strict_determinism = false
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.predictor_state_file, "/tmp/tracks.csv");
+        assert_eq!(c.policy.tick_stride, 4);
+        assert_eq!(c.replay.workers, 8);
+        assert_eq!(c.replay.epoch_ms, 50);
+        assert_eq!(c.replay.tick_ms, 10);
+        assert!(!c.replay.strict_determinism);
+    }
+
+    #[test]
+    fn rejects_zero_replay_epoch_and_clamps_stride() {
+        assert!(PlatformConfig::from_str("[replay]\nepoch_ms = 0\n").is_err());
+        let c = PlatformConfig::from_str("[policy]\ntick_stride = 0\n").unwrap();
+        assert_eq!(c.policy.tick_stride, 1, "stride 0 clamps to 1");
     }
 
     #[test]

@@ -22,6 +22,9 @@
 //! * a serverless **platform** around it: router, per-function pools,
 //!   keep-alive/hibernate policy under a host memory budget, anticipatory
 //!   wake-up predictor, trace generation/replay and metrics ([`platform`]);
+//! * a **parallel deterministic replay engine** that drives thousand-function
+//!   Azure-shaped scenarios through the sharded control plane with
+//!   bit-identical results at any worker count ([`replay`]);
 //! * the **PJRT runtime** that executes the AOT-compiled JAX/Pallas function
 //!   payloads (`artifacts/*.hlo.txt`) on the request path ([`runtime`]);
 //! * the paper's **evaluation workloads** (FunctionBench trio + four
@@ -36,6 +39,7 @@ pub mod config;
 pub mod container;
 pub mod mem;
 pub mod platform;
+pub mod replay;
 pub mod runtime;
 pub mod simtime;
 pub mod swap;

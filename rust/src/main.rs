@@ -6,6 +6,9 @@
 //! repro serve  [--config FILE] [--workers N] [--duration-ms N] [-o k=v ...]
 //! repro replay [--config FILE] [--duration-ms N] [--mean-gap-ms N]
 //!              [--trace FILE.csv] [-o k=v ...]
+//! repro replay --scenario NAME [--funcs N] [--workers N] [--seed S]
+//!              [--duration-ms N] [--report FILE.json]   # parallel replay
+//! repro replay --list-scenarios
 //! repro fig6   [--quick]          # Figure 6: latency per container state
 //! repro fig7   [--quick]          # Figure 7: PSS per container state
 //! repro density [--budget-mib N]  # deployment-density experiment
@@ -17,6 +20,7 @@ use quark_hibernate::config::PlatformConfig;
 use quark_hibernate::container::{NoopRunner, PayloadRunner};
 use quark_hibernate::platform::server::Server;
 use quark_hibernate::platform::{trace, Platform};
+use quark_hibernate::replay;
 use quark_hibernate::runtime::PjrtRunner;
 use quark_hibernate::util::{human_bytes, human_ns};
 use quark_hibernate::workloads;
@@ -146,6 +150,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_replay(args: &Args) -> Result<()> {
+    if args.has("list-scenarios") {
+        for (name, about) in replay::scenario::SCENARIOS {
+            println!("{name:<18} {about}");
+        }
+        return Ok(());
+    }
+    if let Some(name) = args.get("scenario") {
+        return cmd_replay_scenario(args, name);
+    }
     let cfg = load_config(args)?;
     let duration_ms = args.get_u64("duration-ms", 60_000)?;
     let mean_gap_ms = args.get_u64("mean-gap-ms", 500)?;
@@ -171,6 +184,30 @@ fn cmd_replay(args: &Args) -> Result<()> {
         reports.len(),
         human_ns(total / reports.len().max(1) as u64)
     );
+    Ok(())
+}
+
+/// Parallel deterministic scenario replay (`--scenario NAME`): build the
+/// seeded scenario, replay it across shard-affine workers, print the
+/// report, optionally write it as JSON.
+fn cmd_replay_scenario(args: &Args, name: &str) -> Result<()> {
+    let mut cfg = load_config(args)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    let funcs = args.get_u64("funcs", 1000)? as usize;
+    let duration_ms = args.get_u64("duration-ms", 300_000)?;
+    let workers = args.get_u64("workers", 0)? as usize; // 0 = auto
+    let run = replay::scenario::build(name, funcs, duration_ms * 1_000_000, cfg.seed)?;
+    println!(
+        "scenario {name}: {} functions, {} events over virtual {duration_ms} ms",
+        run.specs.len(),
+        run.events.len()
+    );
+    let (report, _platform) = replay::run_scenario(&cfg, &run, workers)?;
+    print!("{}", report.summary());
+    if let Some(path) = args.get("report") {
+        report.save(path)?;
+        println!("report written to {path}");
+    }
     Ok(())
 }
 

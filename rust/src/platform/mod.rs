@@ -33,6 +33,7 @@ pub mod metrics;
 pub mod policy;
 pub mod pool;
 pub mod predictor;
+pub mod predictor_store;
 pub mod router;
 pub mod server;
 pub mod shard;
@@ -50,7 +51,7 @@ use metrics::{Metrics, ServedFrom};
 use policy::{Action, Mode, PolicyEngine};
 use predictor::Predictor;
 use shard::ShardSet;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use trace::TraceEvent;
 
@@ -78,6 +79,10 @@ pub struct Platform {
     predictors: Vec<Predictor>,
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
+    /// Round-robin cursor for the staggered policy cadence
+    /// (`policy.tick_stride` > 1): the shard index the next
+    /// [`Platform::policy_tick`] starts from.
+    tick_cursor: AtomicUsize,
 }
 
 impl Platform {
@@ -121,7 +126,7 @@ impl Platform {
                 .map(|n| n.get())
                 .unwrap_or(4)
         };
-        Ok(Self {
+        let p = Self {
             engine: PolicyEngine::new(cfg.policy.clone(), mode),
             predictors: (0..shard_count).map(|_| Predictor::new(0.3)).collect(),
             metrics: Arc::new(Metrics::new()),
@@ -129,7 +134,20 @@ impl Platform {
             cfg,
             shards: ShardSet::new(shard_count),
             next_id: AtomicU64::new(1),
-        })
+            tick_cursor: AtomicUsize::new(0),
+        };
+        // Restore persisted arrival tracks so anticipatory wake-up resumes
+        // across restarts. A corrupt sidecar degrades to a cold predictor
+        // (with a warning), never a failed startup.
+        match p.load_predictor_state() {
+            Ok(n) if n > 0 => eprintln!(
+                "predictor: restored {n} arrival tracks from {}",
+                p.cfg.predictor_state_file
+            ),
+            Ok(_) => {}
+            Err(e) => eprintln!("predictor: ignoring saved state ({e:#})"),
+        }
+        Ok(p)
     }
 
     pub fn services(&self) -> &Arc<SandboxServices> {
@@ -290,33 +308,65 @@ impl Platform {
     /// only the one shard's lock, so a tick never freezes the whole
     /// control plane.
     ///
+    /// With `policy.tick_stride` > 1 the walk is additionally *staggered*:
+    /// each call covers only `ceil(shards / stride)` shards, rotating
+    /// round-robin across calls, which bounds a single tick's tail latency
+    /// at high function counts (every shard is still visited once per
+    /// `stride` calls).
+    ///
     /// Ticks are meant to be driven by a single policy thread (plus
     /// explicit calls in replay/tests): actions carry pool indices, so two
     /// ticks racing each other's `sweep_dead` could retarget an action.
     /// Concurrent *requests* are always safe — they only append instances
     /// and reservations re-validate state before any action applies.
     pub fn policy_tick(&self, now_vns: u64) -> Result<Vec<Action>> {
+        let n = self.shards.len();
+        let stride = self.engine.cfg.tick_stride.max(1);
+        let per_round = n.div_ceil(stride);
+        let start = if stride == 1 {
+            0
+        } else {
+            self.tick_cursor.fetch_add(per_round, Ordering::Relaxed) % n
+        };
         let memory_used = self.memory_used();
         let mut applied = Vec::new();
-        for si in 0..self.shards.len() {
-            let shard = self.shards.get(si);
-            let workloads: Vec<String> = shard.lock().pools.keys().cloned().collect();
-            for w in workloads {
-                let actions = {
-                    let guard = shard.lock();
-                    let Some(pool) = guard.pools.get(&w) else { continue };
-                    self.engine
-                        .decide(&w, pool, now_vns, memory_used, Some(&self.predictors[si]))
-                };
-                for action in actions {
-                    let ok = self.apply(&action, now_vns)?;
-                    if ok {
-                        applied.push(action);
-                    }
+        for k in 0..per_round {
+            let si = (start + k) % n;
+            applied.extend(self.policy_tick_shard(si, now_vns, memory_used)?);
+        }
+        Ok(applied)
+    }
+
+    /// The shard-scoped policy step: decide/apply/sweep for shard `si` only,
+    /// against an explicit `memory_used` pressure figure. This is the unit
+    /// the parallel replay engine drives — each replay worker ticks its own
+    /// shards against the epoch's reconciled pressure snapshot, so policy
+    /// decisions are reproducible no matter how shards are spread over
+    /// workers ([`crate::replay`]).
+    pub fn policy_tick_shard(
+        &self,
+        si: usize,
+        now_vns: u64,
+        memory_used: u64,
+    ) -> Result<Vec<Action>> {
+        let shard = self.shards.get(si);
+        let workloads: Vec<String> = shard.lock().pools.keys().cloned().collect();
+        let mut applied = Vec::new();
+        for w in workloads {
+            let actions = {
+                let guard = shard.lock();
+                let Some(pool) = guard.pools.get(&w) else { continue };
+                self.engine
+                    .decide(&w, pool, now_vns, memory_used, Some(&self.predictors[si]))
+            };
+            for action in actions {
+                let ok = self.apply(&action, now_vns)?;
+                if ok {
+                    applied.push(action);
                 }
-                if let Some(p) = shard.lock().pools.get_mut(&w) {
-                    p.sweep_dead();
-                }
+            }
+            if let Some(p) = shard.lock().pools.get_mut(&w) {
+                p.sweep_dead();
             }
         }
         Ok(applied)
@@ -432,18 +482,15 @@ impl Platform {
 
     /// Deterministic virtual-time replay: process events in order, running
     /// a policy tick before each event and at a fixed cadence in gaps.
+    ///
+    /// This is the single-worker form of the parallel replay engine
+    /// ([`crate::replay::ReplayEngine`]) — same epoch structure, same tick
+    /// schedule, one worker — so a trace replayed here and a trace replayed
+    /// with `workers = N` land on identical per-function results.
     pub fn run_trace(&self, events: &[TraceEvent]) -> Result<Vec<RequestReport>> {
-        let tick_ns = (self.cfg.policy.hibernate_idle_ms * 1_000_000 / 2).max(1_000_000);
-        let mut reports = Vec::with_capacity(events.len());
-        let mut next_tick = 0u64;
-        for ev in events {
-            while next_tick <= ev.at_ns {
-                self.policy_tick(next_tick)?;
-                next_tick += tick_ns;
-            }
-            reports.push(self.request_at(&ev.workload, ev.at_ns)?);
-        }
-        Ok(reports)
+        crate::replay::ReplayEngine::single_threaded(self)
+            .run(events)
+            .map(|o| o.reports)
     }
 
     /// Snapshot: per-workload instance states + PSS (the Fig. 7 data),
@@ -511,6 +558,75 @@ impl Platform {
             .get(workload)
             .map(|p| p.len())
             .unwrap_or(0)
+    }
+
+    /// The control-plane shard index owning `workload` (stable for the
+    /// platform's lifetime) — the placement the replay engine partitions
+    /// trace events by.
+    pub fn shard_index(&self, workload: &str) -> usize {
+        self.shards.index_for(workload)
+    }
+
+    /// Predicted next arrival for `workload` from its shard's predictor
+    /// (diagnostics / persistence tests).
+    pub fn predicted_next_arrival(&self, workload: &str) -> Option<u64> {
+        self.predictors[self.shards.index_for(workload)].predicted_next(workload)
+    }
+
+    /// Every shard predictor's arrival tracks, merged and sorted by
+    /// workload. Stored flat: the workload → shard mapping is recomputed on
+    /// load, so the file stays valid across shard-count changes.
+    pub fn predictor_tracks(&self) -> Vec<predictor_store::TrackRow> {
+        let mut rows: Vec<_> = self
+            .predictors
+            .iter()
+            .flat_map(|p| p.export_tracks())
+            .collect();
+        rows.sort_by(|a, b| a.0.cmp(&b.0));
+        rows
+    }
+
+    /// Route persisted tracks to their owning shards' predictors. Returns
+    /// the number of tracks imported.
+    ///
+    /// The restored `last_arrival_ns` is **rebased to 0**: each process
+    /// has its own virtual timeline starting at 0, so a raw timestamp from
+    /// the previous run would place the predicted next arrival far in the
+    /// future (silencing `should_wake` for the whole run) and corrupt the
+    /// EWMA on the first new observation (a huge or zero apparent gap).
+    /// What survives a restart is the *learned cadence* — the EWMA gap and
+    /// sample count; rebasing treats the restart itself as an arrival at
+    /// t = 0, so anticipation resumes after one learned gap.
+    pub fn import_predictor_tracks(&self, rows: &[predictor_store::TrackRow]) -> usize {
+        for (w, _last, ewma, n) in rows {
+            self.predictors[self.shards.index_for(w)].import_track(w, 0, *ewma, *n);
+        }
+        rows.len()
+    }
+
+    /// Persist predictor state to `predictor_state_file`. Returns `false`
+    /// (and does nothing) when persistence is not configured.
+    pub fn save_predictor_state(&self) -> Result<bool> {
+        if self.cfg.predictor_state_file.is_empty() {
+            return Ok(false);
+        }
+        predictor_store::save(&self.cfg.predictor_state_file, &self.predictor_tracks())?;
+        Ok(true)
+    }
+
+    /// Load predictor state from `predictor_state_file`, if configured and
+    /// present. Returns the number of tracks restored (0 when persistence
+    /// is off or the file does not exist yet).
+    pub fn load_predictor_state(&self) -> Result<usize> {
+        if self.cfg.predictor_state_file.is_empty() {
+            return Ok(0);
+        }
+        let path = std::path::Path::new(&self.cfg.predictor_state_file);
+        if !path.exists() {
+            return Ok(0);
+        }
+        let rows = predictor_store::load(path)?;
+        Ok(self.import_predictor_tracks(&rows))
     }
 }
 
@@ -665,5 +781,90 @@ mod tests {
             .map(|n| n.get())
             .unwrap_or(4);
         assert_eq!(p.shard_count(), want);
+    }
+
+    #[test]
+    fn staggered_ticks_cover_all_shards_over_a_full_rotation() {
+        let mut cfg = PlatformConfig::default();
+        cfg.host_memory = 512 << 20;
+        cfg.shards = 4;
+        cfg.cost = CostModel::free();
+        cfg.policy.hibernate_idle_ms = 10;
+        cfg.policy.predictive_wakeup = false;
+        cfg.policy.tick_stride = 4; // 1 shard per tick
+        cfg.swap_dir = std::env::temp_dir()
+            .join(format!("qh-stagger-test-{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let p = Platform::new(cfg, Arc::new(NoopRunner)).unwrap();
+        for i in 0..8 {
+            let mut s = scaled_for_test(golang_hello(), 32);
+            s.name = format!("fn-{i}");
+            p.deploy(s).unwrap();
+        }
+        for i in 0..8 {
+            p.request_at(&format!("fn-{i}"), 0).unwrap();
+        }
+        // All 8 instances are idle far past the threshold. One staggered
+        // tick covers 1/4 of the shards; four ticks cover all of them.
+        let mut hibernated = 0usize;
+        for _ in 0..4 {
+            let actions = p.policy_tick(1_000_000_000).unwrap();
+            hibernated += actions
+                .iter()
+                .filter(|a| matches!(a, Action::Hibernate { .. }))
+                .count();
+        }
+        assert_eq!(
+            hibernated, 8,
+            "a full stride rotation must visit every shard exactly once"
+        );
+        // Stride 1 (the default) still covers everything in one call.
+        let p2 = test_platform(10);
+        p2.request_at("golang-hello", 0).unwrap();
+        let actions = p2.policy_tick(1_000_000_000).unwrap();
+        assert!(actions.iter().any(|a| matches!(a, Action::Hibernate { .. })));
+    }
+
+    #[test]
+    fn predictor_state_survives_restart() {
+        let state = std::env::temp_dir()
+            .join(format!("qh-predstate-test-{}.csv", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        std::fs::remove_file(&state).ok();
+        let mut cfg = PlatformConfig::default();
+        cfg.host_memory = 512 << 20;
+        cfg.cost = CostModel::free();
+        cfg.policy.predictive_wakeup = true;
+        cfg.predictor_state_file = state.clone();
+        cfg.swap_dir = std::env::temp_dir()
+            .join(format!("qh-predstate-swap-{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+
+        let p = Platform::new(cfg.clone(), Arc::new(NoopRunner)).unwrap();
+        p.deploy(scaled_for_test(golang_hello(), 16)).unwrap();
+        // Strictly periodic 500 ms arrivals → the learned EWMA gap is
+        // exactly 500 ms.
+        let mut t = 0u64;
+        for _ in 0..5 {
+            p.request_at("golang-hello", t).unwrap();
+            t += 500_000_000;
+        }
+        assert!(p.save_predictor_state().unwrap());
+
+        // "Restart": a fresh platform with the same config restores the
+        // tracks at construction and predicts without new observations —
+        // in the *new* process's time domain (last arrival rebased to 0),
+        // so the next arrival is expected one learned gap after start.
+        let p2 = Platform::new(cfg, Arc::new(NoopRunner)).unwrap();
+        p2.deploy(scaled_for_test(golang_hello(), 16)).unwrap();
+        assert_eq!(
+            p2.predicted_next_arrival("golang-hello"),
+            Some(500_000_000),
+            "restored prediction must live in the new run's timeline"
+        );
+        std::fs::remove_file(&state).ok();
     }
 }

@@ -194,6 +194,7 @@ mod tests {
             pressure_watermark: 0.8,
             predictive_wakeup: true,
             reap_enabled: true,
+            tick_stride: 1,
         }
     }
 

@@ -16,6 +16,10 @@ struct Track {
     last_arrival_ns: u64,
     ewma_gap_ns: f64,
     samples: u64,
+    /// Restored from persistence: `last_arrival_ns` is a rebased anchor,
+    /// not a real arrival, so the first observed "gap" (startup → first
+    /// request) is meaningless and must not be folded into the EWMA.
+    restored: bool,
 }
 
 /// EWMA-based next-arrival predictor.
@@ -43,8 +47,18 @@ impl Predictor {
                         last_arrival_ns: now_ns,
                         ewma_gap_ns: 0.0,
                         samples: 1,
+                        restored: false,
                     },
                 );
+            }
+            Some(t) if t.restored => {
+                // First arrival after a restore: the interval since the
+                // rebased anchor is startup delay, not cadence — re-anchor
+                // without touching the learned EWMA or the sample count
+                // (so a 1-sample track still seeds its EWMA from the next
+                // real gap instead of blending against 0).
+                t.last_arrival_ns = now_ns;
+                t.restored = false;
             }
             Some(t) => {
                 let gap = now_ns.saturating_sub(t.last_arrival_ns) as f64;
@@ -92,6 +106,44 @@ impl Predictor {
             .filter(|t| t.samples >= 2)
             .map(|t| t.ewma_gap_ns)
     }
+
+    /// Export every track with a learned cadence (≥ 2 samples — a
+    /// single-sample track has no gap worth persisting) as `(workload,
+    /// last_arrival_ns, ewma_gap_ns, samples)` rows, sorted by workload —
+    /// the persistence surface used by [`super::predictor_store`].
+    pub fn export_tracks(&self) -> Vec<(String, u64, f64, u64)> {
+        let tracks = self.tracks.lock().unwrap();
+        let mut rows: Vec<_> = tracks
+            .iter()
+            .filter(|(_, t)| t.samples >= 2)
+            .map(|(w, t)| (w.clone(), t.last_arrival_ns, t.ewma_gap_ns, t.samples))
+            .collect();
+        rows.sort_by(|a, b| a.0.cmp(&b.0));
+        rows
+    }
+
+    /// Restore one track (replacing any existing one). Subsequent
+    /// [`Predictor::observe`] calls keep updating the EWMA from the
+    /// restored state, so anticipation resumes where the previous process
+    /// left off.
+    pub fn import_track(
+        &self,
+        workload: &str,
+        last_arrival_ns: u64,
+        ewma_gap_ns: f64,
+        samples: u64,
+    ) {
+        let mut tracks = self.tracks.lock().unwrap();
+        tracks.insert(
+            workload.to_string(),
+            Track {
+                last_arrival_ns,
+                ewma_gap_ns,
+                samples: samples.max(1),
+                restored: true,
+            },
+        );
+    }
 }
 
 #[cfg(test)]
@@ -130,6 +182,51 @@ mod tests {
             !p.should_wake("w", 400_000_000, 10_000_000),
             "stale prediction must not wake"
         );
+    }
+
+    #[test]
+    fn export_import_round_trip() {
+        let p = Predictor::new(0.3);
+        for i in 0..10u64 {
+            p.observe("w", i * 1_000_000);
+        }
+        for i in 0..3u64 {
+            p.observe("a-second", i * 2_000_000);
+        }
+        // One observation = no learned cadence = nothing to persist.
+        p.observe("once-only", 5);
+        let rows = p.export_tracks();
+        assert_eq!(rows.len(), 2, "1-sample tracks are not exported");
+        assert_eq!(rows[0].0, "a-second", "rows sorted by workload");
+
+        let q = Predictor::new(0.3);
+        for (w, last, ewma, n) in &rows {
+            q.import_track(w, *last, *ewma, *n);
+        }
+        assert_eq!(q.predicted_next("w"), p.predicted_next("w"));
+        assert_eq!(q.mean_gap("w"), p.mean_gap("w"));
+        assert_eq!(q.predicted_next("once-only"), None);
+        // The restored EWMA keeps evolving on new observations.
+        q.observe("w", 20_000_000);
+        assert!(q.predicted_next("w").is_some());
+    }
+
+    #[test]
+    fn first_observation_after_restore_reanchors_without_corrupting_ewma() {
+        let p = Predictor::new(0.3);
+        // Restored rare function: learned 120 s cadence, anchor rebased to 0.
+        p.import_track("w", 0, 120e9, 10);
+        // First arrival lands 2 virtual hours after startup — that interval
+        // is startup delay, not cadence, and must not enter the EWMA.
+        p.observe("w", 7_200_000_000_000);
+        assert_eq!(p.mean_gap("w"), Some(120e9), "EWMA must survive re-anchor");
+        assert_eq!(
+            p.predicted_next("w"),
+            Some(7_200_000_000_000 + 120_000_000_000)
+        );
+        // Subsequent arrivals update normally.
+        p.observe("w", 7_320_000_000_000); // exactly one 120 s gap later
+        assert_eq!(p.mean_gap("w"), Some(120e9));
     }
 
     #[test]

@@ -1,0 +1,170 @@
+//! Predictor-state persistence: save/load per-workload arrival tracks as a
+//! versioned CSV sidecar, so anticipatory wake-up (Fig. 3 ⑤) survives
+//! platform restarts instead of re-learning every workload's cadence from
+//! scratch after a redeploy.
+//!
+//! Format (first line is a mandatory version tag; `#` comments allowed):
+//!
+//! ```csv
+//! # qh-predictor-tracks v1
+//! workload,last_arrival_ns,ewma_gap_ns,samples
+//! golang-hello,123456789,250000000,17
+//! ```
+//!
+//! Tracks are stored flat by workload — *not* by shard — because the
+//! workload → shard mapping depends on the shard count, which may differ
+//! across restarts. [`crate::platform::Platform`] re-routes each row to the
+//! owning shard's predictor on load.
+
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Mandatory first line; unknown versions are rejected, not guessed at.
+pub const VERSION_LINE: &str = "# qh-predictor-tracks v1";
+
+const HEADER: &str = "workload,last_arrival_ns,ewma_gap_ns,samples";
+
+/// One persisted track: `(workload, last_arrival_ns, ewma_gap_ns, samples)`.
+pub type TrackRow = (String, u64, f64, u64);
+
+/// Save tracks to `path`. Written to a sibling temp file and renamed into
+/// place, so a crash mid-save leaves the previous state intact instead of
+/// a truncated file that the next startup would discard.
+pub fn save(path: impl AsRef<Path>, rows: &[TrackRow]) -> Result<()> {
+    let path = path.as_ref();
+    for (w, ..) in rows {
+        // A leading '#' would be silently dropped as a comment on load —
+        // refuse it here so a save/load cycle can never lose a track.
+        if w.contains(',') || w.contains('\n') || w.starts_with('#') {
+            bail!("workload name {w:?} cannot be stored in CSV");
+        }
+    }
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    let mut f = std::fs::File::create(&tmp)
+        .with_context(|| format!("creating predictor state {}", tmp.display()))?;
+    writeln!(f, "{VERSION_LINE}")?;
+    writeln!(f, "{HEADER}")?;
+    for (w, last, ewma, n) in rows {
+        writeln!(f, "{w},{last},{ewma},{n}")?;
+    }
+    f.sync_all().ok(); // best effort — the file is a cache, not a ledger
+    drop(f);
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("installing predictor state {}", path.display()))?;
+    Ok(())
+}
+
+/// Parse predictor-state text. Strict: a wrong version or malformed row is
+/// an error, never a silent partial restore.
+pub fn parse(text: &str) -> Result<Vec<TrackRow>> {
+    let mut lines = text.lines().map(str::trim).filter(|l| !l.is_empty());
+    let version = lines.next().context("empty predictor state file")?;
+    if version != VERSION_LINE {
+        bail!("unsupported predictor state version {version:?} (expected {VERSION_LINE:?})");
+    }
+    let mut lines = lines.filter(|l| !l.starts_with('#'));
+    let header = lines.next().context("missing header row")?;
+    if header != HEADER {
+        bail!("bad header {header:?} (expected {HEADER:?})");
+    }
+    let mut rows = Vec::new();
+    for line in lines {
+        let cols: Vec<&str> = line.split(',').collect();
+        let [w, last, ewma, n] = cols.as_slice() else {
+            bail!("bad row {line:?} (expected 4 comma-separated fields)");
+        };
+        if w.is_empty() {
+            bail!("bad row {line:?}: empty workload");
+        }
+        let last: u64 = last
+            .parse()
+            .with_context(|| format!("bad last_arrival_ns in {line:?}"))?;
+        let ewma: f64 = ewma
+            .parse()
+            .with_context(|| format!("bad ewma_gap_ns in {line:?}"))?;
+        if !ewma.is_finite() || ewma < 0.0 {
+            bail!("bad ewma_gap_ns {ewma} in {line:?}");
+        }
+        let n: u64 = n
+            .parse()
+            .with_context(|| format!("bad samples in {line:?}"))?;
+        rows.push((w.to_string(), last, ewma, n));
+    }
+    Ok(rows)
+}
+
+/// Load tracks from a file.
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<TrackRow>> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading predictor state {}", path.as_ref().display()))?;
+    parse(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_through_file() {
+        let rows: Vec<TrackRow> = vec![
+            ("golang-hello".into(), 123_456_789, 250_000_000.25, 17),
+            ("nodejs-hello".into(), 9, 0.5, 2),
+        ];
+        let path = std::env::temp_dir().join(format!(
+            "qh-predictor-store-{}.csv",
+            std::process::id()
+        ));
+        save(&path, &rows).unwrap();
+        let back = load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        // f64 Display round-trips exactly in Rust.
+        assert_eq!(rows, back);
+    }
+
+    #[test]
+    fn rejects_wrong_version_and_malformed_rows() {
+        assert!(parse("").is_err());
+        assert!(parse("# qh-predictor-tracks v2\nworkload,last_arrival_ns,ewma_gap_ns,samples\n").is_err());
+        assert!(parse(&format!("{VERSION_LINE}\nwrong,header\n")).is_err());
+        let good_head = format!("{VERSION_LINE}\nworkload,last_arrival_ns,ewma_gap_ns,samples\n");
+        assert!(parse(&format!("{good_head}w,1,2.0\n")).is_err(), "3 fields");
+        assert!(parse(&format!("{good_head},1,2.0,3\n")).is_err(), "empty workload");
+        assert!(parse(&format!("{good_head}w,x,2.0,3\n")).is_err(), "bad int");
+        assert!(parse(&format!("{good_head}w,1,NaN,3\n")).is_err(), "NaN ewma");
+        assert!(parse(&format!("{good_head}w,1,2.0,3\n")).is_ok());
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let text = format!(
+            "{VERSION_LINE}\n\n# a comment\nworkload,last_arrival_ns,ewma_gap_ns,samples\n\nw,1,2,3\n"
+        );
+        let rows = parse(&text).unwrap();
+        assert_eq!(rows, vec![("w".to_string(), 1, 2.0, 3)]);
+    }
+
+    #[test]
+    fn refuses_unstorable_names() {
+        let path = std::env::temp_dir().join(format!(
+            "qh-predictor-store-bad-{}.csv",
+            std::process::id()
+        ));
+        let rows: Vec<TrackRow> = vec![("a,b".into(), 1, 1.0, 1)];
+        assert!(save(&path, &rows).is_err());
+        let rows: Vec<TrackRow> = vec![("#canary".into(), 1, 1.0, 1)];
+        assert!(
+            save(&path, &rows).is_err(),
+            "'#'-leading names would be dropped as comments on load"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+}

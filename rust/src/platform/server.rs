@@ -67,6 +67,7 @@ struct WorkerSlot {
 
 /// Handle to a running server.
 pub struct Server {
+    platform: Arc<Platform>,
     slots: Vec<WorkerSlot>,
     spill_threshold: Option<usize>,
     stop: Arc<AtomicBool>,
@@ -156,6 +157,7 @@ impl Server {
         };
 
         Server {
+            platform,
             slots,
             spill_threshold: cfg.spill_threshold,
             stop,
@@ -231,8 +233,16 @@ impl Server {
     /// Stop workers and the policy loop; joins all threads. Queued
     /// submissions are drained before the workers exit. After shutdown,
     /// [`Server::submit`] reports the shutdown instead of handing back a
-    /// receiver that can only fail.
+    /// receiver that can only fail. If the platform is configured with a
+    /// `predictor_state_file`, the learned arrival tracks are persisted
+    /// here so anticipatory wake-up survives a restart.
     pub fn shutdown(&mut self) {
+        if self.slots.is_empty() && self.workers.is_empty() && self.policy_thread.is_none() {
+            // Already shut down (Drop re-invokes this after an explicit
+            // shutdown) — don't re-save predictor state, which would
+            // resurrect a file the caller may have removed or rotated.
+            return;
+        }
         self.stop.store(true, Ordering::Relaxed);
         // Dropping the senders lets each worker drain its backlog and exit
         // on `Disconnected` without waiting out the recv timeout.
@@ -242,6 +252,9 @@ impl Server {
         }
         if let Some(h) = self.policy_thread.take() {
             let _ = h.join();
+        }
+        if let Err(e) = self.platform.save_predictor_state() {
+            eprintln!("predictor: failed to persist state on shutdown ({e:#})");
         }
     }
 }
@@ -349,6 +362,36 @@ mod tests {
             rx.recv().expect("queued submission must still be served").unwrap();
         }
         assert_eq!(p.metrics.counters.requests.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn shutdown_persists_predictor_state_when_configured() {
+        let state = std::env::temp_dir()
+            .join(format!("qh-server-predstate-{}.csv", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        std::fs::remove_file(&state).ok();
+        let mut cfg = PlatformConfig::default();
+        cfg.host_memory = 512 << 20;
+        cfg.cost = CostModel::free();
+        cfg.policy.predictive_wakeup = true;
+        cfg.predictor_state_file = state.clone();
+        cfg.swap_dir = std::env::temp_dir()
+            .join(format!("qh-server-predstate-swap-{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let p = Arc::new(Platform::new(cfg, Arc::new(NoopRunner)).unwrap());
+        p.deploy(scaled_for_test(golang_hello(), 32)).unwrap();
+        let mut server = Server::start(p, 2, Duration::from_millis(10));
+        server.call("golang-hello").unwrap();
+        server.call("golang-hello").unwrap();
+        server.shutdown();
+        let saved = crate::platform::predictor_store::load(&state).unwrap();
+        std::fs::remove_file(&state).ok();
+        assert!(
+            saved.iter().any(|(w, _, _, n)| w == "golang-hello" && *n >= 2),
+            "shutdown must persist the learned track: {saved:?}"
+        );
     }
 
     #[test]

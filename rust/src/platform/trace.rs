@@ -39,6 +39,9 @@ pub struct TraceSpec {
     pub arrival: Arrival,
 }
 
+/// Spacing between back-to-back requests inside one burst.
+pub const BURST_SPACING_NS: u64 = 1_000_000;
+
 /// Generate a merged, time-sorted trace of `duration_ns` for all specs.
 pub fn generate(specs: &[TraceSpec], duration_ns: u64, seed: u64) -> Vec<TraceEvent> {
     let mut events = Vec::new();
@@ -52,21 +55,8 @@ pub fn generate(specs: &[TraceSpec], duration_ns: u64, seed: u64) -> Vec<TraceEv
                 Arrival::Bursty {
                     median_gap_ns,
                     sigma,
-                    burst,
-                } => {
-                    // Emit a burst then one long gap.
-                    let gap = rng.lognormal(*median_gap_ns as f64, *sigma) as u64;
-                    for b in 1..*burst {
-                        let bt = t + b as u64 * 1_000_000; // 1 ms apart inside the burst
-                        if bt < duration_ns {
-                            events.push(TraceEvent {
-                                at_ns: bt,
-                                workload: spec.workload.clone(),
-                            });
-                        }
-                    }
-                    gap
-                }
+                    ..
+                } => rng.lognormal(*median_gap_ns as f64, *sigma) as u64,
             };
             t = t.saturating_add(gap.max(1));
             if t >= duration_ns {
@@ -76,6 +66,21 @@ pub fn generate(specs: &[TraceSpec], duration_ns: u64, seed: u64) -> Vec<TraceEv
                 at_ns: t,
                 workload: spec.workload.clone(),
             });
+            if let Arrival::Bursty { burst, .. } = &spec.arrival {
+                // Burst members trail their head arrival at a fixed spacing
+                // (anchored at the head, never before it), and the next
+                // inter-burst gap is measured from the end of the burst.
+                for b in 1..*burst {
+                    let bt = t.saturating_add(b as u64 * BURST_SPACING_NS);
+                    if bt < duration_ns {
+                        events.push(TraceEvent {
+                            at_ns: bt,
+                            workload: spec.workload.clone(),
+                        });
+                    }
+                }
+                t = t.saturating_add(burst.saturating_sub(1) as u64 * BURST_SPACING_NS);
+            }
         }
     }
     events.sort_by_key(|e| e.at_ns);
@@ -154,16 +159,50 @@ mod tests {
 
     #[test]
     fn bursts_cluster() {
+        let burst = 4usize;
         let specs = vec![TraceSpec {
             workload: "a".into(),
             arrival: Arrival::Bursty {
                 median_gap_ns: 100_000_000,
                 sigma: 0.5,
-                burst: 4,
+                burst: burst as u32,
             },
         }];
         let t = generate(&specs, 2_000_000_000, 11);
         assert!(t.len() >= 8, "bursts must multiply events: {}", t.len());
+        // Intra-burst structure: the trace decomposes into groups of
+        // exactly `burst` events spaced exactly BURST_SPACING_NS apart
+        // (the last group may be truncated by the trace end), each group
+        // anchored at its head — so no member ever precedes its head —
+        // and consecutive groups separated by more than the spacing.
+        let times: Vec<u64> = t.iter().map(|e| e.at_ns).collect();
+        let mut i = 0;
+        while i < times.len() {
+            let mut len = 1;
+            while i + len < times.len()
+                && times[i + len] - times[i + len - 1] == BURST_SPACING_NS
+            {
+                len += 1;
+            }
+            for k in 1..len {
+                assert_eq!(
+                    times[i + k],
+                    times[i] + k as u64 * BURST_SPACING_NS,
+                    "member {k} must trail its head by exactly {k}×spacing"
+                );
+            }
+            assert!(
+                len == burst || i + len == times.len(),
+                "only the trailing burst may be truncated: group of {len} at index {i}"
+            );
+            if i + len < times.len() {
+                assert!(
+                    times[i + len] - times[i + len - 1] > BURST_SPACING_NS,
+                    "inter-burst gap must exceed the intra-burst spacing"
+                );
+            }
+            i += len;
+        }
     }
 
     #[test]

@@ -1,0 +1,445 @@
+//! Parallel deterministic trace replay — the harness that exercises the
+//! sharded control plane at Azure-trace scale (thousands of mostly-idle
+//! functions) while keeping results bit-for-bit reproducible.
+//!
+//! # Determinism model
+//!
+//! A trace's events are partitioned by the owning control-plane shard
+//! (the same FNV placement requests use, [`Platform::shard_index`]) onto
+//! `workers` shard-affine replay workers. Each worker advances virtual
+//! time independently for the shards it owns: events in time order,
+//! interleaved with policy ticks on a fixed [`TickSchedule`] (multiples of
+//! the tick period, exactly the cadence single-threaded replay has always
+//! used). Because a shard's pools, specs and predictor are touched only by
+//! its one owner, per-shard state evolution does not depend on how shards
+//! are spread over workers.
+//!
+//! The only cross-shard input to policy decisions is global memory
+//! pressure. Replay therefore runs in **epochs**: at each epoch boundary
+//! every worker parks on a barrier, one leader samples the host's
+//! committed bytes, and all ticks of the next epoch use that reconciled
+//! snapshot. State at a barrier is interleaving-independent (all events
+//! and ticks before it have run; committed bytes are a sum over per-shard
+//! state), so the snapshot — and with it every policy decision — is the
+//! same at `--workers 1` and `--workers 8`.
+//!
+//! Two sources of nondeterminism are fenced off by configuration:
+//! cross-sandbox file-page sharing (a cache hit depends on *which sandbox
+//! faulted a page first* — an interleaving artifact), disabled for replay
+//! platforms when `replay.strict_determinism` is set (the default, which
+//! also ignores any `predictor_state_file` sidecar); and real measured
+//! compute, absent because scenario replay runs on the [`NoopRunner`] —
+//! latencies are purely charged model time.
+//!
+//! One boundary of the contract: the host page allocator is a real shared
+//! resource, so *at memory capacity* whether a cold start's allocation
+//! lands before or after another worker's tick-driven frees is a real-time
+//! race — a replay sized to exhaust `host_memory` can fail at one worker
+//! count and complete at another. Scenarios must leave allocation headroom
+//! (pressure policy reacting to the *budget watermark* is fine — that is
+//! virtual and epoch-reconciled; physically running out of host pages is
+//! not). Per-epoch shard budget leases are the ROADMAP follow-on that
+//! would lift this.
+//!
+//! [`Platform::run_trace`] is this engine at `workers = 1`.
+
+pub mod report;
+pub mod scenario;
+
+use crate::config::PlatformConfig;
+use crate::container::NoopRunner;
+use crate::platform::trace::TraceEvent;
+use crate::platform::{Platform, RequestReport};
+use crate::simtime::TickSchedule;
+use anyhow::Result;
+use report::ReplayReport;
+use scenario::ScenarioRun;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Barrier, Mutex};
+use std::time::Instant;
+
+/// What one replay run produced.
+pub struct ReplayOutcome {
+    /// Per-event reports, in trace (event) order.
+    pub reports: Vec<RequestReport>,
+    /// `(epoch_start_vns, committed_bytes)` — the memory-density timeline
+    /// sampled at every epoch barrier.
+    pub mem_timeline: Vec<(u64, u64)>,
+    /// Worker threads actually used.
+    pub workers: usize,
+    /// Real wall-clock of the whole replay.
+    pub wall_ns: u64,
+}
+
+/// The parallel replay engine, borrowed over a deployed [`Platform`].
+pub struct ReplayEngine<'p> {
+    platform: &'p Platform,
+    workers: usize,
+    epoch_ns: u64,
+    tick_ns: u64,
+}
+
+impl<'p> ReplayEngine<'p> {
+    /// Build an engine from the platform's `[replay]` config.
+    /// `workers_override` (e.g. the CLI's `--workers`) takes precedence;
+    /// `None`/`0` falls back to `replay.workers`, then to one per CPU. The
+    /// count is clamped to the shard count — a worker owning no shards
+    /// would have nothing to replay.
+    pub fn new(platform: &'p Platform, workers_override: Option<usize>) -> Self {
+        let rc = &platform.cfg.replay;
+        let requested = match workers_override {
+            Some(w) if w > 0 => w,
+            _ if rc.workers > 0 => rc.workers,
+            _ => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+        };
+        let tick_ns = if rc.tick_ms > 0 {
+            rc.tick_ms * 1_000_000
+        } else {
+            // The rule single-threaded replay has always used: half the
+            // hibernate idle threshold, at least 1 ms.
+            (platform.cfg.policy.hibernate_idle_ms * 1_000_000 / 2).max(1_000_000)
+        };
+        Self {
+            workers: requested.clamp(1, platform.shard_count()),
+            epoch_ns: rc.epoch_ms.max(1) * 1_000_000,
+            tick_ns,
+            platform,
+        }
+    }
+
+    /// The engine `run_trace` delegates to: one worker, same schedule.
+    pub fn single_threaded(platform: &'p Platform) -> Self {
+        Self::new(platform, Some(1))
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Replay `events` to completion. Fails fast on the first request
+    /// error (all workers wind down at the next epoch boundary and the
+    /// first error is returned).
+    ///
+    /// Events are expected time-sorted (every in-repo producer sorts);
+    /// an unsorted trace is still served completely — each shard serves
+    /// its events in input order, like the old single-threaded loop —
+    /// but the determinism contract is only stated for sorted input.
+    pub fn run(&self, events: &[TraceEvent]) -> Result<ReplayOutcome> {
+        let t0 = Instant::now();
+        if events.is_empty() {
+            return Ok(ReplayOutcome {
+                reports: Vec::new(),
+                mem_timeline: Vec::new(),
+                workers: self.workers,
+                wall_ns: t0.elapsed().as_nanos() as u64,
+            });
+        }
+        let n_workers = self.workers;
+        let mut per_worker: Vec<Vec<usize>> = vec![Vec::new(); n_workers];
+        for (i, ev) in events.iter().enumerate() {
+            per_worker[self.platform.shard_index(&ev.workload) % n_workers].push(i);
+        }
+        // Max, not `last()`: an unsorted trace must not shrink the epoch
+        // range, or every event beyond the final epoch would be silently
+        // dropped.
+        let duration_ns = events.iter().map(|e| e.at_ns).max().expect("non-empty") + 1;
+        let n_epochs = duration_ns.div_ceil(self.epoch_ns);
+
+        let barrier = Barrier::new(n_workers);
+        let pressure = AtomicU64::new(0);
+        let abort = AtomicBool::new(false);
+        let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let timeline: Mutex<Vec<(u64, u64)>> = Mutex::new(Vec::new());
+
+        let collected: Vec<Vec<(usize, RequestReport)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n_workers)
+                .map(|w| {
+                    let my_events = &per_worker[w];
+                    let barrier = &barrier;
+                    let pressure = &pressure;
+                    let abort = &abort;
+                    let first_err = &first_err;
+                    let timeline = &timeline;
+                    scope.spawn(move || {
+                        self.worker_loop(
+                            w, my_events, events, n_epochs, barrier, pressure, abort,
+                            first_err, timeline,
+                        )
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("replay worker panicked"))
+                .collect()
+        });
+
+        if let Some(e) = first_err.into_inner().unwrap() {
+            return Err(e);
+        }
+        let mut indexed: Vec<(usize, RequestReport)> =
+            collected.into_iter().flatten().collect();
+        indexed.sort_by_key(|(i, _)| *i);
+        Ok(ReplayOutcome {
+            reports: indexed.into_iter().map(|(_, r)| r).collect(),
+            mem_timeline: timeline.into_inner().unwrap(),
+            workers: n_workers,
+            wall_ns: t0.elapsed().as_nanos() as u64,
+        })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn worker_loop(
+        &self,
+        w: usize,
+        my_events: &[usize],
+        events: &[TraceEvent],
+        n_epochs: u64,
+        barrier: &Barrier,
+        pressure: &AtomicU64,
+        abort: &AtomicBool,
+        first_err: &Mutex<Option<anyhow::Error>>,
+        timeline: &Mutex<Vec<(u64, u64)>>,
+    ) -> Vec<(usize, RequestReport)> {
+        let owned: Vec<usize> = (0..self.platform.shard_count())
+            .filter(|s| s % self.workers == w)
+            .collect();
+        let mut out = Vec::with_capacity(my_events.len());
+        let mut sched = TickSchedule::new(self.tick_ns);
+        let mut cursor = 0usize;
+        // Every worker must reach every Barrier::wait, or the others hang
+        // forever — so all fallible/panicking work between the waits is
+        // fenced: errors AND unwinds are converted into the abort flag,
+        // never an early exit from the epoch loop.
+        let record_failure = |err: anyhow::Error| {
+            abort.store(true, Ordering::Relaxed);
+            let mut slot = first_err.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(err);
+            }
+        };
+        for e in 0..n_epochs {
+            let epoch_start = e * self.epoch_ns;
+            let epoch_end = epoch_start + self.epoch_ns;
+            // Reconcile global memory pressure: one leader samples the
+            // committed bytes after *every* worker finished the previous
+            // epoch, so each epoch's policy ticks see the same figure no
+            // matter how many workers replay the trace.
+            if barrier.wait().is_leader() && !abort.load(Ordering::Relaxed) {
+                let sampled = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let used = self.platform.memory_used();
+                    pressure.store(used, Ordering::Relaxed);
+                    timeline.lock().unwrap().push((epoch_start, used));
+                }));
+                if let Err(p) = sampled {
+                    record_failure(anyhow::anyhow!(
+                        "replay leader panicked sampling pressure: {}",
+                        panic_message(&p)
+                    ));
+                }
+            }
+            barrier.wait();
+            if abort.load(Ordering::Relaxed) {
+                continue; // keep pacing the barriers so nobody deadlocks
+            }
+            let mem = pressure.load(Ordering::Relaxed);
+            let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                self.run_epoch(&owned, my_events, events, epoch_end, mem, &mut sched, &mut cursor, &mut out)
+            }));
+            match ran {
+                Ok(Ok(())) => {}
+                Ok(Err(err)) => record_failure(err),
+                Err(p) => record_failure(anyhow::anyhow!(
+                    "replay worker {w} panicked: {}",
+                    panic_message(&p)
+                )),
+            }
+        }
+        out
+    }
+
+    /// One worker's slice of one epoch: serve its events due before
+    /// `epoch_end`, running every policy tick that comes due on its shards
+    /// first, then catch the tick schedule up to the epoch boundary.
+    #[allow(clippy::too_many_arguments)]
+    fn run_epoch(
+        &self,
+        owned: &[usize],
+        my_events: &[usize],
+        events: &[TraceEvent],
+        epoch_end: u64,
+        memory_used: u64,
+        sched: &mut TickSchedule,
+        cursor: &mut usize,
+        out: &mut Vec<(usize, RequestReport)>,
+    ) -> Result<()> {
+        while *cursor < my_events.len() {
+            let idx = my_events[*cursor];
+            let ev = &events[idx];
+            if ev.at_ns >= epoch_end {
+                break;
+            }
+            while let Some(t) = sched.pop_due(ev.at_ns) {
+                for &s in owned {
+                    self.platform.policy_tick_shard(s, t, memory_used)?;
+                }
+            }
+            out.push((idx, self.platform.request_at(&ev.workload, ev.at_ns)?));
+            *cursor += 1;
+        }
+        while let Some(t) = sched.pop_before(epoch_end) {
+            for &s in owned {
+                self.platform.policy_tick_shard(s, t, memory_used)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run a scenario end-to-end on a fresh platform: apply the
+/// strict-determinism fences to `cfg`, deploy the scenario's functions,
+/// replay its trace with `workers` threads (`0` = auto), and build the
+/// report. Returns the platform too so callers can inspect final pool
+/// state.
+pub fn run_scenario(
+    cfg: &PlatformConfig,
+    run: &ScenarioRun,
+    workers: usize,
+) -> Result<(ReplayReport, Platform)> {
+    let mut cfg = cfg.clone();
+    if cfg.replay.strict_determinism {
+        // Shared file-page cache hits depend on which sandbox faulted
+        // first — an interleaving artifact bit-identical replay can't
+        // tolerate (see the module docs).
+        cfg.sharing.share_runtime_binary = false;
+        cfg.sharing.share_language_runtime = false;
+        // Likewise a predictor sidecar would pre-seed arrival tracks from
+        // whatever a previous process learned — external mutable state
+        // that must not leak into a reproducible replay.
+        cfg.predictor_state_file.clear();
+    }
+    let platform = Platform::new(cfg, std::sync::Arc::new(NoopRunner))?;
+    for spec in &run.specs {
+        platform.deploy(spec.clone())?;
+    }
+    let engine = ReplayEngine::new(
+        &platform,
+        if workers == 0 { None } else { Some(workers) },
+    );
+    let outcome = engine.run(&run.events)?;
+    let report = ReplayReport::build(&run.name, run.seed, &platform, &outcome);
+    Ok((report, platform))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simtime::CostModel;
+    use crate::workloads::functionbench::{golang_hello, scaled_for_test};
+    use std::sync::Arc;
+
+    fn test_cfg(tag: &str) -> PlatformConfig {
+        let mut cfg = PlatformConfig::default();
+        cfg.host_memory = 512 << 20;
+        cfg.cost = CostModel::paper();
+        cfg.shards = 4;
+        cfg.policy.hibernate_idle_ms = 20;
+        cfg.policy.predictive_wakeup = false;
+        cfg.swap_dir = std::env::temp_dir()
+            .join(format!("qh-replay-mod-{tag}-{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        cfg
+    }
+
+    #[test]
+    fn empty_trace_is_a_noop() {
+        let p = Platform::new(test_cfg("empty"), Arc::new(NoopRunner)).unwrap();
+        let out = ReplayEngine::new(&p, Some(2)).run(&[]).unwrap();
+        assert!(out.reports.is_empty());
+        assert!(out.mem_timeline.is_empty());
+    }
+
+    #[test]
+    fn workers_clamped_to_shards() {
+        let p = Platform::new(test_cfg("clamp"), Arc::new(NoopRunner)).unwrap();
+        assert_eq!(ReplayEngine::new(&p, Some(64)).workers(), 4);
+        assert_eq!(ReplayEngine::new(&p, Some(1)).workers(), 1);
+    }
+
+    #[test]
+    fn unknown_workload_aborts_with_the_error() {
+        let p = Platform::new(test_cfg("unknown"), Arc::new(NoopRunner)).unwrap();
+        p.deploy(scaled_for_test(golang_hello(), 32)).unwrap();
+        let events = vec![
+            TraceEvent {
+                at_ns: 0,
+                workload: "golang-hello".into(),
+            },
+            TraceEvent {
+                at_ns: 1_000_000,
+                workload: "nope".into(),
+            },
+        ];
+        let err = ReplayEngine::new(&p, Some(2)).run(&events).unwrap_err();
+        assert!(err.to_string().contains("nope"), "{err}");
+    }
+
+    #[test]
+    fn unsorted_trace_is_still_served_completely() {
+        let p = Platform::new(test_cfg("unsorted"), Arc::new(NoopRunner)).unwrap();
+        p.deploy(scaled_for_test(golang_hello(), 32)).unwrap();
+        // Last event is NOT the latest: the epoch range must come from the
+        // max timestamp or the 900 ms event would be silently dropped.
+        let events = vec![
+            TraceEvent {
+                at_ns: 900_000_000,
+                workload: "golang-hello".into(),
+            },
+            TraceEvent {
+                at_ns: 10_000_000,
+                workload: "golang-hello".into(),
+            },
+        ];
+        let out = ReplayEngine::new(&p, Some(1)).run(&events).unwrap();
+        assert_eq!(out.reports.len(), 2, "no event may be dropped");
+    }
+
+    #[test]
+    fn reports_come_back_in_event_order() {
+        let p = Platform::new(test_cfg("order"), Arc::new(NoopRunner)).unwrap();
+        for i in 0..4 {
+            let mut s = scaled_for_test(golang_hello(), 32);
+            s.name = format!("fn-{i}");
+            p.deploy(s).unwrap();
+        }
+        let events: Vec<TraceEvent> = (0..40)
+            .map(|i| TraceEvent {
+                at_ns: i as u64 * 10_000_000,
+                workload: format!("fn-{}", i % 4),
+            })
+            .collect();
+        let out = ReplayEngine::new(&p, Some(4)).run(&events).unwrap();
+        assert_eq!(out.reports.len(), events.len());
+        for (r, ev) in out.reports.iter().zip(&events) {
+            assert_eq!(r.workload, ev.workload, "reports must follow event order");
+        }
+        assert!(
+            !out.mem_timeline.is_empty(),
+            "epoch barriers must sample the density timeline"
+        );
+    }
+}

@@ -1,0 +1,428 @@
+//! Replay reporting: per-function and aggregate latency summaries,
+//! lifecycle counters, the memory-density timeline, a deterministic
+//! fingerprint (the bit-identity acceptance check compares these across
+//! worker counts), and JSON export via [`crate::util::json`].
+
+use super::ReplayOutcome;
+use crate::platform::metrics::ServedFrom;
+use crate::platform::Platform;
+use crate::util::json::{obj, Json};
+use crate::util::stats::Summary;
+use crate::util::{fnv1a, human_bytes, human_ns};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One function's (or the aggregate's) replay summary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FunctionRow {
+    pub name: String,
+    pub n: u64,
+    pub mean_ns: u64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+    pub cold: u64,
+    pub warm: u64,
+    pub hibernate: u64,
+    pub woken: u64,
+}
+
+impl FunctionRow {
+    fn from_summary(name: &str, s: &mut Summary, paths: &[u64; 4]) -> Self {
+        Self {
+            name: name.to_string(),
+            n: s.len() as u64,
+            mean_ns: s.mean() as u64,
+            p50_ns: s.p50(),
+            p99_ns: s.p99(),
+            max_ns: s.max(),
+            cold: paths[0],
+            warm: paths[1],
+            hibernate: paths[2],
+            woken: paths[3],
+        }
+    }
+
+    fn write_canonical(&self, out: &mut String) {
+        let _ = write!(
+            out,
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{};",
+            self.name,
+            self.n,
+            self.mean_ns,
+            self.p50_ns,
+            self.p99_ns,
+            self.max_ns,
+            self.cold,
+            self.warm,
+            self.hibernate,
+            self.woken
+        );
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("n", Json::Num(self.n as f64)),
+            ("mean_ns", Json::Num(self.mean_ns as f64)),
+            ("p50_ns", Json::Num(self.p50_ns as f64)),
+            ("p99_ns", Json::Num(self.p99_ns as f64)),
+            ("max_ns", Json::Num(self.max_ns as f64)),
+            ("cold", Json::Num(self.cold as f64)),
+            ("warm", Json::Num(self.warm as f64)),
+            ("hibernate", Json::Num(self.hibernate as f64)),
+            ("woken", Json::Num(self.woken as f64)),
+        ])
+    }
+}
+
+/// The full replay report.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    pub scenario: String,
+    pub seed: u64,
+    pub workers: usize,
+    pub events: usize,
+    pub wall_ns: u64,
+    /// Per-function rows, sorted by name.
+    pub functions: Vec<FunctionRow>,
+    /// All functions folded together.
+    pub aggregate: FunctionRow,
+    pub counters: Vec<(&'static str, u64)>,
+    /// `(epoch_start_vns, committed_bytes)` density timeline.
+    pub mem_timeline: Vec<(u64, u64)>,
+    /// Final instance census: `(workload, state_label, count)`.
+    pub final_states: Vec<(String, String, u64)>,
+    /// Committed host bytes after the replay.
+    pub final_committed: u64,
+}
+
+fn path_slot(from: ServedFrom) -> usize {
+    match from {
+        ServedFrom::ColdStart => 0,
+        ServedFrom::Warm => 1,
+        ServedFrom::Hibernate => 2,
+        ServedFrom::WokenUp => 3,
+    }
+}
+
+impl ReplayReport {
+    /// Aggregate one replay's outcome against the platform it ran on.
+    pub fn build(
+        scenario: &str,
+        seed: u64,
+        platform: &Platform,
+        outcome: &ReplayOutcome,
+    ) -> Self {
+        let mut per_fn: BTreeMap<String, (Summary, [u64; 4])> = BTreeMap::new();
+        let mut all = Summary::new();
+        let mut all_paths = [0u64; 4];
+        for r in &outcome.reports {
+            // get_mut, not entry(): entry() would clone the workload String
+            // on every one of the ~100k reports when ~99% of lookups hit an
+            // existing key; one lookup on the hit path, clone only on miss.
+            match per_fn.get_mut(&r.workload) {
+                Some((summary, paths)) => {
+                    summary.add(r.latency_ns);
+                    paths[path_slot(r.served_from)] += 1;
+                }
+                None => {
+                    let mut summary = Summary::new();
+                    summary.add(r.latency_ns);
+                    let mut paths = [0u64; 4];
+                    paths[path_slot(r.served_from)] += 1;
+                    per_fn.insert(r.workload.clone(), (summary, paths));
+                }
+            }
+            all.add(r.latency_ns);
+            all_paths[path_slot(r.served_from)] += 1;
+        }
+        let functions: Vec<FunctionRow> = per_fn
+            .iter_mut()
+            .map(|(name, (summary, paths))| FunctionRow::from_summary(name, summary, paths))
+            .collect();
+        let aggregate = FunctionRow::from_summary("__all__", &mut all, &all_paths);
+
+        let mut final_states = Vec::new();
+        for (workload, rows) in platform.pool_snapshot() {
+            let mut by_state: BTreeMap<String, u64> = BTreeMap::new();
+            for (state, _bytes) in rows {
+                *by_state.entry(state.to_string()).or_default() += 1;
+            }
+            for (state, count) in by_state {
+                final_states.push((workload.clone(), state, count));
+            }
+        }
+
+        Self {
+            scenario: scenario.to_string(),
+            seed,
+            workers: outcome.workers,
+            events: outcome.reports.len(),
+            wall_ns: outcome.wall_ns,
+            functions,
+            aggregate,
+            counters: platform.metrics.counters.snapshot(),
+            mem_timeline: outcome.mem_timeline.clone(),
+            final_states,
+            final_committed: platform.memory_used(),
+        }
+    }
+
+    /// Deterministic fingerprint over everything virtual-time-derived:
+    /// per-function rows, the aggregate, lifecycle counters, the density
+    /// timeline and the final pool census — everything except wall-clock
+    /// and worker count. Two replays of the same scenario at different
+    /// `--workers` must produce equal fingerprints.
+    pub fn fingerprint(&self) -> u64 {
+        let mut canon = String::new();
+        let _ = write!(canon, "{}@{}#{};", self.scenario, self.seed, self.events);
+        for f in &self.functions {
+            f.write_canonical(&mut canon);
+        }
+        self.aggregate.write_canonical(&mut canon);
+        for (k, v) in &self.counters {
+            let _ = write!(canon, "{k}={v};");
+        }
+        for (t, b) in &self.mem_timeline {
+            let _ = write!(canon, "{t}:{b};");
+        }
+        for (w, s, c) in &self.final_states {
+            let _ = write!(canon, "{w}/{s}={c};");
+        }
+        let _ = write!(canon, "committed={}", self.final_committed);
+        fnv1a(&canon)
+    }
+
+    /// JSON export (the CI smoke job uploads this as an artifact).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("scenario", Json::Str(self.scenario.clone())),
+            // Hex string, not a JSON number: u64 seeds above 2^53 would
+            // silently lose precision as f64, and the seed must replay the
+            // scenario exactly.
+            ("seed", Json::Str(format!("0x{:016x}", self.seed))),
+            ("workers", Json::Num(self.workers as f64)),
+            ("events", Json::Num(self.events as f64)),
+            ("wall_ns", Json::Num(self.wall_ns as f64)),
+            (
+                "fingerprint",
+                Json::Str(format!("{:016x}", self.fingerprint())),
+            ),
+            ("aggregate", self.aggregate.to_json()),
+            (
+                "functions",
+                Json::Arr(self.functions.iter().map(|f| f.to_json()).collect()),
+            ),
+            (
+                "counters",
+                obj(self
+                    .counters
+                    .iter()
+                    .map(|(k, v)| (*k, Json::Num(*v as f64)))
+                    .collect()),
+            ),
+            (
+                "mem_timeline",
+                Json::Arr(
+                    self.mem_timeline
+                        .iter()
+                        .map(|(t, b)| {
+                            Json::Arr(vec![Json::Num(*t as f64), Json::Num(*b as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "final_states",
+                Json::Arr(
+                    self.final_states
+                        .iter()
+                        .map(|(w, s, c)| {
+                            obj(vec![
+                                ("workload", Json::Str(w.clone())),
+                                ("state", Json::Str(s.clone())),
+                                ("count", Json::Num(*c as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("final_committed", Json::Num(self.final_committed as f64)),
+        ])
+    }
+
+    /// Write the JSON report to `path`.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_json().to_string())
+            .with_context(|| format!("writing replay report {}", path.as_ref().display()))
+    }
+
+    /// Human summary: the aggregate, the busiest functions, counters and
+    /// the density envelope.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "scenario {} seed {:#x}: {} events, {} functions, {} workers, wall {}",
+            self.scenario,
+            self.seed,
+            self.events,
+            self.functions.len(),
+            self.workers,
+            human_ns(self.wall_ns),
+        );
+        let row = |out: &mut String, f: &FunctionRow| {
+            let _ = writeln!(
+                out,
+                "{:<28} n={:<7} mean={:>10} p50={:>10} p99={:>10} cold={} warm={} hib={} woken={}",
+                f.name,
+                f.n,
+                human_ns(f.mean_ns),
+                human_ns(f.p50_ns),
+                human_ns(f.p99_ns),
+                f.cold,
+                f.warm,
+                f.hibernate,
+                f.woken,
+            );
+        };
+        row(&mut out, &self.aggregate);
+        let mut busiest: Vec<&FunctionRow> = self.functions.iter().collect();
+        busiest.sort_by_key(|f| std::cmp::Reverse(f.n));
+        for f in busiest.iter().take(5) {
+            row(&mut out, f);
+        }
+        let _ = write!(out, "counters:");
+        for (k, v) in &self.counters {
+            let _ = write!(out, " {k}={v}");
+        }
+        let _ = writeln!(out);
+        if let (Some(min), Some(max)) = (
+            self.mem_timeline.iter().map(|(_, b)| *b).min(),
+            self.mem_timeline.iter().map(|(_, b)| *b).max(),
+        ) {
+            let _ = writeln!(
+                out,
+                "memory: {} … {} over {} epochs, final {}",
+                human_bytes(min),
+                human_bytes(max),
+                self.mem_timeline.len(),
+                human_bytes(self.final_committed),
+            );
+        }
+        let _ = writeln!(out, "fingerprint: {:016x}", self.fingerprint());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::sandbox::RequestOutcome;
+    use crate::container::state::ContainerState;
+    use crate::platform::RequestReport;
+
+    fn fake_report(workload: &str, from: ServedFrom, latency_ns: u64) -> RequestReport {
+        RequestReport {
+            workload: workload.to_string(),
+            served_from: from,
+            latency_ns,
+            charged_ns: latency_ns,
+            measured_ns: 0,
+            outcome: RequestOutcome {
+                from: ContainerState::Warm,
+                sample_request: false,
+                anon_faults: 0,
+                file_miss_bytes: 0,
+                reap_prefetched: 0,
+            },
+        }
+    }
+
+    fn fake_outcome(reports: Vec<RequestReport>) -> ReplayOutcome {
+        ReplayOutcome {
+            reports,
+            mem_timeline: vec![(0, 100), (100_000_000, 200)],
+            workers: 2,
+            wall_ns: 12345,
+        }
+    }
+
+    fn rig_platform() -> Platform {
+        let mut cfg = crate::config::PlatformConfig::default();
+        cfg.host_memory = 128 << 20;
+        cfg.swap_dir = std::env::temp_dir()
+            .join(format!("qh-report-test-{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        Platform::new(cfg, std::sync::Arc::new(crate::container::NoopRunner)).unwrap()
+    }
+
+    #[test]
+    fn rows_aggregate_and_sort() {
+        let p = rig_platform();
+        let outcome = fake_outcome(vec![
+            fake_report("b", ServedFrom::Warm, 100),
+            fake_report("a", ServedFrom::ColdStart, 1000),
+            fake_report("b", ServedFrom::Hibernate, 300),
+        ]);
+        let r = ReplayReport::build("test", 7, &p, &outcome);
+        assert_eq!(r.events, 3);
+        assert_eq!(r.functions.len(), 2);
+        assert_eq!(r.functions[0].name, "a");
+        assert_eq!(r.functions[1].n, 2);
+        assert_eq!(r.functions[1].warm, 1);
+        assert_eq!(r.functions[1].hibernate, 1);
+        assert_eq!(r.aggregate.n, 3);
+        assert_eq!(r.aggregate.cold, 1);
+        assert_eq!(r.aggregate.p99_ns, 1000);
+    }
+
+    #[test]
+    fn fingerprint_ignores_wall_and_workers_but_not_results() {
+        let p = rig_platform();
+        let base = fake_outcome(vec![fake_report("a", ServedFrom::Warm, 100)]);
+        let r1 = ReplayReport::build("test", 7, &p, &base);
+
+        let mut faster = fake_outcome(vec![fake_report("a", ServedFrom::Warm, 100)]);
+        faster.wall_ns = 1;
+        faster.workers = 8;
+        let r2 = ReplayReport::build("test", 7, &p, &faster);
+        assert_eq!(r1.fingerprint(), r2.fingerprint());
+
+        let changed = fake_outcome(vec![fake_report("a", ServedFrom::Warm, 101)]);
+        let r3 = ReplayReport::build("test", 7, &p, &changed);
+        assert_ne!(r1.fingerprint(), r3.fingerprint());
+    }
+
+    #[test]
+    fn json_round_trips_and_summary_renders() {
+        let p = rig_platform();
+        let outcome = fake_outcome(vec![
+            fake_report("a", ServedFrom::Warm, 100),
+            fake_report("a", ServedFrom::WokenUp, 150),
+        ]);
+        let r = ReplayReport::build("test", 7, &p, &outcome);
+        let text = r.to_json().to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("events").unwrap().as_u64(), Some(2));
+        assert_eq!(
+            back.get("seed").unwrap().as_str(),
+            Some("0x0000000000000007"),
+            "seed must round-trip exactly (hex string, not f64)"
+        );
+        assert_eq!(
+            back.get("functions").unwrap().as_arr().unwrap().len(),
+            1
+        );
+        assert_eq!(
+            back.get("mem_timeline").unwrap().as_arr().unwrap().len(),
+            2
+        );
+        let s = r.summary();
+        assert!(s.contains("__all__"));
+        assert!(s.contains("fingerprint"));
+    }
+}

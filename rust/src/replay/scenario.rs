@@ -1,0 +1,388 @@
+//! Scenario library: named, seeded workload mixes at Azure-trace scale.
+//!
+//! Every scenario layers N synthetic functions (default 1000) over the 8
+//! paper workloads — function `i` inherits the memory/latency shape of
+//! paper workload `i mod 8`, scaled down [`MEM_SCALE`]× so a
+//! thousand-function host fits in a few hundred MiB — and binds an arrival
+//! process to each. Generation is purely a function of `(name, funcs,
+//! duration, seed)`, so a scenario can be rebuilt bit-identically anywhere
+//! (the determinism tests and the CI smoke job rely on this).
+//!
+//! Shapes, per the workload studies the paper leans on (Shahrad et al.'s
+//! Azure traces; the lognormal inter-arrival fits):
+//!
+//! * `azure-heavy-tail` — a few hot functions carry most invocations, a
+//!   long tail is invoked rarely in bursts; the bread-and-butter density
+//!   case Hibernate monetizes.
+//! * `diurnal-wave` — sinusoidally modulated Poisson arrivals (thinning),
+//!   four waves over the trace; exercises hibernate-on-ebb / wake-on-flow.
+//! * `flash-crowd` — sparse background traffic, then a third of all
+//!   functions burst at once mid-trace; exercises wake storms under
+//!   pressure.
+//! * `tenant-skewed` — functions grouped into 10 tenants with one tenant
+//!   dominating traffic; the fixture for per-tenant budget work.
+//! * `paper-mix` — just the 8 paper workloads with idle-heavy Poisson
+//!   arrivals (the original small-scale replay, for continuity).
+
+use crate::platform::trace::{generate, Arrival, TraceEvent, TraceSpec};
+use crate::util::rng::Rng;
+use crate::workloads::functionbench::scaled_for_test;
+use crate::workloads::{all_workloads, WorkloadSpec};
+use anyhow::{bail, Result};
+
+/// Memory scale-down factor for synthetic functions (≈ 1/64 of the paper
+/// workloads' footprints, so 1000+ functions fit one host).
+pub const MEM_SCALE: u64 = 64;
+
+/// Number of tenants in `tenant-skewed`.
+pub const TENANTS: usize = 10;
+
+/// Scenario directory: `(name, one-line description)`.
+pub const SCENARIOS: &[(&str, &str)] = &[
+    (
+        "azure-heavy-tail",
+        "hot head + rare bursty tail over N synthetic functions (the Azure shape)",
+    ),
+    (
+        "diurnal-wave",
+        "sinusoidally modulated arrivals, four waves over the trace",
+    ),
+    (
+        "flash-crowd",
+        "sparse background, then 1/3 of all functions burst at once mid-trace",
+    ),
+    (
+        "tenant-skewed",
+        "10 tenants, one dominating traffic (multi-tenant fixture)",
+    ),
+    (
+        "paper-mix",
+        "the 8 paper workloads, idle-heavy Poisson (small-scale continuity)",
+    ),
+];
+
+/// A built scenario: the functions to deploy and the trace to replay.
+pub struct ScenarioRun {
+    pub name: String,
+    pub seed: u64,
+    pub duration_ns: u64,
+    pub specs: Vec<WorkloadSpec>,
+    pub events: Vec<TraceEvent>,
+}
+
+/// Build scenario `name` with `funcs` synthetic functions over
+/// `duration_ns` of virtual time. Unknown names list the directory.
+pub fn build(name: &str, funcs: usize, duration_ns: u64, seed: u64) -> Result<ScenarioRun> {
+    let funcs = funcs.max(1);
+    let (specs, events) = match name {
+        "azure-heavy-tail" => azure_heavy_tail(funcs, duration_ns, seed),
+        "diurnal-wave" => diurnal_wave(funcs, duration_ns, seed),
+        "flash-crowd" => flash_crowd(funcs, duration_ns, seed),
+        "tenant-skewed" => tenant_skewed(funcs, duration_ns, seed),
+        "paper-mix" => paper_mix(duration_ns, seed),
+        _ => {
+            let known: Vec<&str> = SCENARIOS.iter().map(|(n, _)| *n).collect();
+            bail!("unknown scenario `{name}` (known: {})", known.join(", "));
+        }
+    };
+    Ok(ScenarioRun {
+        name: name.to_string(),
+        seed,
+        duration_ns,
+        specs,
+        events,
+    })
+}
+
+/// N synthetic functions cycling through the 8 paper workloads, scaled
+/// down [`MEM_SCALE`]×. Payloads are dropped: deterministic replay runs on
+/// the no-op runner, so latency is purely charged model time.
+fn synth_functions(funcs: usize) -> Vec<WorkloadSpec> {
+    let bases = all_workloads();
+    (0..funcs)
+        .map(|i| {
+            let mut s = scaled_for_test(bases[i % bases.len()].clone(), MEM_SCALE);
+            s.name = format!("{}-{:04}", s.name, i);
+            s.payload = None;
+            s
+        })
+        .collect()
+}
+
+fn azure_heavy_tail(
+    funcs: usize,
+    duration_ns: u64,
+    seed: u64,
+) -> (Vec<WorkloadSpec>, Vec<TraceEvent>) {
+    let specs = synth_functions(funcs);
+    let traces: Vec<TraceSpec> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let rank = i as f64 / funcs as f64;
+            let arrival = if rank < 0.02 {
+                // The hot head: ~2% of functions, sub-second cadence.
+                Arrival::Poisson {
+                    mean_gap_ns: 80_000_000,
+                }
+            } else if rank < 0.10 {
+                Arrival::Poisson {
+                    mean_gap_ns: 800_000_000,
+                }
+            } else if rank < 0.40 {
+                Arrival::Bursty {
+                    median_gap_ns: 20_000_000_000,
+                    sigma: 1.0,
+                    burst: 4,
+                }
+            } else {
+                // The long tail: rare, heavy-tailed, small bursts.
+                Arrival::Bursty {
+                    median_gap_ns: 120_000_000_000,
+                    sigma: 1.5,
+                    burst: 2,
+                }
+            };
+            TraceSpec {
+                workload: s.name.clone(),
+                arrival,
+            }
+        })
+        .collect();
+    let events = generate(&traces, duration_ns, seed);
+    (specs, events)
+}
+
+fn diurnal_wave(
+    funcs: usize,
+    duration_ns: u64,
+    seed: u64,
+) -> (Vec<WorkloadSpec>, Vec<TraceEvent>) {
+    let specs = synth_functions(funcs);
+    // Four waves over the trace; arrivals are generated at peak rate and
+    // thinned by the wave's instantaneous intensity (classic thinning — the
+    // accept draw is part of the same deterministic per-function stream).
+    let period_ns = (duration_ns / 4).max(1);
+    let mut events = Vec::new();
+    for (i, s) in specs.iter().enumerate() {
+        let mut rng = Rng::new(seed ^ ((i as u64 + 1) * 0x9E37_79B9));
+        let peak_gap_ns: f64 = if i % 10 == 0 { 500e6 } else { 8e9 };
+        let mut t = 0u64;
+        loop {
+            t = t.saturating_add((rng.exp(peak_gap_ns) as u64).max(1));
+            if t >= duration_ns {
+                break;
+            }
+            let phase = (t % period_ns) as f64 / period_ns as f64;
+            let intensity = 0.5 * (1.0 - (2.0 * std::f64::consts::PI * phase).cos());
+            if rng.chance(intensity.max(0.05)) {
+                events.push(TraceEvent {
+                    at_ns: t,
+                    workload: s.name.clone(),
+                });
+            }
+        }
+    }
+    events.sort_by_key(|e| e.at_ns);
+    (specs, events)
+}
+
+fn flash_crowd(
+    funcs: usize,
+    duration_ns: u64,
+    seed: u64,
+) -> (Vec<WorkloadSpec>, Vec<TraceEvent>) {
+    let specs = synth_functions(funcs);
+    let background: Vec<TraceSpec> = specs
+        .iter()
+        .map(|s| TraceSpec {
+            workload: s.name.clone(),
+            arrival: Arrival::Poisson {
+                mean_gap_ns: 30_000_000_000,
+            },
+        })
+        .collect();
+    let mut events = generate(&background, duration_ns, seed);
+    // The crowd: a third of all functions fire an 8-deep burst within half
+    // a second of the trace midpoint.
+    let crowd_ns = duration_ns / 2;
+    let mut rng = Rng::new(seed ^ 0xF1A5_4C20_3D);
+    for (i, s) in specs.iter().enumerate() {
+        if i % 3 != 0 {
+            continue;
+        }
+        let start = crowd_ns + rng.below(500_000_000);
+        for b in 0..8u64 {
+            let at = start + b * 2_000_000;
+            if at < duration_ns {
+                events.push(TraceEvent {
+                    at_ns: at,
+                    workload: s.name.clone(),
+                });
+            }
+        }
+    }
+    events.sort_by_key(|e| e.at_ns);
+    (specs, events)
+}
+
+fn tenant_skewed(
+    funcs: usize,
+    duration_ns: u64,
+    seed: u64,
+) -> (Vec<WorkloadSpec>, Vec<TraceEvent>) {
+    let mut specs = synth_functions(funcs);
+    for (i, s) in specs.iter_mut().enumerate() {
+        s.name = format!("t{:02}-{}", i % TENANTS, s.name);
+    }
+    let traces: Vec<TraceSpec> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let arrival = if i % TENANTS == 0 {
+                // Tenant 0 dominates: every one of its functions is hot.
+                Arrival::Poisson {
+                    mean_gap_ns: 400_000_000,
+                }
+            } else {
+                Arrival::Poisson {
+                    mean_gap_ns: 45_000_000_000,
+                }
+            };
+            TraceSpec {
+                workload: s.name.clone(),
+                arrival,
+            }
+        })
+        .collect();
+    let events = generate(&traces, duration_ns, seed);
+    (specs, events)
+}
+
+fn paper_mix(duration_ns: u64, seed: u64) -> (Vec<WorkloadSpec>, Vec<TraceEvent>) {
+    let specs: Vec<WorkloadSpec> = all_workloads()
+        .into_iter()
+        .map(|w| scaled_for_test(w, 16))
+        .collect();
+    let traces: Vec<TraceSpec> = specs
+        .iter()
+        .map(|s| TraceSpec {
+            workload: s.name.clone(),
+            arrival: Arrival::Poisson {
+                mean_gap_ns: 1_000_000_000,
+            },
+        })
+        .collect();
+    let events = generate(&traces, duration_ns, seed);
+    (specs, events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn sane(run: &ScenarioRun) {
+        assert!(!run.events.is_empty(), "{}: empty trace", run.name);
+        assert!(
+            run.events.windows(2).all(|w| w[0].at_ns <= w[1].at_ns),
+            "{}: trace must be time-sorted",
+            run.name
+        );
+        assert!(
+            run.events.iter().all(|e| e.at_ns < run.duration_ns),
+            "{}: events must stay inside the trace window",
+            run.name
+        );
+        let deployed: HashSet<&str> = run.specs.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(
+            deployed.len(),
+            run.specs.len(),
+            "{}: function names must be unique",
+            run.name
+        );
+        assert!(
+            run.events.iter().all(|e| deployed.contains(e.workload.as_str())),
+            "{}: every event must target a deployed function",
+            run.name
+        );
+        for s in &run.specs {
+            s.validate().unwrap_or_else(|e| panic!("{}: {e}", s.name));
+        }
+    }
+
+    #[test]
+    fn every_scenario_builds_sane_and_deterministic() {
+        for (name, _) in SCENARIOS {
+            let a = build(name, 64, 20_000_000_000, 7).unwrap();
+            let b = build(name, 64, 20_000_000_000, 7).unwrap();
+            let c = build(name, 64, 20_000_000_000, 8).unwrap();
+            sane(&a);
+            assert_eq!(a.events, b.events, "{name}: same seed, same trace");
+            assert_ne!(a.events, c.events, "{name}: different seed, different trace");
+        }
+    }
+
+    #[test]
+    fn unknown_scenario_lists_the_directory() {
+        let err = build("nope", 8, 1_000_000_000, 1).unwrap_err();
+        assert!(err.to_string().contains("azure-heavy-tail"), "{err}");
+    }
+
+    #[test]
+    fn heavy_tail_reaches_acceptance_scale() {
+        // The acceptance shape: 1000 functions, ≥ 100k events over 300 s.
+        let run = build("azure-heavy-tail", 1000, 300_000_000_000, 42).unwrap();
+        assert_eq!(run.specs.len(), 1000);
+        assert!(
+            run.events.len() >= 100_000,
+            "heavy-tail at full scale must produce ≥ 100k events, got {}",
+            run.events.len()
+        );
+        // The head is hot: the top 2% of functions carry the majority.
+        let head: HashSet<&str> = run
+            .specs
+            .iter()
+            .take(20)
+            .map(|s| s.name.as_str())
+            .collect();
+        let head_events = run
+            .events
+            .iter()
+            .filter(|e| head.contains(e.workload.as_str()))
+            .count();
+        assert!(
+            head_events * 2 > run.events.len(),
+            "head must dominate: {head_events}/{}",
+            run.events.len()
+        );
+    }
+
+    #[test]
+    fn flash_crowd_spikes_at_the_midpoint() {
+        let run = build("flash-crowd", 90, 60_000_000_000, 3).unwrap();
+        let mid = run.duration_ns / 2;
+        let in_window = run
+            .events
+            .iter()
+            .filter(|e| e.at_ns >= mid && e.at_ns < mid + 1_000_000_000)
+            .count();
+        // 30 functions × 8-deep bursts land inside [mid, mid+1s).
+        assert!(in_window >= 200, "crowd must spike: {in_window}");
+    }
+
+    #[test]
+    fn tenant_skew_dominates_traffic() {
+        let run = build("tenant-skewed", 100, 60_000_000_000, 5).unwrap();
+        let t0 = run
+            .events
+            .iter()
+            .filter(|e| e.workload.starts_with("t00-"))
+            .count();
+        assert!(
+            t0 * 2 > run.events.len(),
+            "tenant 0 must dominate: {t0}/{}",
+            run.events.len()
+        );
+    }
+}

@@ -15,6 +15,8 @@
 
 mod clock;
 mod cost;
+mod schedule;
 
 pub use clock::{Clock, SharedClock, Span};
 pub use cost::CostModel;
+pub use schedule::TickSchedule;
