@@ -4,10 +4,16 @@
 //!    working-set sizes (the 100 MB/s vs >1 GB/s asymmetry REAP exploits);
 //! 2. page-fault swap-in vs REAP batch swap-in over the *real* mechanism
 //!    (real swap files, real page contents), charged + CPU time separately;
-//! 3. the §3.4.1 working-set table: bytes swapped out vs bytes a request
+//! 3. **delta swap-out**: bytes written per hibernate cycle — cycle 2 on
+//!    an untouched working set must write 0 bytes, a cycle after K faults
+//!    writes exactly K pages (the O(dirty) contract, asserted here);
+//! 4. the §3.4.1 working-set table: bytes swapped out vs bytes a request
 //!    reloads (Node.js hello: ~10 MB out, ~4 MB back);
-//! 4. real-file I/O throughput of the swap path (CPU-side cost that the
+//! 5. real-file I/O throughput of the swap path (CPU-side cost that the
 //!    §Perf pass optimizes).
+//!
+//! Set `QH_BENCH_OUT=dir` to also write `micro_swap.csv` (the CI
+//! bench-smoke artifact).
 
 use quark_hibernate::bench_support::rig;
 use quark_hibernate::config::SharingConfig;
@@ -123,6 +129,122 @@ fn mechanism_comparison(pages: u64) {
     println!();
 }
 
+/// One CSV row per measurement for the CI artifact (`QH_BENCH_OUT`).
+struct CsvOut {
+    rows: Vec<String>,
+}
+
+impl CsvOut {
+    fn new() -> Self {
+        Self {
+            rows: vec!["section,label,pages,bytes_written,charged_ns,cpu_ns".into()],
+        }
+    }
+
+    fn row(&mut self, section: &str, label: &str, pages: u64, bytes: u64, charged: u64, cpu: u64) {
+        self.rows
+            .push(format!("{section},{label},{pages},{bytes},{charged},{cpu}"));
+    }
+
+    fn save(&self) {
+        let Ok(dir) = std::env::var("QH_BENCH_OUT") else {
+            return;
+        };
+        let _ = std::fs::create_dir_all(&dir);
+        let path = std::path::Path::new(&dir).join("micro_swap.csv");
+        if let Err(e) = std::fs::write(&path, self.rows.join("\n") + "\n") {
+            eprintln!("micro_swap: failed to write {}: {e}", path.display());
+        } else {
+            println!("csv written to {}", path.display());
+        }
+    }
+}
+
+/// §3 above: the delta swap-out per-cycle bytes, with the acceptance
+/// assertions inline — this is the before/after number for the tentpole
+/// (the old path wrote `pages` images on *every* cycle).
+fn delta_swapout_cycles(pages: u64, csv: &mut CsvOut) {
+    println!("== delta swap-out: bytes written per hibernate cycle ({pages} pages) ==");
+    let quick = std::env::var("QH_QUICK").is_ok();
+    let pages = if quick { pages.min(512) } else { pages };
+    let svc = rig(
+        1 << 30,
+        SharingConfig::default(),
+        true,
+        Arc::new(NoopRunner),
+        "micro-swap-delta",
+    );
+    let dir = svc.swap_dir.join("micro-delta");
+    let files = SwapFileSet::create(&dir, 98).unwrap();
+    let mut mgr = SwapMgr::new(files, CostModel::paper());
+    let clock = Clock::new();
+    let alloc = quark_hibernate::mem::bitmap_alloc::BitmapPageAllocator::new(
+        svc.host.clone(),
+        svc.heap.clone(),
+    );
+    let mut pt = PageTable::new();
+    let mut gpas = Vec::new();
+    for i in 0..pages {
+        let gpa = alloc.alloc_page().unwrap();
+        svc.host.fill_page(gpa, i).unwrap();
+        pt.map(Gva(i * 0x1000), Pte::new_present(gpa, Pte::WRITABLE | Pte::DIRTY));
+        gpas.push(gpa);
+    }
+
+    let mut cycle = |label: &str, mgr: &mut SwapMgr, pt: &mut PageTable, csv: &mut CsvOut| {
+        let t0 = Instant::now();
+        let rpt = mgr.swap_out(&mut [pt], &svc.host, &clock).unwrap();
+        let cpu = t0.elapsed().as_nanos() as u64;
+        let (charged, _) = clock.take();
+        println!(
+            "{label:<34} wrote {:>7} ({:>4} pages), charged {}, cpu {}",
+            human_bytes(rpt.bytes_written),
+            rpt.unique_pages,
+            human_ns(charged),
+            human_ns(cpu),
+        );
+        csv.row("delta_swapout", label, rpt.unique_pages, rpt.bytes_written, charged, cpu);
+        rpt
+    };
+
+    // Cycle 1: everything is new — the full working set goes out.
+    let c1 = cycle("cycle 1 (cold, all pages new)", &mut mgr, &mut pt, csv);
+    assert_eq!(c1.bytes_written, pages * PAGE_SIZE as u64);
+
+    // Cycle 2: wake-no-touch — the delta is empty.
+    let c2 = cycle("cycle 2 (untouched working set)", &mut mgr, &mut pt, csv);
+    assert_eq!(
+        c2.bytes_written, 0,
+        "an untouched cycle must write zero page images"
+    );
+
+    // Cycle 3: fault K pages back, hibernate again — exactly K written.
+    let k = pages / 4;
+    for i in 0..k {
+        mgr.fault_swap_in(&mut pt, Gva(i * 0x1000), &svc.host, &clock)
+            .unwrap();
+    }
+    clock.take();
+    let c3 = cycle(
+        &format!("cycle 3 ({k} pages faulted back)"),
+        &mut mgr,
+        &mut pt,
+        csv,
+    );
+    assert_eq!(
+        c3.bytes_written,
+        k * PAGE_SIZE as u64,
+        "a cycle after K faults must write exactly K pages"
+    );
+    println!(
+        "old path would have written {} per cycle; delta wrote {} then {}",
+        human_bytes(pages * PAGE_SIZE as u64),
+        human_bytes(c2.bytes_written),
+        human_bytes(c3.bytes_written),
+    );
+    println!();
+}
+
 fn working_set_table() {
     println!("== §3.4.1 working set: swapped-out vs reloaded per request ==");
     println!(
@@ -159,9 +281,12 @@ fn working_set_table() {
 }
 
 fn main() {
+    let mut csv = CsvOut::new();
     device_model_table();
     mechanism_comparison(2560); // 10 MB — the paper's Node.js example size
+    delta_swapout_cycles(2560, &mut csv);
     working_set_table();
+    csv.save();
     // Shape check for the nodejs claim.
     let quick = std::env::var("QH_QUICK").is_ok();
     let spec = if quick {

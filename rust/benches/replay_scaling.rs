@@ -42,6 +42,29 @@ fn main() {
         );
     }
 
+    // CI artifact: per-worker-count rows plus the shared fingerprint, so
+    // the bench-smoke job can diff fingerprints across commits (the first
+    // step of the throughput regression gate).
+    if let Ok(dir) = std::env::var("QH_BENCH_OUT") {
+        let _ = std::fs::create_dir_all(&dir);
+        let mut csv = String::from("workers,events,wall_ns,events_per_sec,fingerprint\n");
+        for r in &results {
+            csv.push_str(&format!(
+                "{},{},{},{:.0},{:016x}\n",
+                r.workers,
+                r.events,
+                r.wall_ns,
+                r.events_per_sec(),
+                r.fingerprint
+            ));
+        }
+        let path = std::path::Path::new(&dir).join("replay_scaling.csv");
+        match std::fs::write(&path, csv) {
+            Ok(()) => println!("csv written to {}", path.display()),
+            Err(e) => eprintln!("replay_scaling: failed to write {}: {e}", path.display()),
+        }
+    }
+
     // The scaling claim, with generous slack for small or loaded machines.
     let cores = std::thread::available_parallelism()
         .map(|n| n.get())

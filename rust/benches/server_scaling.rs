@@ -27,6 +27,35 @@ fn main() {
             if base_rps > 0.0 { r.rps() / base_rps } else { 0.0 },
         );
     }
+    // Tick-induced stall on co-sharded functions: how long the policy
+    // tick runs when it hibernates a ~10 MB sandbox, synchronously vs
+    // through the off-lock deflation pool. The stalled tick is what used
+    // to delay every other function's hibernate/wake decision.
+    println!();
+    println!("== policy-tick stall while deflating a fat sandbox ==");
+    println!("{:<18} {:>12} {:>12}", "deflation", "max tick", "mean tick");
+    let cycles = if quick { 3 } else { 10 };
+    let sync = server_scaling::tick_stall(0, cycles);
+    let pooled = server_scaling::tick_stall(2, cycles);
+    for r in [&sync, &pooled] {
+        println!(
+            "{:<18} {:>9.2} ms {:>9.2} ms",
+            if r.deflate_workers == 0 {
+                "sync (old path)".to_string()
+            } else {
+                format!("pool ({} workers)", r.deflate_workers)
+            },
+            r.max_tick_ns as f64 / 1e6,
+            r.mean_tick_ns as f64 / 1e6,
+        );
+    }
+    if pooled.max_tick_ns > 0 {
+        println!(
+            "tick-stall reduction: {:.1}x",
+            sync.max_tick_ns as f64 / pooled.max_tick_ns as f64
+        );
+    }
+
     // The point of the sharded control plane: more workers, more
     // throughput. Allow generous slack for small or loaded machines.
     let cores = std::thread::available_parallelism()

@@ -4,13 +4,20 @@
 //! compute time) through the threaded server at increasing worker counts
 //! and reports requests/second — which must grow with workers now that no
 //! global pools lock or shared receiver serializes the data plane.
+//!
+//! Also home to the **tick-stall** measurement ([`tick_stall`]): how long
+//! a policy tick runs when it has to deflate a fat sandbox, synchronously
+//! (`deflate_workers = 0`, the old behavior — the control loop eats the
+//! whole swap-out) vs through the off-lock deflation pool (the tick only
+//! flips state and submits). The stalled control loop is what delayed
+//! hibernate/wake decisions for every co-sharded function.
 
 use crate::config::PlatformConfig;
-use crate::container::SpinRunner;
+use crate::container::{NoopRunner, SpinRunner};
 use crate::platform::server::{Server, ServerConfig};
 use crate::platform::Platform;
 use crate::simtime::CostModel;
-use crate::workloads::functionbench::{golang_hello, scaled_for_test};
+use crate::workloads::functionbench::{golang_hello, nodejs_hello, scaled_for_test};
 use crate::workloads::PayloadSpec;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -104,4 +111,73 @@ pub fn run(
         });
     }
     results
+}
+
+/// One tick-stall measurement row.
+#[derive(Debug, Clone)]
+pub struct TickStallResult {
+    pub deflate_workers: usize,
+    pub cycles: usize,
+    /// Worst policy-tick wall time over the cycles.
+    pub max_tick_ns: u64,
+    /// Mean policy-tick wall time.
+    pub mean_tick_ns: u64,
+}
+
+/// Measure how long a policy tick stalls when it hibernates a fat
+/// sandbox: `cycles` rounds of warm-the-big-function → idle → tick. With
+/// `deflate_workers = 0` the tick performs the whole delta swap-out /
+/// file-release pass inline (the pre-pipeline behavior); with a pool the
+/// tick returns after the SIGSTOP flip and the I/O runs off-loop. Every
+/// cycle drains afterwards so both modes do identical total work.
+pub fn tick_stall(deflate_workers: usize, cycles: usize) -> TickStallResult {
+    let mut cfg = PlatformConfig::default();
+    cfg.host_memory = 2 << 30;
+    cfg.cost = CostModel::paper();
+    cfg.shards = 1; // one shard: every function co-sharded with the fat one
+    cfg.policy.hibernate_idle_ms = 1;
+    cfg.policy.predictive_wakeup = false;
+    cfg.policy.deflate_workers = deflate_workers;
+    cfg.swap_dir = std::env::temp_dir()
+        .join(format!(
+            "qh-tick-stall-{deflate_workers}-{}",
+            std::process::id()
+        ))
+        .to_string_lossy()
+        .into_owned();
+    let platform = Platform::new(cfg, Arc::new(NoopRunner)).expect("platform");
+    let mut big = nodejs_hello(); // ~10 MB anon: a real swap-out
+    big.name = "big".into();
+    big.payload = None;
+    platform.deploy(big).expect("deploy");
+    for i in 0..4 {
+        let mut tiny = scaled_for_test(golang_hello(), 64);
+        tiny.name = format!("tiny-{i}");
+        tiny.payload = None;
+        platform.deploy(tiny).expect("deploy");
+    }
+
+    let mut vt: u64 = 0;
+    let mut ticks = Vec::with_capacity(cycles);
+    for _ in 0..cycles {
+        let r = platform.request_at("big", vt).expect("big request");
+        vt += r.latency_ns + 10_000_000; // idle well past the 1 ms threshold
+        let t0 = Instant::now();
+        platform.policy_tick_nowait(vt).expect("tick");
+        ticks.push(t0.elapsed().as_nanos() as u64);
+        // Co-sharded functions keep serving while the deflation runs.
+        for i in 0..4 {
+            platform
+                .request_at(&format!("tiny-{i}"), vt + 1_000_000)
+                .expect("tiny request");
+        }
+        platform.drain_deflations().expect("drain");
+        vt += 10_000_000;
+    }
+    TickStallResult {
+        deflate_workers,
+        cycles,
+        max_tick_ns: ticks.iter().copied().max().unwrap_or(0),
+        mean_tick_ns: ticks.iter().sum::<u64>() / ticks.len().max(1) as u64,
+    }
 }

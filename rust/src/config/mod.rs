@@ -36,6 +36,13 @@ pub struct PolicyConfig {
     ///
     /// [`policy_tick`]: crate::platform::Platform::policy_tick
     pub tick_stride: usize,
+    /// Deflation worker threads: the policy tick performs only the cheap
+    /// SIGSTOP state flip per hibernated instance and hands the expensive
+    /// swap/release I/O to this pool (the instance's reservation keeps
+    /// requests off it meanwhile; completions are reaped at the next
+    /// tick). `0` = run deflation synchronously inside the tick (the old
+    /// behavior — useful as a baseline and for the bench comparison).
+    pub deflate_workers: usize,
 }
 
 impl Default for PolicyConfig {
@@ -48,6 +55,7 @@ impl Default for PolicyConfig {
             predictive_wakeup: true,
             reap_enabled: true,
             tick_stride: 1,
+            deflate_workers: 2,
         }
     }
 }
@@ -233,6 +241,9 @@ impl PlatformConfig {
         let mut tick_stride = self.policy.tick_stride as u64;
         get_u64(t, "policy", "tick_stride", &mut tick_stride)?;
         self.policy.tick_stride = (tick_stride as usize).max(1);
+        let mut deflate_workers = self.policy.deflate_workers as u64;
+        get_u64(t, "policy", "deflate_workers", &mut deflate_workers)?;
+        self.policy.deflate_workers = deflate_workers as usize;
 
         let mut replay_workers = self.replay.workers as u64;
         get_u64(t, "replay", "workers", &mut replay_workers)?;
@@ -364,12 +375,15 @@ mod tests {
         assert_eq!(c.policy.tick_stride, 1);
         assert!(c.predictor_state_file.is_empty());
 
+        assert_eq!(c.policy.deflate_workers, 2, "deflation pool on by default");
+
         let c = PlatformConfig::from_str(
             r#"
             predictor_state_file = "/tmp/tracks.csv"
 
             [policy]
             tick_stride = 4
+            deflate_workers = 0
 
             [replay]
             workers = 8
@@ -381,6 +395,7 @@ mod tests {
         .unwrap();
         assert_eq!(c.predictor_state_file, "/tmp/tracks.csv");
         assert_eq!(c.policy.tick_stride, 4);
+        assert_eq!(c.policy.deflate_workers, 0, "0 = synchronous deflation");
         assert_eq!(c.replay.workers, 8);
         assert_eq!(c.replay.epoch_ms, 50);
         assert_eq!(c.replay.tick_ms, 10);

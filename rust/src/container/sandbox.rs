@@ -329,6 +329,8 @@ impl Sandbox {
         if pte.is_empty() {
             // First touch: allocate from the Bitmap Page Allocator in the
             // page-fault handler (§3.3) and fill deterministic content.
+            // The fill is a write, so the entry starts DIRTY (the delta
+            // swap-out keys off the bit).
             let gpa = self.alloc.alloc_page()?;
             self.svc
                 .host
@@ -336,7 +338,7 @@ impl Sandbox {
             self.procs[p]
                 .asp
                 .pt
-                .map(gva, Pte::new_present(gpa, Pte::WRITABLE));
+                .map(gva, Pte::new_present(gpa, Pte::WRITABLE | Pte::DIRTY));
             clock.charge(
                 self.svc.cost.page_fault_handling_ns + self.svc.cost.host_commit_per_page_ns,
             );
@@ -362,7 +364,7 @@ impl Sandbox {
                 self.procs[p]
                     .asp
                     .pt
-                    .map(gva, Pte::new_present(new_gpa, Pte::WRITABLE));
+                    .map(gva, Pte::new_present(new_gpa, Pte::WRITABLE | Pte::DIRTY));
                 clock.charge(
                     self.svc.cost.page_fault_handling_ns
                         + self.svc.cost.host_commit_per_page_ns,
@@ -375,6 +377,10 @@ impl Sandbox {
                 .pt
                 .update(gva, |q| q.without(Pte::COW).with(Pte::WRITABLE));
         }
+        // touch_page modifies the frame (it is a write access), so mark the
+        // entry DIRTY like the MMU would — the delta swap-out must rewrite
+        // this page's slot image.
+        self.procs[p].asp.pt.update(gva, |q| q.with(Pte::DIRTY));
         self.svc.host.touch_page(pte.gpa())?;
         Ok(())
     }
@@ -501,12 +507,40 @@ impl Sandbox {
     }
 
     /// SIGSTOP → deflate (§3.2's four steps). Legal from Warm and WokenUp.
+    ///
+    /// Composed of [`Self::hibernate_begin`] (the cheap state flip) and
+    /// [`Self::hibernate_finish`] (the expensive swap/release I/O). The
+    /// platform's policy loop performs the flip under its shard lock and
+    /// hands the finish to a deflation worker so the I/O never stalls
+    /// routing; direct callers get both in one call.
     pub fn hibernate(&mut self, clock: &Clock) -> Result<HibernateReport> {
-        self.state = self.state.transition(Event::SigStop)?;
-        let mut report = HibernateReport::default();
+        self.hibernate_begin()?;
+        self.hibernate_finish(clock)
+    }
 
-        // Step 1: pause guest applications, park the runtime host threads.
+    /// Deflation step #1 only: SIGSTOP semantics — pause the guest, park
+    /// the runtime host threads, enter the Hibernate state. Cheap (no I/O,
+    /// no page walks); after it returns the router sees `Hibernate` and
+    /// stops preferring the instance, while the caller's reservation keeps
+    /// requests off it until [`Self::hibernate_finish`] completes.
+    pub fn hibernate_begin(&mut self) -> Result<()> {
+        self.state = self.state.transition(Event::SigStop)?;
         self.paused = true;
+        Ok(())
+    }
+
+    /// Deflation steps #2–#4: reclaim freed pages, swap out committed anon
+    /// pages (delta), drop file-backed mappings. The expensive half — run
+    /// it off the control-plane path, holding only this sandbox's mutex.
+    /// Requires [`Self::hibernate_begin`] to have run.
+    pub fn hibernate_finish(&mut self, clock: &Clock) -> Result<HibernateReport> {
+        if self.state != ContainerState::Hibernate || !self.paused {
+            bail!(
+                "hibernate_finish without hibernate_begin (state {})",
+                self.state
+            );
+        }
+        let mut report = HibernateReport::default();
 
         // Step 2: reclaim freed application memory (scratch pages etc.).
         report.freed_pages_reclaimed = self.alloc.reclaim_free_pages()?;
@@ -525,7 +559,9 @@ impl Sandbox {
                 procs.iter_mut().map(|p| &mut p.asp.pt).collect();
             let rpt = swap.swap_out(&mut tables, &svc.host, clock)?;
             report.pages_swapped_out = rpt.unique_pages;
-            reap.on_full_swapout(rpt.unique_pages);
+            // The §3.4.1 working-set denominator is the full deflated set
+            // (live swap images), not this cycle's delta.
+            reap.on_full_swapout(rpt.live_pages);
         }
 
         // Step 4: clean up file-backed mmap memory (runtime binary spared).
@@ -656,6 +692,31 @@ impl Sandbox {
         Ok(acted)
     }
 
+    /// Like [`Self::drain_signals`], but a Stop performs only the cheap
+    /// state flip ([`Self::hibernate_begin`]); the expensive deflation is
+    /// left for the caller to run — or hand to a worker — via
+    /// [`Self::hibernate_finish`]. Returns whether a deflation is now
+    /// pending. This is the platform's off-lock path: the flip happens
+    /// inside the policy tick, the I/O does not.
+    pub fn drain_signals_deferred(&mut self, clock: &Clock) -> Result<bool> {
+        let mut pending = false;
+        while let Some(sig) = self.signals.take() {
+            match (sig, self.state) {
+                (ControlSignal::Stop, ContainerState::Warm | ContainerState::WokenUp) => {
+                    self.hibernate_begin()?;
+                    pending = true;
+                }
+                (ControlSignal::Cont, ContainerState::Hibernate) => {
+                    self.wake(clock)?;
+                    // A wake after a (not-yet-finished) flip cancels it.
+                    pending = false;
+                }
+                _ => {}
+            }
+        }
+        Ok(pending)
+    }
+
     /// Host-object view (None after termination).
     pub fn host_env(&self) -> Option<&HostEnv> {
         self.env.as_ref()
@@ -689,5 +750,170 @@ impl std::fmt::Debug for Sandbox {
             .field("state", &self.state)
             .field("requests", &self.requests_served)
             .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::NoopRunner;
+    use crate::mem::mmap_file::FileClass;
+    use crate::workloads::functionbench::{nodejs_hello, scaled_for_test};
+
+    fn rig(tag: &str) -> Arc<SandboxServices> {
+        SandboxServices::new_local(
+            512 << 20,
+            CostModel::free(),
+            SharingConfig::default(),
+            Arc::new(NoopRunner),
+            tag,
+        )
+        .unwrap()
+    }
+
+    /// Present PTEs of process `p` in `[start, start + pages)`.
+    fn present_in(sb: &Sandbox, p: usize, start: Gva, pages: u64) -> u64 {
+        (0..pages)
+            .filter(|i| {
+                sb.procs[p]
+                    .asp
+                    .pt
+                    .get(Gva(start.0 + i * PAGE_SIZE as u64))
+                    .present()
+            })
+            .count() as u64
+    }
+
+    #[test]
+    fn deflation_spares_runtime_pages_and_releases_app_files() {
+        // Deflation step #4 through the full hibernate path: the Quark
+        // runtime binary's pages must survive (its parked threads make the
+        // demand wake fast), every app file mapping must go.
+        let svc = rig("sb-keep-runtime");
+        let clock = Clock::new();
+        let mut sb =
+            Sandbox::cold_start(1, scaled_for_test(nodejs_hello(), 8), svc.clone(), &clock)
+                .unwrap();
+        sb.handle_request(&clock).unwrap();
+        let quark_before = present_in(&sb, 0, sb.quark_base, sb.quark_pages);
+        let bin_before =
+            present_in(&sb, 0, sb.layout.binary_base, sb.layout.binary_pages);
+        assert!(quark_before > 0 && bin_before > 0, "init must touch both");
+        let rpt = sb.hibernate(&clock).unwrap();
+        assert!(rpt.file_pages_released >= bin_before);
+        assert_eq!(
+            present_in(&sb, 0, sb.quark_base, sb.quark_pages),
+            quark_before,
+            "QuarkRuntime-class pages must survive deflation"
+        );
+        assert_eq!(
+            present_in(&sb, 0, sb.layout.binary_base, sb.layout.binary_pages),
+            0,
+            "language-runtime pages must be dropped"
+        );
+        // Terminate drops the runtime mapping too (keep_runtime = false).
+        sb.terminate().unwrap();
+        assert_eq!(present_in(&sb, 0, sb.quark_base, sb.quark_pages), 0);
+    }
+
+    #[test]
+    fn release_drops_shared_cache_mappings_and_private_copies() {
+        // Both flavors of file memory in one sandbox: a *shared* mmap'd
+        // data file mapped by TWO guest processes (one cache page, two
+        // mappers) and a *private* per-sandbox copy. release_file_pages
+        // must unmap both processes' PTEs, drop the cache mapcounts to 0,
+        // and return the private copy to the sandbox allocator — while
+        // keep_runtime spares the Quark binary.
+        let svc = rig("sb-shared-file");
+        let clock = Clock::new();
+        let mut sb =
+            Sandbox::cold_start(2, scaled_for_test(nodejs_hello(), 16), svc.clone(), &clock)
+                .unwrap();
+        let pages = 4u64;
+        let len = pages * PAGE_SIZE as u64;
+        let shared_id = svc.registry.get_or_register(
+            "shared-data.bin",
+            len,
+            FileClass::AppData,
+        );
+        let private_id = svc.registry.get_or_register(
+            "private-data.bin",
+            len,
+            FileClass::AppData,
+        );
+        // Second guest process sharing the same mmap'd file.
+        sb.procs.push(GuestProcess::new());
+        let g0 = sb.procs[0]
+            .asp
+            .mmap_file(shared_id, 0, len, true, "shared-data.bin")
+            .unwrap();
+        let g1 = sb.procs[1]
+            .asp
+            .mmap_file(shared_id, 0, len, true, "shared-data.bin")
+            .unwrap();
+        let gp = sb.procs[0]
+            .asp
+            .mmap_file(private_id, 0, len, false, "private-data.bin")
+            .unwrap();
+        let mut miss = 0u64;
+        for i in 0..pages {
+            let off = i * PAGE_SIZE as u64;
+            sb.fault_file(0, Gva(g0.0 + off), &clock, &mut miss).unwrap();
+            sb.fault_file(1, Gva(g1.0 + off), &clock, &mut miss).unwrap();
+            sb.fault_file(0, Gva(gp.0 + off), &clock, &mut miss).unwrap();
+        }
+        assert_eq!(
+            svc.cache.mapcount(shared_id, 0),
+            2,
+            "one cache page, two guest processes mapping it"
+        );
+        let private_gpa = sb.procs[0].asp.pt.get(gp).gpa();
+        assert!(sb.alloc.refcount(private_gpa) > 0);
+        let quark_before = present_in(&sb, 0, sb.quark_base, sb.quark_pages);
+
+        let released = sb.release_file_pages(true).unwrap();
+        // 2 procs × shared + 1 private, plus the language binary's pages.
+        assert!(released >= 3 * pages, "released only {released}");
+        for i in 0..pages {
+            assert_eq!(svc.cache.mapcount(shared_id, i), 0, "page {i} still mapped");
+            let off = i * PAGE_SIZE as u64;
+            assert!(sb.procs[0].asp.pt.get(Gva(g0.0 + off)).is_empty());
+            assert!(sb.procs[1].asp.pt.get(Gva(g1.0 + off)).is_empty());
+            assert!(sb.procs[0].asp.pt.get(Gva(gp.0 + off)).is_empty());
+        }
+        assert_eq!(
+            sb.alloc.refcount(private_gpa),
+            0,
+            "private copy must be returned to the sandbox allocator"
+        );
+        assert_eq!(
+            present_in(&sb, 0, sb.quark_base, sb.quark_pages),
+            quark_before,
+            "keep_runtime must spare the Quark binary mapping"
+        );
+        // The unmapped cache pages are reclaimable now.
+        assert!(svc.cache.trim_unmapped() >= pages);
+        sb.terminate().unwrap();
+    }
+
+    #[test]
+    fn hibernate_finish_requires_begin() {
+        let svc = rig("sb-split");
+        let clock = Clock::new();
+        let mut sb =
+            Sandbox::cold_start(3, scaled_for_test(nodejs_hello(), 16), svc, &clock).unwrap();
+        assert!(
+            sb.hibernate_finish(&clock).is_err(),
+            "finish without begin must be rejected"
+        );
+        sb.hibernate_begin().unwrap();
+        assert_eq!(sb.state(), ContainerState::Hibernate);
+        assert!(sb.is_paused());
+        let rpt = sb.hibernate_finish(&clock).unwrap();
+        assert!(rpt.pages_swapped_out > 0);
+        // Begin+finish ≡ the one-shot path: a demand wake still works.
+        let out = sb.handle_request(&clock).unwrap();
+        assert_eq!(out.from, ContainerState::Hibernate);
+        assert!(out.anon_faults > 0);
     }
 }

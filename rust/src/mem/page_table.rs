@@ -87,12 +87,19 @@ impl Pte {
     }
 
     /// Mark swapped-out: clear PRESENT, set bit #9, keep the frame bits.
+    ///
+    /// Also clears DIRTY: the image just written to the swap slot *is* the
+    /// page's content, so the entry restarts clean. The next write access
+    /// (the MMU in hardware; [`Pte::with`]`(Pte::DIRTY)` in callers that
+    /// emulate it) re-marks it, which is what lets the delta swap-out skip
+    /// rewriting pages whose slot image is still current.
     #[inline]
     pub fn to_swapped(self) -> Pte {
-        Pte((self.0 & !Self::PRESENT) | Self::SWAPPED)
+        Pte((self.0 & !(Self::PRESENT | Self::DIRTY)) | Self::SWAPPED)
     }
 
-    /// Complete a swap-in: set PRESENT, clear bit #9.
+    /// Complete a swap-in: set PRESENT, clear bit #9. DIRTY is left as-is
+    /// (it was cleared at swap-out, so a faulted-in page starts clean).
     #[inline]
     pub fn to_present(self) -> Pte {
         Pte((self.0 | Self::PRESENT) & !Self::SWAPPED)
@@ -374,6 +381,24 @@ mod tests {
         let back = swapped.to_present();
         assert!(back.present() && !back.swapped());
         assert_eq!(back, pte);
+    }
+
+    #[test]
+    fn dirty_bit_cleared_at_swap_restored_clean() {
+        let gpa = Gpa(0x5000);
+        let dirty = Pte::new_present(gpa, Pte::WRITABLE | Pte::DIRTY);
+        assert!(dirty.dirty());
+        let swapped = dirty.to_swapped();
+        assert!(
+            !swapped.dirty(),
+            "swap-out writes the image, so the entry restarts clean"
+        );
+        let back = swapped.to_present();
+        assert!(back.present() && !back.dirty(), "fault-in restores clean");
+        // A write access re-marks it (callers emulate the MMU).
+        let rewritten = back.with(Pte::DIRTY);
+        assert!(rewritten.dirty());
+        assert_eq!(rewritten.gpa(), gpa);
     }
 
     #[test]

@@ -1,0 +1,259 @@
+//! The off-lock deflation pipeline: a small worker pool that runs the
+//! expensive half of hibernation ([`Sandbox::hibernate_finish`] — the
+//! delta swap-out, file-page release and madvise passes) *off* the policy
+//! tick, holding only the instance's own mutex.
+//!
+//! The split: the policy tick performs the cheap SIGSTOP state flip under
+//! the shard lock (so the router immediately stops preferring the
+//! instance), then submits a [`DeflateJob`] carrying the sandbox handle
+//! and — crucially — the instance's RAII [`Reservation`]. The reservation
+//! is what makes the pipeline safe: routing and policy both skip reserved
+//! instances, so no request or eviction can race the in-flight deflation,
+//! and it is released (dropped) only after the finish completes, at which
+//! point the instance is a fully-deflated, routable `Hibernate` container.
+//!
+//! Ordering contract for determinism: a worker (1) folds the swap counters
+//! into the shared [`Metrics`], (2) drops the reservation, and only then
+//! (3) decrements the pending gauge. [`DeflationPool::drain`] therefore
+//! guarantees that once pending hits zero, every deflated instance is
+//! visible, unreserved, and fully accounted — which is what lets the
+//! replay engine drain after each tick and stay bit-identical at any
+//! worker count ([`crate::replay`]).
+//!
+//! Errors from a finish are stashed and surface at the next
+//! [`DeflationPool::reap`]/[`DeflationPool::drain`] (i.e. the next policy
+//! tick), mirroring how an async kernel writeback error surfaces later.
+
+use super::metrics::Metrics;
+use super::pool::Reservation;
+use crate::container::sandbox::Sandbox;
+use crate::simtime::Clock;
+use anyhow::{Context as _, Result};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A deflation handed to the pool: the state flip already happened; the
+/// reservation rides along and is released when the finish completes.
+pub struct DeflateJob {
+    pub workload: String,
+    pub sandbox: Arc<Mutex<Sandbox>>,
+    pub reservation: Reservation,
+}
+
+/// Test-only hook invoked by a worker before it starts a finish — lets a
+/// stress test hold a deflation in flight deterministically.
+pub type DeflateGate = Arc<dyn Fn() + Send + Sync>;
+
+#[derive(Default)]
+struct PoolState {
+    /// Jobs queued or running.
+    pending: usize,
+    /// Finishes completed since the last reap.
+    completed: u64,
+    /// Errors collected since the last reap.
+    errors: Vec<anyhow::Error>,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    idle: Condvar,
+    metrics: Arc<Metrics>,
+    gate: Mutex<Option<DeflateGate>>,
+}
+
+/// The deflation worker pool. With zero workers it is a pass-through:
+/// [`DeflationPool::run_sync`] executes the finish inline (the baseline
+/// the benches compare against).
+pub struct DeflationPool {
+    tx: Option<mpsc::Sender<DeflateJob>>,
+    workers: Vec<JoinHandle<()>>,
+    shared: Arc<Shared>,
+}
+
+impl DeflationPool {
+    pub fn new(workers: usize, metrics: Arc<Metrics>) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState::default()),
+            idle: Condvar::new(),
+            metrics,
+            gate: Mutex::new(None),
+        });
+        if workers == 0 {
+            return Self {
+                tx: None,
+                workers: Vec::new(),
+                shared,
+            };
+        }
+        let (tx, rx) = mpsc::channel::<DeflateJob>();
+        // Deflations are low-rate (policy cadence), so a shared receiver
+        // is fine here — contention is on job *arrival*, execution runs in
+        // parallel once a worker holds its job.
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers)
+            .map(|_| {
+                let rx = rx.clone();
+                let shared = shared.clone();
+                std::thread::spawn(move || loop {
+                    let job = match rx.lock().unwrap().recv() {
+                        Ok(job) => job,
+                        Err(_) => return, // channel closed: pool dropping
+                    };
+                    run_job(&shared, job);
+                })
+            })
+            .collect();
+        Self {
+            tx: Some(tx),
+            workers: handles,
+            shared,
+        }
+    }
+
+    /// Does this pool actually run deflations asynchronously?
+    pub fn is_async(&self) -> bool {
+        self.tx.is_some()
+    }
+
+    /// Queue a deflation. The pending gauge is bumped *before* the send so
+    /// a concurrent [`Self::drain`] can never miss the job.
+    pub fn submit(&self, job: DeflateJob) {
+        let tx = self.tx.as_ref().expect("submit on a synchronous pool");
+        self.shared.state.lock().unwrap().pending += 1;
+        if let Err(mpsc::SendError(job)) = tx.send(job) {
+            // Workers are only gone while the pool is being torn down;
+            // finish inline rather than losing the deflation.
+            run_job(&self.shared, job);
+        }
+    }
+
+    /// Synchronous fallback (`deflate_workers = 0`): run the finish inline
+    /// on the caller's thread. Same accounting, no queue.
+    pub fn run_sync(&self, job: DeflateJob) -> Result<()> {
+        let DeflateJob {
+            workload,
+            sandbox,
+            reservation,
+        } = job;
+        let result = finish_one(&self.shared.metrics, &workload, &sandbox);
+        drop(reservation);
+        result
+    }
+
+    /// Jobs queued or in flight right now.
+    pub fn pending(&self) -> usize {
+        self.shared.state.lock().unwrap().pending
+    }
+
+    /// Non-blocking: collect completions since the last reap. All stashed
+    /// errors are logged; the first is returned (annotated with how many
+    /// more there were, so a batch of failures is never mistaken for a
+    /// single one). Returns the number reaped on success.
+    pub fn reap(&self) -> Result<u64> {
+        let mut st = self.shared.state.lock().unwrap();
+        let n = st.completed;
+        st.completed = 0;
+        let mut errors = std::mem::take(&mut st.errors);
+        drop(st);
+        if errors.is_empty() {
+            return Ok(n);
+        }
+        for e in errors.iter().skip(1) {
+            eprintln!("deflation error (additional): {e:#}");
+        }
+        let count = errors.len();
+        let first = errors.swap_remove(0);
+        Err(if count > 1 {
+            first.context(format!(
+                "plus {} more deflation error(s), logged to stderr",
+                count - 1
+            ))
+        } else {
+            first
+        })
+    }
+
+    /// Block until every queued/in-flight deflation has completed, then
+    /// reap. After this returns Ok, every submitted instance is deflated,
+    /// unreserved and folded into the metrics.
+    pub fn drain(&self) -> Result<u64> {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.pending > 0 {
+            st = self.shared.idle.wait(st).unwrap();
+        }
+        drop(st);
+        self.reap()
+    }
+
+    /// Install (or clear) the test gate — see [`DeflateGate`].
+    #[doc(hidden)]
+    pub fn set_gate(&self, gate: Option<DeflateGate>) {
+        *self.shared.gate.lock().unwrap() = gate;
+    }
+}
+
+impl Drop for DeflationPool {
+    fn drop(&mut self) {
+        // Closing the channel lets each worker finish its backlog and exit
+        // on Disconnected; joining guarantees no job outlives the pool.
+        self.tx = None;
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run_job(shared: &Shared, job: DeflateJob) {
+    let gate = shared.gate.lock().unwrap().clone();
+    if let Some(gate) = gate {
+        gate();
+    }
+    let DeflateJob {
+        workload,
+        sandbox,
+        reservation,
+    } = job;
+    let result = finish_one(&shared.metrics, &workload, &sandbox);
+    // Release the instance before announcing completion: a drainer must
+    // observe the deflated instance as routable the moment pending drops.
+    drop(reservation);
+    let mut st = shared.state.lock().unwrap();
+    st.pending -= 1;
+    st.completed += 1;
+    if let Err(e) = result {
+        st.errors.push(e);
+    }
+    drop(st);
+    shared.idle.notify_all();
+}
+
+/// Run one [`Sandbox::hibernate_finish`] and fold its swap counters into
+/// the metrics. Used by both the async workers and the sync fallback, so
+/// the two modes are observationally identical.
+pub(super) fn finish_one(
+    metrics: &Metrics,
+    workload: &str,
+    sandbox: &Arc<Mutex<Sandbox>>,
+) -> Result<()> {
+    // Deflation's charged time belongs to no request — it runs on the
+    // platform's dime, like kernel writeback.
+    let clock = Clock::new();
+    let mut sb = sandbox.lock().unwrap();
+    let before = sb.swap_stats();
+    sb.hibernate_finish(&clock)
+        .with_context(|| format!("deflating an instance of `{workload}`"))?;
+    let after = sb.swap_stats();
+    if after.reap_swapouts > before.reap_swapouts {
+        metrics
+            .counters
+            .reap_hibernations
+            .fetch_add(1, Ordering::Relaxed);
+    }
+    metrics.counters.pages_swapped_out.fetch_add(
+        (after.pages_swapped_out + after.reap_pages_out)
+            - (before.pages_swapped_out + before.reap_pages_out),
+        Ordering::Relaxed,
+    );
+    Ok(())
+}

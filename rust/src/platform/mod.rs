@@ -28,6 +28,7 @@
 //! scale out to more instances (the paper's model: one in-flight request
 //! per container; concurrency comes from more containers).
 
+pub mod deflate;
 pub mod density;
 pub mod metrics;
 pub mod policy;
@@ -78,6 +79,9 @@ pub struct Platform {
     /// cross-shard lock either.
     predictors: Vec<Predictor>,
     pub metrics: Arc<Metrics>,
+    /// Off-lock deflation pipeline: the policy tick flips state, this pool
+    /// does the I/O ([`deflate`]).
+    deflate: deflate::DeflationPool,
     next_id: AtomicU64,
     /// Round-robin cursor for the staggered policy cadence
     /// (`policy.tick_stride` > 1): the shard index the next
@@ -126,10 +130,12 @@ impl Platform {
                 .map(|n| n.get())
                 .unwrap_or(4)
         };
+        let metrics = Arc::new(Metrics::new());
         let p = Self {
             engine: PolicyEngine::new(cfg.policy.clone(), mode),
             predictors: (0..shard_count).map(|_| Predictor::new(0.3)).collect(),
-            metrics: Arc::new(Metrics::new()),
+            deflate: deflate::DeflationPool::new(cfg.policy.deflate_workers, metrics.clone()),
+            metrics,
             svc,
             cfg,
             shards: ShardSet::new(shard_count),
@@ -319,7 +325,30 @@ impl Platform {
     /// ticks racing each other's `sweep_dead` could retarget an action.
     /// Concurrent *requests* are always safe — they only append instances
     /// and reservations re-validate state before any action applies.
+    ///
+    /// Deflations submitted by this tick run on the [`deflate`] pool —
+    /// concurrently with each other — and are **drained before this
+    /// returns**, so callers observe the synchronous contract (memory
+    /// freed, instances routable) while the I/O itself parallelizes and
+    /// never runs under a shard lock. The threaded server uses
+    /// [`Self::policy_tick_nowait`] instead, which leaves deflations in
+    /// flight and reaps them at its next tick.
     pub fn policy_tick(&self, now_vns: u64) -> Result<Vec<Action>> {
+        let applied = self.policy_tick_nowait(now_vns)?;
+        self.drain_deflations()?;
+        Ok(applied)
+    }
+
+    /// [`Self::policy_tick`] without the trailing drain: deflations stay
+    /// in flight (their reservations keep requests off the instances) and
+    /// completions — including any errors — are reaped at the *next* tick.
+    /// This is what bounds tick latency for the live policy thread: a
+    /// 10 GB sandbox deflating can no longer stall the control loop.
+    pub fn policy_tick_nowait(&self, now_vns: u64) -> Result<Vec<Action>> {
+        // Reap first, but don't let a stashed error from a *previous*
+        // tick's deflation cancel this tick's decisions — run the walk,
+        // then surface the error.
+        let reaped = self.reap_deflations();
         let n = self.shards.len();
         let stride = self.engine.cfg.tick_stride.max(1);
         let per_round = n.div_ceil(stride);
@@ -334,6 +363,7 @@ impl Platform {
             let si = (start + k) % n;
             applied.extend(self.policy_tick_shard(si, now_vns, memory_used)?);
         }
+        reaped?;
         Ok(applied)
     }
 
@@ -392,13 +422,99 @@ impl Platform {
             };
             (inst.sandbox.clone(), inst.last_active.clone(), reservation)
         };
-        let result = self.apply_to_sandbox(action, &sandbox, &last_active, now_vns, &clock);
-        drop(reservation);
-        result
+        match action {
+            // Deflation goes down the off-lock pipeline: flip state here,
+            // ship the I/O (and the reservation) to the pool.
+            Action::Hibernate { .. } => {
+                self.apply_hibernate(w, sandbox, reservation, &clock)
+            }
+            _ => {
+                let result =
+                    self.apply_to_sandbox(action, &sandbox, &last_active, now_vns, &clock);
+                drop(reservation);
+                result
+            }
+        }
     }
 
-    /// Apply one policy action to its reserved sandbox. The caller holds
-    /// the reservation and releases it afterwards.
+    /// The Hibernate action, split per the off-lock pipeline: the cheap
+    /// SIGSTOP flip runs here (inside the tick, under nothing but the
+    /// sandbox mutex — the shard lock was already released by the caller),
+    /// the expensive [`Sandbox::hibernate_finish`] goes to the deflation
+    /// pool with the reservation riding along. With `deflate_workers = 0`
+    /// the finish runs inline — the pre-pipeline behavior.
+    fn apply_hibernate(
+        &self,
+        workload: &str,
+        sandbox: Arc<Mutex<Sandbox>>,
+        reservation: pool::Reservation,
+        clock: &Clock,
+    ) -> Result<bool> {
+        {
+            let mut sb = sandbox.lock().unwrap();
+            if !matches!(
+                sb.state(),
+                ContainerState::Warm | ContainerState::WokenUp
+            ) {
+                return Ok(false); // raced with a request
+            }
+            // Note: an instance served between decide() and here is still
+            // deflated (its state is back to Warm/WokenUp). That race is
+            // benign — the next request demand-wakes it — and an idleness
+            // re-check can't be applied here because pressure-driven
+            // deflation legitimately targets non-idle instances. Deliver
+            // SIGSTOP through the signal queue (§3.1); only the state
+            // flip happens at this safe point.
+            sb.signals.send(crate::container::signal::ControlSignal::Stop);
+            if !sb.drain_signals_deferred(clock)? {
+                return Ok(false);
+            }
+        }
+        self.metrics
+            .counters
+            .hibernations
+            .fetch_add(1, Ordering::Relaxed);
+        let job = deflate::DeflateJob {
+            workload: workload.to_string(),
+            sandbox,
+            reservation,
+        };
+        if self.deflate.is_async() {
+            self.deflate.submit(job);
+        } else {
+            self.deflate.run_sync(job)?;
+        }
+        Ok(true)
+    }
+
+    /// Deflations queued or in flight on the pool right now.
+    pub fn pending_deflations(&self) -> usize {
+        self.deflate.pending()
+    }
+
+    /// Non-blocking: fold completed deflations (surfacing the first error
+    /// stashed since the last reap). Called at the top of every tick.
+    pub fn reap_deflations(&self) -> Result<u64> {
+        self.deflate.reap()
+    }
+
+    /// Block until every in-flight deflation has completed, then reap.
+    /// The replay engine calls this after each tick batch so policy
+    /// decisions — and the memory they free — are interleaving-independent.
+    pub fn drain_deflations(&self) -> Result<u64> {
+        self.deflate.drain()
+    }
+
+    /// Test hook: make deflation workers block on `gate` before each
+    /// finish, so a test can hold a deflation in flight deterministically.
+    #[doc(hidden)]
+    pub fn set_deflation_gate(&self, gate: Option<deflate::DeflateGate>) {
+        self.deflate.set_gate(gate);
+    }
+
+    /// Apply an Evict or Wake action to its reserved sandbox (Hibernate
+    /// goes through [`Self::apply_hibernate`]). The caller holds the
+    /// reservation and releases it afterwards.
     fn apply_to_sandbox(
         &self,
         action: &Action,
@@ -410,43 +526,7 @@ impl Platform {
         let mut sb = sandbox.lock().unwrap();
         match action {
             Action::Hibernate { .. } => {
-                if !matches!(
-                    sb.state(),
-                    ContainerState::Warm | ContainerState::WokenUp
-                ) {
-                    return Ok(false); // raced with a request
-                }
-                // Note: an instance served between decide() and here is
-                // still deflated (its state is back to Warm/WokenUp). That
-                // race is benign — the next request demand-wakes it — and
-                // an idleness re-check can't be applied here because
-                // pressure-driven deflation legitimately targets non-idle
-                // instances (and virtual-time replay ticks may run at
-                // `now_vns` before a prior request's completion stamp).
-                // Deliver SIGSTOP through the signal queue (§3.1) and let
-                // the runtime act on it at the safe point.
-                sb.signals.send(crate::container::signal::ControlSignal::Stop);
-                let before = sb.swap_stats();
-                if sb.drain_signals(clock)? == 0 {
-                    return Ok(false);
-                }
-                let after = sb.swap_stats();
-                let used_reap = after.reap_swapouts > before.reap_swapouts;
-                self.metrics
-                    .counters
-                    .hibernations
-                    .fetch_add(1, Ordering::Relaxed);
-                if used_reap {
-                    self.metrics
-                        .counters
-                        .reap_hibernations
-                        .fetch_add(1, Ordering::Relaxed);
-                }
-                self.metrics.counters.pages_swapped_out.fetch_add(
-                    (after.pages_swapped_out + after.reap_pages_out)
-                        - (before.pages_swapped_out + before.reap_pages_out),
-                    Ordering::Relaxed,
-                );
+                unreachable!("Hibernate is routed through apply_hibernate")
             }
             Action::Evict { .. } => {
                 if !sb.state().accepts_requests() {

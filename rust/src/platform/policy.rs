@@ -195,6 +195,7 @@ mod tests {
             predictive_wakeup: true,
             reap_enabled: true,
             tick_stride: 1,
+            deflate_workers: 0,
         }
     }
 

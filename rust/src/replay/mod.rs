@@ -23,6 +23,15 @@
 //! state), so the snapshot — and with it every policy decision — is the
 //! same at `--workers 1` and `--workers 8`.
 //!
+//! Deflation runs on the platform's off-lock worker pool
+//! ([`crate::platform::deflate`]), so a policy tick only *submits* the
+//! expensive swap-out I/O. The engine **drains the pool after every tick
+//! batch** (and thus before every event serve and every epoch barrier):
+//! by the time anything can observe a shard, every deflated instance is
+//! fully swapped, unreserved and folded into the counters, making results
+//! independent of both the replay worker count *and* the deflation worker
+//! count.
+//!
 //! Two sources of nondeterminism are fenced off by configuration:
 //! cross-sandbox file-page sharing (a cache hit depends on *which sandbox
 //! faulted a page first* — an interleaving artifact), disabled for replay
@@ -285,6 +294,12 @@ impl<'p> ReplayEngine<'p> {
                 for &s in owned {
                     self.platform.policy_tick_shard(s, t, memory_used)?;
                 }
+                // Deflations submitted by this tick run concurrently on
+                // the pool; drain before anything can observe the shards,
+                // so routing decisions (and freed memory) never depend on
+                // real-time deflation progress — the off-lock pipeline's
+                // determinism contract.
+                self.platform.drain_deflations()?;
             }
             out.push((idx, self.platform.request_at(&ev.workload, ev.at_ns)?));
             *cursor += 1;
@@ -293,6 +308,7 @@ impl<'p> ReplayEngine<'p> {
             for &s in owned {
                 self.platform.policy_tick_shard(s, t, memory_used)?;
             }
+            self.platform.drain_deflations()?;
         }
         Ok(())
     }

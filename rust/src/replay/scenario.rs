@@ -56,6 +56,10 @@ pub const SCENARIOS: &[(&str, &str)] = &[
         "10 tenants, one dominating traffic (multi-tenant fixture)",
     ),
     (
+        "memory-heavy",
+        "fat-footprint functions under steady load — drives committed memory across the pressure watermark",
+    ),
+    (
         "paper-mix",
         "the 8 paper workloads, idle-heavy Poisson (small-scale continuity)",
     ),
@@ -79,6 +83,7 @@ pub fn build(name: &str, funcs: usize, duration_ns: u64, seed: u64) -> Result<Sc
         "diurnal-wave" => diurnal_wave(funcs, duration_ns, seed),
         "flash-crowd" => flash_crowd(funcs, duration_ns, seed),
         "tenant-skewed" => tenant_skewed(funcs, duration_ns, seed),
+        "memory-heavy" => memory_heavy(funcs, duration_ns, seed),
         "paper-mix" => paper_mix(duration_ns, seed),
         _ => {
             let known: Vec<&str> = SCENARIOS.iter().map(|(n, _)| *n).collect();
@@ -259,6 +264,43 @@ fn tenant_skewed(
     (specs, events)
 }
 
+/// Memory scale-down for `memory-heavy` functions: only 8× (vs the usual
+/// 64×), so a modest function count holds enough committed memory to cross
+/// a realistic pressure watermark.
+pub const MEM_HEAVY_SCALE: u64 = 8;
+
+fn memory_heavy(
+    funcs: usize,
+    duration_ns: u64,
+    seed: u64,
+) -> (Vec<WorkloadSpec>, Vec<TraceEvent>) {
+    // Fat functions under steady, moderately-spaced Poisson load: most of
+    // the fleet is warm at any instant, so committed memory climbs until
+    // the pressure watermark forces deflation — the path this scenario
+    // exists to exercise (idleness alone won't trigger under this cadence).
+    let bases = all_workloads();
+    let specs: Vec<WorkloadSpec> = (0..funcs)
+        .map(|i| {
+            let mut s =
+                scaled_for_test(bases[i % bases.len()].clone(), MEM_HEAVY_SCALE);
+            s.name = format!("mem-{}-{:04}", s.name, i);
+            s.payload = None;
+            s
+        })
+        .collect();
+    let traces: Vec<TraceSpec> = specs
+        .iter()
+        .map(|s| TraceSpec {
+            workload: s.name.clone(),
+            arrival: Arrival::Poisson {
+                mean_gap_ns: 3_000_000_000,
+            },
+        })
+        .collect();
+    let events = generate(&traces, duration_ns, seed);
+    (specs, events)
+}
+
 fn paper_mix(duration_ns: u64, seed: u64) -> (Vec<WorkloadSpec>, Vec<TraceEvent>) {
     let specs: Vec<WorkloadSpec> = all_workloads()
         .into_iter()
@@ -369,6 +411,31 @@ mod tests {
             .count();
         // 30 functions × 8-deep bursts land inside [mid, mid+1s).
         assert!(in_window >= 200, "crowd must spike: {in_window}");
+    }
+
+    #[test]
+    fn memory_heavy_functions_are_actually_fat() {
+        let heavy = build("memory-heavy", 64, 20_000_000_000, 11).unwrap();
+        let light = build("azure-heavy-tail", 64, 20_000_000_000, 11).unwrap();
+        let mean_pages = |r: &ScenarioRun| {
+            r.specs.iter().map(|s| s.init_anon_pages).sum::<u64>() / r.specs.len() as u64
+        };
+        assert!(
+            mean_pages(&heavy) >= 4 * mean_pages(&light),
+            "memory-heavy must carry a much larger anon footprint: {} vs {}",
+            mean_pages(&heavy),
+            mean_pages(&light)
+        );
+        // Steady cadence: every function is invoked repeatedly, so the
+        // fleet stays warm and committed memory accumulates.
+        let names: HashSet<&str> =
+            heavy.events.iter().map(|e| e.workload.as_str()).collect();
+        assert!(
+            names.len() * 10 >= heavy.specs.len() * 9,
+            "steady load must touch ~every function: {}/{}",
+            names.len(),
+            heavy.specs.len()
+        );
     }
 
     #[test]

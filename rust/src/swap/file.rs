@@ -1,12 +1,23 @@
 //! Per-sandbox swap files: real files, real I/O (Fig. 5).
 //!
 //! Two files per sandbox:
-//! * **swap file** — written page-by-page at swap-out, read with random
-//!   `pread` at page-fault swap-in;
+//! * **swap file** — a stable array of page-sized *slots*. A slot is
+//!   allocated when a page is first swapped out and keeps its offset for
+//!   the life of the mapping: repeat hibernation rewrites a page's image
+//!   **in place** (or not at all, when the image is still current), so a
+//!   cycle's I/O is proportional to the *changed* working set, never to
+//!   the resident set. Freed slots go on a free list and are reused.
+//!   Read with random `pread` at page-fault swap-in.
 //! * **REAP file** — written with one scatter `pwritev` of the recorded
 //!   working set, read back with one `preadv` batch.
 //!
-//! Both are deleted when the [`SwapFileSet`] drops (sandbox termination).
+//! Every slot remap (alloc, free, rewrite, reset) bumps a **layout
+//! epoch**; readers that cache anything derived from the file layout (the
+//! swap manager's host-readahead window) compare epochs before trusting
+//! the cache, so a stale window can never hide a device read.
+//!
+//! Both files are deleted when the [`SwapFileSet`] drops (sandbox
+//! termination).
 
 use crate::mem::Gpa;
 use crate::PAGE_SIZE;
@@ -26,7 +37,12 @@ pub struct SwapFileSet {
     reap_path: PathBuf,
     swap: File,
     reap: File,
+    /// High-water mark of the swap file (bytes); slots live in `[0, len)`.
     swap_len: u64,
+    /// Slots released by [`Self::free_slot`], available for reuse.
+    free_slots: Vec<u64>,
+    /// Bumped on every slot remap or rewrite (see module docs).
+    layout_epoch: u64,
 }
 
 impl SwapFileSet {
@@ -52,6 +68,8 @@ impl SwapFileSet {
             swap_path,
             reap_path,
             swap_len: 0,
+            free_slots: Vec::new(),
+            layout_epoch: 0,
         })
     }
 
@@ -67,51 +85,92 @@ impl SwapFileSet {
         let slot = SwapSlot(self.swap_len);
         pwrite_all(&self.swap, data, slot.0)?;
         self.swap_len += PAGE_SIZE as u64;
+        self.layout_epoch += 1;
         Ok(slot)
     }
 
-    /// Append many page images with scatter `pwritev` (one syscall per 1024
-    /// pages instead of one per page — §Perf #1). Returns the slot of the
-    /// first page; subsequent pages occupy consecutive slots.
-    pub fn append_pages(&mut self, pages: &[&[u8]]) -> Result<SwapSlot> {
-        let start = SwapSlot(self.swap_len);
-        if pages.is_empty() {
-            return Ok(start);
+    /// Allocate a stable slot for a page image: reuses a freed slot when
+    /// one exists, otherwise extends the file. The slot keeps its offset
+    /// until [`Self::free_slot`] or [`Self::reset_swap`].
+    pub fn alloc_slot(&mut self) -> SwapSlot {
+        self.layout_epoch += 1;
+        if let Some(off) = self.free_slots.pop() {
+            return SwapSlot(off);
         }
-        let iovs: Vec<libc::iovec> = pages
-            .iter()
-            .map(|p| {
-                assert_eq!(p.len(), PAGE_SIZE);
-                libc::iovec {
-                    iov_base: p.as_ptr() as *mut libc::c_void,
-                    iov_len: p.len(),
-                }
-            })
-            .collect();
+        let slot = SwapSlot(self.swap_len);
+        self.swap_len += PAGE_SIZE as u64;
+        slot
+    }
+
+    /// Return a slot to the free list (its page is no longer mapped
+    /// anywhere). The file is not shrunk — the offset is simply reusable.
+    pub fn free_slot(&mut self, slot: SwapSlot) {
+        debug_assert!(slot.0 % PAGE_SIZE as u64 == 0 && slot.0 < self.swap_len);
+        self.layout_epoch += 1;
+        self.free_slots.push(slot.0);
+    }
+
+    /// Write page images at their (pre-allocated) slots. Slots need not be
+    /// contiguous or ordered: writes are sorted by offset and contiguous
+    /// runs are coalesced into scatter `pwritev` batches (≤ IOV_MAX iovecs
+    /// per syscall — §Perf #1), so a mostly-in-order delta still goes out
+    /// in a handful of syscalls. Returns bytes written.
+    pub fn write_pages_at(&mut self, writes: &[(SwapSlot, &[u8])]) -> Result<u64> {
+        if writes.is_empty() {
+            return Ok(0);
+        }
+        self.layout_epoch += 1;
+        let mut order: Vec<usize> = (0..writes.len()).collect();
+        order.sort_unstable_by_key(|&i| writes[i].0 .0);
         let mut written = 0u64;
-        let mut iov_idx = 0usize;
-        while iov_idx < iovs.len() {
-            let batch = &iovs[iov_idx..(iov_idx + 1024).min(iovs.len())];
-            // SAFETY: iovecs point into caller-held page slices.
-            let n = unsafe {
-                libc::pwritev(
-                    self.swap.as_raw_fd(),
-                    batch.as_ptr(),
-                    batch.len() as libc::c_int,
-                    (start.0 + written) as libc::off_t,
-                )
-            };
-            if n < 0 {
-                bail!("pwritev failed: {}", std::io::Error::last_os_error());
+        let mut run = 0usize;
+        while run < order.len() {
+            let mut end = run + 1;
+            while end < order.len()
+                && writes[order[end]].0 .0
+                    == writes[order[end - 1]].0 .0 + PAGE_SIZE as u64
+            {
+                end += 1;
             }
-            if n as usize % PAGE_SIZE != 0 {
-                bail!("short pwritev not page-multiple: {n}");
+            let base = writes[order[run]].0 .0;
+            debug_assert!(base + ((end - run) * PAGE_SIZE) as u64 <= self.swap_len);
+            let iovs: Vec<libc::iovec> = order[run..end]
+                .iter()
+                .map(|&k| {
+                    let p = writes[k].1;
+                    assert_eq!(p.len(), PAGE_SIZE);
+                    libc::iovec {
+                        iov_base: p.as_ptr() as *mut libc::c_void,
+                        iov_len: p.len(),
+                    }
+                })
+                .collect();
+            let mut done = 0u64;
+            let mut iov_idx = 0usize;
+            while iov_idx < iovs.len() {
+                let batch = &iovs[iov_idx..(iov_idx + 1024).min(iovs.len())];
+                // SAFETY: iovecs point into caller-held page slices.
+                let n = unsafe {
+                    libc::pwritev(
+                        self.swap.as_raw_fd(),
+                        batch.as_ptr(),
+                        batch.len() as libc::c_int,
+                        (base + done) as libc::off_t,
+                    )
+                };
+                if n < 0 {
+                    bail!("pwritev failed: {}", std::io::Error::last_os_error());
+                }
+                if n as usize % PAGE_SIZE != 0 {
+                    bail!("short pwritev not page-multiple: {n}");
+                }
+                done += n as u64;
+                iov_idx += n as usize / PAGE_SIZE;
             }
-            written += n as u64;
-            iov_idx += n as usize / PAGE_SIZE;
+            written += done;
+            run = end;
         }
-        self.swap_len += written;
-        Ok(start)
+        Ok(written)
     }
 
     /// Random read of one page image directly into a caller buffer that is
@@ -130,15 +189,31 @@ impl SwapFileSet {
         pread_all(&self.swap, out, slot.0)
     }
 
-    /// Reset the swap file for a fresh hibernation cycle.
+    /// Reset the swap file completely (every slot forgotten). Delta
+    /// swap-out never needs this; it remains for explicit full resets.
     pub fn reset_swap(&mut self) -> Result<()> {
         self.swap.set_len(0)?;
         self.swap_len = 0;
+        self.free_slots.clear();
+        self.layout_epoch += 1;
         Ok(())
     }
 
+    /// High-water size of the swap file in bytes (allocated + freed slots).
     pub fn swap_len(&self) -> u64 {
         self.swap_len
+    }
+
+    /// Slots currently holding a live page image.
+    pub fn live_slots(&self) -> u64 {
+        self.swap_len / PAGE_SIZE as u64 - self.free_slots.len() as u64
+    }
+
+    /// Layout epoch: changes whenever a slot is allocated, freed,
+    /// rewritten or the file is reset. Callers caching layout-derived
+    /// state (readahead windows) must revalidate against this.
+    pub fn layout_epoch(&self) -> u64 {
+        self.layout_epoch
     }
 
     /// REAP swap-out: write all working-set pages with one scatter
@@ -384,6 +459,86 @@ mod tests {
         assert_eq!(fs.swap_len(), 0);
         let s = fs.append_page(&test_pattern(Gpa(0x5000))).unwrap();
         assert_eq!(s, SwapSlot(0));
+    }
+
+    #[test]
+    fn slots_are_stable_reused_and_rewritable_in_place() {
+        let dir = tmpdir("g");
+        let mut fs = SwapFileSet::create(&dir, 7).unwrap();
+        let s0 = fs.alloc_slot();
+        let s1 = fs.alloc_slot();
+        let s2 = fs.alloc_slot();
+        assert_eq!((s0, s1, s2), (SwapSlot(0), SwapSlot(4096), SwapSlot(8192)));
+        assert_eq!(fs.live_slots(), 3);
+        let (p0, p1, p2) = (
+            test_pattern(Gpa(0x1000)),
+            test_pattern(Gpa(0x2000)),
+            test_pattern(Gpa(0x3000)),
+        );
+        fs.write_pages_at(&[(s2, &p2), (s0, &p0), (s1, &p1)]).unwrap();
+        let mut out = vec![0u8; PAGE_SIZE];
+        fs.read_page(s1, &mut out).unwrap();
+        assert_eq!(out, p1);
+        // Rewrite in place: same slot, new image.
+        let p1b = test_pattern(Gpa(0x9000));
+        fs.write_pages_at(&[(s1, &p1b)]).unwrap();
+        fs.read_page(s1, &mut out).unwrap();
+        assert_eq!(out, p1b);
+        fs.read_page(s0, &mut out).unwrap();
+        assert_eq!(out, p0, "neighbors untouched by an in-place rewrite");
+        // Free + realloc reuses the offset; the file does not grow.
+        let len = fs.swap_len();
+        fs.free_slot(s1);
+        assert_eq!(fs.live_slots(), 2);
+        let s1b = fs.alloc_slot();
+        assert_eq!(s1b, s1, "freed slot must be reused");
+        assert_eq!(fs.swap_len(), len, "reuse must not grow the file");
+    }
+
+    #[test]
+    fn layout_epoch_bumps_on_every_remap() {
+        let dir = tmpdir("h");
+        let mut fs = SwapFileSet::create(&dir, 8).unwrap();
+        let e0 = fs.layout_epoch();
+        let s = fs.alloc_slot();
+        assert!(fs.layout_epoch() > e0, "alloc must bump the epoch");
+        let e1 = fs.layout_epoch();
+        let p = test_pattern(Gpa(0));
+        fs.write_pages_at(&[(s, &p)]).unwrap();
+        assert!(fs.layout_epoch() > e1, "rewrite must bump the epoch");
+        let e2 = fs.layout_epoch();
+        fs.free_slot(s);
+        assert!(fs.layout_epoch() > e2, "free must bump the epoch");
+        let e3 = fs.layout_epoch();
+        fs.reset_swap().unwrap();
+        assert!(fs.layout_epoch() > e3, "reset must bump the epoch");
+        assert_eq!(fs.live_slots(), 0);
+    }
+
+    #[test]
+    fn scattered_writes_coalesce_and_round_trip_over_iov_max() {
+        // > 1024 contiguous slots exercises the pwritev batching inside one
+        // run; an out-of-order tail exercises the run splitter.
+        let dir = tmpdir("i");
+        let mut fs = SwapFileSet::create(&dir, 9).unwrap();
+        let slots: Vec<SwapSlot> = (0..1500).map(|_| fs.alloc_slot()).collect();
+        let pages: Vec<Vec<u8>> = (0..1500)
+            .map(|i| test_pattern(Gpa(i * 0x1000)))
+            .collect();
+        // Write in reverse order: the sorter must still coalesce it all.
+        let writes: Vec<(SwapSlot, &[u8])> = slots
+            .iter()
+            .zip(&pages)
+            .rev()
+            .map(|(&s, p)| (s, p.as_slice()))
+            .collect();
+        let written = fs.write_pages_at(&writes).unwrap();
+        assert_eq!(written, 1500 * PAGE_SIZE as u64);
+        let mut out = vec![0u8; PAGE_SIZE];
+        for (i, &s) in slots.iter().enumerate() {
+            fs.read_page(s, &mut out).unwrap();
+            assert_eq!(out, pages[i], "page {i}");
+        }
     }
 
     #[test]

@@ -11,6 +11,21 @@
 //!    page's file offset in the hash table;
 //! 5. return the pages to the host with `madvise(MADV_DONTNEED)`.
 //!
+//! Repeat swap-outs are **deltas**: a page keeps its swap-file slot across
+//! cycles, and only pages that are *new* (no slot yet), were *faulted back
+//! in* since the last cycle (the `resident` set — their frame may have
+//! been modified while resident) or carry a *dirty* PTE are (re)written,
+//! in place. A page that never came back keeps its slot untouched — no
+//! read-back, no carry copy, no write. A hibernate → wake-without-touching
+//! → hibernate cycle therefore writes **zero** page images, and a cycle
+//! after K faults writes exactly K — O(dirty), not O(resident), which is
+//! what makes continuous high-density deflation affordable.
+//!
+//! Contract for callers that write guest pages directly (tests, models):
+//! set [`Pte::DIRTY`] on the mapping when you modify a *present* page, the
+//! way the MMU would. Pages reached through [`SwapMgr::fault_swap_in`] are
+//! covered by the `resident` set regardless.
+//!
 //! Swap-in (page-fault path): a guest access to a bit-#9 PTE vm-exits,
 //! reads the page image back with a random `pread`, clears bit #9 and
 //! re-marks Present. Each fault costs guest fault handling + a guest/host
@@ -29,14 +44,19 @@ use std::collections::{HashMap, HashSet};
 /// Outcome of one swap-out pass.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct SwapOutReport {
-    /// Distinct pages written to the swap file.
+    /// Distinct pages (re)written to the swap file this cycle — the
+    /// *delta*: new pages plus pages faulted back in or dirtied since the
+    /// previous cycle.
     pub unique_pages: u64,
     /// PTEs marked swapped (≥ unique_pages when page tables share frames).
     pub ptes_marked: u64,
-    /// Bytes written to the swap file.
+    /// Bytes written to the swap file (`unique_pages` × page size).
     pub bytes_written: u64,
     /// Pages whose host commitment was dropped.
     pub pages_discarded: u64,
+    /// Total live page images in the swap file after the cycle (the full
+    /// deflated anon set, written this cycle or carried from earlier ones).
+    pub live_pages: u64,
 }
 
 /// Cumulative counters.
@@ -56,14 +76,22 @@ pub struct SwapStats {
 pub struct SwapMgr {
     files: SwapFileSet,
     /// The de-duplication hash table: gpa → swap-file slot (§3.4.1 step 2c
-    /// and 3). Entries persist until the next full swap-out resets the file.
+    /// and 3). Slots are **stable across cycles**: an entry lives as long
+    /// as the gpa stays mapped in some table; stale entries are freed (and
+    /// their slots recycled) at the next swap-out.
     slots: HashMap<u64, SwapSlot>,
-    /// gpas restored to host memory since the last swap-out (a second PTE
-    /// faulting on an already-loaded frame skips the device read).
+    /// gpas restored to host memory since the last swap-out. Serves two
+    /// jobs: a second PTE faulting on an already-loaded frame skips the
+    /// device read, and the next swap-out rewrites exactly these pages
+    /// (plus new/dirty ones) — the delta.
     resident: HashSet<u64>,
     /// Host swap-readahead window over the swap file: `[start, end)` byte
-    /// offsets already fetched into the page cache by the last cluster read.
+    /// offsets already fetched into the page cache by the last cluster
+    /// read. Valid only while `ra_epoch` matches the file's layout epoch —
+    /// any slot remap or rewrite invalidates it (a stale window would let
+    /// a post-cycle fault skip the device-read charge).
     ra_window: (u64, u64),
+    ra_epoch: u64,
     /// REAP working set in record order (gpas), if a REAP image exists.
     reap_set: Vec<Gpa>,
     cost: CostModel,
@@ -73,6 +101,7 @@ pub struct SwapMgr {
 impl SwapMgr {
     pub fn new(files: SwapFileSet, cost: CostModel) -> Self {
         Self {
+            ra_epoch: files.layout_epoch(),
             files,
             slots: HashMap::new(),
             resident: HashSet::new(),
@@ -87,8 +116,9 @@ impl SwapMgr {
         self.stats
     }
 
+    /// Bytes of live page images in the swap file.
     pub fn swapped_bytes(&self) -> u64 {
-        self.files.swap_len()
+        self.slots.len() as u64 * PAGE_SIZE as u64
     }
 
     pub fn reap_set_pages(&self) -> u64 {
@@ -98,11 +128,12 @@ impl SwapMgr {
     /// Page-fault based swap-out of every anonymous present page in
     /// `tables` (deflation step #3). Guest must be paused.
     ///
-    /// Pages still bit-#9-marked from a *previous* cycle (never faulted
-    /// back) keep their images: the swap file is rewritten, so their old
-    /// images are carried over into the new file first. Without this a
-    /// second full swap-out would orphan them (caught by the
-    /// `prop_swap` interleaving property).
+    /// This is a **delta** pass (see module docs): pages keep their slots
+    /// across cycles, so only new / faulted-back / dirty pages are written
+    /// — in place — and pages still bit-#9-marked from a previous cycle
+    /// are simply left alone. The old implementation reset the file every
+    /// cycle and carried every cold image through memory, making repeat
+    /// hibernation O(resident); this one is O(changed).
     pub fn swap_out(
         &mut self,
         tables: &mut [&mut PageTable],
@@ -111,11 +142,26 @@ impl SwapMgr {
     ) -> Result<SwapOutReport> {
         let mut report = SwapOutReport::default();
 
-        // Classify by gpa: committed frames are written from memory;
-        // uncommitted-but-swap-marked frames carry over from the old file.
+        // Pass 1: collect gpas any table marks dirty. A frame shared by
+        // several PTEs (COW) must be rewritten if *any* mapping wrote it.
+        let mut dirty_gpas: HashSet<u64> = HashSet::new();
+        for pt in tables.iter() {
+            pt.for_each(|_gva, pte| {
+                if pte.present() && !pte.is_file() && pte.dirty() {
+                    dirty_gpas.insert(pte.gpa().0);
+                }
+            });
+        }
+
+        // Pass 2: classify by gpa. `fresh` pages have no slot yet;
+        // `rewrite` pages have one but their frame was (possibly) modified
+        // while resident; clean committed pages with a current slot image
+        // are discarded without a write; uncommitted swapped pages are not
+        // touched at all.
         let expected = tables.iter().map(|t| t.present_count() as usize).sum();
-        let mut from_memory: Vec<Gpa> = Vec::with_capacity(expected);
-        let mut carry: Vec<(Gpa, Vec<u8>)> = Vec::new();
+        let mut fresh: Vec<Gpa> = Vec::with_capacity(expected);
+        let mut rewrite: Vec<Gpa> = Vec::new();
+        let mut committed: Vec<Gpa> = Vec::with_capacity(expected);
         let mut seen = HashSet::with_capacity(expected);
         for pt in tables.iter() {
             pt.for_each(|_gva, pte| {
@@ -130,25 +176,35 @@ impl SwapMgr {
                     return;
                 }
                 if host.is_committed(gpa) {
-                    from_memory.push(gpa);
-                } else if let Some(&slot) = self.slots.get(&gpa.0) {
-                    let mut buf = vec![0u8; PAGE_SIZE];
-                    if self.files.read_page(slot, &mut buf).is_ok() {
-                        carry.push((gpa, buf));
+                    committed.push(gpa);
+                    if !self.slots.contains_key(&gpa.0) {
+                        fresh.push(gpa);
+                    } else if self.resident.contains(&gpa.0)
+                        || dirty_gpas.contains(&gpa.0)
+                    {
+                        rewrite.push(gpa);
                     }
                 }
             });
         }
 
-        // Fresh cycle: rewrite the file, rebuild the slot table.
-        self.files.reset_swap()?;
-        self.slots.clear();
-        self.resident.clear();
-        self.ra_window = (0, 0);
-        self.reap_set.clear();
+        // Garbage-collect slots whose gpa is no longer mapped anywhere
+        // (unmapped scratch pages, terminated processes): their offsets go
+        // back on the free list for reuse by this very cycle's new pages.
+        let stale: Vec<u64> = self
+            .slots
+            .keys()
+            .filter(|g| !seen.contains(*g))
+            .copied()
+            .collect();
+        for g in stale {
+            let slot = self.slots.remove(&g).expect("stale key just listed");
+            self.files.free_slot(slot);
+        }
 
-        // Mark every anon PTE swapped (present ones transition; previously
-        // swapped ones stay marked).
+        // Mark every anon PTE swapped (present ones transition — clearing
+        // DIRTY, since the slot image is about to match the frame again;
+        // previously swapped ones stay marked).
         for pt in tables.iter_mut() {
             pt.for_each_mut(|_gva, pte| {
                 if pte.present() && !pte.is_file() {
@@ -159,34 +215,52 @@ impl SwapMgr {
             });
         }
 
-        // Step 3: write page images, record offsets. One scatter `pwritev`
-        // straight out of guest-physical memory (§Perf #1) — the guest is
-        // paused, so the frames are stable for the duration of the call.
-        let page_refs: Vec<&[u8]> = from_memory
-            .iter()
+        // Step 3: write the delta, scatter `pwritev` straight out of
+        // guest-physical memory (§Perf #1) — the guest is paused, so the
+        // frames are stable for the duration of the call. New pages get
+        // slots (reusing freed offsets); rewrites target their own slot.
+        let mut writes: Vec<(SwapSlot, &[u8])> =
+            Vec::with_capacity(fresh.len() + rewrite.len());
+        let mut fresh_assign: Vec<(u64, SwapSlot)> = Vec::with_capacity(fresh.len());
+        for &gpa in &fresh {
+            let slot = self.files.alloc_slot();
+            fresh_assign.push((gpa.0, slot));
             // SAFETY: frames owned by this sandbox; guest paused.
-            .map(|&gpa| unsafe {
+            writes.push((slot, unsafe {
                 std::slice::from_raw_parts(host.page_ptr(gpa), PAGE_SIZE)
-            })
-            .chain(carry.iter().map(|(_, image)| image.as_slice()))
-            .collect();
-        let start = self.files.append_pages(&page_refs)?;
-        for (i, gpa) in from_memory
-            .iter()
-            .chain(carry.iter().map(|(g, _)| g))
-            .enumerate()
-        {
-            self.slots
-                .insert(gpa.0, SwapSlot(start.0 + (i * PAGE_SIZE) as u64));
+            }));
         }
-        report.unique_pages = from_memory.len() as u64;
-        report.bytes_written =
-            (from_memory.len() + carry.len()) as u64 * PAGE_SIZE as u64;
+        for &gpa in &rewrite {
+            let slot = self.slots[&gpa.0];
+            // SAFETY: as above.
+            writes.push((slot, unsafe {
+                std::slice::from_raw_parts(host.page_ptr(gpa), PAGE_SIZE)
+            }));
+        }
+        report.bytes_written = self.files.write_pages_at(&writes)?;
+        // Register fresh slots only once their images are durably written:
+        // if the write errors out above, a later fault on one of these
+        // pages must fail loudly ("no swap slot"), never read an
+        // unwritten file region as data. (The allocated slots leak on that
+        // error path — file space, not correctness.)
+        for (gpa, slot) in fresh_assign {
+            self.slots.insert(gpa, slot);
+        }
+        report.unique_pages = writes.len() as u64;
+        report.live_pages = self.slots.len() as u64;
         clock.charge(self.cost.seq_write_ns(report.bytes_written));
 
-        // Step 4: return the memory to the host.
-        report.pages_discarded = host.discard_pages(&from_memory)?;
-        clock.charge(self.cost.madvise_ns(report.unique_pages));
+        // Step 4: return the memory to the host — every committed anon
+        // page, written this cycle or not.
+        report.pages_discarded = host.discard_pages(&committed)?;
+        clock.charge(self.cost.madvise_ns(report.pages_discarded));
+
+        // The cycle boundary: nothing is resident anymore, the readahead
+        // window is stale (slots were remapped/rewritten), and any REAP
+        // image no longer matches the protocol state.
+        self.resident.clear();
+        self.ra_window = (0, 0);
+        self.reap_set.clear();
 
         self.stats.swapouts += 1;
         self.stats.pages_swapped_out += report.unique_pages;
@@ -222,14 +296,18 @@ impl SwapMgr {
             // current readahead window is already in the page cache; a miss
             // costs one cluster fill. Truly random access degenerates to
             // one cluster fill per fault (≈ the paper's 100 MB/s random
-            // measurement); in-order streams amortize 32×.
+            // measurement); in-order streams amortize 32×. The window is
+            // only trusted while the file layout epoch matches — any slot
+            // remap or rewrite since it was fetched invalidates it.
             let (ra_start, ra_end) = self.ra_window;
-            if !(ra_start..ra_end).contains(&slot.0) {
+            let window_current = self.ra_epoch == self.files.layout_epoch();
+            if !(window_current && (ra_start..ra_end).contains(&slot.0)) {
                 clock.charge(self.cost.readahead_cluster_ns());
                 self.ra_window = (
                     slot.0,
                     slot.0 + CostModel::READAHEAD_PAGES * PAGE_SIZE as u64,
                 );
+                self.ra_epoch = self.files.layout_epoch();
             }
             self.resident.insert(gpa.0);
             reads = 1;
@@ -279,6 +357,7 @@ impl SwapMgr {
             .collect();
         report.bytes_written = self.files.write_reap(&page_refs)?;
         report.unique_pages = working_set.len() as u64;
+        report.live_pages = self.slots.len() as u64;
         clock.charge(self.cost.seq_write_ns(report.bytes_written));
 
         report.pages_discarded = host.discard_pages(&working_set)?;
@@ -542,7 +621,7 @@ mod tests {
     }
 
     #[test]
-    fn second_swap_out_resets_state() {
+    fn second_swap_out_rewrites_exactly_the_faulted_pages() {
         let mut r = rig("cycle2");
         let (mut pt, _, sums) = populate(&r, 6);
         r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
@@ -551,9 +630,11 @@ mod tests {
                 .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
                 .unwrap();
         }
-        // Everything is back; hibernate again via the page-fault path.
+        // Everything faulted back; the next cycle rewrites exactly those 6
+        // (they were resident, so their frames may have been modified).
         let rpt = r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
         assert_eq!(rpt.unique_pages, 6);
+        assert_eq!(rpt.bytes_written, 6 * PAGE_SIZE as u64);
         for i in 0..6u64 {
             r.mgr
                 .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
@@ -567,5 +648,173 @@ mod tests {
         for (i, gpa) in gpas.iter().enumerate() {
             assert_eq!(r.host.checksum_page(*gpa).unwrap(), sums[i]);
         }
+    }
+
+    #[test]
+    fn untouched_cycle_writes_zero_bytes() {
+        // hibernate → wake without touching anything → hibernate: the
+        // delta is empty, so the second swap-out must write nothing — the
+        // whole point of the stable slot map.
+        let mut r = rig("delta0");
+        let (mut pt, _, sums) = populate(&r, 40);
+        let first = r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        assert_eq!(first.unique_pages, 40);
+        assert_eq!(first.live_pages, 40);
+        let second = r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        assert_eq!(second.unique_pages, 0, "nothing changed, nothing written");
+        assert_eq!(second.bytes_written, 0);
+        assert_eq!(second.pages_discarded, 0, "nothing was resident");
+        assert_eq!(second.live_pages, 40, "all images still live");
+        // Every page still faults in with correct content.
+        for i in 0..40u64 {
+            r.mgr
+                .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
+                .unwrap();
+            let gpa = pt.get(Gva(i * 0x1000)).gpa();
+            assert_eq!(r.host.checksum_page(gpa).unwrap(), sums[i as usize]);
+        }
+    }
+
+    #[test]
+    fn partial_fault_cycle_rewrites_only_the_delta_in_place() {
+        let mut r = rig("delta-k");
+        let (mut pt, gpas, _) = populate(&r, 30);
+        r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        let slot_before: Vec<_> = gpas
+            .iter()
+            .map(|g| *r.mgr.slots.get(&g.0).unwrap())
+            .collect();
+        // Fault 7 pages back; overwrite 3 of them (marking DIRTY like the
+        // MMU would — redundant with the resident set, but exercises it).
+        let mut new_sums = std::collections::HashMap::new();
+        for i in 0..7u64 {
+            r.mgr
+                .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
+                .unwrap();
+        }
+        for i in 0..3u64 {
+            r.host.fill_page(gpas[i as usize], 0xD1127 + i).unwrap();
+            pt.update(Gva(i * 0x1000), |p| p.with(Pte::DIRTY)).unwrap();
+            new_sums.insert(i, r.host.checksum_page(gpas[i as usize]).unwrap());
+        }
+        let rpt = r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        assert_eq!(rpt.unique_pages, 7, "exactly the faulted pages");
+        assert_eq!(rpt.bytes_written, 7 * PAGE_SIZE as u64);
+        assert_eq!(rpt.pages_discarded, 7);
+        assert_eq!(rpt.live_pages, 30);
+        // Slots are stable: every page kept its offset (in-place rewrite).
+        for (g, before) in gpas.iter().zip(&slot_before) {
+            assert_eq!(r.mgr.slots.get(&g.0), Some(before), "slot moved");
+        }
+        // Overwritten pages fault back with the new content.
+        for i in 0..3u64 {
+            r.mgr
+                .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
+                .unwrap();
+            assert_eq!(
+                r.host.checksum_page(gpas[i as usize]).unwrap(),
+                new_sums[&i],
+                "rewrite lost the new content of page {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn unmapped_pages_free_slots_for_reuse() {
+        let mut r = rig("slot-gc");
+        let (mut pt, gpas, _) = populate(&r, 10);
+        r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        let high_water = r.mgr.files.swap_len();
+        // Map 4 new pages FIRST — allocating before the frees below, or
+        // the allocator's lowest-free-bit policy would hand back the very
+        // gpas we are about to release and alias their stale slots instead
+        // of exercising the free list. DIRTY per the module contract.
+        for i in 10..14u64 {
+            let gpa = r.alloc.alloc_page().unwrap();
+            r.host.fill_page(gpa, 0xF00 + i).unwrap();
+            pt.map(
+                Gva(i * 0x1000),
+                Pte::new_present(gpa, Pte::WRITABLE | Pte::DIRTY),
+            );
+        }
+        // Unmap 4 old pages (scratch freed between requests): their slots
+        // must be garbage-collected and recycled for the new pages.
+        for i in 0..4u64 {
+            pt.unmap(Gva(i * 0x1000));
+            r.alloc.dec_ref(gpas[i as usize]);
+        }
+        let rpt = r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        assert_eq!(rpt.unique_pages, 4, "only the new pages are written");
+        assert_eq!(rpt.live_pages, 10);
+        assert_eq!(
+            r.mgr.files.swap_len(),
+            high_water,
+            "freed slots must be reused, not appended past"
+        );
+        assert_eq!(r.mgr.swapped_bytes(), 10 * PAGE_SIZE as u64);
+    }
+
+    #[test]
+    fn ra_window_invalidated_when_slots_remap() {
+        // Regression: the readahead window must not survive a swap-file
+        // layout change. A fault after a new cycle lands at a slot inside
+        // the *old* window's byte range — the device-read charge must
+        // still be paid, because the underlying file content/layout moved.
+        let mut r = rig("ra-stale");
+        let (mut pt, gpas, _) = populate(&r, 8);
+        let m = CostModel::paper();
+        r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        r.clock.take();
+        // Establish a window at slot 0 (covers the whole 8-page file).
+        r.mgr.fault_swap_in(&mut pt, Gva(0), &r.host, &r.clock).unwrap();
+        let (c, _) = r.clock.take();
+        assert_eq!(
+            c,
+            m.page_fault_handling_ns + m.guest_host_switch_ns + m.readahead_cluster_ns()
+        );
+        // In-window fault: no device charge (the window works).
+        r.mgr
+            .fault_swap_in(&mut pt, Gva(0x1000), &r.host, &r.clock)
+            .unwrap();
+        let (c, _) = r.clock.take();
+        assert_eq!(c, m.page_fault_handling_ns + m.guest_host_switch_ns);
+        // New cycle: pages 0 and 1 were resident → rewritten in place.
+        // Slot offsets are unchanged, so without epoch validation the old
+        // window would (wrongly) still "cover" them.
+        r.host.fill_page(gpas[0], 0xA5A5).unwrap();
+        pt.update(Gva(0), |p| p.with(Pte::DIRTY)).unwrap();
+        r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        r.clock.take();
+        r.mgr
+            .fault_swap_in(&mut pt, Gva(0x1000), &r.host, &r.clock)
+            .unwrap();
+        let (c, _) = r.clock.take();
+        assert_eq!(
+            c,
+            m.page_fault_handling_ns + m.guest_host_switch_ns + m.readahead_cluster_ns(),
+            "post-cycle fault must re-pay the device read — stale window"
+        );
+        // And the epoch check in isolation: a slot remap that does NOT go
+        // through swap_out (which also resets the window) must still
+        // invalidate. Re-establish a window, remap, fault inside it.
+        r.mgr
+            .fault_swap_in(&mut pt, Gva(2 * 0x1000), &r.host, &r.clock)
+            .unwrap();
+        r.clock.take();
+        r.mgr
+            .fault_swap_in(&mut pt, Gva(3 * 0x1000), &r.host, &r.clock)
+            .unwrap();
+        let (c, _) = r.clock.take();
+        assert_eq!(c, m.page_fault_handling_ns + m.guest_host_switch_ns);
+        let _ = r.mgr.files.alloc_slot(); // layout change behind the window
+        r.mgr
+            .fault_swap_in(&mut pt, Gva(4 * 0x1000), &r.host, &r.clock)
+            .unwrap();
+        let (c, _) = r.clock.take();
+        assert_eq!(
+            c,
+            m.page_fault_handling_ns + m.guest_host_switch_ns + m.readahead_cluster_ns(),
+            "slot remap must invalidate the window even without a swap-out"
+        );
     }
 }

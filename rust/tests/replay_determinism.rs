@@ -61,14 +61,66 @@ fn workers_1_and_8_are_bit_identical() {
 }
 
 #[test]
+fn memory_heavy_crosses_the_watermark_and_stays_deterministic() {
+    // The pressure-driven deflation path — the one the off-lock pipeline
+    // optimizes — must actually run under replay, and must stay
+    // bit-identical across worker counts even though deflation I/O now
+    // happens on a concurrent worker pool.
+    let run = scenario::build("memory-heavy", 48, 20_000_000_000, 0x4EA7).unwrap();
+    assert!(run.events.len() > 200, "scenario too small to be meaningful");
+    let mk = |tag: &str| {
+        let mut cfg = det_cfg(tag);
+        cfg.host_memory = 1 << 30;
+        cfg.policy.memory_budget = 96 << 20;
+        cfg.policy.pressure_watermark = 0.8;
+        // Idleness can never fire inside the 20 s window: every deflation
+        // below is the pressure watermark's doing. Pin the tick cadence —
+        // the default derives from the (now huge) idle threshold.
+        cfg.policy.hibernate_idle_ms = 60_000;
+        cfg.replay.tick_ms = 100;
+        cfg
+    };
+    let (r1, _) = replay::run_scenario(&mk("mh1"), &run, 1).unwrap();
+    let (r4, _) = replay::run_scenario(&mk("mh8"), &run, 8).unwrap();
+    assert_eq!(r4.workers, 8, "8 workers must actually be used");
+
+    let watermark = (0.8 * (96u64 << 20) as f64) as u64;
+    let peak = r1.mem_timeline.iter().map(|(_, b)| *b).max().unwrap();
+    assert!(
+        peak >= watermark,
+        "resident set must cross the pressure watermark: peak {peak} < {watermark}"
+    );
+    let counter = |r: &quark_hibernate::replay::report::ReplayReport, k: &str| {
+        r.counters.iter().find(|(n, _)| *n == k).map(|(_, v)| *v).unwrap()
+    };
+    assert!(
+        counter(&r1, "hibernations") > 0,
+        "pressure must drive deflations (idle threshold is out of reach)"
+    );
+
+    // Field-by-field, then the fingerprint.
+    assert_eq!(r1.functions, r4.functions);
+    assert_eq!(r1.counters, r4.counters);
+    assert_eq!(r1.mem_timeline, r4.mem_timeline, "density timeline diverged");
+    assert_eq!(r1.final_states, r4.final_states);
+    assert_eq!(r1.fingerprint(), r4.fingerprint());
+}
+
+#[test]
 fn determinism_holds_across_scenarios_and_seeds() {
     // Property: for any seed and any scenario shape, 1 worker ≡ 4 workers.
-    let names = ["azure-heavy-tail", "diurnal-wave", "flash-crowd", "tenant-skewed"];
+    let names = [
+        "azure-heavy-tail",
+        "diurnal-wave",
+        "flash-crowd",
+        "tenant-skewed",
+        "memory-heavy",
+    ];
     let mut case = 0usize;
     prop::check(
         "replay-determinism",
         prop::PropConfig {
-            cases: 4,
+            cases: 5,
             seed: 0xD0D0,
         },
         |rng| {

@@ -1,0 +1,189 @@
+//! Off-lock deflation: proof that the expensive half of hibernation no
+//! longer runs on the policy tick or under the shard lock. A deflation is
+//! held in flight with a test gate while requests — for other functions
+//! *and* for the deflating function — are served on the very same shard.
+
+use quark_hibernate::config::PlatformConfig;
+use quark_hibernate::container::NoopRunner;
+use quark_hibernate::platform::metrics::ServedFrom;
+use quark_hibernate::platform::policy::Action;
+use quark_hibernate::platform::Platform;
+use quark_hibernate::simtime::CostModel;
+use quark_hibernate::workloads::functionbench::{golang_hello, nodejs_hello, scaled_for_test};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+fn one_shard_platform(tag: &str, deflate_workers: usize) -> Arc<Platform> {
+    let mut cfg = PlatformConfig::default();
+    cfg.host_memory = 1 << 30;
+    cfg.shards = 1; // everything co-sharded: the worst case for lock stalls
+    cfg.cost = CostModel::paper();
+    cfg.policy.hibernate_idle_ms = 10;
+    cfg.policy.predictive_wakeup = false;
+    cfg.policy.deflate_workers = deflate_workers;
+    cfg.swap_dir = std::env::temp_dir()
+        .join(format!("qh-stress-deflate-{tag}-{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    let p = Arc::new(Platform::new(cfg, Arc::new(NoopRunner)).unwrap());
+    let mut big = scaled_for_test(nodejs_hello(), 2);
+    big.name = "big".into();
+    p.deploy(big).unwrap();
+    let mut tiny = scaled_for_test(golang_hello(), 64);
+    tiny.name = "tiny".into();
+    p.deploy(tiny).unwrap();
+    p
+}
+
+#[test]
+fn co_sharded_requests_served_while_a_large_sandbox_deflates() {
+    let p = one_shard_platform("gate", 1);
+
+    // Warm the big function, then let it idle past the threshold.
+    let r = p.request_at("big", 0).unwrap();
+    assert_eq!(r.served_from, ServedFrom::ColdStart);
+
+    // Gate the deflation worker: it parks with the job in flight (the
+    // instance's reservation held) until released.
+    let (entered_tx, entered_rx) = mpsc::channel::<()>();
+    let (release_tx, release_rx) = mpsc::channel::<()>();
+    // Mutex wrappers: the gate must be Sync, channel endpoints are not.
+    let entered_tx = Mutex::new(entered_tx);
+    let release_rx = Mutex::new(release_rx);
+    p.set_deflation_gate(Some(Arc::new(move || {
+        let _ = entered_tx.lock().unwrap().send(());
+        let _ = release_rx.lock().unwrap().recv();
+    })));
+
+    // The tick submits the deflation and returns without waiting on it.
+    let actions = p.policy_tick_nowait(1_000_000_000).unwrap();
+    assert!(
+        actions
+            .iter()
+            .any(|a| matches!(a, Action::Hibernate { .. })),
+        "{actions:?}"
+    );
+    entered_rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("deflation worker must pick the job up");
+    assert_eq!(p.pending_deflations(), 1, "the deflation is in flight");
+
+    // While the big sandbox deflates, its shard must keep serving. Run
+    // the requests on a helper thread so a regression (a request blocking
+    // on the deflation) fails the test instead of hanging it.
+    let served = {
+        let p = p.clone();
+        let (done_tx, done_rx) = mpsc::channel();
+        std::thread::spawn(move || {
+            let mut outcomes = Vec::new();
+            // Another function on the same shard: must serve normally.
+            outcomes.push(p.request_at("tiny", 1_100_000_000).map(|r| r.served_from));
+            // The deflating function itself: the router skips the reserved
+            // instance and scales out with a fresh one.
+            outcomes.push(p.request_at("big", 1_200_000_000).map(|r| r.served_from));
+            let _ = done_tx.send(outcomes);
+        });
+        done_rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("co-sharded requests must not block on the in-flight deflation")
+    };
+    assert_eq!(served[0].as_ref().unwrap(), &ServedFrom::ColdStart);
+    assert_eq!(
+        served[1].as_ref().unwrap(),
+        &ServedFrom::ColdStart,
+        "a request for the deflating function scales out, it does not wait"
+    );
+    assert_eq!(p.pending_deflations(), 1, "deflation still parked");
+
+    // Release the gate; draining settles everything. The parked finish
+    // had not yet released any memory — the drop below is its doing.
+    let before_release = p.memory_used();
+    release_tx.send(()).unwrap();
+    p.set_deflation_gate(None);
+    p.drain_deflations().unwrap();
+    assert_eq!(p.pending_deflations(), 0);
+    assert_eq!(p.metrics.counters.hibernations.load(Ordering::Relaxed), 1);
+    assert!(
+        p.memory_used() < before_release,
+        "the deflation must actually have released the big sandbox's memory: {} -> {}",
+        before_release,
+        p.memory_used()
+    );
+    // The deflated instance is routable again: a demand wake serves it.
+    // (Instance 1 — the scale-out — is Warm and ranks first, so check the
+    // deflated instance directly.)
+    let deflated = p
+        .with_instance("big", 0, |sb| sb.state())
+        .expect("instance 0 must still exist");
+    assert_eq!(
+        deflated,
+        quark_hibernate::container::state::ContainerState::Hibernate
+    );
+}
+
+#[test]
+fn sync_mode_still_deflates_inside_the_tick() {
+    // deflate_workers = 0 is the baseline: policy_tick performs the whole
+    // deflation synchronously and nothing is ever pending.
+    let p = one_shard_platform("sync", 0);
+    p.request_at("big", 0).unwrap();
+    let before = p.memory_used();
+    let actions = p.policy_tick(1_000_000_000).unwrap();
+    assert!(actions
+        .iter()
+        .any(|a| matches!(a, Action::Hibernate { .. })));
+    assert_eq!(p.pending_deflations(), 0);
+    assert!(p.memory_used() < before, "sync deflation frees memory in-tick");
+    assert_eq!(p.metrics.counters.hibernations.load(Ordering::Relaxed), 1);
+    let r = p.request_at("big", 2_000_000_000).unwrap();
+    assert_eq!(r.served_from, ServedFrom::Hibernate);
+}
+
+#[test]
+fn async_policy_tick_settles_on_drain_with_many_instances() {
+    // A pile of instances deflating concurrently on a 2-worker pool:
+    // drain must leave every one Hibernate, unreserved and accounted.
+    let mut cfg = PlatformConfig::default();
+    cfg.host_memory = 1 << 30;
+    cfg.shards = 2;
+    cfg.cost = CostModel::paper();
+    cfg.policy.hibernate_idle_ms = 10;
+    cfg.policy.predictive_wakeup = false;
+    cfg.policy.deflate_workers = 2;
+    cfg.swap_dir = std::env::temp_dir()
+        .join(format!("qh-stress-deflate-many-{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    let p = Platform::new(cfg, Arc::new(NoopRunner)).unwrap();
+    for i in 0..8 {
+        let mut s = scaled_for_test(golang_hello(), 16);
+        s.name = format!("fn-{i}");
+        p.deploy(s).unwrap();
+    }
+    for i in 0..8 {
+        p.request_at(&format!("fn-{i}"), 0).unwrap();
+    }
+    // policy_tick = nowait + drain: after it, all 8 are fully deflated.
+    let actions = p.policy_tick(1_000_000_000).unwrap();
+    let hibernated = actions
+        .iter()
+        .filter(|a| matches!(a, Action::Hibernate { .. }))
+        .count();
+    assert_eq!(hibernated, 8);
+    assert_eq!(p.pending_deflations(), 0);
+    assert_eq!(p.metrics.counters.hibernations.load(Ordering::Relaxed), 8);
+    for i in 0..8 {
+        let state = p
+            .with_instance(&format!("fn-{i}"), 0, |sb| sb.state())
+            .unwrap();
+        assert_eq!(
+            state,
+            quark_hibernate::container::state::ContainerState::Hibernate
+        );
+        let r = p
+            .request_at(&format!("fn-{i}"), 2_000_000_000)
+            .unwrap();
+        assert_eq!(r.served_from, ServedFrom::Hibernate, "fn-{i} must demand-wake");
+    }
+}
