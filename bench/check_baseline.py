@@ -1,0 +1,141 @@
+#!/usr/bin/env python3
+"""bench-smoke regression gate: compare the CSVs the reduced benches emit
+(`QH_BENCH_OUT`) against bench/baseline.json.
+
+Two classes of check, per the gate's design (ROADMAP "throughput
+regression gate"):
+
+* **exact invariants** — the O(dirty) contract's zero-byte steady-state
+  cycles (delta swap-out and delta REAP). These are deterministic outputs
+  of the mechanism, so any nonzero value is a hard failure regardless of
+  runner noise.
+* **generous (>= 3x) bounds** — byte counts may grow only 3x past
+  baseline, and replay throughput may fall only to baseline / 3. Runner
+  noise is nowhere near 3x; a real regression (delta path silently
+  rewriting the world, replay engine collapsing) is.
+
+Usage: check_baseline.py <bench-out-dir> [baseline.json]
+Exit code 0 = pass, 1 = regression, 2 = missing/garbled input.
+"""
+
+import json
+import os
+import sys
+
+
+def fail(msg):
+    print(f"REGRESSION: {msg}")
+    return 1
+
+
+def parse_micro_swap(path):
+    """section,label,pages,bytes_written,charged_ns,cpu_ns — labels may
+    contain commas, so split from both ends."""
+    rows = {}
+    with open(path) as f:
+        header = f.readline()
+        if not header.startswith("section,label"):
+            sys.exit(f"garbled {path}: unexpected header {header!r}")
+        for line in f:
+            parts = line.strip().split(",")
+            if len(parts) < 6:
+                continue
+            section, label = parts[0], ",".join(parts[1:-4])
+            pages, bytes_written, charged, cpu = (int(x) for x in parts[-4:])
+            rows[f"{section}/{label}"] = {
+                "pages": pages,
+                "bytes_written": bytes_written,
+                "charged_ns": charged,
+                "cpu_ns": cpu,
+            }
+    return rows
+
+
+def parse_replay_scaling(path):
+    """workers,events,wall_ns,events_per_sec,fingerprint"""
+    rows = []
+    with open(path) as f:
+        header = f.readline()
+        if not header.startswith("workers,events"):
+            sys.exit(f"garbled {path}: unexpected header {header!r}")
+        for line in f:
+            parts = line.strip().split(",")
+            if len(parts) != 5:
+                continue
+            rows.append(
+                {
+                    "workers": int(parts[0]),
+                    "events": int(parts[1]),
+                    "events_per_sec": float(parts[3]),
+                    "fingerprint": parts[4],
+                }
+            )
+    return rows
+
+
+def main():
+    if len(sys.argv) < 2:
+        sys.exit(__doc__)
+    out_dir = sys.argv[1]
+    baseline_path = (
+        sys.argv[2]
+        if len(sys.argv) > 2
+        else os.path.join(os.path.dirname(__file__), "baseline.json")
+    )
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    factor = baseline.get("regression_factor", 3.0)
+    failures = 0
+
+    micro_csv = os.path.join(out_dir, "micro_swap.csv")
+    if not os.path.exists(micro_csv):
+        sys.exit(f"missing {micro_csv} (did the micro_swap bench run?)")
+    rows = parse_micro_swap(micro_csv)
+    ms = baseline.get("micro_swap", {})
+    for key in ms.get("exact_zero", []):
+        if key not in rows:
+            sys.exit(f"{micro_csv}: expected row {key!r} is missing")
+        got = rows[key]["bytes_written"]
+        if got != 0:
+            failures += fail(
+                f"{key}: steady-state cycle wrote {got} bytes (must be 0 — "
+                f"the O(dirty) contract broke)"
+            )
+    for key, base in ms.get("max_bytes_written", {}).items():
+        if key not in rows:
+            sys.exit(f"{micro_csv}: expected row {key!r} is missing")
+        got = rows[key]["bytes_written"]
+        if got > base * factor:
+            failures += fail(
+                f"{key}: wrote {got} bytes, baseline {base} (>{factor}x)"
+            )
+
+    replay_csv = os.path.join(out_dir, "replay_scaling.csv")
+    if not os.path.exists(replay_csv):
+        sys.exit(f"missing {replay_csv} (did the replay_scaling bench run?)")
+    runs = parse_replay_scaling(replay_csv)
+    if not runs:
+        sys.exit(f"{replay_csv}: no data rows")
+    # The bench itself asserts fingerprint equality across worker counts;
+    # re-check here so a bench refactor can't silently drop the assertion.
+    fps = {r["fingerprint"] for r in runs}
+    if len(fps) != 1:
+        failures += fail(f"replay fingerprints diverged across worker counts: {fps}")
+    best = max(r["events_per_sec"] for r in runs)
+    floor = baseline["replay_scaling"]["min_events_per_sec"] / factor
+    if best < floor:
+        failures += fail(
+            f"replay throughput collapsed: best {best:.0f} events/s < "
+            f"floor {floor:.0f} (baseline/{factor})"
+        )
+
+    if failures:
+        sys.exit(1)
+    print(
+        f"bench baseline OK: {len(rows)} micro_swap rows, "
+        f"{len(runs)} replay_scaling rows, best {best:.0f} events/s"
+    )
+
+
+if __name__ == "__main__":
+    main()

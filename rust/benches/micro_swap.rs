@@ -7,9 +7,13 @@
 //! 3. **delta swap-out**: bytes written per hibernate cycle — cycle 2 on
 //!    an untouched working set must write 0 bytes, a cycle after K faults
 //!    writes exactly K pages (the O(dirty) contract, asserted here);
-//! 4. the §3.4.1 working-set table: bytes swapped out vs bytes a request
+//! 4. **delta REAP**: bytes written per REAP hibernate cycle — same
+//!    contract on the inflation side (untouched wake → 0 bytes; K dirtied
+//!    working-set pages → exactly K), plus **wake-to-first-byte** before
+//!    and after the wake_begin/wake_finish split;
+//! 5. the §3.4.1 working-set table: bytes swapped out vs bytes a request
 //!    reloads (Node.js hello: ~10 MB out, ~4 MB back);
-//! 5. real-file I/O throughput of the swap path (CPU-side cost that the
+//! 6. real-file I/O throughput of the swap path (CPU-side cost that the
 //!    §Perf pass optimizes).
 //!
 //! Set `QH_BENCH_OUT=dir` to also write `micro_swap.csv` (the CI
@@ -106,7 +110,7 @@ fn mechanism_comparison(pages: u64) {
     );
 
     // REAP path: hibernate again (REAP write) + batched prefetch.
-    mgr.reap_swap_out(&[&pt], &svc.host, &clock).unwrap();
+    mgr.reap_swap_out(&mut [&mut pt], &svc.host, &clock).unwrap();
     let reap_out_charged = clock.take().0;
     let t0 = Instant::now();
     mgr.reap_swap_in(&svc.host, &clock).unwrap();
@@ -245,6 +249,164 @@ fn delta_swapout_cycles(pages: u64, csv: &mut CsvOut) {
     println!();
 }
 
+/// Delta-aware REAP: bytes written per REAP hibernate cycle, with the
+/// acceptance assertions inline — a steady-state REAP hibernate after an
+/// untouched wake writes 0 bytes, and after K dirtying faults writes
+/// exactly K pages (the old path re-copied the whole recorded working set
+/// every cycle).
+fn reap_cycle_bytes(pages: u64, csv: &mut CsvOut) {
+    println!("== delta REAP: bytes written per REAP hibernate cycle ({pages} pages) ==");
+    let quick = std::env::var("QH_QUICK").is_ok();
+    let pages = if quick { pages.min(512) } else { pages };
+    let svc = rig(
+        1 << 30,
+        SharingConfig::default(),
+        true,
+        Arc::new(NoopRunner),
+        "micro-swap-reap",
+    );
+    let dir = svc.swap_dir.join("micro-reap");
+    let files = SwapFileSet::create(&dir, 97).unwrap();
+    let mut mgr = SwapMgr::new(files, CostModel::paper());
+    let clock = Clock::new();
+    let alloc = quark_hibernate::mem::bitmap_alloc::BitmapPageAllocator::new(
+        svc.host.clone(),
+        svc.heap.clone(),
+    );
+    let mut pt = PageTable::new();
+    let mut gpas = Vec::new();
+    for i in 0..pages {
+        let gpa = alloc.alloc_page().unwrap();
+        svc.host.fill_page(gpa, i).unwrap();
+        pt.map(Gva(i * 0x1000), Pte::new_present(gpa, Pte::WRITABLE | Pte::DIRTY));
+        gpas.push(gpa);
+    }
+    // Full swap-out, then the working set (half the pages) faults back —
+    // the REAP record pass.
+    mgr.swap_out(&mut [&mut pt], &svc.host, &clock).unwrap();
+    let ws = pages / 2;
+    for i in 0..ws {
+        mgr.fault_swap_in(&mut pt, Gva(i * 0x1000), &svc.host, &clock)
+            .unwrap();
+    }
+    clock.take();
+
+    let mut cycle = |label: &str, mgr: &mut SwapMgr, pt: &mut PageTable, csv: &mut CsvOut| {
+        let t0 = Instant::now();
+        let rpt = mgr.reap_swap_out(&mut [pt], &svc.host, &clock).unwrap();
+        let cpu = t0.elapsed().as_nanos() as u64;
+        let (charged, _) = clock.take();
+        println!(
+            "{label:<34} wrote {:>7} ({:>4} pages), charged {}, cpu {}",
+            human_bytes(rpt.bytes_written),
+            rpt.unique_pages,
+            human_ns(charged),
+            human_ns(cpu),
+        );
+        csv.row("reap_cycle", label, rpt.unique_pages, rpt.bytes_written, charged, cpu);
+        let back = mgr.reap_swap_in(&svc.host, &clock).unwrap();
+        assert_eq!(back, ws, "every wake prefetches the full working set");
+        clock.take();
+        rpt
+    };
+
+    // Cycle 1: the record pass — the whole working set is new to the REAP
+    // image.
+    let c1 = cycle("cycle 1 (record, all WS new)", &mut mgr, &mut pt, csv);
+    assert_eq!(c1.bytes_written, ws * PAGE_SIZE as u64);
+
+    // Cycle 2: wake-no-touch — steady state is free.
+    let c2 = cycle("cycle 2 (untouched wake)", &mut mgr, &mut pt, csv);
+    assert_eq!(
+        c2.bytes_written, 0,
+        "a steady-state REAP hibernate must write zero page images"
+    );
+
+    // Cycle 3: dirty K working-set pages — exactly K go out, in place.
+    let k = ws / 4;
+    for i in 0..k {
+        svc.host.fill_page(gpas[i as usize], 0x4EA9 ^ i).unwrap();
+        pt.update(Gva(i * 0x1000), |p| p.with(Pte::DIRTY)).unwrap();
+    }
+    let c3 = cycle(
+        &format!("cycle 3 ({k} WS pages dirtied)"),
+        &mut mgr,
+        &mut pt,
+        csv,
+    );
+    assert_eq!(
+        c3.bytes_written,
+        k * PAGE_SIZE as u64,
+        "a REAP cycle after K dirtying writes must write exactly K pages"
+    );
+    println!(
+        "old path would have written {} per cycle; delta wrote {} then {}",
+        human_bytes(ws * PAGE_SIZE as u64),
+        human_bytes(c2.bytes_written),
+        human_bytes(c3.bytes_written),
+    );
+    println!();
+}
+
+/// Wake-to-first-byte: how long after SIGCONT the router can hand the
+/// instance a request — the whole wake (flip + REAP prefetch) before the
+/// wake_begin/wake_finish split, the flip alone after it (the prefetch
+/// runs on the platform's pipeline, off the control path).
+fn wake_to_first_byte(csv: &mut CsvOut) {
+    println!("== wake-to-first-byte: serial wake vs wake_begin split ==");
+    let quick = std::env::var("QH_QUICK").is_ok();
+    let spec = if quick {
+        scaled_for_test(nodejs_hello(), 16)
+    } else {
+        nodejs_hello()
+    };
+    let svc = rig(
+        1 << 30,
+        SharingConfig::default(),
+        true,
+        Arc::new(NoopRunner),
+        "micro-swap-wake",
+    );
+    let clock = Clock::new();
+    let mut sb = Sandbox::cold_start(2, spec, svc, &clock).unwrap();
+    sb.handle_request(&clock).unwrap();
+    sb.hibernate(&clock).unwrap(); // full
+    sb.handle_request(&clock).unwrap(); // sample request records the WS
+    sb.hibernate(&clock).unwrap(); // REAP image exists now
+    clock.take();
+
+    // Before the split: SIGCONT pays the flip *and* the batch prefetch
+    // before the instance is serviceable.
+    let prefetched = sb.wake(&clock).unwrap();
+    let (serial_ns, _) = clock.take();
+    assert!(prefetched > 0, "the serial wake must include the prefetch");
+    sb.hibernate(&clock).unwrap(); // steady-state: 0 bytes through REAP
+    clock.take();
+
+    // After the split: the router ranks the instance WokenUp after the
+    // flip alone; the prefetch happens off-path.
+    sb.wake_begin(&clock).unwrap();
+    let (split_ns, _) = clock.take();
+    let finish_prefetched = sb.wake_finish(&clock).unwrap();
+    let (finish_ns, _) = clock.take();
+    assert!(finish_prefetched > 0);
+    assert!(
+        split_ns < serial_ns,
+        "wake_begin must be cheaper than the full wake: {split_ns} vs {serial_ns}"
+    );
+    println!(
+        "serial wake (flip+prefetch): {}   wake_begin only: {}   off-path finish: {}",
+        human_ns(serial_ns),
+        human_ns(split_ns),
+        human_ns(finish_ns),
+    );
+    csv.row("wake_latency", "serial wake (pre-split)", prefetched, 0, serial_ns, 0);
+    csv.row("wake_latency", "wake_begin (post-split)", 0, 0, split_ns, 0);
+    csv.row("wake_latency", "wake_finish (off-path)", finish_prefetched, 0, finish_ns, 0);
+    sb.terminate().unwrap();
+    println!();
+}
+
 fn working_set_table() {
     println!("== §3.4.1 working set: swapped-out vs reloaded per request ==");
     println!(
@@ -285,6 +447,8 @@ fn main() {
     device_model_table();
     mechanism_comparison(2560); // 10 MB — the paper's Node.js example size
     delta_swapout_cycles(2560, &mut csv);
+    reap_cycle_bytes(2560, &mut csv);
+    wake_to_first_byte(&mut csv);
     working_set_table();
     csv.save();
     // Shape check for the nodejs claim.

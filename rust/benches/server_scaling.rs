@@ -40,10 +40,10 @@ fn main() {
     for r in [&sync, &pooled] {
         println!(
             "{:<18} {:>9.2} ms {:>9.2} ms",
-            if r.deflate_workers == 0 {
+            if r.pipeline_workers == 0 {
                 "sync (old path)".to_string()
             } else {
-                format!("pool ({} workers)", r.deflate_workers)
+                format!("pool ({} workers)", r.pipeline_workers)
             },
             r.max_tick_ns as f64 / 1e6,
             r.mean_tick_ns as f64 / 1e6,

@@ -7,7 +7,7 @@
 //!
 //! Also home to the **tick-stall** measurement ([`tick_stall`]): how long
 //! a policy tick runs when it has to deflate a fat sandbox, synchronously
-//! (`deflate_workers = 0`, the old behavior — the control loop eats the
+//! (`pipeline_workers = 0`, the old behavior — the control loop eats the
 //! whole swap-out) vs through the off-lock deflation pool (the tick only
 //! flips state and submits). The stalled control loop is what delayed
 //! hibernate/wake decisions for every co-sharded function.
@@ -116,7 +116,7 @@ pub fn run(
 /// One tick-stall measurement row.
 #[derive(Debug, Clone)]
 pub struct TickStallResult {
-    pub deflate_workers: usize,
+    pub pipeline_workers: usize,
     pub cycles: usize,
     /// Worst policy-tick wall time over the cycles.
     pub max_tick_ns: u64,
@@ -126,21 +126,21 @@ pub struct TickStallResult {
 
 /// Measure how long a policy tick stalls when it hibernates a fat
 /// sandbox: `cycles` rounds of warm-the-big-function → idle → tick. With
-/// `deflate_workers = 0` the tick performs the whole delta swap-out /
+/// `pipeline_workers = 0` the tick performs the whole delta swap-out /
 /// file-release pass inline (the pre-pipeline behavior); with a pool the
 /// tick returns after the SIGSTOP flip and the I/O runs off-loop. Every
 /// cycle drains afterwards so both modes do identical total work.
-pub fn tick_stall(deflate_workers: usize, cycles: usize) -> TickStallResult {
+pub fn tick_stall(pipeline_workers: usize, cycles: usize) -> TickStallResult {
     let mut cfg = PlatformConfig::default();
     cfg.host_memory = 2 << 30;
     cfg.cost = CostModel::paper();
     cfg.shards = 1; // one shard: every function co-sharded with the fat one
     cfg.policy.hibernate_idle_ms = 1;
     cfg.policy.predictive_wakeup = false;
-    cfg.policy.deflate_workers = deflate_workers;
+    cfg.policy.pipeline_workers = pipeline_workers;
     cfg.swap_dir = std::env::temp_dir()
         .join(format!(
-            "qh-tick-stall-{deflate_workers}-{}",
+            "qh-tick-stall-{pipeline_workers}-{}",
             std::process::id()
         ))
         .to_string_lossy()
@@ -171,11 +171,11 @@ pub fn tick_stall(deflate_workers: usize, cycles: usize) -> TickStallResult {
                 .request_at(&format!("tiny-{i}"), vt + 1_000_000)
                 .expect("tiny request");
         }
-        platform.drain_deflations().expect("drain");
+        platform.drain_pipeline().expect("drain");
         vt += 10_000_000;
     }
     TickStallResult {
-        deflate_workers,
+        pipeline_workers,
         cycles,
         max_tick_ns: ticks.iter().copied().max().unwrap_or(0),
         mean_tick_ns: ticks.iter().sum::<u64>() / ticks.len().max(1) as u64,

@@ -36,13 +36,26 @@ pub struct PolicyConfig {
     ///
     /// [`policy_tick`]: crate::platform::Platform::policy_tick
     pub tick_stride: usize,
-    /// Deflation worker threads: the policy tick performs only the cheap
-    /// SIGSTOP state flip per hibernated instance and hands the expensive
-    /// swap/release I/O to this pool (the instance's reservation keeps
-    /// requests off it meanwhile; completions are reaped at the next
-    /// tick). `0` = run deflation synchronously inside the tick (the old
-    /// behavior — useful as a baseline and for the bench comparison).
-    pub deflate_workers: usize,
+    /// Instance-pipeline worker threads: the policy tick performs only the
+    /// cheap state flip per instance (SIGSTOP, SIGCONT — nothing at all
+    /// for evictions) and hands the expensive I/O — deflation swap/release,
+    /// anticipatory REAP prefetch, eviction teardown — to this pool (the
+    /// instance's reservation keeps requests off it meanwhile; completions
+    /// are reaped at the next tick). `0` = run the I/O synchronously
+    /// inside the tick (the old behavior — useful as a baseline and for
+    /// the bench comparison). The TOML key `deflate_workers` is accepted
+    /// as a legacy alias.
+    pub pipeline_workers: usize,
+    /// Backpressure cap on the pipeline queue (jobs queued + in flight).
+    /// On overflow the newest-idle submissions are shed: deflations and
+    /// teardowns fall back to running inline on the tick (self-throttling
+    /// the control loop instead of letting a pressure storm queue
+    /// hundreds of instances), anticipatory inflations are skipped
+    /// entirely (benign — the predicted request demand-wakes). `0` =
+    /// unbounded. Sheds are counted in `metrics.counters.pipeline_sheds`;
+    /// strict-determinism replay forces this to 0 (shed decisions depend
+    /// on real-time queue depth).
+    pub pipeline_queue_cap: usize,
 }
 
 impl Default for PolicyConfig {
@@ -55,7 +68,8 @@ impl Default for PolicyConfig {
             predictive_wakeup: true,
             reap_enabled: true,
             tick_stride: 1,
-            deflate_workers: 2,
+            pipeline_workers: 2,
+            pipeline_queue_cap: 128,
         }
     }
 }
@@ -241,9 +255,14 @@ impl PlatformConfig {
         let mut tick_stride = self.policy.tick_stride as u64;
         get_u64(t, "policy", "tick_stride", &mut tick_stride)?;
         self.policy.tick_stride = (tick_stride as usize).max(1);
-        let mut deflate_workers = self.policy.deflate_workers as u64;
-        get_u64(t, "policy", "deflate_workers", &mut deflate_workers)?;
-        self.policy.deflate_workers = deflate_workers as usize;
+        let mut pipeline_workers = self.policy.pipeline_workers as u64;
+        // Legacy alias first, so the new key wins when both are present.
+        get_u64(t, "policy", "deflate_workers", &mut pipeline_workers)?;
+        get_u64(t, "policy", "pipeline_workers", &mut pipeline_workers)?;
+        self.policy.pipeline_workers = pipeline_workers as usize;
+        let mut pipeline_queue_cap = self.policy.pipeline_queue_cap as u64;
+        get_u64(t, "policy", "pipeline_queue_cap", &mut pipeline_queue_cap)?;
+        self.policy.pipeline_queue_cap = pipeline_queue_cap as usize;
 
         let mut replay_workers = self.replay.workers as u64;
         get_u64(t, "replay", "workers", &mut replay_workers)?;
@@ -375,7 +394,8 @@ mod tests {
         assert_eq!(c.policy.tick_stride, 1);
         assert!(c.predictor_state_file.is_empty());
 
-        assert_eq!(c.policy.deflate_workers, 2, "deflation pool on by default");
+        assert_eq!(c.policy.pipeline_workers, 2, "pipeline on by default");
+        assert_eq!(c.policy.pipeline_queue_cap, 128, "bounded by default");
 
         let c = PlatformConfig::from_str(
             r#"
@@ -383,7 +403,8 @@ mod tests {
 
             [policy]
             tick_stride = 4
-            deflate_workers = 0
+            pipeline_workers = 0
+            pipeline_queue_cap = 7
 
             [replay]
             workers = 8
@@ -395,11 +416,24 @@ mod tests {
         .unwrap();
         assert_eq!(c.predictor_state_file, "/tmp/tracks.csv");
         assert_eq!(c.policy.tick_stride, 4);
-        assert_eq!(c.policy.deflate_workers, 0, "0 = synchronous deflation");
+        assert_eq!(c.policy.pipeline_workers, 0, "0 = synchronous pipeline");
+        assert_eq!(c.policy.pipeline_queue_cap, 7);
         assert_eq!(c.replay.workers, 8);
         assert_eq!(c.replay.epoch_ms, 50);
         assert_eq!(c.replay.tick_ms, 10);
         assert!(!c.replay.strict_determinism);
+    }
+
+    #[test]
+    fn deflate_workers_is_a_legacy_alias_for_pipeline_workers() {
+        let c = PlatformConfig::from_str("[policy]\ndeflate_workers = 5\n").unwrap();
+        assert_eq!(c.policy.pipeline_workers, 5);
+        // When both appear, the new key wins.
+        let c = PlatformConfig::from_str(
+            "[policy]\ndeflate_workers = 5\npipeline_workers = 3\n",
+        )
+        .unwrap();
+        assert_eq!(c.policy.pipeline_workers, 3);
     }
 
     #[test]

@@ -138,6 +138,20 @@ pub struct RequestOutcome {
     pub reap_prefetched: u64,
 }
 
+/// What expensive I/O a deferred signal drain left owed
+/// ([`Sandbox::drain_signals_deferred`]): the cheap state flip already
+/// happened inside the policy tick; the finish belongs on the platform's
+/// instance-I/O pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PendingIo {
+    /// [`Sandbox::hibernate_begin`] ran; [`Sandbox::hibernate_finish`]
+    /// (the deflation swap/release I/O) is owed.
+    Deflate,
+    /// [`Sandbox::wake_begin`] ran; [`Sandbox::wake_finish`] (the REAP
+    /// batch prefetch) is owed.
+    Inflate,
+}
+
 /// A sandboxed container instance.
 pub struct Sandbox {
     pub id: u64,
@@ -440,19 +454,30 @@ impl Sandbox {
             file_miss_bytes: 0,
             reap_prefetched: 0,
         };
-        clock.charge(self.svc.cost.request_dispatch_ns);
-
         if from == ContainerState::Hibernate {
-            // The parked runtime host thread unblocks (sys_accept returns).
-            clock.charge(self.svc.cost.thread_wake_ns);
+            // Demand wake. The REAP batch read is issued the moment the
+            // request is admitted, and the admission work — dispatch plus
+            // unparking the runtime host thread (sys_accept returning) —
+            // proceeds concurrently with it, so the serve path pays
+            // max(admission, prefetch) instead of their sum: the request
+            // no longer waits out the whole batch read up front.
             self.paused = false;
-            // Wake processing: REAP prefetch first if an image exists.
+            let admission_ns =
+                self.svc.cost.request_dispatch_ns + self.svc.cost.thread_wake_ns;
             if self.swap.has_reap_image() {
-                outcome.reap_prefetched = self.swap.reap_swap_in(&self.svc.host, clock)?;
+                let prefetch = Clock::new();
+                outcome.reap_prefetched =
+                    self.swap.reap_swap_in(&self.svc.host, &prefetch)?;
+                clock.charge(admission_ns.max(prefetch.charged_ns()));
+            } else {
+                clock.charge(admission_ns);
             }
             outcome.sample_request = self.reap.on_wake_request();
-        } else if from == ContainerState::WokenUp {
-            outcome.sample_request = self.reap.on_wake_request();
+        } else {
+            clock.charge(self.svc.cost.request_dispatch_ns);
+            if from == ContainerState::WokenUp {
+                outcome.sample_request = self.reap.on_wake_request();
+            }
         }
 
         // Touch the stable anon working set.
@@ -546,11 +571,15 @@ impl Sandbox {
         report.freed_pages_reclaimed = self.alloc.reclaim_free_pages()?;
         clock.charge(self.svc.cost.madvise_ns(report.freed_pages_reclaimed));
 
-        // Step 3: swap out committed anon pages.
+        // Step 3: swap out committed anon pages. Both paths are deltas:
+        // `pages_swapped_out` counts the pages actually (re)written this
+        // cycle, which for a steady-state REAP hibernate after an
+        // untouched wake is zero.
         if self.reap.use_reap_swapout() {
             let Sandbox { swap, procs, svc, .. } = self;
-            let tables: Vec<&PageTable> = procs.iter().map(|p| &p.asp.pt).collect();
-            let rpt = swap.reap_swap_out(&tables, &svc.host, clock)?;
+            let mut tables: Vec<&mut PageTable> =
+                procs.iter_mut().map(|p| &mut p.asp.pt).collect();
+            let rpt = swap.reap_swap_out(&mut tables, &svc.host, clock)?;
             report.pages_swapped_out = rpt.unique_pages;
             report.used_reap = true;
         } else {
@@ -624,16 +653,42 @@ impl Sandbox {
 
     /// SIGCONT → anticipatory wake (Fig. 3 ⑤): inflate ahead of the
     /// predicted request so it sees WokenUp (Warm-like) latency.
+    ///
+    /// Composed of [`Self::wake_begin`] (the cheap state flip) and
+    /// [`Self::wake_finish`] (the REAP batch prefetch) — the mirror of the
+    /// hibernate split. The platform's policy tick performs the flip under
+    /// its shard lock and hands the prefetch to a pipeline worker so the
+    /// I/O never stalls the control loop; direct callers get both in one
+    /// call.
     pub fn wake(&mut self, clock: &Clock) -> Result<u64> {
+        self.wake_begin(clock)?;
+        self.wake_finish(clock)
+    }
+
+    /// Inflation step #1 only: SIGCONT semantics — unpark the runtime host
+    /// threads and enter WokenUp. Cheap (no I/O); after it returns the
+    /// router ranks the instance Warm-like, while the caller's reservation
+    /// keeps requests off it until [`Self::wake_finish`] completes.
+    pub fn wake_begin(&mut self, clock: &Clock) -> Result<()> {
         self.state = self.state.transition(Event::SigCont)?;
         clock.charge(self.svc.cost.thread_wake_ns);
         self.paused = false;
-        let prefetched = if self.swap.has_reap_image() {
-            self.swap.reap_swap_in(&self.svc.host, clock)?
+        Ok(())
+    }
+
+    /// Inflation step #2: the REAP batch `preadv` (§3.4.2). The expensive
+    /// half — run it off the control-plane path, holding only this
+    /// sandbox's mutex. Requires [`Self::wake_begin`] to have run. Returns
+    /// pages prefetched (0 when no REAP image exists).
+    pub fn wake_finish(&mut self, clock: &Clock) -> Result<u64> {
+        if self.state != ContainerState::WokenUp || self.paused {
+            bail!("wake_finish without wake_begin (state {})", self.state);
+        }
+        if self.swap.has_reap_image() {
+            self.swap.reap_swap_in(&self.svc.host, clock)
         } else {
-            0
-        };
-        Ok(prefetched)
+            Ok(0)
+        }
     }
 
     /// Evict: tear down guest memory, return every page, delete swap files
@@ -692,24 +747,35 @@ impl Sandbox {
         Ok(acted)
     }
 
-    /// Like [`Self::drain_signals`], but a Stop performs only the cheap
-    /// state flip ([`Self::hibernate_begin`]); the expensive deflation is
-    /// left for the caller to run — or hand to a worker — via
-    /// [`Self::hibernate_finish`]. Returns whether a deflation is now
-    /// pending. This is the platform's off-lock path: the flip happens
-    /// inside the policy tick, the I/O does not.
-    pub fn drain_signals_deferred(&mut self, clock: &Clock) -> Result<bool> {
-        let mut pending = false;
+    /// Like [`Self::drain_signals`], but both directions perform only the
+    /// cheap state flip ([`Self::hibernate_begin`] / [`Self::wake_begin`]);
+    /// the expensive I/O is left for the caller to run — or hand to a
+    /// pipeline worker — via [`Self::hibernate_finish`] /
+    /// [`Self::wake_finish`]. Returns which finish (if any) is now owed.
+    /// This is the platform's off-tick path: the flips happen inside the
+    /// policy tick, the I/O does not.
+    ///
+    /// Opposite signals in one drain cancel each other's pending I/O: a
+    /// Cont landing on a Stop whose deflation never ran needs no inflation
+    /// (the memory never left), and a Stop landing on a Cont whose
+    /// prefetch never ran needs no deflation (the memory never came back).
+    pub fn drain_signals_deferred(&mut self, clock: &Clock) -> Result<Option<PendingIo>> {
+        let mut pending = None;
         while let Some(sig) = self.signals.take() {
             match (sig, self.state) {
                 (ControlSignal::Stop, ContainerState::Warm | ContainerState::WokenUp) => {
                     self.hibernate_begin()?;
-                    pending = true;
+                    pending = match pending {
+                        Some(PendingIo::Inflate) => None,
+                        _ => Some(PendingIo::Deflate),
+                    };
                 }
                 (ControlSignal::Cont, ContainerState::Hibernate) => {
-                    self.wake(clock)?;
-                    // A wake after a (not-yet-finished) flip cancels it.
-                    pending = false;
+                    self.wake_begin(clock)?;
+                    pending = match pending {
+                        Some(PendingIo::Deflate) => None,
+                        _ => Some(PendingIo::Inflate),
+                    };
                 }
                 _ => {}
             }
@@ -915,5 +981,95 @@ mod tests {
         let out = sb.handle_request(&clock).unwrap();
         assert_eq!(out.from, ContainerState::Hibernate);
         assert!(out.anon_faults > 0);
+    }
+
+    #[test]
+    fn wake_finish_requires_begin_and_split_equals_one_shot() {
+        let svc = rig("sb-wake-split");
+        let clock = Clock::new();
+        let mut sb =
+            Sandbox::cold_start(4, scaled_for_test(nodejs_hello(), 16), svc, &clock).unwrap();
+        sb.handle_request(&clock).unwrap();
+        assert!(
+            sb.wake_finish(&clock).is_err(),
+            "finish without begin must be rejected"
+        );
+        // Build a REAP image: full hibernate → sample request → REAP
+        // hibernate.
+        sb.hibernate(&clock).unwrap();
+        sb.handle_request(&clock).unwrap();
+        let rpt = sb.hibernate(&clock).unwrap();
+        assert!(rpt.used_reap);
+        // Split wake: begin flips to WokenUp with nothing inflated yet;
+        // finish prefetches the recorded working set.
+        sb.wake_begin(&clock).unwrap();
+        assert_eq!(sb.state(), ContainerState::WokenUp);
+        assert!(!sb.is_paused());
+        let prefetched = sb.wake_finish(&clock).unwrap();
+        assert!(prefetched > 0, "REAP prefetch must run in the finish");
+        // Begin+finish ≡ the one-shot path: the request is Warm-like.
+        let out = sb.handle_request(&clock).unwrap();
+        assert_eq!(out.from, ContainerState::WokenUp);
+        assert_eq!(out.anon_faults, 0, "working set fully prefetched");
+        assert_eq!(out.reap_prefetched, 0, "prefetch already done");
+    }
+
+    #[test]
+    fn steady_state_reap_hibernate_writes_zero_pages() {
+        // The sandbox-level view of the delta-REAP contract: hibernate →
+        // anticipatory wake (no request) → hibernate writes 0 page images.
+        let svc = rig("sb-reap-steady");
+        let clock = Clock::new();
+        let mut sb =
+            Sandbox::cold_start(5, scaled_for_test(nodejs_hello(), 16), svc, &clock).unwrap();
+        sb.handle_request(&clock).unwrap();
+        sb.hibernate(&clock).unwrap();
+        sb.handle_request(&clock).unwrap(); // sample request records the WS
+        let first = sb.hibernate(&clock).unwrap();
+        assert!(first.used_reap);
+        assert!(first.pages_swapped_out > 0, "first REAP cycle writes the WS");
+        sb.wake(&clock).unwrap();
+        let second = sb.hibernate(&clock).unwrap();
+        assert!(second.used_reap);
+        assert_eq!(
+            second.pages_swapped_out, 0,
+            "untouched wake → REAP hibernate must write nothing"
+        );
+        // The image is still complete: a demand wake serves correctly.
+        let out = sb.handle_request(&clock).unwrap();
+        assert!(out.reap_prefetched > 0);
+        assert_eq!(out.anon_faults, 0);
+    }
+
+    #[test]
+    fn deferred_drain_reports_pending_io_and_cancels_pairs() {
+        use crate::container::signal::ControlSignal;
+        let svc = rig("sb-deferred");
+        let clock = Clock::new();
+        let mut sb =
+            Sandbox::cold_start(6, scaled_for_test(nodejs_hello(), 16), svc, &clock).unwrap();
+        sb.handle_request(&clock).unwrap();
+        // Stop → a deflation is owed.
+        sb.signals.send(ControlSignal::Stop);
+        assert_eq!(
+            sb.drain_signals_deferred(&clock).unwrap(),
+            Some(PendingIo::Deflate)
+        );
+        sb.hibernate_finish(&clock).unwrap();
+        // Cont → an inflation is owed.
+        sb.signals.send(ControlSignal::Cont);
+        assert_eq!(
+            sb.drain_signals_deferred(&clock).unwrap(),
+            Some(PendingIo::Inflate)
+        );
+        sb.wake_finish(&clock).unwrap();
+        // Stop immediately followed by Cont: the deflation never ran, so
+        // nothing is owed — the memory never left.
+        sb.signals.send(ControlSignal::Stop);
+        sb.signals.send(ControlSignal::Cont);
+        assert_eq!(sb.drain_signals_deferred(&clock).unwrap(), None);
+        assert_eq!(sb.state(), ContainerState::WokenUp);
+        let out = sb.handle_request(&clock).unwrap();
+        assert_eq!(out.from, ContainerState::WokenUp);
     }
 }

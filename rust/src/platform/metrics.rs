@@ -61,6 +61,14 @@ pub struct Counters {
     pub evictions: AtomicU64,
     pub pages_reclaimed: AtomicU64,
     pub pages_swapped_out: AtomicU64,
+    /// Pipeline jobs shed by the backpressure cap
+    /// (`policy.pipeline_queue_cap`): deflations/teardowns that fell back
+    /// to running inline on the tick, plus anticipatory wakes skipped.
+    pub pipeline_sheds: AtomicU64,
+    /// Gauge (not a monotonic counter): instance-pipeline jobs queued or
+    /// in flight right now, mirrored by the pipeline on every submit and
+    /// completion. Reads 0 whenever the pipeline is drained.
+    pub pipeline_depth: AtomicU64,
 }
 
 macro_rules! counter_snapshot {
@@ -81,7 +89,9 @@ impl Counters {
             demand_wakes,
             evictions,
             pages_reclaimed,
-            pages_swapped_out
+            pages_swapped_out,
+            pipeline_sheds,
+            pipeline_depth
         )
     }
 }

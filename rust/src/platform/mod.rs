@@ -28,9 +28,9 @@
 //! scale out to more instances (the paper's model: one in-flight request
 //! per container; concurrency comes from more containers).
 
-pub mod deflate;
 pub mod density;
 pub mod metrics;
+pub mod pipeline;
 pub mod policy;
 pub mod pool;
 pub mod predictor;
@@ -42,7 +42,7 @@ pub mod trace;
 pub mod trace_file;
 
 use crate::config::PlatformConfig;
-use crate::container::sandbox::{RequestOutcome, Sandbox, SandboxServices};
+use crate::container::sandbox::{PendingIo, RequestOutcome, Sandbox, SandboxServices};
 use crate::container::state::ContainerState;
 use crate::container::PayloadRunner;
 use crate::simtime::Clock;
@@ -79,9 +79,10 @@ pub struct Platform {
     /// cross-shard lock either.
     predictors: Vec<Predictor>,
     pub metrics: Arc<Metrics>,
-    /// Off-lock deflation pipeline: the policy tick flips state, this pool
-    /// does the I/O ([`deflate`]).
-    deflate: deflate::DeflationPool,
+    /// Off-tick instance-I/O pipeline: the policy tick flips state, this
+    /// pool runs the deflations, anticipatory inflations and eviction
+    /// teardowns ([`pipeline`]).
+    pipeline: pipeline::InstancePipeline,
     next_id: AtomicU64,
     /// Round-robin cursor for the staggered policy cadence
     /// (`policy.tick_stride` > 1): the shard index the next
@@ -134,7 +135,10 @@ impl Platform {
         let p = Self {
             engine: PolicyEngine::new(cfg.policy.clone(), mode),
             predictors: (0..shard_count).map(|_| Predictor::new(0.3)).collect(),
-            deflate: deflate::DeflationPool::new(cfg.policy.deflate_workers, metrics.clone()),
+            pipeline: pipeline::InstancePipeline::new(
+                cfg.policy.pipeline_workers,
+                metrics.clone(),
+            ),
             metrics,
             svc,
             cfg,
@@ -326,29 +330,30 @@ impl Platform {
     /// Concurrent *requests* are always safe — they only append instances
     /// and reservations re-validate state before any action applies.
     ///
-    /// Deflations submitted by this tick run on the [`deflate`] pool —
-    /// concurrently with each other — and are **drained before this
-    /// returns**, so callers observe the synchronous contract (memory
-    /// freed, instances routable) while the I/O itself parallelizes and
-    /// never runs under a shard lock. The threaded server uses
-    /// [`Self::policy_tick_nowait`] instead, which leaves deflations in
-    /// flight and reaps them at its next tick.
+    /// Deflations, inflations and teardowns submitted by this tick run on
+    /// the [`pipeline`] pool — concurrently with each other — and are
+    /// **drained before this returns**, so callers observe the synchronous
+    /// contract (memory freed, wakes prefetched, instances routable) while
+    /// the I/O itself parallelizes and never runs under a shard lock. The
+    /// threaded server uses [`Self::policy_tick_nowait`] instead, which
+    /// leaves jobs in flight and reaps them at its next tick.
     pub fn policy_tick(&self, now_vns: u64) -> Result<Vec<Action>> {
         let applied = self.policy_tick_nowait(now_vns)?;
-        self.drain_deflations()?;
+        self.drain_pipeline()?;
         Ok(applied)
     }
 
-    /// [`Self::policy_tick`] without the trailing drain: deflations stay
+    /// [`Self::policy_tick`] without the trailing drain: pipeline jobs stay
     /// in flight (their reservations keep requests off the instances) and
     /// completions — including any errors — are reaped at the *next* tick.
-    /// This is what bounds tick latency for the live policy thread: a
-    /// 10 GB sandbox deflating can no longer stall the control loop.
+    /// This is what bounds tick latency for the live policy thread: neither
+    /// a 10 GB sandbox deflating nor an anticipatory wake's batch prefetch
+    /// can stall the control loop anymore.
     pub fn policy_tick_nowait(&self, now_vns: u64) -> Result<Vec<Action>> {
         // Reap first, but don't let a stashed error from a *previous*
-        // tick's deflation cancel this tick's decisions — run the walk,
-        // then surface the error.
-        let reaped = self.reap_deflations();
+        // tick's job cancel this tick's decisions — run the walk, then
+        // surface the error.
+        let reaped = self.reap_pipeline();
         let n = self.shards.len();
         let stride = self.engine.cfg.tick_stride.max(1);
         let per_round = n.div_ceil(stride);
@@ -422,27 +427,24 @@ impl Platform {
             };
             (inst.sandbox.clone(), inst.last_active.clone(), reservation)
         };
+        // Every action is a cheap in-tick step (a state flip, or nothing
+        // at all for evictions) plus expensive I/O shipped to the
+        // instance pipeline with the reservation riding along. With
+        // `pipeline_workers = 0` the I/O runs inline — the pre-pipeline
+        // behavior.
         match action {
-            // Deflation goes down the off-lock pipeline: flip state here,
-            // ship the I/O (and the reservation) to the pool.
-            Action::Hibernate { .. } => {
-                self.apply_hibernate(w, sandbox, reservation, &clock)
+            Action::Hibernate { .. } => self.apply_hibernate(w, sandbox, reservation, &clock),
+            Action::Wake { .. } => {
+                self.apply_wake(w, sandbox, &last_active, reservation, now_vns, &clock)
             }
-            _ => {
-                let result =
-                    self.apply_to_sandbox(action, &sandbox, &last_active, now_vns, &clock);
-                drop(reservation);
-                result
-            }
+            Action::Evict { .. } => self.apply_evict(w, sandbox, reservation),
         }
     }
 
-    /// The Hibernate action, split per the off-lock pipeline: the cheap
-    /// SIGSTOP flip runs here (inside the tick, under nothing but the
-    /// sandbox mutex — the shard lock was already released by the caller),
-    /// the expensive [`Sandbox::hibernate_finish`] goes to the deflation
-    /// pool with the reservation riding along. With `deflate_workers = 0`
-    /// the finish runs inline — the pre-pipeline behavior.
+    /// The Hibernate action: the cheap SIGSTOP flip runs here (inside the
+    /// tick, under nothing but the sandbox mutex — the shard lock was
+    /// already released by the caller), the expensive
+    /// [`Sandbox::hibernate_finish`] goes down the pipeline.
     fn apply_hibernate(
         &self,
         workload: &str,
@@ -466,7 +468,7 @@ impl Platform {
             // SIGSTOP through the signal queue (§3.1); only the state
             // flip happens at this safe point.
             sb.signals.send(crate::container::signal::ControlSignal::Stop);
-            if !sb.drain_signals_deferred(clock)? {
+            if sb.drain_signals_deferred(clock)? != Some(PendingIo::Deflate) {
                 return Ok(false);
             }
         }
@@ -474,90 +476,146 @@ impl Platform {
             .counters
             .hibernations
             .fetch_add(1, Ordering::Relaxed);
-        let job = deflate::DeflateJob {
+        self.dispatch(pipeline::PipelineJob {
             workload: workload.to_string(),
             sandbox,
             reservation,
-        };
-        if self.deflate.is_async() {
-            self.deflate.submit(job);
-        } else {
-            self.deflate.run_sync(job)?;
-        }
+            kind: pipeline::JobKind::Deflate,
+        })?;
         Ok(true)
     }
 
-    /// Deflations queued or in flight on the pool right now.
-    pub fn pending_deflations(&self) -> usize {
-        self.deflate.pending()
-    }
-
-    /// Non-blocking: fold completed deflations (surfacing the first error
-    /// stashed since the last reap). Called at the top of every tick.
-    pub fn reap_deflations(&self) -> Result<u64> {
-        self.deflate.reap()
-    }
-
-    /// Block until every in-flight deflation has completed, then reap.
-    /// The replay engine calls this after each tick batch so policy
-    /// decisions — and the memory they free — are interleaving-independent.
-    pub fn drain_deflations(&self) -> Result<u64> {
-        self.deflate.drain()
-    }
-
-    /// Test hook: make deflation workers block on `gate` before each
-    /// finish, so a test can hold a deflation in flight deterministically.
-    #[doc(hidden)]
-    pub fn set_deflation_gate(&self, gate: Option<deflate::DeflateGate>) {
-        self.deflate.set_gate(gate);
-    }
-
-    /// Apply an Evict or Wake action to its reserved sandbox (Hibernate
-    /// goes through [`Self::apply_hibernate`]). The caller holds the
-    /// reservation and releases it afterwards.
-    fn apply_to_sandbox(
+    /// The Wake action: the cheap SIGCONT flip runs here — the router
+    /// immediately ranks the instance WokenUp — and the REAP batch
+    /// prefetch ([`Sandbox::wake_finish`]) goes down the pipeline, so
+    /// anticipatory-wake I/O no longer bounds policy-tick latency.
+    fn apply_wake(
         &self,
-        action: &Action,
-        sandbox: &Arc<Mutex<Sandbox>>,
+        workload: &str,
+        sandbox: Arc<Mutex<Sandbox>>,
         last_active: &AtomicU64,
+        reservation: pool::Reservation,
         now_vns: u64,
         clock: &Clock,
     ) -> Result<bool> {
-        let mut sb = sandbox.lock().unwrap();
-        match action {
-            Action::Hibernate { .. } => {
-                unreachable!("Hibernate is routed through apply_hibernate")
+        {
+            let mut sb = sandbox.lock().unwrap();
+            if sb.state() != ContainerState::Hibernate {
+                return Ok(false);
             }
-            Action::Evict { .. } => {
-                if !sb.state().accepts_requests() {
+            // Backpressure: shedding an anticipatory inflation is benign —
+            // the predicted request simply demand-wakes — so a full queue
+            // skips the wake *before* any state flips.
+            if self.pipeline.is_async() {
+                let cap = self.cfg.policy.pipeline_queue_cap;
+                if cap > 0 && self.pipeline.pending() >= cap {
+                    self.metrics
+                        .counters
+                        .pipeline_sheds
+                        .fetch_add(1, Ordering::Relaxed);
                     return Ok(false);
                 }
-                sb.terminate()?;
-                self.metrics
-                    .counters
-                    .evictions
-                    .fetch_add(1, Ordering::Relaxed);
             }
-            Action::Wake { .. } => {
-                if sb.state() != ContainerState::Hibernate {
-                    return Ok(false);
-                }
-                // SIGCONT through the signal queue (Fig. 3 ⑤).
-                sb.signals.send(crate::container::signal::ControlSignal::Cont);
-                if sb.drain_signals(clock)? == 0 {
-                    return Ok(false);
-                }
-                // Waking resets idleness: the wake is in anticipation of an
-                // imminent request, so the instance must not be re-deflated
-                // by the very next tick.
-                last_active.fetch_max(now_vns, Ordering::Relaxed);
-                self.metrics
-                    .counters
-                    .anticipatory_wakes
-                    .fetch_add(1, Ordering::Relaxed);
+            // SIGCONT through the signal queue (Fig. 3 ⑤).
+            sb.signals.send(crate::container::signal::ControlSignal::Cont);
+            if sb.drain_signals_deferred(clock)? != Some(PendingIo::Inflate) {
+                return Ok(false);
             }
         }
+        // Waking resets idleness: the wake is in anticipation of an
+        // imminent request, so the instance must not be re-deflated by the
+        // very next tick.
+        last_active.fetch_max(now_vns, Ordering::Relaxed);
+        self.metrics
+            .counters
+            .anticipatory_wakes
+            .fetch_add(1, Ordering::Relaxed);
+        self.dispatch(pipeline::PipelineJob {
+            workload: workload.to_string(),
+            sandbox,
+            reservation,
+            kind: pipeline::JobKind::Inflate,
+        })?;
         Ok(true)
+    }
+
+    /// The Evict action: no state flips in-tick — the reservation alone
+    /// fences the instance — and [`Sandbox::terminate`]'s page/host-object
+    /// release goes down the pipeline. The Dead instance is swept at a
+    /// later tick, exactly like deflation completions are reaped.
+    fn apply_evict(
+        &self,
+        workload: &str,
+        sandbox: Arc<Mutex<Sandbox>>,
+        reservation: pool::Reservation,
+    ) -> Result<bool> {
+        {
+            let sb = sandbox.lock().unwrap();
+            if !sb.state().accepts_requests() {
+                return Ok(false);
+            }
+        }
+        self.dispatch(pipeline::PipelineJob {
+            workload: workload.to_string(),
+            sandbox,
+            reservation,
+            kind: pipeline::JobKind::Teardown,
+        })?;
+        Ok(true)
+    }
+
+    /// Ship a job to the pipeline, honoring the backpressure cap
+    /// (`policy.pipeline_queue_cap`, 0 = unbounded): on overflow the job
+    /// is shed — it falls back to running inline on the tick, which
+    /// self-throttles the control loop instead of letting the queue grow
+    /// without bound under a pressure storm. Policy submits most-idle
+    /// first, so the jobs shed are the newest-idle ones. (Inflations are
+    /// shed earlier, in [`Self::apply_wake`], before any state flips.)
+    fn dispatch(&self, job: pipeline::PipelineJob) -> Result<()> {
+        if !self.pipeline.is_async() {
+            return self.pipeline.run_sync(job);
+        }
+        let cap = self.cfg.policy.pipeline_queue_cap;
+        if cap > 0
+            && job.kind != pipeline::JobKind::Inflate
+            && self.pipeline.pending() >= cap
+        {
+            self.metrics
+                .counters
+                .pipeline_sheds
+                .fetch_add(1, Ordering::Relaxed);
+            return self.pipeline.run_sync(job);
+        }
+        self.pipeline.submit(job);
+        Ok(())
+    }
+
+    /// Pipeline jobs (deflations, inflations, teardowns) queued or in
+    /// flight right now.
+    pub fn pending_pipeline(&self) -> usize {
+        self.pipeline.pending()
+    }
+
+    /// Non-blocking: fold completed pipeline jobs (surfacing the first
+    /// error stashed since the last reap). Called at the top of every tick.
+    pub fn reap_pipeline(&self) -> Result<u64> {
+        self.pipeline.reap()
+    }
+
+    /// Block until every in-flight pipeline job has completed, then reap.
+    /// The replay engine calls this after each tick batch so policy
+    /// decisions — and the memory they free or prefetch — are
+    /// interleaving-independent.
+    pub fn drain_pipeline(&self) -> Result<u64> {
+        self.pipeline.drain()
+    }
+
+    /// Test hook: make pipeline workers block on `gate` before each job,
+    /// so a test can hold a deflation or inflation in flight
+    /// deterministically.
+    #[doc(hidden)]
+    pub fn set_pipeline_gate(&self, gate: Option<pipeline::PipelineGate>) {
+        self.pipeline.set_gate(gate);
     }
 
     /// Deterministic virtual-time replay: process events in order, running

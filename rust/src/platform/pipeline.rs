@@ -1,0 +1,323 @@
+//! The off-tick instance-I/O pipeline: a small worker pool that runs the
+//! expensive half of every instance lifecycle transition *off* the policy
+//! tick, holding only the instance's own mutex. It is bidirectional —
+//! and then some:
+//!
+//! * **Deflate** — [`Sandbox::hibernate_finish`]: the delta swap-out,
+//!   file-page release and madvise passes;
+//! * **Inflate** — [`Sandbox::wake_finish`]: the anticipatory REAP batch
+//!   prefetch;
+//! * **Teardown** — [`Sandbox::terminate`]: eviction's page/host-object
+//!   release.
+//!
+//! The split: the policy tick performs the cheap state flip under the
+//! shard lock (SIGSTOP → the router stops preferring the instance;
+//! SIGCONT → the router ranks it WokenUp; evictions flip nothing — the
+//! reservation alone fences them), then submits a [`PipelineJob`]
+//! carrying the sandbox handle and — crucially — the instance's RAII
+//! [`Reservation`]. The reservation is what makes the pipeline safe:
+//! routing and policy both skip reserved instances, so no request or
+//! competing action can race the in-flight I/O, and it is released
+//! (dropped) only after the finish completes, at which point the instance
+//! is a fully-transitioned, routable container.
+//!
+//! Ordering contract for determinism: a worker (1) folds the job's
+//! counters into the shared [`Metrics`], (2) drops the reservation, and
+//! only then (3) decrements the pending gauge. [`InstancePipeline::drain`]
+//! therefore guarantees that once pending hits zero, every transitioned
+//! instance is visible, unreserved, and fully accounted — which is what
+//! lets the replay engine drain after each tick batch and stay
+//! bit-identical at any worker count ([`crate::replay`]).
+//!
+//! Backpressure is the platform's job (it owns the shed policy — see
+//! `policy.pipeline_queue_cap`); the pipeline only exposes its queue
+//! depth, mirrored into the metrics gauge so operators can watch it.
+//!
+//! Errors from a finish are stashed and surface at the next
+//! [`InstancePipeline::reap`]/[`InstancePipeline::drain`] (i.e. the next
+//! policy tick), mirroring how an async kernel writeback error surfaces
+//! later.
+
+use super::metrics::Metrics;
+use super::pool::Reservation;
+use crate::container::sandbox::Sandbox;
+use crate::simtime::Clock;
+use anyhow::{Context as _, Result};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Which expensive half a job runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    /// [`Sandbox::hibernate_finish`] — the state flip already happened.
+    Deflate,
+    /// [`Sandbox::wake_finish`] — the state flip already happened.
+    Inflate,
+    /// [`Sandbox::terminate`] — no prior flip; the reservation fences it.
+    Teardown,
+}
+
+impl JobKind {
+    fn verb(self) -> &'static str {
+        match self {
+            JobKind::Deflate => "deflating",
+            JobKind::Inflate => "inflating",
+            JobKind::Teardown => "evicting",
+        }
+    }
+}
+
+/// A lifecycle finish handed to the pipeline; the reservation rides along
+/// and is released when the finish completes.
+pub struct PipelineJob {
+    pub workload: String,
+    pub sandbox: Arc<Mutex<Sandbox>>,
+    pub reservation: Reservation,
+    pub kind: JobKind,
+}
+
+/// Test-only hook invoked by a worker before it starts a job — lets a
+/// stress test hold a deflation or inflation in flight deterministically.
+pub type PipelineGate = Arc<dyn Fn() + Send + Sync>;
+
+#[derive(Default)]
+struct PoolState {
+    /// Jobs queued or running.
+    pending: usize,
+    /// Finishes completed since the last reap.
+    completed: u64,
+    /// Errors collected since the last reap.
+    errors: Vec<anyhow::Error>,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    idle: Condvar,
+    metrics: Arc<Metrics>,
+    gate: Mutex<Option<PipelineGate>>,
+}
+
+/// The instance-I/O worker pool. With zero workers it is a pass-through:
+/// [`InstancePipeline::run_sync`] executes the finish inline (the baseline
+/// the benches compare against, and the shed fallback).
+pub struct InstancePipeline {
+    tx: Option<mpsc::Sender<PipelineJob>>,
+    workers: Vec<JoinHandle<()>>,
+    shared: Arc<Shared>,
+}
+
+impl InstancePipeline {
+    pub fn new(workers: usize, metrics: Arc<Metrics>) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState::default()),
+            idle: Condvar::new(),
+            metrics,
+            gate: Mutex::new(None),
+        });
+        if workers == 0 {
+            return Self {
+                tx: None,
+                workers: Vec::new(),
+                shared,
+            };
+        }
+        let (tx, rx) = mpsc::channel::<PipelineJob>();
+        // Lifecycle I/O is low-rate (policy cadence), so a shared receiver
+        // is fine here — contention is on job *arrival*, execution runs in
+        // parallel once a worker holds its job.
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers)
+            .map(|_| {
+                let rx = rx.clone();
+                let shared = shared.clone();
+                std::thread::spawn(move || loop {
+                    let job = match rx.lock().unwrap().recv() {
+                        Ok(job) => job,
+                        Err(_) => return, // channel closed: pool dropping
+                    };
+                    run_job(&shared, job);
+                })
+            })
+            .collect();
+        Self {
+            tx: Some(tx),
+            workers: handles,
+            shared,
+        }
+    }
+
+    /// Does this pipeline actually run jobs asynchronously?
+    pub fn is_async(&self) -> bool {
+        self.tx.is_some()
+    }
+
+    /// Queue a job. The pending gauge is bumped *before* the send so a
+    /// concurrent [`Self::drain`] can never miss the job.
+    pub fn submit(&self, job: PipelineJob) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.pending += 1;
+            self.shared
+                .metrics
+                .counters
+                .pipeline_depth
+                .store(st.pending as u64, Ordering::Relaxed);
+        }
+        let tx = self.tx.as_ref().expect("submit on a synchronous pipeline");
+        if let Err(mpsc::SendError(job)) = tx.send(job) {
+            // Workers are only gone while the pipeline is being torn down;
+            // finish inline rather than losing the transition.
+            run_job(&self.shared, job);
+        }
+    }
+
+    /// Synchronous fallback (`pipeline_workers = 0`, or a shed job): run
+    /// the finish inline on the caller's thread. Same accounting, no queue.
+    pub fn run_sync(&self, job: PipelineJob) -> Result<()> {
+        let PipelineJob {
+            workload,
+            sandbox,
+            reservation,
+            kind,
+        } = job;
+        let result = run_one(&self.shared.metrics, kind, &workload, &sandbox);
+        drop(reservation);
+        result
+    }
+
+    /// Jobs queued or in flight right now.
+    pub fn pending(&self) -> usize {
+        self.shared.state.lock().unwrap().pending
+    }
+
+    /// Non-blocking: collect completions since the last reap. All stashed
+    /// errors are logged; the first is returned (annotated with how many
+    /// more there were, so a batch of failures is never mistaken for a
+    /// single one). Returns the number reaped on success.
+    pub fn reap(&self) -> Result<u64> {
+        let mut st = self.shared.state.lock().unwrap();
+        let n = st.completed;
+        st.completed = 0;
+        let mut errors = std::mem::take(&mut st.errors);
+        drop(st);
+        if errors.is_empty() {
+            return Ok(n);
+        }
+        for e in errors.iter().skip(1) {
+            eprintln!("pipeline error (additional): {e:#}");
+        }
+        let count = errors.len();
+        let first = errors.swap_remove(0);
+        Err(if count > 1 {
+            first.context(format!(
+                "plus {} more pipeline error(s), logged to stderr",
+                count - 1
+            ))
+        } else {
+            first
+        })
+    }
+
+    /// Block until every queued/in-flight job has completed, then reap.
+    /// After this returns Ok, every submitted instance is transitioned,
+    /// unreserved and folded into the metrics.
+    pub fn drain(&self) -> Result<u64> {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.pending > 0 {
+            st = self.shared.idle.wait(st).unwrap();
+        }
+        drop(st);
+        self.reap()
+    }
+
+    /// Install (or clear) the test gate — see [`PipelineGate`].
+    #[doc(hidden)]
+    pub fn set_gate(&self, gate: Option<PipelineGate>) {
+        *self.shared.gate.lock().unwrap() = gate;
+    }
+}
+
+impl Drop for InstancePipeline {
+    fn drop(&mut self) {
+        // Closing the channel lets each worker finish its backlog and exit
+        // on Disconnected; joining guarantees no job outlives the pool.
+        self.tx = None;
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run_job(shared: &Shared, job: PipelineJob) {
+    let gate = shared.gate.lock().unwrap().clone();
+    if let Some(gate) = gate {
+        gate();
+    }
+    let PipelineJob {
+        workload,
+        sandbox,
+        reservation,
+        kind,
+    } = job;
+    let result = run_one(&shared.metrics, kind, &workload, &sandbox);
+    // Release the instance before announcing completion: a drainer must
+    // observe the transitioned instance as routable the moment pending
+    // drops.
+    drop(reservation);
+    let mut st = shared.state.lock().unwrap();
+    st.pending -= 1;
+    st.completed += 1;
+    shared
+        .metrics
+        .counters
+        .pipeline_depth
+        .store(st.pending as u64, Ordering::Relaxed);
+    if let Err(e) = result {
+        st.errors.push(e);
+    }
+    drop(st);
+    shared.idle.notify_all();
+}
+
+/// Run one finish and fold its counters into the metrics. Used by both the
+/// async workers and the sync fallback, so the two modes are
+/// observationally identical.
+fn run_one(
+    metrics: &Metrics,
+    kind: JobKind,
+    workload: &str,
+    sandbox: &Arc<Mutex<Sandbox>>,
+) -> Result<()> {
+    // Lifecycle I/O's charged time belongs to no request — it runs on the
+    // platform's dime, like kernel writeback.
+    let clock = Clock::new();
+    let mut sb = sandbox.lock().unwrap();
+    let fail = || format!("{} an instance of `{workload}`", kind.verb());
+    match kind {
+        JobKind::Deflate => {
+            let before = sb.swap_stats();
+            sb.hibernate_finish(&clock).with_context(fail)?;
+            let after = sb.swap_stats();
+            if after.reap_swapouts > before.reap_swapouts {
+                metrics
+                    .counters
+                    .reap_hibernations
+                    .fetch_add(1, Ordering::Relaxed);
+            }
+            metrics.counters.pages_swapped_out.fetch_add(
+                (after.pages_swapped_out + after.reap_pages_out)
+                    - (before.pages_swapped_out + before.reap_pages_out),
+                Ordering::Relaxed,
+            );
+        }
+        JobKind::Inflate => {
+            sb.wake_finish(&clock).with_context(fail)?;
+        }
+        JobKind::Teardown => {
+            sb.terminate().with_context(fail)?;
+            metrics.counters.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    Ok(())
+}

@@ -15,6 +15,12 @@
 //!
 //! A `warm_only` baseline mode reproduces the conventional platform for the
 //! density comparison bench.
+//!
+//! Decisions are cheap; their I/O is not. The platform applies every
+//! action as an in-tick state flip (or, for evictions, nothing at all)
+//! plus a job on the [`instance pipeline`](super::pipeline), so the tick's
+//! latency is never bounded by deflation swap-outs, anticipatory REAP
+//! prefetches or eviction teardowns.
 
 use super::pool::FunctionPool;
 use super::predictor::Predictor;
@@ -195,7 +201,8 @@ mod tests {
             predictive_wakeup: true,
             reap_enabled: true,
             tick_stride: 1,
-            deflate_workers: 0,
+            pipeline_workers: 0,
+            pipeline_queue_cap: 0,
         }
     }
 

@@ -8,6 +8,12 @@
 //! in-flight request or a policy action is passed over *without touching
 //! its sandbox mutex*, so routing never blocks behind slow work and the
 //! shard critical section stays short.
+//!
+//! The off-tick pipeline's `wake_begin` flip makes an anticipatorily woken
+//! instance rank WokenUp the moment the policy tick runs; while its REAP
+//! prefetch is still in flight the riding reservation keeps it skipped
+//! (a request scales out instead of waiting), and the instant the finish
+//! completes the router hands it out at Warm-like rank.
 
 use super::pool::FunctionPool;
 use crate::container::state::ContainerState;
@@ -160,6 +166,35 @@ mod tests {
         // Both reserved → nothing reusable → cold start.
         let _r0 = pool.instances[0].try_reserve().unwrap();
         assert_eq!(route(&pool), Route::ColdStart);
+    }
+
+    #[test]
+    fn wokenup_mid_inflation_skipped_until_reservation_drops() {
+        // The wake_begin/wake_finish split: after the flip the instance
+        // ranks WokenUp, but while the pipeline's prefetch is in flight
+        // (reservation held) the router must pass it over — and hand it
+        // out the moment the reservation releases.
+        let (svc, mut pool) = rig();
+        let clock = Clock::new();
+        let mut s = spawn(&svc, 1);
+        s.hibernate(&clock).unwrap();
+        pool.add(s, 0);
+        let guard = pool.instances[0].try_reserve().unwrap();
+        pool.instances[0]
+            .sandbox
+            .lock()
+            .unwrap()
+            .wake_begin(&clock)
+            .unwrap();
+        assert_eq!(route(&pool), Route::ColdStart, "mid-inflation: skipped");
+        drop(guard); // the pipeline worker finished and released
+        match route(&pool) {
+            Route::Existing { idx, state } => {
+                assert_eq!(idx, 0);
+                assert_eq!(state, ContainerState::WokenUp);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

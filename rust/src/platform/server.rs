@@ -150,11 +150,12 @@ impl Server {
                     since_tick += step;
                     if since_tick >= interval {
                         since_tick = Duration::ZERO;
-                        // nowait: deflation I/O runs on the platform's
-                        // pool; this loop reaps completions next tick
-                        // instead of stalling behind a large swap-out.
-                        // Errors (a failed deflation surfacing at reap, a
-                        // failed action) must not vanish silently.
+                        // nowait: deflation/inflation/teardown I/O runs on
+                        // the platform's pipeline; this loop reaps
+                        // completions next tick instead of stalling behind
+                        // a large swap-out or a REAP prefetch. Errors (a
+                        // failed job surfacing at reap, a failed action)
+                        // must not vanish silently.
                         if let Err(e) = platform.policy_tick_nowait(epoch_ns(epoch)) {
                             eprintln!("policy tick error: {e:#}");
                         }
@@ -260,10 +261,11 @@ impl Server {
         if let Some(h) = self.policy_thread.take() {
             let _ = h.join();
         }
-        // Settle any deflations the last tick left in flight, so shutdown
-        // hands back a quiescent platform (and surfaces their errors).
-        if let Err(e) = self.platform.drain_deflations() {
-            eprintln!("deflation error surfaced at shutdown: {e:#}");
+        // Settle any pipeline jobs (deflations, inflations, teardowns) the
+        // last tick left in flight, so shutdown hands back a quiescent
+        // platform (and surfaces their errors).
+        if let Err(e) = self.platform.drain_pipeline() {
+            eprintln!("pipeline error surfaced at shutdown: {e:#}");
         }
         if let Err(e) = self.platform.save_predictor_state() {
             eprintln!("predictor: failed to persist state on shutdown ({e:#})");

@@ -23,14 +23,16 @@
 //! state), so the snapshot — and with it every policy decision — is the
 //! same at `--workers 1` and `--workers 8`.
 //!
-//! Deflation runs on the platform's off-lock worker pool
-//! ([`crate::platform::deflate`]), so a policy tick only *submits* the
-//! expensive swap-out I/O. The engine **drains the pool after every tick
-//! batch** (and thus before every event serve and every epoch barrier):
-//! by the time anything can observe a shard, every deflated instance is
-//! fully swapped, unreserved and folded into the counters, making results
-//! independent of both the replay worker count *and* the deflation worker
-//! count.
+//! Deflations, anticipatory inflations and eviction teardowns run on the
+//! platform's off-tick worker pool ([`crate::platform::pipeline`]), so a
+//! policy tick only *submits* the expensive I/O. The engine **drains the
+//! pool after every tick batch** (and thus before every event serve and
+//! every epoch barrier): by the time anything can observe a shard, every
+//! submitted instance is fully transitioned, unreserved and folded into
+//! the counters, making results independent of both the replay worker
+//! count *and* the pipeline worker count. (The backpressure cap is forced
+//! off under strict determinism — shed decisions read the real-time queue
+//! depth.)
 //!
 //! Two sources of nondeterminism are fenced off by configuration:
 //! cross-sandbox file-page sharing (a cache hit depends on *which sandbox
@@ -294,12 +296,13 @@ impl<'p> ReplayEngine<'p> {
                 for &s in owned {
                     self.platform.policy_tick_shard(s, t, memory_used)?;
                 }
-                // Deflations submitted by this tick run concurrently on
-                // the pool; drain before anything can observe the shards,
-                // so routing decisions (and freed memory) never depend on
-                // real-time deflation progress — the off-lock pipeline's
-                // determinism contract.
-                self.platform.drain_deflations()?;
+                // Pipeline jobs (deflations, anticipatory inflations,
+                // eviction teardowns) submitted by this tick run
+                // concurrently on the pool; drain before anything can
+                // observe the shards, so routing decisions (and the memory
+                // they free or prefetch) never depend on real-time I/O
+                // progress — the off-tick pipeline's determinism contract.
+                self.platform.drain_pipeline()?;
             }
             out.push((idx, self.platform.request_at(&ev.workload, ev.at_ns)?));
             *cursor += 1;
@@ -308,7 +311,7 @@ impl<'p> ReplayEngine<'p> {
             for &s in owned {
                 self.platform.policy_tick_shard(s, t, memory_used)?;
             }
-            self.platform.drain_deflations()?;
+            self.platform.drain_pipeline()?;
         }
         Ok(())
     }
@@ -346,6 +349,11 @@ pub fn run_scenario(
         // whatever a previous process learned — external mutable state
         // that must not leak into a reproducible replay.
         cfg.predictor_state_file.clear();
+        // Backpressure sheds key off the *real-time* pipeline queue depth
+        // (how fast workers drain is a wall-clock race), so a capped queue
+        // could shed different jobs at different worker counts. Replay
+        // keeps the pipeline but unbounds the queue.
+        cfg.policy.pipeline_queue_cap = 0;
     }
     let platform = Platform::new(cfg, std::sync::Arc::new(NoopRunner))?;
     for spec in &run.specs {

@@ -1,6 +1,7 @@
 //! Per-sandbox swap files: real files, real I/O (Fig. 5).
 //!
-//! Two files per sandbox:
+//! Two files per sandbox, both built on the same **stable-slot** mechanics
+//! ([`SlotFile`]):
 //! * **swap file** — a stable array of page-sized *slots*. A slot is
 //!   allocated when a page is first swapped out and keeps its offset for
 //!   the life of the mapping: repeat hibernation rewrites a page's image
@@ -8,13 +9,18 @@
 //!   cycle's I/O is proportional to the *changed* working set, never to
 //!   the resident set. Freed slots go on a free list and are reused.
 //!   Read with random `pread` at page-fault swap-in.
-//! * **REAP file** — written with one scatter `pwritev` of the recorded
-//!   working set, read back with one `preadv` batch.
+//! * **REAP file** — the same slot treatment, keyed by working-set page:
+//!   a page keeps its REAP slot across REAP hibernate/wake cycles, so a
+//!   steady-state REAP hibernate rewrites in place only the pages whose
+//!   recorded image went stale (new to the working set, faulted back from
+//!   the swap file, or dirtied) — an untouched cycle writes **0 bytes**.
+//!   Written with sorted, coalesced scatter `pwritev` runs; read back
+//!   with the matching coalesced `preadv` batch at wake.
 //!
-//! Every slot remap (alloc, free, rewrite, reset) bumps a **layout
-//! epoch**; readers that cache anything derived from the file layout (the
-//! swap manager's host-readahead window) compare epochs before trusting
-//! the cache, so a stale window can never hide a device read.
+//! Every slot remap (alloc, free, rewrite, reset) bumps that file's
+//! **layout epoch**; readers that cache anything derived from the file
+//! layout (the swap manager's host-readahead window) compare epochs before
+//! trusting the cache, so a stale window can never hide a device read.
 //!
 //! Both files are deleted when the [`SwapFileSet`] drops (sandbox
 //! termination).
@@ -26,88 +32,74 @@ use std::fs::{File, OpenOptions};
 use std::os::unix::io::AsRawFd;
 use std::path::{Path, PathBuf};
 
-/// Offset (bytes) of a page image within a swap file.
+/// Offset (bytes) of a page image within a swap or REAP file.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub struct SwapSlot(pub u64);
 
-/// The pair of files backing one sandbox's hibernation.
-pub struct SwapFileSet {
-    dir: PathBuf,
-    swap_path: PathBuf,
-    reap_path: PathBuf,
-    swap: File,
-    reap: File,
-    /// High-water mark of the swap file (bytes); slots live in `[0, len)`.
-    swap_len: u64,
-    /// Slots released by [`Self::free_slot`], available for reuse.
-    free_slots: Vec<u64>,
+/// One stable-slot page-image file: the shared mechanics behind the swap
+/// file and the REAP file (allocation, free list, layout epoch, coalesced
+/// scatter I/O).
+struct SlotFile {
+    file: File,
+    path: PathBuf,
+    /// High-water mark (bytes); slots live in `[0, len)`.
+    len: u64,
+    /// Slots released by [`Self::release`], available for reuse.
+    free: Vec<u64>,
     /// Bumped on every slot remap or rewrite (see module docs).
-    layout_epoch: u64,
+    epoch: u64,
 }
 
-impl SwapFileSet {
-    /// Create the file pair under `dir` for sandbox `id`.
-    pub fn create(dir: &Path, id: u64) -> Result<Self> {
-        std::fs::create_dir_all(dir)
-            .with_context(|| format!("creating swap dir {}", dir.display()))?;
-        let swap_path = dir.join(format!("sandbox-{id}.swap"));
-        let reap_path = dir.join(format!("sandbox-{id}.reap"));
-        let open = |p: &Path| -> Result<File> {
-            OpenOptions::new()
-                .read(true)
-                .write(true)
-                .create(true)
-                .truncate(true)
-                .open(p)
-                .with_context(|| format!("opening {}", p.display()))
-        };
+impl SlotFile {
+    fn open(path: PathBuf) -> Result<Self> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .with_context(|| format!("opening {}", path.display()))?;
         Ok(Self {
-            swap: open(&swap_path)?,
-            reap: open(&reap_path)?,
-            dir: dir.to_path_buf(),
-            swap_path,
-            reap_path,
-            swap_len: 0,
-            free_slots: Vec::new(),
-            layout_epoch: 0,
+            file,
+            path,
+            len: 0,
+            free: Vec::new(),
+            epoch: 0,
         })
     }
 
-    pub fn dir(&self) -> &Path {
-        &self.dir
-    }
-
-    /// Append one page image to the swap file, returning its slot.
-    pub fn append_page(&mut self, data: &[u8]) -> Result<SwapSlot> {
-        if data.len() != PAGE_SIZE {
-            bail!("swap pages are exactly {PAGE_SIZE} bytes");
-        }
-        let slot = SwapSlot(self.swap_len);
-        pwrite_all(&self.swap, data, slot.0)?;
-        self.swap_len += PAGE_SIZE as u64;
-        self.layout_epoch += 1;
-        Ok(slot)
-    }
-
-    /// Allocate a stable slot for a page image: reuses a freed slot when
-    /// one exists, otherwise extends the file. The slot keeps its offset
-    /// until [`Self::free_slot`] or [`Self::reset_swap`].
-    pub fn alloc_slot(&mut self) -> SwapSlot {
-        self.layout_epoch += 1;
-        if let Some(off) = self.free_slots.pop() {
+    /// Allocate a stable slot: reuses a freed slot when one exists,
+    /// otherwise extends the file. The slot keeps its offset until
+    /// [`Self::release`] or [`Self::reset`].
+    fn alloc(&mut self) -> SwapSlot {
+        self.epoch += 1;
+        if let Some(off) = self.free.pop() {
             return SwapSlot(off);
         }
-        let slot = SwapSlot(self.swap_len);
-        self.swap_len += PAGE_SIZE as u64;
+        let slot = SwapSlot(self.len);
+        self.len += PAGE_SIZE as u64;
         slot
     }
 
-    /// Return a slot to the free list (its page is no longer mapped
-    /// anywhere). The file is not shrunk — the offset is simply reusable.
-    pub fn free_slot(&mut self, slot: SwapSlot) {
-        debug_assert!(slot.0 % PAGE_SIZE as u64 == 0 && slot.0 < self.swap_len);
-        self.layout_epoch += 1;
-        self.free_slots.push(slot.0);
+    /// Return a slot to the free list. The file is not shrunk — the offset
+    /// is simply reusable.
+    fn release(&mut self, slot: SwapSlot) {
+        debug_assert!(slot.0 % PAGE_SIZE as u64 == 0 && slot.0 < self.len);
+        self.epoch += 1;
+        self.free.push(slot.0);
+    }
+
+    fn live(&self) -> u64 {
+        self.len / PAGE_SIZE as u64 - self.free.len() as u64
+    }
+
+    /// Forget every slot and truncate the file.
+    fn reset(&mut self) -> Result<()> {
+        self.file.set_len(0)?;
+        self.len = 0;
+        self.free.clear();
+        self.epoch += 1;
+        Ok(())
     }
 
     /// Write page images at their (pre-allocated) slots. Slots need not be
@@ -115,62 +107,168 @@ impl SwapFileSet {
     /// runs are coalesced into scatter `pwritev` batches (≤ IOV_MAX iovecs
     /// per syscall — §Perf #1), so a mostly-in-order delta still goes out
     /// in a handful of syscalls. Returns bytes written.
-    pub fn write_pages_at(&mut self, writes: &[(SwapSlot, &[u8])]) -> Result<u64> {
+    fn write_at(&mut self, writes: &[(SwapSlot, &[u8])]) -> Result<u64> {
         if writes.is_empty() {
             return Ok(0);
         }
-        self.layout_epoch += 1;
-        let mut order: Vec<usize> = (0..writes.len()).collect();
-        order.sort_unstable_by_key(|&i| writes[i].0 .0);
-        let mut written = 0u64;
-        let mut run = 0usize;
-        while run < order.len() {
-            let mut end = run + 1;
-            while end < order.len()
-                && writes[order[end]].0 .0
-                    == writes[order[end - 1]].0 .0 + PAGE_SIZE as u64
-            {
-                end += 1;
-            }
-            let base = writes[order[run]].0 .0;
-            debug_assert!(base + ((end - run) * PAGE_SIZE) as u64 <= self.swap_len);
-            let iovs: Vec<libc::iovec> = order[run..end]
-                .iter()
-                .map(|&k| {
-                    let p = writes[k].1;
-                    assert_eq!(p.len(), PAGE_SIZE);
-                    libc::iovec {
-                        iov_base: p.as_ptr() as *mut libc::c_void,
-                        iov_len: p.len(),
-                    }
-                })
-                .collect();
-            let mut done = 0u64;
-            let mut iov_idx = 0usize;
-            while iov_idx < iovs.len() {
-                let batch = &iovs[iov_idx..(iov_idx + 1024).min(iovs.len())];
-                // SAFETY: iovecs point into caller-held page slices.
-                let n = unsafe {
-                    libc::pwritev(
-                        self.swap.as_raw_fd(),
+        self.epoch += 1;
+        let items: Vec<(u64, *const u8)> = writes
+            .iter()
+            .map(|(slot, p)| {
+                assert_eq!(p.len(), PAGE_SIZE);
+                (slot.0, p.as_ptr())
+            })
+            .collect();
+        for (off, _) in &items {
+            debug_assert!(off % PAGE_SIZE as u64 == 0 && *off < self.len);
+        }
+        coalesced_io(&self.file, items, IoDir::Write)
+    }
+
+    /// Read page images from their slots into per-slot page buffers — the
+    /// mirror of [`Self::write_at`]: sorted by offset, contiguous runs
+    /// coalesced into `preadv` batches. Returns bytes read.
+    fn read_at(&self, reads: &mut [(SwapSlot, &mut [u8])]) -> Result<u64> {
+        if reads.is_empty() {
+            return Ok(0);
+        }
+        let items: Vec<(u64, *const u8)> = reads
+            .iter_mut()
+            .map(|(slot, b)| {
+                assert_eq!(b.len(), PAGE_SIZE);
+                (slot.0, b.as_mut_ptr() as *const u8)
+            })
+            .collect();
+        coalesced_io(&self.file, items, IoDir::Read)
+    }
+}
+
+#[derive(Clone, Copy)]
+enum IoDir {
+    Write,
+    Read,
+}
+
+/// Sort `(offset, page_ptr)` items, coalesce contiguous runs, and issue
+/// one `pwritev`/`preadv` loop per run (≤ 1024 iovecs per syscall).
+///
+/// SAFETY contract: every pointer addresses one exclusive page-sized
+/// buffer that outlives the call (for reads the buffers are writable —
+/// the `*const` is only a unified carrier type).
+fn coalesced_io(file: &File, mut items: Vec<(u64, *const u8)>, dir: IoDir) -> Result<u64> {
+    items.sort_unstable_by_key(|&(off, _)| off);
+    let mut total = 0u64;
+    let mut run = 0usize;
+    while run < items.len() {
+        let mut end = run + 1;
+        while end < items.len() && items[end].0 == items[end - 1].0 + PAGE_SIZE as u64 {
+            end += 1;
+        }
+        let base = items[run].0;
+        let iovs: Vec<libc::iovec> = items[run..end]
+            .iter()
+            .map(|&(_, p)| libc::iovec {
+                iov_base: p as *mut libc::c_void,
+                iov_len: PAGE_SIZE,
+            })
+            .collect();
+        let mut done = 0u64;
+        let mut iov_idx = 0usize;
+        while iov_idx < iovs.len() {
+            let batch = &iovs[iov_idx..(iov_idx + 1024).min(iovs.len())];
+            // SAFETY: iovecs point into caller-held exclusive page buffers
+            // (see the function's safety contract).
+            let n = unsafe {
+                match dir {
+                    IoDir::Write => libc::pwritev(
+                        file.as_raw_fd(),
                         batch.as_ptr(),
                         batch.len() as libc::c_int,
                         (base + done) as libc::off_t,
-                    )
-                };
-                if n < 0 {
-                    bail!("pwritev failed: {}", std::io::Error::last_os_error());
+                    ),
+                    IoDir::Read => libc::preadv(
+                        file.as_raw_fd(),
+                        batch.as_ptr(),
+                        batch.len() as libc::c_int,
+                        (base + done) as libc::off_t,
+                    ),
                 }
-                if n as usize % PAGE_SIZE != 0 {
-                    bail!("short pwritev not page-multiple: {n}");
-                }
-                done += n as u64;
-                iov_idx += n as usize / PAGE_SIZE;
+            };
+            if n < 0 {
+                bail!(
+                    "{} failed: {}",
+                    match dir {
+                        IoDir::Write => "pwritev",
+                        IoDir::Read => "preadv",
+                    },
+                    std::io::Error::last_os_error()
+                );
             }
-            written += done;
-            run = end;
+            if n == 0 {
+                bail!("vectored I/O hit EOF (offset {})", base + done);
+            }
+            if n as usize % PAGE_SIZE != 0 {
+                bail!("short vectored I/O not page-multiple: {n}");
+            }
+            done += n as u64;
+            iov_idx += n as usize / PAGE_SIZE;
         }
-        Ok(written)
+        total += done;
+        run = end;
+    }
+    Ok(total)
+}
+
+/// The pair of files backing one sandbox's hibernation.
+pub struct SwapFileSet {
+    dir: PathBuf,
+    swap: SlotFile,
+    reap: SlotFile,
+}
+
+impl SwapFileSet {
+    /// Create the file pair under `dir` for sandbox `id`.
+    pub fn create(dir: &Path, id: u64) -> Result<Self> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating swap dir {}", dir.display()))?;
+        Ok(Self {
+            swap: SlotFile::open(dir.join(format!("sandbox-{id}.swap")))?,
+            reap: SlotFile::open(dir.join(format!("sandbox-{id}.reap")))?,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Allocate a fresh swap slot and write one page image into it.
+    pub fn append_page(&mut self, data: &[u8]) -> Result<SwapSlot> {
+        if data.len() != PAGE_SIZE {
+            bail!("swap pages are exactly {PAGE_SIZE} bytes");
+        }
+        let slot = self.swap.alloc();
+        self.swap.write_at(&[(slot, data)])?;
+        Ok(slot)
+    }
+
+    /// Allocate a stable swap slot for a page image: reuses a freed slot
+    /// when one exists, otherwise extends the file. The slot keeps its
+    /// offset until [`Self::free_slot`] or [`Self::reset_swap`].
+    pub fn alloc_slot(&mut self) -> SwapSlot {
+        self.swap.alloc()
+    }
+
+    /// Return a swap slot to the free list (its page is no longer mapped
+    /// anywhere). The file is not shrunk — the offset is simply reusable.
+    pub fn free_slot(&mut self, slot: SwapSlot) {
+        self.swap.release(slot)
+    }
+
+    /// Write page images at their (pre-allocated) swap slots — see
+    /// [`SlotFile::write_at`] for the coalescing. Returns bytes written.
+    pub fn write_pages_at(&mut self, writes: &[(SwapSlot, &[u8])]) -> Result<u64> {
+        self.swap.write_at(writes)
     }
 
     /// Random read of one page image directly into a caller buffer that is
@@ -178,7 +276,7 @@ impl SwapFileSet {
     pub fn read_page_into(&self, slot: SwapSlot, dst: *mut u8) -> Result<()> {
         // SAFETY: caller guarantees dst points at one owned page.
         let buf = unsafe { std::slice::from_raw_parts_mut(dst, PAGE_SIZE) };
-        pread_all(&self.swap, buf, slot.0)
+        pread_all(&self.swap.file, buf, slot.0)
     }
 
     /// Random read of one page image (the page-fault swap-in path).
@@ -186,157 +284,88 @@ impl SwapFileSet {
         if out.len() != PAGE_SIZE {
             bail!("swap pages are exactly {PAGE_SIZE} bytes");
         }
-        pread_all(&self.swap, out, slot.0)
+        pread_all(&self.swap.file, out, slot.0)
     }
 
     /// Reset the swap file completely (every slot forgotten). Delta
     /// swap-out never needs this; it remains for explicit full resets.
     pub fn reset_swap(&mut self) -> Result<()> {
-        self.swap.set_len(0)?;
-        self.swap_len = 0;
-        self.free_slots.clear();
-        self.layout_epoch += 1;
-        Ok(())
+        self.swap.reset()
     }
 
     /// High-water size of the swap file in bytes (allocated + freed slots).
     pub fn swap_len(&self) -> u64 {
-        self.swap_len
+        self.swap.len
     }
 
-    /// Slots currently holding a live page image.
+    /// Swap slots currently holding a live page image.
     pub fn live_slots(&self) -> u64 {
-        self.swap_len / PAGE_SIZE as u64 - self.free_slots.len() as u64
+        self.swap.live()
     }
 
-    /// Layout epoch: changes whenever a slot is allocated, freed,
+    /// Swap-file layout epoch: changes whenever a slot is allocated, freed,
     /// rewritten or the file is reset. Callers caching layout-derived
     /// state (readahead windows) must revalidate against this.
     pub fn layout_epoch(&self) -> u64 {
-        self.layout_epoch
+        self.swap.epoch
     }
 
-    /// REAP swap-out: write all working-set pages with one scatter
-    /// `pwritev` at offset 0 (§3.4.2 step c). `pages` are borrowed page
-    /// images in record order.
-    pub fn write_reap(&mut self, pages: &[&[u8]]) -> Result<u64> {
-        self.reap.set_len(0)?;
-        if pages.is_empty() {
-            return Ok(0);
-        }
-        let iovs: Vec<libc::iovec> = pages
-            .iter()
-            .map(|p| {
-                assert_eq!(p.len(), PAGE_SIZE);
-                libc::iovec {
-                    iov_base: p.as_ptr() as *mut libc::c_void,
-                    iov_len: p.len(),
-                }
-            })
-            .collect();
-        let total = (pages.len() * PAGE_SIZE) as u64;
-        let mut written = 0u64;
-        let mut iov_idx = 0usize;
-        // IOV_MAX batching: pwritev accepts at most IOV_MAX iovecs per call.
-        while iov_idx < iovs.len() {
-            let batch = &iovs[iov_idx..(iov_idx + 1024).min(iovs.len())];
-            // SAFETY: iovecs point into caller-held page slices.
-            let n = unsafe {
-                libc::pwritev(
-                    self.reap.as_raw_fd(),
-                    batch.as_ptr(),
-                    batch.len() as libc::c_int,
-                    written as libc::off_t,
-                )
-            };
-            if n < 0 {
-                bail!("pwritev failed: {}", std::io::Error::last_os_error());
-            }
-            if n as usize % PAGE_SIZE != 0 {
-                bail!("short pwritev not page-multiple: {n}");
-            }
-            written += n as u64;
-            iov_idx += n as usize / PAGE_SIZE;
-        }
-        debug_assert_eq!(written, total);
-        Ok(written)
+    /// Allocate a stable REAP slot (same semantics as [`Self::alloc_slot`],
+    /// against the REAP file).
+    pub fn alloc_reap_slot(&mut self) -> SwapSlot {
+        self.reap.alloc()
     }
 
-    /// REAP swap-in: one batched sequential `preadv` of the whole REAP file
-    /// into the caller's scatter buffers (§3.4.2 swap-in step 1).
-    pub fn read_reap(&self, bufs: &mut [&mut [u8]]) -> Result<u64> {
-        if bufs.is_empty() {
-            return Ok(0);
-        }
-        let mut iovs: Vec<libc::iovec> = bufs
-            .iter_mut()
-            .map(|b| {
-                assert_eq!(b.len(), PAGE_SIZE);
-                libc::iovec {
-                    iov_base: b.as_mut_ptr() as *mut libc::c_void,
-                    iov_len: b.len(),
-                }
-            })
-            .collect();
-        let mut read = 0u64;
-        let mut iov_idx = 0usize;
-        while iov_idx < iovs.len() {
-            let batch = &mut iovs[iov_idx..(iov_idx + 1024).min(bufs.len())];
-            // SAFETY: iovecs point into caller-held distinct buffers.
-            let n = unsafe {
-                libc::preadv(
-                    self.reap.as_raw_fd(),
-                    batch.as_ptr(),
-                    batch.len() as libc::c_int,
-                    read as libc::off_t,
-                )
-            };
-            if n < 0 {
-                bail!("preadv failed: {}", std::io::Error::last_os_error());
-            }
-            if n == 0 {
-                bail!("REAP file shorter than expected");
-            }
-            if n as usize % PAGE_SIZE != 0 {
-                bail!("short preadv not page-multiple: {n}");
-            }
-            read += n as u64;
-            iov_idx += n as usize / PAGE_SIZE;
-        }
-        Ok(read)
+    /// Return a REAP slot to the REAP free list (its page left the recorded
+    /// working set).
+    pub fn free_reap_slot(&mut self, slot: SwapSlot) {
+        self.reap.release(slot)
     }
 
-    pub fn reap_len(&self) -> Result<u64> {
-        Ok(self.reap.metadata()?.len())
+    /// REAP swap-out: write working-set page images at their stable REAP
+    /// slots with sorted, coalesced scatter `pwritev` runs (§3.4.2 step c —
+    /// now a delta: callers pass only the stale pages). Returns bytes
+    /// written.
+    pub fn write_reap_pages_at(&mut self, writes: &[(SwapSlot, &[u8])]) -> Result<u64> {
+        self.reap.write_at(writes)
+    }
+
+    /// REAP swap-in: one coalesced `preadv` batch of the recorded working
+    /// set from its REAP slots into the caller's scatter buffers (§3.4.2
+    /// swap-in step 1). Returns bytes read.
+    pub fn read_reap_pages_at(&self, reads: &mut [(SwapSlot, &mut [u8])]) -> Result<u64> {
+        self.reap.read_at(reads)
+    }
+
+    /// Reset the REAP file completely (every REAP slot forgotten).
+    pub fn reset_reap(&mut self) -> Result<()> {
+        self.reap.reset()
+    }
+
+    /// High-water size of the REAP file in bytes (allocated + freed slots).
+    pub fn reap_len(&self) -> u64 {
+        self.reap.len
+    }
+
+    /// REAP slots currently holding a live working-set page image.
+    pub fn reap_live_slots(&self) -> u64 {
+        self.reap.live()
+    }
+
+    /// REAP-file layout epoch (independent of the swap file's, so REAP
+    /// cycles never spuriously invalidate the fault path's readahead
+    /// window).
+    pub fn reap_layout_epoch(&self) -> u64 {
+        self.reap.epoch
     }
 }
 
 impl Drop for SwapFileSet {
     fn drop(&mut self) {
         // "these files are deleted when the sandbox terminates"
-        let _ = std::fs::remove_file(&self.swap_path);
-        let _ = std::fs::remove_file(&self.reap_path);
+        let _ = std::fs::remove_file(&self.swap.path);
+        let _ = std::fs::remove_file(&self.reap.path);
     }
-}
-
-fn pwrite_all(f: &File, mut buf: &[u8], mut off: u64) -> Result<()> {
-    while !buf.is_empty() {
-        // SAFETY: buf in-bounds.
-        let n = unsafe {
-            libc::pwrite(
-                f.as_raw_fd(),
-                buf.as_ptr() as *const libc::c_void,
-                buf.len(),
-                off as libc::off_t,
-            )
-        };
-        if n < 0 {
-            bail!("pwrite failed: {}", std::io::Error::last_os_error());
-        }
-        buf = &buf[n as usize..];
-        off += n as u64;
-    }
-    Ok(())
 }
 
 fn pread_all(f: &File, mut buf: &mut [u8], mut off: u64) -> Result<()> {
@@ -403,34 +432,99 @@ mod tests {
     }
 
     #[test]
-    fn reap_scatter_roundtrip() {
+    fn reap_slots_scatter_roundtrip() {
         let dir = tmpdir("b");
         let mut fs = SwapFileSet::create(&dir, 2).unwrap();
         let pages: Vec<Vec<u8>> = (0..50)
             .map(|i| test_pattern(Gpa(i * 0x1000)))
             .collect();
-        let refs: Vec<&[u8]> = pages.iter().map(|p| p.as_slice()).collect();
-        let written = fs.write_reap(&refs).unwrap();
+        let slots: Vec<SwapSlot> = (0..50).map(|_| fs.alloc_reap_slot()).collect();
+        // Write out of order: the sorter must coalesce everything.
+        let writes: Vec<(SwapSlot, &[u8])> = slots
+            .iter()
+            .zip(&pages)
+            .rev()
+            .map(|(&s, p)| (s, p.as_slice()))
+            .collect();
+        let written = fs.write_reap_pages_at(&writes).unwrap();
         assert_eq!(written, 50 * PAGE_SIZE as u64);
-        assert_eq!(fs.reap_len().unwrap(), written);
+        assert_eq!(fs.reap_len(), written);
+        assert_eq!(fs.reap_live_slots(), 50);
         let mut bufs: Vec<Vec<u8>> = (0..50).map(|_| vec![0u8; PAGE_SIZE]).collect();
-        let mut mrefs: Vec<&mut [u8]> = bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
-        let read = fs.read_reap(&mut mrefs).unwrap();
+        let mut reads: Vec<(SwapSlot, &mut [u8])> = slots
+            .iter()
+            .zip(bufs.iter_mut())
+            .map(|(&s, b)| (s, b.as_mut_slice()))
+            .collect();
+        let read = fs.read_reap_pages_at(&mut reads).unwrap();
         assert_eq!(read, written);
         assert_eq!(bufs, pages);
     }
 
     #[test]
-    fn reap_rewrite_truncates() {
+    fn reap_slots_are_stable_gcd_and_reused() {
+        // The delta-REAP layout: a shrunk working set frees slots, and the
+        // next cycle's new pages reuse them instead of growing the file.
         let dir = tmpdir("c");
         let mut fs = SwapFileSet::create(&dir, 3).unwrap();
-        let big: Vec<Vec<u8>> = (0..10).map(|i| test_pattern(Gpa(i * 0x1000))).collect();
-        let refs: Vec<&[u8]> = big.iter().map(|p| p.as_slice()).collect();
-        fs.write_reap(&refs).unwrap();
-        let small = [test_pattern(Gpa(0))];
-        let refs: Vec<&[u8]> = small.iter().map(|p| p.as_slice()).collect();
-        fs.write_reap(&refs).unwrap();
-        assert_eq!(fs.reap_len().unwrap(), PAGE_SIZE as u64);
+        let slots: Vec<SwapSlot> = (0..10).map(|_| fs.alloc_reap_slot()).collect();
+        let pages: Vec<Vec<u8>> = (0..10).map(|i| test_pattern(Gpa(i * 0x1000))).collect();
+        let writes: Vec<(SwapSlot, &[u8])> = slots
+            .iter()
+            .zip(&pages)
+            .map(|(&s, p)| (s, p.as_slice()))
+            .collect();
+        fs.write_reap_pages_at(&writes).unwrap();
+        let high_water = fs.reap_len();
+        // In-place rewrite keeps neighbors intact.
+        let newp = test_pattern(Gpa(0x9000));
+        fs.write_reap_pages_at(&[(slots[3], &newp)]).unwrap();
+        let mut buf = vec![0u8; PAGE_SIZE];
+        let mut reads = [(slots[3], buf.as_mut_slice())];
+        fs.read_reap_pages_at(&mut reads).unwrap();
+        assert_eq!(buf, newp);
+        let mut buf2 = vec![0u8; PAGE_SIZE];
+        let mut reads = [(slots[2], buf2.as_mut_slice())];
+        fs.read_reap_pages_at(&mut reads).unwrap();
+        assert_eq!(buf2, pages[2], "neighbors untouched by in-place rewrite");
+        // Free 4, realloc 4: offsets reused, no growth.
+        for &s in &slots[..4] {
+            fs.free_reap_slot(s);
+        }
+        assert_eq!(fs.reap_live_slots(), 6);
+        for _ in 0..4 {
+            let s = fs.alloc_reap_slot();
+            assert!(s.0 < high_water, "freed REAP slot must be reused");
+        }
+        assert_eq!(fs.reap_len(), high_water, "reuse must not grow the file");
+        assert_eq!(fs.reap_live_slots(), 10);
+    }
+
+    #[test]
+    fn reap_layout_epoch_bumps_independently() {
+        let dir = tmpdir("j");
+        let mut fs = SwapFileSet::create(&dir, 10).unwrap();
+        let swap_e0 = fs.layout_epoch();
+        let e0 = fs.reap_layout_epoch();
+        let s = fs.alloc_reap_slot();
+        assert!(fs.reap_layout_epoch() > e0, "alloc must bump the epoch");
+        let e1 = fs.reap_layout_epoch();
+        let p = test_pattern(Gpa(0));
+        fs.write_reap_pages_at(&[(s, &p)]).unwrap();
+        assert!(fs.reap_layout_epoch() > e1, "rewrite must bump the epoch");
+        let e2 = fs.reap_layout_epoch();
+        fs.free_reap_slot(s);
+        assert!(fs.reap_layout_epoch() > e2, "free must bump the epoch");
+        let e3 = fs.reap_layout_epoch();
+        fs.reset_reap().unwrap();
+        assert!(fs.reap_layout_epoch() > e3, "reset must bump the epoch");
+        assert_eq!(fs.reap_live_slots(), 0);
+        assert_eq!(
+            fs.layout_epoch(),
+            swap_e0,
+            "REAP remaps must never invalidate the swap file's epoch \
+             (the fault path's readahead window keys off it)"
+        );
     }
 
     #[test]
@@ -543,18 +637,43 @@ mod tests {
 
     #[test]
     fn large_reap_batches_over_iov_max() {
-        // > 1024 iovecs exercises the batching loop.
+        // > 1024 iovecs exercises the batching loop on both directions.
         let dir = tmpdir("f");
         let mut fs = SwapFileSet::create(&dir, 6).unwrap();
+        let slots: Vec<SwapSlot> = (0..1500).map(|_| fs.alloc_reap_slot()).collect();
         let pages: Vec<Vec<u8>> = (0..1500)
             .map(|i| test_pattern(Gpa(i * 0x1000)))
             .collect();
-        let refs: Vec<&[u8]> = pages.iter().map(|p| p.as_slice()).collect();
-        let written = fs.write_reap(&refs).unwrap();
+        let writes: Vec<(SwapSlot, &[u8])> = slots
+            .iter()
+            .zip(&pages)
+            .map(|(&s, p)| (s, p.as_slice()))
+            .collect();
+        let written = fs.write_reap_pages_at(&writes).unwrap();
         assert_eq!(written, 1500 * PAGE_SIZE as u64);
         let mut bufs: Vec<Vec<u8>> = (0..1500).map(|_| vec![0u8; PAGE_SIZE]).collect();
-        let mut mrefs: Vec<&mut [u8]> = bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
-        fs.read_reap(&mut mrefs).unwrap();
+        let mut reads: Vec<(SwapSlot, &mut [u8])> = slots
+            .iter()
+            .zip(bufs.iter_mut())
+            .map(|(&s, b)| (s, b.as_mut_slice()))
+            .collect();
+        fs.read_reap_pages_at(&mut reads).unwrap();
         assert_eq!(bufs, pages);
+    }
+
+    #[test]
+    fn read_of_unwritten_tail_region_fails_loudly() {
+        // A REAP slot past every written byte has no backing data: the
+        // coalesced read must surface EOF, never hand back a zero page.
+        let dir = tmpdir("k");
+        let mut fs = SwapFileSet::create(&dir, 11).unwrap();
+        let s0 = fs.alloc_reap_slot();
+        let p = test_pattern(Gpa(0));
+        fs.write_reap_pages_at(&[(s0, &p)]).unwrap();
+        let tail = fs.alloc_reap_slot(); // never written
+        let mut buf = vec![0u8; PAGE_SIZE];
+        let mut reads = [(tail, buf.as_mut_slice())];
+        let err = fs.read_reap_pages_at(&mut reads).unwrap_err();
+        assert!(format!("{err:#}").contains("EOF"), "{err:#}");
     }
 }

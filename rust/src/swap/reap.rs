@@ -8,6 +8,13 @@
 //! currently serving its sample request? — and the §3.4.1 working-set
 //! statistics ("page fault based swap-in only loads 30% to 90% swap-out
 //! pages"; Node.js hello: ~10 MB swapped out, ~4 MB swapped back).
+//!
+//! The protocol is oblivious to *how much* a REAP swap-out writes: since
+//! the REAP file became delta-maintained (stable slots — see
+//! [`super::file`]), a `Recorded` container's repeat hibernates may write
+//! anywhere from the full working set down to zero bytes without ever
+//! re-entering `NeedRecord`; only an explicit full page-fault swap-out
+//! ([`ReapRecorder::on_full_swapout`]) resets the record.
 
 use crate::PAGE_SIZE;
 

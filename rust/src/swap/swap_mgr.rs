@@ -31,10 +31,18 @@
 //! re-marks Present. Each fault costs guest fault handling + a guest/host
 //! mode switch (15 µs) + a random 4 KiB device read — the cost stack REAP
 //! exists to avoid.
+//!
+//! REAP swap-outs are deltas too: a working-set page keeps its REAP slot
+//! across cycles, and only pages *new* to the working set, *faulted back*
+//! from the swap file since the last REAP cycle, or carrying a *dirty* PTE
+//! are rewritten in place; slots of pages that left the working set are
+//! garbage-collected onto the REAP free list. A hibernate → wake-without-
+//! touching → hibernate cycle therefore writes **zero** bytes through the
+//! REAP path as well — the inflation side of the O(dirty) contract.
 
 use super::file::{SwapFileSet, SwapSlot};
 use crate::mem::host::HostMemory;
-use crate::mem::page_table::PageTable;
+use crate::mem::page_table::{PageTable, Pte};
 use crate::mem::{Gpa, Gva};
 use crate::simtime::{Clock, CostModel};
 use crate::PAGE_SIZE;
@@ -94,6 +102,17 @@ pub struct SwapMgr {
     ra_epoch: u64,
     /// REAP working set in record order (gpas), if a REAP image exists.
     reap_set: Vec<Gpa>,
+    /// REAP de-duplication table: gpa → REAP-file slot. **Stable across
+    /// REAP cycles** — an entry lives while its gpa stays in the recorded
+    /// working set, so a steady-state REAP hibernate rewrites in place
+    /// only the pages whose recorded image went stale (mirror of `slots`
+    /// for the swap file).
+    reap_slots: HashMap<u64, SwapSlot>,
+    /// gpas restored from the *swap* file (the fault path) since the last
+    /// REAP swap-out: their frames may no longer match their REAP slot
+    /// image (the swap image is newer), so the next REAP swap-out must
+    /// rewrite them — the REAP analogue of the `resident` set.
+    reap_faulted: HashSet<u64>,
     cost: CostModel,
     stats: SwapStats,
 }
@@ -107,6 +126,8 @@ impl SwapMgr {
             resident: HashSet::new(),
             ra_window: (0, 0),
             reap_set: Vec::new(),
+            reap_slots: HashMap::new(),
+            reap_faulted: HashSet::new(),
             cost,
             stats: SwapStats::default(),
         }
@@ -123,6 +144,12 @@ impl SwapMgr {
 
     pub fn reap_set_pages(&self) -> u64 {
         self.reap_set.len() as u64
+    }
+
+    /// Live page images in the REAP file (slot-table size — equals the
+    /// recorded working set after a REAP swap-out).
+    pub fn reap_live_pages(&self) -> u64 {
+        self.files.reap_live_slots()
     }
 
     /// Page-fault based swap-out of every anonymous present page in
@@ -237,12 +264,21 @@ impl SwapMgr {
                 std::slice::from_raw_parts(host.page_ptr(gpa), PAGE_SIZE)
             }));
         }
-        report.bytes_written = self.files.write_pages_at(&writes)?;
-        // Register fresh slots only once their images are durably written:
-        // if the write errors out above, a later fault on one of these
-        // pages must fail loudly ("no swap slot"), never read an
-        // unwritten file region as data. (The allocated slots leak on that
-        // error path — file space, not correctness.)
+        report.bytes_written = match self.files.write_pages_at(&writes) {
+            Ok(n) => n,
+            Err(e) => {
+                // Fresh slots stay unregistered: a later fault on one of
+                // these pages must fail loudly ("no swap slot"), never
+                // read an unwritten file region as data. Their offsets go
+                // back to the free list so a retried cycle can't leak
+                // file space.
+                for (_, slot) in fresh_assign {
+                    self.files.free_slot(slot);
+                }
+                return Err(e);
+            }
+        };
+        // Register fresh slots only once their images are durably written.
         for (gpa, slot) in fresh_assign {
             self.slots.insert(gpa, slot);
         }
@@ -310,6 +346,10 @@ impl SwapMgr {
                 self.ra_epoch = self.files.layout_epoch();
             }
             self.resident.insert(gpa.0);
+            // The frame now carries the *swap*-file image, which post-dates
+            // whatever the REAP file recorded for this gpa: the next REAP
+            // swap-out must rewrite its REAP slot.
+            self.reap_faulted.insert(gpa.0);
             reads = 1;
             self.stats.pages_faulted_in += 1;
         }
@@ -321,20 +361,43 @@ impl SwapMgr {
 
     /// REAP swap-out (§3.4.2): the Woken-up container hibernates again;
     /// every **present anonymous** page — i.e. exactly the working set that
-    /// was faulted back in, plus request-time allocations — is written to
-    /// the REAP file with one scatter `pwritev`, *without touching the
-    /// PTEs*, then the frames are madvised away. Untouched pages remain
-    /// bit-#9-marked against the original swap file.
+    /// was faulted back in, plus request-time allocations — is recorded,
+    /// *without marking the PTEs swapped*, then the frames are madvised
+    /// away. Untouched pages remain bit-#9-marked against the original
+    /// swap file.
+    ///
+    /// Like [`Self::swap_out`], this is a **delta** pass: working-set
+    /// pages keep their REAP slots across cycles, and only pages that are
+    /// *new* to the working set, were *faulted back* from the swap file
+    /// (`reap_faulted`) or carry a *dirty* PTE are (re)written — in place.
+    /// A page whose recorded image is still current costs no I/O at all;
+    /// slots of pages that left the working set are garbage-collected for
+    /// reuse. The DIRTY bit of every written page is cleared (the slot
+    /// image just became the frame's truth), the same contract the swap
+    /// file uses.
     pub fn reap_swap_out(
         &mut self,
-        tables: &[&PageTable],
+        tables: &mut [&mut PageTable],
         host: &HostMemory,
         clock: &Clock,
     ) -> Result<SwapOutReport> {
         let mut report = SwapOutReport::default();
+
+        // Pass 1: gpas any mapping marks dirty — a frame shared by several
+        // PTEs (COW) must be rewritten if *any* mapping wrote it.
+        let mut dirty_gpas: HashSet<u64> = HashSet::new();
+        for pt in tables.iter() {
+            pt.for_each(|_gva, pte| {
+                if pte.present() && !pte.is_file() && pte.dirty() {
+                    dirty_gpas.insert(pte.gpa().0);
+                }
+            });
+        }
+
+        // Pass 2: the working set — every present anon page, deduped.
         let mut seen = HashSet::new();
         let mut working_set: Vec<Gpa> = Vec::new();
-        for pt in tables {
+        for pt in tables.iter() {
             pt.for_each(|_gva, pte| {
                 if pte.present() && !pte.is_file() {
                     report.ptes_marked += 1;
@@ -345,24 +408,99 @@ impl SwapMgr {
                 }
             });
         }
-        // Scatter-gather directly out of guest-physical (= host virtual)
-        // memory: iovecs point at the live pages, zero copies.
-        let page_refs: Vec<&[u8]> = working_set
-            .iter()
-            // SAFETY: pages are owned by this sandbox and the guest is
-            // paused; the slices live for the duration of the call.
-            .map(|&gpa| unsafe {
-                std::slice::from_raw_parts(host.page_ptr(gpa), PAGE_SIZE)
-            })
+
+        // Garbage-collect REAP slots whose page left the working set
+        // (freed scratch, unmapped regions): their offsets are reusable by
+        // this very cycle's new pages, so the file does not grow unbounded.
+        let stale: Vec<u64> = self
+            .reap_slots
+            .keys()
+            .filter(|g| !seen.contains(*g))
+            .copied()
             .collect();
-        report.bytes_written = self.files.write_reap(&page_refs)?;
-        report.unique_pages = working_set.len() as u64;
+        for g in stale {
+            let slot = self.reap_slots.remove(&g).expect("stale key just listed");
+            self.files.free_reap_slot(slot);
+        }
+
+        // Classify and write the delta, scatter `pwritev` straight out of
+        // guest-physical memory (the guest is paused, so the frames are
+        // stable). New pages get slots (reusing freed offsets); stale
+        // images are rewritten in place; current images are skipped.
+        let mut writes: Vec<(SwapSlot, &[u8])> = Vec::new();
+        let mut fresh_assign: Vec<(u64, SwapSlot)> = Vec::with_capacity(4);
+        let mut written_gpas: HashSet<u64> = HashSet::new();
+        for &gpa in &working_set {
+            let slot = match self.reap_slots.get(&gpa.0) {
+                Some(&slot) => {
+                    if !(self.reap_faulted.contains(&gpa.0)
+                        || dirty_gpas.contains(&gpa.0))
+                    {
+                        continue; // recorded image still current: no I/O
+                    }
+                    slot
+                }
+                None => {
+                    let slot = self.files.alloc_reap_slot();
+                    fresh_assign.push((gpa.0, slot));
+                    slot
+                }
+            };
+            written_gpas.insert(gpa.0);
+            // SAFETY: frames owned by this sandbox; guest paused.
+            writes.push((slot, unsafe {
+                std::slice::from_raw_parts(host.page_ptr(gpa), PAGE_SIZE)
+            }));
+        }
+        report.bytes_written = match self.files.write_reap_pages_at(&writes) {
+            Ok(n) => n,
+            Err(e) => {
+                // A partial batch leaves the slots in an unknown mix of old
+                // and new images: the recorded set is no longer
+                // trustworthy, so drop it — the frames are still resident
+                // (nothing was discarded) and future wakes simply have no
+                // image to prefetch. Stale pages keep their DIRTY/
+                // `reap_faulted` marks (cleared only after a successful
+                // write), so the next successful REAP cycle rewrites them;
+                // the never-registered fresh slots go back to the free
+                // list so retries can't leak file space.
+                self.reap_set.clear();
+                for (_, slot) in fresh_assign {
+                    self.files.free_reap_slot(slot);
+                }
+                return Err(e);
+            }
+        };
+        // Register fresh slots only once their images are durably written
+        // (same durability rule as the swap file: an errored write must
+        // never leave a slot that reads unwritten file bytes as data).
+        for (gpa, slot) in fresh_assign {
+            self.reap_slots.insert(gpa, slot);
+        }
+        report.unique_pages = writes.len() as u64;
         report.live_pages = self.slots.len() as u64;
         clock.charge(self.cost.seq_write_ns(report.bytes_written));
 
+        // The written images are the frames' truth again: clear DIRTY so
+        // an untouched next cycle counts them clean (writers re-mark it,
+        // the way the MMU would).
+        for pt in tables.iter_mut() {
+            pt.for_each_mut(|_gva, pte| {
+                if pte.present() && !pte.is_file() && written_gpas.contains(&pte.gpa().0)
+                {
+                    pte.without(Pte::DIRTY)
+                } else {
+                    pte
+                }
+            });
+        }
+
+        // The frames leave the host — the whole working set, written this
+        // cycle or carried.
         report.pages_discarded = host.discard_pages(&working_set)?;
-        clock.charge(self.cost.madvise_ns(report.unique_pages));
+        clock.charge(self.cost.madvise_ns(report.pages_discarded));
         self.resident.clear();
+        self.reap_faulted.clear();
 
         self.reap_set = working_set;
         self.stats.reap_swapouts += 1;
@@ -370,24 +508,31 @@ impl SwapMgr {
         Ok(report)
     }
 
-    /// REAP swap-in (§3.4.2): one batched sequential `preadv` straight into
+    /// REAP swap-in (§3.4.2): one coalesced `preadv` batch straight into
     /// the recorded frames, then the guest resumes with its working set hot.
     /// Returns pages prefetched.
     pub fn reap_swap_in(&mut self, host: &HostMemory, clock: &Clock) -> Result<u64> {
         if self.reap_set.is_empty() {
             return Ok(0);
         }
-        let mut bufs: Vec<&mut [u8]> = self
-            .reap_set
-            .iter()
+        let mut reads: Vec<(SwapSlot, &mut [u8])> =
+            Vec::with_capacity(self.reap_set.len());
+        for &gpa in &self.reap_set {
+            let Some(&slot) = self.reap_slots.get(&gpa.0) else {
+                bail!("REAP working-set page {gpa:?} has no REAP slot");
+            };
             // SAFETY: distinct frames owned by this sandbox; guest paused.
-            .map(|&gpa| unsafe {
+            reads.push((slot, unsafe {
                 std::slice::from_raw_parts_mut(host.page_ptr(gpa), PAGE_SIZE)
-            })
-            .collect();
-        let bytes = self.files.read_reap(&mut bufs)?;
+            }));
+        }
+        let bytes = self.files.read_reap_pages_at(&mut reads)?;
         for &gpa in &self.reap_set {
             host.note_commit(gpa);
+            // The restored frame may be newer than the *swap* slot image
+            // (the REAP file recorded post-request content), so a later
+            // full swap-out must rewrite it — but it exactly matches the
+            // REAP image it was just read from, so it is *not* REAP-stale.
             self.resident.insert(gpa.0);
         }
         clock.charge(self.cost.seq_read_ns(bytes));
@@ -573,7 +718,7 @@ mod tests {
                 .unwrap();
         }
         // REAP hibernate from Woken-up.
-        let rpt = r.mgr.reap_swap_out(&[&pt], &r.host, &r.clock).unwrap();
+        let rpt = r.mgr.reap_swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
         assert_eq!(rpt.unique_pages, 8, "only the working set");
         assert!(r.mgr.has_reap_image());
         assert_eq!(pt.present_count(), 8, "REAP swap-out leaves PTEs present");
@@ -610,13 +755,135 @@ mod tests {
         // Fault path cost for 256 pages:
         let fault_cost = 256 * CostModel::paper().pagefault_swapin_ns();
         // REAP path:
-        r.mgr.reap_swap_out(&[&pt], &r.host, &r.clock).unwrap();
+        r.mgr.reap_swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
         r.clock.take();
         r.mgr.reap_swap_in(&r.host, &r.clock).unwrap();
         let (reap_cost, _) = r.clock.take();
         assert!(
             fault_cost > 10 * reap_cost,
             "fault {fault_cost} vs reap {reap_cost}"
+        );
+    }
+
+    #[test]
+    fn untouched_reap_cycle_writes_zero_bytes() {
+        // hibernate → REAP wake → hibernate without any guest activity:
+        // every recorded image is still current, so the steady-state REAP
+        // hibernate must write nothing — the inflation-side O(dirty)
+        // contract.
+        let mut r = rig("reap-delta0");
+        let (mut pt, gpas, sums) = populate(&r, 20);
+        r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        for i in 0..8u64 {
+            r.mgr
+                .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
+                .unwrap();
+        }
+        // First REAP hibernate records (and writes) the whole working set.
+        let c1 = r.mgr.reap_swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        assert_eq!(c1.unique_pages, 8);
+        assert_eq!(c1.bytes_written, 8 * PAGE_SIZE as u64);
+        r.mgr.reap_swap_in(&r.host, &r.clock).unwrap();
+        // Wake-no-touch → the next REAP hibernate is free.
+        let c2 = r.mgr.reap_swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        assert_eq!(c2.unique_pages, 0, "untouched REAP cycle must write nothing");
+        assert_eq!(c2.bytes_written, 0);
+        assert_eq!(c2.pages_discarded, 8, "the frames still leave the host");
+        assert_eq!(r.mgr.reap_set_pages(), 8);
+        assert_eq!(r.mgr.reap_live_pages(), 8);
+        // And the wake restores correct content from the untouched images.
+        let n = r.mgr.reap_swap_in(&r.host, &r.clock).unwrap();
+        assert_eq!(n, 8);
+        for i in 0..8usize {
+            assert_eq!(r.host.checksum_page(gpas[i]).unwrap(), sums[i]);
+        }
+    }
+
+    #[test]
+    fn reap_delta_rewrites_exactly_dirty_and_new_in_place() {
+        let mut r = rig("reap-delta-k");
+        let (mut pt, gpas, sums) = populate(&r, 20);
+        r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        for i in 0..8u64 {
+            r.mgr
+                .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
+                .unwrap();
+        }
+        r.mgr.reap_swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        let high_water = r.mgr.files.reap_len();
+        r.mgr.reap_swap_in(&r.host, &r.clock).unwrap();
+        // Dirty 3 working-set pages (MMU contract: DIRTY on write)...
+        let mut new_sums = HashMap::new();
+        for i in 0..3u64 {
+            r.host.fill_page(gpas[i as usize], 0x5EAF + i).unwrap();
+            pt.update(Gva(i * 0x1000), |p| p.with(Pte::DIRTY)).unwrap();
+            new_sums.insert(
+                i as usize,
+                r.host.checksum_page(gpas[i as usize]).unwrap(),
+            );
+        }
+        // ...and fault 2 cold pages back from the swap file: they join the
+        // working set as pages new to the REAP image.
+        for i in 8..10u64 {
+            r.mgr
+                .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
+                .unwrap();
+        }
+        let rpt = r.mgr.reap_swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        assert_eq!(rpt.unique_pages, 5, "3 dirty rewrites + 2 new pages only");
+        assert_eq!(rpt.bytes_written, 5 * PAGE_SIZE as u64);
+        assert_eq!(r.mgr.reap_set_pages(), 10);
+        assert_eq!(r.mgr.reap_live_pages(), 10);
+        // Wake: every working-set page comes back with its latest content —
+        // dirty pages from their rewritten (in-place) slots, clean pages
+        // from their original, untouched ones.
+        let n = r.mgr.reap_swap_in(&r.host, &r.clock).unwrap();
+        assert_eq!(n, 10);
+        for i in 0..10usize {
+            let want = new_sums.get(&i).copied().unwrap_or(sums[i]);
+            assert_eq!(r.host.checksum_page(gpas[i]).unwrap(), want, "page {i}");
+        }
+        // Steady state again: nothing stale → zero bytes; the two new
+        // pages extended the file, the rewrites did not.
+        let c = r.mgr.reap_swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        assert_eq!(c.bytes_written, 0);
+        assert_eq!(r.mgr.files.reap_len(), high_water + 2 * PAGE_SIZE as u64);
+    }
+
+    #[test]
+    fn reap_slots_gc_when_working_set_shrinks() {
+        let mut r = rig("reap-gc");
+        let (mut pt, gpas, _) = populate(&r, 12);
+        r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        for i in 0..8u64 {
+            r.mgr
+                .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
+                .unwrap();
+        }
+        r.mgr.reap_swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        let high_water = r.mgr.files.reap_len();
+        assert_eq!(r.mgr.reap_live_pages(), 8);
+        r.mgr.reap_swap_in(&r.host, &r.clock).unwrap();
+        // 3 working-set pages are unmapped (freed scratch memory)...
+        for i in 0..3u64 {
+            pt.unmap(Gva(i * 0x1000));
+            r.alloc.dec_ref(gpas[i as usize]);
+        }
+        // ...and 3 cold pages fault in, joining the working set: the freed
+        // REAP slots must be recycled for them.
+        for i in 8..11u64 {
+            r.mgr
+                .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
+                .unwrap();
+        }
+        let rpt = r.mgr.reap_swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        assert_eq!(rpt.unique_pages, 3, "only the new pages are written");
+        assert_eq!(r.mgr.reap_set_pages(), 8);
+        assert_eq!(r.mgr.reap_live_pages(), 8);
+        assert_eq!(
+            r.mgr.files.reap_len(),
+            high_water,
+            "freed REAP slots must be reused, not appended past"
         );
     }
 

@@ -1,31 +1,60 @@
-//! Off-lock deflation: proof that the expensive half of hibernation no
-//! longer runs on the policy tick or under the shard lock. A deflation is
-//! held in flight with a test gate while requests — for other functions
-//! *and* for the deflating function — are served on the very same shard.
+//! Off-tick instance pipeline: proof that the expensive half of the
+//! lifecycle transitions no longer runs on the policy tick or under the
+//! shard lock. Deflations *and anticipatory inflations* are held in
+//! flight with a test gate while requests — for other functions and for
+//! the transitioning function itself — are served on the very same shard;
+//! the backpressure cap's shed policy is exercised in both directions.
 
 use quark_hibernate::config::PlatformConfig;
+use quark_hibernate::container::state::ContainerState;
 use quark_hibernate::container::NoopRunner;
 use quark_hibernate::platform::metrics::ServedFrom;
 use quark_hibernate::platform::policy::Action;
 use quark_hibernate::platform::Platform;
-use quark_hibernate::simtime::CostModel;
+use quark_hibernate::simtime::{Clock, CostModel};
 use quark_hibernate::workloads::functionbench::{golang_hello, nodejs_hello, scaled_for_test};
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
-fn one_shard_platform(tag: &str, deflate_workers: usize) -> Arc<Platform> {
+/// Install a two-channel gate on the platform's pipeline: the worker
+/// announces pickup on the first channel and parks until the second one
+/// fires. Returns (entered_rx, release_tx).
+fn gate(p: &Platform) -> (mpsc::Receiver<()>, mpsc::Sender<()>) {
+    let (entered_tx, entered_rx) = mpsc::channel::<()>();
+    let (release_tx, release_rx) = mpsc::channel::<()>();
+    // Mutex wrappers: the gate must be Sync, channel endpoints are not.
+    let entered_tx = Mutex::new(entered_tx);
+    let release_rx = Mutex::new(release_rx);
+    p.set_pipeline_gate(Some(Arc::new(move || {
+        let _ = entered_tx.lock().unwrap().send(());
+        let _ = release_rx.lock().unwrap().recv();
+    })));
+    (entered_rx, release_tx)
+}
+
+/// The shared test shape: everything co-sharded (the worst case for lock
+/// stalls), a fast idle threshold, `pipeline_workers` workers. Tests that
+/// need predictive wakes or a queue cap mutate the returned config.
+fn one_shard_cfg(tag: &str, pipeline_workers: usize) -> PlatformConfig {
     let mut cfg = PlatformConfig::default();
     cfg.host_memory = 1 << 30;
-    cfg.shards = 1; // everything co-sharded: the worst case for lock stalls
+    cfg.shards = 1;
     cfg.cost = CostModel::paper();
     cfg.policy.hibernate_idle_ms = 10;
     cfg.policy.predictive_wakeup = false;
-    cfg.policy.deflate_workers = deflate_workers;
+    cfg.policy.pipeline_workers = pipeline_workers;
     cfg.swap_dir = std::env::temp_dir()
         .join(format!("qh-stress-deflate-{tag}-{}", std::process::id()))
         .to_string_lossy()
         .into_owned();
+    cfg
+}
+
+/// Build a platform over `cfg` with the two standard functions: `big`
+/// (~half-scale nodejs, a real swap-out) and `tiny` (a cheap co-sharded
+/// neighbor).
+fn big_tiny_platform(cfg: PlatformConfig) -> Arc<Platform> {
     let p = Arc::new(Platform::new(cfg, Arc::new(NoopRunner)).unwrap());
     let mut big = scaled_for_test(nodejs_hello(), 2);
     big.name = "big".into();
@@ -34,6 +63,10 @@ fn one_shard_platform(tag: &str, deflate_workers: usize) -> Arc<Platform> {
     tiny.name = "tiny".into();
     p.deploy(tiny).unwrap();
     p
+}
+
+fn one_shard_platform(tag: &str, pipeline_workers: usize) -> Arc<Platform> {
+    big_tiny_platform(one_shard_cfg(tag, pipeline_workers))
 }
 
 #[test]
@@ -46,15 +79,7 @@ fn co_sharded_requests_served_while_a_large_sandbox_deflates() {
 
     // Gate the deflation worker: it parks with the job in flight (the
     // instance's reservation held) until released.
-    let (entered_tx, entered_rx) = mpsc::channel::<()>();
-    let (release_tx, release_rx) = mpsc::channel::<()>();
-    // Mutex wrappers: the gate must be Sync, channel endpoints are not.
-    let entered_tx = Mutex::new(entered_tx);
-    let release_rx = Mutex::new(release_rx);
-    p.set_deflation_gate(Some(Arc::new(move || {
-        let _ = entered_tx.lock().unwrap().send(());
-        let _ = release_rx.lock().unwrap().recv();
-    })));
+    let (entered_rx, release_tx) = gate(&p);
 
     // The tick submits the deflation and returns without waiting on it.
     let actions = p.policy_tick_nowait(1_000_000_000).unwrap();
@@ -67,7 +92,7 @@ fn co_sharded_requests_served_while_a_large_sandbox_deflates() {
     entered_rx
         .recv_timeout(Duration::from_secs(10))
         .expect("deflation worker must pick the job up");
-    assert_eq!(p.pending_deflations(), 1, "the deflation is in flight");
+    assert_eq!(p.pending_pipeline(), 1, "the deflation is in flight");
 
     // While the big sandbox deflates, its shard must keep serving. Run
     // the requests on a helper thread so a regression (a request blocking
@@ -94,15 +119,15 @@ fn co_sharded_requests_served_while_a_large_sandbox_deflates() {
         &ServedFrom::ColdStart,
         "a request for the deflating function scales out, it does not wait"
     );
-    assert_eq!(p.pending_deflations(), 1, "deflation still parked");
+    assert_eq!(p.pending_pipeline(), 1, "deflation still parked");
 
     // Release the gate; draining settles everything. The parked finish
     // had not yet released any memory — the drop below is its doing.
     let before_release = p.memory_used();
     release_tx.send(()).unwrap();
-    p.set_deflation_gate(None);
-    p.drain_deflations().unwrap();
-    assert_eq!(p.pending_deflations(), 0);
+    p.set_pipeline_gate(None);
+    p.drain_pipeline().unwrap();
+    assert_eq!(p.pending_pipeline(), 0);
     assert_eq!(p.metrics.counters.hibernations.load(Ordering::Relaxed), 1);
     assert!(
         p.memory_used() < before_release,
@@ -124,7 +149,7 @@ fn co_sharded_requests_served_while_a_large_sandbox_deflates() {
 
 #[test]
 fn sync_mode_still_deflates_inside_the_tick() {
-    // deflate_workers = 0 is the baseline: policy_tick performs the whole
+    // pipeline_workers = 0 is the baseline: policy_tick performs the whole
     // deflation synchronously and nothing is ever pending.
     let p = one_shard_platform("sync", 0);
     p.request_at("big", 0).unwrap();
@@ -133,7 +158,7 @@ fn sync_mode_still_deflates_inside_the_tick() {
     assert!(actions
         .iter()
         .any(|a| matches!(a, Action::Hibernate { .. })));
-    assert_eq!(p.pending_deflations(), 0);
+    assert_eq!(p.pending_pipeline(), 0);
     assert!(p.memory_used() < before, "sync deflation frees memory in-tick");
     assert_eq!(p.metrics.counters.hibernations.load(Ordering::Relaxed), 1);
     let r = p.request_at("big", 2_000_000_000).unwrap();
@@ -144,17 +169,8 @@ fn sync_mode_still_deflates_inside_the_tick() {
 fn async_policy_tick_settles_on_drain_with_many_instances() {
     // A pile of instances deflating concurrently on a 2-worker pool:
     // drain must leave every one Hibernate, unreserved and accounted.
-    let mut cfg = PlatformConfig::default();
-    cfg.host_memory = 1 << 30;
+    let mut cfg = one_shard_cfg("many", 2);
     cfg.shards = 2;
-    cfg.cost = CostModel::paper();
-    cfg.policy.hibernate_idle_ms = 10;
-    cfg.policy.predictive_wakeup = false;
-    cfg.policy.deflate_workers = 2;
-    cfg.swap_dir = std::env::temp_dir()
-        .join(format!("qh-stress-deflate-many-{}", std::process::id()))
-        .to_string_lossy()
-        .into_owned();
     let p = Platform::new(cfg, Arc::new(NoopRunner)).unwrap();
     for i in 0..8 {
         let mut s = scaled_for_test(golang_hello(), 16);
@@ -171,7 +187,7 @@ fn async_policy_tick_settles_on_drain_with_many_instances() {
         .filter(|a| matches!(a, Action::Hibernate { .. }))
         .count();
     assert_eq!(hibernated, 8);
-    assert_eq!(p.pending_deflations(), 0);
+    assert_eq!(p.pending_pipeline(), 0);
     assert_eq!(p.metrics.counters.hibernations.load(Ordering::Relaxed), 8);
     for i in 0..8 {
         let state = p
@@ -186,4 +202,186 @@ fn async_policy_tick_settles_on_drain_with_many_instances() {
             .unwrap();
         assert_eq!(r.served_from, ServedFrom::Hibernate, "fn-{i} must demand-wake");
     }
+}
+
+#[test]
+fn co_sharded_requests_served_while_an_anticipatory_inflation_is_in_flight() {
+    // The wake side of the pipeline: the policy tick performs only the
+    // SIGCONT flip (the instance ranks WokenUp immediately) and the REAP
+    // prefetch parks on a gated worker — while requests for co-sharded
+    // functions, and for the inflating function itself, keep serving.
+    let mut cfg = one_shard_cfg("inflate-gate", 1);
+    cfg.policy.predictive_wakeup = true;
+    let p = big_tiny_platform(cfg);
+
+    // Train the predictor on a 100 ms cadence → next arrival ≈ t = 200 ms.
+    p.request_at("big", 0).unwrap();
+    p.request_at("big", 100_000_000).unwrap();
+    // Idle past the threshold: the tick deflates big (drained here, gate
+    // not installed yet).
+    let actions = p.policy_tick(130_000_000).unwrap();
+    assert!(
+        actions.iter().any(|a| matches!(a, Action::Hibernate { .. })),
+        "{actions:?}"
+    );
+    assert_eq!(p.pending_pipeline(), 0);
+
+    // Gate the worker, then tick inside the predictor's wake window: the
+    // flip happens in-tick, the inflation parks on the gate.
+    let (entered_rx, release_tx) = gate(&p);
+    let actions = p.policy_tick_nowait(195_000_000).unwrap();
+    assert!(
+        actions.iter().any(|a| matches!(a, Action::Wake { .. })),
+        "{actions:?}"
+    );
+    entered_rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("inflation worker must pick the job up");
+    assert_eq!(p.pending_pipeline(), 1, "the inflation is in flight");
+    // The flip already happened — the router would rank it WokenUp the
+    // moment the reservation drops.
+    assert_eq!(
+        p.with_instance("big", 0, |sb| sb.state()).unwrap(),
+        ContainerState::WokenUp
+    );
+
+    // Requests on the same shard keep serving (helper thread so a
+    // regression fails the test instead of hanging it).
+    let served = {
+        let p = p.clone();
+        let (done_tx, done_rx) = mpsc::channel();
+        std::thread::spawn(move || {
+            let mut outcomes = Vec::new();
+            outcomes.push(p.request_at("tiny", 196_000_000).map(|r| r.served_from));
+            // The inflating instance is reserved: the router scales out.
+            outcomes.push(p.request_at("big", 197_000_000).map(|r| r.served_from));
+            let _ = done_tx.send(outcomes);
+        });
+        done_rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("co-sharded requests must not block on the in-flight inflation")
+    };
+    assert_eq!(served[0].as_ref().unwrap(), &ServedFrom::ColdStart);
+    assert_eq!(
+        served[1].as_ref().unwrap(),
+        &ServedFrom::ColdStart,
+        "a request for the inflating function scales out, it does not wait"
+    );
+    assert_eq!(p.pending_pipeline(), 1, "inflation still parked");
+
+    release_tx.send(()).unwrap();
+    p.set_pipeline_gate(None);
+    p.drain_pipeline().unwrap();
+    assert_eq!(p.pending_pipeline(), 0);
+    assert_eq!(
+        p.metrics.counters.anticipatory_wakes.load(Ordering::Relaxed),
+        1
+    );
+    assert_eq!(
+        p.with_instance("big", 0, |sb| sb.state()).unwrap(),
+        ContainerState::WokenUp,
+        "the woken instance is routable at WokenUp rank after the drain"
+    );
+}
+
+#[test]
+fn queue_cap_sheds_deflations_inline() {
+    // Backpressure: with the single worker gated and the cap at 1, every
+    // deflation past the first sheds to running inline on the tick — the
+    // queue stays bounded, the work still happens, and the sheds are
+    // counted.
+    let mut cfg = one_shard_cfg("shed", 1);
+    cfg.policy.pipeline_queue_cap = 1;
+    let p = Arc::new(Platform::new(cfg, Arc::new(NoopRunner)).unwrap());
+    for i in 0..6 {
+        let mut s = scaled_for_test(golang_hello(), 64);
+        s.name = format!("fn-{i}");
+        p.deploy(s).unwrap();
+        p.request_at(&format!("fn-{i}"), 0).unwrap();
+    }
+    let (entered_rx, release_tx) = gate(&p);
+    let before = p.memory_used();
+    let actions = p.policy_tick_nowait(1_000_000_000).unwrap();
+    let hibernated = actions
+        .iter()
+        .filter(|a| matches!(a, Action::Hibernate { .. }))
+        .count();
+    assert_eq!(hibernated, 6, "sheds still hibernate — just inline");
+    entered_rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("the one queued job must reach the worker");
+    assert_eq!(p.pending_pipeline(), 1, "queue bounded at the cap");
+    assert_eq!(p.metrics.counters.pipeline_sheds.load(Ordering::Relaxed), 5);
+    assert!(
+        p.memory_used() < before,
+        "shed deflations ran inline and already freed memory"
+    );
+    release_tx.send(()).unwrap();
+    p.set_pipeline_gate(None);
+    p.drain_pipeline().unwrap();
+    assert_eq!(p.pending_pipeline(), 0);
+    assert_eq!(p.metrics.counters.hibernations.load(Ordering::Relaxed), 6);
+    for i in 0..6 {
+        assert_eq!(
+            p.with_instance(&format!("fn-{i}"), 0, |sb| sb.state()).unwrap(),
+            ContainerState::Hibernate,
+            "fn-{i}"
+        );
+    }
+}
+
+#[test]
+fn shed_inflation_is_benign_the_request_demand_wakes() {
+    // An anticipatory wake hitting a full queue is skipped *before* any
+    // state flips: the instance stays Hibernate, nothing leaks, and the
+    // predicted request simply demand-wakes.
+    let mut cfg = one_shard_cfg("shed-wake", 1);
+    cfg.policy.predictive_wakeup = true;
+    cfg.policy.pipeline_queue_cap = 1;
+    let p = big_tiny_platform(cfg);
+
+    // Train big's 100 ms cadence, then hibernate it directly (inline, off
+    // the pipeline) so its instance is Hibernate while the queue is free.
+    p.request_at("big", 0).unwrap();
+    p.request_at("big", 100_000_000).unwrap();
+    p.with_instance("big", 0, |sb| sb.hibernate(&Clock::new()))
+        .unwrap()
+        .unwrap();
+    // Fill the queue: warm tiny, gate the worker, let its deflation park —
+    // pending == cap.
+    p.request_at("tiny", 0).unwrap();
+    let (entered_rx, release_tx) = gate(&p);
+    let actions = p.policy_tick_nowait(130_000_000).unwrap();
+    assert!(
+        actions.iter().any(|a| matches!(a, Action::Hibernate { .. })),
+        "{actions:?}"
+    );
+    entered_rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("tiny's deflation must reach the worker");
+    assert_eq!(p.pending_pipeline(), 1);
+
+    // A tick inside big's wake window: the wake sheds before any flip.
+    let actions = p.policy_tick_nowait(195_000_000).unwrap();
+    assert!(
+        !actions.iter().any(|a| matches!(a, Action::Wake { .. })),
+        "a shed wake must not count as applied: {actions:?}"
+    );
+    assert!(p.metrics.counters.pipeline_sheds.load(Ordering::Relaxed) >= 1);
+    assert_eq!(
+        p.metrics.counters.anticipatory_wakes.load(Ordering::Relaxed),
+        0
+    );
+    assert_eq!(
+        p.with_instance("big", 0, |sb| sb.state()).unwrap(),
+        ContainerState::Hibernate,
+        "shed wake must leave the instance untouched"
+    );
+
+    release_tx.send(()).unwrap();
+    p.set_pipeline_gate(None);
+    p.drain_pipeline().unwrap();
+    // Benign: the predicted request demand-wakes as if no wake was due.
+    let r = p.request_at("big", 200_000_000).unwrap();
+    assert_eq!(r.served_from, ServedFrom::Hibernate);
 }
