@@ -110,30 +110,42 @@ def main():
                 f"{key}: wrote {got} bytes, baseline {base} (>{factor}x)"
             )
 
-    replay_csv = os.path.join(out_dir, "replay_scaling.csv")
-    if not os.path.exists(replay_csv):
-        sys.exit(f"missing {replay_csv} (did the replay_scaling bench run?)")
-    runs = parse_replay_scaling(replay_csv)
-    if not runs:
-        sys.exit(f"{replay_csv}: no data rows")
-    # The bench itself asserts fingerprint equality across worker counts;
-    # re-check here so a bench refactor can't silently drop the assertion.
-    fps = {r["fingerprint"] for r in runs}
-    if len(fps) != 1:
-        failures += fail(f"replay fingerprints diverged across worker counts: {fps}")
-    best = max(r["events_per_sec"] for r in runs)
-    floor = baseline["replay_scaling"]["min_events_per_sec"] / factor
-    if best < floor:
-        failures += fail(
-            f"replay throughput collapsed: best {best:.0f} events/s < "
-            f"floor {floor:.0f} (baseline/{factor})"
-        )
+    def check_replay_leg(csv_name, baseline_key):
+        nonlocal failures
+        replay_csv = os.path.join(out_dir, csv_name)
+        if not os.path.exists(replay_csv):
+            sys.exit(f"missing {replay_csv} (did the replay_scaling bench run?)")
+        runs = parse_replay_scaling(replay_csv)
+        if not runs:
+            sys.exit(f"{replay_csv}: no data rows")
+        # The bench itself asserts fingerprint equality across worker
+        # counts; re-check here so a bench refactor can't silently drop
+        # the assertion.
+        fps = {r["fingerprint"] for r in runs}
+        if len(fps) != 1:
+            failures += fail(
+                f"{csv_name}: replay fingerprints diverged across worker counts: {fps}"
+            )
+        best = max(r["events_per_sec"] for r in runs)
+        floor = baseline[baseline_key]["min_events_per_sec"] / factor
+        if best < floor:
+            failures += fail(
+                f"{csv_name}: replay throughput collapsed: best {best:.0f} "
+                f"events/s < floor {floor:.0f} (baseline/{factor})"
+            )
+        return runs, best
+
+    runs, best = check_replay_leg("replay_scaling.csv", "replay_scaling")
+    tenant_runs, tenant_best = check_replay_leg(
+        "replay_scaling_tenant.csv", "replay_scaling_tenant"
+    )
 
     if failures:
         sys.exit(1)
     print(
         f"bench baseline OK: {len(rows)} micro_swap rows, "
-        f"{len(runs)} replay_scaling rows, best {best:.0f} events/s"
+        f"{len(runs)} replay_scaling rows (best {best:.0f} events/s), "
+        f"{len(tenant_runs)} tenant-fair rows (best {tenant_best:.0f} events/s)"
     )
 
 

@@ -117,9 +117,13 @@ fn main() -> Result<()> {
         ok as f64 / wall.as_secs_f64()
     );
     println!("host committed at end: {}", human_bytes(platform.memory_used()));
-    for (w, rows) in platform.pool_snapshot() {
+    for (w, wake_lead_ns, rows) in platform.pool_snapshot() {
         for (i, (state, pss)) in rows.iter().enumerate() {
-            println!("  {w}[{i}]: {state} pss={}", human_bytes(*pss));
+            println!(
+                "  {w}[{i}]: {state} pss={} (learned wake lead {})",
+                human_bytes(*pss),
+                human_ns(wake_lead_ns)
+            );
         }
     }
 

@@ -13,22 +13,22 @@
 use anyhow::Result;
 use quark_hibernate::config::PlatformConfig;
 use quark_hibernate::container::NoopRunner;
-use quark_hibernate::platform::policy::Mode;
 use quark_hibernate::platform::{trace, Platform};
 use quark_hibernate::util::{human_bytes, human_ns};
 use quark_hibernate::workloads;
 use std::sync::Arc;
 
-fn run_mode(mode: Mode, events: &[trace::TraceEvent]) -> Result<()> {
+fn run_policy(kind: &str, events: &[trace::TraceEvent]) -> Result<()> {
     let mut cfg = PlatformConfig::default();
     cfg.host_memory = 16 << 30;
     cfg.policy.hibernate_idle_ms = 500;
     cfg.policy.memory_budget = 4 << 30;
+    cfg.policy.kind = kind.to_string();
     cfg.swap_dir = std::env::temp_dir()
-        .join(format!("qh-replay-{mode:?}-{}", std::process::id()))
+        .join(format!("qh-replay-{kind}-{}", std::process::id()))
         .to_string_lossy()
         .into_owned();
-    let platform = Platform::with_mode(cfg, Arc::new(NoopRunner), mode)?;
+    let platform = Platform::new(cfg, Arc::new(NoopRunner))?;
     for w in workloads::all_workloads() {
         platform.deploy(w)?;
     }
@@ -41,7 +41,7 @@ fn run_mode(mode: Mode, events: &[trace::TraceEvent]) -> Result<()> {
     use std::sync::atomic::Ordering::Relaxed;
     println!(
         "{:<10} requests={:<5} cold={:<4} hibernations={:<4} evictions={:<4} mean={} p99={} mem={}",
-        format!("{mode:?}"),
+        platform.policy_name(),
         reports.len(),
         c.cold_starts.load(Relaxed),
         c.hibernations.load(Relaxed),
@@ -69,8 +69,8 @@ fn main() -> Result<()> {
         8,
         duration_ms / 1000
     );
-    run_mode(Mode::WarmOnly, &events)?;
-    run_mode(Mode::Hibernate, &events)?;
-    println!("(Hibernate mode should show fewer cold starts at lower memory)");
+    run_policy("warm-only", &events)?;
+    run_policy("hibernate", &events)?;
+    println!("(The hibernate policy should show fewer cold starts at lower memory)");
     Ok(())
 }

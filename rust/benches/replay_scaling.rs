@@ -1,22 +1,23 @@
 //! `cargo bench --bench replay_scaling` — parallel trace-replay wall-clock
-//! vs worker count on an Azure-shaped thousand-function scenario, with the
-//! determinism contract asserted: every worker count must produce the same
-//! report fingerprint. `QH_QUICK=1` shrinks the scenario.
+//! vs worker count, with the determinism contract asserted: every worker
+//! count must produce the same report fingerprint. Two legs:
+//!
+//! * `azure-heavy-tail` under the default hibernate policy (the classic
+//!   thousand-function scaling measurement);
+//! * `tenant-skewed` under `tenant-fair` with per-shard budget leases on —
+//!   the multi-tenant pressure machinery at scale.
+//!
+//! `QH_QUICK=1` shrinks both scenarios; `QH_BENCH_OUT` writes one CSV per
+//! leg (`replay_scaling.csv`, `replay_scaling_tenant.csv`) for the CI
+//! baseline gate.
 
-use quark_hibernate::bench_support::replay_scaling;
+use quark_hibernate::bench_support::replay_scaling::{self, ReplayScalingResult};
 
-fn main() {
-    let quick = std::env::var("QH_QUICK").is_ok();
-    let (funcs, duration_ms) = if quick {
-        (200usize, 30_000u64)
-    } else {
-        (1000usize, 300_000u64)
-    };
-    let worker_counts = [1usize, 2, 4, 8];
-    let results = replay_scaling::run(&worker_counts, funcs, duration_ms * 1_000_000, 0xA21);
+fn report_leg(tag: &str, results: &[ReplayScalingResult], csv_name: &str) {
+    println!("== {tag} ==");
     println!("workers    events      wall      events/s   speedup   fingerprint");
     let base = results.first().map(|r| r.events_per_sec()).unwrap_or(0.0);
-    for r in &results {
+    for r in results {
         println!(
             "{:>7} {:>9} {:>9.1} ms {:>9.0} {:>8.2}x   {:016x}",
             r.workers,
@@ -35,20 +36,20 @@ fn main() {
     // The determinism contract: worker count changes wall-clock, never
     // results.
     let f0 = results[0].fingerprint;
-    for r in &results {
+    for r in results {
         assert_eq!(
             r.fingerprint, f0,
-            "replay results must be bit-identical at any worker count"
+            "{tag}: replay results must be bit-identical at any worker count"
         );
     }
 
     // CI artifact: per-worker-count rows plus the shared fingerprint, so
-    // the bench-smoke job can diff fingerprints across commits (the first
-    // step of the throughput regression gate).
+    // the bench-smoke job can diff fingerprints across commits and gate
+    // the throughput floor.
     if let Ok(dir) = std::env::var("QH_BENCH_OUT") {
         let _ = std::fs::create_dir_all(&dir);
         let mut csv = String::from("workers,events,wall_ns,events_per_sec,fingerprint\n");
-        for r in &results {
+        for r in results {
             csv.push_str(&format!(
                 "{},{},{},{:.0},{:016x}\n",
                 r.workers,
@@ -58,12 +59,47 @@ fn main() {
                 r.fingerprint
             ));
         }
-        let path = std::path::Path::new(&dir).join("replay_scaling.csv");
+        let path = std::path::Path::new(&dir).join(csv_name);
         match std::fs::write(&path, csv) {
             Ok(()) => println!("csv written to {}", path.display()),
             Err(e) => eprintln!("replay_scaling: failed to write {}: {e}", path.display()),
         }
     }
+}
+
+fn main() {
+    let quick = std::env::var("QH_QUICK").is_ok();
+    let (funcs, duration_ms) = if quick {
+        (200usize, 30_000u64)
+    } else {
+        (1000usize, 300_000u64)
+    };
+    let worker_counts = [1usize, 2, 4, 8];
+    let results = replay_scaling::run(&worker_counts, funcs, duration_ms * 1_000_000, 0xA21);
+    report_leg("azure-heavy-tail / hibernate", &results, "replay_scaling.csv");
+
+    // The tenant leg is lighter on events (one dominant tenant) but every
+    // tick pays tenant accounting + lease reconciliation — the regression
+    // this leg exists to catch.
+    let (t_funcs, t_duration_ms) = if quick {
+        (200usize, 30_000u64)
+    } else {
+        (1000usize, 120_000u64)
+    };
+    let tenant_results = replay_scaling::run_policy(
+        "tenant-skewed",
+        "tenant-fair",
+        true,
+        &worker_counts,
+        t_funcs,
+        t_duration_ms * 1_000_000,
+        0xA22,
+    );
+    report_leg(
+        "tenant-skewed / tenant-fair (leases)",
+        &tenant_results,
+        "replay_scaling_tenant.csv",
+    );
 
     // The scaling claim, with generous slack for small or loaded machines.
     let cores = std::thread::available_parallelism()

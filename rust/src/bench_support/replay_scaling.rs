@@ -34,10 +34,26 @@ pub fn run(
     duration_ns: u64,
     seed: u64,
 ) -> Vec<ReplayScalingResult> {
+    run_policy("azure-heavy-tail", "hibernate", false, worker_counts, funcs, duration_ns, seed)
+}
+
+/// The general form: any scenario under any policy kind, optionally with
+/// per-shard budget leases. The CI gate runs this twice — the classic
+/// heavy-tail/hibernate leg and a tenant-skewed/tenant-fair leg (leases
+/// on), each with its own throughput floor in `bench/baseline.json`.
+pub fn run_policy(
+    scenario_name: &str,
+    policy_kind: &str,
+    pressure_leases: bool,
+    worker_counts: &[usize],
+    funcs: usize,
+    duration_ns: u64,
+    seed: u64,
+) -> Vec<ReplayScalingResult> {
     let scenario_run =
-        scenario::build("azure-heavy-tail", funcs, duration_ns, seed).expect("scenario");
+        scenario::build(scenario_name, funcs, duration_ns, seed).expect("scenario");
     eprintln!(
-        "# replay_scaling: {} functions, {} events",
+        "# replay_scaling[{scenario_name}/{policy_kind}]: {} functions, {} events",
         scenario_run.specs.len(),
         scenario_run.events.len()
     );
@@ -50,9 +66,11 @@ pub fn run(
             // the bench machine's core count.
             cfg.shards = 32;
             cfg.policy.hibernate_idle_ms = 500;
+            cfg.policy.kind = policy_kind.to_string();
+            cfg.policy.pressure_leases = pressure_leases;
             cfg.swap_dir = std::env::temp_dir()
                 .join(format!(
-                    "qh-replay-scaling-w{workers}-{}",
+                    "qh-replay-scaling-{policy_kind}-w{workers}-{}",
                     std::process::id()
                 ))
                 .to_string_lossy()

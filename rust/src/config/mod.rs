@@ -13,6 +13,20 @@ use anyhow::{bail, Context, Result};
 use std::path::Path;
 use toml_lite::{Table, Value};
 
+/// One tenant's budget row (`[tenants.<name>]`). Tenancy is parsed from
+/// workload names by `platform::policy::tenant_of` (the `tNN-` prefix
+/// convention).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantBudget {
+    pub name: String,
+    /// Explicit live-byte budget. `None` = the tenant shares what the
+    /// host budget leaves after explicit grants, proportionally to
+    /// `weight`.
+    pub memory_budget: Option<u64>,
+    /// Weight for the shared split (default 1.0; must be > 0).
+    pub weight: f64,
+}
+
 /// Hibernation/keep-alive policy knobs.
 #[derive(Debug, Clone)]
 pub struct PolicyConfig {
@@ -56,6 +70,26 @@ pub struct PolicyConfig {
     /// strict-determinism replay forces this to 0 (shed decisions depend
     /// on real-time queue depth).
     pub pipeline_queue_cap: usize,
+    /// Which [`Policy`](crate::platform::policy::Policy) makes keep-alive
+    /// decisions: `"hibernate"` (the paper's platform, the default),
+    /// `"warm-only"` (the conventional evicting baseline) or
+    /// `"tenant-fair"` (hibernate + per-tenant budget enforcement).
+    pub kind: String,
+    /// Learn the anticipatory wake lead per function (EWMA of measured
+    /// inflation durations, clamped to [5 ms, 250 ms]); `false` pins the
+    /// classic 50 ms constant. The constant seeds the EWMA either way, so
+    /// the first wake of every function behaves identically.
+    pub adaptive_wake_lead: bool,
+    /// Split the host memory budget into per-shard *leases* (proportional
+    /// to per-shard committed bytes at each reconciliation) and let every
+    /// shard take pressure decisions against its lease plus its live
+    /// local usage — deterministic at any replay worker count, and
+    /// sharper under tight budgets than the epoch-stale global snapshot.
+    pub pressure_leases: bool,
+    /// Per-tenant budget rows (`[tenants.<name>]`), sorted by name.
+    /// Tenants observed in workload names but not listed here get a
+    /// weight-1.0 share of the unexplicit remainder.
+    pub tenants: Vec<TenantBudget>,
 }
 
 impl Default for PolicyConfig {
@@ -70,7 +104,27 @@ impl Default for PolicyConfig {
             tick_stride: 1,
             pipeline_workers: 2,
             pipeline_queue_cap: 128,
+            kind: "hibernate".to_string(),
+            adaptive_wake_lead: true,
+            pressure_leases: false,
+            tenants: Vec::new(),
         }
+    }
+}
+
+impl PolicyConfig {
+    /// Does this config maintain the per-tenant ledger? True for the
+    /// tenant-fair policy and whenever tenant budgets are configured.
+    pub fn tracks_tenants(&self) -> bool {
+        matches!(self.kind.as_str(), "tenant-fair" | "tenant_fair") || !self.tenants.is_empty()
+    }
+
+    /// The configured budget row for tenant `name`, if any.
+    pub fn tenant_cfg(&self, name: &str) -> Option<&TenantBudget> {
+        self.tenants
+            .binary_search_by(|t| t.name.as_str().cmp(name))
+            .ok()
+            .map(|i| &self.tenants[i])
     }
 }
 
@@ -263,6 +317,78 @@ impl PlatformConfig {
         let mut pipeline_queue_cap = self.policy.pipeline_queue_cap as u64;
         get_u64(t, "policy", "pipeline_queue_cap", &mut pipeline_queue_cap)?;
         self.policy.pipeline_queue_cap = pipeline_queue_cap as usize;
+        get_str(t, "policy", "kind", &mut self.policy.kind)?;
+        get_bool(t, "policy", "adaptive_wake_lead", &mut self.policy.adaptive_wake_lead)?;
+        get_bool(t, "policy", "pressure_leases", &mut self.policy.pressure_leases)?;
+
+        // `[tenants.<name>]` sections (and the `tenants.<name>.<field>`
+        // override spelling, which lands as section "tenants" with a
+        // dotted key). Later tables — CLI overrides — update rows in
+        // place.
+        for (section, key, value) in t.iter() {
+            let (name, field) = if let Some(rest) = section.strip_prefix("tenants.") {
+                (rest, key)
+            } else if section == "tenants" {
+                match key.split_once('.') {
+                    Some((name, field)) => (name, field),
+                    None => bail!(
+                        "tenants.{key}: tenant options are nested — use \
+                         [tenants.{key}] memory_budget/weight (or the \
+                         tenants.{key}.memory_budget override form)"
+                    ),
+                }
+            } else {
+                continue;
+            };
+            if name.is_empty() {
+                bail!("[tenants.]: empty tenant name");
+            }
+            // Tenancy is parsed from workload names by
+            // `platform::policy::tenant_of` — the lowercase `tNN-` prefix
+            // convention. A row no workload can ever match would silently
+            // do nothing while its explicit grant still shrank every real
+            // tenant's weight share, so reject it here.
+            let digits = name.strip_prefix('t').unwrap_or("");
+            if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+                bail!(
+                    "[tenants.{name}]: tenant names follow the workload \
+                     prefix convention `t<digits>` (e.g. t00) — no \
+                     workload would ever be charged to `{name}`"
+                );
+            }
+            // Find-or-insert by index (binding the `find` borrow across
+            // the insert arm is NLL problem case #3 — rejected).
+            let idx = match self.policy.tenants.iter().position(|r| r.name == name) {
+                Some(i) => i,
+                None => {
+                    self.policy.tenants.push(TenantBudget {
+                        name: name.to_string(),
+                        memory_budget: None,
+                        weight: 1.0,
+                    });
+                    self.policy.tenants.len() - 1
+                }
+            };
+            let row = &mut self.policy.tenants[idx];
+            match field {
+                "memory_budget" => {
+                    row.memory_budget = Some(value.as_u64().with_context(|| {
+                        format!("tenants.{name}.memory_budget must be an integer or size literal")
+                    })?);
+                }
+                "weight" => {
+                    let w = value
+                        .as_f64()
+                        .with_context(|| format!("tenants.{name}.weight must be a number"))?;
+                    if w <= 0.0 {
+                        bail!("tenants.{name}.weight must be > 0");
+                    }
+                    row.weight = w;
+                }
+                other => bail!("unknown tenant option tenants.{name}.{other}"),
+            }
+        }
+        self.policy.tenants.sort_by(|a, b| a.name.cmp(&b.name));
 
         let mut replay_workers = self.replay.workers as u64;
         get_u64(t, "replay", "workers", &mut replay_workers)?;
@@ -447,5 +573,79 @@ mod tests {
     fn rejects_bad_override() {
         let mut c = PlatformConfig::default();
         assert!(c.apply_overrides(&["nonsense".to_string()]).is_err());
+    }
+
+    #[test]
+    fn policy_kind_and_lease_knobs_parse() {
+        let c = PlatformConfig::default();
+        assert_eq!(c.policy.kind, "hibernate");
+        assert!(c.policy.adaptive_wake_lead);
+        assert!(!c.policy.pressure_leases);
+        assert!(c.policy.tenants.is_empty());
+        assert!(!c.policy.tracks_tenants());
+
+        let c = PlatformConfig::from_str(
+            r#"
+            [policy]
+            kind = "tenant-fair"
+            adaptive_wake_lead = false
+            pressure_leases = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.policy.kind, "tenant-fair");
+        assert!(!c.policy.adaptive_wake_lead);
+        assert!(c.policy.pressure_leases);
+        assert!(c.policy.tracks_tenants());
+    }
+
+    #[test]
+    fn tenant_sections_parse_sorted_with_defaults() {
+        let c = PlatformConfig::from_str(
+            r#"
+            [tenants.t03]
+            weight = 2.5
+
+            [tenants.t00]
+            memory_budget = "64MiB"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.policy.tenants.len(), 2);
+        assert_eq!(c.policy.tenants[0].name, "t00", "rows sorted by name");
+        assert_eq!(c.policy.tenants[0].memory_budget, Some(64 << 20));
+        assert_eq!(c.policy.tenants[0].weight, 1.0);
+        assert_eq!(c.policy.tenants[1].name, "t03");
+        assert_eq!(c.policy.tenants[1].memory_budget, None);
+        assert_eq!(c.policy.tenants[1].weight, 2.5);
+        assert!(c.policy.tracks_tenants(), "tenant rows imply tracking");
+        assert_eq!(c.policy.tenant_cfg("t03").unwrap().weight, 2.5);
+        assert!(c.policy.tenant_cfg("t09").is_none());
+    }
+
+    #[test]
+    fn tenant_overrides_update_rows_in_place() {
+        let mut c = PlatformConfig::from_str("[tenants.t00]\nmemory_budget = \"8MiB\"\n").unwrap();
+        c.apply_overrides(&[
+            "tenants.t00.memory_budget=\"32MiB\"".to_string(),
+            "tenants.t01.weight=3.0".to_string(),
+        ])
+        .unwrap();
+        assert_eq!(c.policy.tenants.len(), 2);
+        assert_eq!(c.policy.tenant_cfg("t00").unwrap().memory_budget, Some(32 << 20));
+        assert_eq!(c.policy.tenant_cfg("t01").unwrap().weight, 3.0);
+    }
+
+    #[test]
+    fn rejects_malformed_tenant_options() {
+        assert!(PlatformConfig::from_str("[tenants.t00]\nweight = 0\n").is_err());
+        assert!(PlatformConfig::from_str("[tenants.t00]\nbogus = 1\n").is_err());
+        assert!(PlatformConfig::from_str("[tenants]\nt00 = 1\n").is_err());
+        // Names no workload can ever match (the tNN- prefix convention)
+        // are configuration errors, not silent dead rows.
+        for bad in ["acme", "T00", "t0o", "t"] {
+            let text = format!("[tenants.{bad}]\nweight = 2.0\n");
+            assert!(PlatformConfig::from_str(&text).is_err(), "{bad}");
+        }
     }
 }

@@ -73,6 +73,14 @@ impl Table {
             .insert((section.to_string(), key.to_string()), v);
     }
 
+    /// Iterate every `(section, key, value)` entry in sorted order — how
+    /// dynamically-named sections (`[tenants.<name>]`) are discovered.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &str, &Value)> {
+        self.entries
+            .iter()
+            .map(|((s, k), v)| (s.as_str(), k.as_str(), v))
+    }
+
     pub fn len(&self) -> usize {
         self.entries.len()
     }

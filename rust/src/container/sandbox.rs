@@ -798,6 +798,34 @@ impl Sandbox {
         b
     }
 
+    /// The live-byte charge budget accounting uses for this sandbox: the
+    /// resident footprint while runnable, the live swapped-slot image
+    /// bytes while hibernated (the §3.1 point — a deflated container
+    /// costs its swap image, not memory), nothing once dead. The swap and
+    /// REAP files both hold a live image after a REAP-path hibernate; the
+    /// larger one is the deflated set.
+    pub fn live_bytes(&self) -> u64 {
+        match self.state {
+            ContainerState::Hibernate => self
+                .swap
+                .swapped_bytes()
+                .max(self.swap.reap_live_pages() * PAGE_SIZE as u64),
+            ContainerState::Dead => 0,
+            _ => self.footprint().total_bytes(),
+        }
+    }
+
+    /// O(1) estimate of the live-byte charge this sandbox will hold once
+    /// a just-begun wake's REAP prefetch lands: the deflated image plus
+    /// the recorded working set the prefetch will commit. Budget
+    /// accounting charges an inflating instance at this estimate until
+    /// the finish stores the real footprint — deliberately a slight
+    /// over-count (image pages in the working set appear twice) so
+    /// in-flight inflations can never read as budget headroom.
+    pub fn wake_estimate_bytes(&self) -> u64 {
+        self.swap.swapped_bytes() + self.swap.reap_live_pages() * PAGE_SIZE as u64
+    }
+
     /// Allocator occupancy (debug/metrics).
     pub fn alloc_stats(&self) -> crate::mem::bitmap_alloc::AllocStats {
         self.alloc.stats()

@@ -19,9 +19,12 @@
 //! * the **container state machine** of Fig. 3 with the three new states
 //!   (`Hibernate`, `HibernateRunning`, `WokenUp`) and the 4-step
 //!   deflate / 2-trigger inflate orchestration ([`container`]);
-//! * a serverless **platform** around it: router, per-function pools,
-//!   keep-alive/hibernate policy under a host memory budget, anticipatory
-//!   wake-up predictor, trace generation/replay and metrics ([`platform`]);
+//! * a serverless **platform** around it: router, per-function pools, a
+//!   pluggable keep-alive policy (`Policy` trait — hibernate, warm-only
+//!   baseline, tenant-fair budgets) over a hierarchical host → tenant
+//!   memory budget with optional per-shard pressure leases, anticipatory
+//!   wake-up predictor with learned per-function wake leads, trace
+//!   generation/replay and metrics ([`platform`], `docs/policy.md`);
 //! * a **parallel deterministic replay engine** that drives thousand-function
 //!   Azure-shaped scenarios through the sharded control plane with
 //!   bit-identical results at any worker count ([`replay`]);

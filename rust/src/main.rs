@@ -5,9 +5,10 @@
 //! ```text
 //! repro serve  [--config FILE] [--workers N] [--duration-ms N] [-o k=v ...]
 //! repro replay [--config FILE] [--duration-ms N] [--mean-gap-ms N]
-//!              [--trace FILE.csv] [-o k=v ...]
+//!              [--trace FILE.csv] [--policy NAME] [-o k=v ...]
 //! repro replay --scenario NAME [--funcs N] [--workers N] [--seed S]
-//!              [--duration-ms N] [--report FILE.json]   # parallel replay
+//!              [--duration-ms N] [--policy NAME] [--report FILE.json]
+//!                                              # parallel replay
 //! repro replay --list-scenarios
 //! repro fig6   [--quick]          # Figure 6: latency per container state
 //! repro fig7   [--quick]          # Figure 7: PSS per container state
@@ -159,7 +160,10 @@ fn cmd_replay(args: &Args) -> Result<()> {
     if let Some(name) = args.get("scenario") {
         return cmd_replay_scenario(args, name);
     }
-    let cfg = load_config(args)?;
+    let mut cfg = load_config(args)?;
+    if let Some(kind) = args.get("policy") {
+        cfg.policy.kind = kind.to_string();
+    }
     let duration_ms = args.get_u64("duration-ms", 60_000)?;
     let mean_gap_ms = args.get_u64("mean-gap-ms", 500)?;
     let runner = make_runner(&cfg);
@@ -192,13 +196,19 @@ fn cmd_replay(args: &Args) -> Result<()> {
 /// report, optionally write it as JSON.
 fn cmd_replay_scenario(args: &Args, name: &str) -> Result<()> {
     let mut cfg = load_config(args)?;
+    // `--policy NAME` is sugar for `-o policy.kind=NAME` — the knob the
+    // policy-search workflow sweeps.
+    if let Some(kind) = args.get("policy") {
+        cfg.policy.kind = kind.to_string();
+    }
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     let funcs = args.get_u64("funcs", 1000)? as usize;
     let duration_ms = args.get_u64("duration-ms", 300_000)?;
     let workers = args.get_u64("workers", 0)? as usize; // 0 = auto
     let run = replay::scenario::build(name, funcs, duration_ms * 1_000_000, cfg.seed)?;
     println!(
-        "scenario {name}: {} functions, {} events over virtual {duration_ms} ms",
+        "scenario {name} (policy {}): {} functions, {} events over virtual {duration_ms} ms",
+        if cfg.policy.kind.is_empty() { "hibernate" } else { cfg.policy.kind.as_str() },
         run.specs.len(),
         run.events.len()
     );

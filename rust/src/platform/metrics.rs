@@ -62,9 +62,22 @@ pub struct Counters {
     pub pages_reclaimed: AtomicU64,
     pub pages_swapped_out: AtomicU64,
     /// Pipeline jobs shed by the backpressure cap
-    /// (`policy.pipeline_queue_cap`): deflations/teardowns that fell back
-    /// to running inline on the tick, plus anticipatory wakes skipped.
+    /// (`policy.pipeline_queue_cap`) where the *incoming* submission paid:
+    /// deflations/teardowns that fell back to running inline on the tick,
+    /// plus anticipatory wakes skipped.
     pub pipeline_sheds: AtomicU64,
+    /// Sheds where the *largest queued deflation* paid instead: a bigger
+    /// pending deflation (more deferred I/O per queue slot) was pulled
+    /// off the queue and run inline so the smaller incoming job could
+    /// queue.
+    pub pipeline_sheds_largest: AtomicU64,
+    /// Applied policy decisions by typed reason (see
+    /// [`super::policy::Reason`]).
+    pub decisions_idle_timeout: AtomicU64,
+    pub decisions_host_pressure: AtomicU64,
+    pub decisions_tenant_pressure: AtomicU64,
+    pub decisions_stale_hibernate: AtomicU64,
+    pub decisions_anticipated_arrival: AtomicU64,
     /// Gauge (not a monotonic counter): instance-pipeline jobs queued or
     /// in flight right now, mirrored by the pipeline on every submit and
     /// completion. Reads 0 whenever the pipeline is drained.
@@ -91,7 +104,13 @@ impl Counters {
             pages_reclaimed,
             pages_swapped_out,
             pipeline_sheds,
-            pipeline_depth
+            pipeline_sheds_largest,
+            pipeline_depth,
+            decisions_idle_timeout,
+            decisions_host_pressure,
+            decisions_tenant_pressure,
+            decisions_stale_hibernate,
+            decisions_anticipated_arrival
         )
     }
 }
@@ -119,6 +138,19 @@ impl Metrics {
     /// The stripe owning `workload`'s rows.
     fn stripe(&self, workload: &str) -> &Mutex<BTreeMap<(String, ServedFrom), Summary>> {
         &self.stripes[(fnv1a(workload) % LATENCY_STRIPES as u64) as usize]
+    }
+
+    /// Count one applied policy decision under its typed reason.
+    pub fn record_decision(&self, reason: super::policy::Reason) {
+        use super::policy::Reason;
+        let counter = match reason {
+            Reason::IdleTimeout => &self.counters.decisions_idle_timeout,
+            Reason::HostPressure => &self.counters.decisions_host_pressure,
+            Reason::TenantPressure => &self.counters.decisions_tenant_pressure,
+            Reason::StaleHibernate => &self.counters.decisions_stale_hibernate,
+            Reason::AnticipatedArrival => &self.counters.decisions_anticipated_arrival,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one request latency (virtual ns).
@@ -241,6 +273,22 @@ mod tests {
             back.get("latencies").unwrap().as_arr().unwrap().len(),
             1
         );
+    }
+
+    #[test]
+    fn decision_reasons_count_separately() {
+        use crate::platform::policy::Reason;
+        let m = Metrics::new();
+        m.record_decision(Reason::IdleTimeout);
+        m.record_decision(Reason::IdleTimeout);
+        m.record_decision(Reason::TenantPressure);
+        let snap = m.counters.snapshot();
+        let get = |k: &str| snap.iter().find(|(n, _)| *n == k).map(|(_, v)| *v).unwrap();
+        assert_eq!(get("decisions_idle_timeout"), 2);
+        assert_eq!(get("decisions_tenant_pressure"), 1);
+        assert_eq!(get("decisions_host_pressure"), 0);
+        let r = m.report();
+        assert!(r.contains("decisions_idle_timeout=2"));
     }
 
     #[test]

@@ -49,9 +49,10 @@ use crate::simtime::Clock;
 use crate::workloads::WorkloadSpec;
 use anyhow::{bail, Context, Result};
 use metrics::{Metrics, ServedFrom};
-use policy::{Action, Mode, PolicyEngine};
+use policy::{tenant_of, AppliedAction, BudgetFrame, Decision, Policy, Verb, WakeLeads};
 use predictor::Predictor;
 use shard::ShardSet;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use trace::TraceEvent;
@@ -73,7 +74,13 @@ pub struct Platform {
     pub cfg: PlatformConfig,
     svc: Arc<SandboxServices>,
     shards: ShardSet,
-    engine: PolicyEngine,
+    /// The pluggable keep-alive policy ([`policy::Policy`]), resolved from
+    /// `policy.kind` (or injected via [`Platform::with_policy`]).
+    policy: Box<dyn Policy>,
+    /// Learned per-function anticipatory wake leads: seeded at the classic
+    /// 50 ms constant, updated by the pipeline from measured inflation
+    /// durations, read by the policy every tick.
+    wake_leads: Arc<WakeLeads>,
     /// One predictor per shard: arrival tracks are keyed by workload and
     /// workloads are shard-partitioned, so prediction state needs no
     /// cross-shard lock either.
@@ -91,18 +98,21 @@ pub struct Platform {
 }
 
 impl Platform {
-    /// Build a platform. `runner` executes payloads (PJRT in production,
+    /// Build a platform with the policy `policy.kind` names (`hibernate`
+    /// by default). `runner` executes payloads (PJRT in production,
     /// [`crate::container::NoopRunner`] in memory-only experiments).
     pub fn new(cfg: PlatformConfig, runner: Arc<dyn PayloadRunner>) -> Result<Self> {
-        Self::with_mode(cfg, runner, Mode::Hibernate)
+        let policy = policy::build_policy(&cfg.policy)?;
+        Self::with_policy(cfg, runner, policy)
     }
 
-    /// Build with an explicit policy mode (the density bench's baseline
-    /// uses [`Mode::WarmOnly`]).
-    pub fn with_mode(
+    /// Build with an explicitly injected [`Policy`] — how out-of-tree
+    /// policies (replay-driven policy search, tests) plug in without a
+    /// registry entry.
+    pub fn with_policy(
         cfg: PlatformConfig,
         runner: Arc<dyn PayloadRunner>,
-        mode: Mode,
+        policy: Box<dyn Policy>,
     ) -> Result<Self> {
         let svc = SandboxServices::new_local(
             cfg.host_memory as usize,
@@ -132,13 +142,16 @@ impl Platform {
                 .unwrap_or(4)
         };
         let metrics = Arc::new(Metrics::new());
+        let wake_leads = Arc::new(WakeLeads::new(cfg.policy.adaptive_wake_lead));
         let p = Self {
-            engine: PolicyEngine::new(cfg.policy.clone(), mode),
+            policy,
             predictors: (0..shard_count).map(|_| Predictor::new(0.3)).collect(),
             pipeline: pipeline::InstancePipeline::new(
                 cfg.policy.pipeline_workers,
                 metrics.clone(),
+                wake_leads.clone(),
             ),
+            wake_leads,
             metrics,
             svc,
             cfg,
@@ -208,7 +221,7 @@ impl Platform {
         // Route — and reserve the chosen instance — under the shard lock;
         // run outside it. The warm path allocates nothing under the lock;
         // the spec is cloned only when a cold start actually needs it.
-        let (sandbox, last_active, reservation, served_from) = {
+        let (sandbox, last_active, live_gauge, reservation, served_from) = {
             let mut guard = shard.lock();
             let pool = guard
                 .pools
@@ -227,6 +240,7 @@ impl Platform {
                     (
                         inst.sandbox.clone(),
                         inst.last_active.clone(),
+                        inst.live_gauge.clone(),
                         reservation,
                         ServedFrom::from_state(state),
                     )
@@ -256,6 +270,7 @@ impl Platform {
                     (
                         inst.sandbox.clone(),
                         inst.last_active.clone(),
+                        inst.live_gauge.clone(),
                         reservation,
                         ServedFrom::ColdStart,
                     )
@@ -271,12 +286,15 @@ impl Platform {
         // Bump last-activity — only for served requests, so a persistently
         // failing instance still ages toward hibernation/eviction — before
         // releasing the reservation, so the policy loop never sees a
-        // just-served instance with stale idleness.
-        if result.is_ok() {
+        // just-served instance with stale idleness. The live-byte gauge
+        // refreshes at the same settled point (faults and demand wakes
+        // during the request changed the footprint).
+        if let Ok((_, live)) = &result {
             last_active.fetch_max(now_vns + latency_ns, Ordering::Relaxed);
+            live_gauge.store(*live, Ordering::Relaxed);
         }
         drop(reservation); // panic-safe: would also release on unwind
-        let outcome = result?;
+        let (outcome, _) = result?;
 
         self.metrics.record_latency(workload, served_from, latency_ns);
         Ok(RequestReport {
@@ -290,12 +308,14 @@ impl Platform {
     }
 
     /// Run a routed request against its reserved sandbox. The caller holds
-    /// the reservation and releases it afterwards.
+    /// the reservation and releases it afterwards. Returns the outcome
+    /// plus the sandbox's post-request live-byte charge (for the
+    /// instance's gauge).
     fn execute_request(
         &self,
         sandbox: &Arc<Mutex<Sandbox>>,
         clock: &Clock,
-    ) -> Result<RequestOutcome> {
+    ) -> Result<(RequestOutcome, u64)> {
         let mut sb = sandbox.lock().unwrap();
         if !sb.state().accepts_requests() {
             bail!(
@@ -309,7 +329,8 @@ impl Platform {
                 .demand_wakes
                 .fetch_add(1, Ordering::Relaxed);
         }
-        sb.handle_request(clock)
+        let outcome = sb.handle_request(clock)?;
+        Ok((outcome, sb.live_bytes()))
     }
 
     /// Run one policy tick at virtual time `now_vns`: hibernate idle
@@ -337,10 +358,101 @@ impl Platform {
     /// the I/O itself parallelizes and never runs under a shard lock. The
     /// threaded server uses [`Self::policy_tick_nowait`] instead, which
     /// leaves jobs in flight and reaps them at its next tick.
-    pub fn policy_tick(&self, now_vns: u64) -> Result<Vec<Action>> {
+    pub fn policy_tick(&self, now_vns: u64) -> Result<Vec<AppliedAction>> {
         let applied = self.policy_tick_nowait(now_vns)?;
         self.drain_pipeline()?;
         Ok(applied)
+    }
+
+    /// The active policy's stable name (`policy.kind` spelling).
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// The learned anticipatory wake lead for `workload` (clamped EWMA of
+    /// measured inflation durations; the 50 ms seed before any sample).
+    pub fn wake_lead_ns(&self, workload: &str) -> u64 {
+        self.wake_leads.lead_ns(workload)
+    }
+
+    /// Reconcile the budget hierarchy: per-shard committed live bytes
+    /// (the lease basis), per-shard leases when `policy.pressure_leases`
+    /// is on, the per-tenant ledger when the config tracks tenants, and
+    /// the host committed-bytes pressure figure. Called once per live
+    /// tick, and once per replay epoch by the epoch leader — every policy
+    /// decision until the next reconciliation sees this frame
+    /// ([`crate::replay`]'s determinism model).
+    pub fn reconcile_budget(&self) -> BudgetFrame {
+        let track_tenants = self.cfg.policy.tracks_tenants();
+        // The classic configuration (no leases, no tenants) needs nothing
+        // but the host figure — don't sweep every shard's gauges per tick
+        // just to throw the sums away.
+        if !track_tenants && !self.cfg.policy.pressure_leases {
+            return BudgetFrame {
+                host_used: self.memory_used(),
+                shard_committed: Vec::new(),
+                leases: None,
+                tenants: Vec::new(),
+            };
+        }
+        let n = self.shards.len();
+        let mut shard_committed = vec![0u64; n];
+        let mut tenant_used: BTreeMap<String, Vec<u64>> = BTreeMap::new();
+        for si in 0..n {
+            let guard = self.shards.get(si).lock();
+            for (w, pool) in guard.pools.iter() {
+                let bytes: u64 = pool.instances.iter().map(|i| i.live_bytes()).sum();
+                shard_committed[si] += bytes;
+                if track_tenants {
+                    if let Some(t) = tenant_of(w) {
+                        tenant_used
+                            .entry(t.to_string())
+                            .or_insert_with(|| vec![0u64; n])[si] += bytes;
+                    }
+                }
+            }
+        }
+        let leases = self.cfg.policy.pressure_leases.then(|| {
+            BudgetFrame::split_leases(self.cfg.policy.memory_budget, &shard_committed)
+        });
+        let tenants = policy::resolve_tenants(&self.cfg.policy, &tenant_used);
+        BudgetFrame {
+            host_used: self.memory_used(),
+            shard_committed,
+            leases,
+            tenants,
+        }
+    }
+
+    /// Shard `si`'s *live* usage figures (gauge sums — no sandbox locks):
+    /// committed bytes, plus per-tenant bytes when tenants are tracked.
+    /// Under leases/tenants these are the figures the shard decides
+    /// against: its own state is single-owner between epoch barriers, so
+    /// the live read is deterministic and sharper than the frame-time
+    /// snapshot.
+    fn shard_live(&self, si: usize) -> policy::ShardLive {
+        let track_tenants = self.cfg.policy.tracks_tenants();
+        let guard = self.shards.get(si).lock();
+        let mut committed = 0u64;
+        let mut tenant_used: Vec<(String, u64)> = Vec::new();
+        for (w, pool) in guard.pools.iter() {
+            let bytes: u64 = pool.instances.iter().map(|i| i.live_bytes()).sum();
+            committed += bytes;
+            if track_tenants {
+                if let Some(t) = tenant_of(w) {
+                    match tenant_used.iter_mut().find(|(n, _)| n == t) {
+                        Some((_, b)) => *b += bytes,
+                        None => tenant_used.push((t.to_string(), bytes)),
+                    }
+                }
+            }
+        }
+        tenant_used.sort_by(|a, b| a.0.cmp(&b.0));
+        policy::ShardLive {
+            si,
+            committed,
+            tenant_used,
+        }
     }
 
     /// [`Self::policy_tick`] without the trailing drain: pipeline jobs stay
@@ -349,95 +461,160 @@ impl Platform {
     /// This is what bounds tick latency for the live policy thread: neither
     /// a 10 GB sandbox deflating nor an anticipatory wake's batch prefetch
     /// can stall the control loop anymore.
-    pub fn policy_tick_nowait(&self, now_vns: u64) -> Result<Vec<Action>> {
+    pub fn policy_tick_nowait(&self, now_vns: u64) -> Result<Vec<AppliedAction>> {
         // Reap first, but don't let a stashed error from a *previous*
         // tick's job cancel this tick's decisions — run the walk, then
         // surface the error.
         let reaped = self.reap_pipeline();
         let n = self.shards.len();
-        let stride = self.engine.cfg.tick_stride.max(1);
+        let stride = self.cfg.policy.tick_stride.max(1);
         let per_round = n.div_ceil(stride);
         let start = if stride == 1 {
             0
         } else {
             self.tick_cursor.fetch_add(per_round, Ordering::Relaxed) % n
         };
-        let memory_used = self.memory_used();
+        let frame = self.reconcile_budget();
         let mut applied = Vec::new();
         for k in 0..per_round {
             let si = (start + k) % n;
-            applied.extend(self.policy_tick_shard(si, now_vns, memory_used)?);
+            applied.extend(self.policy_tick_shard(si, now_vns, &frame)?);
         }
         reaped?;
         Ok(applied)
     }
 
-    /// The shard-scoped policy step: decide/apply/sweep for shard `si` only,
-    /// against an explicit `memory_used` pressure figure. This is the unit
-    /// the parallel replay engine drives — each replay worker ticks its own
-    /// shards against the epoch's reconciled pressure snapshot, so policy
-    /// decisions are reproducible no matter how shards are spread over
-    /// workers ([`crate::replay`]).
+    /// The shard-scoped policy step: decide/apply/sweep for shard `si`
+    /// only, against a reconciled [`BudgetFrame`]. This is the unit the
+    /// parallel replay engine drives — each replay worker ticks its own
+    /// shards against the epoch's frame, so policy decisions are
+    /// reproducible no matter how shards are spread over workers
+    /// ([`crate::replay`]).
+    ///
+    /// Structure: one shard-lock pass snapshots every unreserved
+    /// instance into [`policy::InstanceView`]s and collects the policy's
+    /// [`Decision`]s — pools in sorted name order, so the budget's
+    /// cross-pool deflation ledger is deterministic — then the decisions
+    /// are applied (each apply re-validates under the shard lock and
+    /// reserves its instance), then Dead instances are swept. Decisions
+    /// carry only pool indices; the workload string is cloned exactly
+    /// once per pool *with* decisions, so a steady-state tick over a
+    /// thousand idle functions allocates nothing per instance.
     pub fn policy_tick_shard(
         &self,
         si: usize,
         now_vns: u64,
-        memory_used: u64,
-    ) -> Result<Vec<Action>> {
+        frame: &BudgetFrame,
+    ) -> Result<Vec<AppliedAction>> {
         let shard = self.shards.get(si);
-        let workloads: Vec<String> = shard.lock().pools.keys().cloned().collect();
-        let mut applied = Vec::new();
-        for w in workloads {
-            let actions = {
-                let guard = shard.lock();
-                let Some(pool) = guard.pools.get(&w) else { continue };
-                self.engine
-                    .decide(&w, pool, now_vns, memory_used, Some(&self.predictors[si]))
-            };
-            for action in actions {
-                let ok = self.apply(&action, now_vns)?;
-                if ok {
-                    applied.push(action);
+        let live = (frame.leases.is_some() || self.cfg.policy.tracks_tenants())
+            .then(|| self.shard_live(si));
+        let budget = frame.mem_budget(si, &self.cfg.policy, live.as_ref());
+        let ctx = policy::TickCtx {
+            now_vns,
+            cfg: &self.cfg.policy,
+            budget: &budget,
+            predictor: Some(&self.predictors[si]),
+            wake_leads: &self.wake_leads,
+        };
+        let mut decided: Vec<(String, Vec<Decision>)> = Vec::new();
+        {
+            let guard = shard.lock();
+            let mut pools: Vec<(&String, &pool::FunctionPool)> = guard.pools.iter().collect();
+            pools.sort_by(|a, b| a.0.cmp(b.0));
+            let mut views: Vec<policy::InstanceView> = Vec::new();
+            for (w, fp) in pools {
+                views.clear();
+                for (idx, inst) in fp.instances.iter().enumerate() {
+                    // Reserved = request/policy action in flight: not
+                    // decidable, and reading `state()` would block on the
+                    // sandbox mutex.
+                    if inst.is_reserved() {
+                        continue;
+                    }
+                    views.push(policy::InstanceView {
+                        idx,
+                        state: inst.state(),
+                        idle_ns: inst.idle_ns(now_vns),
+                        live_bytes: inst.live_bytes(),
+                    });
+                }
+                if views.is_empty() {
+                    continue;
+                }
+                let view = policy::PoolView {
+                    workload: w,
+                    tenant: tenant_of(w),
+                    instances: &views,
+                };
+                let decisions = self.policy.decide(&ctx, &view);
+                if !decisions.is_empty() {
+                    decided.push(((*w).clone(), decisions));
                 }
             }
-            if let Some(p) = shard.lock().pools.get_mut(&w) {
+        }
+        let mut applied = Vec::new();
+        for (w, decisions) in decided {
+            for d in decisions {
+                if self.apply(&w, d, now_vns)? {
+                    self.metrics.record_decision(d.reason);
+                    applied.push(AppliedAction {
+                        workload: w.clone(),
+                        idx: d.idx,
+                        verb: d.verb,
+                        reason: d.reason,
+                    });
+                }
+            }
+        }
+        {
+            let mut guard = shard.lock();
+            for p in guard.pools.values_mut() {
                 p.sweep_dead();
             }
         }
         Ok(applied)
     }
 
-    fn apply(&self, action: &Action, now_vns: u64) -> Result<bool> {
+    fn apply(&self, workload: &str, d: Decision, now_vns: u64) -> Result<bool> {
         let clock = Clock::new();
-        let (w, idx) = match action {
-            Action::Hibernate { workload, idx }
-            | Action::Evict { workload, idx }
-            | Action::Wake { workload, idx } => (workload.as_str(), *idx),
-        };
-        let (sandbox, last_active, reservation) = {
-            let guard = self.shards.shard_for(w).lock();
-            let Some(pool) = guard.pools.get(w) else {
+        let (sandbox, last_active, live_gauge, reservation) = {
+            let guard = self.shards.shard_for(workload).lock();
+            let Some(pool) = guard.pools.get(workload) else {
                 return Ok(false);
             };
-            let Some(inst) = pool.instances.get(idx) else {
+            let Some(inst) = pool.instances.get(d.idx) else {
                 return Ok(false);
             };
             let Some(reservation) = inst.try_reserve() else {
                 return Ok(false); // raced with a request
             };
-            (inst.sandbox.clone(), inst.last_active.clone(), reservation)
+            (
+                inst.sandbox.clone(),
+                inst.last_active.clone(),
+                inst.live_gauge.clone(),
+                reservation,
+            )
         };
         // Every action is a cheap in-tick step (a state flip, or nothing
         // at all for evictions) plus expensive I/O shipped to the
         // instance pipeline with the reservation riding along. With
         // `pipeline_workers = 0` the I/O runs inline — the pre-pipeline
         // behavior.
-        match action {
-            Action::Hibernate { .. } => self.apply_hibernate(w, sandbox, reservation, &clock),
-            Action::Wake { .. } => {
-                self.apply_wake(w, sandbox, &last_active, reservation, now_vns, &clock)
+        match d.verb {
+            Verb::Hibernate => {
+                self.apply_hibernate(workload, sandbox, live_gauge, reservation, &clock)
             }
-            Action::Evict { .. } => self.apply_evict(w, sandbox, reservation),
+            Verb::Wake => self.apply_wake(
+                workload,
+                sandbox,
+                &last_active,
+                live_gauge,
+                reservation,
+                now_vns,
+                &clock,
+            ),
+            Verb::Evict => self.apply_evict(workload, sandbox, live_gauge, reservation),
         }
     }
 
@@ -449,9 +626,13 @@ impl Platform {
         &self,
         workload: &str,
         sandbox: Arc<Mutex<Sandbox>>,
+        live_gauge: Arc<AtomicU64>,
         reservation: pool::Reservation,
         clock: &Clock,
     ) -> Result<bool> {
+        // Size the deferred I/O from the *warm* charge, before the flip
+        // below rewrites the gauge to the hibernated estimate.
+        let est_bytes = live_gauge.load(Ordering::Relaxed);
         {
             let mut sb = sandbox.lock().unwrap();
             if !matches!(
@@ -471,6 +652,14 @@ impl Platform {
             if sb.drain_signals_deferred(clock)? != Some(PendingIo::Deflate) {
                 return Ok(false);
             }
+            // Re-charge the instance as hibernated *now* (O(1): the
+            // carried swap-slot image), not at finish completion: a
+            // nowait tick whose deflation is still in flight must not
+            // see the stale warm charge and deflate further instances
+            // for overage already on its way out. The completing job
+            // refines the figure; replay never observes the estimate
+            // (views snapshot before applies, drains before reads).
+            live_gauge.store(sb.live_bytes(), Ordering::Relaxed);
         }
         self.metrics
             .counters
@@ -481,6 +670,8 @@ impl Platform {
             sandbox,
             reservation,
             kind: pipeline::JobKind::Deflate,
+            live_gauge,
+            est_bytes,
         })?;
         Ok(true)
     }
@@ -489,11 +680,13 @@ impl Platform {
     /// immediately ranks the instance WokenUp — and the REAP batch
     /// prefetch ([`Sandbox::wake_finish`]) goes down the pipeline, so
     /// anticipatory-wake I/O no longer bounds policy-tick latency.
+    #[allow(clippy::too_many_arguments)]
     fn apply_wake(
         &self,
         workload: &str,
         sandbox: Arc<Mutex<Sandbox>>,
         last_active: &AtomicU64,
+        live_gauge: Arc<AtomicU64>,
         reservation: pool::Reservation,
         now_vns: u64,
         clock: &Clock,
@@ -521,6 +714,14 @@ impl Platform {
             if sb.drain_signals_deferred(clock)? != Some(PendingIo::Inflate) {
                 return Ok(false);
             }
+            // Mirror of the deflate-side eager re-charge: count the
+            // inflating instance at its post-wake estimate (image +
+            // recorded working set, O(1)) so a nowait tick with the
+            // inflation still in flight doesn't read the small
+            // hibernated charge as tenant/lease headroom and wake yet
+            // more instances past the budget. The completing job stores
+            // the real footprint; replay never observes the estimate.
+            live_gauge.store(sb.wake_estimate_bytes(), Ordering::Relaxed);
         }
         // Waking resets idleness: the wake is in anticipation of an
         // imminent request, so the instance must not be re-deflated by the
@@ -530,11 +731,14 @@ impl Platform {
             .counters
             .anticipatory_wakes
             .fetch_add(1, Ordering::Relaxed);
+        let est_bytes = live_gauge.load(Ordering::Relaxed);
         self.dispatch(pipeline::PipelineJob {
             workload: workload.to_string(),
             sandbox,
             reservation,
             kind: pipeline::JobKind::Inflate,
+            live_gauge,
+            est_bytes,
         })?;
         Ok(true)
     }
@@ -547,6 +751,7 @@ impl Platform {
         &self,
         workload: &str,
         sandbox: Arc<Mutex<Sandbox>>,
+        live_gauge: Arc<AtomicU64>,
         reservation: pool::Reservation,
     ) -> Result<bool> {
         {
@@ -555,22 +760,29 @@ impl Platform {
                 return Ok(false);
             }
         }
+        let est_bytes = live_gauge.load(Ordering::Relaxed);
         self.dispatch(pipeline::PipelineJob {
             workload: workload.to_string(),
             sandbox,
             reservation,
             kind: pipeline::JobKind::Teardown,
+            live_gauge,
+            est_bytes,
         })?;
         Ok(true)
     }
 
     /// Ship a job to the pipeline, honoring the backpressure cap
-    /// (`policy.pipeline_queue_cap`, 0 = unbounded): on overflow the job
-    /// is shed — it falls back to running inline on the tick, which
-    /// self-throttles the control loop instead of letting the queue grow
-    /// without bound under a pressure storm. Policy submits most-idle
-    /// first, so the jobs shed are the newest-idle ones. (Inflations are
-    /// shed earlier, in [`Self::apply_wake`], before any state flips.)
+    /// (`policy.pipeline_queue_cap`, 0 = unbounded): on overflow a job is
+    /// shed — run inline on the tick, which self-throttles the control
+    /// loop instead of letting the queue grow without bound under a
+    /// pressure storm. *Which* job pays is size-aware: when the incoming
+    /// job is a deflation and a strictly larger deflation is still
+    /// queued, the larger one is pulled and run inline (most deferred I/O
+    /// retired per shed slot — `pipeline_sheds_largest`) and the incoming
+    /// job queues in its place; otherwise the incoming job runs inline
+    /// (`pipeline_sheds`). Inflations are shed earlier, in
+    /// [`Self::apply_wake`], before any state flips.
     fn dispatch(&self, job: pipeline::PipelineJob) -> Result<()> {
         if !self.pipeline.is_async() {
             return self.pipeline.run_sync(job);
@@ -580,6 +792,16 @@ impl Platform {
             && job.kind != pipeline::JobKind::Inflate
             && self.pipeline.pending() >= cap
         {
+            if job.kind == pipeline::JobKind::Deflate {
+                if let Some(victim) = self.pipeline.steal_largest_deflation(job.est_bytes) {
+                    self.metrics
+                        .counters
+                        .pipeline_sheds_largest
+                        .fetch_add(1, Ordering::Relaxed);
+                    self.pipeline.submit(job);
+                    return self.pipeline.run_inline(victim);
+                }
+            }
             self.metrics
                 .counters
                 .pipeline_sheds
@@ -631,12 +853,13 @@ impl Platform {
             .map(|o| o.reports)
     }
 
-    /// Snapshot: per-workload instance states + PSS (the Fig. 7 data),
-    /// sorted by workload name. Diagnostic — may wait on in-flight
-    /// requests' sandboxes, but never while holding a shard lock, so a
-    /// slow request can't stall routing for the rest of its shard.
-    pub fn pool_snapshot(&self) -> Vec<(String, Vec<(ContainerState, u64)>)> {
-        let mut out: Vec<(String, Vec<(ContainerState, u64)>)> = Vec::new();
+    /// Snapshot: per-workload learned wake lead plus instance states +
+    /// PSS (the Fig. 7 data), sorted by workload name. Diagnostic — may
+    /// wait on in-flight requests' sandboxes, but never while holding a
+    /// shard lock, so a slow request can't stall routing for the rest of
+    /// its shard.
+    pub fn pool_snapshot(&self) -> Vec<(String, u64, Vec<(ContainerState, u64)>)> {
+        let mut out: Vec<(String, u64, Vec<(ContainerState, u64)>)> = Vec::new();
         for shard in self.shards.iter() {
             // Clone sandbox handles under the shard lock; read them after
             // dropping it.
@@ -660,7 +883,8 @@ impl Platform {
                         (sb.state(), sb.footprint().total_bytes())
                     })
                     .collect();
-                out.push((w, rows));
+                let lead = self.wake_leads.lead_ns(&w);
+                out.push((w, lead, rows));
             }
         }
         out.sort_by(|a, b| a.0.cmp(&b.0));
@@ -814,7 +1038,7 @@ mod tests {
         // Idle long past the threshold → policy hibernates it.
         let actions = p.policy_tick(t1 + 50_000_000).unwrap();
         assert!(
-            actions.iter().any(|a| matches!(a, Action::Hibernate { .. })),
+            actions.iter().any(|a| a.verb == Verb::Hibernate),
             "{actions:?}"
         );
         let r2 = p
@@ -872,7 +1096,7 @@ mod tests {
         p.request_at("golang-hello", 0).unwrap();
         let used_before = p.memory_used();
         let actions = p.policy_tick(1).unwrap();
-        assert!(actions.iter().any(|a| matches!(a, Action::Hibernate { .. })));
+        assert!(actions.iter().any(|a| a.verb == Verb::Hibernate));
         assert!(
             p.memory_used() < used_before,
             "deflation must reduce committed memory: {} -> {}",
@@ -950,7 +1174,7 @@ mod tests {
             let actions = p.policy_tick(1_000_000_000).unwrap();
             hibernated += actions
                 .iter()
-                .filter(|a| matches!(a, Action::Hibernate { .. }))
+                .filter(|a| a.verb == Verb::Hibernate)
                 .count();
         }
         assert_eq!(
@@ -961,7 +1185,7 @@ mod tests {
         let p2 = test_platform(10);
         p2.request_at("golang-hello", 0).unwrap();
         let actions = p2.policy_tick(1_000_000_000).unwrap();
-        assert!(actions.iter().any(|a| matches!(a, Action::Hibernate { .. })));
+        assert!(actions.iter().any(|a| a.verb == Verb::Hibernate));
     }
 
     #[test]

@@ -21,6 +21,12 @@
 //! (dropped) only after the finish completes, at which point the instance
 //! is a fully-transitioned, routable container.
 //!
+//! Besides the transition itself, a completing job refreshes the
+//! instance's live-byte gauge (the [`pool`](super::pool) charge budget
+//! accounting reads) and, for inflations, feeds the measured (charged)
+//! `wake_finish` duration into the platform's learned wake leads
+//! ([`WakeLeads`]) — the policy's adaptive SIGCONT lead.
+//!
 //! Ordering contract for determinism: a worker (1) folds the job's
 //! counters into the shared [`Metrics`], (2) drops the reservation, and
 //! only then (3) decrements the pending gauge. [`InstancePipeline::drain`]
@@ -30,8 +36,12 @@
 //! bit-identical at any worker count ([`crate::replay`]).
 //!
 //! Backpressure is the platform's job (it owns the shed policy — see
-//! `policy.pipeline_queue_cap`); the pipeline only exposes its queue
-//! depth, mirrored into the metrics gauge so operators can watch it.
+//! `policy.pipeline_queue_cap`); the pipeline exposes its queue depth
+//! plus the surgery the shed policy needs:
+//! [`InstancePipeline::steal_largest_deflation`] pulls the queued
+//! deflation with the most deferred I/O per slot so the platform can run
+//! *that* inline ([`InstancePipeline::run_inline`]) instead of the
+//! (smaller) incoming job.
 //!
 //! Errors from a finish are stashed and surface at the next
 //! [`InstancePipeline::reap`]/[`InstancePipeline::drain`] (i.e. the next
@@ -39,12 +49,14 @@
 //! later.
 
 use super::metrics::Metrics;
+use super::policy::WakeLeads;
 use super::pool::Reservation;
 use crate::container::sandbox::Sandbox;
 use crate::simtime::Clock;
 use anyhow::{Context as _, Result};
-use std::sync::atomic::Ordering;
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 /// Which expensive half a job runs.
@@ -75,6 +87,12 @@ pub struct PipelineJob {
     pub sandbox: Arc<Mutex<Sandbox>>,
     pub reservation: Reservation,
     pub kind: JobKind,
+    /// The instance's live-byte gauge, refreshed when the finish
+    /// completes.
+    pub live_gauge: Arc<AtomicU64>,
+    /// Estimated deferred I/O (the live-byte charge at submission) — what
+    /// the shed policy sizes queued deflations by.
+    pub est_bytes: u64,
 }
 
 /// Test-only hook invoked by a worker before it starts a job — lets a
@@ -89,12 +107,18 @@ struct PoolState {
     completed: u64,
     /// Errors collected since the last reap.
     errors: Vec<anyhow::Error>,
+    /// Submitted jobs not yet picked up by a worker.
+    queue: VecDeque<PipelineJob>,
+    /// Set when the pipeline is dropping: workers drain and exit.
+    closed: bool,
 }
 
 struct Shared {
     state: Mutex<PoolState>,
     idle: Condvar,
+    work: Condvar,
     metrics: Arc<Metrics>,
+    wake_leads: Arc<WakeLeads>,
     gate: Mutex<Option<PipelineGate>>,
 }
 
@@ -102,46 +126,43 @@ struct Shared {
 /// [`InstancePipeline::run_sync`] executes the finish inline (the baseline
 /// the benches compare against, and the shed fallback).
 pub struct InstancePipeline {
-    tx: Option<mpsc::Sender<PipelineJob>>,
+    async_mode: bool,
     workers: Vec<JoinHandle<()>>,
     shared: Arc<Shared>,
 }
 
 impl InstancePipeline {
-    pub fn new(workers: usize, metrics: Arc<Metrics>) -> Self {
+    pub fn new(workers: usize, metrics: Arc<Metrics>, wake_leads: Arc<WakeLeads>) -> Self {
         let shared = Arc::new(Shared {
             state: Mutex::new(PoolState::default()),
             idle: Condvar::new(),
+            work: Condvar::new(),
             metrics,
+            wake_leads,
             gate: Mutex::new(None),
         });
-        if workers == 0 {
-            return Self {
-                tx: None,
-                workers: Vec::new(),
-                shared,
-            };
-        }
-        let (tx, rx) = mpsc::channel::<PipelineJob>();
-        // Lifecycle I/O is low-rate (policy cadence), so a shared receiver
-        // is fine here — contention is on job *arrival*, execution runs in
-        // parallel once a worker holds its job.
-        let rx = Arc::new(Mutex::new(rx));
         let handles = (0..workers)
             .map(|_| {
-                let rx = rx.clone();
                 let shared = shared.clone();
                 std::thread::spawn(move || loop {
-                    let job = match rx.lock().unwrap().recv() {
-                        Ok(job) => job,
-                        Err(_) => return, // channel closed: pool dropping
+                    let job = {
+                        let mut st = shared.state.lock().unwrap();
+                        loop {
+                            if let Some(job) = st.queue.pop_front() {
+                                break job;
+                            }
+                            if st.closed {
+                                return;
+                            }
+                            st = shared.work.wait(st).unwrap();
+                        }
                     };
                     run_job(&shared, job);
                 })
             })
             .collect();
         Self {
-            tx: Some(tx),
+            async_mode: workers > 0,
             workers: handles,
             shared,
         }
@@ -149,27 +170,34 @@ impl InstancePipeline {
 
     /// Does this pipeline actually run jobs asynchronously?
     pub fn is_async(&self) -> bool {
-        self.tx.is_some()
+        self.async_mode
     }
 
-    /// Queue a job. The pending gauge is bumped *before* the send so a
-    /// concurrent [`Self::drain`] can never miss the job.
+    /// Queue a job. The pending gauge is bumped *before* the job becomes
+    /// runnable so a concurrent [`Self::drain`] can never miss it.
+    ///
+    /// Panics on a synchronous (zero-worker) pipeline — nothing would
+    /// ever run the job, leaking its reservation and hanging `drain`;
+    /// callers must route through [`Self::run_sync`] instead.
     pub fn submit(&self, job: PipelineJob) {
-        {
-            let mut st = self.shared.state.lock().unwrap();
-            st.pending += 1;
-            self.shared
-                .metrics
-                .counters
-                .pipeline_depth
-                .store(st.pending as u64, Ordering::Relaxed);
-        }
-        let tx = self.tx.as_ref().expect("submit on a synchronous pipeline");
-        if let Err(mpsc::SendError(job)) = tx.send(job) {
+        assert!(self.async_mode, "submit on a synchronous pipeline");
+        let mut st = self.shared.state.lock().unwrap();
+        st.pending += 1;
+        self.shared
+            .metrics
+            .counters
+            .pipeline_depth
+            .store(st.pending as u64, Ordering::Relaxed);
+        if st.closed {
             // Workers are only gone while the pipeline is being torn down;
             // finish inline rather than losing the transition.
+            drop(st);
             run_job(&self.shared, job);
+            return;
         }
+        st.queue.push_back(job);
+        drop(st);
+        self.shared.work.notify_one();
     }
 
     /// Synchronous fallback (`pipeline_workers = 0`, or a shed job): run
@@ -180,10 +208,52 @@ impl InstancePipeline {
             sandbox,
             reservation,
             kind,
+            live_gauge,
+            ..
         } = job;
-        let result = run_one(&self.shared.metrics, kind, &workload, &sandbox);
+        let result = run_one(
+            &self.shared.metrics,
+            &self.shared.wake_leads,
+            kind,
+            &workload,
+            &sandbox,
+            &live_gauge,
+        );
         drop(reservation);
         result
+    }
+
+    /// Pull the queued (not yet running) deflation with the largest
+    /// estimated deferred I/O, if one exceeds `min_bytes`. The job stays
+    /// counted as pending — the caller owes it a [`Self::run_inline`].
+    /// Ties favor the oldest submission.
+    pub fn steal_largest_deflation(&self, min_bytes: u64) -> Option<PipelineJob> {
+        let mut st = self.shared.state.lock().unwrap();
+        let mut best: Option<(usize, u64)> = None;
+        for (i, job) in st.queue.iter().enumerate() {
+            if job.kind != JobKind::Deflate || job.est_bytes <= min_bytes {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((_, bytes)) => job.est_bytes > bytes,
+            };
+            if better {
+                best = Some((i, job.est_bytes));
+            }
+        }
+        let (i, _) = best?;
+        st.queue.remove(i)
+    }
+
+    /// Run a previously [stolen](Self::steal_largest_deflation) job on the
+    /// caller's thread with full worker accounting (pending decrement,
+    /// completion count, drain wakeup). Errors return directly instead of
+    /// being stashed — the shedding tick is synchronous anyway. The test
+    /// gate is deliberately not consulted: the caller *is* the policy
+    /// tick, and parking it on the gate would deadlock gated tests.
+    pub fn run_inline(&self, job: PipelineJob) -> Result<()> {
+        finish_job(&self.shared, job, false)
     }
 
     /// Jobs queued or in flight right now.
@@ -240,9 +310,10 @@ impl InstancePipeline {
 
 impl Drop for InstancePipeline {
     fn drop(&mut self) {
-        // Closing the channel lets each worker finish its backlog and exit
-        // on Disconnected; joining guarantees no job outlives the pool.
-        self.tx = None;
+        // Closing lets each worker finish the backlog and exit once the
+        // queue runs dry; joining guarantees no job outlives the pool.
+        self.shared.state.lock().unwrap().closed = true;
+        self.shared.work.notify_all();
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
@@ -254,13 +325,31 @@ fn run_job(shared: &Shared, job: PipelineJob) {
     if let Some(gate) = gate {
         gate();
     }
+    let _ = finish_job(shared, job, true);
+}
+
+/// Complete one job: run the finish, release the instance, then announce.
+/// With `stash` the error is queued for the next reap (the async worker
+/// path); without it the error returns to the caller (the inline path).
+/// Error stashing shares the completion critical section, so a drainer
+/// can never observe the completion without the error.
+fn finish_job(shared: &Shared, job: PipelineJob, stash: bool) -> Result<()> {
     let PipelineJob {
         workload,
         sandbox,
         reservation,
         kind,
+        live_gauge,
+        ..
     } = job;
-    let result = run_one(&shared.metrics, kind, &workload, &sandbox);
+    let result = run_one(
+        &shared.metrics,
+        &shared.wake_leads,
+        kind,
+        &workload,
+        &sandbox,
+        &live_gauge,
+    );
     // Release the instance before announcing completion: a drainer must
     // observe the transitioned instance as routable the moment pending
     // drops.
@@ -273,21 +362,28 @@ fn run_job(shared: &Shared, job: PipelineJob) {
         .counters
         .pipeline_depth
         .store(st.pending as u64, Ordering::Relaxed);
-    if let Err(e) = result {
-        st.errors.push(e);
-    }
+    let out = match result {
+        Err(e) if stash => {
+            st.errors.push(e);
+            Ok(())
+        }
+        other => other,
+    };
     drop(st);
     shared.idle.notify_all();
+    out
 }
 
-/// Run one finish and fold its counters into the metrics. Used by both the
-/// async workers and the sync fallback, so the two modes are
-/// observationally identical.
+/// Run one finish and fold its counters into the metrics. Used by the
+/// async workers, the inline shed path and the sync fallback, so all
+/// modes are observationally identical.
 fn run_one(
     metrics: &Metrics,
+    wake_leads: &WakeLeads,
     kind: JobKind,
     workload: &str,
     sandbox: &Arc<Mutex<Sandbox>>,
+    live_gauge: &AtomicU64,
 ) -> Result<()> {
     // Lifecycle I/O's charged time belongs to no request — it runs on the
     // platform's dime, like kernel writeback.
@@ -312,12 +408,216 @@ fn run_one(
             );
         }
         JobKind::Inflate => {
-            sb.wake_finish(&clock).with_context(fail)?;
+            let prefetched = sb.wake_finish(&clock).with_context(fail)?;
+            // The charged clock is exactly the prefetch's virtual
+            // duration — the sample the adaptive wake lead learns from.
+            // Only a *real* prefetch teaches it: an image-less wake (no
+            // REAP record yet) charges ~nothing, and anchoring the EWMA
+            // at 0 would collapse every later lead to the clamp floor.
+            if prefetched > 0 {
+                wake_leads.observe(workload, clock.charged_ns());
+            }
         }
         JobKind::Teardown => {
             sb.terminate().with_context(fail)?;
             metrics.counters.evictions.fetch_add(1, Ordering::Relaxed);
         }
     }
+    live_gauge.store(sb.live_bytes(), Ordering::Relaxed);
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SharingConfig;
+    use crate::container::sandbox::SandboxServices;
+    use crate::container::NoopRunner;
+    use crate::platform::pool::FunctionPool;
+    use crate::simtime::CostModel;
+    use crate::workloads::functionbench::{golang_hello, nodejs_hello, scaled_for_test};
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    fn rig(tag: &str) -> (Arc<SandboxServices>, FunctionPool) {
+        let svc = SandboxServices::new_local(
+            1 << 30,
+            CostModel::paper(),
+            SharingConfig::default(),
+            Arc::new(NoopRunner),
+            tag,
+        )
+        .unwrap();
+        (svc, FunctionPool::new())
+    }
+
+    /// Build a Deflate job for pool instance `idx`: flips
+    /// `hibernate_begin` (the platform's in-tick step) and reserves the
+    /// instance, exactly like `Platform::apply_hibernate`.
+    fn deflate_job(pool: &FunctionPool, idx: usize, workload: &str) -> PipelineJob {
+        let inst = &pool.instances[idx];
+        let reservation = inst.try_reserve().expect("instance must be free");
+        inst.sandbox.lock().unwrap().hibernate_begin().unwrap();
+        PipelineJob {
+            workload: workload.to_string(),
+            sandbox: inst.sandbox.clone(),
+            reservation,
+            kind: JobKind::Deflate,
+            live_gauge: inst.live_gauge.clone(),
+            est_bytes: inst.live_bytes(),
+        }
+    }
+
+    #[test]
+    fn steal_picks_the_largest_queued_deflation_and_inline_completes_it() {
+        let (svc, mut pool) = rig("pipe-steal");
+        let clock = crate::simtime::Clock::new();
+        // Two differently-sized sandboxes: big (nodejs half-scale) ≫ tiny.
+        let big = crate::container::sandbox::Sandbox::cold_start(
+            1,
+            scaled_for_test(nodejs_hello(), 2),
+            svc.clone(),
+            &clock,
+        )
+        .unwrap();
+        let tiny = crate::container::sandbox::Sandbox::cold_start(
+            2,
+            scaled_for_test(golang_hello(), 64),
+            svc.clone(),
+            &clock,
+        )
+        .unwrap();
+        pool.add(tiny, 0); // idx 0
+        pool.add(big, 0); // idx 1
+        assert!(
+            pool.instances[1].live_bytes() > pool.instances[0].live_bytes(),
+            "test premise: big must out-charge tiny"
+        );
+
+        let metrics = Arc::new(Metrics::new());
+        let leads = Arc::new(WakeLeads::new(true));
+        // One worker, parked on the gate with a sacrificial job so the
+        // queue contents are deterministic.
+        let pipeline = InstancePipeline::new(1, metrics.clone(), leads);
+        let (entered_tx, entered_rx) = mpsc::channel::<()>();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let entered_tx = Mutex::new(entered_tx);
+        let release_rx = Mutex::new(release_rx);
+        pipeline.set_gate(Some(Arc::new(move || {
+            let _ = entered_tx.lock().unwrap().send(());
+            let _ = release_rx.lock().unwrap().recv();
+        })));
+        pipeline.submit(deflate_job(&pool, 0, "tiny"));
+        entered_rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("worker must park on the sacrificial job");
+
+        // Queue the big deflation behind the parked worker; nothing picks
+        // it up, so the steal sees exactly one candidate.
+        pipeline.submit(deflate_job(&pool, 1, "big"));
+        assert_eq!(pipeline.pending(), 2);
+
+        // A steal with a floor above big's size finds nothing.
+        assert!(pipeline.steal_largest_deflation(u64::MAX).is_none());
+        let victim = pipeline
+            .steal_largest_deflation(0)
+            .expect("the queued big deflation must be stealable");
+        assert_eq!(victim.workload, "big");
+        assert_eq!(pipeline.pending(), 2, "stolen jobs stay pending");
+        let before = svc.host.committed_bytes();
+        pipeline.run_inline(victim).unwrap();
+        assert_eq!(pipeline.pending(), 1, "inline run completes the job");
+        assert!(
+            svc.host.committed_bytes() < before,
+            "the inline deflation must actually free memory"
+        );
+        assert_eq!(
+            pool.instances[1].sandbox.lock().unwrap().state(),
+            crate::container::state::ContainerState::Hibernate
+        );
+        assert!(
+            !pool.instances[1].is_reserved(),
+            "inline completion releases the reservation"
+        );
+        assert_eq!(
+            pool.instances[1].live_bytes(),
+            pool.instances[1].sandbox.lock().unwrap().live_bytes(),
+            "the completing job must refresh the live-byte gauge"
+        );
+
+        release_tx.send(()).unwrap();
+        pipeline.set_gate(None);
+        pipeline.drain().unwrap();
+        assert_eq!(pipeline.pending(), 0);
+    }
+
+    #[test]
+    fn inflation_jobs_teach_the_wake_lead_only_when_an_image_exists() {
+        use crate::platform::policy::{
+            WAKE_LEAD_MAX_NS, WAKE_LEAD_MIN_NS, WAKE_LEAD_SEED_NS,
+        };
+        let (svc, mut pool) = rig("pipe-lead");
+        let clock = crate::simtime::Clock::new();
+        let mut sb = crate::container::sandbox::Sandbox::cold_start(
+            1,
+            scaled_for_test(nodejs_hello(), 4),
+            svc.clone(),
+            &clock,
+        )
+        .unwrap();
+        // First hibernate is the full (page-fault) path: no REAP image.
+        sb.hibernate(&clock).unwrap();
+        pool.add(sb, 0);
+        let metrics = Arc::new(Metrics::new());
+        let leads = Arc::new(WakeLeads::new(true));
+        let pipeline = InstancePipeline::new(1, metrics, leads.clone());
+        let submit_wake = |pool: &FunctionPool| {
+            let inst = &pool.instances[0];
+            let reservation = inst.try_reserve().unwrap();
+            inst.sandbox
+                .lock()
+                .unwrap()
+                .wake_begin(&crate::simtime::Clock::new())
+                .unwrap();
+            pipeline.submit(PipelineJob {
+                workload: "w".into(),
+                sandbox: inst.sandbox.clone(),
+                reservation,
+                kind: JobKind::Inflate,
+                live_gauge: inst.live_gauge.clone(),
+                est_bytes: inst.live_bytes(),
+            });
+        };
+
+        // Image-less inflation: prefetches nothing, charges ~0 — it must
+        // NOT anchor the EWMA (a 0 sample would clamp every later lead
+        // to the 5 ms floor and silence anticipation at coarser ticks).
+        submit_wake(&pool);
+        pipeline.drain().unwrap();
+        assert_eq!(
+            leads.lead_ns("w"),
+            WAKE_LEAD_SEED_NS,
+            "a zero-page inflation must not poison the learned lead"
+        );
+
+        // Serve once (the sample request records the working set), then
+        // hibernate again: the REAP image now exists, and the next
+        // pipeline inflation is a real prefetch the lead learns from.
+        {
+            let mut sb = pool.instances[0].sandbox.lock().unwrap();
+            sb.handle_request(&crate::simtime::Clock::new()).unwrap();
+            sb.hibernate(&crate::simtime::Clock::new()).unwrap();
+        }
+        submit_wake(&pool);
+        pipeline.drain().unwrap();
+        let lead = leads.lead_ns("w");
+        assert_ne!(
+            lead, WAKE_LEAD_SEED_NS,
+            "a measured REAP inflation must replace the seed"
+        );
+        assert!(
+            (WAKE_LEAD_MIN_NS..=WAKE_LEAD_MAX_NS).contains(&lead),
+            "{lead}"
+        );
+    }
 }

@@ -1,171 +1,790 @@
-//! Keep-alive / hibernation policy (§3.1): *deflate instead of evict*.
+//! Keep-alive / hibernation policy (§3.1): *deflate instead of evict* —
+//! now a pluggable trait instead of a hardcoded engine.
 //!
 //! The conventional platform evicts idle Warm containers under memory
 //! pressure and eats the next cold start. The paper's platform instead
 //! sends SIGSTOP — turning the Warm container into a Hibernate one at a
 //! fraction of the memory — and only evicts after a much longer idle
-//! period. This module decides, per policy tick:
+//! period. Which instances that happens to, and why, is the [`Policy`]
+//! trait's job: once per tick and per function pool, the platform hands a
+//! policy a [`TickCtx`] (virtual time, the predictor, the hierarchical
+//! [`MemBudget`]) and a [`PoolView`] (per-instance state/idleness/live
+//! bytes snapshot), and gets back [`Decision`]s — shard-local instance
+//! indices plus a typed [`Reason`] that flows into
+//! [`metrics`](super::metrics) and the replay report.
 //!
-//! * which idle Warm/WokenUp containers to hibernate (idle > threshold, or
-//!   memory pressure above the watermark — most-idle first);
-//! * which Hibernate containers to evict outright (idle > eviction
-//!   threshold);
-//! * which Hibernate containers to wake anticipatorily (predictor says a
-//!   request is imminent).
+//! Three built-ins ship:
 //!
-//! A `warm_only` baseline mode reproduces the conventional platform for the
-//! density comparison bench.
+//! * [`HibernatePolicy`] — the paper's platform (hibernate idle, evict
+//!   late, anticipatory wake); identical decisions to the pre-trait
+//!   engine;
+//! * [`WarmOnlyPolicy`] — the conventional baseline (evict instead of
+//!   hibernate) the density comparison bench runs against;
+//! * [`TenantFairPolicy`] — hibernate semantics plus per-tenant budget
+//!   enforcement: each instance's live bytes are charged to the tenant
+//!   parsed from its workload name ([`tenant_of`]), and an over-budget
+//!   tenant's most-idle instances are deflated first, just enough to
+//!   cover the overage.
 //!
 //! Decisions are cheap; their I/O is not. The platform applies every
 //! action as an in-tick state flip (or, for evictions, nothing at all)
 //! plus a job on the [`instance pipeline`](super::pipeline), so the tick's
 //! latency is never bounded by deflation swap-outs, anticipatory REAP
 //! prefetches or eviction teardowns.
+//!
+//! # Budget hierarchy and pressure leases
+//!
+//! Policies never see a raw host-global byte count. They see a
+//! [`MemBudget`]: the budget/used pair scoped to the deciding shard (the
+//! whole host budget by default; this shard's *lease* when
+//! `policy.pressure_leases` is on) plus the reconciled per-tenant ledger.
+//! The frame behind it ([`BudgetFrame`]) is rebuilt once per live tick
+//! and once per replay epoch by the reconciling leader, which is what
+//! keeps pressure decisions deterministic at any replay worker count —
+//! see `docs/policy.md` for the full determinism model.
 
-use super::pool::FunctionPool;
 use super::predictor::Predictor;
 use crate::config::PolicyConfig;
 use crate::container::state::ContainerState;
+use anyhow::{bail, Result};
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Mutex;
 
-/// What the policy wants done to one instance.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub enum Action {
-    /// SIGSTOP instance `idx` of `workload` (deflate).
-    Hibernate { workload: String, idx: usize },
-    /// Terminate instance (free everything).
-    Evict { workload: String, idx: usize },
-    /// SIGCONT instance (anticipatory inflate).
-    Wake { workload: String, idx: usize },
-}
-
-/// Policy operating mode.
+/// What a policy wants done to one instance.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Mode {
-    /// The paper's platform: hibernate idle containers, evict late.
+pub enum Verb {
+    /// SIGSTOP the instance (deflate).
     Hibernate,
-    /// Conventional baseline: evict idle containers (no hibernation).
-    WarmOnly,
+    /// Terminate the instance (free everything).
+    Evict,
+    /// SIGCONT the instance (anticipatory inflate).
+    Wake,
 }
 
-/// The policy engine (stateless between ticks; all state is in the pools).
-pub struct PolicyEngine {
-    pub cfg: PolicyConfig,
-    pub mode: Mode,
-    /// Anticipatory wake lead time (ns).
-    pub wake_lead_ns: u64,
+/// Why a policy decided it — the typed reason that flows into
+/// [`super::metrics`] counters and the replay report.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Reason {
+    /// Idle past `policy.hibernate_idle_ms` (or the warm-only keep-alive).
+    IdleTimeout,
+    /// The deciding scope (host budget or shard lease) crossed the
+    /// pressure watermark.
+    HostPressure,
+    /// The instance's tenant is over its budget share.
+    TenantPressure,
+    /// A Hibernate container idled past `policy.evict_idle_ms`.
+    StaleHibernate,
+    /// The predictor expects a request within the wake lead.
+    AnticipatedArrival,
 }
 
-impl PolicyEngine {
-    pub fn new(cfg: PolicyConfig, mode: Mode) -> Self {
-        Self {
-            cfg,
-            mode,
-            wake_lead_ns: 50_000_000,
+impl Reason {
+    pub fn label(self) -> &'static str {
+        match self {
+            Reason::IdleTimeout => "idle-timeout",
+            Reason::HostPressure => "host-pressure",
+            Reason::TenantPressure => "tenant-pressure",
+            Reason::StaleHibernate => "stale-hibernate",
+            Reason::AnticipatedArrival => "anticipated-arrival",
         }
     }
+}
 
-    /// Compute actions for one workload's pool at virtual time `now_vns`.
-    /// `memory_used` / `budget` drive the pressure path.
-    pub fn decide(
-        &self,
-        workload: &str,
-        pool: &FunctionPool,
-        now_vns: u64,
-        memory_used: u64,
-        predictor: Option<&Predictor>,
-    ) -> Vec<Action> {
-        let mut actions = Vec::new();
-        let pressure =
-            memory_used as f64 >= self.cfg.pressure_watermark * self.cfg.memory_budget as f64;
-        let hibernate_idle_ns = self.cfg.hibernate_idle_ms * 1_000_000;
-        let evict_idle_ns = self.cfg.evict_idle_ms * 1_000_000;
+/// One policy decision: a shard-local pool index plus verb and reason.
+/// Deliberately `Copy`-small — no workload string rides along (the caller
+/// deciding a pool already knows which pool it is), which is what keeps a
+/// 1000-function replay tick free of per-action allocations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Decision {
+    pub idx: usize,
+    pub verb: Verb,
+    pub reason: Reason,
+}
 
-        // Idle Warm/WokenUp instances, most idle first.
-        let mut idle: Vec<(usize, u64, ContainerState)> = pool
-            .instances
+/// An applied action, as reported back from `Platform::policy_tick` (the
+/// workload name is resolved by the caller that held the shard lock — only
+/// *applied* actions, which do real I/O anyway, pay for the string).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AppliedAction {
+    pub workload: String,
+    pub idx: usize,
+    pub verb: Verb,
+    pub reason: Reason,
+}
+
+/// Immutable snapshot of one pool instance, taken under the shard lock
+/// before any of this tick's decisions are applied (so decisions never
+/// depend on apply order). Reserved instances are omitted entirely.
+#[derive(Debug, Clone, Copy)]
+pub struct InstanceView {
+    /// Index into the pool's instance vector.
+    pub idx: usize,
+    pub state: ContainerState,
+    pub idle_ns: u64,
+    /// The instance's live-byte charge: resident footprint while runnable,
+    /// swapped-slot image bytes while hibernated (see
+    /// `Sandbox::live_bytes`).
+    pub live_bytes: u64,
+}
+
+/// One function pool as a policy sees it.
+pub struct PoolView<'a> {
+    pub workload: &'a str,
+    /// Tenant parsed from the workload name ([`tenant_of`]), if any.
+    pub tenant: Option<&'a str>,
+    pub instances: &'a [InstanceView],
+}
+
+/// Everything scope-wide a decision may depend on.
+pub struct TickCtx<'a> {
+    pub now_vns: u64,
+    pub cfg: &'a PolicyConfig,
+    /// The hierarchical budget for the deciding shard — see [`MemBudget`].
+    pub budget: &'a MemBudget<'a>,
+    pub predictor: Option<&'a Predictor>,
+    /// Learned per-function anticipatory wake leads.
+    pub wake_leads: &'a WakeLeads,
+}
+
+/// The policy trait: one call per (tick, function pool).
+///
+/// Contract: `decide` must be a pure function of `(ctx, pool)` plus the
+/// policy's own immutable configuration — replay determinism depends on
+/// it. Decisions are applied by the platform *after* every pool on the
+/// shard has been decided, so a decision for pool B never observes pool
+/// A's applications from the same tick. The only sanctioned cross-pool
+/// channel is the budget's deflation ledger
+/// ([`MemBudget::note_deflated`]), which the platform walks in sorted
+/// workload order precisely so it stays deterministic.
+pub trait Policy: Send + Sync {
+    /// Stable identifier (`policy.kind` spelling).
+    fn name(&self) -> &'static str;
+    fn decide(&self, ctx: &TickCtx<'_>, pool: &PoolView<'_>) -> Vec<Decision>;
+}
+
+/// Known `policy.kind` values, resolvable by [`build_policy`].
+pub const KINDS: &[&str] = &["hibernate", "warm-only", "tenant-fair"];
+
+/// Resolve `cfg.kind` to a built-in policy.
+pub fn build_policy(cfg: &PolicyConfig) -> Result<Box<dyn Policy>> {
+    match cfg.kind.as_str() {
+        "" | "hibernate" => Ok(Box::new(HibernatePolicy)),
+        "warm-only" | "warm_only" => Ok(Box::new(WarmOnlyPolicy)),
+        "tenant-fair" | "tenant_fair" => Ok(Box::new(TenantFairPolicy)),
+        other => bail!(
+            "unknown policy.kind `{other}` (known: {})",
+            KINDS.join(", ")
+        ),
+    }
+}
+
+/// Parse the tenant a workload belongs to from its name: the
+/// `tNN-` prefix convention the `tenant-skewed` scenario established
+/// (`t` followed by one or more digits, then a dash). Returns the prefix
+/// without the dash.
+pub fn tenant_of(workload: &str) -> Option<&str> {
+    let (prefix, _) = workload.split_once('-')?;
+    let digits = prefix.strip_prefix('t')?;
+    if !digits.is_empty() && digits.bytes().all(|b| b.is_ascii_digit()) {
+        Some(prefix)
+    } else {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Budget hierarchy
+// ---------------------------------------------------------------------------
+
+/// One tenant's reconciled ledger row: live bytes charged to it and the
+/// budget it is entitled to (explicit `[tenants.<name>] memory_budget`, or
+/// its weight share of what the host budget leaves over).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantEntry {
+    pub name: String,
+    pub used: u64,
+    pub budget: u64,
+    /// The tenant's reconciled per-shard usage distribution — the basis
+    /// for splitting its (watermarked) budget into per-shard cap shares,
+    /// exactly like the host budget splits into leases. Empty for
+    /// configured-but-unobserved tenants.
+    pub shard_used: Vec<u64>,
+}
+
+/// One shard's *live* usage figures, computed by the deciding shard at
+/// tick time (its own state is single-owner between reconciliations, so
+/// the read is deterministic at any replay worker count).
+#[derive(Debug, Clone)]
+pub struct ShardLive {
+    /// The shard index these figures belong to.
+    pub si: usize,
+    /// Live committed bytes in the shard (gauge sum).
+    pub committed: u64,
+    /// Live per-tenant bytes in the shard, sorted by tenant name.
+    pub tenant_used: Vec<(String, u64)>,
+}
+
+/// A reconciled budget frame: built once per live policy tick and once
+/// per replay epoch (by the epoch leader, behind the barrier), then read
+/// by every shard tick until the next reconciliation.
+#[derive(Debug, Clone, Default)]
+pub struct BudgetFrame {
+    /// Host bytes committed at reconciliation (the classic pressure
+    /// signal, and the density timeline sample).
+    pub host_used: u64,
+    /// Per-shard live-byte sums at reconciliation (the lease basis).
+    pub shard_committed: Vec<u64>,
+    /// Per-shard budget leases (`policy.pressure_leases`): the host budget
+    /// split proportionally to `shard_committed`. `None` = leases off,
+    /// every shard decides against the whole host budget.
+    pub leases: Option<Vec<u64>>,
+    /// Reconciled tenant ledger, sorted by tenant name. Empty unless the
+    /// config tracks tenants.
+    pub tenants: Vec<TenantEntry>,
+}
+
+impl BudgetFrame {
+    /// Split `budget` into per-shard leases proportional to `committed`.
+    /// With nothing committed anywhere, the split is equal: there is no
+    /// usage signal yet. Every lease is additionally floored at **half an
+    /// equal share** — a shard idle at reconciliation must be able to
+    /// absorb a mid-epoch cold start without instantly reading as
+    /// pressured (a zero lease would turn any new instance there into
+    /// "host pressure" for the rest of the epoch, force-deflating it
+    /// regardless of real host headroom). Leases are pressure thresholds,
+    /// not allocations, so the mild over-subscription the floor
+    /// introduces is benign.
+    pub fn split_leases(budget: u64, committed: &[u64]) -> Vec<u64> {
+        let n = committed.len().max(1) as u64;
+        let total: u128 = committed.iter().map(|&c| c as u128).sum();
+        if total == 0 {
+            return committed.iter().map(|_| budget / n).collect();
+        }
+        let floor = budget / (2 * n);
+        committed
             .iter()
-            .enumerate()
-            .filter_map(|(idx, inst)| {
-                // Reserved = request/policy action in flight: not idle, and
-                // reading `state()` would block on the sandbox mutex.
-                if inst.is_reserved() {
-                    return None;
-                }
-                let s = inst.state();
-                match s {
-                    ContainerState::Warm | ContainerState::WokenUp => {
-                        Some((idx, inst.idle_ns(now_vns), s))
-                    }
-                    _ => None,
-                }
-            })
-            .collect();
-        idle.sort_by_key(|&(_, idle_ns, _)| std::cmp::Reverse(idle_ns));
+            .map(|&c| (((budget as u128 * c as u128) / total) as u64).max(floor))
+            .collect()
+    }
 
-        for (idx, idle_ns, _s) in &idle {
-            let over_idle = *idle_ns >= hibernate_idle_ns;
-            if !(over_idle || pressure) {
-                continue;
-            }
-            match self.mode {
-                Mode::Hibernate => actions.push(Action::Hibernate {
-                    workload: workload.to_string(),
-                    idx: *idx,
+    /// The [`MemBudget`] shard `si` decides against. `live` carries the
+    /// shard's *current* figures and must be supplied when leases or
+    /// tenants are on: a shard's own state is single-owner between
+    /// reconciliations, so reading it live is both deterministic and
+    /// sharper than the frame-time snapshot (and, for tenants, is what
+    /// stops a stale overage being re-paid tick after tick). Without it
+    /// the scope is the whole host and the reconciled snapshot is the
+    /// only interleaving-independent figure.
+    pub fn mem_budget<'a>(
+        &'a self,
+        si: usize,
+        cfg: &PolicyConfig,
+        live: Option<&'a ShardLive>,
+    ) -> MemBudget<'a> {
+        let (budget, used) = match &self.leases {
+            Some(leases) => (
+                leases[si],
+                live.map(|l| l.committed).unwrap_or_else(|| {
+                    self.shard_committed.get(si).copied().unwrap_or(0)
                 }),
-                Mode::WarmOnly => {
-                    // Conventional platform: under pressure or past
-                    // keep-alive, the container is simply evicted.
-                    actions.push(Action::Evict {
-                        workload: workload.to_string(),
-                        idx: *idx,
-                    });
-                }
-            }
+            ),
+            None => (cfg.memory_budget, self.host_used),
+        };
+        MemBudget {
+            budget_bytes: budget,
+            used_bytes: used,
+            watermark: cfg.pressure_watermark,
+            tenants: &self.tenants,
+            live,
+            deflated: RefCell::new(Vec::new()),
         }
-
-        // Old Hibernate containers are eventually evicted too.
-        for (idx, inst) in pool.instances.iter().enumerate() {
-            if !inst.is_reserved()
-                && inst.state() == ContainerState::Hibernate
-                && inst.idle_ns(now_vns) >= evict_idle_ns
-            {
-                actions.push(Action::Evict {
-                    workload: workload.to_string(),
-                    idx,
-                });
-            }
-        }
-
-        // Anticipatory wake (only meaningful in Hibernate mode, never under
-        // memory pressure).
-        if self.mode == Mode::Hibernate && self.cfg.predictive_wakeup && !pressure {
-            if let Some(pred) = predictor {
-                if pred.should_wake(workload, now_vns, self.wake_lead_ns) {
-                    if let Some((idx, _)) = pool
-                        .instances
-                        .iter()
-                        .enumerate()
-                        .find(|(_, i)| !i.is_reserved() && i.state() == ContainerState::Hibernate)
-                    {
-                        actions.push(Action::Wake {
-                            workload: workload.to_string(),
-                            idx,
-                        });
-                    }
-                }
-            }
-        }
-
-        actions
     }
 }
+
+/// Resolve the tenant ledger from observed per-shard usage plus the
+/// `[tenants]` config: explicitly-budgeted tenants keep their figure; the
+/// rest share what the host budget leaves over, proportionally to their
+/// weights (default 1.0).
+pub fn resolve_tenants(
+    cfg: &PolicyConfig,
+    used: &BTreeMap<String, Vec<u64>>,
+) -> Vec<TenantEntry> {
+    let mut names: Vec<&str> = used.keys().map(|s| s.as_str()).collect();
+    for t in &cfg.tenants {
+        if !used.contains_key(&t.name) {
+            names.push(&t.name);
+        }
+    }
+    names.sort_unstable();
+    names.dedup();
+    if names.is_empty() {
+        return Vec::new();
+    }
+    let explicit: u64 = cfg
+        .tenants
+        .iter()
+        .filter_map(|t| t.memory_budget)
+        .sum();
+    let shared_pool = cfg.memory_budget.saturating_sub(explicit);
+    let total_weight: f64 = names
+        .iter()
+        .filter(|n| cfg.tenant_cfg(n).and_then(|t| t.memory_budget).is_none())
+        .map(|n| cfg.tenant_cfg(n).map(|t| t.weight).unwrap_or(1.0))
+        .sum();
+    names
+        .into_iter()
+        .map(|name| {
+            let budget = match cfg.tenant_cfg(name).and_then(|t| t.memory_budget) {
+                Some(b) => b,
+                None => {
+                    let w = cfg.tenant_cfg(name).map(|t| t.weight).unwrap_or(1.0);
+                    if total_weight > 0.0 {
+                        (shared_pool as f64 * (w / total_weight)) as u64
+                    } else {
+                        0
+                    }
+                }
+            };
+            let shard_used = used.get(name).cloned().unwrap_or_default();
+            TenantEntry {
+                name: name.to_string(),
+                used: shard_used.iter().sum(),
+                budget,
+                shard_used,
+            }
+        })
+        .collect()
+}
+
+/// The budget a policy decides against: host → tenant, scoped to one
+/// shard tick. Carries a small interior-mutable *deflation ledger* so a
+/// tick that deflates an over-budget tenant's instance in one pool does
+/// not re-deflate for the same overage in the tenant's next pool (the
+/// platform walks pools in sorted name order, so the ledger — and with it
+/// every decision — is deterministic).
+///
+/// Tenant enforcement is **shard-scoped** when `live` figures are
+/// supplied (the platform always supplies them): a globally-over tenant's
+/// watermarked budget splits into per-shard cap shares proportional to
+/// its reconciled per-shard usage, and each shard pays down only its own
+/// live usage above its share. That keeps the total response equal to the
+/// global overage (shares sum to the cap), keeps it deterministic (live
+/// figures are shard-local), and — because deflations drop the live
+/// gauges at the in-tick flip — stops a stale overage from being re-paid
+/// tick after tick within one reconciliation interval.
+pub struct MemBudget<'a> {
+    budget_bytes: u64,
+    used_bytes: u64,
+    watermark: f64,
+    tenants: &'a [TenantEntry],
+    /// The deciding shard's live figures (`None` only in direct tests:
+    /// tenant scoping then falls back to the global reconciled numbers).
+    live: Option<&'a ShardLive>,
+    /// `(tenant index, bytes deflated this tick scope)`.
+    deflated: RefCell<Vec<(usize, u64)>>,
+}
+
+impl<'a> MemBudget<'a> {
+    /// Host-global scope (tests and callers without shard-live figures);
+    /// the platform builds budgets via [`BudgetFrame::mem_budget`].
+    pub fn new(
+        budget_bytes: u64,
+        used_bytes: u64,
+        watermark: f64,
+        tenants: &'a [TenantEntry],
+    ) -> Self {
+        Self {
+            budget_bytes,
+            used_bytes,
+            watermark,
+            tenants,
+            live: None,
+            deflated: RefCell::new(Vec::new()),
+        }
+    }
+
+    /// Like [`Self::new`] with the deciding shard's live figures attached
+    /// (what [`BudgetFrame::mem_budget`] produces).
+    pub fn with_live(
+        budget_bytes: u64,
+        used_bytes: u64,
+        watermark: f64,
+        tenants: &'a [TenantEntry],
+        live: &'a ShardLive,
+    ) -> Self {
+        Self {
+            live: Some(live),
+            ..Self::new(budget_bytes, used_bytes, watermark, tenants)
+        }
+    }
+
+    /// Budget bytes of the deciding scope (host budget, or this shard's
+    /// lease).
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    /// Bytes charged against that budget.
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    /// Scope-level memory pressure: usage at or past the watermark
+    /// fraction of the budget. (Nothing used = no pressure, whatever the
+    /// budget — a zero lease on an empty shard must not gate wakes.)
+    pub fn pressure(&self) -> bool {
+        self.used_bytes > 0
+            && self.used_bytes as f64 >= self.watermark * self.budget_bytes as f64
+    }
+
+    fn tenant_index(&self, name: &str) -> Option<usize> {
+        self.tenants
+            .binary_search_by(|t| t.name.as_str().cmp(name))
+            .ok()
+    }
+
+    pub fn tenant(&self, name: &str) -> Option<&TenantEntry> {
+        self.tenant_index(name).map(|i| &self.tenants[i])
+    }
+
+    /// How many live bytes tenant `name` is over its watermarked budget
+    /// in this deciding scope, minus what this tick scope already
+    /// deflated for it. Zero for unknown tenants, and zero everywhere for
+    /// a tenant that was under budget at reconciliation (a shard where an
+    /// under-budget tenant just cold-started must not deflate it). For a
+    /// globally-over tenant with shard-live figures, the scope is the
+    /// shard's live usage against its proportional cap share (see the
+    /// type docs); without live figures it is the global reconciled pair.
+    pub fn tenant_overage(&self, name: &str) -> u64 {
+        let Some(i) = self.tenant_index(name) else {
+            return 0;
+        };
+        let t = &self.tenants[i];
+        let cap_total = (self.watermark * t.budget as f64) as u64;
+        if t.used <= cap_total {
+            return 0; // under budget at reconciliation: nothing to pay
+        }
+        let (used_scope, cap_scope) = match self.live {
+            Some(live) => {
+                let basis_total: u128 =
+                    t.shard_used.iter().map(|&b| b as u128).sum();
+                let basis = t.shard_used.get(live.si).copied().unwrap_or(0);
+                let cap = if basis_total > 0 {
+                    ((cap_total as u128 * basis as u128) / basis_total) as u64
+                } else {
+                    0
+                };
+                let used = live
+                    .tenant_used
+                    .binary_search_by(|(n, _)| n.as_str().cmp(name))
+                    .ok()
+                    .map(|j| live.tenant_used[j].1)
+                    .unwrap_or(0);
+                (used, cap)
+            }
+            None => (t.used, cap_total),
+        };
+        let over = used_scope.saturating_sub(cap_scope);
+        let paid = self
+            .deflated
+            .borrow()
+            .iter()
+            .find(|(ti, _)| *ti == i)
+            .map(|(_, b)| *b)
+            .unwrap_or(0);
+        over.saturating_sub(paid)
+    }
+
+    /// Is the tenant over its watermarked budget per the *reconciled*
+    /// figures alone, ignoring this tick's deflation credits? The
+    /// anticipatory-wake gate uses this: a tenant that was over at
+    /// reconciliation must not re-inflate an instance in the very tick
+    /// that deflated it back under (deflate/wake oscillation).
+    pub fn tenant_over_reconciled(&self, name: &str) -> bool {
+        self.tenant(name)
+            .map(|t| {
+                let cap = (self.watermark * t.budget as f64) as u64;
+                t.used > cap
+            })
+            .unwrap_or(false)
+    }
+
+    /// Record that `bytes` of tenant `name`'s charge are being deflated
+    /// this tick scope (so later pools of the same tenant see the reduced
+    /// overage).
+    ///
+    /// The credit is deliberately the instance's *full* current charge,
+    /// not the (unknowable at decide time) warm-minus-image delta, and it
+    /// is recorded at decide time even if the apply later loses a
+    /// reservation race. Both make the ledger a conservative
+    /// *under*-responder within one tick — the next reconciliation
+    /// recomputes truth from the gauges, so enforcement converges at
+    /// instance granularity without ever over-deflating for charge
+    /// already on its way out.
+    pub fn note_deflated(&self, name: &str, bytes: u64) {
+        let Some(i) = self.tenant_index(name) else {
+            return;
+        };
+        let mut led = self.deflated.borrow_mut();
+        match led.iter_mut().find(|(ti, _)| *ti == i) {
+            Some((_, b)) => *b += bytes,
+            None => led.push((i, bytes)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive wake lead
+// ---------------------------------------------------------------------------
+
+/// The pre-first-sample wake lead — the constant the engine always used.
+/// Keeping it as the seed means the *first* anticipatory wake of every
+/// function fingerprints exactly as before; later wakes lead by the
+/// learned inflation time.
+pub const WAKE_LEAD_SEED_NS: u64 = 50_000_000;
+/// Clamp floor for the learned lead (5 ms).
+pub const WAKE_LEAD_MIN_NS: u64 = 5_000_000;
+/// Clamp ceiling for the learned lead (250 ms).
+pub const WAKE_LEAD_MAX_NS: u64 = 250_000_000;
+const WAKE_LEAD_ALPHA: f64 = 0.3;
+const WAKE_LEAD_STRIPES: usize = 16;
+
+/// Learned per-function anticipatory wake leads: an EWMA over measured
+/// `wake_finish` durations (the pipeline times every inflation job in
+/// charged virtual time, so the learned value is deterministic). Striped
+/// like the metrics registry — the pipeline workers write, every policy
+/// tick reads.
+pub struct WakeLeads {
+    adaptive: bool,
+    stripes: Vec<Mutex<HashMap<String, u64>>>,
+}
+
+impl WakeLeads {
+    /// `adaptive = false` pins every lead to [`WAKE_LEAD_SEED_NS`] (the
+    /// pre-adaptive behavior, `policy.adaptive_wake_lead = false`).
+    pub fn new(adaptive: bool) -> Self {
+        Self {
+            adaptive,
+            stripes: (0..WAKE_LEAD_STRIPES)
+                .map(|_| Mutex::new(HashMap::new()))
+                .collect(),
+        }
+    }
+
+    fn stripe(&self, workload: &str) -> &Mutex<HashMap<String, u64>> {
+        &self.stripes
+            [(crate::util::fnv1a(workload) % WAKE_LEAD_STRIPES as u64) as usize]
+    }
+
+    /// Fold one measured inflation duration into the function's EWMA.
+    pub fn observe(&self, workload: &str, measured_ns: u64) {
+        if !self.adaptive {
+            return;
+        }
+        let mut map = self.stripe(workload).lock().unwrap();
+        match map.get_mut(workload) {
+            Some(ewma) => {
+                *ewma = (WAKE_LEAD_ALPHA * measured_ns as f64
+                    + (1.0 - WAKE_LEAD_ALPHA) * *ewma as f64) as u64;
+            }
+            None => {
+                map.insert(workload.to_string(), measured_ns);
+            }
+        }
+    }
+
+    /// The lead to SIGCONT ahead of a predicted arrival: the learned EWMA
+    /// clamped to [[`WAKE_LEAD_MIN_NS`], [`WAKE_LEAD_MAX_NS`]], or
+    /// [`WAKE_LEAD_SEED_NS`] before the first sample.
+    pub fn lead_ns(&self, workload: &str) -> u64 {
+        self.stripe(workload)
+            .lock()
+            .unwrap()
+            .get(workload)
+            .map(|&e| e.clamp(WAKE_LEAD_MIN_NS, WAKE_LEAD_MAX_NS))
+            .unwrap_or(WAKE_LEAD_SEED_NS)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in policies
+// ---------------------------------------------------------------------------
+
+fn sorted_runnable(pool: &PoolView<'_>) -> Vec<InstanceView> {
+    let mut idle: Vec<InstanceView> = pool
+        .instances
+        .iter()
+        .filter(|v| matches!(v.state, ContainerState::Warm | ContainerState::WokenUp))
+        .copied()
+        .collect();
+    // Most idle first; the sort is stable, so ties keep pool index order.
+    idle.sort_by_key(|v| std::cmp::Reverse(v.idle_ns));
+    idle
+}
+
+/// The shared deflate-or-evict sweep every built-in runs: idle (or
+/// pressured, or — when `tenant_aware` — tenant-over-budget) runnable
+/// instances, most idle first, each pushed with `verb` and the
+/// highest-priority applicable reason. Tenant-aware sweeps charge every
+/// chosen instance against the budget's deflation ledger, whatever the
+/// reason — any deflation pays the tenant's overage down.
+fn sweep_runnable(
+    ctx: &TickCtx<'_>,
+    pool: &PoolView<'_>,
+    verb: Verb,
+    tenant_aware: bool,
+    out: &mut Vec<Decision>,
+) {
+    let pressure = ctx.budget.pressure();
+    let hibernate_idle_ns = ctx.cfg.hibernate_idle_ms * 1_000_000;
+    for v in sorted_runnable(pool) {
+        let over_idle = v.idle_ns >= hibernate_idle_ns;
+        let tenant_hit = tenant_aware
+            && pool
+                .tenant
+                .map(|t| ctx.budget.tenant_overage(t) > 0)
+                .unwrap_or(false);
+        if !(over_idle || pressure || tenant_hit) {
+            continue;
+        }
+        if tenant_aware {
+            if let Some(t) = pool.tenant {
+                ctx.budget.note_deflated(t, v.live_bytes);
+            }
+        }
+        out.push(Decision {
+            idx: v.idx,
+            verb,
+            reason: if over_idle {
+                Reason::IdleTimeout
+            } else if tenant_hit {
+                Reason::TenantPressure
+            } else {
+                Reason::HostPressure
+            },
+        });
+    }
+}
+
+fn evict_stale_hibernates(ctx: &TickCtx<'_>, pool: &PoolView<'_>, out: &mut Vec<Decision>) {
+    let evict_idle_ns = ctx.cfg.evict_idle_ms * 1_000_000;
+    for v in pool.instances {
+        if v.state == ContainerState::Hibernate && v.idle_ns >= evict_idle_ns {
+            out.push(Decision {
+                idx: v.idx,
+                verb: Verb::Evict,
+                reason: Reason::StaleHibernate,
+            });
+        }
+    }
+}
+
+fn anticipatory_wake(ctx: &TickCtx<'_>, pool: &PoolView<'_>, out: &mut Vec<Decision>) {
+    if !ctx.cfg.predictive_wakeup {
+        return;
+    }
+    let Some(pred) = ctx.predictor else { return };
+    if !pred.should_wake(pool.workload, ctx.now_vns, ctx.wake_leads.lead_ns(pool.workload)) {
+        return;
+    }
+    if let Some(v) = pool
+        .instances
+        .iter()
+        .find(|v| v.state == ContainerState::Hibernate)
+    {
+        out.push(Decision {
+            idx: v.idx,
+            verb: Verb::Wake,
+            reason: Reason::AnticipatedArrival,
+        });
+    }
+}
+
+/// The paper's platform: hibernate idle containers (and everything under
+/// memory pressure), evict only stale Hibernate ones, wake
+/// anticipatorily. Decision-for-decision identical to the pre-trait
+/// `PolicyEngine` in `Mode::Hibernate` with
+/// `policy.adaptive_wake_lead = false`; under the adaptive default, wake
+/// timing matches up to each function's first measured inflation and
+/// then leads by the learned duration instead of the 50 ms constant.
+pub struct HibernatePolicy;
+
+impl Policy for HibernatePolicy {
+    fn name(&self) -> &'static str {
+        "hibernate"
+    }
+
+    fn decide(&self, ctx: &TickCtx<'_>, pool: &PoolView<'_>) -> Vec<Decision> {
+        let mut out = Vec::new();
+        sweep_runnable(ctx, pool, Verb::Hibernate, false, &mut out);
+        evict_stale_hibernates(ctx, pool, &mut out);
+        // Never wake into pressure — inflation brings the memory back.
+        if !ctx.budget.pressure() {
+            anticipatory_wake(ctx, pool, &mut out);
+        }
+        out
+    }
+}
+
+/// Conventional baseline: idle (or pressured) containers are evicted
+/// outright — no hibernation, no anticipation. The density comparison
+/// bench's control arm.
+pub struct WarmOnlyPolicy;
+
+impl Policy for WarmOnlyPolicy {
+    fn name(&self) -> &'static str {
+        "warm-only"
+    }
+
+    fn decide(&self, ctx: &TickCtx<'_>, pool: &PoolView<'_>) -> Vec<Decision> {
+        let mut out = Vec::new();
+        sweep_runnable(ctx, pool, Verb::Evict, false, &mut out);
+        evict_stale_hibernates(ctx, pool, &mut out);
+        out
+    }
+}
+
+/// Hibernate semantics plus per-tenant budget fairness: a tenant whose
+/// charged live bytes cross its (watermarked) budget has its most-idle
+/// instances deflated — just enough of them, by live-byte charge, to
+/// cover the overage — even when they are not idle-eligible and the host
+/// scope is not under pressure. Anticipatory wakes are additionally gated
+/// on the tenant being under budget (waking inflates the charge back).
+pub struct TenantFairPolicy;
+
+impl Policy for TenantFairPolicy {
+    fn name(&self) -> &'static str {
+        "tenant-fair"
+    }
+
+    fn decide(&self, ctx: &TickCtx<'_>, pool: &PoolView<'_>) -> Vec<Decision> {
+        let mut out = Vec::new();
+        sweep_runnable(ctx, pool, Verb::Hibernate, true, &mut out);
+        evict_stale_hibernates(ctx, pool, &mut out);
+        // Gate wakes on the *reconciled* tenant state, not the ledger:
+        // the tick that just deflated an over-budget tenant under its cap
+        // must not anticipatorily re-inflate it in the same breath.
+        let tenant_over = pool
+            .tenant
+            .map(|t| ctx.budget.tenant_over_reconciled(t))
+            .unwrap_or(false);
+        if !ctx.budget.pressure() && !tenant_over {
+            anticipatory_wake(ctx, pool, &mut out);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::SharingConfig;
+    use crate::config::{SharingConfig, TenantBudget};
     use crate::container::sandbox::{Sandbox, SandboxServices};
     use crate::container::NoopRunner;
+    use crate::platform::pool::FunctionPool;
     use crate::simtime::{Clock, CostModel};
     use crate::workloads::functionbench::{golang_hello, scaled_for_test};
     use std::sync::Arc;
@@ -203,25 +822,97 @@ mod tests {
             tick_stride: 1,
             pipeline_workers: 0,
             pipeline_queue_cap: 0,
+            kind: "hibernate".into(),
+            adaptive_wake_lead: true,
+            pressure_leases: false,
+            tenants: Vec::new(),
         }
+    }
+
+    /// Mirror of the platform's view building: unreserved instances with
+    /// state/idleness/live bytes.
+    fn views(pool: &FunctionPool, now_vns: u64) -> Vec<InstanceView> {
+        pool.instances
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| !i.is_reserved())
+            .map(|(idx, i)| InstanceView {
+                idx,
+                state: i.state(),
+                idle_ns: i.idle_ns(now_vns),
+                live_bytes: i.live_bytes(),
+            })
+            .collect()
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn decide_one(
+        policy: &dyn Policy,
+        cfg: &PolicyConfig,
+        pool: &FunctionPool,
+        workload: &str,
+        now_vns: u64,
+        budget: &MemBudget<'_>,
+        predictor: Option<&Predictor>,
+        leads: &WakeLeads,
+    ) -> Vec<Decision> {
+        let v = views(pool, now_vns);
+        let ctx = TickCtx {
+            now_vns,
+            cfg,
+            budget,
+            predictor,
+            wake_leads: leads,
+        };
+        policy.decide(
+            &ctx,
+            &PoolView {
+                workload,
+                tenant: tenant_of(workload),
+                instances: &v,
+            },
+        )
+    }
+
+    fn host_budget(cfg: &PolicyConfig, used: u64) -> MemBudget<'static> {
+        MemBudget::new(cfg.memory_budget, used, cfg.pressure_watermark, &[])
     }
 
     #[test]
     fn idle_warm_hibernated() {
         let (svc, mut pool) = rig();
         pool.add(spawn(&svc, 1), 0);
-        let engine = PolicyEngine::new(cfg(), Mode::Hibernate);
+        let c = cfg();
+        let leads = WakeLeads::new(true);
         // 5 ms idle: nothing.
-        assert!(engine
-            .decide("w", &pool, 5_000_000, 0, None)
-            .is_empty());
-        // 20 ms idle: hibernate.
-        let actions = engine.decide("w", &pool, 20_000_000, 0, None);
+        assert!(decide_one(
+            &HibernatePolicy,
+            &c,
+            &pool,
+            "w",
+            5_000_000,
+            &host_budget(&c, 0),
+            None,
+            &leads
+        )
+        .is_empty());
+        // 20 ms idle: hibernate, for idleness.
+        let ds = decide_one(
+            &HibernatePolicy,
+            &c,
+            &pool,
+            "w",
+            20_000_000,
+            &host_budget(&c, 0),
+            None,
+            &leads,
+        );
         assert_eq!(
-            actions,
-            vec![Action::Hibernate {
-                workload: "w".into(),
-                idx: 0
+            ds,
+            vec![Decision {
+                idx: 0,
+                verb: Verb::Hibernate,
+                reason: Reason::IdleTimeout
             }]
         );
     }
@@ -230,23 +921,43 @@ mod tests {
     fn pressure_hibernates_even_fresh_instances() {
         let (svc, mut pool) = rig();
         pool.add(spawn(&svc, 1), 0);
-        let engine = PolicyEngine::new(cfg(), Mode::Hibernate);
+        let c = cfg();
         let used = (0.9 * (1u64 << 30) as f64) as u64;
-        let actions = engine.decide("w", &pool, 1_000_000, used, None);
-        assert!(matches!(actions[0], Action::Hibernate { .. }));
+        let ds = decide_one(
+            &HibernatePolicy,
+            &c,
+            &pool,
+            "w",
+            1_000_000,
+            &host_budget(&c, used),
+            None,
+            &WakeLeads::new(true),
+        );
+        assert_eq!(ds[0].verb, Verb::Hibernate);
+        assert_eq!(ds[0].reason, Reason::HostPressure);
     }
 
     #[test]
     fn warm_only_evicts_instead() {
         let (svc, mut pool) = rig();
         pool.add(spawn(&svc, 1), 0);
-        let engine = PolicyEngine::new(cfg(), Mode::WarmOnly);
-        let actions = engine.decide("w", &pool, 20_000_000, 0, None);
+        let c = cfg();
+        let ds = decide_one(
+            &WarmOnlyPolicy,
+            &c,
+            &pool,
+            "w",
+            20_000_000,
+            &host_budget(&c, 0),
+            None,
+            &WakeLeads::new(true),
+        );
         assert_eq!(
-            actions,
-            vec![Action::Evict {
-                workload: "w".into(),
-                idx: 0
+            ds,
+            vec![Decision {
+                idx: 0,
+                verb: Verb::Evict,
+                reason: Reason::IdleTimeout
             }]
         );
     }
@@ -258,14 +969,24 @@ mod tests {
         let mut s = spawn(&svc, 1);
         s.hibernate(&clock).unwrap();
         pool.add(s, 0);
-        let engine = PolicyEngine::new(cfg(), Mode::Hibernate);
+        let c = cfg();
         // idle 2 s > evict_idle 1 s
-        let actions = engine.decide("w", &pool, 2_000_000_000, 0, None);
+        let ds = decide_one(
+            &HibernatePolicy,
+            &c,
+            &pool,
+            "w",
+            2_000_000_000,
+            &host_budget(&c, 0),
+            None,
+            &WakeLeads::new(true),
+        );
         assert_eq!(
-            actions,
-            vec![Action::Evict {
-                workload: "w".into(),
-                idx: 0
+            ds,
+            vec![Decision {
+                idx: 0,
+                verb: Verb::Evict,
+                reason: Reason::StaleHibernate
             }]
         );
     }
@@ -277,17 +998,352 @@ mod tests {
         let mut s = spawn(&svc, 1);
         s.hibernate(&clock).unwrap();
         pool.add(s, 0);
-        let engine = PolicyEngine::new(cfg(), Mode::Hibernate);
+        let c = cfg();
         let pred = Predictor::new(0.5);
         pred.observe("w", 0);
         pred.observe("w", 100_000_000); // next expected ≈ 200 ms
-        let actions = engine.decide("w", &pool, 190_000_000, 0, Some(&pred));
-        assert!(
-            actions.contains(&Action::Wake {
-                workload: "w".into(),
-                idx: 0
-            }),
-            "{actions:?}"
+        let ds = decide_one(
+            &HibernatePolicy,
+            &c,
+            &pool,
+            "w",
+            190_000_000,
+            &host_budget(&c, 0),
+            Some(&pred),
+            &WakeLeads::new(true),
         );
+        assert!(
+            ds.contains(&Decision {
+                idx: 0,
+                verb: Verb::Wake,
+                reason: Reason::AnticipatedArrival
+            }),
+            "{ds:?}"
+        );
+    }
+
+    #[test]
+    fn tenant_names_parse() {
+        assert_eq!(tenant_of("t00-golang-hello-0001"), Some("t00"));
+        assert_eq!(tenant_of("t7-x"), Some("t7"));
+        assert_eq!(tenant_of("golang-hello"), None);
+        assert_eq!(tenant_of("tx-hello"), None);
+        assert_eq!(tenant_of("t-hello"), None);
+        assert_eq!(tenant_of("t00"), None);
+    }
+
+    #[test]
+    fn tenant_fair_deflates_only_the_over_budget_tenant_most_idle_first() {
+        let (svc, mut pool) = rig();
+        pool.add(spawn(&svc, 1), 0); // idx 0: idle since 0 (most idle)
+        pool.add(spawn(&svc, 2), 400); // idx 1: fresher
+        let mut c = cfg();
+        c.hibernate_idle_ms = 1_000_000; // idleness unreachable
+        let inst_bytes = pool.instances[0].live_bytes();
+        assert!(inst_bytes > 0, "cold-started instance must have a charge");
+        let tenants = vec![
+            TenantEntry {
+                name: "t00".into(),
+                used: 3 * inst_bytes,
+                budget: inst_bytes, // hopelessly over
+                shard_used: vec![3 * inst_bytes],
+            },
+            TenantEntry {
+                name: "t01".into(),
+                used: inst_bytes,
+                budget: 100 * inst_bytes, // comfortably under
+                shard_used: vec![inst_bytes],
+            },
+        ];
+        let budget = MemBudget::new(1 << 30, 0, 0.8, &tenants);
+        let leads = WakeLeads::new(true);
+        // The over-budget tenant's pool: most idle (idx 0) deflates first.
+        let ds = decide_one(
+            &TenantFairPolicy,
+            &c,
+            &pool,
+            "t00-fn",
+            1000,
+            &budget,
+            None,
+            &leads,
+        );
+        assert!(!ds.is_empty());
+        assert_eq!(ds[0].idx, 0, "most idle instance goes first");
+        assert!(ds
+            .iter()
+            .all(|d| d.verb == Verb::Hibernate && d.reason == Reason::TenantPressure));
+        // The under-budget tenant is untouched.
+        let budget2 = MemBudget::new(1 << 30, 0, 0.8, &tenants);
+        let ds = decide_one(
+            &TenantFairPolicy,
+            &c,
+            &pool,
+            "t01-fn",
+            1000,
+            &budget2,
+            None,
+            &leads,
+        );
+        assert!(ds.is_empty(), "{ds:?}");
+        // And workloads without a tenant prefix behave like plain
+        // hibernate (nothing idle, no pressure → nothing).
+        let budget3 = MemBudget::new(1 << 30, 0, 0.8, &tenants);
+        let ds = decide_one(
+            &TenantFairPolicy,
+            &c,
+            &pool,
+            "untenanted",
+            1000,
+            &budget3,
+            None,
+            &leads,
+        );
+        assert!(ds.is_empty(), "{ds:?}");
+    }
+
+    #[test]
+    fn tenant_fair_stops_once_the_overage_is_covered() {
+        let (svc, mut pool) = rig();
+        pool.add(spawn(&svc, 1), 0);
+        pool.add(spawn(&svc, 2), 100);
+        pool.add(spawn(&svc, 3), 200);
+        let mut c = cfg();
+        c.hibernate_idle_ms = 1_000_000;
+        let inst_bytes = pool.instances[0].live_bytes();
+        // Over by about one instance: deflating one must satisfy it.
+        let used = 3 * inst_bytes;
+        let tenants = vec![TenantEntry {
+            name: "t00".into(),
+            used,
+            budget: (used as f64 / 0.8) as u64 - inst_bytes / 2,
+            shard_used: vec![used],
+        }];
+        let budget = MemBudget::new(1 << 30, 0, 0.8, &tenants);
+        let ds = decide_one(
+            &TenantFairPolicy,
+            &c,
+            &pool,
+            "t00-fn",
+            1000,
+            &budget,
+            None,
+            &WakeLeads::new(true),
+        );
+        assert_eq!(ds.len(), 1, "one instance covers the overage: {ds:?}");
+        assert_eq!(ds[0].idx, 0);
+        // The ledger now shows the overage paid, so a *second pool* of the
+        // same tenant (same MemBudget — one tick scope) decides nothing.
+        let ds2 = decide_one(
+            &TenantFairPolicy,
+            &c,
+            &pool,
+            "t00-other",
+            1000,
+            &budget,
+            None,
+            &WakeLeads::new(true),
+        );
+        assert!(ds2.is_empty(), "{ds2:?}");
+    }
+
+    #[test]
+    fn lease_split_is_proportional_with_a_cold_start_floor() {
+        // Proportional for busy shards; idle/small shards are floored at
+        // half an equal share (1000 / (2×4) = 125) so a mid-epoch cold
+        // start there doesn't instantly read as host pressure.
+        let leases = BudgetFrame::split_leases(1000, &[300, 100, 0, 600]);
+        assert_eq!(leases, vec![300, 125, 125, 600]);
+        // Rounding floors, never overshoots, when everyone is above the
+        // floor.
+        let leases = BudgetFrame::split_leases(1000, &[1, 1, 1]);
+        assert_eq!(leases, vec![333, 333, 333]);
+        assert!(leases.iter().sum::<u64>() <= 1000);
+        // No usage signal → equal split, not zero leases.
+        let leases = BudgetFrame::split_leases(900, &[0, 0, 0]);
+        assert_eq!(leases, vec![300, 300, 300]);
+    }
+
+    fn live(si: usize, committed: u64, tenant_used: Vec<(String, u64)>) -> ShardLive {
+        ShardLive {
+            si,
+            committed,
+            tenant_used,
+        }
+    }
+
+    #[test]
+    fn lease_budget_is_sharper_than_the_stale_snapshot() {
+        let frame = BudgetFrame {
+            host_used: 0,
+            shard_committed: vec![800, 200],
+            leases: Some(BudgetFrame::split_leases(1000, &[800, 200])),
+            tenants: Vec::new(),
+        };
+        let c = cfg();
+        // Shard 0 grew since the frame: its live usage presses against its
+        // lease even though the frame's snapshot would not.
+        let l0 = live(0, 900, Vec::new());
+        let b = frame.mem_budget(0, &c, Some(&l0));
+        assert_eq!(b.budget_bytes(), 800);
+        assert!(b.pressure());
+        // Shard 1 shrank: no pressure against its lease (250 — the
+        // proportional 200 lifted to the half-equal-share floor).
+        let l1 = live(1, 100, Vec::new());
+        let b = frame.mem_budget(1, &c, Some(&l1));
+        assert_eq!(b.budget_bytes(), 250);
+        assert!(!b.pressure());
+        // Leases off: everyone decides against the host budget + snapshot.
+        let frame = BudgetFrame {
+            host_used: 42,
+            shard_committed: vec![800, 200],
+            leases: None,
+            tenants: Vec::new(),
+        };
+        let b = frame.mem_budget(0, &c, None);
+        assert_eq!(b.budget_bytes(), c.memory_budget);
+        assert_eq!(b.used_bytes(), 42);
+    }
+
+    #[test]
+    fn tenant_overage_is_shard_scoped_against_live_usage() {
+        // One tenant, globally over its watermarked cap, usage split
+        // 80/20 across two shards at reconciliation.
+        let tenants = vec![TenantEntry {
+            name: "t00".into(),
+            used: 1000,
+            budget: 500, // cap = 0.8 × 500 = 400 → globally over by 600
+            shard_used: vec![800, 200],
+        }];
+        // Shard 0 owns 80% of the usage → an 80% share of the cap (320).
+        // Its live usage says 700 → it pays down exactly 700 − 320.
+        let l0 = live(0, 0, vec![("t00".into(), 700)]);
+        let b = MemBudget::with_live(1 << 30, 0, 0.8, &tenants, &l0);
+        assert_eq!(b.tenant_overage("t00"), 700 - 320);
+        // Shard 1's share is 80; its live usage already dropped to 60
+        // (deflations land on the gauges at the flip) → nothing to pay,
+        // even though the reconciled global figure is still stale-high.
+        let l1 = live(1, 0, vec![("t00".into(), 60)]);
+        let b = MemBudget::with_live(1 << 30, 0, 0.8, &tenants, &l1);
+        assert_eq!(b.tenant_overage("t00"), 0);
+        // A shard the tenant never touched at reconciliation gets a zero
+        // cap share: live usage there is all overage (the tenant IS
+        // globally over).
+        let l2 = live(2, 0, vec![("t00".into(), 50)]);
+        let b = MemBudget::with_live(1 << 30, 0, 0.8, &tenants, &l2);
+        assert_eq!(b.tenant_overage("t00"), 50);
+        // But a *globally under* tenant never pays anywhere, wherever its
+        // live bytes sit.
+        let under = vec![TenantEntry {
+            name: "t01".into(),
+            used: 100,
+            budget: 500,
+            shard_used: vec![0, 100],
+        }];
+        let l0 = live(0, 0, vec![("t01".into(), 400)]);
+        let b = MemBudget::with_live(1 << 30, 0, 0.8, &under, &l0);
+        assert_eq!(b.tenant_overage("t01"), 0);
+        // The reconciled-state wake gate is global, not shard-scoped.
+        assert!(!b.tenant_over_reconciled("t01"));
+        let b = MemBudget::with_live(1 << 30, 0, 0.8, &tenants, &l1);
+        assert!(b.tenant_over_reconciled("t00"));
+    }
+
+    #[test]
+    fn empty_scope_is_never_pressured() {
+        let b = MemBudget::new(0, 0, 0.8, &[]);
+        assert!(!b.pressure(), "zero lease on an empty shard must not press");
+    }
+
+    #[test]
+    fn resolve_tenants_explicit_budgets_and_weight_shares() {
+        let mut c = cfg();
+        c.memory_budget = 1000;
+        c.tenants = vec![
+            TenantBudget {
+                name: "t00".into(),
+                memory_budget: Some(400),
+                weight: 1.0,
+            },
+            TenantBudget {
+                name: "t01".into(),
+                memory_budget: None,
+                weight: 2.0,
+            },
+        ];
+        c.tenants.sort_by(|a, b| a.name.cmp(&b.name));
+        let mut used = BTreeMap::new();
+        used.insert("t00".to_string(), vec![500u64, 200]);
+        used.insert("t02".to_string(), vec![0u64, 10]); // unconfigured, weight 1.0
+        let rows = resolve_tenants(&c, &used);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(
+            rows[0],
+            TenantEntry {
+                name: "t00".into(),
+                used: 700,
+                budget: 400,
+                shard_used: vec![500, 200]
+            }
+        );
+        // 600 left over, weights 2.0 vs 1.0.
+        assert_eq!(
+            rows[1],
+            TenantEntry {
+                name: "t01".into(),
+                used: 0,
+                budget: 400,
+                shard_used: vec![]
+            }
+        );
+        assert_eq!(
+            rows[2],
+            TenantEntry {
+                name: "t02".into(),
+                used: 10,
+                budget: 200,
+                shard_used: vec![0, 10]
+            }
+        );
+    }
+
+    #[test]
+    fn wake_leads_seed_learn_and_clamp() {
+        let leads = WakeLeads::new(true);
+        assert_eq!(leads.lead_ns("f"), WAKE_LEAD_SEED_NS, "pre-sample = seed");
+        leads.observe("f", 20_000_000);
+        assert_eq!(leads.lead_ns("f"), 20_000_000, "first sample anchors");
+        leads.observe("f", 40_000_000);
+        let l = leads.lead_ns("f");
+        assert!(l > 20_000_000 && l < 40_000_000, "EWMA moves between: {l}");
+        // Clamps at both ends.
+        let leads = WakeLeads::new(true);
+        leads.observe("tiny", 1);
+        assert_eq!(leads.lead_ns("tiny"), WAKE_LEAD_MIN_NS);
+        let leads = WakeLeads::new(true);
+        leads.observe("huge", 10_000_000_000);
+        assert_eq!(leads.lead_ns("huge"), WAKE_LEAD_MAX_NS);
+        // Non-adaptive: observations are ignored.
+        let leads = WakeLeads::new(false);
+        leads.observe("f", 1);
+        assert_eq!(leads.lead_ns("f"), WAKE_LEAD_SEED_NS);
+    }
+
+    #[test]
+    fn build_policy_resolves_kinds() {
+        let mut c = cfg();
+        for (kind, name) in [
+            ("hibernate", "hibernate"),
+            ("", "hibernate"),
+            ("warm-only", "warm-only"),
+            ("warm_only", "warm-only"),
+            ("tenant-fair", "tenant-fair"),
+        ] {
+            c.kind = kind.into();
+            assert_eq!(build_policy(&c).unwrap().name(), name, "kind `{kind}`");
+        }
+        c.kind = "nope".into();
+        let err = build_policy(&c).unwrap_err();
+        assert!(err.to_string().contains("tenant-fair"), "{err}");
     }
 }

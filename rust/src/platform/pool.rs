@@ -18,6 +18,13 @@ pub struct Instance {
     pub last_active: Arc<AtomicU64>,
     /// Virtual time the instance was created.
     pub created_vns: u64,
+    /// Cached live-byte charge (see `Sandbox::live_bytes`): resident
+    /// footprint while runnable, swapped-slot image bytes while
+    /// hibernated. Refreshed at every settled transition point — cold
+    /// start, request completion, pipeline-job completion — so the policy
+    /// loop and the budget reconciler can read it without touching the
+    /// sandbox mutex.
+    pub live_gauge: Arc<AtomicU64>,
     /// Reservation flag: exactly one owner (a request handler or the policy
     /// loop) drives the sandbox through a state transition at a time. The
     /// router and the policy engine *skip* reserved instances instead of
@@ -41,6 +48,11 @@ impl Instance {
 
     pub fn idle_ns(&self, now_vns: u64) -> u64 {
         now_vns.saturating_sub(self.last_active_vns())
+    }
+
+    /// The cached live-byte charge (no sandbox lock taken).
+    pub fn live_bytes(&self) -> u64 {
+        self.live_gauge.load(Ordering::Relaxed)
     }
 
     /// Is the instance currently reserved (request in flight or policy
@@ -89,10 +101,12 @@ impl FunctionPool {
     }
 
     pub fn add(&mut self, sandbox: Sandbox, now_vns: u64) -> &Instance {
+        let live = sandbox.live_bytes();
         self.instances.push(Instance {
             sandbox: Arc::new(Mutex::new(sandbox)),
             last_active: Arc::new(AtomicU64::new(now_vns)),
             created_vns: now_vns,
+            live_gauge: Arc::new(AtomicU64::new(live)),
             busy: Arc::new(AtomicBool::new(false)),
         });
         self.instances.last().unwrap()
@@ -165,6 +179,26 @@ mod tests {
             .unwrap();
         assert_eq!(pool.sweep_dead(), 1);
         assert_eq!(pool.len(), 1);
+    }
+
+    #[test]
+    fn live_gauge_seeds_from_the_sandbox_and_tracks_stores() {
+        let svc = SandboxServices::new_local(
+            256 << 20,
+            CostModel::free(),
+            SharingConfig::default(),
+            Arc::new(NoopRunner),
+            "pool-gauge-test",
+        )
+        .unwrap();
+        let mut pool = FunctionPool::new();
+        let sb = mini_sandbox(1, &svc);
+        let expect = sb.live_bytes();
+        assert!(expect > 0, "a cold-started sandbox has a live charge");
+        pool.add(sb, 0);
+        assert_eq!(pool.instances[0].live_bytes(), expect);
+        pool.instances[0].live_gauge.store(123, Ordering::Relaxed);
+        assert_eq!(pool.instances[0].live_bytes(), 123);
     }
 
     #[test]

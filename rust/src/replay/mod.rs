@@ -14,14 +14,20 @@
 //! its one owner, per-shard state evolution does not depend on how shards
 //! are spread over workers.
 //!
-//! The only cross-shard input to policy decisions is global memory
-//! pressure. Replay therefore runs in **epochs**: at each epoch boundary
-//! every worker parks on a barrier, one leader samples the host's
-//! committed bytes, and all ticks of the next epoch use that reconciled
-//! snapshot. State at a barrier is interleaving-independent (all events
-//! and ticks before it have run; committed bytes are a sum over per-shard
-//! state), so the snapshot — and with it every policy decision — is the
-//! same at `--workers 1` and `--workers 8`.
+//! The only cross-shard input to policy decisions is the budget
+//! hierarchy. Replay therefore runs in **epochs**: at each epoch boundary
+//! every worker parks on a barrier, one leader reconciles a
+//! [`BudgetFrame`] — host committed bytes, the per-tenant ledger, and
+//! (with `policy.pressure_leases`) per-shard budget leases split
+//! proportionally to per-shard committed bytes — and all ticks of the
+//! next epoch use that frame. State at a barrier is
+//! interleaving-independent (all events and ticks before it have run;
+//! committed bytes are sums over per-shard state), so the frame — and
+//! with it every policy decision — is the same at `--workers 1` and
+//! `--workers 8`. Under leases a shard additionally reads its *own* live
+//! committed bytes at each tick, which is still deterministic (a shard's
+//! state is single-owner between barriers) and reacts to pressure within
+//! the epoch instead of an epoch late.
 //!
 //! Deflations, anticipatory inflations and eviction teardowns run on the
 //! platform's off-tick worker pool ([`crate::platform::pipeline`]), so a
@@ -48,9 +54,11 @@
 //! race — a replay sized to exhaust `host_memory` can fail at one worker
 //! count and complete at another. Scenarios must leave allocation headroom
 //! (pressure policy reacting to the *budget watermark* is fine — that is
-//! virtual and epoch-reconciled; physically running out of host pages is
-//! not). Per-epoch shard budget leases are the ROADMAP follow-on that
-//! would lift this.
+//! virtual and reconciled, lease or no lease; physically running out of
+//! host pages is not). `policy.pressure_leases` makes the watermark
+//! response per-shard and within-epoch, which keeps budget-driven
+//! deflation well ahead of physical capacity under tight budgets — but
+//! the headroom requirement itself stands.
 //!
 //! [`Platform::run_trace`] is this engine at `workers = 1`.
 
@@ -59,14 +67,15 @@ pub mod scenario;
 
 use crate::config::PlatformConfig;
 use crate::container::NoopRunner;
+use crate::platform::policy::BudgetFrame;
 use crate::platform::trace::TraceEvent;
 use crate::platform::{Platform, RequestReport};
 use crate::simtime::TickSchedule;
 use anyhow::Result;
 use report::ReplayReport;
 use scenario::ScenarioRun;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Barrier, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
 use std::time::Instant;
 
 /// What one replay run produced.
@@ -76,6 +85,11 @@ pub struct ReplayOutcome {
     /// `(epoch_start_vns, committed_bytes)` — the memory-density timeline
     /// sampled at every epoch barrier.
     pub mem_timeline: Vec<(u64, u64)>,
+    /// `(epoch_start_vns, [(tenant, live_bytes)])` — the per-tenant
+    /// density timeline, sampled at the same barriers. Empty unless the
+    /// config tracks tenants (`policy.kind = "tenant-fair"` or a
+    /// `[tenants]` section).
+    pub tenant_timeline: Vec<(u64, Vec<(String, u64)>)>,
     /// Worker threads actually used.
     pub workers: usize,
     /// Real wall-clock of the whole replay.
@@ -143,6 +157,7 @@ impl<'p> ReplayEngine<'p> {
             return Ok(ReplayOutcome {
                 reports: Vec::new(),
                 mem_timeline: Vec::new(),
+                tenant_timeline: Vec::new(),
                 workers: self.workers,
                 wall_ns: t0.elapsed().as_nanos() as u64,
             });
@@ -159,24 +174,26 @@ impl<'p> ReplayEngine<'p> {
         let n_epochs = duration_ns.div_ceil(self.epoch_ns);
 
         let barrier = Barrier::new(n_workers);
-        let pressure = AtomicU64::new(0);
+        let frame_slot: Mutex<Arc<BudgetFrame>> = Mutex::new(Arc::new(BudgetFrame::default()));
         let abort = AtomicBool::new(false);
         let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
         let timeline: Mutex<Vec<(u64, u64)>> = Mutex::new(Vec::new());
+        let tenant_timeline: Mutex<Vec<(u64, Vec<(String, u64)>)>> = Mutex::new(Vec::new());
 
         let collected: Vec<Vec<(usize, RequestReport)>> = std::thread::scope(|scope| {
             let handles: Vec<_> = (0..n_workers)
                 .map(|w| {
                     let my_events = &per_worker[w];
                     let barrier = &barrier;
-                    let pressure = &pressure;
+                    let frame_slot = &frame_slot;
                     let abort = &abort;
                     let first_err = &first_err;
                     let timeline = &timeline;
+                    let tenant_timeline = &tenant_timeline;
                     scope.spawn(move || {
                         self.worker_loop(
-                            w, my_events, events, n_epochs, barrier, pressure, abort,
-                            first_err, timeline,
+                            w, my_events, events, n_epochs, barrier, frame_slot, abort,
+                            first_err, timeline, tenant_timeline,
                         )
                     })
                 })
@@ -196,6 +213,7 @@ impl<'p> ReplayEngine<'p> {
         Ok(ReplayOutcome {
             reports: indexed.into_iter().map(|(_, r)| r).collect(),
             mem_timeline: timeline.into_inner().unwrap(),
+            tenant_timeline: tenant_timeline.into_inner().unwrap(),
             workers: n_workers,
             wall_ns: t0.elapsed().as_nanos() as u64,
         })
@@ -209,10 +227,11 @@ impl<'p> ReplayEngine<'p> {
         events: &[TraceEvent],
         n_epochs: u64,
         barrier: &Barrier,
-        pressure: &AtomicU64,
+        frame_slot: &Mutex<Arc<BudgetFrame>>,
         abort: &AtomicBool,
         first_err: &Mutex<Option<anyhow::Error>>,
         timeline: &Mutex<Vec<(u64, u64)>>,
+        tenant_timeline: &Mutex<Vec<(u64, Vec<(String, u64)>)>>,
     ) -> Vec<(usize, RequestReport)> {
         let owned: Vec<usize> = (0..self.platform.shard_count())
             .filter(|s| s % self.workers == w)
@@ -234,19 +253,29 @@ impl<'p> ReplayEngine<'p> {
         for e in 0..n_epochs {
             let epoch_start = e * self.epoch_ns;
             let epoch_end = epoch_start + self.epoch_ns;
-            // Reconcile global memory pressure: one leader samples the
-            // committed bytes after *every* worker finished the previous
-            // epoch, so each epoch's policy ticks see the same figure no
-            // matter how many workers replay the trace.
+            // Reconcile the budget frame: one leader rebuilds it after
+            // *every* worker finished the previous epoch, so each epoch's
+            // policy ticks see the same host pressure, tenant ledger and
+            // shard leases no matter how many workers replay the trace.
             if barrier.wait().is_leader() && !abort.load(Ordering::Relaxed) {
                 let sampled = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    let used = self.platform.memory_used();
-                    pressure.store(used, Ordering::Relaxed);
-                    timeline.lock().unwrap().push((epoch_start, used));
+                    let frame = Arc::new(self.platform.reconcile_budget());
+                    timeline.lock().unwrap().push((epoch_start, frame.host_used));
+                    if !frame.tenants.is_empty() {
+                        tenant_timeline.lock().unwrap().push((
+                            epoch_start,
+                            frame
+                                .tenants
+                                .iter()
+                                .map(|t| (t.name.clone(), t.used))
+                                .collect(),
+                        ));
+                    }
+                    *frame_slot.lock().unwrap() = frame;
                 }));
                 if let Err(p) = sampled {
                     record_failure(anyhow::anyhow!(
-                        "replay leader panicked sampling pressure: {}",
+                        "replay leader panicked reconciling the budget: {}",
                         panic_message(&p)
                     ));
                 }
@@ -255,9 +284,9 @@ impl<'p> ReplayEngine<'p> {
             if abort.load(Ordering::Relaxed) {
                 continue; // keep pacing the barriers so nobody deadlocks
             }
-            let mem = pressure.load(Ordering::Relaxed);
+            let frame = frame_slot.lock().unwrap().clone();
             let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                self.run_epoch(&owned, my_events, events, epoch_end, mem, &mut sched, &mut cursor, &mut out)
+                self.run_epoch(&owned, my_events, events, epoch_end, &frame, &mut sched, &mut cursor, &mut out)
             }));
             match ran {
                 Ok(Ok(())) => {}
@@ -281,7 +310,7 @@ impl<'p> ReplayEngine<'p> {
         my_events: &[usize],
         events: &[TraceEvent],
         epoch_end: u64,
-        memory_used: u64,
+        frame: &BudgetFrame,
         sched: &mut TickSchedule,
         cursor: &mut usize,
         out: &mut Vec<(usize, RequestReport)>,
@@ -294,7 +323,7 @@ impl<'p> ReplayEngine<'p> {
             }
             while let Some(t) = sched.pop_due(ev.at_ns) {
                 for &s in owned {
-                    self.platform.policy_tick_shard(s, t, memory_used)?;
+                    self.platform.policy_tick_shard(s, t, frame)?;
                 }
                 // Pipeline jobs (deflations, anticipatory inflations,
                 // eviction teardowns) submitted by this tick run
@@ -309,7 +338,7 @@ impl<'p> ReplayEngine<'p> {
         }
         while let Some(t) = sched.pop_before(epoch_end) {
             for &s in owned {
-                self.platform.policy_tick_shard(s, t, memory_used)?;
+                self.platform.policy_tick_shard(s, t, frame)?;
             }
             self.platform.drain_pipeline()?;
         }

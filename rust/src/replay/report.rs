@@ -81,6 +81,8 @@ impl FunctionRow {
 #[derive(Debug, Clone)]
 pub struct ReplayReport {
     pub scenario: String,
+    /// The policy that made the run's decisions (`policy.kind`).
+    pub policy: String,
     pub seed: u64,
     pub workers: usize,
     pub events: usize,
@@ -92,6 +94,9 @@ pub struct ReplayReport {
     pub counters: Vec<(&'static str, u64)>,
     /// `(epoch_start_vns, committed_bytes)` density timeline.
     pub mem_timeline: Vec<(u64, u64)>,
+    /// `(epoch_start_vns, [(tenant, live_bytes)])` per-tenant density
+    /// timeline — empty unless the config tracks tenants.
+    pub tenant_timeline: Vec<(u64, Vec<(String, u64)>)>,
     /// Final instance census: `(workload, state_label, count)`.
     pub final_states: Vec<(String, String, u64)>,
     /// Committed host bytes after the replay.
@@ -145,7 +150,7 @@ impl ReplayReport {
         let aggregate = FunctionRow::from_summary("__all__", &mut all, &all_paths);
 
         let mut final_states = Vec::new();
-        for (workload, rows) in platform.pool_snapshot() {
+        for (workload, _wake_lead, rows) in platform.pool_snapshot() {
             let mut by_state: BTreeMap<String, u64> = BTreeMap::new();
             for (state, _bytes) in rows {
                 *by_state.entry(state.to_string()).or_default() += 1;
@@ -157,6 +162,7 @@ impl ReplayReport {
 
         Self {
             scenario: scenario.to_string(),
+            policy: platform.policy_name().to_string(),
             seed,
             workers: outcome.workers,
             events: outcome.reports.len(),
@@ -165,6 +171,7 @@ impl ReplayReport {
             aggregate,
             counters: platform.metrics.counters.snapshot(),
             mem_timeline: outcome.mem_timeline.clone(),
+            tenant_timeline: outcome.tenant_timeline.clone(),
             final_states,
             final_committed: platform.memory_used(),
         }
@@ -188,6 +195,15 @@ impl ReplayReport {
         for (t, b) in &self.mem_timeline {
             let _ = write!(canon, "{t}:{b};");
         }
+        // Tenant rows only when tracked, so non-tenant runs keep their
+        // canonical form (and fingerprints) from before tenant accounting.
+        for (t, rows) in &self.tenant_timeline {
+            let _ = write!(canon, "T{t}[");
+            for (name, used) in rows {
+                let _ = write!(canon, "{name}={used};");
+            }
+            let _ = write!(canon, "];");
+        }
         for (w, s, c) in &self.final_states {
             let _ = write!(canon, "{w}/{s}={c};");
         }
@@ -199,6 +215,7 @@ impl ReplayReport {
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("scenario", Json::Str(self.scenario.clone())),
+            ("policy", Json::Str(self.policy.clone())),
             // Hex string, not a JSON number: u64 seeds above 2^53 would
             // silently lose precision as f64, and the seed must replay the
             // scenario exactly.
@@ -235,6 +252,32 @@ impl ReplayReport {
                 ),
             ),
             (
+                "tenant_timeline",
+                Json::Arr(
+                    self.tenant_timeline
+                        .iter()
+                        .map(|(t, rows)| {
+                            obj(vec![
+                                ("at_ns", Json::Num(*t as f64)),
+                                (
+                                    "tenants",
+                                    Json::Arr(
+                                        rows.iter()
+                                            .map(|(name, used)| {
+                                                obj(vec![
+                                                    ("tenant", Json::Str(name.clone())),
+                                                    ("live_bytes", Json::Num(*used as f64)),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
                 "final_states",
                 Json::Arr(
                     self.final_states
@@ -265,8 +308,9 @@ impl ReplayReport {
         let mut out = String::new();
         let _ = writeln!(
             out,
-            "scenario {} seed {:#x}: {} events, {} functions, {} workers, wall {}",
+            "scenario {} policy {} seed {:#x}: {} events, {} functions, {} workers, wall {}",
             self.scenario,
+            self.policy,
             self.seed,
             self.events,
             self.functions.len(),
@@ -312,6 +356,13 @@ impl ReplayReport {
                 human_bytes(self.final_committed),
             );
         }
+        if let Some((_, last)) = self.tenant_timeline.last() {
+            let _ = write!(out, "tenants (final epoch):");
+            for (name, used) in last {
+                let _ = write!(out, " {name}={}", human_bytes(*used));
+            }
+            let _ = writeln!(out);
+        }
         let _ = writeln!(out, "fingerprint: {:016x}", self.fingerprint());
         out
     }
@@ -345,6 +396,7 @@ mod tests {
         ReplayOutcome {
             reports,
             mem_timeline: vec![(0, 100), (100_000_000, 200)],
+            tenant_timeline: Vec::new(),
             workers: 2,
             wall_ns: 12345,
         }
@@ -395,6 +447,33 @@ mod tests {
         let changed = fake_outcome(vec![fake_report("a", ServedFrom::Warm, 101)]);
         let r3 = ReplayReport::build("test", 7, &p, &changed);
         assert_ne!(r1.fingerprint(), r3.fingerprint());
+    }
+
+    #[test]
+    fn tenant_timeline_fingerprints_and_exports() {
+        let p = rig_platform();
+        let base = fake_outcome(vec![fake_report("t00-a", ServedFrom::Warm, 100)]);
+        let r_plain = ReplayReport::build("test", 7, &p, &base);
+
+        let mut with_tenants = fake_outcome(vec![fake_report("t00-a", ServedFrom::Warm, 100)]);
+        with_tenants.tenant_timeline =
+            vec![(0, vec![("t00".to_string(), 4096), ("t01".to_string(), 0)])];
+        let r_tenants = ReplayReport::build("test", 7, &p, &with_tenants);
+        assert_ne!(
+            r_plain.fingerprint(),
+            r_tenants.fingerprint(),
+            "the tenant timeline must be part of the replay identity"
+        );
+        let text = r_tenants.to_json().to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        let tl = back.get("tenant_timeline").unwrap().as_arr().unwrap();
+        assert_eq!(tl.len(), 1);
+        assert_eq!(
+            tl[0].get("tenants").unwrap().as_arr().unwrap().len(),
+            2
+        );
+        assert!(r_tenants.summary().contains("tenants (final epoch):"));
+        assert!(back.get("policy").unwrap().as_str().is_some());
     }
 
     #[test]

@@ -20,7 +20,10 @@
 //!   functions burst at once mid-trace; exercises wake storms under
 //!   pressure.
 //! * `tenant-skewed` — functions grouped into 10 tenants with one tenant
-//!   dominating traffic; the fixture for per-tenant budget work.
+//!   dominating traffic; the fixture the per-tenant budget policy is
+//!   evaluated on. The `tNN-` name prefix is load-bearing: it is the
+//!   convention [`crate::platform::policy::tenant_of`] parses tenancy
+//!   from (and what the `[tenants]` config sections key on).
 //! * `paper-mix` — just the 8 paper workloads with idle-heavy Poisson
 //!   arrivals (the original small-scale replay, for continuity).
 
@@ -238,6 +241,8 @@ fn tenant_skewed(
 ) -> (Vec<WorkloadSpec>, Vec<TraceEvent>) {
     let mut specs = synth_functions(funcs);
     for (i, s) in specs.iter_mut().enumerate() {
+        // The `tNN-` prefix is the tenancy contract —
+        // `platform::policy::tenant_of` parses it.
         s.name = format!("t{:02}-{}", i % TENANTS, s.name);
     }
     let traces: Vec<TraceSpec> = specs
@@ -436,6 +441,27 @@ mod tests {
             names.len(),
             heavy.specs.len()
         );
+    }
+
+    #[test]
+    fn tenant_names_parse_as_tenants() {
+        // The policy layer's tenancy contract: every tenant-skewed
+        // function name must resolve to its tenant, and no other
+        // scenario's names may accidentally look tenanted.
+        use crate::platform::policy::tenant_of;
+        let run = build("tenant-skewed", 50, 10_000_000_000, 9).unwrap();
+        for (i, s) in run.specs.iter().enumerate() {
+            assert_eq!(
+                tenant_of(&s.name),
+                Some(format!("t{:02}", i % TENANTS).as_str()),
+                "{}",
+                s.name
+            );
+        }
+        let plain = build("azure-heavy-tail", 16, 10_000_000_000, 9).unwrap();
+        for s in &plain.specs {
+            assert_eq!(tenant_of(&s.name), None, "{}", s.name);
+        }
     }
 
     #[test]

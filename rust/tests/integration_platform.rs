@@ -5,7 +5,6 @@
 use quark_hibernate::config::PlatformConfig;
 use quark_hibernate::container::NoopRunner;
 use quark_hibernate::platform::metrics::ServedFrom;
-use quark_hibernate::platform::policy::Mode;
 use quark_hibernate::platform::server::Server;
 use quark_hibernate::platform::trace::{self, Arrival, TraceSpec};
 use quark_hibernate::platform::Platform;
@@ -88,12 +87,13 @@ fn hibernate_mode_beats_warm_only_on_cold_starts_and_memory() {
         trace::generate(&specs, 8_000_000_000, 5)
     };
 
-    let run = |mode: Mode, tag: &str| {
+    let run = |kind: &str, tag: &str| {
         let mut c = cfg(tag);
         // Tight budget → pressure forces the keep-alive decision.
         c.policy.memory_budget = 24 << 20;
         c.policy.hibernate_idle_ms = 100;
-        let p = Platform::with_mode(c, Arc::new(NoopRunner), mode).unwrap();
+        c.policy.kind = kind.to_string();
+        let p = Platform::new(c, Arc::new(NoopRunner)).unwrap();
         p.deploy(scaled_for_test(nodejs_hello(), 16)).unwrap();
         p.run_trace(&events).unwrap();
         (
@@ -101,8 +101,8 @@ fn hibernate_mode_beats_warm_only_on_cold_starts_and_memory() {
             p.memory_used(),
         )
     };
-    let (cold_warmonly, _mem_w) = run(Mode::WarmOnly, "warmonly");
-    let (cold_hib, _mem_h) = run(Mode::Hibernate, "hibmode");
+    let (cold_warmonly, _mem_w) = run("warm-only", "warmonly");
+    let (cold_hib, _mem_h) = run("hibernate", "hibmode");
     assert!(
         cold_hib < cold_warmonly,
         "hibernate mode must avoid cold starts: {cold_hib} vs {cold_warmonly}"

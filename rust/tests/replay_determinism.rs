@@ -4,7 +4,7 @@
 //! per-function latency summaries, lifecycle counters, memory-density
 //! timelines and final pool states.
 
-use quark_hibernate::config::PlatformConfig;
+use quark_hibernate::config::{PlatformConfig, TenantBudget};
 use quark_hibernate::replay::{self, scenario};
 use quark_hibernate::util::prop;
 
@@ -104,6 +104,169 @@ fn memory_heavy_crosses_the_watermark_and_stays_deterministic() {
     assert_eq!(r1.mem_timeline, r4.mem_timeline, "density timeline diverged");
     assert_eq!(r1.final_states, r4.final_states);
     assert_eq!(r1.fingerprint(), r4.fingerprint());
+}
+
+#[test]
+fn tenant_fair_with_leases_is_bit_identical_across_workers() {
+    // The new pressure machinery end to end: TenantFairPolicy, an
+    // explicit tenant budget, AND per-shard budget leases — the shard
+    // takes pressure decisions against its lease plus its *live* local
+    // usage, which must still be bit-identical at any worker count.
+    let run = scenario::build("tenant-skewed", 80, 30_000_000_000, 0x7E4A).unwrap();
+    assert!(run.events.len() > 500, "scenario too small to be meaningful");
+    let mk = |tag: &str| {
+        let mut cfg = det_cfg(tag);
+        cfg.policy.kind = "tenant-fair".to_string();
+        cfg.policy.pressure_leases = true;
+        // Tight enough that the lease watermark actually fires on busy
+        // shards, and a budget tenant 0's hot fleet must cross.
+        cfg.policy.memory_budget = 8 << 20;
+        cfg.policy.tenants = vec![TenantBudget {
+            name: "t00".to_string(),
+            memory_budget: Some(1 << 20),
+            weight: 1.0,
+        }];
+        cfg
+    };
+    let (r1, p1) = replay::run_scenario(&mk("tfl1"), &run, 1).unwrap();
+    let (r4, p4) = replay::run_scenario(&mk("tfl4"), &run, 4).unwrap();
+    assert_eq!(r4.workers, 4, "4 workers must actually be used");
+    assert_eq!(r1.events, run.events.len(), "every event must be served");
+
+    // Field-by-field first, so a regression names what moved.
+    assert_eq!(r1.functions, r4.functions);
+    assert_eq!(r1.aggregate, r4.aggregate);
+    assert_eq!(r1.counters, r4.counters);
+    assert_eq!(r1.mem_timeline, r4.mem_timeline, "density timeline diverged");
+    assert_eq!(
+        r1.tenant_timeline, r4.tenant_timeline,
+        "per-tenant timeline diverged"
+    );
+    assert_eq!(r1.final_states, r4.final_states);
+    assert_eq!(r1.final_committed, r4.final_committed);
+    assert_eq!(p1.pool_snapshot(), p4.pool_snapshot(), "final pools diverged");
+    assert_eq!(r1.fingerprint(), r4.fingerprint());
+
+    // And the machinery actually ran: the tenant ledger was sampled and
+    // the budget genuinely bit.
+    assert!(
+        !r1.tenant_timeline.is_empty(),
+        "tenant-fair must sample the per-tenant timeline"
+    );
+    let counter = |r: &quark_hibernate::replay::report::ReplayReport, k: &str| {
+        r.counters.iter().find(|(n, _)| *n == k).map(|(_, v)| *v).unwrap()
+    };
+    assert!(
+        counter(&r1, "decisions_tenant_pressure") > 0,
+        "tenant 0's budget must force deflations: {:?}",
+        r1.counters
+    );
+    assert_eq!(r1.policy, "tenant-fair");
+}
+
+#[test]
+fn tenant_fair_caps_the_hot_tenant_and_spares_the_rest() {
+    // Fairness: tenant 0 dominates traffic and gets a deliberately small
+    // budget; every other knob that could deflate anything is off
+    // (idleness unreachable, no host pressure, no predictive wakes). The
+    // budget must cap tenant 0's steady-state committed bytes at
+    // instance-footprint granularity while every other tenant serves at
+    // the all-warm baseline, bit-for-bit.
+    let run = scenario::build("tenant-skewed", 40, 30_000_000_000, 0x5AFE).unwrap();
+    let t0_budget: u64 = 2 << 20;
+    let mk = |tag: &str, kind: &str| {
+        let mut cfg = det_cfg(tag);
+        cfg.policy.kind = kind.to_string();
+        cfg.policy.hibernate_idle_ms = 3_600_000; // idleness unreachable
+        cfg.policy.predictive_wakeup = false;
+        cfg.policy.memory_budget = 1 << 30; // host pressure unreachable
+        cfg.replay.tick_ms = 100; // the default would derive from the huge idle
+        cfg.policy.tenants = vec![TenantBudget {
+            name: "t00".to_string(),
+            memory_budget: Some(t0_budget),
+            weight: 1.0,
+        }];
+        cfg
+    };
+    let (fair, _fair_p) = replay::run_scenario(&mk("cap-fair", "tenant-fair"), &run, 4).unwrap();
+    // The baseline tracks the same tenant ledger (the [tenants] config is
+    // present) but its policy ignores it — so nothing ever deflates and
+    // the ledger records what tenant 0 *would* hold unconstrained.
+    let (base, base_p) = replay::run_scenario(&mk("cap-base", "hibernate"), &run, 4).unwrap();
+
+    let counter = |r: &quark_hibernate::replay::report::ReplayReport, k: &str| {
+        r.counters.iter().find(|(n, _)| *n == k).map(|(_, v)| *v).unwrap()
+    };
+    assert_eq!(counter(&base, "hibernations"), 0, "baseline must stay all-warm");
+    assert!(counter(&fair, "decisions_tenant_pressure") > 0);
+    assert!(counter(&fair, "hibernations") > 0);
+
+    // Steady-state cap: in the second half of the run, tenant 0's
+    // typical committed bytes sit within an instance footprint or two of
+    // its watermarked budget (deflation is instance-granular, and
+    // arrivals between the last tick of an epoch and its barrier wake a
+    // bounded handful of instances).
+    let t0_series = |r: &quark_hibernate::replay::report::ReplayReport| -> Vec<u64> {
+        let half = r.tenant_timeline.len() / 2;
+        r.tenant_timeline[half..]
+            .iter()
+            .map(|(_, rows)| {
+                rows.iter()
+                    .find(|(n, _)| n == "t00")
+                    .map(|(_, b)| *b)
+                    .unwrap_or(0)
+            })
+            .collect()
+    };
+    let mut fair_t0 = t0_series(&fair);
+    let mut base_t0 = t0_series(&base);
+    assert!(!fair_t0.is_empty() && !base_t0.is_empty());
+    fair_t0.sort_unstable();
+    base_t0.sort_unstable();
+    let median = |v: &[u64]| v[v.len() / 2];
+    // The largest single (warm) instance footprint anywhere — the
+    // granularity slack the cap is allowed.
+    let max_inst = base_p
+        .pool_snapshot()
+        .iter()
+        .flat_map(|(_, _, rows)| rows.iter().map(|(_, b)| *b))
+        .max()
+        .unwrap();
+    let cap = (0.85 * t0_budget as f64) as u64; // det_cfg watermark default
+    assert!(
+        median(&fair_t0) <= cap + 2 * max_inst,
+        "tenant 0 steady state {} must sit near its budget cap {} (+ 2×{} slack)",
+        median(&fair_t0),
+        cap,
+        max_inst
+    );
+    assert!(
+        median(&base_t0) > median(&fair_t0),
+        "the budget must genuinely reduce tenant 0's footprint: {} vs {}",
+        median(&base_t0),
+        median(&fair_t0)
+    );
+
+    // Spare the rest: every non-tenant-0 function's latency summary —
+    // p99 included — is identical to the all-warm baseline's.
+    let others = |r: &quark_hibernate::replay::report::ReplayReport| {
+        r.functions
+            .iter()
+            .filter(|f| !f.name.starts_with("t00-"))
+            .cloned()
+            .collect::<Vec<_>>()
+    };
+    let fair_rows = others(&fair);
+    let base_rows = others(&base);
+    assert!(!fair_rows.is_empty());
+    assert_eq!(
+        fair_rows, base_rows,
+        "non-tenant-0 functions must be untouched by tenant 0's budget"
+    );
+    for f in &fair_rows {
+        assert_eq!(f.hibernate, 0, "{}: no serve may hit a deflated instance", f.name);
+        assert_eq!(f.woken, 0, "{}: nothing may be woken", f.name);
+    }
 }
 
 #[test]

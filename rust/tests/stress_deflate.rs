@@ -9,7 +9,7 @@ use quark_hibernate::config::PlatformConfig;
 use quark_hibernate::container::state::ContainerState;
 use quark_hibernate::container::NoopRunner;
 use quark_hibernate::platform::metrics::ServedFrom;
-use quark_hibernate::platform::policy::Action;
+use quark_hibernate::platform::policy::Verb;
 use quark_hibernate::platform::Platform;
 use quark_hibernate::simtime::{Clock, CostModel};
 use quark_hibernate::workloads::functionbench::{golang_hello, nodejs_hello, scaled_for_test};
@@ -86,7 +86,7 @@ fn co_sharded_requests_served_while_a_large_sandbox_deflates() {
     assert!(
         actions
             .iter()
-            .any(|a| matches!(a, Action::Hibernate { .. })),
+            .any(|a| a.verb == Verb::Hibernate),
         "{actions:?}"
     );
     entered_rx
@@ -157,7 +157,7 @@ fn sync_mode_still_deflates_inside_the_tick() {
     let actions = p.policy_tick(1_000_000_000).unwrap();
     assert!(actions
         .iter()
-        .any(|a| matches!(a, Action::Hibernate { .. })));
+        .any(|a| a.verb == Verb::Hibernate));
     assert_eq!(p.pending_pipeline(), 0);
     assert!(p.memory_used() < before, "sync deflation frees memory in-tick");
     assert_eq!(p.metrics.counters.hibernations.load(Ordering::Relaxed), 1);
@@ -184,7 +184,7 @@ fn async_policy_tick_settles_on_drain_with_many_instances() {
     let actions = p.policy_tick(1_000_000_000).unwrap();
     let hibernated = actions
         .iter()
-        .filter(|a| matches!(a, Action::Hibernate { .. }))
+        .filter(|a| a.verb == Verb::Hibernate)
         .count();
     assert_eq!(hibernated, 8);
     assert_eq!(p.pending_pipeline(), 0);
@@ -221,7 +221,7 @@ fn co_sharded_requests_served_while_an_anticipatory_inflation_is_in_flight() {
     // not installed yet).
     let actions = p.policy_tick(130_000_000).unwrap();
     assert!(
-        actions.iter().any(|a| matches!(a, Action::Hibernate { .. })),
+        actions.iter().any(|a| a.verb == Verb::Hibernate),
         "{actions:?}"
     );
     assert_eq!(p.pending_pipeline(), 0);
@@ -231,7 +231,7 @@ fn co_sharded_requests_served_while_an_anticipatory_inflation_is_in_flight() {
     let (entered_rx, release_tx) = gate(&p);
     let actions = p.policy_tick_nowait(195_000_000).unwrap();
     assert!(
-        actions.iter().any(|a| matches!(a, Action::Wake { .. })),
+        actions.iter().any(|a| a.verb == Verb::Wake),
         "{actions:?}"
     );
     entered_rx
@@ -292,6 +292,11 @@ fn queue_cap_sheds_deflations_inline() {
     // counted.
     let mut cfg = one_shard_cfg("shed", 1);
     cfg.policy.pipeline_queue_cap = 1;
+    // Identical functions and no cross-sandbox sharing → every deflation
+    // job carries the same size estimate, so the size-aware shed (which
+    // only steals a *strictly larger* queued deflation) never kicks in
+    // and each overflow sheds the incoming job, as before.
+    cfg.sharing.share_runtime_binary = false;
     let p = Arc::new(Platform::new(cfg, Arc::new(NoopRunner)).unwrap());
     for i in 0..6 {
         let mut s = scaled_for_test(golang_hello(), 64);
@@ -304,7 +309,7 @@ fn queue_cap_sheds_deflations_inline() {
     let actions = p.policy_tick_nowait(1_000_000_000).unwrap();
     let hibernated = actions
         .iter()
-        .filter(|a| matches!(a, Action::Hibernate { .. }))
+        .filter(|a| a.verb == Verb::Hibernate)
         .count();
     assert_eq!(hibernated, 6, "sheds still hibernate — just inline");
     entered_rx
@@ -326,6 +331,83 @@ fn queue_cap_sheds_deflations_inline() {
             p.with_instance(&format!("fn-{i}"), 0, |sb| sb.state()).unwrap(),
             ContainerState::Hibernate,
             "fn-{i}"
+        );
+    }
+}
+
+#[test]
+fn queue_cap_sheds_the_largest_queued_deflation_first() {
+    // Size-aware backpressure: when the queue is at the cap and a *small*
+    // deflation arrives while a strictly larger one is still queued, the
+    // large one is pulled and run inline (most deferred I/O retired per
+    // shed slot) and the small one queues in its place.
+    let mut cfg = one_shard_cfg("shed-largest", 1);
+    cfg.policy.pipeline_queue_cap = 2;
+    let p = Arc::new(Platform::new(cfg, Arc::new(NoopRunner)).unwrap());
+    // Sorted decide order: a-sac (tiny, sacrificial) → m-big → z-tiny.
+    let mut sac = scaled_for_test(golang_hello(), 64);
+    sac.name = "a-sac".into();
+    p.deploy(sac).unwrap();
+    let mut big = scaled_for_test(nodejs_hello(), 2);
+    big.name = "m-big".into();
+    p.deploy(big).unwrap();
+    let mut tiny = scaled_for_test(golang_hello(), 64);
+    tiny.name = "z-tiny".into();
+    p.deploy(tiny).unwrap();
+    for name in ["a-sac", "m-big", "z-tiny"] {
+        p.request_at(name, 0).unwrap();
+    }
+
+    let (entered_rx, release_tx) = gate(&p);
+    let before = p.memory_used();
+    // One tick deflates all three, in sorted name order:
+    //  a-sac  → queued (possibly picked up and parked on the gate);
+    //  m-big  → pending 1 < cap 2 → queued;
+    //  z-tiny → pending 2 ≥ cap → the strictly larger queued m-big is
+    //           stolen and deflated inline, z-tiny queues in its place.
+    let actions = p.policy_tick_nowait(1_000_000_000).unwrap();
+    assert_eq!(
+        actions.iter().filter(|a| a.verb == Verb::Hibernate).count(),
+        3,
+        "{actions:?}"
+    );
+    assert_eq!(
+        p.metrics
+            .counters
+            .pipeline_sheds_largest
+            .load(Ordering::Relaxed),
+        1,
+        "the big deflation must be the one shed"
+    );
+    assert_eq!(
+        p.metrics.counters.pipeline_sheds.load(Ordering::Relaxed),
+        0,
+        "no incoming job fell back inline"
+    );
+    assert_eq!(
+        p.with_instance("m-big", 0, |sb| sb.state()).unwrap(),
+        ContainerState::Hibernate,
+        "the stolen deflation completed inline on the tick"
+    );
+    assert!(
+        p.memory_used() < before,
+        "the inline big deflation must already have freed memory"
+    );
+    entered_rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("the worker must park on the sacrificial job");
+    assert_eq!(p.pending_pipeline(), 2, "a-sac parked + z-tiny queued");
+
+    release_tx.send(()).unwrap();
+    p.set_pipeline_gate(None);
+    p.drain_pipeline().unwrap();
+    assert_eq!(p.pending_pipeline(), 0);
+    assert_eq!(p.metrics.counters.hibernations.load(Ordering::Relaxed), 3);
+    for name in ["a-sac", "m-big", "z-tiny"] {
+        assert_eq!(
+            p.with_instance(name, 0, |sb| sb.state()).unwrap(),
+            ContainerState::Hibernate,
+            "{name}"
         );
     }
 }
@@ -353,7 +435,7 @@ fn shed_inflation_is_benign_the_request_demand_wakes() {
     let (entered_rx, release_tx) = gate(&p);
     let actions = p.policy_tick_nowait(130_000_000).unwrap();
     assert!(
-        actions.iter().any(|a| matches!(a, Action::Hibernate { .. })),
+        actions.iter().any(|a| a.verb == Verb::Hibernate),
         "{actions:?}"
     );
     entered_rx
@@ -364,7 +446,7 @@ fn shed_inflation_is_benign_the_request_demand_wakes() {
     // A tick inside big's wake window: the wake sheds before any flip.
     let actions = p.policy_tick_nowait(195_000_000).unwrap();
     assert!(
-        !actions.iter().any(|a| matches!(a, Action::Wake { .. })),
+        !actions.iter().any(|a| a.verb == Verb::Wake),
         "a shed wake must not count as applied: {actions:?}"
     );
     assert!(p.metrics.counters.pipeline_sheds.load(Ordering::Relaxed) >= 1);

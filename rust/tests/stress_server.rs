@@ -21,7 +21,7 @@
 use quark_hibernate::config::PlatformConfig;
 use quark_hibernate::container::{NoopRunner, PayloadRunner, SpinRunner};
 use quark_hibernate::platform::metrics::ServedFrom;
-use quark_hibernate::platform::policy::Action;
+use quark_hibernate::platform::policy::Verb;
 use quark_hibernate::platform::server::{Server, ServerConfig};
 use quark_hibernate::platform::Platform;
 use quark_hibernate::simtime::CostModel;
@@ -128,7 +128,7 @@ fn stress_counters_are_exact_and_drain_hibernates_every_instance() {
     assert_eq!(
         actions
             .iter()
-            .filter(|a| matches!(a, Action::Hibernate { .. }))
+            .filter(|a| a.verb == Verb::Hibernate)
             .count() as u64,
         live,
         "one hibernate action per live instance"
