@@ -13,6 +13,11 @@ regression gate"):
   baseline, and replay throughput may fall only to baseline / 3. Runner
   noise is nowhere near 3x; a real regression (delta path silently
   rewriting the world, replay engine collapsing) is.
+* **self-relative ratios** — the batched backend's wake-under-storm check
+  compares the median storm wake against the median idle wake from the
+  *same run*, so runner speed cancels out; the ratio in baseline.json is
+  applied as-is (it is already generous). A broken priority class makes
+  the wake wait out the whole storm — orders of magnitude past the bound.
 
 Usage: check_baseline.py <bench-out-dir> [baseline.json]
 Exit code 0 = pass, 1 = regression, 2 = missing/garbled input.
@@ -108,6 +113,39 @@ def main():
         if got > base * factor:
             failures += fail(
                 f"{key}: wrote {got} bytes, baseline {base} (>{factor}x)"
+            )
+
+    io = baseline.get("io_storm")
+    if io:
+        idle_key = "io_storm/wake idle (median)"
+        storm_key = "io_storm/wake under storm (median)"
+        thr_key = "io_storm/storm throughput (coalesced runs)"
+        for key in (idle_key, storm_key, thr_key):
+            if key not in rows:
+                sys.exit(f"{micro_csv}: expected row {key!r} is missing")
+        idle_ns = rows[idle_key]["cpu_ns"]
+        storm_ns = rows[storm_key]["cpu_ns"]
+        ratio = storm_ns / max(idle_ns, 1)
+        max_ratio = io["max_wake_storm_over_idle"]
+        # Self-relative: no extra regression_factor slack — the bound is
+        # already generous and both medians come from the same runner.
+        if ratio > max_ratio:
+            failures += fail(
+                f"{storm_key}: wake under storm took {ratio:.1f}x the idle "
+                f"wake (bound {max_ratio}x) — the Latency class is no "
+                f"longer bypassing queued deflation batches"
+            )
+        # Coalesced-run count rides in the CSV `pages` column; the window
+        # length is the row's cpu_ns.
+        window_runs = rows[thr_key]["pages"]
+        window_ns = rows[thr_key]["cpu_ns"]
+        runs_per_sec = window_runs / (window_ns / 1e9) if window_ns else 0.0
+        floor = io["min_coalesced_runs_per_sec"] / factor
+        if runs_per_sec < floor:
+            failures += fail(
+                f"{thr_key}: batched storm throughput collapsed: "
+                f"{runs_per_sec:.1f} coalesced runs/s < floor {floor:.1f} "
+                f"(baseline/{factor})"
             )
 
     def check_replay_leg(csv_name, baseline_key):

@@ -162,6 +162,40 @@ impl Default for ReplayConfig {
     }
 }
 
+/// I/O-backend knobs (`[io]` section) — see
+/// [`crate::platform::io_backend`] for the scheduling contract these feed.
+#[derive(Debug, Clone)]
+pub struct IoConfig {
+    /// Which backend executes the pipeline's batch slot-run I/O:
+    /// `"sync"` (inline on the submitting thread — byte-for-byte the
+    /// pre-backend behavior, the default) or `"batched"` (two-queue
+    /// worker pool with strict latency priority, bounded batches, and an
+    /// in-flight byte budget).
+    pub backend: String,
+    /// Batched-backend worker threads (clamped to ≥ 1).
+    pub workers: usize,
+    /// In-flight byte budget for throughput-class submissions: admission
+    /// of the next deflation chunk waits while `inflight + chunk` would
+    /// exceed this (a solo chunk always proceeds; latency-class work is
+    /// never throttled).
+    pub max_inflight_bytes: u64,
+    /// Throughput submissions are chopped into chunks of at most this
+    /// many pages; every boundary is a point where a queued wake may
+    /// overtake (clamped to ≥ 1).
+    pub batch_pages: u64,
+}
+
+impl Default for IoConfig {
+    fn default() -> Self {
+        Self {
+            backend: "sync".to_string(),
+            workers: 2,
+            max_inflight_bytes: 32 << 20,
+            batch_pages: 1024,
+        }
+    }
+}
+
 /// Memory-sharing policy (§3.5): the paper shares the Quark runtime binary
 /// across sandboxes and keeps language-runtime binaries private per tenant.
 #[derive(Debug, Clone)]
@@ -208,6 +242,7 @@ pub struct PlatformConfig {
     pub policy: PolicyConfig,
     pub sharing: SharingConfig,
     pub replay: ReplayConfig,
+    pub io: IoConfig,
     pub cost: CostModel,
 }
 
@@ -227,6 +262,7 @@ impl Default for PlatformConfig {
             policy: PolicyConfig::default(),
             sharing: SharingConfig::default(),
             replay: ReplayConfig::default(),
+            io: IoConfig::default(),
             cost: CostModel::paper(),
         }
     }
@@ -402,6 +438,14 @@ impl PlatformConfig {
             &mut self.replay.strict_determinism,
         )?;
 
+        get_str(t, "io", "backend", &mut self.io.backend)?;
+        let mut io_workers = self.io.workers as u64;
+        get_u64(t, "io", "workers", &mut io_workers)?;
+        self.io.workers = (io_workers as usize).max(1);
+        get_u64(t, "io", "max_inflight_bytes", &mut self.io.max_inflight_bytes)?;
+        get_u64(t, "io", "batch_pages", &mut self.io.batch_pages)?;
+        self.io.batch_pages = self.io.batch_pages.max(1);
+
         get_bool(t, "sharing", "share_runtime_binary", &mut self.sharing.share_runtime_binary)?;
         get_bool(
             t,
@@ -422,6 +466,9 @@ impl PlatformConfig {
         }
         if self.replay.epoch_ms == 0 {
             bail!("replay.epoch_ms must be ≥ 1");
+        }
+        if !matches!(self.io.backend.as_str(), "sync" | "batched") {
+            bail!("io.backend must be \"sync\" or \"batched\", got `{}`", self.io.backend);
         }
         Ok(())
     }
@@ -567,6 +614,40 @@ mod tests {
         assert!(PlatformConfig::from_str("[replay]\nepoch_ms = 0\n").is_err());
         let c = PlatformConfig::from_str("[policy]\ntick_stride = 0\n").unwrap();
         assert_eq!(c.policy.tick_stride, 1, "stride 0 clamps to 1");
+    }
+
+    #[test]
+    fn io_section_parses_with_sync_default() {
+        let c = PlatformConfig::default();
+        assert_eq!(c.io.backend, "sync", "sync preserves pre-backend behavior");
+        assert_eq!(c.io.workers, 2);
+        assert_eq!(c.io.max_inflight_bytes, 32 << 20);
+        assert_eq!(c.io.batch_pages, 1024);
+
+        let c = PlatformConfig::from_str(
+            r#"
+            [io]
+            backend = "batched"
+            workers = 3
+            max_inflight_bytes = "8MiB"
+            batch_pages = 64
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.io.backend, "batched");
+        assert_eq!(c.io.workers, 3);
+        assert_eq!(c.io.max_inflight_bytes, 8 << 20);
+        assert_eq!(c.io.batch_pages, 64);
+        // Clamps: a zero worker pool or zero-page batch cannot make progress.
+        let c = PlatformConfig::from_str("[io]\nworkers = 0\nbatch_pages = 0\n").unwrap();
+        assert_eq!(c.io.workers, 1);
+        assert_eq!(c.io.batch_pages, 1);
+    }
+
+    #[test]
+    fn rejects_unknown_io_backend() {
+        let err = PlatformConfig::from_str("[io]\nbackend = \"uring\"\n").unwrap_err();
+        assert!(err.to_string().contains("io.backend"), "{err}");
     }
 
     #[test]

@@ -28,6 +28,7 @@ use crate::mem::page_table::{PageTable, Pte};
 use crate::mem::pss::{pss, PssBreakdown};
 use crate::mem::vma::VmaKind;
 use crate::mem::{Gpa, Gva};
+use crate::platform::io_backend::{IoBackend, SyncBackend};
 use crate::simtime::{Clock, CostModel};
 use crate::swap::file::SwapFileSet;
 use crate::swap::{ReapRecorder, SwapMgr};
@@ -65,16 +66,41 @@ pub struct SandboxServices {
     pub reap_enabled: bool,
     /// Host-object registry (cgroups, netns, rootfs mounts).
     pub hostenv: Arc<HostEnvRegistry>,
+    /// Node-wide I/O backend every sandbox's swap files submit their batch
+    /// slot runs through (`[io]` config: sync or batched).
+    pub io: Arc<dyn IoBackend>,
 }
 
 impl SandboxServices {
-    /// Build a full service rig over a fresh host region (tests, examples).
+    /// Build a full service rig over a fresh host region (tests, examples),
+    /// with the default synchronous I/O backend.
     pub fn new_local(
         host_bytes: usize,
         cost: CostModel,
         sharing: SharingConfig,
         runner: Arc<dyn PayloadRunner>,
         swap_tag: &str,
+    ) -> Result<Arc<Self>> {
+        Self::new_local_with_io(
+            host_bytes,
+            cost,
+            sharing,
+            runner,
+            swap_tag,
+            Arc::new(SyncBackend::new()),
+        )
+    }
+
+    /// [`Self::new_local`] with an explicit I/O backend (fault-injection
+    /// rigs wrap one; batched-backend tests pass a
+    /// [`crate::platform::io_backend::BatchedBackend`]).
+    pub fn new_local_with_io(
+        host_bytes: usize,
+        cost: CostModel,
+        sharing: SharingConfig,
+        runner: Arc<dyn PayloadRunner>,
+        swap_tag: &str,
+        io: Arc<dyn IoBackend>,
     ) -> Result<Arc<Self>> {
         let host = Arc::new(HostMemory::new(host_bytes)?);
         let len = host.size() as u64;
@@ -99,6 +125,7 @@ impl SandboxServices {
             runner,
             reap_enabled: true,
             hostenv: HostEnvRegistry::new(),
+            io,
         }))
     }
 
@@ -231,7 +258,7 @@ impl Sandbox {
             QUARK_BINARY_NAME,
         )?;
 
-        let files = SwapFileSet::create(&svc.swap_dir, id)
+        let files = SwapFileSet::create_with_backend(&svc.swap_dir, id, svc.io.clone())
             .context("creating sandbox swap files")?;
         let swap = SwapMgr::new(files, svc.cost.clone());
         let reap = ReapRecorder::new(svc.reap_enabled);

@@ -1,0 +1,683 @@
+//! Batched, priority-classed I/O backend for the instance pipeline.
+//!
+//! The paper's wake path lives or dies on how fast deflated memory comes
+//! back (§ abstract: a Woken-up Container must approach Warm-Container
+//! latency). With synchronous per-instance `pwritev`/`preadv`, a
+//! host-pressure deflation storm queues *ahead* of a user-visible wake at
+//! the device. This module restructures the file-facing I/O path around an
+//! io_uring-style submission/completion model, emulated over a small
+//! `preadv`/`pwritev` worker pool (the offline registry has no async
+//! runtime):
+//!
+//! * **Run descriptors, not calls** — [`SlotFile`](crate::swap::file)
+//!   plans sorted, coalesced [`IoRun`]s and submits them through an
+//!   [`IoBackend`] instead of issuing syscalls itself.
+//! * **Latency classes** — every submission carries an [`IoClass`].
+//!   Wake-path reads ([`IoClass::Latency`]) have strict priority over
+//!   deflation/teardown writes ([`IoClass::Throughput`]): workers always
+//!   drain the latency queue first.
+//! * **Bounded batches** — throughput submissions are chopped at
+//!   `io.batch_pages` boundaries, so a storm can never delay a wake by
+//!   more than one bounded batch: the wake overtakes at the next chunk
+//!   boundary (counted in
+//!   [`IoStats::priority_bypasses`](crate::platform::metrics::IoStats)).
+//! * **In-flight byte budget** — throughput *admission* waits while
+//!   `inflight + chunk > io.max_inflight_bytes` (and something is in
+//!   flight — a solo chunk always proceeds, so an oversized submission
+//!   degrades to serial rather than deadlocking). Latency work is never
+//!   throttled. Budget is acquired by the submitting thread, never by a
+//!   pool worker, so workers are always free to serve a wake.
+//!
+//! Cross-instance batching: every sandbox's [`SwapFileSet`]
+//! (crate::swap::SwapFileSet) shares the platform's one backend, so a
+//! storm of deflations from many instances interleaves through the same
+//! two queues and worker pool — coalescing stays per backing file (an
+//! iovec syscall is per-fd), scheduling is global.
+//!
+//! # Determinism
+//!
+//! [`IoBackend::execute`] *blocks until every run completes* and returns
+//! the same total-bytes result for any worker interleaving (runs address
+//! disjoint file regions). Virtual-time charges are derived from those
+//! byte counts by the cost model, never from wall time, and the
+//! scheduling-dependent [`IoStats`](crate::platform::metrics::IoStats)
+//! counters are excluded from the replay fingerprint — so `backend =
+//! batched` joins the 1-vs-N bit-identity contract via the existing
+//! drain-after-every-tick-batch barrier, and its fingerprints equal
+//! `backend = sync` on the same scenario/seed (see `docs/io_backend.md`).
+
+use crate::platform::metrics::IoStats;
+use crate::PAGE_SIZE;
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+use std::fs::File;
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Latency class of a submission — the scheduling contract.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum IoClass {
+    /// Wake-path work (REAP prefetch read): strict priority, never
+    /// throttled by the in-flight budget, submitted as one whole batch.
+    Latency,
+    /// Deflation/teardown work: yields at `batch_pages` boundaries and
+    /// waits for in-flight budget before each chunk.
+    Throughput,
+}
+
+/// Direction of a vectored transfer.
+#[derive(Copy, Clone, Debug)]
+pub enum IoDir {
+    Write,
+    Read,
+}
+
+impl IoDir {
+    fn verb(self) -> &'static str {
+        match self {
+            IoDir::Write => "pwritev",
+            IoDir::Read => "preadv",
+        }
+    }
+}
+
+/// Raw page-buffer pointer, made sendable so runs can cross into the
+/// worker pool.
+///
+/// SAFETY contract (upheld by every submitter): the pointer addresses one
+/// exclusive page-sized buffer that stays valid and unaliased until the
+/// blocking [`IoBackend::execute`] call returns — submitters hold the
+/// owning sandbox's lock (or own the buffers outright) across the call.
+/// For reads the buffer is writable; `*const` is only a unified carrier.
+#[derive(Copy, Clone)]
+pub struct PagePtr(pub *const u8);
+
+unsafe impl Send for PagePtr {}
+unsafe impl Sync for PagePtr {}
+
+/// One coalesced run: `pages.len()` page buffers bound for the contiguous
+/// file byte range starting at `offset`.
+pub struct IoRun {
+    pub offset: u64,
+    pub pages: Vec<PagePtr>,
+}
+
+impl IoRun {
+    pub fn bytes(&self) -> u64 {
+        (self.pages.len() * PAGE_SIZE) as u64
+    }
+}
+
+/// Sort `(offset, page)` items and coalesce contiguous offsets into
+/// [`IoRun`]s — the planning half of what `coalesced_io` used to do
+/// inline. Pure; performs no I/O.
+pub fn plan_runs(mut items: Vec<(u64, PagePtr)>) -> Vec<IoRun> {
+    items.sort_unstable_by_key(|&(off, _)| off);
+    let mut runs = Vec::new();
+    let mut i = 0usize;
+    while i < items.len() {
+        let mut end = i + 1;
+        while end < items.len() && items[end].0 == items[end - 1].0 + PAGE_SIZE as u64 {
+            end += 1;
+        }
+        runs.push(IoRun {
+            offset: items[i].0,
+            pages: items[i..end].iter().map(|&(_, p)| p).collect(),
+        });
+        i = end;
+    }
+    runs
+}
+
+/// Execute one run against `file` (≤ 1024 iovecs per syscall — §Perf #1).
+/// The executing half of the old `coalesced_io`, error strings included.
+pub fn execute_run(file: &File, run: &IoRun, dir: IoDir) -> Result<u64> {
+    let iovs: Vec<libc::iovec> = run
+        .pages
+        .iter()
+        .map(|p| libc::iovec {
+            iov_base: p.0 as *mut libc::c_void,
+            iov_len: PAGE_SIZE,
+        })
+        .collect();
+    let base = run.offset;
+    let mut done = 0u64;
+    let mut iov_idx = 0usize;
+    while iov_idx < iovs.len() {
+        let batch = &iovs[iov_idx..(iov_idx + 1024).min(iovs.len())];
+        // SAFETY: iovecs point into exclusive page buffers the submitter
+        // keeps alive across the blocking execute (see `PagePtr`).
+        let n = unsafe {
+            match dir {
+                IoDir::Write => libc::pwritev(
+                    file.as_raw_fd(),
+                    batch.as_ptr(),
+                    batch.len() as libc::c_int,
+                    (base + done) as libc::off_t,
+                ),
+                IoDir::Read => libc::preadv(
+                    file.as_raw_fd(),
+                    batch.as_ptr(),
+                    batch.len() as libc::c_int,
+                    (base + done) as libc::off_t,
+                ),
+            }
+        };
+        if n < 0 {
+            bail!("{} failed: {}", dir.verb(), std::io::Error::last_os_error());
+        }
+        if n == 0 {
+            bail!("vectored I/O hit EOF (offset {})", base + done);
+        }
+        if n as usize % PAGE_SIZE != 0 {
+            bail!("short vectored I/O not page-multiple: {n}");
+        }
+        done += n as u64;
+        iov_idx += n as usize / PAGE_SIZE;
+    }
+    Ok(done)
+}
+
+/// The pluggable backend the pipeline's slot-run I/O goes through.
+///
+/// `execute` submits planned runs against one backing file and **blocks
+/// until all of them complete**, returning total bytes moved (or the
+/// first error; other runs of the submission may still have executed —
+/// exactly the partial-completion surface the old sequential loop had).
+pub trait IoBackend: Send + Sync {
+    fn execute(&self, file: &Arc<File>, runs: Vec<IoRun>, dir: IoDir, class: IoClass)
+        -> Result<u64>;
+
+    /// Config name: `sync` or `batched`.
+    fn name(&self) -> &'static str;
+
+    /// The stats block this backend reports into.
+    fn stats(&self) -> &Arc<IoStats>;
+}
+
+fn note_submission(stats: &IoStats, runs: &[IoRun]) {
+    stats.submissions.fetch_add(1, Ordering::Relaxed);
+    stats.runs_submitted.fetch_add(runs.len() as u64, Ordering::Relaxed);
+    let pages: u64 = runs.iter().map(|r| r.pages.len() as u64).sum();
+    stats.pages_submitted.fetch_add(pages, Ordering::Relaxed);
+}
+
+/// `backend = sync`: executes runs inline on the submitting thread, in
+/// sorted order — byte-for-byte the pre-backend behavior (same syscall
+/// sequence, same error strings), so existing baselines and replay
+/// fingerprints stay meaningful.
+pub struct SyncBackend {
+    stats: Arc<IoStats>,
+}
+
+impl SyncBackend {
+    pub fn new() -> Self {
+        Self::with_stats(Arc::new(IoStats::default()))
+    }
+
+    /// Report into an existing stats block (the platform passes
+    /// `Metrics::io` so backend activity lands in the metrics report).
+    pub fn with_stats(stats: Arc<IoStats>) -> Self {
+        Self { stats }
+    }
+}
+
+impl Default for SyncBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl IoBackend for SyncBackend {
+    fn execute(
+        &self,
+        file: &Arc<File>,
+        runs: Vec<IoRun>,
+        dir: IoDir,
+        _class: IoClass,
+    ) -> Result<u64> {
+        if runs.is_empty() {
+            return Ok(0);
+        }
+        note_submission(&self.stats, &runs);
+        let mut total = 0u64;
+        for run in &runs {
+            self.stats.inflight_add(run.bytes());
+            let res = execute_run(file, run, dir);
+            self.stats.inflight_sub(run.bytes());
+            total += res?;
+        }
+        Ok(total)
+    }
+
+    fn name(&self) -> &'static str {
+        "sync"
+    }
+
+    fn stats(&self) -> &Arc<IoStats> {
+        &self.stats
+    }
+}
+
+/// One enqueued chunk: a bounded slice of a submission, bound for one
+/// backing file, carrying its completion handle.
+struct Chunk {
+    file: Arc<File>,
+    runs: Vec<IoRun>,
+    dir: IoDir,
+    bytes: u64,
+    done: Arc<Completion>,
+}
+
+#[derive(Default)]
+struct CompletionState {
+    remaining: usize,
+    bytes: u64,
+    error: Option<anyhow::Error>,
+}
+
+struct Completion {
+    state: Mutex<CompletionState>,
+    cv: Condvar,
+}
+
+struct QueueState {
+    latency: VecDeque<Chunk>,
+    throughput: VecDeque<Chunk>,
+    /// Bytes admitted (queued or executing). Mirrored into the stats gauge.
+    inflight_bytes: u64,
+    closed: bool,
+}
+
+struct BackendShared {
+    state: Mutex<QueueState>,
+    /// Workers wait here for submissions.
+    work: Condvar,
+    /// Throughput submitters wait here for in-flight budget.
+    budget: Condvar,
+    max_inflight_bytes: u64,
+    stats: Arc<IoStats>,
+}
+
+/// `backend = batched`: a two-queue worker pool with strict latency
+/// priority, bounded throughput chunks, and an in-flight byte budget (see
+/// the module docs for the scheduling contract).
+pub struct BatchedBackend {
+    shared: Arc<BackendShared>,
+    batch_pages: usize,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl BatchedBackend {
+    pub fn new(
+        workers: usize,
+        max_inflight_bytes: u64,
+        batch_pages: usize,
+        stats: Arc<IoStats>,
+    ) -> Self {
+        let shared = Arc::new(BackendShared {
+            state: Mutex::new(QueueState {
+                latency: VecDeque::new(),
+                throughput: VecDeque::new(),
+                inflight_bytes: 0,
+                closed: false,
+            }),
+            work: Condvar::new(),
+            budget: Condvar::new(),
+            max_inflight_bytes: max_inflight_bytes.max(PAGE_SIZE as u64),
+            stats,
+        });
+        let handles = (0..workers.max(1))
+            .map(|_| {
+                let shared = shared.clone();
+                std::thread::spawn(move || worker_loop(shared))
+            })
+            .collect();
+        Self {
+            shared,
+            batch_pages: batch_pages.max(1),
+            workers: handles,
+        }
+    }
+
+    /// Split a throughput submission into chunks of ≤ `batch_pages` pages,
+    /// cutting runs mid-way where needed — every cut is a point where a
+    /// queued wake may overtake.
+    fn chop(&self, runs: Vec<IoRun>) -> Vec<Vec<IoRun>> {
+        let cap = self.batch_pages;
+        let mut out: Vec<Vec<IoRun>> = Vec::new();
+        let mut cur: Vec<IoRun> = Vec::new();
+        let mut cur_pages = 0usize;
+        for mut run in runs {
+            loop {
+                let room = cap - cur_pages;
+                if run.pages.len() <= room {
+                    cur_pages += run.pages.len();
+                    if !run.pages.is_empty() {
+                        cur.push(run);
+                    }
+                    break;
+                }
+                if room == 0 {
+                    out.push(std::mem::take(&mut cur));
+                    cur_pages = 0;
+                    continue;
+                }
+                let tail = run.pages.split_off(room);
+                let tail_run = IoRun {
+                    offset: run.offset + (room * PAGE_SIZE) as u64,
+                    pages: tail,
+                };
+                cur.push(run);
+                out.push(std::mem::take(&mut cur));
+                cur_pages = 0;
+                run = tail_run;
+            }
+        }
+        if !cur.is_empty() {
+            out.push(cur);
+        }
+        out
+    }
+}
+
+impl IoBackend for BatchedBackend {
+    fn execute(
+        &self,
+        file: &Arc<File>,
+        runs: Vec<IoRun>,
+        dir: IoDir,
+        class: IoClass,
+    ) -> Result<u64> {
+        if runs.is_empty() {
+            return Ok(0);
+        }
+        note_submission(&self.shared.stats, &runs);
+        let chunks: Vec<Vec<IoRun>> = match class {
+            IoClass::Latency => vec![runs],
+            IoClass::Throughput => self.chop(runs),
+        };
+        if chunks.len() > 1 {
+            self.shared
+                .stats
+                .throughput_yields
+                .fetch_add(chunks.len() as u64 - 1, Ordering::Relaxed);
+        }
+        let done = Arc::new(Completion {
+            state: Mutex::new(CompletionState {
+                remaining: chunks.len(),
+                ..CompletionState::default()
+            }),
+            cv: Condvar::new(),
+        });
+        for part in chunks {
+            let bytes: u64 = part.iter().map(|r| r.bytes()).sum();
+            let mut st = self.shared.state.lock().unwrap();
+            if matches!(class, IoClass::Throughput) {
+                // Admission control on the *submitting* thread: a worker
+                // never blocks on budget, so one is always free for a
+                // wake. `inflight > 0` keeps a solo oversized chunk from
+                // deadlocking — it degrades to serial instead.
+                while st.inflight_bytes > 0
+                    && st.inflight_bytes + bytes > self.shared.max_inflight_bytes
+                {
+                    st = self.shared.budget.wait(st).unwrap();
+                }
+            }
+            st.inflight_bytes += bytes;
+            self.shared.stats.inflight_add(bytes);
+            let chunk = Chunk {
+                file: file.clone(),
+                runs: part,
+                dir,
+                bytes,
+                done: done.clone(),
+            };
+            match class {
+                IoClass::Latency => st.latency.push_back(chunk),
+                IoClass::Throughput => st.throughput.push_back(chunk),
+            }
+            drop(st);
+            self.shared.work.notify_one();
+        }
+        let mut st = done.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = done.cv.wait(st).unwrap();
+        }
+        match st.error.take() {
+            Some(e) => Err(e),
+            None => Ok(st.bytes),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "batched"
+    }
+
+    fn stats(&self) -> &Arc<IoStats> {
+        &self.shared.stats
+    }
+}
+
+impl Drop for BatchedBackend {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.closed = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<BackendShared>) {
+    loop {
+        let chunk = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(c) = st.latency.pop_front() {
+                    if !st.throughput.is_empty() {
+                        // A wake overtook queued deflation work.
+                        shared.stats.priority_bypasses.fetch_add(1, Ordering::Relaxed);
+                    }
+                    break Some(c);
+                }
+                if let Some(c) = st.throughput.pop_front() {
+                    break Some(c);
+                }
+                if st.closed {
+                    // Queues are drained (nothing popped above): exit.
+                    break None;
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        let Some(chunk) = chunk else { return };
+        let mut moved = 0u64;
+        let mut err: Option<anyhow::Error> = None;
+        for run in &chunk.runs {
+            match execute_run(&chunk.file, run, chunk.dir) {
+                Ok(n) => moved += n,
+                Err(e) => {
+                    err = Some(e);
+                    break;
+                }
+            }
+        }
+        // Release budget before completing, so a budget-blocked submitter
+        // can admit its next chunk the moment capacity frees up.
+        {
+            let mut st = shared.state.lock().unwrap();
+            st.inflight_bytes -= chunk.bytes;
+            shared.stats.inflight_sub(chunk.bytes);
+        }
+        shared.budget.notify_all();
+        let mut done = chunk.done.state.lock().unwrap();
+        done.remaining -= 1;
+        done.bytes += moved;
+        if done.error.is_none() {
+            done.error = err;
+        }
+        let finished = done.remaining == 0;
+        drop(done);
+        if finished {
+            chunk.done.cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmpfile(tag: &str) -> (PathBuf, Arc<File>) {
+        let path = std::env::temp_dir().join(format!(
+            "qh-iobackend-{tag}-{}",
+            std::process::id()
+        ));
+        let f = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .unwrap();
+        (path, Arc::new(f))
+    }
+
+    fn pages(n: usize, seed: u8) -> Vec<Vec<u8>> {
+        (0..n)
+            .map(|i| vec![seed.wrapping_add(i as u8); PAGE_SIZE])
+            .collect()
+    }
+
+    fn items(bufs: &[Vec<u8>], offsets: impl Iterator<Item = u64>) -> Vec<(u64, PagePtr)> {
+        offsets
+            .zip(bufs)
+            .map(|(off, b)| (off, PagePtr(b.as_ptr())))
+            .collect()
+    }
+
+    #[test]
+    fn plan_runs_sorts_and_coalesces() {
+        let bufs = pages(5, 1);
+        // Offsets 0,1,2 contiguous (submitted shuffled), then a gap, then 5,6.
+        let offs = [2u64, 0, 5, 1, 6].map(|o| o * PAGE_SIZE as u64);
+        let runs = plan_runs(items(&bufs, offs.into_iter()));
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].offset, 0);
+        assert_eq!(runs[0].pages.len(), 3);
+        assert_eq!(runs[1].offset, 5 * PAGE_SIZE as u64);
+        assert_eq!(runs[1].pages.len(), 2);
+        assert_eq!(runs[0].bytes(), 3 * PAGE_SIZE as u64);
+    }
+
+    fn roundtrip(backend: &dyn IoBackend, tag: &str, n: usize) {
+        let (path, file) = tmpfile(tag);
+        let bufs = pages(n, 7);
+        let runs = plan_runs(items(&bufs, (0..n as u64).map(|i| i * PAGE_SIZE as u64)));
+        let written = backend
+            .execute(&file, runs, IoDir::Write, IoClass::Throughput)
+            .unwrap();
+        assert_eq!(written, (n * PAGE_SIZE) as u64);
+        let mut out = vec![vec![0u8; PAGE_SIZE]; n];
+        let read_runs = plan_runs(
+            out.iter_mut()
+                .enumerate()
+                .map(|(i, b)| ((i * PAGE_SIZE) as u64, PagePtr(b.as_mut_ptr() as *const u8)))
+                .collect(),
+        );
+        let read = backend
+            .execute(&file, read_runs, IoDir::Read, IoClass::Latency)
+            .unwrap();
+        assert_eq!(read, written);
+        assert_eq!(out, bufs);
+        assert_eq!(
+            backend.stats().inflight_bytes.load(Ordering::Relaxed),
+            0,
+            "gauge must settle to zero when idle"
+        );
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn sync_backend_roundtrips() {
+        roundtrip(&SyncBackend::new(), "sync", 300);
+    }
+
+    #[test]
+    fn batched_backend_roundtrips_across_chunk_boundaries() {
+        // batch_pages 64 with 300 pages forces multiple chunks (and
+        // concurrent workers) on the write side.
+        let b = BatchedBackend::new(3, 1 << 20, 64, Arc::new(IoStats::default()));
+        roundtrip(&b, "batched", 300);
+        assert!(
+            b.stats().throughput_yields.load(Ordering::Relaxed) >= 4,
+            "300 pages at batch_pages=64 must yield at ≥ 4 boundaries"
+        );
+    }
+
+    #[test]
+    fn batched_solo_oversized_chunk_proceeds_without_deadlock() {
+        // Budget smaller than one chunk: the solo clause (inflight == 0)
+        // must let it through serially instead of deadlocking.
+        let b = BatchedBackend::new(1, PAGE_SIZE as u64, 8, Arc::new(IoStats::default()));
+        roundtrip(&b, "tinybudget", 40);
+    }
+
+    #[test]
+    fn batched_read_of_unwritten_region_surfaces_eof() {
+        let b = BatchedBackend::new(2, 1 << 20, 64, Arc::new(IoStats::default()));
+        let (path, file) = tmpfile("eof");
+        let mut buf = vec![0u8; PAGE_SIZE];
+        let runs = vec![IoRun {
+            offset: 0,
+            pages: vec![PagePtr(buf.as_mut_ptr() as *const u8)],
+        }];
+        let err = b
+            .execute(&file, runs, IoDir::Read, IoClass::Latency)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("EOF"), "{err:#}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn chop_respects_batch_pages_and_preserves_offsets() {
+        let b = BatchedBackend::new(1, 1 << 30, 4, Arc::new(IoStats::default()));
+        let bufs = pages(10, 3);
+        let runs = plan_runs(items(&bufs, (0..10u64).map(|i| i * PAGE_SIZE as u64)));
+        assert_eq!(runs.len(), 1, "contiguous input is one run");
+        let chunks = b.chop(runs);
+        assert_eq!(chunks.len(), 3, "10 pages / batch 4 → 3 chunks");
+        let mut expect_off = 0u64;
+        let mut total_pages = 0usize;
+        for chunk in &chunks {
+            let chunk_pages: usize = chunk.iter().map(|r| r.pages.len()).sum();
+            assert!(chunk_pages <= 4, "chunk exceeds batch_pages");
+            for r in chunk {
+                assert_eq!(r.offset, expect_off, "split must keep file offsets");
+                expect_off += r.bytes();
+            }
+            total_pages += chunk_pages;
+        }
+        assert_eq!(total_pages, 10, "no page lost in the split");
+    }
+
+    #[test]
+    fn empty_submission_is_a_noop() {
+        let b = BatchedBackend::new(1, 1 << 20, 8, Arc::new(IoStats::default()));
+        let (path, file) = tmpfile("empty");
+        assert_eq!(
+            b.execute(&file, Vec::new(), IoDir::Write, IoClass::Throughput)
+                .unwrap(),
+            0
+        );
+        assert_eq!(b.stats().submissions.load(Ordering::Relaxed), 0);
+        std::fs::remove_file(path).ok();
+    }
+}

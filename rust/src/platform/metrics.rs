@@ -115,10 +115,72 @@ impl Counters {
     }
 }
 
+/// I/O-backend observability: submission/coalescing/occupancy counters for
+/// the [`crate::platform::io_backend`] layer.
+///
+/// **Deliberately not part of [`Counters::snapshot`]** (and therefore not
+/// part of the replay fingerprint): how runs batch, chunk, and bypass each
+/// other depends on wall-clock worker scheduling, so folding these into the
+/// fingerprint would break both 1-vs-N bit-identity and sync-vs-batched
+/// fingerprint equality. They are surfaced in [`Metrics::report`] /
+/// [`Metrics::to_json`] as a separate section instead.
+#[derive(Debug, Default)]
+pub struct IoStats {
+    /// `IoBackend::execute` calls (one per SlotFile batch read/write).
+    pub submissions: AtomicU64,
+    /// Coalesced contiguous runs executed (≥ 1 syscall each).
+    pub runs_submitted: AtomicU64,
+    /// Pages moved through the backend (4 KiB each).
+    pub pages_submitted: AtomicU64,
+    /// Gauge: bytes admitted (queued or executing) right now. Reads 0
+    /// whenever the backend is idle.
+    pub inflight_bytes: AtomicU64,
+    /// High-water mark of `inflight_bytes` (validates `io.max_inflight_bytes`).
+    pub inflight_bytes_peak: AtomicU64,
+    /// Latency-class work dispatched ahead of queued throughput work — at
+    /// the pipeline queue (an inflate popped over queued deflations) or at
+    /// the backend queue (a wake read popped over queued deflation chunks).
+    pub priority_bypasses: AtomicU64,
+    /// Throughput submissions split at `io.batch_pages` boundaries — each
+    /// split is a point where a queued wake may overtake.
+    pub throughput_yields: AtomicU64,
+}
+
+impl IoStats {
+    /// Raise `inflight_bytes` by `bytes`, tracking the peak.
+    pub fn inflight_add(&self, bytes: u64) {
+        let now = self.inflight_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.inflight_bytes_peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// Lower `inflight_bytes` by `bytes`.
+    pub fn inflight_sub(&self, bytes: u64) {
+        self.inflight_bytes.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    /// Name/value pairs for reporting (kept out of the replay fingerprint —
+    /// see the type docs).
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        counter_snapshot!(
+            self,
+            submissions,
+            runs_submitted,
+            pages_submitted,
+            inflight_bytes,
+            inflight_bytes_peak,
+            priority_bypasses,
+            throughput_yields
+        )
+    }
+}
+
 /// The registry.
 pub struct Metrics {
     stripes: Vec<Mutex<BTreeMap<(String, ServedFrom), Summary>>>,
     pub counters: Counters,
+    /// Shared with the platform's [`crate::platform::io_backend`] instance
+    /// so backend activity lands in this registry's reports.
+    pub io: std::sync::Arc<IoStats>,
 }
 
 impl Default for Metrics {
@@ -132,6 +194,7 @@ impl Metrics {
         Self {
             stripes: (0..LATENCY_STRIPES).map(|_| Mutex::new(BTreeMap::new())).collect(),
             counters: Counters::default(),
+            io: std::sync::Arc::new(IoStats::default()),
         }
     }
 
@@ -215,6 +278,11 @@ impl Metrics {
             out.push_str(&format!(" {k}={v}"));
         }
         out.push('\n');
+        out.push_str("io:");
+        for (k, v) in self.io.snapshot() {
+            out.push_str(&format!(" {k}={v}"));
+        }
+        out.push('\n');
         out
     }
 
@@ -236,9 +304,16 @@ impl Metrics {
             .into_iter()
             .map(|(k, v)| (k, Json::Num(v as f64)))
             .collect();
+        let io: Vec<(&str, Json)> = self
+            .io
+            .snapshot()
+            .into_iter()
+            .map(|(k, v)| (k, Json::Num(v as f64)))
+            .collect();
         obj(vec![
             ("latencies", Json::Arr(rows)),
             ("counters", obj(counters)),
+            ("io", obj(io)),
         ])
     }
 }
@@ -312,6 +387,37 @@ mod tests {
         let j = m.to_json().to_string();
         let back = crate::util::json::parse(&j).unwrap();
         assert_eq!(back.get("latencies").unwrap().as_arr().unwrap().len(), 64);
+    }
+
+    #[test]
+    fn io_stats_render_but_stay_out_of_the_fingerprint_snapshot() {
+        let m = Metrics::new();
+        m.io.submissions.fetch_add(3, Ordering::Relaxed);
+        m.io.inflight_add(8192);
+        m.io.inflight_add(4096);
+        m.io.inflight_sub(12288);
+        m.io.priority_bypasses.fetch_add(1, Ordering::Relaxed);
+        // Rendered in both exports…
+        let r = m.report();
+        assert!(r.contains("io: submissions=3"), "{r}");
+        assert!(r.contains("inflight_bytes_peak=12288"), "{r}");
+        assert!(r.contains("priority_bypasses=1"), "{r}");
+        let j = m.to_json().to_string();
+        let back = crate::util::json::parse(&j).unwrap();
+        assert!(back.get("io").is_some());
+        // …but NEVER in the counter snapshot the replay fingerprint folds:
+        // backend scheduling is wall-clock dependent, so leaking any io_*
+        // key here would break 1-vs-N bit-identity.
+        for (k, _) in m.counters.snapshot() {
+            assert!(
+                !k.starts_with("io")
+                    && k != "submissions"
+                    && k != "runs_submitted"
+                    && k != "priority_bypasses",
+                "io stat `{k}` leaked into the fingerprint snapshot"
+            );
+        }
+        assert_eq!(m.io.inflight_bytes.load(Ordering::Relaxed), 0, "gauge settles");
     }
 
     #[test]

@@ -29,6 +29,7 @@
 //! per container; concurrency comes from more containers).
 
 pub mod density;
+pub mod io_backend;
 pub mod metrics;
 pub mod pipeline;
 pub mod policy;
@@ -121,7 +122,20 @@ impl Platform {
             runner,
             "platform",
         )?;
-        // new_local defaults reap on; honor config.
+        // Metrics exist before the services so the I/O backend can report
+        // into this platform's stats block.
+        let metrics = Arc::new(Metrics::new());
+        let io: Arc<dyn io_backend::IoBackend> = match cfg.io.backend.as_str() {
+            "batched" => Arc::new(io_backend::BatchedBackend::new(
+                cfg.io.workers,
+                cfg.io.max_inflight_bytes,
+                cfg.io.batch_pages as usize,
+                metrics.io.clone(),
+            )),
+            // Config validation admits only sync|batched.
+            _ => Arc::new(io_backend::SyncBackend::with_stats(metrics.io.clone())),
+        };
+        // new_local defaults reap on + a private sync backend; honor config.
         let svc = Arc::new(SandboxServices {
             host: svc.host.clone(),
             heap: svc.heap.clone(),
@@ -133,6 +147,7 @@ impl Platform {
             runner: svc.runner.clone(),
             reap_enabled: cfg.policy.reap_enabled,
             hostenv: svc.hostenv.clone(),
+            io,
         });
         let shard_count = if cfg.shards > 0 {
             cfg.shards
@@ -141,7 +156,6 @@ impl Platform {
                 .map(|n| n.get())
                 .unwrap_or(4)
         };
-        let metrics = Arc::new(Metrics::new());
         let wake_leads = Arc::new(WakeLeads::new(cfg.policy.adaptive_wake_lead));
         let p = Self {
             policy,

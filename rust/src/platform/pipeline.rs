@@ -35,6 +35,17 @@
 //! lets the replay engine drain after each tick batch and stay
 //! bit-identical at any worker count ([`crate::replay`]).
 //!
+//! Queued jobs are priority-classed: wake-path inflations sit on a
+//! strict-priority latency queue that workers always drain before the
+//! throughput queue holding deflations and teardowns. A deflation storm
+//! can therefore delay a demand wake by at most the one job each worker
+//! already has in hand — and each such jump is counted in the shared
+//! [`IoStats::priority_bypasses`](super::metrics::IoStats) gauge that
+//! the storm tests assert on. The same classes continue below the
+//! pipeline: the [`io_backend`](super::io_backend) tags the resulting
+//! swap-file I/O `Latency` vs `Throughput` so a batched backend keeps
+//! honoring the split at the syscall level.
+//!
 //! Backpressure is the platform's job (it owns the shed policy — see
 //! `policy.pipeline_queue_cap`); the pipeline exposes its queue depth
 //! plus the surgery the shed policy needs:
@@ -107,10 +118,25 @@ struct PoolState {
     completed: u64,
     /// Errors collected since the last reap.
     errors: Vec<anyhow::Error>,
-    /// Submitted jobs not yet picked up by a worker.
-    queue: VecDeque<PipelineJob>,
+    /// Wake-path (Inflate) jobs not yet picked up — always served before
+    /// the throughput queue, so a deflation storm can never delay a wake
+    /// by more than the job a worker already has in hand.
+    latency: VecDeque<PipelineJob>,
+    /// Deflate/Teardown jobs not yet picked up by a worker.
+    throughput: VecDeque<PipelineJob>,
     /// Set when the pipeline is dropping: workers drain and exit.
     closed: bool,
+}
+
+impl PoolState {
+    /// Pop the next runnable job, latency class first. Reports whether the
+    /// pop jumped a non-empty throughput queue (the priority-bypass case).
+    fn pop_next(&mut self) -> Option<(PipelineJob, bool)> {
+        if let Some(job) = self.latency.pop_front() {
+            return Some((job, !self.throughput.is_empty()));
+        }
+        self.throughput.pop_front().map(|job| (job, false))
+    }
 }
 
 struct Shared {
@@ -148,7 +174,14 @@ impl InstancePipeline {
                     let job = {
                         let mut st = shared.state.lock().unwrap();
                         loop {
-                            if let Some(job) = st.queue.pop_front() {
+                            if let Some((job, bypassed)) = st.pop_next() {
+                                if bypassed {
+                                    shared
+                                        .metrics
+                                        .io
+                                        .priority_bypasses
+                                        .fetch_add(1, Ordering::Relaxed);
+                                }
                                 break job;
                             }
                             if st.closed {
@@ -195,7 +228,12 @@ impl InstancePipeline {
             run_job(&self.shared, job);
             return;
         }
-        st.queue.push_back(job);
+        // Wake-path inflations go to the strict-priority latency queue;
+        // deflations and teardowns queue behind every pending wake.
+        match job.kind {
+            JobKind::Inflate => st.latency.push_back(job),
+            JobKind::Deflate | JobKind::Teardown => st.throughput.push_back(job),
+        }
         drop(st);
         self.shared.work.notify_one();
     }
@@ -230,7 +268,9 @@ impl InstancePipeline {
     pub fn steal_largest_deflation(&self, min_bytes: u64) -> Option<PipelineJob> {
         let mut st = self.shared.state.lock().unwrap();
         let mut best: Option<(usize, u64)> = None;
-        for (i, job) in st.queue.iter().enumerate() {
+        // Deflations only ever live on the throughput queue; the latency
+        // queue holds wakes, which the shed policy never steals.
+        for (i, job) in st.throughput.iter().enumerate() {
             if job.kind != JobKind::Deflate || job.est_bytes <= min_bytes {
                 continue;
             }
@@ -243,7 +283,7 @@ impl InstancePipeline {
             }
         }
         let (i, _) = best?;
-        st.queue.remove(i)
+        st.throughput.remove(i)
     }
 
     /// Run a previously [stolen](Self::steal_largest_deflation) job on the
@@ -618,6 +658,97 @@ mod tests {
         assert!(
             (WAKE_LEAD_MIN_NS..=WAKE_LEAD_MAX_NS).contains(&lead),
             "{lead}"
+        );
+    }
+
+    #[test]
+    fn queued_inflation_bypasses_a_deflation_backlog() {
+        let (svc, mut pool) = rig("pipe-prio");
+        let clock = crate::simtime::Clock::new();
+        for id in 1..=3 {
+            let sb = crate::container::sandbox::Sandbox::cold_start(
+                id,
+                scaled_for_test(golang_hello(), 64),
+                svc.clone(),
+                &clock,
+            )
+            .unwrap();
+            pool.add(sb, 0); // idx 0..2, warm — deflation fodder
+        }
+        let mut sleeper = crate::container::sandbox::Sandbox::cold_start(
+            4,
+            scaled_for_test(golang_hello(), 64),
+            svc.clone(),
+            &clock,
+        )
+        .unwrap();
+        sleeper.hibernate(&clock).unwrap();
+        pool.add(sleeper, 0); // idx 3, hibernated — the demand wake
+
+        let metrics = Arc::new(Metrics::new());
+        let leads = Arc::new(WakeLeads::new(true));
+        // One worker, parked on the gate with a sacrificial deflation so
+        // the queue contents at release time are deterministic.
+        let pipeline = InstancePipeline::new(1, metrics.clone(), leads);
+        let (entered_tx, entered_rx) = mpsc::channel::<()>();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let entered_tx = Mutex::new(entered_tx);
+        let release_rx = Mutex::new(release_rx);
+        pipeline.set_gate(Some(Arc::new(move || {
+            let _ = entered_tx.lock().unwrap().send(());
+            let _ = release_rx.lock().unwrap().recv();
+        })));
+        pipeline.submit(deflate_job(&pool, 0, "sacrifice"));
+        entered_rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("worker must park on the sacrificial job");
+
+        // Build the deflation backlog, then queue a demand wake behind it.
+        pipeline.submit(deflate_job(&pool, 1, "storm-a"));
+        pipeline.submit(deflate_job(&pool, 2, "storm-b"));
+        {
+            let inst = &pool.instances[3];
+            let reservation = inst.try_reserve().unwrap();
+            inst.sandbox
+                .lock()
+                .unwrap()
+                .wake_begin(&crate::simtime::Clock::new())
+                .unwrap();
+            pipeline.submit(PipelineJob {
+                workload: "wake".into(),
+                sandbox: inst.sandbox.clone(),
+                reservation,
+                kind: JobKind::Inflate,
+                live_gauge: inst.live_gauge.clone(),
+                est_bytes: inst.live_bytes(),
+            });
+        }
+        assert_eq!(pipeline.pending(), 4);
+        assert_eq!(metrics.io.priority_bypasses.load(Ordering::Relaxed), 0);
+
+        // Unpark. The next job the worker takes must be the wake, jumping
+        // the two queued deflations — observable as exactly one bypass
+        // (the subsequent deflation pops find the latency queue empty).
+        pipeline.set_gate(None);
+        release_tx.send(()).unwrap();
+        pipeline.drain().unwrap();
+        assert_eq!(pipeline.pending(), 0);
+        assert_eq!(
+            metrics.io.priority_bypasses.load(Ordering::Relaxed),
+            1,
+            "the wake must pop exactly once over a non-empty deflation backlog"
+        );
+        for idx in [0, 1, 2] {
+            assert_eq!(
+                pool.instances[idx].sandbox.lock().unwrap().state(),
+                crate::container::state::ContainerState::Hibernate,
+                "instance {idx} must still complete its deflation"
+            );
+            assert!(!pool.instances[idx].is_reserved());
+        }
+        assert!(
+            !pool.instances[3].is_reserved(),
+            "the completed wake releases its reservation"
         );
     }
 }

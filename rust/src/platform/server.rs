@@ -6,8 +6,8 @@
 //!
 //! # Dispatch
 //!
-//! Each worker owns a private channel; there is no shared queue (and so no
-//! shared-receiver mutex for every worker to contend on). Submissions are
+//! Each worker owns a private queue; there is no shared queue (and so no
+//! single lock for every worker to contend on). Submissions are
 //! dispatched with **function affinity**: a workload hashes to a preferred
 //! worker, so requests for the same function land on the same worker —
 //! FIFO per worker then gives per-function serve ordering, warm instances
@@ -17,14 +17,24 @@
 //! least-loaded worker's, the request spills to the least-loaded worker
 //! instead (sacrificing per-function ordering for throughput under skew).
 //!
+//! Spilling balances at submission time; **work stealing** balances after
+//! it: a worker whose own queue runs dry pulls the oldest submission from
+//! the deepest foreign queue above the same `spill_threshold`, so a burst
+//! that landed on one queue before the imbalance was visible still
+//! spreads across idle workers. With `spill_threshold = None` (strict
+//! affinity) both mechanisms are off and per-function serve ordering is
+//! unconditional. Steals are counted ([`Server::steal_count`]) so tests
+//! can pin the branch down.
+//!
 //! Wall-clock time doubles as the virtual timeline (1 ns = 1 ns): idleness
 //! for the hibernate policy is real idleness.
 
 use super::{Platform, RequestReport};
 use crate::util::fnv1a;
 use anyhow::{bail, Result};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -59,17 +69,36 @@ impl Default for ServerConfig {
 }
 
 /// One worker's dispatch endpoint: its private queue plus a depth gauge
-/// (queued + in-flight) the dispatcher load-balances on.
-struct WorkerSlot {
-    tx: mpsc::Sender<Submission>,
-    depth: Arc<AtomicUsize>,
+/// (queued + in-flight) that the dispatcher load-balances on and idle
+/// workers scan for steal candidates.
+struct WorkerQueue {
+    queue: Mutex<VecDeque<Submission>>,
+    /// Signalled when a submission lands on this queue.
+    cv: Condvar,
+    /// Queued + in-flight submissions charged to this worker. The charge
+    /// transfers with the submission on a steal; whichever worker *runs*
+    /// a submission decrements its own gauge afterwards.
+    depth: AtomicUsize,
+}
+
+impl WorkerQueue {
+    fn new() -> Self {
+        Self {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            depth: AtomicUsize::new(0),
+        }
+    }
 }
 
 /// Handle to a running server.
 pub struct Server {
     platform: Arc<Platform>,
-    slots: Vec<WorkerSlot>,
+    queues: Arc<Vec<WorkerQueue>>,
     spill_threshold: Option<usize>,
+    /// Submissions served by a worker other than the one they were
+    /// queued on.
+    steals: Arc<AtomicUsize>,
     stop: Arc<AtomicBool>,
     workers: Vec<JoinHandle<()>>,
     policy_thread: Option<JoinHandle<()>>,
@@ -96,41 +125,19 @@ impl Server {
         let epoch = Instant::now();
         let n = cfg.workers.max(1);
 
-        let mut slots = Vec::with_capacity(n);
+        let queues: Arc<Vec<WorkerQueue>> =
+            Arc::new((0..n).map(|_| WorkerQueue::new()).collect());
+        let steals = Arc::new(AtomicUsize::new(0));
         let mut handles = Vec::with_capacity(n);
-        for _ in 0..n {
-            let (tx, rx) = mpsc::channel::<Submission>();
-            let depth = Arc::new(AtomicUsize::new(0));
-            let worker_depth = depth.clone();
+        for me in 0..n {
+            let queues = queues.clone();
+            let steals = steals.clone();
             let platform = platform.clone();
             let stop = stop.clone();
+            let threshold = cfg.spill_threshold;
             handles.push(std::thread::spawn(move || {
-                let serve = |sub: Submission| {
-                    let now_vns = epoch_ns(epoch);
-                    let report = platform.request_at(&sub.workload, now_vns);
-                    worker_depth.fetch_sub(1, Ordering::Release);
-                    let _ = sub.reply.send(report);
-                };
-                loop {
-                    match rx.recv_timeout(Duration::from_millis(50)) {
-                        Ok(sub) => serve(sub),
-                        Err(mpsc::RecvTimeoutError::Timeout) => {
-                            if stop.load(Ordering::Relaxed) {
-                                // A submission accepted just before shutdown
-                                // may have landed after this recv timed out:
-                                // drain before exiting so an accepted request
-                                // is never abandoned.
-                                while let Ok(sub) = rx.try_recv() {
-                                    serve(sub);
-                                }
-                                return;
-                            }
-                        }
-                        Err(mpsc::RecvTimeoutError::Disconnected) => return,
-                    }
-                }
+                worker_loop(me, &queues, &steals, &platform, &stop, threshold, epoch)
             }));
-            slots.push(WorkerSlot { tx, depth });
         }
 
         let policy_thread = {
@@ -166,8 +173,9 @@ impl Server {
 
         Server {
             platform,
-            slots,
+            queues,
             spill_threshold: cfg.spill_threshold,
+            steals,
             stop,
             workers: handles,
             policy_thread,
@@ -178,21 +186,21 @@ impl Server {
     /// Pick the worker for `workload`: the affinity worker unless its queue
     /// runs past the spill threshold, in which case the least-loaded one.
     fn pick_worker(&self, workload: &str) -> usize {
-        let n = self.slots.len();
+        let n = self.queues.len();
         let preferred = (fnv1a(workload) % n as u64) as usize;
         let Some(threshold) = self.spill_threshold else {
             return preferred;
         };
-        let preferred_depth = self.slots[preferred].depth.load(Ordering::Acquire);
+        let preferred_depth = self.queues[preferred].depth.load(Ordering::Acquire);
         if preferred_depth <= threshold {
             // min_depth ≥ 0, so no spill is possible: skip the full scan.
             return preferred;
         }
         let (min_idx, min_depth) = self
-            .slots
+            .queues
             .iter()
             .enumerate()
-            .map(|(i, s)| (i, s.depth.load(Ordering::Acquire)))
+            .map(|(i, q)| (i, q.depth.load(Ordering::Acquire)))
             .min_by_key(|&(i, d)| (d, i))
             .expect("server has at least one worker");
         if preferred_depth > min_depth + threshold {
@@ -202,28 +210,28 @@ impl Server {
         }
     }
 
+    /// Submissions served off a foreign queue by an idle worker (the
+    /// work-stealing path). Monotonic over the server's lifetime.
+    pub fn steal_count(&self) -> usize {
+        self.steals.load(Ordering::Relaxed)
+    }
+
     /// Submit a request; returns a receiver for the report. Errors if the
     /// server has shut down (or the target worker died) — the submission
     /// was *not* enqueued and will never be served.
     pub fn submit(&self, workload: &str) -> Result<mpsc::Receiver<Result<RequestReport>>> {
-        if self.slots.is_empty() {
+        if self.stop.load(Ordering::Relaxed) || self.workers.is_empty() {
             bail!("server is shut down; submission for `{workload}` rejected");
         }
         let (reply, rx) = mpsc::channel();
         let idx = self.pick_worker(workload);
-        let slot = &self.slots[idx];
-        slot.depth.fetch_add(1, Ordering::AcqRel);
-        if slot
-            .tx
-            .send(Submission {
-                workload: workload.to_string(),
-                reply,
-            })
-            .is_err()
-        {
-            slot.depth.fetch_sub(1, Ordering::AcqRel);
-            bail!("server worker {idx} is gone; submission for `{workload}` rejected");
-        }
+        let q = &self.queues[idx];
+        q.depth.fetch_add(1, Ordering::AcqRel);
+        q.queue.lock().unwrap().push_back(Submission {
+            workload: workload.to_string(),
+            reply,
+        });
+        q.cv.notify_one();
         Ok(rx)
     }
 
@@ -245,16 +253,18 @@ impl Server {
     /// `predictor_state_file`, the learned arrival tracks are persisted
     /// here so anticipatory wake-up survives a restart.
     pub fn shutdown(&mut self) {
-        if self.slots.is_empty() && self.workers.is_empty() && self.policy_thread.is_none() {
+        if self.workers.is_empty() && self.policy_thread.is_none() {
             // Already shut down (Drop re-invokes this after an explicit
             // shutdown) — don't re-save predictor state, which would
             // resurrect a file the caller may have removed or rotated.
             return;
         }
         self.stop.store(true, Ordering::Relaxed);
-        // Dropping the senders lets each worker drain its backlog and exit
-        // on `Disconnected` without waiting out the recv timeout.
-        self.slots.clear();
+        // Wake every parked worker so none waits out its poll timeout;
+        // each then sweeps the queues dry (affinity ignored) and exits.
+        for q in self.queues.iter() {
+            q.cv.notify_all();
+        }
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
@@ -277,9 +287,12 @@ impl Drop for Server {
     fn drop(&mut self) {
         if std::thread::panicking() {
             // Don't block the unwind on a backlog drain: signal stop and
-            // let the field drop release the senders — workers finish
-            // their queues and exit detached.
+            // wake the workers — they sweep their queues and exit
+            // detached.
             self.stop.store(true, Ordering::Relaxed);
+            for q in self.queues.iter() {
+                q.cv.notify_all();
+            }
             return;
         }
         self.shutdown();
@@ -288,6 +301,79 @@ impl Drop for Server {
 
 fn epoch_ns(epoch: Instant) -> u64 {
     epoch.elapsed().as_nanos() as u64
+}
+
+/// One serving thread: drain the own queue (the affinity fast path), then
+/// — when idle and stealing is enabled — pull the oldest submission from
+/// the deepest foreign queue past `steal_threshold`. On stop the worker
+/// sweeps every queue dry regardless of affinity or threshold, so an
+/// accepted submission is never abandoned even if its affinity worker
+/// has already exited.
+fn worker_loop(
+    me: usize,
+    queues: &[WorkerQueue],
+    steals: &AtomicUsize,
+    platform: &Platform,
+    stop: &AtomicBool,
+    steal_threshold: Option<usize>,
+    epoch: Instant,
+) {
+    let serve = |sub: Submission| {
+        let now_vns = epoch_ns(epoch);
+        let report = platform.request_at(&sub.workload, now_vns);
+        queues[me].depth.fetch_sub(1, Ordering::Release);
+        let _ = sub.reply.send(report);
+    };
+    // Steal from the deepest foreign queue with depth > floor. Depth
+    // counts the victim's in-flight submission too, so the deepest gauge
+    // can belong to an already-empty queue — walk candidates deepest
+    // first rather than betting on a single victim.
+    let steal = |floor: usize| -> Option<Submission> {
+        let mut order: Vec<(usize, usize)> = queues
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != me)
+            .map(|(i, q)| (i, q.depth.load(Ordering::Acquire)))
+            .filter(|&(_, d)| d > floor)
+            .collect();
+        order.sort_by_key(|&(i, d)| (std::cmp::Reverse(d), i));
+        for (victim, _) in order {
+            if let Some(sub) = queues[victim].queue.lock().unwrap().pop_front() {
+                // The submission changes homes: the victim sheds the
+                // charge, the thief picks it up as its own in-flight.
+                queues[victim].depth.fetch_sub(1, Ordering::AcqRel);
+                queues[me].depth.fetch_add(1, Ordering::AcqRel);
+                steals.fetch_add(1, Ordering::Relaxed);
+                return Some(sub);
+            }
+        }
+        None
+    };
+    let next = |floor: Option<usize>| -> Option<Submission> {
+        if let Some(sub) = queues[me].queue.lock().unwrap().pop_front() {
+            return Some(sub);
+        }
+        steal(floor?)
+    };
+    loop {
+        if let Some(sub) = next(steal_threshold) {
+            serve(sub);
+            continue;
+        }
+        if stop.load(Ordering::Relaxed) {
+            while let Some(sub) = next(Some(0)) {
+                serve(sub);
+            }
+            return;
+        }
+        let guard = queues[me].queue.lock().unwrap();
+        if guard.is_empty() {
+            let _ = queues[me]
+                .cv
+                .wait_timeout(guard, Duration::from_millis(50))
+                .unwrap();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -440,13 +526,39 @@ mod tests {
         let preferred = server.pick_worker("golang-hello");
         // At exactly the threshold over the least-loaded worker (0), the
         // submission stays on its affinity worker...
-        server.slots[preferred].depth.store(2, Ordering::Release);
+        server.queues[preferred].depth.store(2, Ordering::Release);
         assert_eq!(server.pick_worker("golang-hello"), preferred);
         // ...one deeper, it spills to a least-loaded worker.
-        server.slots[preferred].depth.store(3, Ordering::Release);
+        server.queues[preferred].depth.store(3, Ordering::Release);
         let picked = server.pick_worker("golang-hello");
         assert_ne!(picked, preferred, "must spill off the overloaded worker");
-        assert_eq!(server.slots[picked].depth.load(Ordering::Acquire), 0);
-        server.slots[preferred].depth.store(0, Ordering::Release);
+        assert_eq!(server.queues[picked].depth.load(Ordering::Acquire), 0);
+        server.queues[preferred].depth.store(0, Ordering::Release);
+    }
+
+    #[test]
+    fn strict_affinity_disables_stealing_and_spilling() {
+        let p = platform();
+        let mut server = Server::start_with(
+            p.clone(),
+            ServerConfig {
+                workers: 4,
+                policy_interval: Duration::from_secs(3600),
+                spill_threshold: None,
+            },
+        );
+        let rxs: Vec<_> = (0..32)
+            .map(|_| server.submit("golang-hello").unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        assert_eq!(
+            server.steal_count(),
+            0,
+            "strict affinity must never steal"
+        );
+        server.shutdown();
+        assert_eq!(p.metrics.counters.requests.load(Ordering::Relaxed), 32);
     }
 }

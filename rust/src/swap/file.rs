@@ -22,15 +22,24 @@
 //! layout (the swap manager's host-readahead window) compare epochs before
 //! trusting the cache, so a stale window can never hide a device read.
 //!
+//! Batch I/O (the coalesced scatter writes and the REAP prefetch read) is
+//! planned here as run descriptors and *executed* by the pluggable
+//! [`crate::platform::io_backend`] — deflation-side writes at
+//! `Throughput` class, the wake prefetch at `Latency` class (strict
+//! priority; see `docs/io_backend.md`). Single-page fault-path `pread`s
+//! stay direct.
+//!
 //! Both files are deleted when the [`SwapFileSet`] drops (sandbox
 //! termination).
 
 use crate::mem::Gpa;
+use crate::platform::io_backend::{plan_runs, IoBackend, IoClass, IoDir, PagePtr, SyncBackend};
 use crate::PAGE_SIZE;
 use anyhow::{bail, Context, Result};
 use std::fs::{File, OpenOptions};
 use std::os::unix::io::AsRawFd;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// Offset (bytes) of a page image within a swap or REAP file.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
@@ -39,8 +48,16 @@ pub struct SwapSlot(pub u64);
 /// One stable-slot page-image file: the shared mechanics behind the swap
 /// file and the REAP file (allocation, free list, layout epoch, coalesced
 /// scatter I/O).
+///
+/// Since the I/O-backend split, a `SlotFile` **plans** sorted/coalesced
+/// run descriptors and submits them through the
+/// [`IoBackend`](crate::platform::io_backend) it was opened with, instead
+/// of issuing the vectored syscalls itself — that is where batching across
+/// instances, latency-class priority, and in-flight accounting live.
 struct SlotFile {
-    file: File,
+    file: Arc<File>,
+    /// Executes this file's planned slot runs (shared platform-wide).
+    io: Arc<dyn IoBackend>,
     path: PathBuf,
     /// High-water mark (bytes); slots live in `[0, len)`.
     len: u64,
@@ -51,7 +68,7 @@ struct SlotFile {
 }
 
 impl SlotFile {
-    fn open(path: PathBuf) -> Result<Self> {
+    fn open(path: PathBuf, io: Arc<dyn IoBackend>) -> Result<Self> {
         let file = OpenOptions::new()
             .read(true)
             .write(true)
@@ -60,7 +77,8 @@ impl SlotFile {
             .open(&path)
             .with_context(|| format!("opening {}", path.display()))?;
         Ok(Self {
-            file,
+            file: Arc::new(file),
+            io,
             path,
             len: 0,
             free: Vec::new(),
@@ -106,117 +124,49 @@ impl SlotFile {
     /// contiguous or ordered: writes are sorted by offset and contiguous
     /// runs are coalesced into scatter `pwritev` batches (≤ IOV_MAX iovecs
     /// per syscall — §Perf #1), so a mostly-in-order delta still goes out
-    /// in a handful of syscalls. Returns bytes written.
-    fn write_at(&mut self, writes: &[(SwapSlot, &[u8])]) -> Result<u64> {
+    /// in a handful of syscalls. The planned runs execute on the I/O
+    /// backend under `class` scheduling; the call blocks until they all
+    /// complete. Returns bytes written.
+    fn write_at(&mut self, writes: &[(SwapSlot, &[u8])], class: IoClass) -> Result<u64> {
         if writes.is_empty() {
             return Ok(0);
         }
         self.epoch += 1;
-        let items: Vec<(u64, *const u8)> = writes
+        let items: Vec<(u64, PagePtr)> = writes
             .iter()
             .map(|(slot, p)| {
                 assert_eq!(p.len(), PAGE_SIZE);
-                (slot.0, p.as_ptr())
+                (slot.0, PagePtr(p.as_ptr()))
             })
             .collect();
         for (off, _) in &items {
             debug_assert!(off % PAGE_SIZE as u64 == 0 && *off < self.len);
         }
-        coalesced_io(&self.file, items, IoDir::Write)
+        // SAFETY (PagePtr contract): the borrowed page slices stay alive
+        // and unaliased across this blocking call.
+        self.io
+            .execute(&self.file, plan_runs(items), IoDir::Write, class)
     }
 
     /// Read page images from their slots into per-slot page buffers — the
     /// mirror of [`Self::write_at`]: sorted by offset, contiguous runs
     /// coalesced into `preadv` batches. Returns bytes read.
-    fn read_at(&self, reads: &mut [(SwapSlot, &mut [u8])]) -> Result<u64> {
+    fn read_at(&self, reads: &mut [(SwapSlot, &mut [u8])], class: IoClass) -> Result<u64> {
         if reads.is_empty() {
             return Ok(0);
         }
-        let items: Vec<(u64, *const u8)> = reads
+        let items: Vec<(u64, PagePtr)> = reads
             .iter_mut()
             .map(|(slot, b)| {
                 assert_eq!(b.len(), PAGE_SIZE);
-                (slot.0, b.as_mut_ptr() as *const u8)
+                (slot.0, PagePtr(b.as_mut_ptr() as *const u8))
             })
             .collect();
-        coalesced_io(&self.file, items, IoDir::Read)
+        // SAFETY (PagePtr contract): the exclusively borrowed buffers stay
+        // alive across this blocking call.
+        self.io
+            .execute(&self.file, plan_runs(items), IoDir::Read, class)
     }
-}
-
-#[derive(Clone, Copy)]
-enum IoDir {
-    Write,
-    Read,
-}
-
-/// Sort `(offset, page_ptr)` items, coalesce contiguous runs, and issue
-/// one `pwritev`/`preadv` loop per run (≤ 1024 iovecs per syscall).
-///
-/// SAFETY contract: every pointer addresses one exclusive page-sized
-/// buffer that outlives the call (for reads the buffers are writable —
-/// the `*const` is only a unified carrier type).
-fn coalesced_io(file: &File, mut items: Vec<(u64, *const u8)>, dir: IoDir) -> Result<u64> {
-    items.sort_unstable_by_key(|&(off, _)| off);
-    let mut total = 0u64;
-    let mut run = 0usize;
-    while run < items.len() {
-        let mut end = run + 1;
-        while end < items.len() && items[end].0 == items[end - 1].0 + PAGE_SIZE as u64 {
-            end += 1;
-        }
-        let base = items[run].0;
-        let iovs: Vec<libc::iovec> = items[run..end]
-            .iter()
-            .map(|&(_, p)| libc::iovec {
-                iov_base: p as *mut libc::c_void,
-                iov_len: PAGE_SIZE,
-            })
-            .collect();
-        let mut done = 0u64;
-        let mut iov_idx = 0usize;
-        while iov_idx < iovs.len() {
-            let batch = &iovs[iov_idx..(iov_idx + 1024).min(iovs.len())];
-            // SAFETY: iovecs point into caller-held exclusive page buffers
-            // (see the function's safety contract).
-            let n = unsafe {
-                match dir {
-                    IoDir::Write => libc::pwritev(
-                        file.as_raw_fd(),
-                        batch.as_ptr(),
-                        batch.len() as libc::c_int,
-                        (base + done) as libc::off_t,
-                    ),
-                    IoDir::Read => libc::preadv(
-                        file.as_raw_fd(),
-                        batch.as_ptr(),
-                        batch.len() as libc::c_int,
-                        (base + done) as libc::off_t,
-                    ),
-                }
-            };
-            if n < 0 {
-                bail!(
-                    "{} failed: {}",
-                    match dir {
-                        IoDir::Write => "pwritev",
-                        IoDir::Read => "preadv",
-                    },
-                    std::io::Error::last_os_error()
-                );
-            }
-            if n == 0 {
-                bail!("vectored I/O hit EOF (offset {})", base + done);
-            }
-            if n as usize % PAGE_SIZE != 0 {
-                bail!("short vectored I/O not page-multiple: {n}");
-            }
-            done += n as u64;
-            iov_idx += n as usize / PAGE_SIZE;
-        }
-        total += done;
-        run = end;
-    }
-    Ok(total)
 }
 
 /// The pair of files backing one sandbox's hibernation.
@@ -227,13 +177,27 @@ pub struct SwapFileSet {
 }
 
 impl SwapFileSet {
-    /// Create the file pair under `dir` for sandbox `id`.
+    /// Create the file pair under `dir` for sandbox `id`, with a private
+    /// synchronous I/O backend (`backend = sync` semantics — exactly the
+    /// pre-backend behavior). Unit rigs and standalone tools use this; the
+    /// platform wires every sandbox to its shared backend via
+    /// [`Self::create_with_backend`].
     pub fn create(dir: &Path, id: u64) -> Result<Self> {
+        Self::create_with_backend(dir, id, Arc::new(SyncBackend::new()))
+    }
+
+    /// Create the file pair under `dir` for sandbox `id`, routing batch
+    /// slot-run I/O through `io`. Deflation-side batch writes submit as
+    /// [`IoClass::Throughput`]; the REAP wake prefetch submits as
+    /// [`IoClass::Latency`] (strict priority). The single-page fault-path
+    /// `pread`s stay direct: they are the random-read critical path and
+    /// gain nothing from batching.
+    pub fn create_with_backend(dir: &Path, id: u64, io: Arc<dyn IoBackend>) -> Result<Self> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating swap dir {}", dir.display()))?;
         Ok(Self {
-            swap: SlotFile::open(dir.join(format!("sandbox-{id}.swap")))?,
-            reap: SlotFile::open(dir.join(format!("sandbox-{id}.reap")))?,
+            swap: SlotFile::open(dir.join(format!("sandbox-{id}.swap")), io.clone())?,
+            reap: SlotFile::open(dir.join(format!("sandbox-{id}.reap")), io)?,
             dir: dir.to_path_buf(),
         })
     }
@@ -248,7 +212,7 @@ impl SwapFileSet {
             bail!("swap pages are exactly {PAGE_SIZE} bytes");
         }
         let slot = self.swap.alloc();
-        self.swap.write_at(&[(slot, data)])?;
+        self.swap.write_at(&[(slot, data)], IoClass::Throughput)?;
         Ok(slot)
     }
 
@@ -266,9 +230,10 @@ impl SwapFileSet {
     }
 
     /// Write page images at their (pre-allocated) swap slots — see
-    /// [`SlotFile::write_at`] for the coalescing. Returns bytes written.
+    /// [`SlotFile::write_at`] for the coalescing. Deflation-side work:
+    /// submits at [`IoClass::Throughput`]. Returns bytes written.
     pub fn write_pages_at(&mut self, writes: &[(SwapSlot, &[u8])]) -> Result<u64> {
-        self.swap.write_at(writes)
+        self.swap.write_at(writes, IoClass::Throughput)
     }
 
     /// Random read of one page image directly into a caller buffer that is
@@ -324,17 +289,19 @@ impl SwapFileSet {
 
     /// REAP swap-out: write working-set page images at their stable REAP
     /// slots with sorted, coalesced scatter `pwritev` runs (§3.4.2 step c —
-    /// now a delta: callers pass only the stale pages). Returns bytes
-    /// written.
+    /// now a delta: callers pass only the stale pages). Deflation-side
+    /// work: submits at [`IoClass::Throughput`]. Returns bytes written.
     pub fn write_reap_pages_at(&mut self, writes: &[(SwapSlot, &[u8])]) -> Result<u64> {
-        self.reap.write_at(writes)
+        self.reap.write_at(writes, IoClass::Throughput)
     }
 
     /// REAP swap-in: one coalesced `preadv` batch of the recorded working
     /// set from its REAP slots into the caller's scatter buffers (§3.4.2
-    /// swap-in step 1). Returns bytes read.
+    /// swap-in step 1). This is the user-visible wake path: submits at
+    /// [`IoClass::Latency`], bypassing any queued deflation batches.
+    /// Returns bytes read.
     pub fn read_reap_pages_at(&self, reads: &mut [(SwapSlot, &mut [u8])]) -> Result<u64> {
-        self.reap.read_at(reads)
+        self.reap.read_at(reads, IoClass::Latency)
     }
 
     /// Reset the REAP file completely (every REAP slot forgotten).
@@ -659,6 +626,44 @@ mod tests {
             .collect();
         fs.read_reap_pages_at(&mut reads).unwrap();
         assert_eq!(bufs, pages);
+    }
+
+    #[test]
+    fn batched_backend_roundtrip_through_swap_file_set() {
+        // Same data path as the sync default, routed through the batched
+        // backend: chunked throughput writes, one latency-class prefetch.
+        use crate::platform::io_backend::BatchedBackend;
+        use crate::platform::metrics::IoStats;
+        use std::sync::atomic::Ordering;
+        let dir = tmpdir("batched");
+        let stats = Arc::new(IoStats::default());
+        let io = Arc::new(BatchedBackend::new(2, 1 << 20, 32, stats.clone()));
+        let mut fs = SwapFileSet::create_with_backend(&dir, 12, io).unwrap();
+        let slots: Vec<SwapSlot> = (0..100).map(|_| fs.alloc_reap_slot()).collect();
+        let pages: Vec<Vec<u8>> = (0..100).map(|i| test_pattern(Gpa(i * 0x1000))).collect();
+        let writes: Vec<(SwapSlot, &[u8])> = slots
+            .iter()
+            .zip(&pages)
+            .map(|(&s, p)| (s, p.as_slice()))
+            .collect();
+        let written = fs.write_reap_pages_at(&writes).unwrap();
+        assert_eq!(written, 100 * PAGE_SIZE as u64);
+        let mut bufs: Vec<Vec<u8>> = (0..100).map(|_| vec![0u8; PAGE_SIZE]).collect();
+        let mut reads: Vec<(SwapSlot, &mut [u8])> = slots
+            .iter()
+            .zip(bufs.iter_mut())
+            .map(|(&s, b)| (s, b.as_mut_slice()))
+            .collect();
+        assert_eq!(fs.read_reap_pages_at(&mut reads).unwrap(), written);
+        assert_eq!(bufs, pages);
+        assert!(
+            stats.pages_submitted.load(Ordering::Relaxed) >= 200,
+            "write + read batches must be accounted"
+        );
+        assert!(
+            stats.throughput_yields.load(Ordering::Relaxed) >= 1,
+            "100 pages at batch_pages=32 must split"
+        );
     }
 
     #[test]

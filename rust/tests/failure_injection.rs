@@ -1,6 +1,16 @@
 //! Failure injection: the mechanism must fail loudly and safely when its
 //! environment misbehaves — truncated swap files, exhausted heaps, illegal
-//! lifecycle edges, and platform-level races.
+//! lifecycle edges, injected batch-I/O failures, and platform-level races.
+//!
+//! The injected-I/O tests drive partial and whole-batch write/read
+//! failures through the batched backend (via [`FlakyBackend`]) and pin
+//! the recovery contracts: a failed REAP delta invalidates the image and
+//! frees its never-registered slots; a failed batch swap-out leaves
+//! fresh pages faulting loudly ("no swap slot") instead of reading
+//! unwritten file bytes; a failed REAP inflate falls back to the
+//! page-fault path against the swap file; and a pipeline job that fails
+//! still drops its reservation, so the platform drains and serves
+//! afterwards.
 
 use quark_hibernate::config::SharingConfig;
 use quark_hibernate::container::sandbox::{Sandbox, SandboxServices};
@@ -9,12 +19,124 @@ use quark_hibernate::mem::bitmap_alloc::BitmapPageAllocator;
 use quark_hibernate::mem::buddy::BuddyAllocator;
 use quark_hibernate::mem::host::HostMemory;
 use quark_hibernate::mem::page_table::{PageTable, Pte};
-use quark_hibernate::mem::Gva;
+use quark_hibernate::mem::{Gpa, Gva};
+use quark_hibernate::platform::io_backend::{
+    BatchedBackend, IoBackend, IoClass, IoDir, IoRun,
+};
+use quark_hibernate::platform::metrics::{IoStats, Metrics};
+use quark_hibernate::platform::pipeline::{InstancePipeline, JobKind, PipelineJob};
+use quark_hibernate::platform::policy::WakeLeads;
+use quark_hibernate::platform::pool::FunctionPool;
 use quark_hibernate::simtime::{Clock, CostModel};
 use quark_hibernate::swap::file::SwapFileSet;
 use quark_hibernate::swap::SwapMgr;
 use quark_hibernate::workloads::functionbench::{golang_hello, scaled_for_test};
+use std::fs::File;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+
+/// Wraps the batched backend; injects batch write/read failures on
+/// demand. When a batch of several runs fails, the first run is landed
+/// before the error — a genuinely *partial* batch, the worst case the
+/// recovery contracts have to absorb.
+struct FlakyBackend {
+    inner: BatchedBackend,
+    fail_writes: AtomicBool,
+    fail_reads: AtomicBool,
+}
+
+impl FlakyBackend {
+    fn new() -> Arc<Self> {
+        Arc::new(Self {
+            inner: BatchedBackend::new(2, 1 << 20, 8, Arc::new(IoStats::default())),
+            fail_writes: AtomicBool::new(false),
+            fail_reads: AtomicBool::new(false),
+        })
+    }
+
+    fn fail_writes(&self, on: bool) {
+        self.fail_writes.store(on, Ordering::Relaxed);
+    }
+
+    fn fail_reads(&self, on: bool) {
+        self.fail_reads.store(on, Ordering::Relaxed);
+    }
+}
+
+impl IoBackend for FlakyBackend {
+    fn execute(
+        &self,
+        file: &Arc<File>,
+        runs: Vec<IoRun>,
+        dir: IoDir,
+        class: IoClass,
+    ) -> anyhow::Result<u64> {
+        let (failing, verb) = match dir {
+            IoDir::Write => (self.fail_writes.load(Ordering::Relaxed), "pwritev"),
+            IoDir::Read => (self.fail_reads.load(Ordering::Relaxed), "preadv"),
+        };
+        if failing {
+            if runs.len() > 1 {
+                // Partial batch: the first run lands, the rest never do.
+                let first = runs.into_iter().next().unwrap();
+                self.inner.execute(file, vec![first], dir, class)?;
+            }
+            anyhow::bail!("injected {verb} failure");
+        }
+        self.inner.execute(file, runs, dir, class)
+    }
+
+    fn name(&self) -> &'static str {
+        "flaky"
+    }
+
+    fn stats(&self) -> &Arc<IoStats> {
+        self.inner.stats()
+    }
+}
+
+/// SwapMgr-level rig over a [`FlakyBackend`].
+struct IoRig {
+    host: Arc<HostMemory>,
+    alloc: BitmapPageAllocator,
+    mgr: SwapMgr,
+    clock: Clock,
+    flaky: Arc<FlakyBackend>,
+}
+
+fn io_rig(tag: &str) -> IoRig {
+    let host = Arc::new(HostMemory::new(64 << 20).unwrap());
+    let heap = Arc::new(BuddyAllocator::new(host.clone(), 0, host.size() as u64).unwrap());
+    let alloc = BitmapPageAllocator::new(host.clone(), heap);
+    let flaky = FlakyBackend::new();
+    let dir = std::env::temp_dir().join(format!(
+        "qh-failinj-io-{tag}-{}",
+        std::process::id()
+    ));
+    let files = SwapFileSet::create_with_backend(&dir, 1, flaky.clone()).unwrap();
+    IoRig {
+        host,
+        alloc,
+        mgr: SwapMgr::new(files, CostModel::paper()),
+        clock: Clock::new(),
+        flaky,
+    }
+}
+
+/// Map `n` anon pages with verifiable contents at gvas `i * 0x1000`;
+/// returns (gpas, checksums).
+fn map_pages(r: &IoRig, pt: &mut PageTable, n: u64) -> (Vec<Gpa>, Vec<u64>) {
+    let mut gpas = Vec::new();
+    let mut sums = Vec::new();
+    for i in 0..n {
+        let gpa = r.alloc.alloc_page().unwrap();
+        r.host.fill_page(gpa, 0xFA11 + i).unwrap();
+        pt.map(Gva(i * 0x1000), Pte::new_present(gpa, Pte::WRITABLE));
+        sums.push(r.host.checksum_page(gpa).unwrap());
+        gpas.push(gpa);
+    }
+    (gpas, sums)
+}
 
 #[test]
 fn truncated_swap_file_is_detected_not_corrupting() {
@@ -165,4 +287,321 @@ fn hostenv_exhaustion_reported() {
     for e in envs {
         e.release().unwrap();
     }
+}
+
+#[test]
+fn failed_reap_delta_write_invalidates_image_and_frees_fresh_slots() {
+    // A REAP delta whose batch write errors must leave NO image (a
+    // partial mix of old and new slot images is not trustworthy) and
+    // must free the never-registered fresh slots — and a retried cycle
+    // must rebuild the image from the still-resident frames.
+    let mut r = io_rig("reap-wfail");
+    let mut pt = PageTable::new();
+    let (gpas, sums) = map_pages(&r, &mut pt, 8);
+    r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+    for i in 0..4u64 {
+        r.mgr
+            .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
+            .unwrap();
+    }
+
+    r.flaky.fail_writes(true);
+    let err = r
+        .mgr
+        .reap_swap_out(&mut [&mut pt], &r.host, &r.clock)
+        .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("injected"),
+        "unexpected error: {err:#}"
+    );
+    assert!(
+        !r.mgr.has_reap_image(),
+        "a failed REAP write must invalidate the recorded image"
+    );
+    assert_eq!(
+        r.mgr.reap_live_pages(),
+        0,
+        "never-registered fresh REAP slots must return to the free list"
+    );
+    // The frames never left the host: the working set is still resident
+    // and intact (the discard runs only after a successful write).
+    for i in 0..4usize {
+        assert!(r.host.is_committed(gpas[i]));
+        assert_eq!(r.host.checksum_page(gpas[i]).unwrap(), sums[i]);
+    }
+
+    // Retry after the fault clears: the delta is rebuilt in full (the
+    // stale marks survive the failure), and the wake round-trips.
+    r.flaky.fail_writes(false);
+    let rpt = r
+        .mgr
+        .reap_swap_out(&mut [&mut pt], &r.host, &r.clock)
+        .unwrap();
+    assert_eq!(rpt.unique_pages, 4, "the retried cycle rewrites the full set");
+    assert!(r.mgr.has_reap_image());
+    assert_eq!(r.mgr.reap_live_pages(), 4);
+    assert_eq!(r.mgr.reap_swap_in(&r.host, &r.clock).unwrap(), 4);
+    for i in 0..4usize {
+        assert_eq!(r.host.checksum_page(gpas[i]).unwrap(), sums[i], "page {i}");
+    }
+}
+
+#[test]
+fn partial_batch_swap_out_fails_loud_and_retry_recovers() {
+    // A batch swap-out that lands only its first run: fresh pages whose
+    // slots were never registered must fault LOUDLY ("no swap slot"),
+    // never read unwritten file bytes as data; rewritten pages keep
+    // their resident frames, so no content is lost; and a retried cycle
+    // completes the job.
+    let mut r = io_rig("swap-partial");
+    let mut pt = PageTable::new();
+    let (gpas, sums) = map_pages(&r, &mut pt, 12);
+    r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+    // Fault back alternating pages — their slots are non-contiguous, so
+    // the failing cycle's batch really is several runs (partial lands).
+    let touched = [0u64, 2, 4, 6];
+    let mut new_sums = vec![0u64; 12];
+    for &i in &touched {
+        r.mgr
+            .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
+            .unwrap();
+        r.host.fill_page(gpas[i as usize], 0xBAD + i).unwrap();
+        pt.update(Gva(i * 0x1000), |p| p.with(Pte::DIRTY)).unwrap();
+        new_sums[i as usize] = r.host.checksum_page(gpas[i as usize]).unwrap();
+    }
+    // Two brand-new pages join this cycle as fresh (slot-less) writes.
+    let mut fresh_sums = Vec::new();
+    for i in 12..14u64 {
+        let gpa = r.alloc.alloc_page().unwrap();
+        r.host.fill_page(gpa, 0xF2E5 + i).unwrap();
+        pt.map(
+            Gva(i * 0x1000),
+            Pte::new_present(gpa, Pte::WRITABLE | Pte::DIRTY),
+        );
+        fresh_sums.push(r.host.checksum_page(gpa).unwrap());
+    }
+
+    r.flaky.fail_writes(true);
+    let err = r
+        .mgr
+        .swap_out(&mut [&mut pt], &r.host, &r.clock)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("injected"), "{err:#}");
+    assert_eq!(
+        r.mgr.swapped_bytes(),
+        12 * quark_hibernate::PAGE_SIZE as u64,
+        "fresh slots must never be registered by a failed batch"
+    );
+    // Loud failure on a fresh page: swapped-marked but slot-less.
+    let err = r
+        .mgr
+        .fault_swap_in(&mut pt, Gva(12 * 0x1000), &r.host, &r.clock)
+        .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("no swap slot"),
+        "a never-written page must fail loudly, got: {err:#}"
+    );
+    assert!(
+        pt.get(Gva(12 * 0x1000)).swapped(),
+        "the failed fault must not silently re-present the PTE"
+    );
+    // No data loss on the rewrite set: the frames stayed resident (the
+    // discard never ran), so faults restore the NEW content regardless
+    // of which slots the partial batch reached.
+    for &i in &touched {
+        r.mgr
+            .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
+            .unwrap();
+        assert_eq!(
+            r.host.checksum_page(gpas[i as usize]).unwrap(),
+            new_sums[i as usize],
+            "page {i} lost its latest content"
+        );
+    }
+
+    // Retry: the fresh pages get slots, the resident rewrites land, and
+    // every page round-trips with its latest content.
+    r.flaky.fail_writes(false);
+    let rpt = r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+    assert_eq!(rpt.unique_pages, 6, "4 resident rewrites + 2 fresh pages");
+    assert_eq!(rpt.live_pages, 14);
+    for i in 0..14u64 {
+        r.mgr
+            .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
+            .unwrap();
+        let gpa = pt.get(Gva(i * 0x1000)).gpa();
+        let want = match i {
+            0 | 2 | 4 | 6 => new_sums[i as usize],
+            12 | 13 => fresh_sums[(i - 12) as usize],
+            _ => sums[i as usize],
+        };
+        assert_eq!(r.host.checksum_page(gpa).unwrap(), want, "page {i}");
+    }
+}
+
+#[test]
+fn failed_reap_inflate_falls_back_to_the_swap_file() {
+    // The wake-path contract: when the REAP batch read errors, the
+    // working set is still recoverable page by page through the fault
+    // path — single preads against the swap file that do NOT go through
+    // the (failing) batch backend.
+    let mut r = io_rig("reap-rfail");
+    let mut pt = PageTable::new();
+    let (gpas, sums) = map_pages(&r, &mut pt, 10);
+    r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+    for i in 0..5u64 {
+        r.mgr
+            .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
+            .unwrap();
+    }
+    r.mgr
+        .reap_swap_out(&mut [&mut pt], &r.host, &r.clock)
+        .unwrap();
+
+    r.flaky.fail_reads(true);
+    let err = r.mgr.reap_swap_in(&r.host, &r.clock).unwrap_err();
+    assert!(format!("{err:#}").contains("injected"), "{err:#}");
+    assert!(
+        r.mgr.has_reap_image(),
+        "a failed batch read must not destroy the (intact) image"
+    );
+    // Fallback, with the batch backend still failing: every working-set
+    // page faults in from the swap file with correct content.
+    for i in 0..5u64 {
+        let reads = r
+            .mgr
+            .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
+            .unwrap();
+        assert_eq!(reads, 1, "page {i} must come from the swap file");
+        assert_eq!(
+            r.host.checksum_page(gpas[i as usize]).unwrap(),
+            sums[i as usize],
+            "page {i}"
+        );
+    }
+    r.flaky.fail_reads(false);
+}
+
+#[test]
+fn sandbox_serves_through_an_injected_deflation_failure() {
+    // Sandbox-level recovery: a hibernate whose REAP delta write fails
+    // leaves the instance demand-wakeable (no image → no prefetch, the
+    // frames are still resident), and once the fault clears the full
+    // hibernate/wake cycle works again.
+    let flaky = FlakyBackend::new();
+    let svc = SandboxServices::new_local_with_io(
+        512 << 20,
+        CostModel::free(),
+        SharingConfig::default(),
+        Arc::new(NoopRunner),
+        "failinj-io-sandbox",
+        flaky.clone(),
+    )
+    .unwrap();
+    let clock = Clock::new();
+    let mut sb =
+        Sandbox::cold_start(1, scaled_for_test(golang_hello(), 16), svc, &clock).unwrap();
+    sb.handle_request(&clock).unwrap();
+    sb.hibernate(&clock).unwrap(); // full path
+    sb.handle_request(&clock).unwrap(); // sample request records the WS
+
+    flaky.fail_writes(true);
+    let err = sb.hibernate(&clock).unwrap_err();
+    assert!(format!("{err:#}").contains("injected"), "{err:#}");
+
+    // Demand wake with the writes still failing: reads are unaffected,
+    // the invalidated image means no prefetch, and the request serves.
+    let out = sb.handle_request(&clock).unwrap();
+    assert_eq!(
+        out.from,
+        quark_hibernate::container::state::ContainerState::Hibernate
+    );
+    assert_eq!(
+        out.reap_prefetched, 0,
+        "an invalidated image must not be prefetched"
+    );
+
+    // Fault cleared: the cycle is whole again.
+    flaky.fail_writes(false);
+    sb.hibernate(&clock).unwrap();
+    let out = sb.handle_request(&clock).unwrap();
+    assert_eq!(
+        out.from,
+        quark_hibernate::container::state::ContainerState::Hibernate
+    );
+}
+
+#[test]
+fn injected_pipeline_failure_drops_reservation_and_keeps_draining() {
+    // The pipeline contract under an injected I/O failure: the failed
+    // job still releases its reservation (no leak), drain() surfaces the
+    // stashed error, the instance remains demand-serveable, and later
+    // jobs flow normally.
+    let flaky = FlakyBackend::new();
+    let svc = SandboxServices::new_local_with_io(
+        512 << 20,
+        CostModel::free(),
+        SharingConfig::default(),
+        Arc::new(NoopRunner),
+        "failinj-io-pipeline",
+        flaky.clone(),
+    )
+    .unwrap();
+    let clock = Clock::new();
+    let mut pool = FunctionPool::new();
+    for id in 1..=2 {
+        let mut sb =
+            Sandbox::cold_start(id, scaled_for_test(golang_hello(), 32), svc.clone(), &clock)
+                .unwrap();
+        sb.handle_request(&clock).unwrap();
+        pool.add(sb, 0);
+    }
+    let metrics = Arc::new(Metrics::new());
+    let leads = Arc::new(WakeLeads::new(true));
+    let pipeline = InstancePipeline::new(1, metrics, leads);
+    let deflate_job = |idx: usize, name: &str| {
+        let inst = &pool.instances[idx];
+        let reservation = inst.try_reserve().expect("instance must be free");
+        inst.sandbox.lock().unwrap().hibernate_begin().unwrap();
+        PipelineJob {
+            workload: name.to_string(),
+            sandbox: inst.sandbox.clone(),
+            reservation,
+            kind: JobKind::Deflate,
+            live_gauge: inst.live_gauge.clone(),
+            est_bytes: inst.live_bytes(),
+        }
+    };
+
+    flaky.fail_writes(true);
+    pipeline.submit(deflate_job(0, "doomed"));
+    let err = pipeline.drain().unwrap_err();
+    assert!(format!("{err:#}").contains("injected"), "{err:#}");
+    assert_eq!(pipeline.pending(), 0, "the failed job still completes");
+    assert!(
+        !pool.instances[0].is_reserved(),
+        "a failed finish must still drop the reservation"
+    );
+    // The instance is not wedged: a demand wake serves from the
+    // still-resident frames.
+    let out = pool.instances[0]
+        .sandbox
+        .lock()
+        .unwrap()
+        .handle_request(&clock)
+        .unwrap();
+    assert_eq!(
+        out.from,
+        quark_hibernate::container::state::ContainerState::Hibernate
+    );
+
+    // Fault cleared: the next deflation flows end to end.
+    flaky.fail_writes(false);
+    pipeline.submit(deflate_job(1, "fine"));
+    pipeline.drain().unwrap();
+    assert_eq!(
+        pool.instances[1].sandbox.lock().unwrap().state(),
+        quark_hibernate::container::state::ContainerState::Hibernate
+    );
+    assert!(!pool.instances[1].is_reserved());
 }

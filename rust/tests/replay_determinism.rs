@@ -269,6 +269,110 @@ fn tenant_fair_caps_the_hot_tenant_and_spares_the_rest() {
     }
 }
 
+/// `det_cfg` with the batched I/O backend: same virtual-time semantics,
+/// real I/O routed through the worker pool.
+fn batched_cfg(tag: &str) -> PlatformConfig {
+    let mut cfg = det_cfg(tag);
+    cfg.io.backend = "batched".to_string();
+    cfg.io.workers = 2;
+    cfg.io.batch_pages = 64;
+    cfg
+}
+
+#[test]
+fn batched_backend_is_bit_identical_across_workers() {
+    // The tentpole's determinism leg: with `io.backend = batched` the
+    // slot-run I/O executes on a concurrent pool in whatever order the
+    // scheduler produces — and the replay must STILL be bit-identical
+    // between 1 and 4 workers, because runs address disjoint regions and
+    // every virtual-time charge derives from byte counts, not wall time.
+    let run = scenario::build("azure-heavy-tail", 96, 20_000_000_000, 0xBA7C).unwrap();
+    assert!(run.events.len() > 500, "scenario too small to be meaningful");
+    let (r1, p1) = replay::run_scenario(&batched_cfg("bat1"), &run, 1).unwrap();
+    let (r4, p4) = replay::run_scenario(&batched_cfg("bat4"), &run, 4).unwrap();
+    assert_eq!(r4.workers, 4, "4 workers must actually be used");
+    assert_eq!(r1.events, run.events.len(), "every event must be served");
+
+    // Field-by-field first, so a regression names what moved.
+    assert_eq!(r1.functions.len(), r4.functions.len());
+    for (a, b) in r1.functions.iter().zip(&r4.functions) {
+        assert_eq!(a, b, "per-function summary diverged for {}", a.name);
+    }
+    assert_eq!(r1.aggregate, r4.aggregate);
+    assert_eq!(r1.counters, r4.counters);
+    assert_eq!(r1.mem_timeline, r4.mem_timeline, "density timeline diverged");
+    assert_eq!(r1.final_states, r4.final_states);
+    assert_eq!(r1.final_committed, r4.final_committed);
+    assert_eq!(p1.pool_snapshot(), p4.pool_snapshot(), "final pools diverged");
+    assert_eq!(r1.fingerprint(), r4.fingerprint());
+
+    let hibernations = r1
+        .counters
+        .iter()
+        .find(|(k, _)| *k == "hibernations")
+        .map(|(_, v)| *v)
+        .unwrap();
+    assert!(hibernations > 0, "the batched backend must have carried real I/O");
+}
+
+#[test]
+fn batched_backend_memory_heavy_is_bit_identical_across_workers() {
+    // The pressure-driven deflation path again (the heaviest I/O volume
+    // replay generates), this time through the batched backend.
+    let run = scenario::build("memory-heavy", 48, 20_000_000_000, 0x4EA7).unwrap();
+    assert!(run.events.len() > 200, "scenario too small to be meaningful");
+    let mk = |tag: &str| {
+        let mut cfg = batched_cfg(tag);
+        cfg.host_memory = 1 << 30;
+        cfg.policy.memory_budget = 96 << 20;
+        cfg.policy.pressure_watermark = 0.8;
+        cfg.policy.hibernate_idle_ms = 60_000;
+        cfg.replay.tick_ms = 100;
+        cfg
+    };
+    let (r1, _) = replay::run_scenario(&mk("bmh1"), &run, 1).unwrap();
+    let (r4, _) = replay::run_scenario(&mk("bmh4"), &run, 4).unwrap();
+    assert_eq!(r4.workers, 4, "4 workers must actually be used");
+
+    let counter = |r: &quark_hibernate::replay::report::ReplayReport, k: &str| {
+        r.counters.iter().find(|(n, _)| *n == k).map(|(_, v)| *v).unwrap()
+    };
+    assert!(
+        counter(&r1, "hibernations") > 0,
+        "pressure must drive deflations through the batched backend"
+    );
+    assert_eq!(r1.functions, r4.functions);
+    assert_eq!(r1.counters, r4.counters);
+    assert_eq!(r1.mem_timeline, r4.mem_timeline, "density timeline diverged");
+    assert_eq!(r1.final_states, r4.final_states);
+    assert_eq!(r1.fingerprint(), r4.fingerprint());
+}
+
+#[test]
+fn sync_and_batched_backends_produce_equal_fingerprints() {
+    // Backend choice is a performance knob, never a results knob: the
+    // same scenario replayed through `sync` and `batched` must agree on
+    // every report field and on the fingerprint. (This is why IoStats
+    // lives outside the fingerprinted counters — scheduling-dependent
+    // I/O tallies must not leak into replay results.)
+    let run = scenario::build("azure-heavy-tail", 96, 20_000_000_000, 0xBA7C).unwrap();
+    let (rs, ps) = replay::run_scenario(&det_cfg("sync-vs-b"), &run, 4).unwrap();
+    let (rb, pb) = replay::run_scenario(&batched_cfg("batch-vs-s"), &run, 4).unwrap();
+
+    assert_eq!(rs.functions, rb.functions, "per-function summaries diverged");
+    assert_eq!(rs.aggregate, rb.aggregate);
+    assert_eq!(rs.counters, rb.counters);
+    assert_eq!(rs.mem_timeline, rb.mem_timeline, "density timeline diverged");
+    assert_eq!(rs.final_states, rb.final_states);
+    assert_eq!(rs.final_committed, rb.final_committed);
+    assert_eq!(ps.pool_snapshot(), pb.pool_snapshot(), "final pools diverged");
+    assert_eq!(
+        rs.fingerprint(),
+        rb.fingerprint(),
+        "sync and batched backends must be observationally identical"
+    );
+}
+
 #[test]
 fn determinism_holds_across_scenarios_and_seeds() {
     // Property: for any seed and any scenario shape, 1 worker ≡ 4 workers.

@@ -16,7 +16,10 @@
 //!   while function B's only instance is stuck mid-request (the
 //!   acceptance criterion for the sharded platform), and concurrent
 //!   requests for the *same* function scale out to a second instance
-//!   instead of queueing behind the busy one.
+//!   instead of queueing behind the busy one;
+//! * **work stealing** — a worker that runs dry while another worker's
+//!   queue is past the spill threshold pulls work from it instead of
+//!   idling, and every stolen submission is still served exactly once.
 
 use quark_hibernate::config::PlatformConfig;
 use quark_hibernate::container::{NoopRunner, PayloadRunner, SpinRunner};
@@ -195,6 +198,47 @@ fn strict_affinity_preserves_per_function_serve_order() {
         FUNCS as u64,
         "exactly one cold start per function"
     );
+}
+
+#[test]
+fn idle_worker_steals_past_threshold_and_serves_everything() {
+    // One hot function with ~200 ms of real compute per request, two
+    // workers, spill threshold 1. Burst-submitting 12 requests before any
+    // completes splits the backlog 7/5 across the two workers at dispatch
+    // time (spill only reacts to depth already visible), so the lighter
+    // worker runs dry ~400 ms before the affinity worker — and must then
+    // steal from its still-deep queue rather than idle.
+    let runner = Arc::new(SpinRunner {
+        ns_per_iteration: 200_000_000,
+    });
+    let p = stress_platform("steal", runner);
+    let mut spec = scaled_for_test(golang_hello(), 32);
+    spec.name = "fn-hot".to_string();
+    spec.payload = Some(PayloadSpec {
+        artifact: "spin".into(),
+        iterations: 1,
+    });
+    p.deploy(spec).unwrap();
+    let mut server = Server::start_with(
+        p.clone(),
+        ServerConfig {
+            workers: 2,
+            policy_interval: quiet_policy(),
+            spill_threshold: Some(1),
+        },
+    );
+    let rxs: Vec<_> = (0..12).map(|_| server.submit("fn-hot").unwrap()).collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(60))
+            .expect("request must complete within 60s (deadlock?)")
+            .expect("request must succeed");
+    }
+    assert!(
+        server.steal_count() > 0,
+        "the early-idle worker must steal from the deep queue"
+    );
+    server.shutdown();
+    assert_eq!(p.metrics.counters.requests.load(Ordering::Relaxed), 12);
 }
 
 #[test]
