@@ -18,6 +18,11 @@ regression gate"):
   *same run*, so runner speed cancels out; the ratio in baseline.json is
   applied as-is (it is already generous). A broken priority class makes
   the wake wait out the whole storm — orders of magnitude past the bound.
+  The flight-recorder overhead check is the same shape: the recorder-on
+  wake median may exceed the recorder-off median only by
+  `obs_overhead.max_on_over_off` — a recorder emission is two atomic ops
+  and a ring-slot write, so a blown bound means tracing started doing
+  real work (allocation, locking, I/O) on the wake path.
 
 Usage: check_baseline.py <bench-out-dir> [baseline.json]
 Exit code 0 = pass, 1 = regression, 2 = missing/garbled input.
@@ -146,6 +151,26 @@ def main():
                 f"{thr_key}: batched storm throughput collapsed: "
                 f"{runs_per_sec:.1f} coalesced runs/s < floor {floor:.1f} "
                 f"(baseline/{factor})"
+            )
+
+    obs = baseline.get("obs_overhead")
+    if obs:
+        off_key = "obs_overhead/wake median (recorder off)"
+        on_key = "obs_overhead/wake median (recorder on)"
+        for key in (off_key, on_key):
+            if key not in rows:
+                sys.exit(f"{micro_csv}: expected row {key!r} is missing")
+        off_ns = rows[off_key]["cpu_ns"]
+        on_ns = rows[on_key]["cpu_ns"]
+        ratio = on_ns / max(off_ns, 1)
+        max_ratio = obs["max_on_over_off"]
+        # Self-relative like io_storm: both medians come from the same
+        # runner and the same steady-state wake, so no extra slack.
+        if ratio > max_ratio:
+            failures += fail(
+                f"{on_key}: recorder-on wake took {ratio:.2f}x the "
+                f"recorder-off wake (bound {max_ratio}x) — tracing is "
+                f"taxing the wake path"
             )
 
     def check_replay_leg(csv_name, baseline_key):

@@ -19,17 +19,22 @@
 //!    backend while a deflation storm saturates its one worker (the
 //!    Latency read must stay within a small factor of the idle wake — the
 //!    priority-class contract), plus storm throughput in coalesced
-//!    runs/sec.
+//!    runs/sec;
+//! 8. **flight-recorder overhead**: the same hibernate→wake cycle with the
+//!    recorder disabled (the local-rig default) and enabled at
+//!    platform-sized rings — check_baseline gates the self-relative ratio
+//!    so tracing can never silently tax the wake path.
 //!
 //! Set `QH_BENCH_OUT=dir` to also write `micro_swap.csv` (the CI
 //! bench-smoke artifact).
 
 use quark_hibernate::bench_support::rig;
 use quark_hibernate::config::SharingConfig;
-use quark_hibernate::container::sandbox::Sandbox;
+use quark_hibernate::container::sandbox::{Sandbox, SandboxServices};
 use quark_hibernate::container::NoopRunner;
 use quark_hibernate::mem::page_table::{PageTable, Pte};
 use quark_hibernate::mem::{Gpa, Gva};
+use quark_hibernate::obs::Recorder;
 use quark_hibernate::platform::io_backend::{BatchedBackend, IoBackend};
 use quark_hibernate::platform::metrics::IoStats;
 use quark_hibernate::simtime::{Clock, CostModel};
@@ -550,6 +555,77 @@ fn io_storm_section(csv: &mut CsvOut) {
     println!();
 }
 
+/// §8 above: flight-recorder overhead on the wake path. The hibernate and
+/// wake seams emit into the recorder unconditionally when it is enabled,
+/// so this measures the true per-cycle tracing tax: same workload, same
+/// steady-state REAP wake, recorder off vs on. check_baseline gates the
+/// self-relative median ratio — robust to runner speed, sensitive only to
+/// the recorder's own cost.
+fn obs_overhead_section(csv: &mut CsvOut) {
+    println!("== flight recorder: steady-state wake median, recorder off vs on ==");
+    let quick = std::env::var("QH_QUICK").is_ok();
+    let attempts = if quick { 16usize } else { 64 };
+
+    let wake_median = |recorder: Arc<Recorder>, tag: &str| -> u64 {
+        let base = rig(
+            1 << 30,
+            SharingConfig::default(),
+            true,
+            Arc::new(NoopRunner),
+            tag,
+        );
+        // Same rig, different recorder: the only variable is tracing.
+        let svc = Arc::new(SandboxServices {
+            host: base.host.clone(),
+            heap: base.heap.clone(),
+            cache: base.cache.clone(),
+            registry: base.registry.clone(),
+            cost: base.cost.clone(),
+            sharing: base.sharing.clone(),
+            swap_dir: base.swap_dir.clone(),
+            runner: base.runner.clone(),
+            reap_enabled: true,
+            hostenv: base.hostenv.clone(),
+            io: base.io.clone(),
+            recorder,
+        });
+        let spec = if quick {
+            scaled_for_test(nodejs_hello(), 16)
+        } else {
+            nodejs_hello()
+        };
+        let clock = Clock::new();
+        let mut sb = Sandbox::cold_start(7, spec, svc, &clock).unwrap();
+        sb.handle_request(&clock).unwrap();
+        sb.hibernate(&clock).unwrap(); // full
+        sb.handle_request(&clock).unwrap(); // sample request records the WS
+        sb.hibernate(&clock).unwrap(); // REAP image exists now
+        let mut samples = Vec::with_capacity(attempts);
+        for _ in 0..attempts {
+            let t0 = Instant::now();
+            sb.wake(&clock).unwrap();
+            samples.push(t0.elapsed().as_nanos() as u64);
+            sb.hibernate(&clock).unwrap(); // steady state: 0 bytes out
+        }
+        clock.take();
+        sb.terminate().unwrap();
+        samples.sort_unstable();
+        samples[samples.len() / 2]
+    };
+
+    let off_ns = wake_median(Recorder::disabled(), "obs-off");
+    let on_ns = wake_median(Recorder::new(1, 64 << 10, true), "obs-on");
+    println!(
+        "steady-state wake median: recorder off {} / on {} ({:.2}x)",
+        human_ns(off_ns),
+        human_ns(on_ns),
+        on_ns as f64 / off_ns.max(1) as f64,
+    );
+    csv.row("obs_overhead", "wake median (recorder off)", 0, 0, 0, off_ns);
+    csv.row("obs_overhead", "wake median (recorder on)", 0, 0, 0, on_ns);
+    println!();
+}
+
 fn working_set_table() {
     println!("== §3.4.1 working set: swapped-out vs reloaded per request ==");
     println!(
@@ -593,6 +669,7 @@ fn main() {
     reap_cycle_bytes(2560, &mut csv);
     wake_to_first_byte(&mut csv);
     io_storm_section(&mut csv);
+    obs_overhead_section(&mut csv);
     working_set_table();
     csv.save();
     // Shape check for the nodejs claim.

@@ -74,6 +74,8 @@ pub fn rig(
         runner: svc.runner.clone(),
         reap_enabled,
         hostenv: svc.hostenv.clone(),
+        io: svc.io.clone(),
+        recorder: svc.recorder.clone(),
     })
 }
 

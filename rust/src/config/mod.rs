@@ -196,6 +196,28 @@ impl Default for IoConfig {
     }
 }
 
+/// Observability knobs (`[obs]` section) — see [`crate::obs`] for the
+/// flight recorder these feed.
+#[derive(Debug, Clone)]
+pub struct ObsConfig {
+    /// Flight-recorder ring capacity, in events per shard (overwrite-oldest
+    /// with a drop counter once full; clamped to ≥ 1). 64Ki 48-byte events
+    /// ≈ 3 MiB per shard.
+    pub ring_events: u64,
+    /// Master switch for the flight recorder. Histogram latency metrics
+    /// stay on regardless — only span-event recording is gated.
+    pub enabled: bool,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        Self {
+            ring_events: 64 << 10,
+            enabled: true,
+        }
+    }
+}
+
 /// Memory-sharing policy (§3.5): the paper shares the Quark runtime binary
 /// across sandboxes and keeps language-runtime binaries private per tenant.
 #[derive(Debug, Clone)]
@@ -243,6 +265,7 @@ pub struct PlatformConfig {
     pub sharing: SharingConfig,
     pub replay: ReplayConfig,
     pub io: IoConfig,
+    pub obs: ObsConfig,
     pub cost: CostModel,
 }
 
@@ -263,6 +286,7 @@ impl Default for PlatformConfig {
             sharing: SharingConfig::default(),
             replay: ReplayConfig::default(),
             io: IoConfig::default(),
+            obs: ObsConfig::default(),
             cost: CostModel::paper(),
         }
     }
@@ -445,6 +469,10 @@ impl PlatformConfig {
         get_u64(t, "io", "max_inflight_bytes", &mut self.io.max_inflight_bytes)?;
         get_u64(t, "io", "batch_pages", &mut self.io.batch_pages)?;
         self.io.batch_pages = self.io.batch_pages.max(1);
+
+        get_u64(t, "obs", "ring_events", &mut self.obs.ring_events)?;
+        self.obs.ring_events = self.obs.ring_events.max(1);
+        get_bool(t, "obs", "enabled", &mut self.obs.enabled)?;
 
         get_bool(t, "sharing", "share_runtime_binary", &mut self.sharing.share_runtime_binary)?;
         get_bool(
@@ -642,6 +670,20 @@ mod tests {
         let c = PlatformConfig::from_str("[io]\nworkers = 0\nbatch_pages = 0\n").unwrap();
         assert_eq!(c.io.workers, 1);
         assert_eq!(c.io.batch_pages, 1);
+    }
+
+    #[test]
+    fn obs_section_parses_with_defaults() {
+        let c = PlatformConfig::default();
+        assert_eq!(c.obs.ring_events, 64 << 10);
+        assert!(c.obs.enabled);
+
+        let c = PlatformConfig::from_str("[obs]\nring_events = 128\nenabled = false\n").unwrap();
+        assert_eq!(c.obs.ring_events, 128);
+        assert!(!c.obs.enabled);
+        // A zero ring cannot hold the event being emitted.
+        let c = PlatformConfig::from_str("[obs]\nring_events = 0\n").unwrap();
+        assert_eq!(c.obs.ring_events, 1);
     }
 
     #[test]

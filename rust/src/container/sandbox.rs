@@ -28,6 +28,7 @@ use crate::mem::page_table::{PageTable, Pte};
 use crate::mem::pss::{pss, PssBreakdown};
 use crate::mem::vma::VmaKind;
 use crate::mem::{Gpa, Gva};
+use crate::obs::{ARG_FLAG, EventKind, Recorder};
 use crate::platform::io_backend::{IoBackend, SyncBackend};
 use crate::simtime::{Clock, CostModel};
 use crate::swap::file::SwapFileSet;
@@ -69,6 +70,10 @@ pub struct SandboxServices {
     /// Node-wide I/O backend every sandbox's swap files submit their batch
     /// slot runs through (`[io]` config: sync or batched).
     pub io: Arc<dyn IoBackend>,
+    /// Flight recorder lifecycle seams emit into ([`crate::obs`]). Local
+    /// rigs get a disabled recorder (emission is a no-op); the platform
+    /// injects its own per-shard-ring recorder.
+    pub recorder: Arc<Recorder>,
 }
 
 impl SandboxServices {
@@ -126,6 +131,7 @@ impl SandboxServices {
             reap_enabled: true,
             hostenv: HostEnvRegistry::new(),
             io,
+            recorder: Recorder::disabled(),
         }))
     }
 
@@ -163,6 +169,10 @@ pub struct RequestOutcome {
     pub file_miss_bytes: u64,
     /// Working-set pages prefetched by REAP before processing.
     pub reap_prefetched: u64,
+    /// Demand-wake admission overhead (dispatch + thread unpark) charged
+    /// on this request's clock; 0 unless served from Hibernate. Feeds the
+    /// wake-phase admission histogram.
+    pub admission_ns: u64,
 }
 
 /// What expensive I/O a deferred signal drain left owed
@@ -183,6 +193,9 @@ pub enum PendingIo {
 pub struct Sandbox {
     pub id: u64,
     spec: WorkloadSpec,
+    /// `fnv1a(spec.name)` — the flight-recorder ring key, cached so every
+    /// emission avoids rehashing the workload name.
+    workload_hash: u64,
     svc: Arc<SandboxServices>,
     state: ContainerState,
     alloc: Arc<BitmapPageAllocator>,
@@ -216,6 +229,10 @@ impl Sandbox {
         clock: &Clock,
     ) -> Result<Sandbox> {
         spec.validate().map_err(|e| anyhow::anyhow!(e))?;
+        let workload_hash = crate::util::fnv1a(&spec.name);
+        let rec = svc.recorder.clone();
+        let t_begin = clock.charged_ns();
+        rec.emit_workload(EventKind::ColdStartBegin, id, workload_hash, 0, clock.stamp_ns());
         // Container runtime startup. The host-object components (cgroup,
         // netns, rootfs, threads) are charged itemized by the registry; the
         // remainder is VM creation (KVM fd, memory region, vCPU setup).
@@ -232,6 +249,14 @@ impl Sandbox {
             env_cost,
             clock,
         )?;
+        rec.emit_workload(
+            EventKind::ColdPhaseEnv,
+            id,
+            workload_hash,
+            clock.charged_ns() - t_begin,
+            clock.stamp_ns(),
+        );
+        let t_env = clock.charged_ns();
 
         let alloc = Arc::new(BitmapPageAllocator::new(svc.host.clone(), svc.heap.clone()));
         let binary_file = svc.registry.get_or_register(
@@ -278,6 +303,7 @@ impl Sandbox {
         let mut sb = Sandbox {
             id,
             spec,
+            workload_hash,
             svc,
             state: ContainerState::ColdStarting,
             alloc,
@@ -309,6 +335,14 @@ impl Sandbox {
         // Cold image loads stream from the registry (container image on
         // local disk): sequential, not scattered.
         clock.charge(sb.svc.cost.seq_read_ns(miss_bytes));
+        rec.emit_workload(
+            EventKind::ColdPhaseLayout,
+            id,
+            workload_hash,
+            clock.charged_ns() - t_env,
+            clock.stamp_ns(),
+        );
+        let t_layout = clock.charged_ns();
         for i in 0..sb.layout.heap_pages {
             sb.fault_anon(0, sb.layout.heap_page(i), true, clock)?;
         }
@@ -318,9 +352,33 @@ impl Sandbox {
         for _ in 1..sb.spec.processes {
             sb.clone_process()?;
         }
+        rec.emit_workload(
+            EventKind::ColdPhaseInit,
+            id,
+            workload_hash,
+            clock.charged_ns() - t_layout,
+            clock.stamp_ns(),
+        );
 
         sb.state = sb.state.transition(Event::ColdStartDone)?;
+        rec.emit_workload(
+            EventKind::ColdStartEnd,
+            id,
+            workload_hash,
+            clock.charged_ns() - t_begin,
+            clock.stamp_ns(),
+        );
         Ok(sb)
+    }
+
+    /// Emit a flight-recorder event on this sandbox's workload ring,
+    /// stamped at the clock's current virtual position.
+    fn trace(&self, kind: EventKind, arg: u64, clock: &Clock) {
+        if self.svc.recorder.is_enabled() {
+            self.svc
+                .recorder
+                .emit_workload(kind, self.id, self.workload_hash, arg, clock.stamp_ns());
+        }
     }
 
     pub fn state(&self) -> ContainerState {
@@ -480,6 +538,7 @@ impl Sandbox {
             anon_faults: 0,
             file_miss_bytes: 0,
             reap_prefetched: 0,
+            admission_ns: 0,
         };
         if from == ContainerState::Hibernate {
             // Demand wake. The REAP batch read is issued the moment the
@@ -489,6 +548,7 @@ impl Sandbox {
             // max(admission, prefetch) instead of their sum: the request
             // no longer waits out the whole batch read up front.
             self.paused = false;
+            self.trace(EventKind::WakeBegin, 0, clock);
             let admission_ns =
                 self.svc.cost.request_dispatch_ns + self.svc.cost.thread_wake_ns;
             if self.swap.has_reap_image() {
@@ -496,9 +556,16 @@ impl Sandbox {
                 outcome.reap_prefetched =
                     self.swap.reap_swap_in(&self.svc.host, &prefetch)?;
                 clock.charge(admission_ns.max(prefetch.charged_ns()));
+                self.trace(
+                    EventKind::WakeFinish,
+                    (outcome.reap_prefetched * PAGE_SIZE as u64) | ARG_FLAG,
+                    clock,
+                );
             } else {
                 clock.charge(admission_ns);
+                self.trace(EventKind::WakeFinish, 0, clock);
             }
+            outcome.admission_ns = admission_ns;
             outcome.sample_request = self.reap.on_wake_request();
         } else {
             clock.charge(self.svc.cost.request_dispatch_ns);
@@ -567,6 +634,7 @@ impl Sandbox {
     /// routing; direct callers get both in one call.
     pub fn hibernate(&mut self, clock: &Clock) -> Result<HibernateReport> {
         self.hibernate_begin()?;
+        self.trace(EventKind::HibernateBegin, 0, clock);
         self.hibernate_finish(clock)
     }
 
@@ -627,6 +695,12 @@ impl Sandbox {
         let extra = self.alloc.reclaim_free_pages()?;
         clock.charge(self.svc.cost.madvise_ns(extra + report.file_pages_released));
 
+        let flag = if report.used_reap { ARG_FLAG } else { 0 };
+        self.trace(
+            EventKind::HibernateFinish,
+            (report.pages_swapped_out * PAGE_SIZE as u64) | flag,
+            clock,
+        );
         Ok(report)
     }
 
@@ -700,6 +774,7 @@ impl Sandbox {
         self.state = self.state.transition(Event::SigCont)?;
         clock.charge(self.svc.cost.thread_wake_ns);
         self.paused = false;
+        self.trace(EventKind::WakeBegin, 0, clock);
         Ok(())
     }
 
@@ -711,11 +786,14 @@ impl Sandbox {
         if self.state != ContainerState::WokenUp || self.paused {
             bail!("wake_finish without wake_begin (state {})", self.state);
         }
-        if self.swap.has_reap_image() {
-            self.swap.reap_swap_in(&self.svc.host, clock)
+        let (pages, used_reap) = if self.swap.has_reap_image() {
+            (self.swap.reap_swap_in(&self.svc.host, clock)?, true)
         } else {
-            Ok(0)
-        }
+            (0, false)
+        };
+        let flag = if used_reap { ARG_FLAG } else { 0 };
+        self.trace(EventKind::WakeFinish, (pages * PAGE_SIZE as u64) | flag, clock);
+        Ok(pages)
     }
 
     /// Evict: tear down guest memory, return every page, delete swap files
@@ -792,6 +870,7 @@ impl Sandbox {
             match (sig, self.state) {
                 (ControlSignal::Stop, ContainerState::Warm | ContainerState::WokenUp) => {
                     self.hibernate_begin()?;
+                    self.trace(EventKind::HibernateBegin, 0, clock);
                     pending = match pending {
                         Some(PendingIo::Inflate) => None,
                         _ => Some(PendingIo::Deflate),

@@ -41,6 +41,7 @@ pub mod bench_support;
 pub mod config;
 pub mod container;
 pub mod mem;
+pub mod obs;
 pub mod platform;
 pub mod replay;
 pub mod runtime;

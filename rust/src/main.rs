@@ -8,7 +8,7 @@
 //!              [--trace FILE.csv] [--policy NAME] [-o k=v ...]
 //! repro replay --scenario NAME [--funcs N] [--workers N] [--seed S]
 //!              [--duration-ms N] [--policy NAME] [--report FILE.json]
-//!                                              # parallel replay
+//!              [--trace-out FILE.json]         # parallel replay
 //! repro replay --list-scenarios
 //! repro fig6   [--quick]          # Figure 6: latency per container state
 //! repro fig7   [--quick]          # Figure 7: PSS per container state
@@ -212,11 +212,15 @@ fn cmd_replay_scenario(args: &Args, name: &str) -> Result<()> {
         run.specs.len(),
         run.events.len()
     );
-    let (report, _platform) = replay::run_scenario(&cfg, &run, workers)?;
+    let (report, platform) = replay::run_scenario(&cfg, &run, workers)?;
     print!("{}", report.summary());
     if let Some(path) = args.get("report") {
         report.save(path)?;
         println!("report written to {path}");
+    }
+    if let Some(path) = args.get("trace-out") {
+        platform.dump_trace(path)?;
+        println!("chrome trace written to {path} (load at ui.perfetto.dev)");
     }
     Ok(())
 }

@@ -1,0 +1,244 @@
+//! Chrome trace-event JSON export of the flight recorder.
+//!
+//! [`render`] turns a [`Recorder`] into the Chrome/Perfetto trace-event
+//! format (JSON object form): one track (`tid`) per shard ring plus an
+//! `io` track for the backend, complete (`"ph":"X"`) duration spans for
+//! the paired lifecycle phases (cold start, hibernate, wake, pipeline
+//! jobs) and instant (`"ph":"i"`) events for everything else (decisions,
+//! requests, I/O submissions). Load the file at <https://ui.perfetto.dev>
+//! or `chrome://tracing`.
+//!
+//! The output is a deterministic function of the recorder *contents*: the
+//! events are canonically ordered ([`Recorder::ring_events`]) and the JSON
+//! is built with fixed key order and integer-exact `µs.nnn` timestamp
+//! formatting, so a virtual-time replay trace is byte-identical at any
+//! worker count (as long as no ring wrapped — overwrite order under wrap
+//! follows arrival order, which is scheduling-dependent).
+
+use super::{unpack_decision, ARG_FLAG, EventKind, Recorder, SpanEvent};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Trace-event `ts`/`dur` are microseconds; keep nanosecond precision as
+/// an exact 3-decimal fraction (no float formatting involved).
+fn fmt_us(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1000, ns % 1000)
+}
+
+/// Begin/end pairing role of a kind: `(pair class, is_begin)`.
+fn pair_role(kind: EventKind) -> Option<(u8, bool)> {
+    match kind {
+        EventKind::ColdStartBegin => Some((0, true)),
+        EventKind::ColdStartEnd => Some((0, false)),
+        EventKind::HibernateBegin => Some((1, true)),
+        EventKind::HibernateFinish => Some((1, false)),
+        EventKind::WakeBegin => Some((2, true)),
+        EventKind::WakeFinish => Some((2, false)),
+        EventKind::JobStart => Some((3, true)),
+        EventKind::JobDone => Some((3, false)),
+        _ => None,
+    }
+}
+
+/// Jobs of different kinds for one instance may overlap in principle;
+/// fold the job-kind code into the pair key so start/done match up.
+fn pair_extra(e: &SpanEvent) -> u64 {
+    match e.kind {
+        EventKind::JobStart | EventKind::JobDone => e.arg & 0xff,
+        _ => 0,
+    }
+}
+
+fn span_name(class: u8, end: &SpanEvent) -> &'static str {
+    match class {
+        0 => "cold_start",
+        1 => "hibernate",
+        2 => "wake",
+        _ => match end.arg & 0xff {
+            0 => "job_deflate",
+            1 => "job_inflate",
+            _ => "job_teardown",
+        },
+    }
+}
+
+fn args_json(e: &SpanEvent) -> String {
+    match e.kind {
+        EventKind::HibernateFinish
+        | EventKind::WakeFinish
+        | EventKind::IoSubmit
+        | EventKind::IoComplete => format!(
+            "{{\"arg\":{},\"bytes\":{},\"flag\":{},\"instance\":{},\"workload\":\"{:#018x}\"}}",
+            e.arg,
+            e.arg & !ARG_FLAG,
+            (e.arg >> 63) & 1,
+            e.instance_id,
+            e.workload_hash
+        ),
+        EventKind::Decision => {
+            let (verb, reason) = unpack_decision(e.arg);
+            format!(
+                "{{\"arg\":{},\"instance\":{},\"reason\":{},\"verb\":{},\"workload\":\"{:#018x}\"}}",
+                e.arg, e.instance_id, reason, verb, e.workload_hash
+            )
+        }
+        _ => format!(
+            "{{\"arg\":{},\"instance\":{},\"workload\":\"{:#018x}\"}}",
+            e.arg, e.instance_id, e.workload_hash
+        ),
+    }
+}
+
+fn instant_json(e: &SpanEvent) -> String {
+    format!(
+        "{{\"args\":{},\"name\":\"{}\",\"ph\":\"i\",\"pid\":0,\"s\":\"t\",\"tid\":{},\"ts\":{}}}",
+        args_json(e),
+        e.kind.label(),
+        e.shard,
+        fmt_us(e.ts_ns)
+    )
+}
+
+fn span_json(class: u8, begin: &SpanEvent, end: &SpanEvent) -> String {
+    format!(
+        "{{\"args\":{},\"dur\":{},\"name\":\"{}\",\"ph\":\"X\",\"pid\":0,\"tid\":{},\"ts\":{}}}",
+        args_json(end),
+        fmt_us(end.ts_ns.saturating_sub(begin.ts_ns)),
+        span_name(class, end),
+        begin.shard,
+        fmt_us(begin.ts_ns)
+    )
+}
+
+/// Render the recorder as a Chrome trace-event JSON document.
+pub fn render(rec: &Recorder) -> String {
+    let rings = rec.snapshot();
+    let dropped: u64 = rings.iter().map(|r| r.dropped).sum();
+    let mut out = String::new();
+    write!(
+        out,
+        "{{\"displayTimeUnit\":\"ns\",\"otherData\":{{\"dropped_events\":{dropped}}},\"traceEvents\":["
+    )
+    .unwrap();
+    let mut first = true;
+    let mut push = |out: &mut String, s: String| {
+        if !std::mem::take(&mut first) {
+            out.push(',');
+        }
+        out.push_str(&s);
+    };
+    for (tid, ring) in rings.iter().enumerate() {
+        let track = if tid < rec.shard_count() {
+            format!("shard-{tid}")
+        } else {
+            "io".to_string()
+        };
+        push(
+            &mut out,
+            format!(
+                "{{\"args\":{{\"name\":\"{track}\"}},\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{tid}}}"
+            ),
+        );
+        // Pair begin/end events into complete spans; everything else (and
+        // any orphaned half) renders as an instant.
+        let mut open: BTreeMap<(u8, u64, u64), SpanEvent> = BTreeMap::new();
+        for e in &ring.events {
+            match pair_role(e.kind) {
+                Some((class, true)) => {
+                    if let Some(orphan) = open.insert((class, e.instance_id, pair_extra(e)), *e) {
+                        push(&mut out, instant_json(&orphan));
+                    }
+                }
+                Some((class, false)) => {
+                    match open.remove(&(class, e.instance_id, pair_extra(e))) {
+                        Some(begin) => push(&mut out, span_json(class, &begin, e)),
+                        None => push(&mut out, instant_json(e)),
+                    }
+                }
+                None => push(&mut out, instant_json(e)),
+            }
+        }
+        // Ends never arrived (ring wrapped past them, or work in flight
+        // at snapshot time): deterministic order via the BTreeMap key.
+        for begin in open.values() {
+            push(&mut out, instant_json(begin));
+        }
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn rig() -> std::sync::Arc<Recorder> {
+        let rec = Recorder::new(2, 64, true);
+        rec.set_virtual();
+        rec
+    }
+
+    #[test]
+    fn renders_valid_json_with_spans_and_instants() {
+        let rec = rig();
+        let h = 7u64; // ring 7 % 2 = 1
+        rec.emit_workload(EventKind::WakeBegin, 3, h, 0, 1000);
+        rec.emit_workload(EventKind::WakeFinish, 3, h, 4096 | ARG_FLAG, 5000);
+        rec.emit_workload(EventKind::Decision, 0, h, super::super::pack_decision(2, 4), 900);
+        rec.emit(rec.global_ring(), EventKind::IoSubmit, 0, 0, 8192, 0);
+        let s = render(&rec);
+        let doc = json::parse(&s).expect("chrome trace must be valid JSON");
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 thread_name metadata (2 shards + io) + 1 span + 2 instants.
+        assert_eq!(events.len(), 6);
+        let span = events
+            .iter()
+            .find(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .expect("paired wake must render as a complete span");
+        assert_eq!(span.get("name").unwrap().as_str().unwrap(), "wake");
+        assert_eq!(span.get("ts").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(span.get("dur").unwrap().as_f64().unwrap(), 4.0);
+        let args = span.get("args").unwrap();
+        assert_eq!(args.get("bytes").unwrap().as_u64().unwrap(), 4096);
+        assert_eq!(args.get("flag").unwrap().as_u64().unwrap(), 1);
+        let decision = events
+            .iter()
+            .find(|e| e.get("name").and_then(|p| p.as_str()) == Some("decision"))
+            .unwrap();
+        assert_eq!(decision.get("args").unwrap().get("verb").unwrap().as_u64(), Some(2));
+        assert_eq!(decision.get("args").unwrap().get("reason").unwrap().as_u64(), Some(4));
+    }
+
+    #[test]
+    fn render_is_arrival_order_independent() {
+        let emit_all = |order: &[usize]| {
+            let rec = rig();
+            let evs = [
+                (EventKind::JobStart, 1u64, 10u64, 1u64),
+                (EventKind::JobDone, 1, 10, 1),
+                (EventKind::Request, 2, 10, 555),
+                (EventKind::HibernateBegin, 1, 20, 0),
+            ];
+            for &i in order {
+                let (k, id, hint, arg) = evs[i];
+                rec.emit_workload(k, id, 4, arg, hint);
+            }
+            render(&rec)
+        };
+        assert_eq!(emit_all(&[0, 1, 2, 3]), emit_all(&[3, 2, 1, 0]));
+    }
+
+    #[test]
+    fn unpaired_begin_renders_as_instant() {
+        let rec = rig();
+        rec.emit_workload(EventKind::HibernateBegin, 9, 1, 0, 42);
+        let s = render(&rec);
+        let doc = json::parse(&s).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(events
+            .iter()
+            .any(|e| e.get("name").and_then(|n| n.as_str()) == Some("hibernate_begin")
+                && e.get("ph").and_then(|p| p.as_str()) == Some("i")));
+    }
+}

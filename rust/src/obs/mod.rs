@@ -1,0 +1,495 @@
+//! Flight recorder: per-shard ring buffers of compact lifecycle span
+//! events, with Chrome-trace export ([`chrome_trace`]).
+//!
+//! The recorder answers the question the end-to-end summaries cannot:
+//! *where* did a slow wake spend its time — the SIGCONT flip, the REAP
+//! batch read, the pipeline queue, or the I/O backend? Every lifecycle
+//! seam (cold-start phases, hibernate begin/finish, wake begin/finish,
+//! pipeline job enqueue→start→done, I/O backend submit→complete, policy
+//! decisions, request completions) emits a fixed-size [`SpanEvent`] into a
+//! per-shard ring ([`config`](crate::config::ObsConfig) `obs.ring_events`
+//! capacity, overwrite-oldest with a drop counter), cheap enough to stay
+//! on in production.
+//!
+//! ## Clock domains
+//!
+//! Timestamps come from a [`TraceClock`]: live platforms use
+//! [`WallTraceClock`] (monotonic nanoseconds since recorder creation —
+//! `Date`-free), replay switches the recorder to [`VirtualTraceClock`]
+//! which stamps the caller-provided virtual-time hint verbatim. Emission
+//! sites thread the hint from [`crate::simtime::Clock::stamp_ns`] (anchor
+//! + charged model time), so a replayed trace is a pure function of the
+//! scenario: the same events with the same virtual timestamps at any
+//! worker count.
+//!
+//! ## Fingerprint exclusion contract
+//!
+//! Like [`IoStats`](crate::platform::metrics::IoStats), the recorder and
+//! every histogram live **outside** `Counters::snapshot()` and outside the
+//! replay fingerprint: observability must never perturb the determinism
+//! suite. Guard tests in `platform::metrics` and `replay::report` pin this.
+
+pub mod chrome_trace;
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+/// Flag bit on [`SpanEvent::arg`] for `HibernateFinish` / `WakeFinish`
+/// (the REAP path was used, vs the plain swap fallback) and for
+/// `IoSubmit` / `IoComplete` (latency class, vs throughput). The low 63
+/// bits carry the byte count.
+pub const ARG_FLAG: u64 = 1 << 63;
+
+/// Pack a `(verb, reason)` code pair into a [`EventKind::Decision`] arg.
+pub fn pack_decision(verb: u8, reason: u8) -> u64 {
+    ((verb as u64) << 8) | reason as u64
+}
+
+/// Unpack a [`EventKind::Decision`] arg back into `(verb, reason)` codes.
+pub fn unpack_decision(arg: u64) -> (u8, u8) {
+    ((arg >> 8) as u8, arg as u8)
+}
+
+/// What happened. Kept to one byte; the payload goes in [`SpanEvent::arg`]
+/// (semantics per kind are documented in `docs/observability.md`).
+#[repr(u8)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum EventKind {
+    /// Cold start entered (arg: 0).
+    ColdStartBegin = 0,
+    /// Cold-start phase: host env (cgroup/netns/rootfs) + VM creation
+    /// done (arg: phase charged ns).
+    ColdPhaseEnv = 1,
+    /// Cold-start phase: layout install + swap-file creation + image
+    /// streaming done (arg: phase charged ns).
+    ColdPhaseLayout = 2,
+    /// Cold-start phase: runtime/app init done (arg: phase charged ns).
+    ColdPhaseInit = 3,
+    /// Cold start complete, container Warm (arg: total charged ns).
+    ColdStartEnd = 4,
+    /// SIGSTOP flip: container entered Hibernate (arg: 0).
+    HibernateBegin = 5,
+    /// Deflation I/O done (arg: bytes written | [`ARG_FLAG`] when REAP).
+    HibernateFinish = 6,
+    /// SIGCONT flip: container entered WokenUp (arg: 0).
+    WakeBegin = 7,
+    /// Inflation done (arg: bytes prefetched | [`ARG_FLAG`] when REAP).
+    WakeFinish = 8,
+    /// Pipeline job queued (arg: job-kind code 0=deflate 1=inflate
+    /// 2=teardown).
+    JobEnqueue = 9,
+    /// Pipeline worker picked the job up (arg: job-kind code).
+    JobStart = 10,
+    /// Pipeline job finished (arg: job-kind code).
+    JobDone = 11,
+    /// I/O backend submission (arg: bytes | [`ARG_FLAG`] for the latency
+    /// class). Recorded on the global ring — the backend sits below
+    /// shard/instance context.
+    IoSubmit = 12,
+    /// I/O backend submission completed (arg: as `IoSubmit`).
+    IoComplete = 13,
+    /// Policy decision applied (arg: [`pack_decision`] of verb + typed
+    /// `Reason` codes).
+    Decision = 14,
+    /// Request served (arg: end-to-end latency ns; `instance_id` is the
+    /// serving sandbox).
+    Request = 15,
+}
+
+impl EventKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            EventKind::ColdStartBegin => "cold_start_begin",
+            EventKind::ColdPhaseEnv => "cold_phase_env",
+            EventKind::ColdPhaseLayout => "cold_phase_layout",
+            EventKind::ColdPhaseInit => "cold_phase_init",
+            EventKind::ColdStartEnd => "cold_start_end",
+            EventKind::HibernateBegin => "hibernate_begin",
+            EventKind::HibernateFinish => "hibernate_finish",
+            EventKind::WakeBegin => "wake_begin",
+            EventKind::WakeFinish => "wake_finish",
+            EventKind::JobEnqueue => "job_enqueue",
+            EventKind::JobStart => "job_start",
+            EventKind::JobDone => "job_done",
+            EventKind::IoSubmit => "io_submit",
+            EventKind::IoComplete => "io_complete",
+            EventKind::Decision => "decision",
+            EventKind::Request => "request",
+        }
+    }
+}
+
+/// One recorded event: 48 bytes, fixed layout, no heap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// Nanoseconds in the recorder's clock domain (wall or virtual).
+    pub ts_ns: u64,
+    /// Per-ring sequence number (emission order; canonicalized by
+    /// [`Recorder::ring_events`] for deterministic export).
+    pub seq: u64,
+    /// Ring index: the owning control-plane shard, or the global ring
+    /// ([`Recorder::global_ring`]) for shard-less emitters.
+    pub shard: u32,
+    pub kind: EventKind,
+    /// Sandbox instance, 0 when not applicable.
+    pub instance_id: u64,
+    /// `fnv1a` of the workload name, 0 when not applicable.
+    pub workload_hash: u64,
+    /// Kind-specific payload (see [`EventKind`]).
+    pub arg: u64,
+}
+
+impl SpanEvent {
+    /// Content key for canonical ordering: everything except `seq`, so
+    /// two replays that emitted the same events in different arrival
+    /// orders (same-timestamp pipeline completions racing) sort
+    /// identically.
+    fn content_key(&self) -> (u64, u8, u64, u64, u64) {
+        (
+            self.ts_ns,
+            self.kind as u8,
+            self.instance_id,
+            self.workload_hash,
+            self.arg,
+        )
+    }
+}
+
+/// Timestamp source for the recorder. `hint_ns` is the emitter's virtual
+/// position ([`crate::simtime::Clock::stamp_ns`]); the wall clock ignores
+/// it, the virtual clock returns it verbatim.
+pub trait TraceClock: Send + Sync {
+    fn stamp(&self, hint_ns: u64) -> u64;
+    fn is_virtual(&self) -> bool {
+        false
+    }
+}
+
+/// Live clock domain: monotonic nanoseconds since recorder creation
+/// (`Instant`-based — no `Date`, no wall-calendar dependence).
+pub struct WallTraceClock {
+    epoch: Instant,
+}
+
+impl Default for WallTraceClock {
+    fn default() -> Self {
+        Self {
+            epoch: Instant::now(),
+        }
+    }
+}
+
+impl TraceClock for WallTraceClock {
+    fn stamp(&self, _hint_ns: u64) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+}
+
+/// Replay clock domain: the emitter's virtual-time hint, verbatim.
+#[derive(Default)]
+pub struct VirtualTraceClock;
+
+impl TraceClock for VirtualTraceClock {
+    fn stamp(&self, hint_ns: u64) -> u64 {
+        hint_ns
+    }
+    fn is_virtual(&self) -> bool {
+        true
+    }
+}
+
+/// One shard's ring: a bounded deque plus its overwrite counter.
+struct Ring {
+    inner: Mutex<RingInner>,
+    dropped: AtomicU64,
+}
+
+struct RingInner {
+    buf: VecDeque<SpanEvent>,
+    next_seq: u64,
+}
+
+/// Canonically ordered contents of one ring ([`Recorder::ring_events`]).
+#[derive(Debug, Clone)]
+pub struct RingSnapshot {
+    pub events: Vec<SpanEvent>,
+    /// Events overwritten because the ring wrapped.
+    pub dropped: u64,
+}
+
+/// The flight recorder: one fixed-capacity ring per control-plane shard
+/// plus one global ring for emitters below shard context (the I/O
+/// backend). Emission is wait-free against other shards (per-ring mutex)
+/// and a no-op when disabled.
+pub struct Recorder {
+    rings: Vec<Ring>,
+    /// Number of per-shard rings; `rings[shard_rings]` is the global ring.
+    shard_rings: usize,
+    capacity: usize,
+    enabled: AtomicBool,
+    clock: RwLock<Arc<dyn TraceClock>>,
+}
+
+impl Recorder {
+    /// Recorder for `shards` control-plane shards, each ring holding up to
+    /// `capacity` events, stamping wall time until [`Self::set_virtual`].
+    pub fn new(shards: usize, capacity: usize, enabled: bool) -> Arc<Self> {
+        let n = shards.max(1);
+        Arc::new(Self {
+            rings: (0..=n)
+                .map(|_| Ring {
+                    inner: Mutex::new(RingInner {
+                        buf: VecDeque::new(),
+                        next_seq: 0,
+                    }),
+                    dropped: AtomicU64::new(0),
+                })
+                .collect(),
+            shard_rings: n,
+            capacity: capacity.max(1),
+            enabled: AtomicBool::new(enabled),
+            clock: RwLock::new(Arc::new(WallTraceClock::default())),
+        })
+    }
+
+    /// A recorder that records nothing — the default for test rigs built
+    /// outside a platform.
+    pub fn disabled() -> Arc<Self> {
+        Self::new(1, 1, false)
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Switch to the virtual clock domain (replay). Existing events keep
+    /// their stamps; call this before emitting.
+    pub fn set_virtual(&self) {
+        *self.clock.write().unwrap() = Arc::new(VirtualTraceClock);
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        self.clock.read().unwrap().is_virtual()
+    }
+
+    /// Number of per-shard rings.
+    pub fn shard_count(&self) -> usize {
+        self.shard_rings
+    }
+
+    /// Ring owning a workload — same `fnv1a(name) % shards` placement the
+    /// control plane uses, so a shard's track shows its own functions.
+    pub fn ring_for(&self, workload_hash: u64) -> u32 {
+        (workload_hash % self.shard_rings as u64) as u32
+    }
+
+    /// The global ring, for emitters with no shard context.
+    pub fn global_ring(&self) -> u32 {
+        self.shard_rings as u32
+    }
+
+    /// Record one event. `hint_ns` is the emitter's virtual position
+    /// (ignored in the wall domain). When the ring is full the oldest
+    /// event is overwritten and the drop counter bumped.
+    pub fn emit(
+        &self,
+        ring: u32,
+        kind: EventKind,
+        instance_id: u64,
+        workload_hash: u64,
+        arg: u64,
+        hint_ns: u64,
+    ) {
+        if !self.is_enabled() {
+            return;
+        }
+        let ts_ns = self.clock.read().unwrap().stamp(hint_ns);
+        let idx = (ring as usize).min(self.rings.len() - 1);
+        let ring = &self.rings[idx];
+        let mut inner = ring.inner.lock().unwrap();
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        if inner.buf.len() >= self.capacity {
+            inner.buf.pop_front();
+            ring.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        inner.buf.push_back(SpanEvent {
+            ts_ns,
+            seq,
+            shard: idx as u32,
+            kind,
+            instance_id,
+            workload_hash,
+            arg,
+        });
+    }
+
+    /// Shorthand: emit onto the ring owning `workload_hash`.
+    pub fn emit_workload(
+        &self,
+        kind: EventKind,
+        instance_id: u64,
+        workload_hash: u64,
+        arg: u64,
+        hint_ns: u64,
+    ) {
+        self.emit(
+            self.ring_for(workload_hash),
+            kind,
+            instance_id,
+            workload_hash,
+            arg,
+            hint_ns,
+        );
+    }
+
+    /// Total events currently held across all rings.
+    pub fn len(&self) -> usize {
+        self.rings
+            .iter()
+            .map(|r| r.inner.lock().unwrap().buf.len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total events overwritten across all rings.
+    pub fn dropped(&self) -> u64 {
+        self.rings
+            .iter()
+            .map(|r| r.dropped.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// One ring's events in canonical order — sorted by the content key
+    /// `(ts_ns, kind, instance_id, workload_hash, arg)` with `seq`
+    /// renumbered to that order. Emission `seq` breaks arrival-order ties
+    /// only; canonicalizing makes the export independent of which pipeline
+    /// thread's emission won a same-timestamp race, which is what makes
+    /// replay traces byte-identical at any worker count.
+    pub fn ring_events(&self, ring: u32) -> RingSnapshot {
+        let r = &self.rings[(ring as usize).min(self.rings.len() - 1)];
+        let mut events: Vec<SpanEvent> = r.inner.lock().unwrap().buf.iter().copied().collect();
+        events.sort_by_key(|e| (e.content_key(), e.seq));
+        for (i, e) in events.iter_mut().enumerate() {
+            e.seq = i as u64;
+        }
+        RingSnapshot {
+            events,
+            dropped: r.dropped.load(Ordering::Relaxed),
+        }
+    }
+
+    /// All rings (per-shard then global), canonically ordered.
+    pub fn snapshot(&self) -> Vec<RingSnapshot> {
+        (0..self.rings.len() as u32)
+            .map(|i| self.ring_events(i))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(rec: &Recorder, ring: u32, ts: u64, arg: u64) {
+        rec.emit(ring, EventKind::Request, 1, 42, arg, ts);
+    }
+
+    #[test]
+    fn wraparound_keeps_newest_and_counts_drops() {
+        let rec = Recorder::new(1, 4, true);
+        rec.set_virtual();
+        for i in 0..6u64 {
+            ev(&rec, 0, 100 + i, i);
+        }
+        let snap = rec.ring_events(0);
+        assert_eq!(snap.dropped, 2, "two oldest events overwritten");
+        assert_eq!(snap.events.len(), 4);
+        let args: Vec<u64> = snap.events.iter().map(|e| e.arg).collect();
+        assert_eq!(args, vec![2, 3, 4, 5], "newest four survive");
+        // Canonical seq is 0..n in sorted order.
+        let seqs: Vec<u64> = snap.events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn concurrent_emit_under_capacity_loses_nothing() {
+        let rec = Recorder::new(4, 1 << 14, true);
+        rec.set_virtual();
+        let threads = 8;
+        let per = 1000u64;
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let rec = &rec;
+                s.spawn(move || {
+                    for i in 0..per {
+                        // Spread across all rings, unique (ts, arg) pairs.
+                        rec.emit(
+                            (i % 4) as u32,
+                            EventKind::JobDone,
+                            t,
+                            t * 1_000_000 + i,
+                            i,
+                            i,
+                        );
+                    }
+                });
+            }
+        });
+        assert_eq!(rec.dropped(), 0, "capacity was sufficient");
+        assert_eq!(rec.len(), (threads * per) as usize);
+    }
+
+    #[test]
+    fn canonical_order_is_arrival_independent() {
+        // The same multiset of events emitted in two different orders
+        // must snapshot identically (seq renumbered).
+        let make = |order: &[usize]| {
+            let rec = Recorder::new(1, 64, true);
+            rec.set_virtual();
+            let evs = [(5u64, 1u64), (5, 2), (3, 9), (7, 0)];
+            for &i in order {
+                let (ts, arg) = evs[i];
+                ev(&rec, 0, ts, arg);
+            }
+            rec.ring_events(0).events
+        };
+        let a = make(&[0, 1, 2, 3]);
+        let b = make(&[3, 1, 0, 2]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn disabled_recorder_is_a_noop() {
+        let rec = Recorder::disabled();
+        ev(&rec, 0, 1, 1);
+        assert!(rec.is_empty());
+        assert_eq!(rec.dropped(), 0);
+    }
+
+    #[test]
+    fn virtual_clock_stamps_hint_wall_clock_ignores_it() {
+        let rec = Recorder::new(1, 8, true);
+        // Wall domain: the hint is ignored (stamps are monotonic-now).
+        ev(&rec, 0, u64::MAX, 0);
+        let wall_ts = rec.ring_events(0).events[0].ts_ns;
+        assert!(wall_ts < 1 << 40, "wall stamp is elapsed-since-epoch");
+        rec.set_virtual();
+        assert!(rec.is_virtual());
+        ev(&rec, 0, 123_456, 1);
+        let snap = rec.ring_events(0);
+        let virt = snap.events.iter().find(|e| e.arg == 1).unwrap();
+        assert_eq!(virt.ts_ns, 123_456);
+    }
+
+    #[test]
+    fn decision_packing_round_trips() {
+        let arg = pack_decision(2, 4);
+        assert_eq!(unpack_decision(arg), (2, 4));
+    }
+}

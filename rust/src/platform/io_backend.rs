@@ -46,6 +46,7 @@
 //! drain-after-every-tick-batch barrier, and its fingerprints equal
 //! `backend = sync` on the same scenario/seed (see `docs/io_backend.md`).
 
+use crate::obs::{ARG_FLAG, EventKind, Recorder};
 use crate::platform::metrics::IoStats;
 use crate::PAGE_SIZE;
 use anyhow::{bail, Result};
@@ -204,12 +205,26 @@ fn note_submission(stats: &IoStats, runs: &[IoRun]) {
     stats.pages_submitted.fetch_add(pages, Ordering::Relaxed);
 }
 
+/// Emit one `io_submit`/`io_complete` instant on the recorder's global
+/// ring: `arg` packs the byte count with the latency-class flag
+/// ([`ARG_FLAG`] set ⇔ [`IoClass::Latency`]). The hint is 0 — backend
+/// scheduling has no virtual timestamp, so under the replay clock these
+/// stamp t = 0 and sort purely by content (still deterministic; see
+/// `docs/observability.md`).
+fn trace_io(rec: &Recorder, kind: EventKind, bytes: u64, class: IoClass) {
+    if rec.is_enabled() {
+        let flag = if class == IoClass::Latency { ARG_FLAG } else { 0 };
+        rec.emit(rec.global_ring(), kind, 0, 0, bytes | flag, 0);
+    }
+}
+
 /// `backend = sync`: executes runs inline on the submitting thread, in
 /// sorted order — byte-for-byte the pre-backend behavior (same syscall
 /// sequence, same error strings), so existing baselines and replay
 /// fingerprints stay meaningful.
 pub struct SyncBackend {
     stats: Arc<IoStats>,
+    recorder: Arc<Recorder>,
 }
 
 impl SyncBackend {
@@ -220,7 +235,13 @@ impl SyncBackend {
     /// Report into an existing stats block (the platform passes
     /// `Metrics::io` so backend activity lands in the metrics report).
     pub fn with_stats(stats: Arc<IoStats>) -> Self {
-        Self { stats }
+        Self::with_observability(stats, Recorder::disabled())
+    }
+
+    /// Full observability hookup: stats block plus the platform's flight
+    /// recorder (submit/complete instants on the global `io` ring).
+    pub fn with_observability(stats: Arc<IoStats>, recorder: Arc<Recorder>) -> Self {
+        Self { stats, recorder }
     }
 }
 
@@ -236,12 +257,14 @@ impl IoBackend for SyncBackend {
         file: &Arc<File>,
         runs: Vec<IoRun>,
         dir: IoDir,
-        _class: IoClass,
+        class: IoClass,
     ) -> Result<u64> {
         if runs.is_empty() {
             return Ok(0);
         }
         note_submission(&self.stats, &runs);
+        let submitted: u64 = runs.iter().map(|r| r.bytes()).sum();
+        trace_io(&self.recorder, EventKind::IoSubmit, submitted, class);
         let mut total = 0u64;
         for run in &runs {
             self.stats.inflight_add(run.bytes());
@@ -249,6 +272,7 @@ impl IoBackend for SyncBackend {
             self.stats.inflight_sub(run.bytes());
             total += res?;
         }
+        trace_io(&self.recorder, EventKind::IoComplete, total, class);
         Ok(total)
     }
 
@@ -299,6 +323,7 @@ struct BackendShared {
     budget: Condvar,
     max_inflight_bytes: u64,
     stats: Arc<IoStats>,
+    recorder: Arc<Recorder>,
 }
 
 /// `backend = batched`: a two-queue worker pool with strict latency
@@ -317,6 +342,24 @@ impl BatchedBackend {
         batch_pages: usize,
         stats: Arc<IoStats>,
     ) -> Self {
+        Self::with_observability(
+            workers,
+            max_inflight_bytes,
+            batch_pages,
+            stats,
+            Recorder::disabled(),
+        )
+    }
+
+    /// Full observability hookup: stats block plus the platform's flight
+    /// recorder (submit/complete instants on the global `io` ring).
+    pub fn with_observability(
+        workers: usize,
+        max_inflight_bytes: u64,
+        batch_pages: usize,
+        stats: Arc<IoStats>,
+        recorder: Arc<Recorder>,
+    ) -> Self {
         let shared = Arc::new(BackendShared {
             state: Mutex::new(QueueState {
                 latency: VecDeque::new(),
@@ -328,6 +371,7 @@ impl BatchedBackend {
             budget: Condvar::new(),
             max_inflight_bytes: max_inflight_bytes.max(PAGE_SIZE as u64),
             stats,
+            recorder,
         });
         let handles = (0..workers.max(1))
             .map(|_| {
@@ -395,6 +439,8 @@ impl IoBackend for BatchedBackend {
             return Ok(0);
         }
         note_submission(&self.shared.stats, &runs);
+        let submitted: u64 = runs.iter().map(|r| r.bytes()).sum();
+        trace_io(&self.shared.recorder, EventKind::IoSubmit, submitted, class);
         let chunks: Vec<Vec<IoRun>> = match class {
             IoClass::Latency => vec![runs],
             IoClass::Throughput => self.chop(runs),
@@ -448,7 +494,10 @@ impl IoBackend for BatchedBackend {
         }
         match st.error.take() {
             Some(e) => Err(e),
-            None => Ok(st.bytes),
+            None => {
+                trace_io(&self.shared.recorder, EventKind::IoComplete, st.bytes, class);
+                Ok(st.bytes)
+            }
         }
     }
 

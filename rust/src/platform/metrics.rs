@@ -10,12 +10,14 @@
 //! live in exactly one stripe, so the merge is collision-free.
 
 use crate::container::state::ContainerState;
+use crate::obs::Recorder;
 use crate::util::fnv1a;
+use crate::util::human_ns;
 use crate::util::json::{obj, Json};
-use crate::util::stats::Summary;
+use crate::util::stats::{Histogram, Summary};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Lock stripes for the latency registry.
 pub const LATENCY_STRIPES: usize = 16;
@@ -174,13 +176,81 @@ impl IoStats {
     }
 }
 
+/// One (workload, serving-path) latency cell: the raw-sample [`Summary`]
+/// that backs the text report's mean/max columns, plus the fixed-edge
+/// [`Histogram`] that backs p50/p99/p999. Histogram merges are exact
+/// (bucket-wise addition), so per-path and whole-run aggregates built from
+/// cells are identical to having recorded every sample into one histogram —
+/// unlike concatenating `Summary` sample vectors, which the replay report
+/// used to do and which made merged quantiles depend on allocation-heavy
+/// re-sorts of the full sample set.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyCell {
+    pub summary: Summary,
+    pub hist: Histogram,
+}
+
+impl LatencyCell {
+    fn add(&mut self, ns: u64) {
+        self.summary.add(ns);
+        self.hist.record(ns);
+    }
+}
+
+/// Wake-phase latency histograms.
+///
+/// Fingerprint-excluded like [`IoStats`]: `queue_wait` measures wall-clock
+/// pipeline scheduling (worker-count dependent), so none of these may enter
+/// [`Counters::snapshot`] — they are surfaced in [`Metrics::report`] /
+/// [`Metrics::to_json`] as their own section instead.
+#[derive(Debug, Default)]
+pub struct WakeHistograms {
+    /// Wall-clock wait between an inflate job's enqueue and its start on a
+    /// pipeline worker.
+    pub queue_wait: Mutex<Histogram>,
+    /// Charged inflate (REAP batch swap-in) virtual ns per woken instance.
+    pub inflate: Mutex<Histogram>,
+    /// Demand-wake admission overhead (virtual ns) charged on the request
+    /// path while a signalled wake is still in flight.
+    pub admission: Mutex<Histogram>,
+}
+
+/// JSON fields for one histogram: quantiles plus the non-empty bucket dump
+/// as `[low_edge_ns, count]` pairs.
+fn hist_json_fields(h: &Histogram) -> Vec<(&'static str, Json)> {
+    vec![
+        ("n", Json::Num(h.count() as f64)),
+        ("mean_ns", Json::Num(h.mean())),
+        ("p50_ns", Json::Num(h.p50() as f64)),
+        ("p99_ns", Json::Num(h.p99() as f64)),
+        ("p999_ns", Json::Num(h.p999() as f64)),
+        ("max_ns", Json::Num(h.max() as f64)),
+        (
+            "buckets",
+            Json::Arr(
+                h.nonzero_buckets()
+                    .map(|(low, c)| Json::Arr(vec![Json::Num(low as f64), Json::Num(c as f64)]))
+                    .collect(),
+            ),
+        ),
+    ]
+}
+
 /// The registry.
 pub struct Metrics {
-    stripes: Vec<Mutex<BTreeMap<(String, ServedFrom), Summary>>>,
+    stripes: Vec<Mutex<BTreeMap<(String, ServedFrom), LatencyCell>>>,
     pub counters: Counters,
     /// Shared with the platform's [`crate::platform::io_backend`] instance
     /// so backend activity lands in this registry's reports.
-    pub io: std::sync::Arc<IoStats>,
+    pub io: Arc<IoStats>,
+    /// Flight recorder shared with every emission seam (sandbox lifecycle,
+    /// pipeline jobs, policy decisions, I/O backends). Like [`IoStats`],
+    /// deliberately **not** part of [`Counters::snapshot`] — ring contents
+    /// and drop counts are scheduling-dependent and must never reach the
+    /// replay fingerprint.
+    pub recorder: Arc<Recorder>,
+    /// Wake-phase histograms (queue-wait / inflate / admission).
+    pub wake: WakeHistograms,
 }
 
 impl Default for Metrics {
@@ -190,16 +260,25 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// Registry with a disabled (zero-overhead) flight recorder — tests and
+    /// benches that don't trace use this.
     pub fn new() -> Self {
+        Self::with_recorder(Recorder::disabled())
+    }
+
+    /// Registry sharing `recorder` with every component it is handed to.
+    pub fn with_recorder(recorder: Arc<Recorder>) -> Self {
         Self {
             stripes: (0..LATENCY_STRIPES).map(|_| Mutex::new(BTreeMap::new())).collect(),
             counters: Counters::default(),
-            io: std::sync::Arc::new(IoStats::default()),
+            io: Arc::new(IoStats::default()),
+            recorder,
+            wake: WakeHistograms::default(),
         }
     }
 
     /// The stripe owning `workload`'s rows.
-    fn stripe(&self, workload: &str) -> &Mutex<BTreeMap<(String, ServedFrom), Summary>> {
+    fn stripe(&self, workload: &str) -> &Mutex<BTreeMap<(String, ServedFrom), LatencyCell>> {
         &self.stripes[(fnv1a(workload) % LATENCY_STRIPES as u64) as usize]
     }
 
@@ -227,14 +306,29 @@ impl Metrics {
             .add(ns);
     }
 
+    /// Record wall-clock queue wait for an inflate pipeline job.
+    pub fn record_queue_wait(&self, ns: u64) {
+        self.wake.queue_wait.lock().unwrap().record(ns);
+    }
+
+    /// Record charged inflate time for a woken instance.
+    pub fn record_inflate(&self, ns: u64) {
+        self.wake.inflate.lock().unwrap().record(ns);
+    }
+
+    /// Record demand-wake admission overhead charged on a request.
+    pub fn record_admission(&self, ns: u64) {
+        self.wake.admission.lock().unwrap().record(ns);
+    }
+
     /// Mean latency for a (workload, path) cell, if sampled.
     pub fn mean_latency(&self, workload: &str, from: ServedFrom) -> Option<f64> {
         self.stripe(workload)
             .lock()
             .unwrap()
             .get(&(workload.to_string(), from))
-            .filter(|s| !s.is_empty())
-            .map(|s| s.mean())
+            .filter(|c| !c.summary.is_empty())
+            .map(|c| c.summary.mean())
     }
 
     pub fn sample_count(&self, workload: &str, from: ServedFrom) -> usize {
@@ -242,8 +336,20 @@ impl Metrics {
             .lock()
             .unwrap()
             .get(&(workload.to_string(), from))
-            .map(|s| s.len())
+            .map(|c| c.summary.len())
             .unwrap_or(0)
+    }
+
+    /// Per serving-path latency histograms: the exact bucket-wise merge of
+    /// every workload's cell on that path.
+    pub fn path_histograms(&self) -> BTreeMap<ServedFrom, Histogram> {
+        let mut out: BTreeMap<ServedFrom, Histogram> = BTreeMap::new();
+        for stripe in &self.stripes {
+            for ((_, from), cell) in stripe.lock().unwrap().iter() {
+                out.entry(*from).or_default().merge(&cell.hist);
+            }
+        }
+        out
     }
 
     /// Render one row per (workload, path) cell across every stripe,
@@ -251,24 +357,34 @@ impl Metrics {
     /// collide; only the keys are cloned, never the sample vectors.
     fn render_rows<T>(
         &self,
-        mut render: impl FnMut(&str, ServedFrom, &mut Summary) -> T,
+        mut render: impl FnMut(&str, ServedFrom, &mut LatencyCell) -> T,
     ) -> Vec<T> {
         let mut rows: Vec<((String, ServedFrom), T)> = Vec::new();
         for stripe in &self.stripes {
             let mut map = stripe.lock().unwrap();
-            for ((w, from), summary) in map.iter_mut() {
-                rows.push(((w.clone(), *from), render(w, *from, summary)));
+            for ((w, from), cell) in map.iter_mut() {
+                rows.push(((w.clone(), *from), render(w, *from, cell)));
             }
         }
         rows.sort_by(|a, b| a.0.cmp(&b.0));
         rows.into_iter().map(|(_, r)| r).collect()
     }
 
+    /// Clone of every (workload, path) cell, sorted by key — the replay
+    /// report builds its rows from this.
+    pub fn latency_cells(&self) -> Vec<(String, ServedFrom, LatencyCell)> {
+        self.render_rows(|w, from, cell| (w.to_string(), from, cell.clone()))
+    }
+
     /// Text report: one row per (workload, path) — the Fig. 6 layout.
     pub fn report(&self) -> String {
         let mut out = String::new();
-        for row in self.render_rows(|w, from, summary| {
-            summary.report_ns(&format!("{w}/{}", from.label()))
+        for row in self.render_rows(|w, from, cell| {
+            format!(
+                "{} p999={:>10}",
+                cell.summary.report_ns(&format!("{w}/{}", from.label())),
+                human_ns(cell.hist.p999())
+            )
         }) {
             out.push_str(&row);
             out.push('\n');
@@ -283,21 +399,62 @@ impl Metrics {
             out.push_str(&format!(" {k}={v}"));
         }
         out.push('\n');
+        for (name, hist) in [
+            ("queue_wait", &self.wake.queue_wait),
+            ("inflate", &self.wake.inflate),
+            ("admission", &self.wake.admission),
+        ] {
+            let h = hist.lock().unwrap();
+            out.push_str(&format!(
+                "wake/{name}: n={} p50={} p99={} p999={} max={}\n",
+                h.count(),
+                human_ns(h.p50()),
+                human_ns(h.p99()),
+                human_ns(h.p999()),
+                human_ns(h.max()),
+            ));
+        }
         out
     }
 
-    /// JSON export (dashboards, EXPERIMENTS.md tooling).
+    /// JSON export (dashboards, EXPERIMENTS.md tooling). Quantiles are
+    /// histogram-backed (fixed edges, exact merges); `mean_ns` stays
+    /// sample-exact via the cell's `Summary`.
     pub fn to_json(&self) -> Json {
-        let rows = self.render_rows(|w, from, s| {
+        let rows = self.render_rows(|w, from, cell| {
             obj(vec![
                 ("workload", Json::Str(w.to_string())),
                 ("path", Json::Str(from.label().to_string())),
-                ("n", Json::Num(s.len() as f64)),
-                ("mean_ns", Json::Num(s.mean())),
-                ("p50_ns", Json::Num(s.p50() as f64)),
-                ("p99_ns", Json::Num(s.p99() as f64)),
+                ("n", Json::Num(cell.summary.len() as f64)),
+                ("mean_ns", Json::Num(cell.summary.mean())),
+                ("p50_ns", Json::Num(cell.hist.p50() as f64)),
+                ("p99_ns", Json::Num(cell.hist.p99() as f64)),
+                ("p999_ns", Json::Num(cell.hist.p999() as f64)),
             ])
         });
+        let paths: Vec<Json> = self
+            .path_histograms()
+            .iter()
+            .map(|(from, h)| {
+                let mut fields = vec![("path", Json::Str(from.label().to_string()))];
+                fields.extend(hist_json_fields(h));
+                obj(fields)
+            })
+            .collect();
+        let wake = obj(vec![
+            (
+                "queue_wait",
+                obj(hist_json_fields(&self.wake.queue_wait.lock().unwrap())),
+            ),
+            (
+                "inflate",
+                obj(hist_json_fields(&self.wake.inflate.lock().unwrap())),
+            ),
+            (
+                "admission",
+                obj(hist_json_fields(&self.wake.admission.lock().unwrap())),
+            ),
+        ]);
         let counters: Vec<(&str, Json)> = self
             .counters
             .snapshot()
@@ -312,6 +469,8 @@ impl Metrics {
             .collect();
         obj(vec![
             ("latencies", Json::Arr(rows)),
+            ("paths", Json::Arr(paths)),
+            ("wake_phases", wake),
             ("counters", obj(counters)),
             ("io", obj(io)),
         ])
@@ -418,6 +577,41 @@ mod tests {
             );
         }
         assert_eq!(m.io.inflight_bytes.load(Ordering::Relaxed), 0, "gauge settles");
+    }
+
+    #[test]
+    fn recorder_and_histograms_stay_out_of_the_fingerprint_snapshot() {
+        use crate::obs::EventKind;
+        let m = Metrics::with_recorder(Recorder::new(2, 16, true));
+        m.record_latency("w", ServedFrom::WokenUp, 500);
+        let before = m.counters.snapshot();
+        // Flight-recorder events and wake-phase histogram records…
+        m.recorder.emit_workload(EventKind::WakeBegin, 1, 7, 0, 100);
+        m.recorder.emit_workload(EventKind::WakeFinish, 1, 7, 4096, 200);
+        m.record_queue_wait(1_000);
+        m.record_inflate(2_000);
+        m.record_admission(3_000);
+        // …render in both exports…
+        let r = m.report();
+        assert!(r.contains("wake/inflate: n=1"), "{r}");
+        assert!(r.contains("p999="), "{r}");
+        let j = m.to_json().to_string();
+        let back = crate::util::json::parse(&j).unwrap();
+        assert!(back.get("wake_phases").is_some());
+        assert!(back.get("paths").is_some());
+        let row = &back.get("latencies").unwrap().as_arr().unwrap()[0];
+        assert_eq!(row.get("p999_ns").unwrap().as_u64(), Some(500));
+        // …but leave the counter snapshot the replay fingerprint folds
+        // bit-identical: ring contents, drop counts, and histogram buckets
+        // are scheduling-dependent and must never become counters.
+        assert_eq!(m.counters.snapshot(), before);
+        for (k, _) in m.counters.snapshot() {
+            assert!(
+                !k.contains("obs") && !k.contains("ring") && !k.contains("wake_phase"),
+                "obs state `{k}` leaked into the fingerprint snapshot"
+            );
+        }
+        assert_eq!(m.recorder.len(), 2, "events did land in the ring");
     }
 
     #[test]

@@ -46,6 +46,7 @@ use crate::config::PlatformConfig;
 use crate::container::sandbox::{PendingIo, RequestOutcome, Sandbox, SandboxServices};
 use crate::container::state::ContainerState;
 use crate::container::PayloadRunner;
+use crate::obs::{pack_decision, EventKind, Recorder};
 use crate::simtime::Clock;
 use crate::workloads::WorkloadSpec;
 use anyhow::{bail, Context, Result};
@@ -91,11 +92,25 @@ pub struct Platform {
     /// pool runs the deflations, anticipatory inflations and eviction
     /// teardowns ([`pipeline`]).
     pipeline: pipeline::InstancePipeline,
-    next_id: AtomicU64,
+    /// Per-shard instance-id sequences. Cold starts allocate
+    /// `(shard + 1) << 32 | seq`: within a shard, cold-start order is
+    /// deterministic under the replay engine's shard-affine workers, so
+    /// the ids — which appear in flight-recorder events and swap file
+    /// names — are stable at any worker count, where one global counter
+    /// would hand them out in racy cross-shard arrival order.
+    next_ids: Vec<AtomicU64>,
     /// Round-robin cursor for the staggered policy cadence
     /// (`policy.tick_stride` > 1): the shard index the next
     /// [`Platform::policy_tick`] starts from.
     tick_cursor: AtomicUsize,
+    /// Monotone count of [`Self::policy_tick_nowait`] calls — the phase
+    /// within a `tick_stride` round (see [`Self::stride_budget_frame`]).
+    nowait_calls: AtomicU64,
+    /// Budget frame reused across one stride round by nowait ticks.
+    budget_cache: Mutex<Arc<BudgetFrame>>,
+    /// Diagnostic: how many times a nowait tick actually rebuilt the
+    /// budget frame (pinned by the stride-reconciliation test).
+    budget_rebuilds: AtomicU64,
 }
 
 impl Platform {
@@ -122,18 +137,35 @@ impl Platform {
             runner,
             "platform",
         )?;
+        let shard_count = if cfg.shards > 0 {
+            cfg.shards
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        };
+        // The flight recorder mirrors the control plane's shard layout
+        // (one ring per shard + one global ring) and is deliberately
+        // created *before* Metrics: everything observable hangs off it,
+        // but none of it enters `Counters::snapshot()` or the replay
+        // fingerprint (see docs/observability.md).
+        let recorder = Recorder::new(shard_count, cfg.obs.ring_events as usize, cfg.obs.enabled);
         // Metrics exist before the services so the I/O backend can report
         // into this platform's stats block.
-        let metrics = Arc::new(Metrics::new());
+        let metrics = Arc::new(Metrics::with_recorder(recorder.clone()));
         let io: Arc<dyn io_backend::IoBackend> = match cfg.io.backend.as_str() {
-            "batched" => Arc::new(io_backend::BatchedBackend::new(
+            "batched" => Arc::new(io_backend::BatchedBackend::with_observability(
                 cfg.io.workers,
                 cfg.io.max_inflight_bytes,
                 cfg.io.batch_pages as usize,
                 metrics.io.clone(),
+                recorder.clone(),
             )),
             // Config validation admits only sync|batched.
-            _ => Arc::new(io_backend::SyncBackend::with_stats(metrics.io.clone())),
+            _ => Arc::new(io_backend::SyncBackend::with_observability(
+                metrics.io.clone(),
+                recorder.clone(),
+            )),
         };
         // new_local defaults reap on + a private sync backend; honor config.
         let svc = Arc::new(SandboxServices {
@@ -148,14 +180,8 @@ impl Platform {
             reap_enabled: cfg.policy.reap_enabled,
             hostenv: svc.hostenv.clone(),
             io,
+            recorder,
         });
-        let shard_count = if cfg.shards > 0 {
-            cfg.shards
-        } else {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(4)
-        };
         let wake_leads = Arc::new(WakeLeads::new(cfg.policy.adaptive_wake_lead));
         let p = Self {
             policy,
@@ -170,8 +196,16 @@ impl Platform {
             svc,
             cfg,
             shards: ShardSet::new(shard_count),
-            next_id: AtomicU64::new(1),
+            next_ids: (0..shard_count).map(|_| AtomicU64::new(0)).collect(),
             tick_cursor: AtomicUsize::new(0),
+            nowait_calls: AtomicU64::new(0),
+            budget_cache: Mutex::new(Arc::new(BudgetFrame {
+                host_used: 0,
+                shard_committed: Vec::new(),
+                leases: None,
+                tenants: Vec::new(),
+            })),
+            budget_rebuilds: AtomicU64::new(0),
         };
         // Restore persisted arrival tracks so anticipatory wake-up resumes
         // across restarts. A corrupt sidecar degrades to a cold predictor
@@ -232,6 +266,10 @@ impl Platform {
         let shard = self.shards.get(shard_idx);
 
         let clock = Clock::new();
+        // Anchor the request clock at the arrival's virtual time so every
+        // flight-recorder event emitted under it stamps absolute virtual
+        // nanoseconds (deterministic across replay worker counts).
+        clock.set_base(now_vns);
         // Route — and reserve the chosen instance — under the shard lock;
         // run outside it. The warm path allocates nothing under the lock;
         // the spec is cloned only when a cold start actually needs it.
@@ -265,7 +303,7 @@ impl Platform {
                         .get(workload)
                         .cloned()
                         .expect("deployed workload must have a spec");
-                    let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+                    let id = self.alloc_instance_id(shard_idx);
                     drop(guard); // cold start is slow; don't hold the lock
                     let sb = Sandbox::cold_start(id, spec, self.svc.clone(), &clock)?;
                     self.metrics
@@ -303,14 +341,26 @@ impl Platform {
         // just-served instance with stale idleness. The live-byte gauge
         // refreshes at the same settled point (faults and demand wakes
         // during the request changed the footprint).
-        if let Ok((_, live)) = &result {
+        if let Ok((_, live, _)) = &result {
             last_active.fetch_max(now_vns + latency_ns, Ordering::Relaxed);
             live_gauge.store(*live, Ordering::Relaxed);
         }
         drop(reservation); // panic-safe: would also release on unwind
-        let (outcome, _) = result?;
+        let (outcome, _, instance_id) = result?;
 
         self.metrics.record_latency(workload, served_from, latency_ns);
+        if outcome.admission_ns > 0 {
+            self.metrics.record_admission(outcome.admission_ns);
+        }
+        if self.metrics.recorder.is_enabled() {
+            self.metrics.recorder.emit_workload(
+                EventKind::Request,
+                instance_id,
+                crate::util::fnv1a(workload),
+                latency_ns,
+                clock.stamp_ns(),
+            );
+        }
         Ok(RequestReport {
             workload: workload.to_string(),
             served_from,
@@ -321,15 +371,23 @@ impl Platform {
         })
     }
 
+    /// Allocate a fresh instance id for a cold start landing on shard
+    /// `shard_idx` (see the [`Self::next_ids`] field for the encoding and
+    /// why it is per-shard).
+    fn alloc_instance_id(&self, shard_idx: usize) -> u64 {
+        let seq = self.next_ids[shard_idx].fetch_add(1, Ordering::Relaxed);
+        ((shard_idx as u64 + 1) << 32) | seq
+    }
+
     /// Run a routed request against its reserved sandbox. The caller holds
     /// the reservation and releases it afterwards. Returns the outcome
     /// plus the sandbox's post-request live-byte charge (for the
-    /// instance's gauge).
+    /// instance's gauge) and its instance id (for the trace event).
     fn execute_request(
         &self,
         sandbox: &Arc<Mutex<Sandbox>>,
         clock: &Clock,
-    ) -> Result<(RequestOutcome, u64)> {
+    ) -> Result<(RequestOutcome, u64, u64)> {
         let mut sb = sandbox.lock().unwrap();
         if !sb.state().accepts_requests() {
             bail!(
@@ -344,7 +402,7 @@ impl Platform {
                 .fetch_add(1, Ordering::Relaxed);
         }
         let outcome = sb.handle_request(clock)?;
-        Ok((outcome, sb.live_bytes()))
+        Ok((outcome, sb.live_bytes(), sb.id))
     }
 
     /// Run one policy tick at virtual time `now_vns`: hibernate idle
@@ -488,7 +546,7 @@ impl Platform {
         } else {
             self.tick_cursor.fetch_add(per_round, Ordering::Relaxed) % n
         };
-        let frame = self.reconcile_budget();
+        let frame = self.stride_budget_frame(stride);
         let mut applied = Vec::new();
         for k in 0..per_round {
             let si = (start + k) % n;
@@ -496,6 +554,35 @@ impl Platform {
         }
         reaped?;
         Ok(applied)
+    }
+
+    /// The budget frame one nowait tick decides against.
+    ///
+    /// The *expensive* frame (leases or tenant ledgers — an all-shards
+    /// gauge sweep) is rebuilt on the first call of each stride round and
+    /// reused by the round's remaining `stride - 1` calls: a round visits
+    /// every shard exactly once, so within it each shard decides against
+    /// one consistent hierarchy — the same once-per-round reconciliation
+    /// the parallel replay engine's epoch frame provides. The *cheap*
+    /// frame (classic config: host figure only) is O(1) and must stay
+    /// fresh — it is the pressure signal — so it is rebuilt every call.
+    fn stride_budget_frame(&self, stride: usize) -> Arc<BudgetFrame> {
+        let expensive = self.cfg.policy.tracks_tenants() || self.cfg.policy.pressure_leases;
+        let call = self.nowait_calls.fetch_add(1, Ordering::Relaxed);
+        if !expensive || stride <= 1 || call % stride as u64 == 0 {
+            let frame = Arc::new(self.reconcile_budget());
+            self.budget_rebuilds.fetch_add(1, Ordering::Relaxed);
+            *self.budget_cache.lock().unwrap() = frame.clone();
+            return frame;
+        }
+        self.budget_cache.lock().unwrap().clone()
+    }
+
+    /// How many nowait ticks actually rebuilt the budget frame (the rest
+    /// reused the stride round's cached frame — see
+    /// [`Self::stride_budget_frame`]).
+    pub fn budget_rebuilds(&self) -> u64 {
+        self.budget_rebuilds.load(Ordering::Relaxed)
     }
 
     /// The shard-scoped policy step: decide/apply/sweep for shard `si`
@@ -572,6 +659,16 @@ impl Platform {
             for d in decisions {
                 if self.apply(&w, d, now_vns)? {
                     self.metrics.record_decision(d.reason);
+                    if self.metrics.recorder.is_enabled() {
+                        self.metrics.recorder.emit(
+                            si as u32,
+                            EventKind::Decision,
+                            0,
+                            crate::util::fnv1a(&w),
+                            pack_decision(d.verb.code(), d.reason.code()),
+                            now_vns,
+                        );
+                    }
                     applied.push(AppliedAction {
                         workload: w.clone(),
                         idx: d.idx,
@@ -592,6 +689,9 @@ impl Platform {
 
     fn apply(&self, workload: &str, d: Decision, now_vns: u64) -> Result<bool> {
         let clock = Clock::new();
+        // Anchor at tick time so the state-flip trace events
+        // (hibernate_begin, wake_begin) stamp absolute virtual time.
+        clock.set_base(now_vns);
         let (sandbox, last_active, live_gauge, reservation) = {
             let guard = self.shards.shard_for(workload).lock();
             let Some(pool) = guard.pools.get(workload) else {
@@ -616,9 +716,14 @@ impl Platform {
         // `pipeline_workers = 0` the I/O runs inline — the pre-pipeline
         // behavior.
         match d.verb {
-            Verb::Hibernate => {
-                self.apply_hibernate(workload, sandbox, live_gauge, reservation, &clock)
-            }
+            Verb::Hibernate => self.apply_hibernate(
+                workload,
+                sandbox,
+                live_gauge,
+                reservation,
+                now_vns,
+                &clock,
+            ),
             Verb::Wake => self.apply_wake(
                 workload,
                 sandbox,
@@ -628,7 +733,9 @@ impl Platform {
                 now_vns,
                 &clock,
             ),
-            Verb::Evict => self.apply_evict(workload, sandbox, live_gauge, reservation),
+            Verb::Evict => {
+                self.apply_evict(workload, sandbox, live_gauge, reservation, now_vns)
+            }
         }
     }
 
@@ -642,12 +749,13 @@ impl Platform {
         sandbox: Arc<Mutex<Sandbox>>,
         live_gauge: Arc<AtomicU64>,
         reservation: pool::Reservation,
+        now_vns: u64,
         clock: &Clock,
     ) -> Result<bool> {
         // Size the deferred I/O from the *warm* charge, before the flip
         // below rewrites the gauge to the hibernated estimate.
         let est_bytes = live_gauge.load(Ordering::Relaxed);
-        {
+        let instance_id = {
             let mut sb = sandbox.lock().unwrap();
             if !matches!(
                 sb.state(),
@@ -674,7 +782,8 @@ impl Platform {
             // refines the figure; replay never observes the estimate
             // (views snapshot before applies, drains before reads).
             live_gauge.store(sb.live_bytes(), Ordering::Relaxed);
-        }
+            sb.id
+        };
         self.metrics
             .counters
             .hibernations
@@ -686,6 +795,9 @@ impl Platform {
             kind: pipeline::JobKind::Deflate,
             live_gauge,
             est_bytes,
+            instance_id,
+            submitted_vns: now_vns,
+            enqueued_wall: std::time::Instant::now(),
         })?;
         Ok(true)
     }
@@ -705,7 +817,7 @@ impl Platform {
         now_vns: u64,
         clock: &Clock,
     ) -> Result<bool> {
-        {
+        let instance_id = {
             let mut sb = sandbox.lock().unwrap();
             if sb.state() != ContainerState::Hibernate {
                 return Ok(false);
@@ -736,7 +848,8 @@ impl Platform {
             // more instances past the budget. The completing job stores
             // the real footprint; replay never observes the estimate.
             live_gauge.store(sb.wake_estimate_bytes(), Ordering::Relaxed);
-        }
+            sb.id
+        };
         // Waking resets idleness: the wake is in anticipation of an
         // imminent request, so the instance must not be re-deflated by the
         // very next tick.
@@ -753,6 +866,9 @@ impl Platform {
             kind: pipeline::JobKind::Inflate,
             live_gauge,
             est_bytes,
+            instance_id,
+            submitted_vns: now_vns,
+            enqueued_wall: std::time::Instant::now(),
         })?;
         Ok(true)
     }
@@ -767,13 +883,15 @@ impl Platform {
         sandbox: Arc<Mutex<Sandbox>>,
         live_gauge: Arc<AtomicU64>,
         reservation: pool::Reservation,
+        now_vns: u64,
     ) -> Result<bool> {
-        {
+        let instance_id = {
             let sb = sandbox.lock().unwrap();
             if !sb.state().accepts_requests() {
                 return Ok(false);
             }
-        }
+            sb.id
+        };
         let est_bytes = live_gauge.load(Ordering::Relaxed);
         self.dispatch(pipeline::PipelineJob {
             workload: workload.to_string(),
@@ -782,6 +900,9 @@ impl Platform {
             kind: pipeline::JobKind::Teardown,
             live_gauge,
             est_bytes,
+            instance_id,
+            submitted_vns: now_vns,
+            enqueued_wall: std::time::Instant::now(),
         })?;
         Ok(true)
     }
@@ -844,6 +965,16 @@ impl Platform {
     /// interleaving-independent.
     pub fn drain_pipeline(&self) -> Result<u64> {
         self.pipeline.drain()
+    }
+
+    /// Write the flight recorder's contents as Chrome trace-event JSON
+    /// (loadable in Perfetto / `chrome://tracing`) to `path`. One track
+    /// per control-plane shard plus an `io` track; see
+    /// `docs/observability.md` for the event taxonomy.
+    pub fn dump_trace(&self, path: &str) -> Result<()> {
+        let json = crate::obs::chrome_trace::render(&self.metrics.recorder);
+        std::fs::write(path, json).with_context(|| format!("writing trace to {path}"))?;
+        Ok(())
     }
 
     /// Test hook: make pipeline workers block on `gate` before each job,
@@ -1200,6 +1331,41 @@ mod tests {
         p2.request_at("golang-hello", 0).unwrap();
         let actions = p2.policy_tick(1_000_000_000).unwrap();
         assert!(actions.iter().any(|a| a.verb == Verb::Hibernate));
+    }
+
+    #[test]
+    fn stride_reuses_budget_frame_across_a_round() {
+        // Expensive frame (leases on) + stride 4: the sweep runs once per
+        // round, so 8 nowait ticks rebuild exactly twice.
+        let mut cfg = PlatformConfig::default();
+        cfg.host_memory = 512 << 20;
+        cfg.shards = 4;
+        cfg.cost = CostModel::free();
+        cfg.policy.predictive_wakeup = false;
+        cfg.policy.tick_stride = 4;
+        cfg.policy.pressure_leases = true;
+        cfg.policy.memory_budget = 256 << 20;
+        cfg.swap_dir = std::env::temp_dir()
+            .join(format!("qh-stride-frame-test-{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let p = Platform::new(cfg.clone(), Arc::new(NoopRunner)).unwrap();
+        for i in 0..8u64 {
+            p.policy_tick_nowait(i).unwrap();
+        }
+        assert_eq!(
+            p.budget_rebuilds(),
+            2,
+            "stride 4 must reconcile once per 4-tick round"
+        );
+
+        // Stride 1 reconciles every call, leases or not.
+        cfg.policy.tick_stride = 1;
+        let p2 = Platform::new(cfg, Arc::new(NoopRunner)).unwrap();
+        for i in 0..3u64 {
+            p2.policy_tick_nowait(i).unwrap();
+        }
+        assert_eq!(p2.budget_rebuilds(), 3);
     }
 
     #[test]

@@ -63,12 +63,15 @@ use super::metrics::Metrics;
 use super::policy::WakeLeads;
 use super::pool::Reservation;
 use crate::container::sandbox::Sandbox;
+use crate::obs::EventKind;
 use crate::simtime::Clock;
+use crate::util::fnv1a;
 use anyhow::{Context as _, Result};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// Which expensive half a job runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -89,6 +92,16 @@ impl JobKind {
             JobKind::Teardown => "evicting",
         }
     }
+
+    /// Stable wire code carried in flight-recorder job events' `arg`
+    /// (what keys a `job_start`/`job_done` pair to one trace span).
+    pub fn code(self) -> u64 {
+        match self {
+            JobKind::Deflate => 0,
+            JobKind::Inflate => 1,
+            JobKind::Teardown => 2,
+        }
+    }
 }
 
 /// A lifecycle finish handed to the pipeline; the reservation rides along
@@ -104,6 +117,15 @@ pub struct PipelineJob {
     /// Estimated deferred I/O (the live-byte charge at submission) — what
     /// the shed policy sizes queued deflations by.
     pub est_bytes: u64,
+    /// The sandbox's instance id, carried so job trace events don't have
+    /// to take the sandbox mutex just to label themselves.
+    pub instance_id: u64,
+    /// Virtual time of the submitting tick — the job clock's anchor, so
+    /// `job_start`/`job_done` events stamp absolute virtual nanoseconds.
+    pub submitted_vns: u64,
+    /// Wall-clock submission instant — the wake-path queue-wait sample
+    /// ([`Metrics::record_queue_wait`]).
+    pub enqueued_wall: Instant,
 }
 
 /// Test-only hook invoked by a worker before it starts a job — lets a
@@ -214,6 +236,15 @@ impl InstancePipeline {
     /// callers must route through [`Self::run_sync`] instead.
     pub fn submit(&self, job: PipelineJob) {
         assert!(self.async_mode, "submit on a synchronous pipeline");
+        if self.shared.metrics.recorder.is_enabled() {
+            self.shared.metrics.recorder.emit_workload(
+                EventKind::JobEnqueue,
+                job.instance_id,
+                fnv1a(&job.workload),
+                job.kind.code(),
+                job.submitted_vns,
+            );
+        }
         let mut st = self.shared.state.lock().unwrap();
         st.pending += 1;
         self.shared
@@ -241,23 +272,8 @@ impl InstancePipeline {
     /// Synchronous fallback (`pipeline_workers = 0`, or a shed job): run
     /// the finish inline on the caller's thread. Same accounting, no queue.
     pub fn run_sync(&self, job: PipelineJob) -> Result<()> {
-        let PipelineJob {
-            workload,
-            sandbox,
-            reservation,
-            kind,
-            live_gauge,
-            ..
-        } = job;
-        let result = run_one(
-            &self.shared.metrics,
-            &self.shared.wake_leads,
-            kind,
-            &workload,
-            &sandbox,
-            &live_gauge,
-        );
-        drop(reservation);
+        let result = run_one(&self.shared.metrics, &self.shared.wake_leads, &job);
+        drop(job.reservation);
         result
     }
 
@@ -374,26 +390,11 @@ fn run_job(shared: &Shared, job: PipelineJob) {
 /// Error stashing shares the completion critical section, so a drainer
 /// can never observe the completion without the error.
 fn finish_job(shared: &Shared, job: PipelineJob, stash: bool) -> Result<()> {
-    let PipelineJob {
-        workload,
-        sandbox,
-        reservation,
-        kind,
-        live_gauge,
-        ..
-    } = job;
-    let result = run_one(
-        &shared.metrics,
-        &shared.wake_leads,
-        kind,
-        &workload,
-        &sandbox,
-        &live_gauge,
-    );
+    let result = run_one(&shared.metrics, &shared.wake_leads, &job);
     // Release the instance before announcing completion: a drainer must
     // observe the transitioned instance as routable the moment pending
     // drops.
-    drop(reservation);
+    drop(job.reservation);
     let mut st = shared.state.lock().unwrap();
     st.pending -= 1;
     st.completed += 1;
@@ -416,19 +417,34 @@ fn finish_job(shared: &Shared, job: PipelineJob, stash: bool) -> Result<()> {
 
 /// Run one finish and fold its counters into the metrics. Used by the
 /// async workers, the inline shed path and the sync fallback, so all
-/// modes are observationally identical.
-fn run_one(
-    metrics: &Metrics,
-    wake_leads: &WakeLeads,
-    kind: JobKind,
-    workload: &str,
-    sandbox: &Arc<Mutex<Sandbox>>,
-    live_gauge: &AtomicU64,
-) -> Result<()> {
+/// modes are observationally identical. The caller keeps ownership of
+/// the job (it still owes the reservation drop).
+fn run_one(metrics: &Metrics, wake_leads: &WakeLeads, job: &PipelineJob) -> Result<()> {
     // Lifecycle I/O's charged time belongs to no request — it runs on the
-    // platform's dime, like kernel writeback.
+    // platform's dime, like kernel writeback. Anchoring at the submitting
+    // tick's virtual time makes the job's trace events stamp absolute
+    // virtual nanoseconds (worker-count independent).
     let clock = Clock::new();
-    let mut sb = sandbox.lock().unwrap();
+    clock.set_base(job.submitted_vns);
+    let kind = job.kind;
+    let workload = job.workload.as_str();
+    let whash = fnv1a(workload);
+    let rec = &metrics.recorder;
+    let mut sb = job.sandbox.lock().unwrap();
+    if rec.is_enabled() {
+        rec.emit_workload(
+            EventKind::JobStart,
+            job.instance_id,
+            whash,
+            kind.code(),
+            clock.stamp_ns(),
+        );
+    }
+    if kind == JobKind::Inflate {
+        // How long the wake sat behind the queue (wall domain — a real
+        // scheduling delay, not a modeled cost).
+        metrics.record_queue_wait(job.enqueued_wall.elapsed().as_nanos() as u64);
+    }
     let fail = || format!("{} an instance of `{workload}`", kind.verb());
     match kind {
         JobKind::Deflate => {
@@ -456,6 +472,7 @@ fn run_one(
             // at 0 would collapse every later lead to the clamp floor.
             if prefetched > 0 {
                 wake_leads.observe(workload, clock.charged_ns());
+                metrics.record_inflate(clock.charged_ns());
             }
         }
         JobKind::Teardown => {
@@ -463,7 +480,16 @@ fn run_one(
             metrics.counters.evictions.fetch_add(1, Ordering::Relaxed);
         }
     }
-    live_gauge.store(sb.live_bytes(), Ordering::Relaxed);
+    job.live_gauge.store(sb.live_bytes(), Ordering::Relaxed);
+    if rec.is_enabled() {
+        rec.emit_workload(
+            EventKind::JobDone,
+            job.instance_id,
+            whash,
+            kind.code(),
+            clock.stamp_ns(),
+        );
+    }
     Ok(())
 }
 
@@ -505,6 +531,9 @@ mod tests {
             kind: JobKind::Deflate,
             live_gauge: inst.live_gauge.clone(),
             est_bytes: inst.live_bytes(),
+            instance_id: idx as u64,
+            submitted_vns: 0,
+            enqueued_wall: Instant::now(),
         }
     }
 
@@ -626,6 +655,9 @@ mod tests {
                 kind: JobKind::Inflate,
                 live_gauge: inst.live_gauge.clone(),
                 est_bytes: inst.live_bytes(),
+                instance_id: 0,
+                submitted_vns: 0,
+                enqueued_wall: Instant::now(),
             });
         };
 
@@ -721,6 +753,9 @@ mod tests {
                 kind: JobKind::Inflate,
                 live_gauge: inst.live_gauge.clone(),
                 est_bytes: inst.live_bytes(),
+                instance_id: 3,
+                submitted_vns: 0,
+                enqueued_wall: Instant::now(),
             });
         }
         assert_eq!(pipeline.pending(), 4);

@@ -79,6 +79,18 @@ pub enum Reason {
     AnticipatedArrival,
 }
 
+impl Verb {
+    /// Stable wire code for flight-recorder `Decision` events
+    /// (see [`crate::obs::pack_decision`]).
+    pub fn code(self) -> u8 {
+        match self {
+            Verb::Hibernate => 0,
+            Verb::Wake => 1,
+            Verb::Evict => 2,
+        }
+    }
+}
+
 impl Reason {
     pub fn label(self) -> &'static str {
         match self {
@@ -87,6 +99,18 @@ impl Reason {
             Reason::TenantPressure => "tenant-pressure",
             Reason::StaleHibernate => "stale-hibernate",
             Reason::AnticipatedArrival => "anticipated-arrival",
+        }
+    }
+
+    /// Stable wire code for flight-recorder `Decision` events
+    /// (see [`crate::obs::pack_decision`]).
+    pub fn code(self) -> u8 {
+        match self {
+            Reason::IdleTimeout => 0,
+            Reason::HostPressure => 1,
+            Reason::TenantPressure => 2,
+            Reason::StaleHibernate => 3,
+            Reason::AnticipatedArrival => 4,
         }
     }
 }

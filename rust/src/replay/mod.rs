@@ -385,6 +385,12 @@ pub fn run_scenario(
         cfg.policy.pipeline_queue_cap = 0;
     }
     let platform = Platform::new(cfg, std::sync::Arc::new(NoopRunner))?;
+    // Replay stamps flight-recorder events with the virtual clock: every
+    // emission passes an absolute virtual-nanosecond hint, so an exported
+    // trace is identical at any `--workers` count once the export's
+    // canonical per-ring sort runs (wall timestamps would be a wall-clock
+    // race). See docs/observability.md.
+    platform.metrics.recorder.set_virtual();
     for spec in &run.specs {
         platform.deploy(spec.clone())?;
     }

@@ -7,13 +7,19 @@ use super::ReplayOutcome;
 use crate::platform::metrics::ServedFrom;
 use crate::platform::Platform;
 use crate::util::json::{obj, Json};
-use crate::util::stats::Summary;
+use crate::util::stats::{Histogram, Summary};
 use crate::util::{fnv1a, human_bytes, human_ns};
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 /// One function's (or the aggregate's) replay summary.
+///
+/// Percentiles (p50/p99/p999) come from the exact-merge [`Histogram`],
+/// so the aggregate row equals what a bucket-wise merge of the
+/// per-function histograms would report — no sample-list lossiness.
+/// Mean and max stay exact via [`Summary`]. All inputs are virtual-time
+/// latencies, so every field is deterministic across worker counts.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct FunctionRow {
     pub name: String,
@@ -21,6 +27,7 @@ pub struct FunctionRow {
     pub mean_ns: u64,
     pub p50_ns: u64,
     pub p99_ns: u64,
+    pub p999_ns: u64,
     pub max_ns: u64,
     pub cold: u64,
     pub warm: u64,
@@ -29,13 +36,14 @@ pub struct FunctionRow {
 }
 
 impl FunctionRow {
-    fn from_summary(name: &str, s: &mut Summary, paths: &[u64; 4]) -> Self {
+    fn from_stats(name: &str, s: &Summary, h: &Histogram, paths: &[u64; 4]) -> Self {
         Self {
             name: name.to_string(),
             n: s.len() as u64,
             mean_ns: s.mean() as u64,
-            p50_ns: s.p50(),
-            p99_ns: s.p99(),
+            p50_ns: h.p50(),
+            p99_ns: h.p99(),
+            p999_ns: h.p999(),
             max_ns: s.max(),
             cold: paths[0],
             warm: paths[1],
@@ -47,12 +55,13 @@ impl FunctionRow {
     fn write_canonical(&self, out: &mut String) {
         let _ = write!(
             out,
-            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{};",
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{};",
             self.name,
             self.n,
             self.mean_ns,
             self.p50_ns,
             self.p99_ns,
+            self.p999_ns,
             self.max_ns,
             self.cold,
             self.warm,
@@ -68,6 +77,7 @@ impl FunctionRow {
             ("mean_ns", Json::Num(self.mean_ns as f64)),
             ("p50_ns", Json::Num(self.p50_ns as f64)),
             ("p99_ns", Json::Num(self.p99_ns as f64)),
+            ("p999_ns", Json::Num(self.p999_ns as f64)),
             ("max_ns", Json::Num(self.max_ns as f64)),
             ("cold", Json::Num(self.cold as f64)),
             ("warm", Json::Num(self.warm as f64)),
@@ -120,34 +130,41 @@ impl ReplayReport {
         platform: &Platform,
         outcome: &ReplayOutcome,
     ) -> Self {
-        let mut per_fn: BTreeMap<String, (Summary, [u64; 4])> = BTreeMap::new();
+        let mut per_fn: BTreeMap<String, (Summary, Histogram, [u64; 4])> = BTreeMap::new();
         let mut all = Summary::new();
+        let mut all_hist = Histogram::new();
         let mut all_paths = [0u64; 4];
         for r in &outcome.reports {
             // get_mut, not entry(): entry() would clone the workload String
             // on every one of the ~100k reports when ~99% of lookups hit an
             // existing key; one lookup on the hit path, clone only on miss.
             match per_fn.get_mut(&r.workload) {
-                Some((summary, paths)) => {
+                Some((summary, hist, paths)) => {
                     summary.add(r.latency_ns);
+                    hist.record(r.latency_ns);
                     paths[path_slot(r.served_from)] += 1;
                 }
                 None => {
                     let mut summary = Summary::new();
                     summary.add(r.latency_ns);
+                    let mut hist = Histogram::new();
+                    hist.record(r.latency_ns);
                     let mut paths = [0u64; 4];
                     paths[path_slot(r.served_from)] += 1;
-                    per_fn.insert(r.workload.clone(), (summary, paths));
+                    per_fn.insert(r.workload.clone(), (summary, hist, paths));
                 }
             }
             all.add(r.latency_ns);
+            all_hist.record(r.latency_ns);
             all_paths[path_slot(r.served_from)] += 1;
         }
         let functions: Vec<FunctionRow> = per_fn
-            .iter_mut()
-            .map(|(name, (summary, paths))| FunctionRow::from_summary(name, summary, paths))
+            .iter()
+            .map(|(name, (summary, hist, paths))| {
+                FunctionRow::from_stats(name, summary, hist, paths)
+            })
             .collect();
-        let aggregate = FunctionRow::from_summary("__all__", &mut all, &all_paths);
+        let aggregate = FunctionRow::from_stats("__all__", &all, &all_hist, &all_paths);
 
         let mut final_states = Vec::new();
         for (workload, _wake_lead, rows) in platform.pool_snapshot() {
@@ -320,12 +337,13 @@ impl ReplayReport {
         let row = |out: &mut String, f: &FunctionRow| {
             let _ = writeln!(
                 out,
-                "{:<28} n={:<7} mean={:>10} p50={:>10} p99={:>10} cold={} warm={} hib={} woken={}",
+                "{:<28} n={:<7} mean={:>10} p50={:>10} p99={:>10} p999={:>10} cold={} warm={} hib={} woken={}",
                 f.name,
                 f.n,
                 human_ns(f.mean_ns),
                 human_ns(f.p50_ns),
                 human_ns(f.p99_ns),
+                human_ns(f.p999_ns),
                 f.cold,
                 f.warm,
                 f.hibernate,
@@ -388,6 +406,7 @@ mod tests {
                 anon_faults: 0,
                 file_miss_bytes: 0,
                 reap_prefetched: 0,
+                admission_ns: 0,
             },
         }
     }
@@ -447,6 +466,30 @@ mod tests {
         let changed = fake_outcome(vec![fake_report("a", ServedFrom::Warm, 101)]);
         let r3 = ReplayReport::build("test", 7, &p, &changed);
         assert_ne!(r1.fingerprint(), r3.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_excludes_recorder_and_wake_histograms() {
+        let p = rig_platform();
+        let outcome = fake_outcome(vec![fake_report("a", ServedFrom::Warm, 100)]);
+        let r1 = ReplayReport::build("test", 7, &p, &outcome);
+        // Pollute every fingerprint-excluded observability surface: the
+        // flight recorder and the wake-phase histograms. A rebuilt report
+        // must hash identically — the exclusion contract of
+        // docs/observability.md.
+        assert!(p.metrics.recorder.is_enabled());
+        p.metrics
+            .recorder
+            .emit_workload(crate::obs::EventKind::WakeBegin, 1, 42, 0, 5);
+        p.metrics.record_queue_wait(1_000);
+        p.metrics.record_inflate(2_000);
+        p.metrics.record_admission(3_000);
+        let r2 = ReplayReport::build("test", 7, &p, &outcome);
+        assert_eq!(
+            r1.fingerprint(),
+            r2.fingerprint(),
+            "recorder/histogram state must never enter the replay fingerprint"
+        );
     }
 
     #[test]

@@ -15,11 +15,31 @@ use std::time::Instant;
 pub struct Clock {
     charged_ns: AtomicU64,
     measured_ns: AtomicU64,
+    /// Virtual-time anchor for trace stamps: the position on the global
+    /// virtual timeline at which this per-request/per-job clock started
+    /// (see [`Self::stamp_ns`]). Zero unless a caller anchors it.
+    base_ns: AtomicU64,
 }
 
 impl Clock {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Anchor this clock at `ns` on the global virtual timeline, so
+    /// [`Self::stamp_ns`] yields absolute virtual positions. The platform
+    /// sets this to the request/tick virtual time before handing the clock
+    /// down; direct callers (tests, benches) can leave it at 0.
+    pub fn set_base(&self, ns: u64) {
+        self.base_ns.store(ns, Ordering::Relaxed);
+    }
+
+    /// Current absolute virtual position: anchor + charged model time.
+    /// This is the timestamp hint flight-recorder emissions pass to
+    /// [`crate::obs::Recorder::emit`] — used verbatim by the virtual trace
+    /// clock, ignored by the wall clock.
+    pub fn stamp_ns(&self) -> u64 {
+        self.base_ns.load(Ordering::Relaxed) + self.charged_ns()
     }
 
     /// Charge modeled time (device/OS cost).

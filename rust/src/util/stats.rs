@@ -1,8 +1,12 @@
 //! Latency/size statistics: summaries and fixed-bucket histograms.
 //!
-//! This powers the in-repo bench harness (the registry has no criterion):
-//! each bench collects samples, and `Summary` prints mean/p50/p95/p99 rows
-//! in the same grouping the paper's figures use.
+//! This powers the in-repo bench harness (the registry has no criterion)
+//! and the platform's latency metrics: each bench collects samples, and
+//! `Summary` prints mean/p50/p95/p99 rows in the same grouping the paper's
+//! figures use, while [`Histogram`] gives HDR-style log-bucketed
+//! distributions whose merge is *exact* (merging two histograms is
+//! bucket-wise addition over fixed edges, so striped or sharded recording
+//! loses nothing relative to recording into one histogram).
 
 /// Online summary over `u64` samples (typically nanoseconds or bytes).
 #[derive(Debug, Clone, Default)]
@@ -112,12 +116,28 @@ impl Summary {
     }
 }
 
-/// Log-scaled histogram (powers of two), cheap enough for the hot path.
+/// Number of fixed buckets in a [`Histogram`]: two per octave over the full
+/// `u64` range, plus dedicated buckets for 0 and 1.
+pub const HIST_BUCKETS: usize = 128;
+
+/// HDR-style log-bucketed histogram with **fixed bucket edges** (two
+/// sub-buckets per octave: `[2^o, 1.5·2^o)` and `[1.5·2^o, 2^(o+1))`),
+/// giving ≤ 50 % relative bucket width at every magnitude.
+///
+/// Because the edges are fixed and independent of the data, merging two
+/// histograms (bucket-wise add) is *exactly* equivalent to having recorded
+/// every sample into one histogram — the property the striped metrics and
+/// the sharded replay reports rely on. Percentiles are resolved by
+/// nearest-rank over the cumulative bucket counts and reported as the
+/// bucket's inclusive upper edge, clamped to the exact observed
+/// `[min, max]` so p0/p100 are always exact.
 #[derive(Debug, Clone)]
 pub struct Histogram {
-    buckets: Vec<u64>, // bucket i counts values in [2^i, 2^(i+1))
+    buckets: [u64; HIST_BUCKETS],
     count: u64,
     sum: u64,
+    min: u64,
+    max: u64,
 }
 
 impl Default for Histogram {
@@ -126,25 +146,75 @@ impl Default for Histogram {
     }
 }
 
+/// Bucket index for a value: 0 and 1 get their own buckets; otherwise
+/// `2·octave + sub` where `sub` is the value's bit below the leading one.
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v < 2 {
+        return v as usize;
+    }
+    let o = 63 - v.leading_zeros() as usize;
+    2 * o + ((v >> (o - 1)) & 1) as usize
+}
+
+/// Inclusive lower edge of bucket `i` (the smallest value it can hold).
+#[inline]
+fn bucket_low(i: usize) -> u64 {
+    if i < 2 {
+        return i as u64;
+    }
+    let (o, sub) = (i / 2, (i % 2) as u64);
+    (1u64 << o) + sub * (1u64 << (o - 1))
+}
+
+/// Inclusive upper edge of bucket `i` (the largest value it can hold).
+#[inline]
+fn bucket_high(i: usize) -> u64 {
+    if i + 1 >= HIST_BUCKETS {
+        u64::MAX
+    } else {
+        bucket_low(i + 1) - 1
+    }
+}
+
 impl Histogram {
     pub fn new() -> Self {
         Self {
-            buckets: vec![0; 64],
+            buckets: [0; HIST_BUCKETS],
             count: 0,
             sum: 0,
+            min: u64::MAX,
+            max: 0,
         }
     }
 
     #[inline]
     pub fn record(&mut self, v: u64) {
-        let idx = 64 - v.max(1).leading_zeros() as usize - 1;
-        self.buckets[idx] += 1;
+        self.buckets[bucket_index(v)] += 1;
         self.count += 1;
         self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
     }
 
     pub fn count(&self) -> u64 {
         self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
     }
 
     pub fn mean(&self) -> f64 {
@@ -155,28 +225,56 @@ impl Histogram {
         }
     }
 
-    /// Approximate quantile from bucket boundaries (upper bound of bucket).
-    pub fn quantile(&self, q: f64) -> u64 {
-        if self.count == 0 {
-            return 0;
-        }
-        let target = (q * self.count as f64).ceil() as u64;
-        let mut seen = 0;
-        for (i, &c) in self.buckets.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                return 1u64 << (i + 1);
-            }
-        }
-        u64::MAX
-    }
-
+    /// Exact merge: bucket-wise addition over the shared fixed edges.
     pub fn merge(&mut self, other: &Histogram) {
         for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
             *a += b;
         }
         self.count += other.count;
         self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Percentile via nearest-rank over the cumulative bucket counts.
+    /// `q` in `[0,100]`, mirroring [`Summary::percentile`]. The result is
+    /// the resolved bucket's inclusive upper edge clamped to the observed
+    /// `[min, max]`.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q / 100.0) * (self.count as f64 - 1.0)).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if c > 0 && seen > rank {
+                return bucket_high(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(99.0)
+    }
+
+    pub fn p999(&self) -> u64 {
+        self.percentile(99.9)
+    }
+
+    /// Non-empty buckets as `(inclusive low edge, count)`, low to high —
+    /// the dump the text/JSON exporters print.
+    pub fn nonzero_buckets(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (bucket_low(i), c))
     }
 }
 
@@ -214,24 +312,80 @@ mod tests {
     }
 
     #[test]
-    fn histogram_quantiles() {
+    fn bucket_edges_partition_the_range() {
+        // Every value maps to exactly the bucket whose [low, high] holds it.
+        for v in [0u64, 1, 2, 3, 4, 5, 6, 7, 8, 12, 100, 1000, 1 << 20, u64::MAX] {
+            let i = bucket_index(v);
+            assert!(bucket_low(i) <= v && v <= bucket_high(i), "v={v} bucket={i}");
+        }
+        // Edges are contiguous: low(i+1) == high(i) + 1.
+        for i in 0..HIST_BUCKETS - 1 {
+            assert_eq!(bucket_low(i + 1), bucket_high(i) + 1, "gap at bucket {i}");
+        }
+    }
+
+    #[test]
+    fn histogram_percentiles() {
         let mut h = Histogram::new();
         for v in 1..=1000u64 {
             h.record(v);
         }
         assert_eq!(h.count(), 1000);
-        // p50 of 1..1000 is ~500 → bucket upper bound 512
-        assert_eq!(h.quantile(0.5), 512);
-        assert!(h.quantile(0.99) >= 512);
+        // Rank 500 (value 501) lands in bucket [384, 512) → upper edge 511.
+        assert_eq!(h.p50(), 511);
+        assert!(h.p99() >= h.p50());
+        assert!(h.p999() >= h.p99());
+        // Extremes are exact thanks to the min/max clamp.
+        assert_eq!(h.percentile(0.0), 1);
+        assert_eq!(h.percentile(100.0), 1000);
+        assert!((h.mean() - 500.5).abs() < 1e-9);
     }
 
     #[test]
-    fn histogram_merge() {
+    fn histogram_single_sample_is_exact() {
+        let mut h = Histogram::new();
+        h.record(12345);
+        assert_eq!(h.p50(), 12345);
+        assert_eq!(h.p999(), 12345);
+        assert_eq!(h.min(), 12345);
+        assert_eq!(h.max(), 12345);
+    }
+
+    #[test]
+    fn histogram_merge_is_exact() {
+        // Merging two stripes is bit-for-bit the same histogram as
+        // recording every sample into one — the exact-merge contract.
+        let mut all = Histogram::new();
         let mut a = Histogram::new();
         let mut b = Histogram::new();
-        a.record(10);
-        b.record(1000);
+        for v in 0..2000u64 {
+            let x = (v * 2654435761) % 100_000; // deterministic spread
+            all.record(x);
+            if v % 2 == 0 {
+                a.record(x);
+            } else {
+                b.record(x);
+            }
+        }
         a.merge(&b);
-        assert_eq!(a.count(), 2);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.min(), all.min());
+        assert_eq!(a.max(), all.max());
+        for q in [0.0, 10.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+            assert_eq!(a.percentile(q), all.percentile(q), "q={q}");
+        }
+        let av: Vec<_> = a.nonzero_buckets().collect();
+        let allv: Vec<_> = all.nonzero_buckets().collect();
+        assert_eq!(av, allv);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.p999(), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.nonzero_buckets().count(), 0);
     }
 }

@@ -269,6 +269,25 @@ fn tenant_fair_caps_the_hot_tenant_and_spares_the_rest() {
     }
 }
 
+#[test]
+fn trace_export_is_byte_identical_across_workers() {
+    // The flight recorder rides the same determinism contract as the
+    // report: under the replay's virtual clock every span event carries a
+    // virtual timestamp, the exporter sorts each ring into its canonical
+    // order, and so the rendered Chrome trace JSON must be byte-identical
+    // between 1 and 4 workers (as long as no ring wrapped — wraparound
+    // keeps a scheduling-dependent suffix and voids the guarantee).
+    let run = scenario::build("azure-heavy-tail", 96, 20_000_000_000, 0x0B5E).unwrap();
+    let (_r1, p1) = replay::run_scenario(&det_cfg("tr1"), &run, 1).unwrap();
+    let (_r4, p4) = replay::run_scenario(&det_cfg("tr4"), &run, 4).unwrap();
+    assert_eq!(p1.metrics.recorder.dropped(), 0, "ring wrapped; grow obs.ring_events");
+    assert_eq!(p4.metrics.recorder.dropped(), 0, "ring wrapped; grow obs.ring_events");
+    let t1 = quark_hibernate::obs::chrome_trace::render(&p1.metrics.recorder);
+    let t4 = quark_hibernate::obs::chrome_trace::render(&p4.metrics.recorder);
+    assert!(t1.len() > 1_000, "trace must contain real events");
+    assert_eq!(t1, t4, "chrome trace diverged between 1 and 4 workers");
+}
+
 /// `det_cfg` with the batched I/O backend: same virtual-time semantics,
 /// real I/O routed through the worker pool.
 fn batched_cfg(tag: &str) -> PlatformConfig {
