@@ -218,6 +218,45 @@ impl Default for ObsConfig {
     }
 }
 
+/// Durability knobs (`[durability]` section) — see `docs/durability.md`
+/// for the checksum / manifest / retry / degrade-ladder contract these
+/// feed.
+#[derive(Debug, Clone)]
+pub struct DurabilityConfig {
+    /// Transient slot-file I/O failures (EINTR/EAGAIN/ETIMEDOUT class)
+    /// are retried up to this many times with exponential backoff before
+    /// the image is invalidated. `0` = fail on the first error.
+    pub io_retries: u64,
+    /// Backoff before retry attempt `n` (1-based) is
+    /// `backoff_base_us << (n - 1)` microseconds, charged to the
+    /// *virtual* clock so replay fingerprints stay worker-count
+    /// independent.
+    pub backoff_base_us: u64,
+    /// Verify the recorded per-page checksum on every slot read. A
+    /// mismatch is a typed integrity error — the page is never served.
+    pub verify_checksums: bool,
+    /// Scan the swap directory for image manifests at platform
+    /// construction and re-register their instances as Hibernate, so a
+    /// restarted host wakes instead of cold-starting.
+    pub adopt_on_start: bool,
+    /// After a REAP swap-out, compact the REAP file when live slots have
+    /// fallen below this fraction of its high-water length (`0` =
+    /// never compact).
+    pub compact_min_live_frac: f64,
+}
+
+impl Default for DurabilityConfig {
+    fn default() -> Self {
+        Self {
+            io_retries: 2,
+            backoff_base_us: 50,
+            verify_checksums: true,
+            adopt_on_start: true,
+            compact_min_live_frac: 0.5,
+        }
+    }
+}
+
 /// Memory-sharing policy (§3.5): the paper shares the Quark runtime binary
 /// across sandboxes and keeps language-runtime binaries private per tenant.
 #[derive(Debug, Clone)]
@@ -266,6 +305,7 @@ pub struct PlatformConfig {
     pub replay: ReplayConfig,
     pub io: IoConfig,
     pub obs: ObsConfig,
+    pub durability: DurabilityConfig,
     pub cost: CostModel,
 }
 
@@ -287,6 +327,7 @@ impl Default for PlatformConfig {
             replay: ReplayConfig::default(),
             io: IoConfig::default(),
             obs: ObsConfig::default(),
+            durability: DurabilityConfig::default(),
             cost: CostModel::paper(),
         }
     }
@@ -474,6 +515,22 @@ impl PlatformConfig {
         self.obs.ring_events = self.obs.ring_events.max(1);
         get_bool(t, "obs", "enabled", &mut self.obs.enabled)?;
 
+        get_u64(t, "durability", "io_retries", &mut self.durability.io_retries)?;
+        get_u64(t, "durability", "backoff_base_us", &mut self.durability.backoff_base_us)?;
+        get_bool(
+            t,
+            "durability",
+            "verify_checksums",
+            &mut self.durability.verify_checksums,
+        )?;
+        get_bool(t, "durability", "adopt_on_start", &mut self.durability.adopt_on_start)?;
+        get_f64(
+            t,
+            "durability",
+            "compact_min_live_frac",
+            &mut self.durability.compact_min_live_frac,
+        )?;
+
         get_bool(t, "sharing", "share_runtime_binary", &mut self.sharing.share_runtime_binary)?;
         get_bool(
             t,
@@ -497,6 +554,9 @@ impl PlatformConfig {
         }
         if !matches!(self.io.backend.as_str(), "sync" | "batched") {
             bail!("io.backend must be \"sync\" or \"batched\", got `{}`", self.io.backend);
+        }
+        if !(0.0..=1.0).contains(&self.durability.compact_min_live_frac) {
+            bail!("durability.compact_min_live_frac must be in [0, 1]");
         }
         Ok(())
     }
@@ -684,6 +744,40 @@ mod tests {
         // A zero ring cannot hold the event being emitted.
         let c = PlatformConfig::from_str("[obs]\nring_events = 0\n").unwrap();
         assert_eq!(c.obs.ring_events, 1);
+    }
+
+    #[test]
+    fn durability_section_parses_with_defaults() {
+        let c = PlatformConfig::default();
+        assert_eq!(c.durability.io_retries, 2);
+        assert_eq!(c.durability.backoff_base_us, 50);
+        assert!(c.durability.verify_checksums);
+        assert!(c.durability.adopt_on_start);
+        assert_eq!(c.durability.compact_min_live_frac, 0.5);
+
+        let c = PlatformConfig::from_str(
+            r#"
+            [durability]
+            io_retries = 5
+            backoff_base_us = 100
+            verify_checksums = false
+            adopt_on_start = false
+            compact_min_live_frac = 0.25
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.durability.io_retries, 5);
+        assert_eq!(c.durability.backoff_base_us, 100);
+        assert!(!c.durability.verify_checksums);
+        assert!(!c.durability.adopt_on_start);
+        assert_eq!(c.durability.compact_min_live_frac, 0.25);
+    }
+
+    #[test]
+    fn rejects_bad_compact_fraction() {
+        assert!(
+            PlatformConfig::from_str("[durability]\ncompact_min_live_frac = 1.5\n").is_err()
+        );
     }
 
     #[test]

@@ -19,7 +19,7 @@ use super::hostenv::{HostEnv, HostEnvCost, HostEnvRegistry};
 use super::signal::{ControlSignal, SignalQueue};
 use super::state::{ContainerState, Event};
 use super::PayloadRunner;
-use crate::config::SharingConfig;
+use crate::config::{DurabilityConfig, SharingConfig};
 use crate::mem::bitmap_alloc::BitmapPageAllocator;
 use crate::mem::buddy::BuddyAllocator;
 use crate::mem::host::HostMemory;
@@ -30,13 +30,17 @@ use crate::mem::vma::VmaKind;
 use crate::mem::{Gpa, Gva};
 use crate::obs::{ARG_FLAG, EventKind, Recorder};
 use crate::platform::io_backend::{IoBackend, SyncBackend};
+use crate::platform::metrics::DurabilityStats;
 use crate::simtime::{Clock, CostModel};
-use crate::swap::file::SwapFileSet;
-use crate::swap::{ReapRecorder, SwapMgr};
+use crate::swap::file::{SwapFileSet, SwapSlot};
+use crate::swap::manifest::{ImageManifest, ManifestPage};
+use crate::swap::{DurabilityCtx, ReapRecorder, SwapMgr};
 use crate::workloads::WorkloadSpec;
 use crate::PAGE_SIZE;
 use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::path::PathBuf;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 /// The Quark runtime binary every sandbox maps (qkernel + qvisor image).
@@ -70,6 +74,14 @@ pub struct SandboxServices {
     /// Node-wide I/O backend every sandbox's swap files submit their batch
     /// slot runs through (`[io]` config: sync or batched).
     pub io: Arc<dyn IoBackend>,
+    /// Durability policy every sandbox's swap manager runs under
+    /// (`[durability]` config: checksum verification, retry budget,
+    /// compaction threshold).
+    pub durability: DurabilityConfig,
+    /// Node-wide durability counters (fingerprint-excluded, like
+    /// [`crate::platform::io_backend::IoStats`]): shared by every swap
+    /// manager's retry/verify paths and the platform's adoption scan.
+    pub durability_stats: Arc<DurabilityStats>,
     /// Flight recorder lifecycle seams emit into ([`crate::obs`]). Local
     /// rigs get a disabled recorder (emission is a no-op); the platform
     /// injects its own per-shard-ring recorder.
@@ -131,6 +143,8 @@ impl SandboxServices {
             reap_enabled: true,
             hostenv: HostEnvRegistry::new(),
             io,
+            durability: DurabilityConfig::default(),
+            durability_stats: Arc::new(DurabilityStats::default()),
             recorder: Recorder::disabled(),
         }))
     }
@@ -217,6 +231,10 @@ pub struct Sandbox {
     pub signals: SignalQueue,
     requests_served: u64,
     paused: bool,
+    /// Generation of the last image manifest this sandbox wrote (0 before
+    /// any, the adopted manifest's generation after a restart adoption) —
+    /// the monotone counter stale-manifest detection keys on.
+    manifest_generation: u64,
 }
 
 impl Sandbox {
@@ -227,6 +245,22 @@ impl Sandbox {
         spec: WorkloadSpec,
         svc: Arc<SandboxServices>,
         clock: &Clock,
+    ) -> Result<Sandbox> {
+        Self::cold_start_inner(id, spec, svc, clock, None)
+    }
+
+    /// [`Self::cold_start`] with an optionally pre-opened swap file set.
+    /// Adoption passes the `SwapFileSet` it re-opened from a persisted
+    /// manifest — creating one here would truncate the very image being
+    /// adopted, since a restarted host may hand a fresh instance the same
+    /// id the manifest's files are named by. Cold start performs no swap
+    /// I/O, so an adopted (non-empty) file pair is safe to carry through.
+    fn cold_start_inner(
+        id: u64,
+        spec: WorkloadSpec,
+        svc: Arc<SandboxServices>,
+        clock: &Clock,
+        adopted_files: Option<SwapFileSet>,
     ) -> Result<Sandbox> {
         spec.validate().map_err(|e| anyhow::anyhow!(e))?;
         let workload_hash = crate::util::fnv1a(&spec.name);
@@ -283,9 +317,22 @@ impl Sandbox {
             QUARK_BINARY_NAME,
         )?;
 
-        let files = SwapFileSet::create_with_backend(&svc.swap_dir, id, svc.io.clone())
-            .context("creating sandbox swap files")?;
-        let swap = SwapMgr::new(files, svc.cost.clone());
+        let files = match adopted_files {
+            Some(f) => f,
+            None => SwapFileSet::create_with_backend(&svc.swap_dir, id, svc.io.clone())
+                .context("creating sandbox swap files")?,
+        };
+        let swap = SwapMgr::with_durability(
+            files,
+            svc.cost.clone(),
+            DurabilityCtx {
+                policy: svc.durability.clone(),
+                stats: svc.durability_stats.clone(),
+                recorder: svc.recorder.clone(),
+                instance_id: id,
+                workload_hash,
+            },
+        );
         let reap = ReapRecorder::new(svc.reap_enabled);
 
         // QKernel's resident heap: committed now, never deflated.
@@ -319,6 +366,7 @@ impl Sandbox {
             signals: SignalQueue::new(),
             requests_served: 0,
             paused: false,
+            manifest_generation: 0,
         };
 
         // --- Init phase: touch runtime + binary + heap. ---
@@ -443,7 +491,12 @@ impl Sandbox {
             );
             return Ok(());
         }
-        if pte.swapped() {
+        // Bit-#9 swapped pages fault in from the swap file; so do
+        // *rescue* pages — present PTEs whose frames the last REAP
+        // swap-out discarded and whose image was then lost with the REAP
+        // file (degrade rung 2): their data survives only in the
+        // per-page swap mirrors.
+        if pte.swapped() || (pte.present() && self.swap.needs_rescue(pte.gpa())) {
             let Sandbox { swap, procs, svc, reap, .. } = self;
             swap.fault_swap_in(&mut procs[p].asp.pt, gva, &svc.host, clock)?;
             reap.on_fault_in();
@@ -549,18 +602,41 @@ impl Sandbox {
             // no longer waits out the whole batch read up front.
             self.paused = false;
             self.trace(EventKind::WakeBegin, 0, clock);
+            // The image is about to go stale (pages fault back, slots
+            // rewrite): the persisted manifest no longer describes it.
+            self.swap.files_mut().discard_manifest();
             let admission_ns =
                 self.svc.cost.request_dispatch_ns + self.svc.cost.thread_wake_ns;
             if self.swap.has_reap_image() {
                 let prefetch = Clock::new();
-                outcome.reap_prefetched =
-                    self.swap.reap_swap_in(&self.svc.host, &prefetch)?;
-                clock.charge(admission_ns.max(prefetch.charged_ns()));
-                self.trace(
-                    EventKind::WakeFinish,
-                    (outcome.reap_prefetched * PAGE_SIZE as u64) | ARG_FLAG,
-                    clock,
-                );
+                match self.swap.reap_swap_in(&self.svc.host, &prefetch) {
+                    Ok(n) => {
+                        outcome.reap_prefetched = n;
+                        clock.charge(admission_ns.max(prefetch.charged_ns()));
+                        self.trace(
+                            EventKind::WakeFinish,
+                            (n * PAGE_SIZE as u64) | ARG_FLAG,
+                            clock,
+                        );
+                    }
+                    Err(e) => {
+                        // Degrade rung 1: the batch prefetch failed
+                        // (retries exhausted or a slot failed its
+                        // checksum). Drop the REAP image and serve the
+                        // request anyway — every page it touches either
+                        // faults from its swap slot or rescues from its
+                        // swap mirror (rung 2). Charged time covers the
+                        // attempted read including its retry backoff.
+                        eprintln!(
+                            "sandbox {}: REAP prefetch failed ({e:#}); \
+                             degrading to per-page swap-in",
+                            self.id
+                        );
+                        self.swap.invalidate_reap_image(clock);
+                        clock.charge(admission_ns.max(prefetch.charged_ns()));
+                        self.trace(EventKind::WakeFinish, 0, clock);
+                    }
+                }
             } else {
                 clock.charge(admission_ns);
                 self.trace(EventKind::WakeFinish, 0, clock);
@@ -701,7 +777,111 @@ impl Sandbox {
             (report.pages_swapped_out * PAGE_SIZE as u64) | flag,
             clock,
         );
+
+        // Persist the image manifest (crash safety): best-effort — the
+        // in-memory hibernate is complete either way, a failed manifest
+        // write only costs the image its restart survival.
+        match self.write_manifest() {
+            Ok(generation) => {
+                self.svc
+                    .durability_stats
+                    .manifests_written
+                    .fetch_add(1, Ordering::Relaxed);
+                self.trace(EventKind::ManifestWrite, generation, clock);
+                self.swap.files_mut().set_persist(true);
+            }
+            Err(e) => eprintln!(
+                "sandbox {}: image manifest write failed ({e:#}); \
+                 the hibernated image will not survive a host restart",
+                self.id
+            ),
+        }
         Ok(report)
+    }
+
+    /// Write the sidecar manifest describing this hibernated image:
+    /// slot tables with per-page checksums, high-water file lengths, the
+    /// recorded REAP working set and recorder counters, and a bumped
+    /// generation — everything [`Self::adopt_hibernated`] needs to rebuild
+    /// the sandbox in a fresh process. Requires a completed
+    /// [`Self::hibernate_finish`] (every anon page has a verified swap
+    /// image; REAP pages additionally have REAP slots).
+    fn write_manifest(&mut self) -> Result<u64> {
+        // One flat gva → gpa map over every process's anon pages. The
+        // manifest can only describe a layout every process agrees on: a
+        // broken-COW divergence (same gva, different frames) has no flat
+        // representation, so it disables persistence rather than storing
+        // a wrong image.
+        let mut gva_to_gpa: BTreeMap<u64, u64> = BTreeMap::new();
+        for p in &self.procs {
+            let mut diverged = None;
+            p.asp.pt.for_each(|gva, pte| {
+                if (pte.present() || pte.swapped()) && !pte.is_file() {
+                    let prev = gva_to_gpa.insert(gva.0, pte.gpa().0);
+                    if let Some(old) = prev {
+                        if old != pte.gpa().0 {
+                            diverged = Some(gva.0);
+                        }
+                    }
+                }
+            });
+            if let Some(gva) = diverged {
+                bail!("COW-diverged gva {gva:#x} has no flat manifest representation");
+            }
+        }
+        let files = self.swap.files();
+        let mut swap_pages = Vec::with_capacity(gva_to_gpa.len());
+        let mut gpa_to_gva: BTreeMap<u64, u64> = BTreeMap::new();
+        for (&gva, &gpa) in &gva_to_gpa {
+            if let Some(old) = gpa_to_gva.insert(gpa, gva) {
+                // Same frame under two gvas (COW is same-gva-only): the
+                // flat tables would alias one slot to two pages.
+                bail!("frame {gpa:#x} aliased by gvas {old:#x} and {gva:#x}");
+            }
+            let slot = self
+                .swap
+                .swap_slot_of(Gpa(gpa))
+                .with_context(|| format!("anon gva {gva:#x} has no swap image"))?;
+            let sum = files
+                .swap_sum(slot)
+                .with_context(|| format!("swap slot {} has no checksum", slot.0))?;
+            swap_pages.push(ManifestPage { gva, offset: slot.0, sum });
+        }
+        // REAP rows come from the recorded set — not the slot table, which
+        // legitimately carries stale entries after a full swap-out cleared
+        // the set.
+        let mut reap_pages = Vec::with_capacity(self.swap.reap_set().len());
+        let mut reap_set = Vec::with_capacity(self.swap.reap_set().len());
+        for &gpa in self.swap.reap_set() {
+            let gva = *gpa_to_gva
+                .get(&gpa.0)
+                .with_context(|| format!("reap-set frame {:#x} not mapped", gpa.0))?;
+            let slot = self
+                .swap
+                .reap_slot_of(gpa)
+                .with_context(|| format!("reap-set gva {gva:#x} has no REAP slot"))?;
+            let sum = files
+                .reap_sum(slot)
+                .with_context(|| format!("REAP slot {} has no checksum", slot.0))?;
+            reap_pages.push(ManifestPage { gva, offset: slot.0, sum });
+            reap_set.push(gva);
+        }
+        let generation = self.manifest_generation + 1;
+        let manifest = ImageManifest {
+            generation,
+            file_id: files.file_id(),
+            workload: self.spec.name.clone(),
+            swap_len: files.swap_len(),
+            reap_len: files.reap_len(),
+            reap_recorded_pages: self.reap.recorded_pages,
+            reap_swapped_out_pages: self.reap.swapped_out_pages,
+            swap_pages,
+            reap_pages,
+            reap_set,
+        };
+        manifest.save(&files.manifest_path())?;
+        self.manifest_generation = generation;
+        Ok(generation)
     }
 
     /// Drop every file-backed PTE of every process, releasing cache
@@ -774,6 +954,8 @@ impl Sandbox {
         self.state = self.state.transition(Event::SigCont)?;
         clock.charge(self.svc.cost.thread_wake_ns);
         self.paused = false;
+        // Waking mutates the image; the persisted manifest is stale now.
+        self.swap.files_mut().discard_manifest();
         self.trace(EventKind::WakeBegin, 0, clock);
         Ok(())
     }
@@ -787,7 +969,21 @@ impl Sandbox {
             bail!("wake_finish without wake_begin (state {})", self.state);
         }
         let (pages, used_reap) = if self.swap.has_reap_image() {
-            (self.swap.reap_swap_in(&self.svc.host, clock)?, true)
+            match self.swap.reap_swap_in(&self.svc.host, clock) {
+                Ok(n) => (n, true),
+                Err(e) => {
+                    // Degrade rung 1 (anticipatory path): drop the REAP
+                    // image; the predicted request demand-faults its
+                    // working set from swap slots and mirrors instead.
+                    eprintln!(
+                        "sandbox {}: anticipatory REAP prefetch failed ({e:#}); \
+                         degrading to per-page swap-in",
+                        self.id
+                    );
+                    self.swap.invalidate_reap_image(clock);
+                    (0, false)
+                }
+            }
         } else {
             (0, false)
         };
@@ -800,6 +996,26 @@ impl Sandbox {
     /// (via SwapFileSet::drop when the sandbox is dropped).
     pub fn terminate(&mut self) -> Result<()> {
         self.state = self.state.transition(Event::Evict)?;
+        self.release_everything()
+    }
+
+    /// Force-retire an instance whose image failed integrity beyond
+    /// per-page rescue (degrade rung 3): unconditionally enter `Dead` —
+    /// the Fig. 3 machine has no arc out of a failed request, and a
+    /// corrupted instance is beyond protocol — and release every resource
+    /// so the platform can cold-start a replacement.
+    pub fn retire(&mut self) -> Result<()> {
+        if self.state == ContainerState::Dead {
+            return Ok(());
+        }
+        self.state = ContainerState::Dead;
+        self.release_everything()
+    }
+
+    fn release_everything(&mut self) -> Result<()> {
+        // A dead image must never be adopted: drop the manifest and
+        // revert the files to delete-on-drop.
+        self.swap.files_mut().discard_manifest();
         self.release_file_pages(false)?;
         self.svc.cache.trim_unmapped();
         // Release the QKernel heap.
@@ -828,6 +1044,122 @@ impl Sandbox {
             env.release()?;
         }
         Ok(())
+    }
+
+    /// Rebuild a hibernated sandbox from a persisted image manifest after
+    /// a host restart. `files` is the swap/REAP pair the caller re-opened
+    /// via [`SwapFileSet::adopt_with_backend`] against the same manifest.
+    ///
+    /// The reconstruction runs a throwaway-clock cold start to rebuild the
+    /// guest skeleton (address spaces, host objects, kernel heap — none of
+    /// which the manifest stores, all of which are deterministic functions
+    /// of the spec), then deflates it into the manifest's shape: app file
+    /// mappings dropped, recorded REAP pages left present-but-uncommitted,
+    /// every other imaged page marked bit-#9 swapped, frames discarded,
+    /// slot tables and the REAP protocol state restored. On return the
+    /// sandbox is `Hibernate` and wakes exactly like one this process
+    /// deflated itself. Any mismatch between manifest and skeleton is a
+    /// hard error — the caller discards the image and cold-starts.
+    pub fn adopt_hibernated(
+        id: u64,
+        spec: WorkloadSpec,
+        svc: Arc<SandboxServices>,
+        manifest: &ImageManifest,
+        files: SwapFileSet,
+    ) -> Result<Sandbox> {
+        if spec.name != manifest.workload {
+            bail!(
+                "manifest for workload {} adopted under deploy {}",
+                manifest.workload,
+                spec.name
+            );
+        }
+        let skeleton_clock = Clock::new();
+        let mut sb = Self::cold_start_inner(id, spec, svc, &skeleton_clock, Some(files))?;
+        sb.hibernate_begin()?;
+        // Deflation steps the skeleton owes (#2/#4): drop app file
+        // mappings; freed pages reclaim below, after the anon re-mark.
+        sb.release_file_pages(true)?;
+        sb.svc.cache.trim_unmapped();
+
+        // Re-mark every process's anon PTEs into the manifest's shape:
+        // recorded REAP pages stay present (frames discarded below — the
+        // post-REAP-swap-out uncommitted state), other imaged pages flip
+        // to bit-#9 swapped, and pages the image does not contain unmap.
+        let reap_set_gvas: HashSet<u64> = manifest.reap_set.iter().copied().collect();
+        let swap_rows: HashMap<u64, u64> =
+            manifest.swap_pages.iter().map(|p| (p.gva, p.offset)).collect();
+        for p in 0..sb.procs.len() {
+            let mut dropped: Vec<Gpa> = Vec::new();
+            sb.procs[p].asp.pt.for_each_mut(|gva, pte| {
+                if !(pte.present() || pte.swapped()) || pte.is_file() {
+                    return pte;
+                }
+                if reap_set_gvas.contains(&gva.0) {
+                    return pte;
+                }
+                if swap_rows.contains_key(&gva.0) {
+                    return pte.to_swapped();
+                }
+                dropped.push(pte.gpa());
+                Pte::EMPTY
+            });
+            for gpa in dropped {
+                sb.alloc.dec_ref(gpa);
+            }
+        }
+        sb.alloc.reclaim_free_pages()?;
+
+        // Rebuild the swap manager's slot tables, resolving each manifest
+        // row's gva through the skeleton's page table. A row the skeleton
+        // cannot place means spec and image disagree: reject the image.
+        let resolve = |sb: &Sandbox, gva: u64, what: &str| -> Result<Gpa> {
+            let pte = sb.procs[0].asp.pt.get(Gva(gva));
+            if !(pte.present() || pte.swapped()) {
+                bail!("manifest {what} gva {gva:#x} absent from the skeleton layout");
+            }
+            Ok(pte.gpa())
+        };
+        let mut swap_slots = Vec::with_capacity(manifest.swap_pages.len());
+        let mut imaged: Vec<Gpa> = Vec::with_capacity(manifest.swap_pages.len());
+        for row in &manifest.swap_pages {
+            let gpa = resolve(&sb, row.gva, "swap page")?;
+            swap_slots.push((gpa, SwapSlot(row.offset)));
+            imaged.push(gpa);
+        }
+        let mut reap_slots = Vec::with_capacity(manifest.reap_pages.len());
+        for row in &manifest.reap_pages {
+            let gpa = resolve(&sb, row.gva, "REAP page")?;
+            reap_slots.push((gpa, SwapSlot(row.offset)));
+            imaged.push(gpa);
+        }
+        let mut reap_set = Vec::with_capacity(manifest.reap_set.len());
+        for &gva in &manifest.reap_set {
+            reap_set.push(resolve(&sb, gva, "reap-set")?);
+        }
+        // The imaged pages' data lives on disk; the skeleton's frames are
+        // placeholders. Discard them like the original deflation did.
+        imaged.sort_unstable_by_key(|g| g.0);
+        imaged.dedup();
+        sb.svc.host.discard_pages(&imaged)?;
+        sb.swap.adopt_image(swap_slots, reap_slots, reap_set);
+
+        // Restore the REAP protocol state: an image with a recorded set
+        // wakes by prefetch; one without (full page-fault deflation) needs
+        // its sample request, exactly as if this process had deflated it.
+        if manifest.reap_set.is_empty() {
+            sb.reap.on_full_swapout(manifest.swap_pages.len() as u64);
+        } else {
+            sb.reap.restore_recorded(
+                manifest.reap_swapped_out_pages,
+                manifest.reap_recorded_pages,
+            );
+        }
+        sb.manifest_generation = manifest.generation;
+        // The manifest on disk still describes this image: keep both it
+        // and the files until a wake mutates them.
+        sb.swap.files_mut().set_persist(true);
+        Ok(sb)
     }
 
     /// Drain pending control signals at a safe point (the container is
@@ -1173,6 +1505,67 @@ mod tests {
         let out = sb.handle_request(&clock).unwrap();
         assert!(out.reap_prefetched > 0);
         assert_eq!(out.anon_faults, 0);
+    }
+
+    #[test]
+    fn hibernated_image_survives_restart_and_wakes_by_prefetch() {
+        let svc = rig("sb-adopt");
+        let clock = Clock::new();
+        let spec = scaled_for_test(nodejs_hello(), 16);
+        let mut sb = Sandbox::cold_start(7, spec.clone(), svc.clone(), &clock).unwrap();
+        sb.handle_request(&clock).unwrap();
+        sb.hibernate(&clock).unwrap();
+        sb.handle_request(&clock).unwrap(); // sample request records the WS
+        let rpt = sb.hibernate(&clock).unwrap();
+        assert!(rpt.used_reap);
+        let mpath = sb.swap.files().manifest_path();
+        let dir = sb.swap.files().dir().to_path_buf();
+        assert!(mpath.exists(), "hibernate_finish must persist a manifest");
+        // "Host crash": drop the sandbox without terminating. The
+        // persisted image — files and manifest — must survive the drop.
+        drop(sb);
+        assert!(mpath.exists(), "a persisted image must survive the drop");
+
+        let manifest = ImageManifest::load(&mpath).unwrap();
+        assert_eq!(manifest.workload, spec.name);
+        assert_eq!(manifest.generation, 2, "one manifest per hibernate cycle");
+        assert!(!manifest.reap_set.is_empty(), "REAP cycle must record the WS");
+        let swap_sums: Vec<(u64, u64)> =
+            manifest.swap_pages.iter().map(|p| (p.offset, p.sum)).collect();
+        let reap_sums: Vec<(u64, u64)> =
+            manifest.reap_pages.iter().map(|p| (p.offset, p.sum)).collect();
+        let files = SwapFileSet::adopt_with_backend(
+            &dir,
+            manifest.file_id,
+            svc.io.clone(),
+            manifest.swap_len,
+            &swap_sums,
+            manifest.reap_len,
+            &reap_sums,
+        )
+        .unwrap();
+        let mut sb2 =
+            Sandbox::adopt_hibernated(99, spec, svc.clone(), &manifest, files).unwrap();
+        assert_eq!(sb2.state(), ContainerState::Hibernate);
+
+        // The adopted instance serves a demand wake from the on-disk
+        // image — a wake, not a cold start: the recorded working set
+        // arrives by REAP prefetch, nothing faults per page.
+        let out = sb2.handle_request(&clock).unwrap();
+        assert_eq!(out.from, ContainerState::Hibernate);
+        assert!(out.reap_prefetched > 0, "adopted image must wake by prefetch");
+        assert_eq!(out.anon_faults, 0, "recorded working set fully prefetched");
+        assert!(
+            !mpath.exists(),
+            "waking mutates the image: the stale manifest must be discarded"
+        );
+        // Full lifecycle continues: re-hibernating writes the next
+        // generation, terminating discards it.
+        sb2.hibernate(&clock).unwrap();
+        let m2 = ImageManifest::load(&mpath).unwrap();
+        assert_eq!(m2.generation, 3, "generation must rise monotonically");
+        sb2.terminate().unwrap();
+        assert!(!mpath.exists(), "terminate must discard the manifest");
     }
 
     #[test]

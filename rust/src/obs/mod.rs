@@ -96,6 +96,25 @@ pub enum EventKind {
     /// Request served (arg: end-to-end latency ns; `instance_id` is the
     /// serving sandbox).
     Request = 15,
+    /// A transient slot-file I/O failure was retried with backoff
+    /// (arg: retry attempt number, 1-based).
+    IoRetry = 16,
+    /// A slot read failed its recorded checksum — the page was **not**
+    /// served (arg: byte offset of the failing slot).
+    IntegrityFail = 17,
+    /// The serving path dropped one rung down the degrade ladder
+    /// (arg: rung — 1 = REAP image invalidated, fall back to per-page
+    /// faults; 2 = per-page rescue from the swap file; 3 = image
+    /// discarded, cold-start replacement).
+    DegradeRung = 18,
+    /// Image manifest persisted at hibernate (arg: manifest generation).
+    ManifestWrite = 19,
+    /// A manifest found on startup was adopted — the instance wakes
+    /// instead of cold-starting (arg: manifest generation).
+    ManifestAdopt = 20,
+    /// A manifest failed validation or adoption and its image was
+    /// discarded (arg: manifest generation, 0 when unparseable).
+    ManifestReject = 21,
 }
 
 impl EventKind {
@@ -117,6 +136,12 @@ impl EventKind {
             EventKind::IoComplete => "io_complete",
             EventKind::Decision => "decision",
             EventKind::Request => "request",
+            EventKind::IoRetry => "io_retry",
+            EventKind::IntegrityFail => "integrity_fail",
+            EventKind::DegradeRung => "degrade_rung",
+            EventKind::ManifestWrite => "manifest_write",
+            EventKind::ManifestAdopt => "manifest_adopt",
+            EventKind::ManifestReject => "manifest_reject",
         }
     }
 }

@@ -68,6 +68,49 @@ pub enum IoClass {
     Throughput,
 }
 
+/// Marker type attached (via the `anyhow` error chain) to I/O failures
+/// that are worth retrying: the syscall was interrupted or the device was
+/// momentarily busy, and an identical resubmission may well succeed.
+/// Everything else — EOF, short transfers, checksum mismatches, `EIO` — is
+/// *permanent*: retrying cannot help and the caller must degrade instead
+/// (see `docs/durability.md` for the taxonomy).
+///
+/// Callers test for the marker with [`is_transient`]; failure-injection
+/// backends attach it themselves to model flaky-but-recoverable devices.
+#[derive(Debug, Clone, Copy)]
+pub struct TransientIo;
+
+impl std::fmt::Display for TransientIo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "transient I/O error")
+    }
+}
+
+impl std::error::Error for TransientIo {}
+
+/// Does `err`'s chain carry the [`TransientIo`] marker — i.e. is a bounded
+/// retry with backoff worth attempting?
+pub fn is_transient(err: &anyhow::Error) -> bool {
+    err.chain().any(|c| c.downcast_ref::<TransientIo>().is_some())
+}
+
+/// Wrap a failed syscall's OS error into an `anyhow` error carrying `msg`,
+/// attaching the [`TransientIo`] marker when the error kind is one an
+/// immediate retry can plausibly clear. The rendered message is unchanged
+/// either way, so existing error-string assertions keep holding.
+pub fn classify_os_error(os: std::io::Error, msg: String) -> anyhow::Error {
+    use std::io::ErrorKind;
+    let transient = matches!(
+        os.kind(),
+        ErrorKind::Interrupted | ErrorKind::WouldBlock | ErrorKind::TimedOut
+    );
+    if transient {
+        anyhow::Error::new(TransientIo).context(msg)
+    } else {
+        anyhow::anyhow!(msg)
+    }
+}
+
 /// Direction of a vectored transfer.
 #[derive(Copy, Clone, Debug)]
 pub enum IoDir {
@@ -167,7 +210,9 @@ pub fn execute_run(file: &File, run: &IoRun, dir: IoDir) -> Result<u64> {
             }
         };
         if n < 0 {
-            bail!("{} failed: {}", dir.verb(), std::io::Error::last_os_error());
+            let os = std::io::Error::last_os_error();
+            let msg = format!("{} failed: {os}", dir.verb());
+            return Err(classify_os_error(os, msg));
         }
         if n == 0 {
             bail!("vectored I/O hit EOF (offset {})", base + done);
@@ -715,6 +760,25 @@ mod tests {
             total_pages += chunk_pages;
         }
         assert_eq!(total_pages, 10, "no page lost in the split");
+    }
+
+    #[test]
+    fn transient_classification_follows_os_error_kind() {
+        let interrupted = std::io::Error::from(std::io::ErrorKind::Interrupted);
+        let e = classify_os_error(interrupted, "pwritev failed: interrupted".into());
+        assert!(is_transient(&e), "EINTR must classify transient: {e:#}");
+        assert!(
+            format!("{e:#}").contains("pwritev failed"),
+            "classification must not eat the message: {e:#}"
+        );
+
+        let denied = std::io::Error::from(std::io::ErrorKind::PermissionDenied);
+        let e = classify_os_error(denied, "pread failed: denied".into());
+        assert!(!is_transient(&e), "EACCES must classify permanent");
+
+        // EOF and short-transfer errors built via bail! carry no marker.
+        let eof = anyhow::anyhow!("vectored I/O hit EOF (offset 0)");
+        assert!(!is_transient(&eof));
     }
 
     #[test]

@@ -176,6 +176,56 @@ impl IoStats {
     }
 }
 
+/// Durability counters: checksum verification failures, transient-I/O
+/// retries, degrade-ladder transitions, manifest lifecycle — see
+/// `docs/durability.md` for the ladder these instrument.
+///
+/// **Deliberately not part of [`Counters::snapshot`]** (and therefore not
+/// part of the replay fingerprint), same contract as [`IoStats`]: whether
+/// an injected fault fires, how many retries a flaky device needs, and
+/// what a restarted host adopts are all environment-dependent, so folding
+/// these into the fingerprint would break 1-vs-N bit-identity. They are
+/// surfaced in [`Metrics::report`] / [`Metrics::to_json`] as a separate
+/// section instead.
+#[derive(Debug, Default)]
+pub struct DurabilityStats {
+    /// Slot reads whose recorded checksum did not match — the page was
+    /// never served (ladder rung 2 → 3).
+    pub verify_failures: AtomicU64,
+    /// Transient slot-file I/O failures retried with backoff.
+    pub io_retries: AtomicU64,
+    /// Working-set pages rescued through per-page swap-file reads after a
+    /// REAP image was invalidated (ladder rung 1 → 2).
+    pub reap_rescues: AtomicU64,
+    /// Instances whose image was discarded and replaced by a cold start —
+    /// the bottom of the ladder (rung 3).
+    pub degraded_cold_starts: AtomicU64,
+    /// Image manifests persisted at hibernate.
+    pub manifests_written: AtomicU64,
+    /// Manifests adopted at platform construction (restart wake path).
+    pub manifests_adopted: AtomicU64,
+    /// Manifests rejected at platform construction (torn / stale /
+    /// checksum-failing — image discarded).
+    pub manifests_rejected: AtomicU64,
+}
+
+impl DurabilityStats {
+    /// Name/value pairs for reporting (kept out of the replay fingerprint —
+    /// see the type docs).
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        counter_snapshot!(
+            self,
+            verify_failures,
+            io_retries,
+            reap_rescues,
+            degraded_cold_starts,
+            manifests_written,
+            manifests_adopted,
+            manifests_rejected
+        )
+    }
+}
+
 /// One (workload, serving-path) latency cell: the raw-sample [`Summary`]
 /// that backs the text report's mean/max columns, plus the fixed-edge
 /// [`Histogram`] that backs p50/p99/p999. Histogram merges are exact
@@ -251,6 +301,9 @@ pub struct Metrics {
     pub recorder: Arc<Recorder>,
     /// Wake-phase histograms (queue-wait / inflate / admission).
     pub wake: WakeHistograms,
+    /// Durability counters, shared with every sandbox's swap manager and
+    /// the platform's adoption scan. Fingerprint-excluded like [`IoStats`].
+    pub durability: Arc<DurabilityStats>,
 }
 
 impl Default for Metrics {
@@ -274,6 +327,7 @@ impl Metrics {
             io: Arc::new(IoStats::default()),
             recorder,
             wake: WakeHistograms::default(),
+            durability: Arc::new(DurabilityStats::default()),
         }
     }
 
@@ -399,6 +453,11 @@ impl Metrics {
             out.push_str(&format!(" {k}={v}"));
         }
         out.push('\n');
+        out.push_str("durability:");
+        for (k, v) in self.durability.snapshot() {
+            out.push_str(&format!(" {k}={v}"));
+        }
+        out.push('\n');
         for (name, hist) in [
             ("queue_wait", &self.wake.queue_wait),
             ("inflate", &self.wake.inflate),
@@ -467,12 +526,19 @@ impl Metrics {
             .into_iter()
             .map(|(k, v)| (k, Json::Num(v as f64)))
             .collect();
+        let durability: Vec<(&str, Json)> = self
+            .durability
+            .snapshot()
+            .into_iter()
+            .map(|(k, v)| (k, Json::Num(v as f64)))
+            .collect();
         obj(vec![
             ("latencies", Json::Arr(rows)),
             ("paths", Json::Arr(paths)),
             ("wake_phases", wake),
             ("counters", obj(counters)),
             ("io", obj(io)),
+            ("durability", obj(durability)),
         ])
     }
 }
@@ -577,6 +643,46 @@ mod tests {
             );
         }
         assert_eq!(m.io.inflight_bytes.load(Ordering::Relaxed), 0, "gauge settles");
+    }
+
+    #[test]
+    fn durability_stats_render_but_stay_out_of_the_fingerprint_snapshot() {
+        let m = Metrics::new();
+        let before = m.counters.snapshot();
+        m.durability.verify_failures.fetch_add(2, Ordering::Relaxed);
+        m.durability.io_retries.fetch_add(3, Ordering::Relaxed);
+        m.durability.reap_rescues.fetch_add(1, Ordering::Relaxed);
+        m.durability.manifests_adopted.fetch_add(1, Ordering::Relaxed);
+        // Rendered in both exports…
+        let r = m.report();
+        assert!(r.contains("durability: verify_failures=2"), "{r}");
+        assert!(r.contains("io_retries=3"), "{r}");
+        assert!(r.contains("manifests_adopted=1"), "{r}");
+        let j = m.to_json().to_string();
+        let back = crate::util::json::parse(&j).unwrap();
+        assert_eq!(
+            back.get("durability")
+                .unwrap()
+                .get("reap_rescues")
+                .unwrap()
+                .as_u64(),
+            Some(1)
+        );
+        // …but NEVER in the counter snapshot the replay fingerprint folds:
+        // fault occurrence, retry counts, and restart adoption are
+        // environment-dependent, so leaking any durability_* key here
+        // would break 1-vs-N bit-identity (same contract as IoStats).
+        assert_eq!(m.counters.snapshot(), before);
+        for (k, _) in m.counters.snapshot() {
+            assert!(
+                !k.starts_with("durability")
+                    && k != "verify_failures"
+                    && k != "io_retries"
+                    && k != "reap_rescues"
+                    && k != "manifests_written",
+                "durability stat `{k}` leaked into the fingerprint snapshot"
+            );
+        }
     }
 
     #[test]

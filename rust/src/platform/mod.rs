@@ -48,13 +48,15 @@ use crate::container::state::ContainerState;
 use crate::container::PayloadRunner;
 use crate::obs::{pack_decision, EventKind, Recorder};
 use crate::simtime::Clock;
+use crate::swap::file::SwapFileSet;
+use crate::swap::{is_integrity, ImageManifest};
 use crate::workloads::WorkloadSpec;
 use anyhow::{bail, Context, Result};
 use metrics::{Metrics, ServedFrom};
 use policy::{tenant_of, AppliedAction, BudgetFrame, Decision, Policy, Verb, WakeLeads};
 use predictor::Predictor;
 use shard::ShardSet;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use trace::TraceEvent;
@@ -111,6 +113,12 @@ pub struct Platform {
     /// Diagnostic: how many times a nowait tick actually rebuilt the
     /// budget frame (pinned by the stride-reconciliation test).
     budget_rebuilds: AtomicU64,
+    /// Hibernated images a previous process left under the swap dir
+    /// (validated manifests found by the construction scan, keyed by
+    /// workload), awaiting their workload's [`Self::deploy`] to be
+    /// adopted into its pool. Empty when `durability.adopt_on_start` is
+    /// off or nothing survived.
+    adoptable: Mutex<HashMap<String, Vec<ImageManifest>>>,
 }
 
 impl Platform {
@@ -180,6 +188,8 @@ impl Platform {
             reap_enabled: cfg.policy.reap_enabled,
             hostenv: svc.hostenv.clone(),
             io,
+            durability: cfg.durability.clone(),
+            durability_stats: metrics.durability.clone(),
             recorder,
         });
         let wake_leads = Arc::new(WakeLeads::new(cfg.policy.adaptive_wake_lead));
@@ -206,7 +216,25 @@ impl Platform {
                 tenants: Vec::new(),
             })),
             budget_rebuilds: AtomicU64::new(0),
+            adoptable: Mutex::new(HashMap::new()),
         };
+        // Scan the swap dir for images a previous process hibernated and
+        // left behind. Valid manifests queue for adoption at deploy;
+        // anything torn or corrupt is rejected loudly and deleted. A
+        // failed scan degrades to cold starts, never a failed startup.
+        if p.cfg.durability.adopt_on_start {
+            match p.scan_adoptable() {
+                Ok(n) if n > 0 => eprintln!(
+                    "durability: {n} hibernated image(s) under {} await adoption",
+                    p.cfg.swap_dir
+                ),
+                Ok(_) => {}
+                Err(e) => eprintln!(
+                    "durability: adoption scan of {} failed ({e:#}); cold starts only",
+                    p.cfg.swap_dir
+                ),
+            }
+        }
         // Restore persisted arrival tracks so anticipatory wake-up resumes
         // across restarts. A corrupt sidecar degrades to a cold predictor
         // (with a warning), never a failed startup.
@@ -231,13 +259,160 @@ impl Platform {
     }
 
     /// Register a function (workload) with the platform. The function's
-    /// pool and spec land on the shard its name hashes to.
+    /// pool and spec land on the shard its name hashes to. Hibernated
+    /// images a previous process persisted for this workload are adopted
+    /// into the pool now — the restarted host *wakes* them instead of
+    /// cold-starting (an adoption that fails validation is discarded
+    /// loudly and the deploy proceeds on cold starts).
     pub fn deploy(&self, spec: WorkloadSpec) -> Result<()> {
         spec.validate().map_err(|e| anyhow::anyhow!(e))?;
-        let mut guard = self.shards.shard_for(&spec.name).lock();
-        guard.pools.entry(spec.name.clone()).or_default();
-        guard.specs.insert(spec.name.clone(), spec);
+        {
+            let mut guard = self.shards.shard_for(&spec.name).lock();
+            guard.pools.entry(spec.name.clone()).or_default();
+            guard.specs.insert(spec.name.clone(), spec.clone());
+        }
+        let pending = self
+            .adoptable
+            .lock()
+            .unwrap()
+            .remove(&spec.name)
+            .unwrap_or_default();
+        for m in pending {
+            if let Err(e) = self.adopt_one(&spec, &m) {
+                eprintln!(
+                    "durability: discarding image {} of `{}` ({e:#}); \
+                     the workload cold-starts instead",
+                    m.file_id, spec.name
+                );
+                self.metrics
+                    .durability
+                    .manifests_rejected
+                    .fetch_add(1, Ordering::Relaxed);
+                if self.metrics.recorder.is_enabled() {
+                    self.metrics.recorder.emit_workload(
+                        EventKind::ManifestReject,
+                        m.file_id,
+                        crate::util::fnv1a(&spec.name),
+                        m.generation,
+                        0,
+                    );
+                }
+                Self::discard_image_files(std::path::Path::new(&self.cfg.swap_dir), m.file_id);
+            }
+        }
         Ok(())
+    }
+
+    /// Construction-time scan of the swap dir: queue every loadable
+    /// manifest for adoption at its workload's deploy, reject (and
+    /// delete) torn or corrupt ones. Also reserves the id space under
+    /// each pending image's file name, so a cold start in this process
+    /// can never be handed an id whose swap-file names would truncate an
+    /// image awaiting adoption.
+    fn scan_adoptable(&self) -> Result<usize> {
+        let dir = std::path::Path::new(&self.cfg.swap_dir);
+        if !dir.exists() {
+            return Ok(0);
+        }
+        let mut found = 0usize;
+        let mut entries: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+            .with_context(|| format!("scanning swap dir {}", dir.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("manifest"))
+            .collect();
+        entries.sort(); // deterministic adoption order
+        for path in entries {
+            match ImageManifest::load(&path) {
+                Ok(m) => {
+                    let shard = (m.file_id >> 32).wrapping_sub(1) as usize;
+                    if shard < self.next_ids.len() {
+                        self.next_ids[shard]
+                            .fetch_max((m.file_id & 0xffff_ffff) + 1, Ordering::Relaxed);
+                    }
+                    self.adoptable
+                        .lock()
+                        .unwrap()
+                        .entry(m.workload.clone())
+                        .or_default()
+                        .push(m);
+                    found += 1;
+                }
+                Err(e) => {
+                    eprintln!(
+                        "durability: rejecting manifest {} ({e:#}); discarding image",
+                        path.display()
+                    );
+                    self.metrics
+                        .durability
+                        .manifests_rejected
+                        .fetch_add(1, Ordering::Relaxed);
+                    if self.metrics.recorder.is_enabled() {
+                        self.metrics.recorder.emit_workload(
+                            EventKind::ManifestReject,
+                            0,
+                            0,
+                            0,
+                            0,
+                        );
+                    }
+                    let _ = std::fs::remove_file(&path);
+                    let _ = std::fs::remove_file(path.with_extension("swap"));
+                    let _ = std::fs::remove_file(path.with_extension("reap"));
+                }
+            }
+        }
+        Ok(found)
+    }
+
+    /// Adopt one pending image into `spec`'s pool: re-open the slot files
+    /// against the manifest, rebuild the hibernated sandbox, register it.
+    fn adopt_one(&self, spec: &WorkloadSpec, m: &ImageManifest) -> Result<()> {
+        let dir = std::path::Path::new(&self.cfg.swap_dir);
+        let swap_sums: Vec<(u64, u64)> =
+            m.swap_pages.iter().map(|p| (p.offset, p.sum)).collect();
+        let reap_sums: Vec<(u64, u64)> =
+            m.reap_pages.iter().map(|p| (p.offset, p.sum)).collect();
+        let files = SwapFileSet::adopt_with_backend(
+            dir,
+            m.file_id,
+            self.svc.io.clone(),
+            m.swap_len,
+            &swap_sums,
+            m.reap_len,
+            &reap_sums,
+        )?;
+        let shard_idx = self.shards.index_for(&spec.name);
+        let id = self.alloc_instance_id(shard_idx);
+        let sb = Sandbox::adopt_hibernated(id, spec.clone(), self.svc.clone(), m, files)?;
+        {
+            let mut guard = self.shards.get(shard_idx).lock();
+            let pool = guard
+                .pools
+                .get_mut(&spec.name)
+                .expect("deployed workload must have a pool");
+            pool.add(sb, 0);
+        }
+        self.metrics
+            .durability
+            .manifests_adopted
+            .fetch_add(1, Ordering::Relaxed);
+        if self.metrics.recorder.is_enabled() {
+            self.metrics.recorder.emit_workload(
+                EventKind::ManifestAdopt,
+                id,
+                crate::util::fnv1a(&spec.name),
+                m.generation,
+                0,
+            );
+        }
+        Ok(())
+    }
+
+    /// Delete a discarded image's three files (manifest + slot pair).
+    fn discard_image_files(dir: &std::path::Path, file_id: u64) {
+        let _ = std::fs::remove_file(ImageManifest::path_for(dir, file_id));
+        let _ = std::fs::remove_file(dir.join(format!("sandbox-{file_id}.swap")));
+        let _ = std::fs::remove_file(dir.join(format!("sandbox-{file_id}.reap")));
     }
 
     /// All deployed workload names (sorted — shard iteration order is not
@@ -346,7 +521,43 @@ impl Platform {
             live_gauge.store(*live, Ordering::Relaxed);
         }
         drop(reservation); // panic-safe: would also release on unwind
-        let (outcome, _, instance_id) = result?;
+        let (outcome, _, instance_id) = match result {
+            Ok(ok) => ok,
+            // Degrade ladder, last rung: the image failed integrity checks
+            // mid-request (checksum mismatch the swap layer could not
+            // rescue). Never serve corrupt memory — retire the instance
+            // permanently, count the degraded start, and re-route: the
+            // retried request cold-starts a replacement. Recursion is
+            // bounded because each retirement removes the broken instance
+            // for good.
+            Err(e) if is_integrity(&e) => {
+                {
+                    let mut sb = sandbox.lock().unwrap();
+                    eprintln!(
+                        "platform: instance {} of `{workload}` failed image \
+                         integrity ({e:#}); retiring it and cold-starting a \
+                         replacement",
+                        sb.id
+                    );
+                    sb.retire()?;
+                }
+                self.metrics
+                    .durability
+                    .degraded_cold_starts
+                    .fetch_add(1, Ordering::Relaxed);
+                if self.metrics.recorder.is_enabled() {
+                    self.metrics.recorder.emit_workload(
+                        EventKind::DegradeRung,
+                        0,
+                        crate::util::fnv1a(workload),
+                        3,
+                        now_vns,
+                    );
+                }
+                return self.request_at(workload, now_vns);
+            }
+            Err(e) => return Err(e),
+        };
 
         self.metrics.record_latency(workload, served_from, latency_ns);
         if outcome.admission_ns > 0 {
@@ -1144,14 +1355,18 @@ mod tests {
     use crate::simtime::CostModel;
     use crate::workloads::functionbench::{golang_hello, scaled_for_test};
 
-    fn test_platform(hibernate_idle_ms: u64) -> Platform {
+    // Each test gets its own swap dir (keyed by `tag`): adopt_on_start is
+    // the default, so a shared dir would let one test's persisted
+    // hibernated image be adopted by a concurrently-constructed platform
+    // of another test.
+    fn test_platform(tag: &str, hibernate_idle_ms: u64) -> Platform {
         let mut cfg = PlatformConfig::default();
         cfg.host_memory = 512 << 20;
         cfg.cost = CostModel::paper();
         cfg.policy.hibernate_idle_ms = hibernate_idle_ms;
         cfg.policy.predictive_wakeup = false;
         cfg.swap_dir = std::env::temp_dir()
-            .join(format!("qh-platform-test-{}", std::process::id()))
+            .join(format!("qh-platform-{tag}-{}", std::process::id()))
             .to_string_lossy()
             .into_owned();
         let p = Platform::new(cfg, Arc::new(NoopRunner)).unwrap();
@@ -1161,7 +1376,7 @@ mod tests {
 
     #[test]
     fn first_request_cold_starts_then_warm() {
-        let p = test_platform(1000);
+        let p = test_platform("warm", 1000);
         let r1 = p.request_at("golang-hello", 0).unwrap();
         assert_eq!(r1.served_from, ServedFrom::ColdStart);
         let r2 = p.request_at("golang-hello", r1.latency_ns + 1).unwrap();
@@ -1177,7 +1392,7 @@ mod tests {
 
     #[test]
     fn idle_container_hibernates_then_serves() {
-        let p = test_platform(10);
+        let p = test_platform("idle", 10);
         let r1 = p.request_at("golang-hello", 0).unwrap();
         let t1 = r1.latency_ns;
         // Idle long past the threshold → policy hibernates it.
@@ -1201,7 +1416,7 @@ mod tests {
 
     #[test]
     fn trace_replay_records_metrics() {
-        let p = test_platform(20);
+        let p = test_platform("trace", 20);
         let events: Vec<TraceEvent> = (0..5)
             .map(|i| TraceEvent {
                 at_ns: i * 200_000_000,
@@ -1221,7 +1436,7 @@ mod tests {
 
     #[test]
     fn unknown_workload_rejected() {
-        let p = test_platform(10);
+        let p = test_platform("unknown", 10);
         assert!(p.request_at("nope", 0).is_err());
     }
 
@@ -1283,7 +1498,7 @@ mod tests {
 
     #[test]
     fn shard_count_defaults_to_parallelism() {
-        let p = test_platform(1000);
+        let p = test_platform("parallel", 1000);
         let want = std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(4);
@@ -1327,7 +1542,7 @@ mod tests {
             "a full stride rotation must visit every shard exactly once"
         );
         // Stride 1 (the default) still covers everything in one call.
-        let p2 = test_platform(10);
+        let p2 = test_platform("stagger2", 10);
         p2.request_at("golang-hello", 0).unwrap();
         let actions = p2.policy_tick(1_000_000_000).unwrap();
         assert!(actions.iter().any(|a| a.verb == Verb::Hibernate));
@@ -1408,5 +1623,52 @@ mod tests {
             "restored prediction must live in the new run's timeline"
         );
         std::fs::remove_file(&state).ok();
+    }
+
+    #[test]
+    fn hibernated_instances_survive_platform_restart() {
+        let dir = std::env::temp_dir()
+            .join(format!("qh-restart-test-{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cfg = PlatformConfig::default();
+        cfg.host_memory = 512 << 20;
+        cfg.cost = CostModel::paper();
+        cfg.policy.hibernate_idle_ms = 10;
+        cfg.policy.predictive_wakeup = false;
+        cfg.swap_dir = dir.clone();
+
+        // First process life: cold start, then hibernate (which persists
+        // the image + manifest).
+        let p = Platform::new(cfg.clone(), Arc::new(NoopRunner)).unwrap();
+        p.deploy(scaled_for_test(golang_hello(), 16)).unwrap();
+        let r1 = p.request_at("golang-hello", 0).unwrap();
+        assert_eq!(r1.served_from, ServedFrom::ColdStart);
+        let actions = p.policy_tick(r1.latency_ns + 50_000_000).unwrap();
+        assert!(actions.iter().any(|a| a.verb == Verb::Hibernate));
+        drop(p); // "crash"/shutdown: sandboxes drop, persisted files stay
+
+        // Second process life: the deploy adopts the image and the first
+        // request *wakes* it — no cold start at all.
+        let p2 = Platform::new(cfg, Arc::new(NoopRunner)).unwrap();
+        p2.deploy(scaled_for_test(golang_hello(), 16)).unwrap();
+        assert_eq!(p2.instance_count("golang-hello"), 1);
+        assert_eq!(
+            p2.metrics.durability.manifests_adopted.load(Ordering::Relaxed),
+            1
+        );
+        let r2 = p2.request_at("golang-hello", 0).unwrap();
+        assert_eq!(
+            r2.served_from,
+            ServedFrom::Hibernate,
+            "adopted instance must serve as a hibernate wake"
+        );
+        assert_eq!(
+            p2.metrics.counters.cold_starts.load(Ordering::Relaxed),
+            0,
+            "restart must not cold-start an adopted workload"
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

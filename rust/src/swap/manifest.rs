@@ -1,0 +1,550 @@
+//! Crash-safe sidecar manifests: the self-describing half of a durable
+//! hibernated image (`docs/durability.md`).
+//!
+//! A hibernated sandbox's on-disk state is its swap + REAP slot files plus
+//! this **versioned text manifest** (`sandbox-<id>.manifest`), written at
+//! `hibernate_finish` via the temp-file + rename idiom (the same
+//! crash-safety contract as `predictor_store`): a crash mid-write leaves
+//! either the previous manifest or none — never a half manifest that
+//! parses.
+//!
+//! The manifest records everything a restarted platform needs to re-adopt
+//! the image without trusting the files: the per-page slot tables (guest
+//! virtual address → file offset → FNV-1a checksum), the recorded REAP
+//! working set in record order, the file high-water lengths, and a
+//! generation number. The final `end <checksum>` line hashes every prior
+//! line, so a torn manifest (partial write, truncation) is *detected*, not
+//! mis-parsed. Rows are keyed by **gva**, not gpa: guest-physical frames
+//! are re-allocated at adoption; virtual addresses are the stable names.
+//!
+//! Parsing is strict: wrong version, malformed row, duplicate page, a
+//! missing `end` trailer, or a self-checksum mismatch are all hard errors —
+//! the adoption path rejects the image loudly and discards it rather than
+//! inflating from state it cannot vouch for.
+
+use crate::util::{fnv1a, fnv1a_bytes};
+use crate::PAGE_SIZE;
+use anyhow::{bail, Context, Result};
+use std::fs::{self, File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+
+/// First line of every manifest. Version-bump on format change.
+pub const VERSION_LINE: &str = "# qh-image-manifest v1";
+
+/// One page row: where `gva`'s image lives and what it must hash to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ManifestPage {
+    pub gva: u64,
+    pub offset: u64,
+    pub sum: u64,
+}
+
+/// The parsed (or to-be-written) sidecar manifest of one hibernated image.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ImageManifest {
+    /// Monotonic per-image hibernate-cycle counter: lets tooling tell two
+    /// manifests for the same files apart.
+    pub generation: u64,
+    /// Id baked into the slot-file names (`sandbox-<file_id>.swap/.reap`).
+    pub file_id: u64,
+    /// Workload name — adoption re-registers the image under this deploy.
+    pub workload: String,
+    /// High-water length (bytes) the swap file must have on disk.
+    pub swap_len: u64,
+    /// High-water length (bytes) the REAP file must have on disk.
+    pub reap_len: u64,
+    /// REAP recorder restore state: recorded working-set pages.
+    pub reap_recorded_pages: u64,
+    /// REAP recorder restore state: full-swapout denominator pages.
+    pub reap_swapped_out_pages: u64,
+    /// Swap slot table: every page with a live swap-file image.
+    pub swap_pages: Vec<ManifestPage>,
+    /// REAP slot table: every recorded working-set page's REAP image.
+    pub reap_pages: Vec<ManifestPage>,
+    /// The recorded working set, in record order (gvas). These pages were
+    /// left *present but uncommitted* at hibernate; everything else with a
+    /// swap row was left swapped.
+    pub reap_set: Vec<u64>,
+}
+
+impl ImageManifest {
+    /// Manifest path for `file_id` under `dir`.
+    pub fn path_for(dir: &Path, file_id: u64) -> PathBuf {
+        dir.join(format!("sandbox-{file_id}.manifest"))
+    }
+
+    fn render(&self) -> Result<String> {
+        if self.workload.is_empty()
+            || self.workload.contains(['\n', '\r', ' '])
+            || self.workload.starts_with('#')
+        {
+            bail!("unstorable workload name {:?} in manifest", self.workload);
+        }
+        let mut lines: Vec<String> = Vec::with_capacity(
+            8 + self.swap_pages.len() + self.reap_pages.len() + self.reap_set.len(),
+        );
+        lines.push(VERSION_LINE.to_string());
+        lines.push(format!("generation {}", self.generation));
+        lines.push(format!("file_id {}", self.file_id));
+        lines.push(format!("workload {}", self.workload));
+        lines.push(format!("swap_len {}", self.swap_len));
+        lines.push(format!("reap_len {}", self.reap_len));
+        lines.push(format!(
+            "reap_state {} {}",
+            self.reap_recorded_pages, self.reap_swapped_out_pages
+        ));
+        for p in &self.swap_pages {
+            lines.push(format!("swap {} {} {}", p.gva, p.offset, p.sum));
+        }
+        for p in &self.reap_pages {
+            lines.push(format!("reap {} {} {}", p.gva, p.offset, p.sum));
+        }
+        for gva in &self.reap_set {
+            lines.push(format!("reapset {gva}"));
+        }
+        let body = lines.join("\n");
+        Ok(format!("{}\nend {}\n", body, fnv1a(&body)))
+    }
+
+    /// Write the manifest crash-safely: temp sibling + fsync + rename.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let text = self.render()?;
+        let tmp = path.with_extension("manifest.tmp");
+        fs::write(&tmp, text)
+            .with_context(|| format!("writing manifest temp {}", tmp.display()))?;
+        if let Ok(f) = File::open(&tmp) {
+            f.sync_all().ok();
+        }
+        fs::rename(&tmp, path)
+            .with_context(|| format!("renaming manifest into {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load and strictly validate a manifest. Any structural defect —
+    /// wrong version, malformed row, duplicate page, missing `end`
+    /// trailer, self-checksum mismatch — is a hard error: the caller must
+    /// treat the image as untrustworthy and discard it.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing manifest {}", path.display()))
+    }
+
+    fn parse(text: &str) -> Result<Self> {
+        let mut lines = text.lines();
+        let Some(first) = lines.next() else {
+            bail!("empty manifest");
+        };
+        if first != VERSION_LINE {
+            bail!("unsupported manifest version line {first:?} (want {VERSION_LINE:?})");
+        }
+        let mut m = ImageManifest::default();
+        let mut hashed: Vec<&str> = vec![first];
+        let mut saw_end = false;
+        let parse_u64 = |tok: Option<&str>, what: &str| -> Result<u64> {
+            tok.with_context(|| format!("missing {what}"))?
+                .parse::<u64>()
+                .with_context(|| format!("malformed {what}"))
+        };
+        for line in lines {
+            if saw_end {
+                if !line.trim().is_empty() {
+                    bail!("content after the end trailer: {line:?}");
+                }
+                continue;
+            }
+            let mut toks = line.split_whitespace();
+            let Some(key) = toks.next() else {
+                bail!("blank line inside manifest body");
+            };
+            if key == "end" {
+                let want = parse_u64(toks.next(), "end checksum")?;
+                let got = fnv1a(&hashed.join("\n"));
+                if want != got {
+                    bail!(
+                        "manifest self-checksum mismatch (torn write?): \
+                         recorded {want:#018x}, content hashes to {got:#018x}"
+                    );
+                }
+                saw_end = true;
+                continue;
+            }
+            hashed.push(line);
+            match key {
+                "generation" => m.generation = parse_u64(toks.next(), "generation")?,
+                "file_id" => m.file_id = parse_u64(toks.next(), "file_id")?,
+                "workload" => {
+                    m.workload = toks
+                        .next()
+                        .context("missing workload name")?
+                        .to_string();
+                }
+                "swap_len" => m.swap_len = parse_u64(toks.next(), "swap_len")?,
+                "reap_len" => m.reap_len = parse_u64(toks.next(), "reap_len")?,
+                "reap_state" => {
+                    m.reap_recorded_pages = parse_u64(toks.next(), "reap_state recorded")?;
+                    m.reap_swapped_out_pages =
+                        parse_u64(toks.next(), "reap_state swapped_out")?;
+                }
+                "swap" | "reap" => {
+                    let page = ManifestPage {
+                        gva: parse_u64(toks.next(), "page gva")?,
+                        offset: parse_u64(toks.next(), "page offset")?,
+                        sum: parse_u64(toks.next(), "page checksum")?,
+                    };
+                    if key == "swap" {
+                        m.swap_pages.push(page);
+                    } else {
+                        m.reap_pages.push(page);
+                    }
+                }
+                "reapset" => m.reap_set.push(parse_u64(toks.next(), "reapset gva")?),
+                other => bail!("unknown manifest row {other:?}"),
+            }
+            if toks.next().is_some() {
+                bail!("trailing tokens on manifest row {line:?}");
+            }
+        }
+        if !saw_end {
+            bail!("manifest has no end trailer (torn write?)");
+        }
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.workload.is_empty() {
+            bail!("manifest names no workload");
+        }
+        if self.generation == 0 {
+            bail!("manifest generation 0 (never hibernated?)");
+        }
+        let check_table = |pages: &[ManifestPage], len: u64, kind: &str| -> Result<()> {
+            let mut gvas = std::collections::HashSet::new();
+            let mut offs = std::collections::HashSet::new();
+            for p in pages {
+                if p.offset % PAGE_SIZE as u64 != 0 || p.offset >= len {
+                    bail!("{kind} offset {} out of range (len {len})", p.offset);
+                }
+                if !gvas.insert(p.gva) {
+                    bail!("duplicate {kind} row for gva {:#x}", p.gva);
+                }
+                if !offs.insert(p.offset) {
+                    bail!("two {kind} rows share offset {}", p.offset);
+                }
+            }
+            Ok(())
+        };
+        check_table(&self.swap_pages, self.swap_len, "swap")?;
+        check_table(&self.reap_pages, self.reap_len, "reap")?;
+        let reap_rows: std::collections::HashSet<u64> =
+            self.reap_pages.iter().map(|p| p.gva).collect();
+        let reap_set: std::collections::HashSet<u64> = self.reap_set.iter().copied().collect();
+        if reap_set.len() != self.reap_set.len() {
+            bail!("duplicate gva in reapset");
+        }
+        if reap_rows != reap_set {
+            bail!(
+                "reap slot table and reapset disagree ({} rows vs {} set members)",
+                reap_rows.len(),
+                reap_set.len()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Offline verdict for one image (`repro fsck`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsckStatus {
+    /// Manifest parses, file lengths match, every slot checksum verifies.
+    Ok,
+    /// REAP slots are damaged but every recorded working-set page still has
+    /// a verifying swap-file image: a wake degrades one rung (per-page
+    /// faults) but serves correct memory.
+    Repairable,
+    /// The manifest is torn/stale or the swap file itself is damaged: the
+    /// image must be discarded (cold start).
+    Discard,
+}
+
+impl std::fmt::Display for FsckStatus {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FsckStatus::Ok => write!(f, "ok"),
+            FsckStatus::Repairable => write!(f, "repairable"),
+            FsckStatus::Discard => write!(f, "discard"),
+        }
+    }
+}
+
+/// One image's offline validation result.
+#[derive(Debug)]
+pub struct FsckReport {
+    pub manifest: PathBuf,
+    pub status: FsckStatus,
+    pub detail: String,
+}
+
+fn verify_slots(
+    dir: &Path,
+    name: &str,
+    expect_len: u64,
+    pages: &[ManifestPage],
+) -> Result<(), String> {
+    let path = dir.join(name);
+    let mut f = match OpenOptions::new().read(true).open(&path) {
+        Ok(f) => f,
+        Err(e) => return Err(format!("{name}: cannot open ({e})")),
+    };
+    match f.metadata() {
+        Ok(md) if md.len() == expect_len => {}
+        Ok(md) => {
+            return Err(format!(
+                "{name}: length {} does not match manifest ({expect_len})",
+                md.len()
+            ))
+        }
+        Err(e) => return Err(format!("{name}: cannot stat ({e})")),
+    }
+    let mut buf = vec![0u8; PAGE_SIZE];
+    for p in pages {
+        if f.seek(SeekFrom::Start(p.offset)).is_err() {
+            return Err(format!("{name}: seek to {} failed", p.offset));
+        }
+        if let Err(e) = f.read_exact(&mut buf) {
+            return Err(format!("{name}: read at {} failed ({e})", p.offset));
+        }
+        let got = fnv1a_bytes(&buf);
+        if got != p.sum {
+            return Err(format!(
+                "{name}: slot at {} for gva {:#x} hashes to {got:#018x}, manifest \
+                 records {:#018x}",
+                p.offset, p.gva, p.sum
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Offline-validate every image under `dir`: parse each `*.manifest`,
+/// check slot-file lengths, and re-hash every recorded slot. Never repairs
+/// anything — reports [`FsckStatus`] per image. Returns an empty list when
+/// the directory holds no manifests (or does not exist).
+pub fn fsck_dir(dir: &Path) -> Result<Vec<FsckReport>> {
+    let mut reports = Vec::new();
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(reports),
+    };
+    let mut paths: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "manifest"))
+        .collect();
+    paths.sort();
+    for path in paths {
+        let m = match ImageManifest::load(&path) {
+            Ok(m) => m,
+            Err(e) => {
+                reports.push(FsckReport {
+                    manifest: path,
+                    status: FsckStatus::Discard,
+                    detail: format!("{e:#}"),
+                });
+                continue;
+            }
+        };
+        let swap_name = format!("sandbox-{}.swap", m.file_id);
+        let reap_name = format!("sandbox-{}.reap", m.file_id);
+        let swap_ok = verify_slots(dir, &swap_name, m.swap_len, &m.swap_pages);
+        let reap_ok = verify_slots(dir, &reap_name, m.reap_len, &m.reap_pages);
+        let (status, detail) = match (&swap_ok, &reap_ok) {
+            (Ok(()), Ok(())) => (
+                FsckStatus::Ok,
+                format!(
+                    "{} swap + {} reap pages verified (generation {})",
+                    m.swap_pages.len(),
+                    m.reap_pages.len(),
+                    m.generation
+                ),
+            ),
+            (Ok(()), Err(e)) => {
+                // Degrade rung 2 still works if every working-set page has
+                // a verifying swap image to fall back on.
+                let swap_gvas: std::collections::HashSet<u64> =
+                    m.swap_pages.iter().map(|p| p.gva).collect();
+                if m.reap_set.iter().all(|g| swap_gvas.contains(g)) {
+                    (FsckStatus::Repairable, format!("{e}; swap fallback intact"))
+                } else {
+                    (
+                        FsckStatus::Discard,
+                        format!("{e}; working-set pages lack swap fallback"),
+                    )
+                }
+            }
+            (Err(e), _) => (FsckStatus::Discard, e.clone()),
+        };
+        reports.push(FsckReport {
+            manifest: path,
+            status,
+            detail,
+        });
+    }
+    Ok(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ImageManifest {
+        ImageManifest {
+            generation: 3,
+            file_id: 42,
+            workload: "nodejs-hello".into(),
+            swap_len: 4 * PAGE_SIZE as u64,
+            reap_len: 2 * PAGE_SIZE as u64,
+            reap_recorded_pages: 2,
+            reap_swapped_out_pages: 4,
+            swap_pages: (0..4)
+                .map(|i| ManifestPage {
+                    gva: 0x4000_0000 + i * PAGE_SIZE as u64,
+                    offset: i * PAGE_SIZE as u64,
+                    sum: 0x1000 + i,
+                })
+                .collect(),
+            reap_pages: (0..2)
+                .map(|i| ManifestPage {
+                    gva: 0x4000_0000 + i * PAGE_SIZE as u64,
+                    offset: i * PAGE_SIZE as u64,
+                    sum: 0x2000 + i,
+                })
+                .collect(),
+            reap_set: (0..2).map(|i| 0x4000_0000 + i * PAGE_SIZE as u64).collect(),
+        }
+    }
+
+    fn tmpfile(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("qh-manifest-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let path = tmpfile("rt");
+        let m = sample();
+        m.save(&path).unwrap();
+        let back = ImageManifest::load(&path).unwrap();
+        assert_eq!(back, m);
+        assert!(
+            !path.with_extension("manifest.tmp").exists(),
+            "temp sibling must be renamed away"
+        );
+        fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn torn_manifest_is_rejected() {
+        let path = tmpfile("torn");
+        sample().save(&path).unwrap();
+        let text = fs::read_to_string(&path).unwrap();
+        // Cut mid-body: the end trailer vanishes.
+        fs::write(&path, &text[..text.len() / 2]).unwrap();
+        let err = ImageManifest::load(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("torn") || msg.contains("end trailer"), "{msg}");
+        fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn edited_manifest_fails_the_self_checksum() {
+        let path = tmpfile("edited");
+        sample().save(&path).unwrap();
+        let text = fs::read_to_string(&path).unwrap();
+        // A stale-generation forgery: body edited, trailer left alone.
+        fs::write(&path, text.replace("generation 3", "generation 2")).unwrap();
+        let err = ImageManifest::load(&path).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("self-checksum mismatch"),
+            "{err:#}"
+        );
+        fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn wrong_version_and_malformed_rows_are_rejected() {
+        assert!(ImageManifest::parse("# other v9\nend 0\n").is_err());
+        let good = sample().render().unwrap();
+        // Duplicate swap gva.
+        let mut m = sample();
+        m.swap_pages.push(m.swap_pages[0]);
+        // render + fix checksum by re-rendering (render computes it).
+        assert!(
+            ImageManifest::parse(&m.render().unwrap()).is_err(),
+            "duplicate gva must be rejected"
+        );
+        // Reap table / reapset disagreement.
+        let mut m = sample();
+        m.reap_set.pop();
+        assert!(ImageManifest::parse(&m.render().unwrap()).is_err());
+        // Out-of-range offset.
+        let mut m = sample();
+        m.swap_pages[0].offset = m.swap_len;
+        assert!(ImageManifest::parse(&m.render().unwrap()).is_err());
+        // The untampered rendering still parses.
+        assert!(ImageManifest::parse(&good).is_ok());
+    }
+
+    #[test]
+    fn fsck_flags_missing_and_corrupt_files() {
+        let dir = std::env::temp_dir().join(format!("qh-fsckdir-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        // Image 1: consistent.
+        let page = vec![0x5Au8; PAGE_SIZE];
+        fs::write(dir.join("sandbox-1.swap"), &page).unwrap();
+        fs::write(dir.join("sandbox-1.reap"), "").unwrap();
+        let m = ImageManifest {
+            generation: 1,
+            file_id: 1,
+            workload: "w".into(),
+            swap_len: PAGE_SIZE as u64,
+            reap_len: 0,
+            swap_pages: vec![ManifestPage {
+                gva: 0x1000,
+                offset: 0,
+                sum: fnv1a_bytes(&page),
+            }],
+            ..Default::default()
+        };
+        m.save(&ImageManifest::path_for(&dir, 1)).unwrap();
+        // Image 2: swap bytes flipped after the manifest was written.
+        fs::write(dir.join("sandbox-2.swap"), vec![0xA5u8; PAGE_SIZE]).unwrap();
+        fs::write(dir.join("sandbox-2.reap"), "").unwrap();
+        let m2 = ImageManifest {
+            file_id: 2,
+            swap_pages: vec![ManifestPage {
+                gva: 0x1000,
+                offset: 0,
+                sum: fnv1a_bytes(&page), // recorded for the OTHER content
+            }],
+            ..m.clone()
+        };
+        m2.save(&ImageManifest::path_for(&dir, 2)).unwrap();
+        // Image 3: torn manifest.
+        fs::write(ImageManifest::path_for(&dir, 3), "# qh-image-manifest v1\ngen").unwrap();
+        let reports = fsck_dir(&dir).unwrap();
+        assert_eq!(reports.len(), 3);
+        let by_name = |n: &str| {
+            reports
+                .iter()
+                .find(|r| r.manifest.file_name().unwrap().to_str().unwrap().contains(n))
+                .unwrap()
+        };
+        assert_eq!(by_name("sandbox-1").status, FsckStatus::Ok);
+        assert_eq!(by_name("sandbox-2").status, FsckStatus::Discard);
+        assert!(by_name("sandbox-2").detail.contains("hashes to"));
+        assert_eq!(by_name("sandbox-3").status, FsckStatus::Discard);
+        fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -21,9 +21,11 @@
 //! integrity-checked in tests.
 
 pub mod file;
+pub mod manifest;
 pub mod reap;
 pub mod swap_mgr;
 
-pub use file::SwapFileSet;
+pub use file::{is_integrity, IntegrityError, SwapFileSet};
+pub use manifest::{fsck_dir, FsckReport, FsckStatus, ImageManifest, ManifestPage};
 pub use reap::{ReapRecorder, ReapState};
-pub use swap_mgr::{SwapMgr, SwapOutReport, SwapStats};
+pub use swap_mgr::{DurabilityCtx, SwapMgr, SwapOutReport, SwapStats};

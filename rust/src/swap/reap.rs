@@ -100,6 +100,19 @@ impl ReapRecorder {
         self.state == ReapState::Recorded
     }
 
+    /// Restore a `Recorded` protocol state from a persisted image manifest
+    /// (host restart adoption): the on-disk REAP image *is* the record, so
+    /// the adopted sandbox wakes by prefetch instead of re-sampling. A
+    /// recorder that is disabled by policy stays disabled — the adopted
+    /// image then only serves the page-fault path.
+    pub fn restore_recorded(&mut self, swapped_out_pages: u64, recorded_pages: u64) {
+        self.swapped_out_pages = swapped_out_pages;
+        self.recorded_pages = recorded_pages;
+        if self.state != ReapState::Disabled {
+            self.state = ReapState::Recorded;
+        }
+    }
+
     /// Fraction of swapped-out pages the request actually needed
     /// (§3.4.1's 30–90% observation). None before any record.
     pub fn working_set_fraction(&self) -> Option<f64> {

@@ -40,14 +40,80 @@
 //! touching → hibernate cycle therefore writes **zero** bytes through the
 //! REAP path as well — the inflation side of the O(dirty) contract.
 
-use super::file::{SwapFileSet, SwapSlot};
+use super::file::{IntegrityError, SwapFileSet, SwapSlot};
+use crate::config::DurabilityConfig;
 use crate::mem::host::HostMemory;
 use crate::mem::page_table::{PageTable, Pte};
 use crate::mem::{Gpa, Gva};
+use crate::obs::{EventKind, Recorder};
+use crate::platform::io_backend::is_transient;
+use crate::platform::metrics::DurabilityStats;
 use crate::simtime::{Clock, CostModel};
 use crate::PAGE_SIZE;
 use anyhow::{bail, Result};
 use std::collections::{HashMap, HashSet};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// Durability wiring for one swap manager: the retry/verify policy, the
+/// shared `durability_*` counters, and the flight recorder + identity the
+/// typed span events carry (see `docs/durability.md`).
+///
+/// Everything here lives **outside** the replay fingerprint (the
+/// [`DurabilityStats`] contract), and retry backoff is charged to the
+/// *virtual* clock — so a flaky-device run replays bit-identical at any
+/// worker count.
+pub struct DurabilityCtx {
+    pub policy: DurabilityConfig,
+    pub stats: Arc<DurabilityStats>,
+    pub recorder: Arc<Recorder>,
+    pub instance_id: u64,
+    pub workload_hash: u64,
+}
+
+impl Default for DurabilityCtx {
+    fn default() -> Self {
+        Self {
+            policy: DurabilityConfig::default(),
+            stats: Arc::new(DurabilityStats::default()),
+            recorder: Recorder::disabled(),
+            instance_id: 0,
+            workload_hash: 0,
+        }
+    }
+}
+
+/// Run `op`, retrying transient failures (the [`is_transient`] marker) up
+/// to `durability.io_retries` times with exponential backoff. The backoff
+/// (`backoff_base_us << attempt`) is charged to the **virtual** clock, so
+/// retries shift replay timestamps deterministically instead of
+/// perturbing wall-clock scheduling. Permanent errors — integrity
+/// failures above all — propagate on the first hit.
+fn retry_io<T>(
+    dur: &DurabilityCtx,
+    clock: &Clock,
+    mut op: impl FnMut() -> Result<T>,
+) -> Result<T> {
+    let mut attempt: u64 = 0;
+    loop {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) if is_transient(&e) && attempt < dur.policy.io_retries => {
+                clock.charge((dur.policy.backoff_base_us * 1_000) << attempt);
+                attempt += 1;
+                dur.stats.io_retries.fetch_add(1, Ordering::Relaxed);
+                dur.recorder.emit_workload(
+                    EventKind::IoRetry,
+                    dur.instance_id,
+                    dur.workload_hash,
+                    attempt,
+                    clock.stamp_ns(),
+                );
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
 
 /// Outcome of one swap-out pass.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -113,12 +179,29 @@ pub struct SwapMgr {
     /// image (the swap image is newer), so the next REAP swap-out must
     /// rewrite them — the REAP analogue of the `resident` set.
     reap_faulted: HashSet<u64>,
+    /// gpas whose frames were discarded by the last REAP swap-out and not
+    /// yet restored: their PTEs are still *present* (the REAP protocol
+    /// leaves them so), but the data lives only on disk. If the REAP image
+    /// is lost or corrupt, these pages must be **rescued** page-by-page
+    /// from their mirrored swap-file slots (degrade rung 2) — the set
+    /// survives [`Self::invalidate_reap_image`] for exactly that reason.
+    reap_uncommitted: HashSet<u64>,
     cost: CostModel,
+    dur: DurabilityCtx,
     stats: SwapStats,
 }
 
 impl SwapMgr {
     pub fn new(files: SwapFileSet, cost: CostModel) -> Self {
+        Self::with_durability(files, cost, DurabilityCtx::default())
+    }
+
+    pub fn with_durability(
+        mut files: SwapFileSet,
+        cost: CostModel,
+        dur: DurabilityCtx,
+    ) -> Self {
+        files.set_verify(dur.policy.verify_checksums);
         Self {
             ra_epoch: files.layout_epoch(),
             files,
@@ -128,13 +211,65 @@ impl SwapMgr {
             reap_set: Vec::new(),
             reap_slots: HashMap::new(),
             reap_faulted: HashSet::new(),
+            reap_uncommitted: HashSet::new(),
             cost,
+            dur,
             stats: SwapStats::default(),
         }
     }
 
     pub fn stats(&self) -> SwapStats {
         self.stats
+    }
+
+    /// The per-sandbox swap/REAP file pair (manifest paths, checksums,
+    /// persistence control — what `hibernate_finish` needs to write the
+    /// image manifest).
+    pub fn files(&self) -> &SwapFileSet {
+        &self.files
+    }
+
+    pub fn files_mut(&mut self) -> &mut SwapFileSet {
+        &mut self.files
+    }
+
+    /// Swap-file slot currently holding `gpa`'s image, if any.
+    pub fn swap_slot_of(&self, gpa: Gpa) -> Option<SwapSlot> {
+        self.slots.get(&gpa.0).copied()
+    }
+
+    /// REAP-file slot currently holding `gpa`'s image, if any.
+    pub fn reap_slot_of(&self, gpa: Gpa) -> Option<SwapSlot> {
+        self.reap_slots.get(&gpa.0).copied()
+    }
+
+    /// The recorded REAP working set, in record order.
+    pub fn reap_set(&self) -> &[Gpa] {
+        &self.reap_set
+    }
+
+    /// Is `gpa` a present-but-discarded REAP page that must be restored
+    /// from disk before the guest may touch it? The fault router sends
+    /// these through [`Self::fault_swap_in`] even though the PTE is not
+    /// bit-#9 marked.
+    pub fn needs_rescue(&self, gpa: Gpa) -> bool {
+        self.reap_uncommitted.contains(&gpa.0)
+    }
+
+    /// Record a read-path failure in the durability counters: integrity
+    /// errors (anywhere in the chain) count as verification failures and
+    /// emit a typed [`EventKind::IntegrityFail`] span event.
+    fn note_read_failure(&self, err: &anyhow::Error, clock: &Clock) {
+        if let Some(ie) = err.chain().find_map(|c| c.downcast_ref::<IntegrityError>()) {
+            self.dur.stats.verify_failures.fetch_add(1, Ordering::Relaxed);
+            self.dur.recorder.emit_workload(
+                EventKind::IntegrityFail,
+                self.dur.instance_id,
+                self.dur.workload_hash,
+                ie.offset,
+                clock.stamp_ns(),
+            );
+        }
     }
 
     /// Bytes of live page images in the swap file.
@@ -264,7 +399,11 @@ impl SwapMgr {
                 std::slice::from_raw_parts(host.page_ptr(gpa), PAGE_SIZE)
             }));
         }
-        report.bytes_written = match self.files.write_pages_at(&writes) {
+        let write_res = {
+            let Self { files, dur, .. } = &mut *self;
+            retry_io(dur, clock, || files.write_pages_at(&writes))
+        };
+        report.bytes_written = match write_res {
             Ok(n) => n,
             Err(e) => {
                 // Fresh slots stay unregistered: a later fault on one of
@@ -293,14 +432,61 @@ impl SwapMgr {
 
         // The cycle boundary: nothing is resident anymore, the readahead
         // window is stale (slots were remapped/rewritten), and any REAP
-        // image no longer matches the protocol state.
+        // image no longer matches the protocol state. Pages that were
+        // REAP-uncommitted are now ordinary bit-#9 pages: their PTEs were
+        // just marked swapped above, and their mirrored swap-slot images
+        // are current (the mirror invariant of `reap_swap_out`).
         self.resident.clear();
         self.ra_window = (0, 0);
         self.reap_set.clear();
+        self.reap_uncommitted.clear();
 
         self.stats.swapouts += 1;
         self.stats.pages_swapped_out += report.unique_pages;
+        self.maybe_compact_swap(clock)?;
         Ok(report)
+    }
+
+    /// Compact the swap file when live images have fallen below
+    /// `durability.compact_min_live_frac` of its length: live slots are
+    /// rewritten toward the front, the file shrinks, and the slot table is
+    /// remapped to the moved offsets. Charged as one sequential
+    /// read + write of the moved bytes.
+    fn maybe_compact_swap(&mut self, clock: &Clock) -> Result<()> {
+        let frac = self.dur.policy.compact_min_live_frac;
+        let total = self.files.swap_len() / PAGE_SIZE as u64;
+        let live = self.files.live_slots();
+        if !(frac > 0.0 && total > 0 && (live as f64) < frac * total as f64) {
+            return Ok(());
+        }
+        let moves: HashMap<u64, u64> = self.files.compact_swap()?.into_iter().collect();
+        for slot in self.slots.values_mut() {
+            if let Some(&new) = moves.get(&slot.0) {
+                *slot = SwapSlot(new);
+            }
+        }
+        let moved = moves.len() as u64 * PAGE_SIZE as u64;
+        clock.charge(self.cost.seq_read_ns(moved) + self.cost.seq_write_ns(moved));
+        Ok(())
+    }
+
+    /// REAP-file twin of [`Self::maybe_compact_swap`].
+    fn maybe_compact_reap(&mut self, clock: &Clock) -> Result<()> {
+        let frac = self.dur.policy.compact_min_live_frac;
+        let total = self.files.reap_len() / PAGE_SIZE as u64;
+        let live = self.files.reap_live_slots();
+        if !(frac > 0.0 && total > 0 && (live as f64) < frac * total as f64) {
+            return Ok(());
+        }
+        let moves: HashMap<u64, u64> = self.files.compact_reap()?.into_iter().collect();
+        for slot in self.reap_slots.values_mut() {
+            if let Some(&new) = moves.get(&slot.0) {
+                *slot = SwapSlot(new);
+            }
+        }
+        let moved = moves.len() as u64 * PAGE_SIZE as u64;
+        clock.charge(self.cost.seq_read_ns(moved) + self.cost.seq_write_ns(moved));
+        Ok(())
     }
 
     /// Handle a page fault on a bit-#9 PTE: load the page image back and
@@ -314,7 +500,13 @@ impl SwapMgr {
         clock: &Clock,
     ) -> Result<u64> {
         let pte = pt.get(gva);
-        if !pte.swapped() {
+        // Degrade rung 2: a present PTE whose frame was discarded by a REAP
+        // swap-out and whose REAP image is gone (invalidated after a failed
+        // or corrupt prefetch) is *rescued* from its mirrored swap-file
+        // slot — the page-fault machinery below works unchanged, the PTE
+        // just never transitioned through bit #9.
+        let rescue = pte.present() && self.reap_uncommitted.contains(&pte.gpa().0);
+        if !pte.swapped() && !rescue {
             bail!("fault_swap_in on non-swapped pte {pte:?} at {gva:?}");
         }
         let gpa = pte.gpa();
@@ -326,7 +518,14 @@ impl SwapMgr {
                 bail!("swapped pte {pte:?} has no swap slot");
             };
             // §Perf #3: pread straight into the guest frame, no bounce copy.
-            self.files.read_page_into(slot, host.page_ptr(gpa))?;
+            let read_res = {
+                let Self { files, dur, .. } = &mut *self;
+                retry_io(dur, clock, || files.read_page_into(slot, host.page_ptr(gpa)))
+            };
+            if let Err(e) = read_res {
+                self.note_read_failure(&e, clock);
+                return Err(e);
+            }
             host.note_commit(gpa);
             // Device cost with host swap readahead: a hit inside the
             // current readahead window is already in the page cache; a miss
@@ -353,8 +552,23 @@ impl SwapMgr {
             reads = 1;
             self.stats.pages_faulted_in += 1;
         }
-        pt.update(gva, |p| p.to_present())
-            .expect("pte vanished during swap-in");
+        if rescue {
+            // The PTE is already present — only the bookkeeping moves: the
+            // page is no longer at risk, and the rescue is counted +
+            // traced (outside the replay fingerprint).
+            self.reap_uncommitted.remove(&gpa.0);
+            self.dur.stats.reap_rescues.fetch_add(1, Ordering::Relaxed);
+            self.dur.recorder.emit_workload(
+                EventKind::DegradeRung,
+                self.dur.instance_id,
+                self.dur.workload_hash,
+                2,
+                clock.stamp_ns(),
+            );
+        } else {
+            pt.update(gva, |p| p.to_present())
+                .expect("pte vanished during swap-in");
+        }
         self.stats.fault_swapins += 1;
         Ok(reads)
     }
@@ -395,6 +609,11 @@ impl SwapMgr {
         }
 
         // Pass 2: the working set — every present anon page, deduped.
+        // Pages still REAP-uncommitted from an earlier failed wake are
+        // excluded: their frames were discarded, so the only valid image
+        // is the mirrored swap slot — recording the dead frame would
+        // capture garbage. They stay rescue-only until the guest touches
+        // them.
         let mut seen = HashSet::new();
         let mut working_set: Vec<Gpa> = Vec::new();
         for pt in tables.iter() {
@@ -402,6 +621,9 @@ impl SwapMgr {
                 if pte.present() && !pte.is_file() {
                     report.ptes_marked += 1;
                     let gpa = pte.gpa();
+                    if self.reap_uncommitted.contains(&gpa.0) {
+                        return;
+                    }
                     if seen.insert(gpa.0) {
                         working_set.push(gpa);
                     }
@@ -452,7 +674,11 @@ impl SwapMgr {
                 std::slice::from_raw_parts(host.page_ptr(gpa), PAGE_SIZE)
             }));
         }
-        report.bytes_written = match self.files.write_reap_pages_at(&writes) {
+        let write_res = {
+            let Self { files, dur, .. } = &mut *self;
+            retry_io(dur, clock, || files.write_reap_pages_at(&writes))
+        };
+        report.bytes_written = match write_res {
             Ok(n) => n,
             Err(e) => {
                 // A partial batch leaves the slots in an unknown mix of old
@@ -481,6 +707,65 @@ impl SwapMgr {
         report.live_pages = self.slots.len() as u64;
         clock.charge(self.cost.seq_write_ns(report.bytes_written));
 
+        // Mirror invariant: after a successful REAP swap-out, every
+        // working-set page's *swap*-file slot also matches its frame. The
+        // REAP protocol leaves these PTEs present, so if the REAP image is
+        // later lost or fails verification, each page can still be rescued
+        // page-by-page from the swap file (degrade rung 2). Only pages
+        // whose swap image is actually stale pay for the mirror — a page
+        // faulted *from* the swap file is already current there, so the
+        // steady-state REAP cycle mirrors nothing. Mirror bytes are
+        // charged, but deliberately not counted in the report: they are a
+        // durability cost, not part of the REAP delta.
+        let mut mirror_writes: Vec<(SwapSlot, &[u8])> = Vec::new();
+        let mut mirror_fresh: Vec<(u64, SwapSlot)> = Vec::with_capacity(4);
+        for &gpa in &working_set {
+            if !written_gpas.contains(&gpa.0) {
+                continue;
+            }
+            let slot = match self.slots.get(&gpa.0) {
+                Some(&slot) => {
+                    if !dirty_gpas.contains(&gpa.0) {
+                        continue; // faulted from swap: image already current
+                    }
+                    slot
+                }
+                None => {
+                    let slot = self.files.alloc_slot();
+                    mirror_fresh.push((gpa.0, slot));
+                    slot
+                }
+            };
+            // SAFETY: frames owned by this sandbox; guest paused.
+            mirror_writes.push((slot, unsafe {
+                std::slice::from_raw_parts(host.page_ptr(gpa), PAGE_SIZE)
+            }));
+        }
+        let mirror_res = {
+            let Self { files, dur, .. } = &mut *self;
+            retry_io(dur, clock, || files.write_pages_at(&mirror_writes))
+        };
+        let mirror_bytes = match mirror_res {
+            Ok(n) => n,
+            Err(e) => {
+                // The REAP delta landed, but without current mirrors the
+                // image would not be safely degradable — give it up rather
+                // than risk rescuing stale bytes later. Frames are still
+                // resident (nothing was discarded), DIRTY/`reap_faulted`
+                // marks are intact, and the never-registered mirror slots
+                // return to the free list.
+                self.reap_set.clear();
+                for (_, slot) in mirror_fresh {
+                    self.files.free_slot(slot);
+                }
+                return Err(e);
+            }
+        };
+        for (gpa, slot) in mirror_fresh {
+            self.slots.insert(gpa, slot);
+        }
+        clock.charge(self.cost.seq_write_ns(mirror_bytes));
+
         // The written images are the frames' truth again: clear DIRTY so
         // an untouched next cycle counts them clean (writers re-mark it,
         // the way the MMU would).
@@ -503,8 +788,13 @@ impl SwapMgr {
         self.reap_faulted.clear();
 
         self.reap_set = working_set;
+        // Until the next successful restore, these pages exist only on
+        // disk behind present PTEs — track them so a lost REAP image can
+        // still be served one rescue fault at a time.
+        self.reap_uncommitted.extend(seen);
         self.stats.reap_swapouts += 1;
         self.stats.reap_pages_out += report.unique_pages;
+        self.maybe_compact_reap(clock)?;
         Ok(report)
     }
 
@@ -526,7 +816,22 @@ impl SwapMgr {
                 std::slice::from_raw_parts_mut(host.page_ptr(gpa), PAGE_SIZE)
             }));
         }
-        let bytes = self.files.read_reap_pages_at(&mut reads)?;
+        let read_res = {
+            let Self { files, dur, .. } = &mut *self;
+            retry_io(dur, clock, || files.read_reap_pages_at(&mut reads))
+        };
+        drop(reads);
+        let bytes = match read_res {
+            Ok(n) => n,
+            Err(e) => {
+                // Nothing was committed: the frames stay logically empty
+                // and every page is still rescuable from its swap mirror.
+                // The caller decides the next rung (invalidate the image,
+                // fall back to per-page faults).
+                self.note_read_failure(&e, clock);
+                return Err(e);
+            }
+        };
         for &gpa in &self.reap_set {
             host.note_commit(gpa);
             // The restored frame may be newer than the *swap* slot image
@@ -534,6 +839,8 @@ impl SwapMgr {
             // full swap-out must rewrite it — but it exactly matches the
             // REAP image it was just read from, so it is *not* REAP-stale.
             self.resident.insert(gpa.0);
+            // Restored: no longer at risk behind a present PTE.
+            self.reap_uncommitted.remove(&gpa.0);
         }
         clock.charge(self.cost.seq_read_ns(bytes));
         let pages = self.reap_set.len() as u64;
@@ -546,6 +853,48 @@ impl SwapMgr {
     /// completed)?
     pub fn has_reap_image(&self) -> bool {
         !self.reap_set.is_empty()
+    }
+
+    /// Degrade rung 1: give up on the REAP image after a failed or
+    /// corrupt prefetch. The recorded set is dropped and every REAP slot
+    /// freed — but the *uncommitted* set survives, because those pages'
+    /// frames are gone and must now be rescued one by one from their
+    /// mirrored swap-file slots (rung 2) as the guest touches them.
+    pub fn invalidate_reap_image(&mut self, clock: &Clock) {
+        self.reap_set.clear();
+        let slots: Vec<SwapSlot> = self.reap_slots.drain().map(|(_, s)| s).collect();
+        for slot in slots {
+            self.files.free_reap_slot(slot);
+        }
+        self.dur.recorder.emit_workload(
+            EventKind::DegradeRung,
+            self.dur.instance_id,
+            self.dur.workload_hash,
+            1,
+            clock.stamp_ns(),
+        );
+    }
+
+    /// Rebuild the in-memory protocol state from a validated image
+    /// manifest (host restart adoption). The caller has already re-marked
+    /// the PTEs: swap rows are bit-#9 swapped, REAP rows are present. All
+    /// REAP pages start *uncommitted* — their frames do not exist yet —
+    /// so a wake prefetches them, and if that fails they rescue from
+    /// their swap mirrors like any post-REAP page.
+    pub fn adopt_image(
+        &mut self,
+        swap_slots: Vec<(Gpa, SwapSlot)>,
+        reap_slots: Vec<(Gpa, SwapSlot)>,
+        reap_set: Vec<Gpa>,
+    ) {
+        self.slots = swap_slots.into_iter().map(|(g, s)| (g.0, s)).collect();
+        self.reap_slots = reap_slots.into_iter().map(|(g, s)| (g.0, s)).collect();
+        self.reap_uncommitted = reap_set.iter().map(|g| g.0).collect();
+        self.reap_set = reap_set;
+        self.resident.clear();
+        self.reap_faulted.clear();
+        self.ra_window = (0, 0);
+        self.ra_epoch = self.files.layout_epoch();
     }
 }
 
@@ -1083,5 +1432,203 @@ mod tests {
             m.page_fault_handling_ns + m.guest_host_switch_ns + m.readahead_cluster_ns(),
             "slot remap must invalidate the window even without a swap-out"
         );
+    }
+
+    #[test]
+    fn lost_reap_image_rescues_pages_from_swap_mirrors() {
+        // Degrade rungs 1+2: the REAP image is invalidated after a failed
+        // prefetch; the working-set pages — present PTEs, discarded frames
+        // — must come back one rescue fault at a time from their mirrored
+        // swap-file slots, with their *latest* content (the mirror, not
+        // the pre-request swap image).
+        let mut r = rig("rescue");
+        let (mut pt, gpas, sums) = populate(&r, 6);
+        r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        for i in 0..4u64 {
+            r.mgr
+                .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
+                .unwrap();
+        }
+        // The request dirtied pages 0 and 1: their swap images are stale,
+        // so the REAP swap-out must mirror exactly those two.
+        let mut new_sums = HashMap::new();
+        for i in 0..2u64 {
+            r.host.fill_page(gpas[i as usize], 0x6E57 + i).unwrap();
+            pt.update(Gva(i * 0x1000), |p| p.with(Pte::DIRTY)).unwrap();
+            new_sums.insert(
+                i as usize,
+                r.host.checksum_page(gpas[i as usize]).unwrap(),
+            );
+        }
+        let rpt = r.mgr.reap_swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        assert_eq!(rpt.unique_pages, 4);
+        assert_eq!(
+            rpt.bytes_written,
+            4 * PAGE_SIZE as u64,
+            "mirror writes are charged but not part of the REAP delta"
+        );
+        // The image is lost (crash, corruption): rung 1.
+        r.mgr.invalidate_reap_image(&r.clock);
+        assert!(!r.mgr.has_reap_image());
+        // Rung 2: each page rescues from its swap mirror as it is touched.
+        for i in 0..4u64 {
+            let gpa = gpas[i as usize];
+            assert!(r.mgr.needs_rescue(gpa));
+            assert!(pt.get(Gva(i * 0x1000)).present(), "REAP left the PTE present");
+            let reads = r
+                .mgr
+                .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
+                .unwrap();
+            assert_eq!(reads, 1);
+            let want = new_sums.get(&(i as usize)).copied().unwrap_or(sums[i as usize]);
+            assert_eq!(
+                r.host.checksum_page(gpa).unwrap(),
+                want,
+                "rescued page {i} must carry its latest content"
+            );
+            assert!(!r.mgr.needs_rescue(gpa));
+            assert!(pt.get(Gva(i * 0x1000)).present());
+        }
+        assert_eq!(r.mgr.dur.stats.reap_rescues.load(Ordering::Relaxed), 4);
+        // Pages outside the working set still fault in the ordinary way.
+        r.mgr
+            .fault_swap_in(&mut pt, Gva(5 * 0x1000), &r.host, &r.clock)
+            .unwrap();
+        assert_eq!(r.host.checksum_page(gpas[5]).unwrap(), sums[5]);
+    }
+
+    #[test]
+    fn transient_write_error_retries_and_succeeds() {
+        use crate::platform::io_backend::{
+            IoBackend, IoClass, IoDir, IoRun, IoStats, SyncBackend, TransientIo,
+        };
+        use std::fs::File;
+        use std::sync::atomic::AtomicU64;
+
+        /// Fails the first `remaining` executes with the transient marker,
+        /// then delegates — a device hiccup, not a corruption.
+        struct FlakyOnce {
+            inner: SyncBackend,
+            remaining: AtomicU64,
+        }
+
+        impl IoBackend for FlakyOnce {
+            fn execute(
+                &self,
+                file: &Arc<File>,
+                runs: Vec<IoRun>,
+                dir: IoDir,
+                class: IoClass,
+            ) -> Result<u64> {
+                if self.remaining.load(Ordering::Relaxed) > 0 {
+                    self.remaining.fetch_sub(1, Ordering::Relaxed);
+                    return Err(anyhow::Error::new(TransientIo)
+                        .context("injected transient write failure"));
+                }
+                self.inner.execute(file, runs, dir, class)
+            }
+            fn name(&self) -> &'static str {
+                "flaky-once"
+            }
+            fn stats(&self) -> &Arc<IoStats> {
+                self.inner.stats()
+            }
+        }
+
+        let host = Arc::new(test_region(64));
+        let len = host.size() as u64;
+        let heap = Arc::new(BuddyAllocator::new(host.clone(), 0, len).unwrap());
+        let alloc = Arc::new(BitmapPageAllocator::new(host.clone(), heap));
+        let dir = PathBuf::from(std::env::temp_dir())
+            .join(format!("qh-swapmgr-flaky-{}", std::process::id()));
+        let io: Arc<dyn IoBackend> = Arc::new(FlakyOnce {
+            inner: SyncBackend::new(),
+            remaining: AtomicU64::new(1),
+        });
+        let files = SwapFileSet::create_with_backend(&dir, 0, io).unwrap();
+        let ctx = DurabilityCtx::default();
+        let stats = ctx.stats.clone();
+        let backoff_base_us = ctx.policy.backoff_base_us;
+        let mut mgr = SwapMgr::with_durability(files, CostModel::paper(), ctx);
+        let clock = Clock::new();
+
+        let mut pt = PageTable::new();
+        let mut gpas = Vec::new();
+        let mut sums = Vec::new();
+        for i in 0..4u64 {
+            let gpa = alloc.alloc_page().unwrap();
+            host.fill_page(gpa, 0xE770 + i).unwrap();
+            pt.map(Gva(i * 0x1000), Pte::new_present(gpa, Pte::WRITABLE));
+            sums.push(host.checksum_page(gpa).unwrap());
+            gpas.push(gpa);
+        }
+        let before = clock.charged_ns();
+        let rpt = mgr.swap_out(&mut [&mut pt], &host, &clock).unwrap();
+        assert_eq!(rpt.unique_pages, 4, "one retry must absorb the hiccup");
+        assert_eq!(stats.io_retries.load(Ordering::Relaxed), 1);
+        assert!(
+            clock.charged_ns() - before >= backoff_base_us * 1_000,
+            "backoff must be charged to the virtual clock"
+        );
+        // No data was lost and the image was never invalidated.
+        for i in 0..4u64 {
+            mgr.fault_swap_in(&mut pt, Gva(i * 0x1000), &host, &clock)
+                .unwrap();
+            assert_eq!(
+                host.checksum_page(gpas[i as usize]).unwrap(),
+                sums[i as usize]
+            );
+        }
+    }
+
+    #[test]
+    fn shrunken_live_set_triggers_compaction_of_both_files() {
+        // When live images fall below `compact_min_live_frac` of the file,
+        // the cycle that got them there compacts: the file shrinks and
+        // every surviving image remains readable at its moved offset.
+        let mut r = rig("compact");
+        let (mut pt, gpas, sums) = populate(&r, 8);
+        r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        for i in 0..8u64 {
+            r.mgr
+                .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
+                .unwrap();
+        }
+        r.mgr.reap_swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        assert_eq!(r.mgr.files.reap_len(), 8 * PAGE_SIZE as u64);
+        r.mgr.reap_swap_in(&r.host, &r.clock).unwrap();
+        // 6 pages are unmapped (freed scratch): live falls to 2/8 < 1/2.
+        for i in 0..6u64 {
+            pt.unmap(Gva(i * 0x1000));
+            r.alloc.dec_ref(gpas[i as usize]);
+        }
+        let rpt = r.mgr.reap_swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        assert_eq!(rpt.unique_pages, 0, "survivors' images were still current");
+        assert_eq!(r.mgr.reap_live_pages(), 2);
+        assert_eq!(
+            r.mgr.files.reap_len(),
+            2 * PAGE_SIZE as u64,
+            "REAP file must shrink to the live set"
+        );
+        // The survivors prefetch correctly from their moved slots.
+        let n = r.mgr.reap_swap_in(&r.host, &r.clock).unwrap();
+        assert_eq!(n, 2);
+        for i in 6..8usize {
+            assert_eq!(r.host.checksum_page(gpas[i]).unwrap(), sums[i]);
+        }
+        // The swap file compacts on its next full cycle the same way.
+        let rpt = r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+        assert_eq!(rpt.live_pages, 2);
+        assert_eq!(
+            r.mgr.files.swap_len(),
+            2 * PAGE_SIZE as u64,
+            "swap file must shrink to the live set"
+        );
+        for i in 6..8u64 {
+            r.mgr
+                .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
+                .unwrap();
+            assert_eq!(r.host.checksum_page(gpas[i as usize]).unwrap(), sums[i as usize]);
+        }
     }
 }

@@ -44,8 +44,15 @@ pub fn human_ns(ns: u64) -> String {
 /// makes no cross-release stability promise, so placement-sensitive code
 /// uses this instead.
 pub fn fnv1a(s: &str) -> u64 {
+    fnv1a_bytes(s.as_bytes())
+}
+
+/// FNV-1a 64-bit over raw bytes — the page-image checksum the durable
+/// swap/REAP slot tables record and verify (see `docs/durability.md`).
+/// Same function as [`fnv1a`], exposed for non-UTF-8 payloads.
+pub fn fnv1a_bytes(data: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in s.as_bytes() {
+    for b in data {
         h ^= *b as u64;
         h = h.wrapping_mul(0x100_0000_01b3);
     }
@@ -94,6 +101,19 @@ mod tests {
         // Deterministic and spread-out enough to place shards.
         assert_eq!(fnv1a("nodejs-hello"), fnv1a("nodejs-hello"));
         assert_ne!(fnv1a("nodejs-hello") % 8, fnv1a("golang-hello") % 8);
+    }
+
+    #[test]
+    fn fnv1a_bytes_matches_str_and_detects_flips() {
+        assert_eq!(fnv1a_bytes(b"foobar"), fnv1a("foobar"));
+        let page = vec![0xA5u8; 4096];
+        let mut flipped = page.clone();
+        flipped[1234] ^= 0x01;
+        assert_ne!(
+            fnv1a_bytes(&page),
+            fnv1a_bytes(&flipped),
+            "a single bit flip must change the page checksum"
+        );
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! still drops its reservation, so the platform drains and serves
 //! afterwards.
 
-use quark_hibernate::config::SharingConfig;
+use quark_hibernate::config::{PlatformConfig, SharingConfig};
 use quark_hibernate::container::sandbox::{Sandbox, SandboxServices};
 use quark_hibernate::container::NoopRunner;
 use quark_hibernate::mem::bitmap_alloc::BitmapPageAllocator;
@@ -21,28 +21,49 @@ use quark_hibernate::mem::host::HostMemory;
 use quark_hibernate::mem::page_table::{PageTable, Pte};
 use quark_hibernate::mem::{Gpa, Gva};
 use quark_hibernate::platform::io_backend::{
-    BatchedBackend, IoBackend, IoClass, IoDir, IoRun,
+    BatchedBackend, IoBackend, IoClass, IoDir, IoRun, TransientIo,
 };
-use quark_hibernate::platform::metrics::{IoStats, Metrics};
+use quark_hibernate::platform::metrics::{DurabilityStats, IoStats, Metrics, ServedFrom};
 use quark_hibernate::platform::pipeline::{InstancePipeline, JobKind, PipelineJob};
 use quark_hibernate::platform::policy::WakeLeads;
 use quark_hibernate::platform::pool::FunctionPool;
+use quark_hibernate::platform::Platform;
 use quark_hibernate::simtime::{Clock, CostModel};
 use quark_hibernate::swap::file::SwapFileSet;
-use quark_hibernate::swap::SwapMgr;
+use quark_hibernate::swap::{fsck_dir, is_integrity, DurabilityCtx, FsckStatus, SwapMgr};
 use quark_hibernate::workloads::functionbench::{golang_hello, scaled_for_test};
 use std::fs::File;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::os::unix::fs::FileExt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
-/// Wraps the batched backend; injects batch write/read failures on
-/// demand. When a batch of several runs fails, the first run is landed
-/// before the error — a genuinely *partial* batch, the worst case the
-/// recovery contracts have to absorb.
+/// Wraps the batched backend; injects batch write/read failures and
+/// silent corruption on demand. When a batch of several runs fails, the
+/// first run is landed before the error — a genuinely *partial* batch,
+/// the worst case the recovery contracts have to absorb.
+///
+/// Corruption modes (each proves a different detection path of the
+/// durability ladder):
+/// * **transient** — the first N writes fail with the [`TransientIo`]
+///   marker (a flaky-but-recoverable device): the swap layer must retry
+///   with backoff and succeed without invalidating anything.
+/// * **bit flip** — the write lands, then one bit of the first slot
+///   rots on the medium: the recorded checksum must catch it at read
+///   time (typed integrity error, never served).
+/// * **torn write** — only the first run of the batch reaches the disk
+///   but the device *reports full success* (a lying write cache): the
+///   unlanded slots' checksums must catch it at read time.
 struct FlakyBackend {
     inner: BatchedBackend,
     fail_writes: AtomicBool,
     fail_reads: AtomicBool,
+    /// Fail this many upcoming writes with the transient marker.
+    transient_writes: AtomicU64,
+    /// Corrupt (bit-flip) the first slot of the next write batch.
+    flip_next_write: AtomicBool,
+    /// Tear the next write batch: land the first run only, report success.
+    tear_next_write: AtomicBool,
 }
 
 impl FlakyBackend {
@@ -51,6 +72,9 @@ impl FlakyBackend {
             inner: BatchedBackend::new(2, 1 << 20, 8, Arc::new(IoStats::default())),
             fail_writes: AtomicBool::new(false),
             fail_reads: AtomicBool::new(false),
+            transient_writes: AtomicU64::new(0),
+            flip_next_write: AtomicBool::new(false),
+            tear_next_write: AtomicBool::new(false),
         })
     }
 
@@ -60,6 +84,18 @@ impl FlakyBackend {
 
     fn fail_reads(&self, on: bool) {
         self.fail_reads.store(on, Ordering::Relaxed);
+    }
+
+    fn transient_writes(&self, n: u64) {
+        self.transient_writes.store(n, Ordering::Relaxed);
+    }
+
+    fn flip_next_write(&self) {
+        self.flip_next_write.store(true, Ordering::Relaxed);
+    }
+
+    fn tear_next_write(&self) {
+        self.tear_next_write.store(true, Ordering::Relaxed);
     }
 }
 
@@ -71,6 +107,11 @@ impl IoBackend for FlakyBackend {
         dir: IoDir,
         class: IoClass,
     ) -> anyhow::Result<u64> {
+        if dir == IoDir::Write && self.transient_writes.load(Ordering::Relaxed) > 0 {
+            self.transient_writes.fetch_sub(1, Ordering::Relaxed);
+            return Err(anyhow::Error::new(TransientIo)
+                .context("injected transient pwritev failure"));
+        }
         let (failing, verb) = match dir {
             IoDir::Write => (self.fail_writes.load(Ordering::Relaxed), "pwritev"),
             IoDir::Read => (self.fail_reads.load(Ordering::Relaxed), "preadv"),
@@ -83,7 +124,33 @@ impl IoBackend for FlakyBackend {
             }
             anyhow::bail!("injected {verb} failure");
         }
-        self.inner.execute(file, runs, dir, class)
+        if dir == IoDir::Write && self.tear_next_write.swap(false, Ordering::Relaxed) {
+            // Torn (short) write: only the tail of the first run reaches
+            // the disk — the head slots stay a sparse hole — but the
+            // device claims the whole batch landed (a lying write cache
+            // losing power mid-flush). The hole reads back as zeros, so
+            // only the recorded checksums can catch it.
+            let claimed: u64 = runs.iter().map(|r| r.bytes()).sum();
+            let mut first = runs.into_iter().next().unwrap();
+            let drop_n = first.pages.len() - first.pages.len() / 2;
+            first.offset += (drop_n * quark_hibernate::PAGE_SIZE) as u64;
+            first.pages.drain(..drop_n);
+            if !first.pages.is_empty() {
+                self.inner.execute(file, vec![first], dir, class)?;
+            }
+            return Ok(claimed);
+        }
+        let flip = dir == IoDir::Write && self.flip_next_write.swap(false, Ordering::Relaxed);
+        let corrupt_at = flip.then(|| runs[0].offset);
+        let n = self.inner.execute(file, runs, dir, class)?;
+        if let Some(off) = corrupt_at {
+            // Silent media corruption after the write was acknowledged.
+            let mut b = [0u8; 1];
+            file.read_exact_at(&mut b, off)?;
+            b[0] ^= 0x01;
+            file.write_all_at(&b, off)?;
+        }
+        Ok(n)
     }
 
     fn name(&self) -> &'static str {
@@ -105,22 +172,38 @@ struct IoRig {
 }
 
 fn io_rig(tag: &str) -> IoRig {
+    io_rig_durable(tag).0
+}
+
+/// [`io_rig`] plus the durability-stats block the manager reports into —
+/// for tests asserting verify-failure / retry / rescue counters.
+fn io_rig_durable(tag: &str) -> (IoRig, Arc<DurabilityStats>) {
     let host = Arc::new(HostMemory::new(64 << 20).unwrap());
     let heap = Arc::new(BuddyAllocator::new(host.clone(), 0, host.size() as u64).unwrap());
     let alloc = BitmapPageAllocator::new(host.clone(), heap);
     let flaky = FlakyBackend::new();
-    let dir = std::env::temp_dir().join(format!(
-        "qh-failinj-io-{tag}-{}",
-        std::process::id()
-    ));
+    let dir =
+        std::env::temp_dir().join(format!("qh-failinj-io-{tag}-{}", std::process::id()));
     let files = SwapFileSet::create_with_backend(&dir, 1, flaky.clone()).unwrap();
-    IoRig {
-        host,
-        alloc,
-        mgr: SwapMgr::new(files, CostModel::paper()),
-        clock: Clock::new(),
-        flaky,
-    }
+    let stats = Arc::new(DurabilityStats::default());
+    let mgr = SwapMgr::with_durability(
+        files,
+        CostModel::paper(),
+        DurabilityCtx {
+            stats: stats.clone(),
+            ..Default::default()
+        },
+    );
+    (
+        IoRig {
+            host,
+            alloc,
+            mgr,
+            clock: Clock::new(),
+            flaky,
+        },
+        stats,
+    )
 }
 
 /// Map `n` anon pages with verifiable contents at gvas `i * 0x1000`;
@@ -570,6 +653,9 @@ fn injected_pipeline_failure_drops_reservation_and_keeps_draining() {
             kind: JobKind::Deflate,
             live_gauge: inst.live_gauge.clone(),
             est_bytes: inst.live_bytes(),
+            instance_id: idx as u64,
+            submitted_vns: 0,
+            enqueued_wall: Instant::now(),
         }
     };
 
@@ -604,4 +690,248 @@ fn injected_pipeline_failure_drops_reservation_and_keeps_draining() {
         quark_hibernate::container::state::ContainerState::Hibernate
     );
     assert!(!pool.instances[1].is_reserved());
+}
+
+#[test]
+fn bit_flipped_swap_slot_is_a_typed_integrity_error_never_served() {
+    // Silent media corruption after an acknowledged write: the per-page
+    // checksum must catch the rot at read time as a *typed* integrity
+    // error — the corrupt bytes are never presented as page content, and
+    // the PTE stays swap-marked.
+    let (mut r, stats) = io_rig_durable("bitflip");
+    let mut pt = PageTable::new();
+    let (_gpas, sums) = map_pages(&r, &mut pt, 4);
+    r.flaky.flip_next_write();
+    r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+
+    let mut integrity_failures = 0usize;
+    for i in 0..4u64 {
+        let gva = Gva(i * 0x1000);
+        match r.mgr.fault_swap_in(&mut pt, gva, &r.host, &r.clock) {
+            Ok(_) => {
+                let gpa = pt.get(gva).gpa();
+                assert_eq!(
+                    r.host.checksum_page(gpa).unwrap(),
+                    sums[i as usize],
+                    "page {i} served with wrong content"
+                );
+            }
+            Err(e) => {
+                assert!(
+                    is_integrity(&e),
+                    "corruption must surface as a typed integrity error: {e:#}"
+                );
+                assert!(
+                    pt.get(gva).swapped(),
+                    "a failed verify must not re-present the PTE"
+                );
+                integrity_failures += 1;
+            }
+        }
+    }
+    assert_eq!(integrity_failures, 1, "exactly the flipped slot must fail");
+    assert_eq!(stats.verify_failures.load(Ordering::Relaxed), 1);
+}
+
+#[test]
+fn torn_reap_write_is_detected_at_wake_and_rescued_from_the_swap_file() {
+    // A torn REAP delta — the device claims success but only half the
+    // batch reached the disk. The wake's prefetch must detect it via the
+    // recorded checksums (never serve the stale slot bytes), and after
+    // invalidating the image every page still round-trips through its
+    // intact swap-file mirror: ladder rung 1 → 2, no data loss.
+    let (mut r, stats) = io_rig_durable("torn");
+    let mut pt = PageTable::new();
+    let (_gpas, sums) = map_pages(&r, &mut pt, 8);
+    r.mgr.swap_out(&mut [&mut pt], &r.host, &r.clock).unwrap();
+    for i in 0..4u64 {
+        r.mgr
+            .fault_swap_in(&mut pt, Gva(i * 0x1000), &r.host, &r.clock)
+            .unwrap();
+    }
+    r.flaky.tear_next_write();
+    let rpt = r
+        .mgr
+        .reap_swap_out(&mut [&mut pt], &r.host, &r.clock)
+        .unwrap();
+    assert_eq!(rpt.unique_pages, 4, "the device lied: the call 'succeeded'");
+    assert!(r.mgr.has_reap_image());
+
+    let err = r.mgr.reap_swap_in(&r.host, &r.clock).unwrap_err();
+    assert!(
+        is_integrity(&err),
+        "torn slots must fail the checksum, typed: {err:#}"
+    );
+    assert!(stats.verify_failures.load(Ordering::Relaxed) >= 1);
+
+    // Rung 2: drop the image, fall back to per-page faults against the
+    // swap file — whose slots the torn REAP write never touched.
+    r.mgr.invalidate_reap_image(&r.clock);
+    assert!(!r.mgr.has_reap_image());
+    for i in 0..8u64 {
+        let gva = Gva(i * 0x1000);
+        if pt.get(gva).swapped() {
+            r.mgr
+                .fault_swap_in(&mut pt, gva, &r.host, &r.clock)
+                .unwrap();
+        }
+        let gpa = pt.get(gva).gpa();
+        assert_eq!(
+            r.host.checksum_page(gpa).unwrap(),
+            sums[i as usize],
+            "page {i} must be recoverable from the swap mirror"
+        );
+    }
+}
+
+#[test]
+fn transient_write_failure_is_retried_and_never_invalidates() {
+    // A flaky-but-recoverable device (EINTR class): the swap layer must
+    // absorb it with a bounded, virtually-charged retry — the hibernate
+    // succeeds, nothing is invalidated, and the wake serves normally.
+    let flaky = FlakyBackend::new();
+    let svc = SandboxServices::new_local_with_io(
+        512 << 20,
+        CostModel::free(),
+        SharingConfig::default(),
+        Arc::new(NoopRunner),
+        "failinj-transient",
+        flaky.clone(),
+    )
+    .unwrap();
+    let clock = Clock::new();
+    let mut sb =
+        Sandbox::cold_start(1, scaled_for_test(golang_hello(), 16), svc.clone(), &clock)
+            .unwrap();
+    sb.handle_request(&clock).unwrap();
+
+    flaky.transient_writes(1);
+    sb.hibernate(&clock).unwrap();
+    assert!(
+        svc.durability_stats.io_retries.load(Ordering::Relaxed) >= 1,
+        "the transient failure must be retried, not surfaced"
+    );
+
+    let out = sb.handle_request(&clock).unwrap();
+    assert_eq!(
+        out.from,
+        quark_hibernate::container::state::ContainerState::Hibernate,
+        "the retried image must wake normally"
+    );
+    sb.terminate().unwrap();
+}
+
+#[test]
+fn truncated_image_file_is_flagged_by_offline_fsck() {
+    // `repro fsck` semantics: a clean hibernated image verifies ok; after
+    // the swap file is truncated behind the platform's back, the image is
+    // flagged discard with the length mismatch spelled out.
+    let flaky = FlakyBackend::new();
+    let svc = SandboxServices::new_local_with_io(
+        512 << 20,
+        CostModel::free(),
+        SharingConfig::default(),
+        Arc::new(NoopRunner),
+        "failinj-fsck",
+        flaky,
+    )
+    .unwrap();
+    let clock = Clock::new();
+    let mut sb =
+        Sandbox::cold_start(3, scaled_for_test(golang_hello(), 16), svc.clone(), &clock)
+            .unwrap();
+    sb.handle_request(&clock).unwrap();
+    sb.hibernate(&clock).unwrap();
+
+    let reports = fsck_dir(&svc.swap_dir).unwrap();
+    assert_eq!(reports.len(), 1);
+    assert_eq!(reports[0].status, FsckStatus::Ok, "{}", reports[0].detail);
+
+    let swap_path = svc.swap_dir.join("sandbox-3.swap");
+    let f = std::fs::OpenOptions::new()
+        .write(true)
+        .open(&swap_path)
+        .unwrap();
+    let len = f.metadata().unwrap().len();
+    f.set_len(len / 2).unwrap();
+
+    let reports = fsck_dir(&svc.swap_dir).unwrap();
+    assert_eq!(reports.len(), 1);
+    assert_eq!(reports[0].status, FsckStatus::Discard);
+    assert!(
+        reports[0].detail.contains("length"),
+        "the verdict must name the damage: {}",
+        reports[0].detail
+    );
+    sb.terminate().unwrap();
+}
+
+#[test]
+fn stale_image_bytes_degrade_to_a_cold_start_through_the_full_ladder() {
+    // End-to-end bottom rung: a manifest left behind by generation N
+    // while the slot files hold bytes it never described (the
+    // stale-manifest case — here every slot rewritten in place, lengths
+    // intact). Offline fsck flags it; the restarted platform still
+    // adopts it (the manifest alone is internally consistent), and the
+    // first wake's checksum failures must walk the ladder to rung 3:
+    // retire the instance, count a degraded cold start, and serve the
+    // request from a fresh replacement — never the stale bytes.
+    let dir = std::env::temp_dir()
+        .join(format!("qh-failinj-stale-{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    std::fs::remove_dir_all(&dir).ok();
+    let mut cfg = PlatformConfig::default();
+    cfg.host_memory = 512 << 20;
+    cfg.cost = CostModel::paper();
+    cfg.policy.hibernate_idle_ms = 10;
+    cfg.policy.predictive_wakeup = false;
+    cfg.swap_dir = dir.clone();
+
+    let p = Platform::new(cfg.clone(), Arc::new(NoopRunner)).unwrap();
+    p.deploy(scaled_for_test(golang_hello(), 16)).unwrap();
+    let r1 = p.request_at("golang-hello", 0).unwrap();
+    p.policy_tick(r1.latency_ns + 50_000_000).unwrap();
+    drop(p);
+
+    // "Generation skew": overwrite every swap-file byte in place.
+    let swap_path = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .find(|p| p.extension().is_some_and(|x| x == "swap"))
+        .expect("the hibernated image must have persisted a swap file");
+    let len = std::fs::metadata(&swap_path).unwrap().len();
+    std::fs::write(&swap_path, vec![0xABu8; len as usize]).unwrap();
+
+    let reports = fsck_dir(std::path::Path::new(&dir)).unwrap();
+    assert!(
+        reports.iter().any(|r| r.status == FsckStatus::Discard),
+        "offline fsck must flag the stale image: {reports:?}"
+    );
+
+    let p2 = Platform::new(cfg, Arc::new(NoopRunner)).unwrap();
+    p2.deploy(scaled_for_test(golang_hello(), 16)).unwrap();
+    assert_eq!(
+        p2.metrics.durability.manifests_adopted.load(Ordering::Relaxed),
+        1,
+        "the manifest alone parses — adoption happens, detection is at read"
+    );
+    let r2 = p2.request_at("golang-hello", 0).unwrap();
+    assert_eq!(
+        r2.served_from,
+        ServedFrom::ColdStart,
+        "stale bytes must degrade to a cold start, never be served"
+    );
+    assert_eq!(
+        p2.metrics
+            .durability
+            .degraded_cold_starts
+            .load(Ordering::Relaxed),
+        1
+    );
+    assert!(p2.metrics.durability.verify_failures.load(Ordering::Relaxed) >= 1);
+    // The replacement instance is healthy: the next request serves warm.
+    let r3 = p2.request_at("golang-hello", r2.latency_ns + 1).unwrap();
+    assert_eq!(r3.served_from, ServedFrom::Warm);
+    std::fs::remove_dir_all(&dir).ok();
 }

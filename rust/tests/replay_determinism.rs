@@ -393,6 +393,48 @@ fn sync_and_batched_backends_produce_equal_fingerprints() {
 }
 
 #[test]
+fn durability_machinery_is_fingerprint_neutral_and_bit_identical() {
+    // The durability layer (per-slot checksums recorded + verified on
+    // every swap read, manifests written at every hibernate, retry
+    // budget armed) runs inside all of these replays by default. Pin it
+    // explicitly: (1) with the knobs cranked, 1 worker ≡ 8 workers
+    // bit-for-bit — checksum work and manifest temp+rename I/O charge
+    // nothing scheduling-dependent; (2) turning verification *off* does
+    // not move the fingerprint either, because checksums are read-side
+    // guards, never behavior; (3) the machinery genuinely ran (manifests
+    // were written), visible only in the `durability_*` stats block that
+    // stays outside `Counters::snapshot()` and the fingerprint.
+    let run = scenario::build("azure-heavy-tail", 96, 20_000_000_000, 0xD0B1).unwrap();
+    let mk = |tag: &str, verify: bool| {
+        let mut cfg = det_cfg(tag);
+        cfg.durability.verify_checksums = verify;
+        cfg.durability.io_retries = 3;
+        cfg
+    };
+    let (r1, p1) = replay::run_scenario(&mk("dur1", true), &run, 1).unwrap();
+    let (r8, p8) = replay::run_scenario(&mk("dur8", true), &run, 8).unwrap();
+    assert_eq!(r8.workers, 8, "8 workers must actually be used");
+    assert_eq!(r1.counters, r8.counters);
+    assert_eq!(r1.fingerprint(), r8.fingerprint());
+
+    let written = |p: &quark_hibernate::platform::Platform| {
+        p.metrics
+            .durability
+            .manifests_written
+            .load(std::sync::atomic::Ordering::Relaxed)
+    };
+    assert!(written(&p1) > 0, "hibernates must have persisted manifests");
+    assert_eq!(written(&p1), written(&p8), "manifest count is deterministic");
+
+    let (r_off, _) = replay::run_scenario(&mk("duroff", false), &run, 4).unwrap();
+    assert_eq!(
+        r1.fingerprint(),
+        r_off.fingerprint(),
+        "checksum verification must be observationally free"
+    );
+}
+
+#[test]
 fn determinism_holds_across_scenarios_and_seeds() {
     // Property: for any seed and any scenario shape, 1 worker ≡ 4 workers.
     let names = [

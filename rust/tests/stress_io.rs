@@ -250,6 +250,18 @@ fn demand_wake_stays_bounded_under_a_deflation_storm() {
         0,
         "in-flight gauge must settle to zero after the drain"
     );
+    // Checksum verification rode along on every one of those reads: a
+    // clean (uninjected) storm must never trip it, and every hibernate
+    // must have persisted its manifest sidecar.
+    assert_eq!(
+        p.metrics.durability.verify_failures.load(Ordering::Relaxed),
+        0,
+        "clean storm reads must all verify"
+    );
+    assert!(
+        p.metrics.durability.manifests_written.load(Ordering::Relaxed) > 0,
+        "hibernates under storm must still persist manifests"
+    );
     for name in &all {
         p.request_at(name, 8 * S).unwrap();
     }
