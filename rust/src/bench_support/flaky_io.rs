@@ -1,0 +1,179 @@
+//! Shared fault-injecting I/O backend for the failure-injection and
+//! stress suites (and anything else that wants a misbehaving disk).
+//!
+//! Wraps the batched backend; injects batch write/read failures, silent
+//! corruption, and wall-clock slowness on demand. When a batch of
+//! several runs fails, the first run is landed before the error — a
+//! genuinely *partial* batch, the worst case the recovery contracts
+//! have to absorb.
+//!
+//! Corruption modes (each proves a different detection path of the
+//! durability ladder):
+//! * **transient** — the first N writes fail with the [`TransientIo`]
+//!   marker (a flaky-but-recoverable device): the swap layer must retry
+//!   with backoff and succeed without invalidating anything.
+//! * **bit flip** — the write lands, then one bit of the first slot
+//!   rots on the medium: the recorded checksum must catch it at read
+//!   time (typed integrity error, never served).
+//! * **torn write** — only the first run of the batch reaches the disk
+//!   but the device *reports full success* (a lying write cache): the
+//!   unlanded slots' checksums must catch it at read time.
+//! * **slow I/O** — every write (or read) eats a fixed wall-clock delay
+//!   before it is submitted: the real-time analogue of the chaos
+//!   engine's virtual-clock `SlowIo` fault, for stressing queueing and
+//!   priority behaviour under a degraded device rather than a broken
+//!   one.
+
+use crate::platform::io_backend::{
+    BatchedBackend, IoBackend, IoClass, IoDir, IoRun, TransientIo,
+};
+use crate::platform::metrics::IoStats;
+use std::fs::File;
+use std::os::unix::fs::FileExt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+pub struct FlakyBackend {
+    inner: BatchedBackend,
+    fail_writes: AtomicBool,
+    fail_reads: AtomicBool,
+    /// Fail this many upcoming writes with the transient marker.
+    transient_writes: AtomicU64,
+    /// Corrupt (bit-flip) the first slot of the next write batch.
+    flip_next_write: AtomicBool,
+    /// Tear the next write batch: land the first run only, report success.
+    tear_next_write: AtomicBool,
+    /// Sleep this long before every write submission (0 = off).
+    slow_write_ns: AtomicU64,
+    /// Sleep this long before every read submission (0 = off).
+    slow_read_ns: AtomicU64,
+}
+
+impl FlakyBackend {
+    /// The failure-injection suite's historical shape: two pool workers,
+    /// a 1 MiB in-flight cap, 8-page batches.
+    pub fn new() -> Arc<Self> {
+        Self::with_inner(2, 1 << 20, 8, Arc::new(IoStats::default()))
+    }
+
+    /// Wrap a batched backend with explicit pool parameters, for suites
+    /// that need a specific worker count or in-flight budget.
+    pub fn with_inner(
+        workers: usize,
+        inflight_cap: usize,
+        batch_pages: usize,
+        stats: Arc<IoStats>,
+    ) -> Arc<Self> {
+        Arc::new(Self {
+            inner: BatchedBackend::new(workers, inflight_cap, batch_pages, stats),
+            fail_writes: AtomicBool::new(false),
+            fail_reads: AtomicBool::new(false),
+            transient_writes: AtomicU64::new(0),
+            flip_next_write: AtomicBool::new(false),
+            tear_next_write: AtomicBool::new(false),
+            slow_write_ns: AtomicU64::new(0),
+            slow_read_ns: AtomicU64::new(0),
+        })
+    }
+
+    pub fn fail_writes(&self, on: bool) {
+        self.fail_writes.store(on, Ordering::Relaxed);
+    }
+
+    pub fn fail_reads(&self, on: bool) {
+        self.fail_reads.store(on, Ordering::Relaxed);
+    }
+
+    pub fn transient_writes(&self, n: u64) {
+        self.transient_writes.store(n, Ordering::Relaxed);
+    }
+
+    pub fn flip_next_write(&self) {
+        self.flip_next_write.store(true, Ordering::Relaxed);
+    }
+
+    pub fn tear_next_write(&self) {
+        self.tear_next_write.store(true, Ordering::Relaxed);
+    }
+
+    /// Delay every write by `ns` wall-clock nanoseconds (0 disables).
+    pub fn slow_writes(&self, ns: u64) {
+        self.slow_write_ns.store(ns, Ordering::Relaxed);
+    }
+
+    /// Delay every read by `ns` wall-clock nanoseconds (0 disables).
+    pub fn slow_reads(&self, ns: u64) {
+        self.slow_read_ns.store(ns, Ordering::Relaxed);
+    }
+}
+
+impl IoBackend for FlakyBackend {
+    fn execute(
+        &self,
+        file: &Arc<File>,
+        runs: Vec<IoRun>,
+        dir: IoDir,
+        class: IoClass,
+    ) -> anyhow::Result<u64> {
+        let delay = match dir {
+            IoDir::Write => self.slow_write_ns.load(Ordering::Relaxed),
+            IoDir::Read => self.slow_read_ns.load(Ordering::Relaxed),
+        };
+        if delay > 0 {
+            std::thread::sleep(Duration::from_nanos(delay));
+        }
+        if dir == IoDir::Write && self.transient_writes.load(Ordering::Relaxed) > 0 {
+            self.transient_writes.fetch_sub(1, Ordering::Relaxed);
+            return Err(anyhow::Error::new(TransientIo)
+                .context("injected transient pwritev failure"));
+        }
+        let (failing, verb) = match dir {
+            IoDir::Write => (self.fail_writes.load(Ordering::Relaxed), "pwritev"),
+            IoDir::Read => (self.fail_reads.load(Ordering::Relaxed), "preadv"),
+        };
+        if failing {
+            if runs.len() > 1 {
+                // Partial batch: the first run lands, the rest never do.
+                let first = runs.into_iter().next().unwrap();
+                self.inner.execute(file, vec![first], dir, class)?;
+            }
+            anyhow::bail!("injected {verb} failure");
+        }
+        if dir == IoDir::Write && self.tear_next_write.swap(false, Ordering::Relaxed) {
+            // Torn (short) write: only the tail of the first run reaches
+            // the disk — the head slots stay a sparse hole — but the
+            // device claims the whole batch landed (a lying write cache
+            // losing power mid-flush). The hole reads back as zeros, so
+            // only the recorded checksums can catch it.
+            let claimed: u64 = runs.iter().map(|r| r.bytes()).sum();
+            let mut first = runs.into_iter().next().unwrap();
+            let drop_n = first.pages.len() - first.pages.len() / 2;
+            first.offset += (drop_n * crate::PAGE_SIZE) as u64;
+            first.pages.drain(..drop_n);
+            if !first.pages.is_empty() {
+                self.inner.execute(file, vec![first], dir, class)?;
+            }
+            return Ok(claimed);
+        }
+        let flip = dir == IoDir::Write && self.flip_next_write.swap(false, Ordering::Relaxed);
+        let corrupt_at = flip.then(|| runs[0].offset);
+        let n = self.inner.execute(file, runs, dir, class)?;
+        if let Some(off) = corrupt_at {
+            // Silent media corruption after the write was acknowledged.
+            let mut b = [0u8; 1];
+            file.read_exact_at(&mut b, off)?;
+            b[0] ^= 0x01;
+            file.write_all_at(&b, off)?;
+        }
+        Ok(n)
+    }
+
+    fn name(&self) -> &'static str {
+        "flaky"
+    }
+
+    fn stats(&self) -> &Arc<IoStats> {
+        self.inner.stats()
+    }
+}

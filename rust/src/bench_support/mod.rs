@@ -6,6 +6,7 @@
 pub mod density_exp;
 pub mod fig6;
 pub mod fig7;
+pub mod flaky_io;
 pub mod replay_scaling;
 pub mod server_scaling;
 
@@ -75,6 +76,8 @@ pub fn rig(
         reap_enabled,
         hostenv: svc.hostenv.clone(),
         io: svc.io.clone(),
+        durability: svc.durability.clone(),
+        durability_stats: svc.durability_stats.clone(),
         recorder: svc.recorder.clone(),
     })
 }

@@ -257,6 +257,142 @@ impl Default for DurabilityConfig {
     }
 }
 
+/// Deterministic fault-injection knobs (`[chaos]` section) — see
+/// `docs/resilience.md` for the fault-plan contract these feed. The plan
+/// is a pure function of `(seed, workload, fault kind, invocation index)`
+/// and every injected fault is stamped on the virtual clock, so a chaos
+/// run joins the 1-vs-N replay bit-identity sweep.
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// Master switch. Off by default: a disabled plan injects nothing and
+    /// costs nothing on the request path.
+    pub enabled: bool,
+    /// Fault-plan seed, independent of the trace seed so the same traffic
+    /// can be replayed under different fault plans.
+    pub seed: u64,
+    /// Per-mille of routed requests whose sandbox crashes mid-request
+    /// (the guest dies; the platform re-adopts the hibernated image or
+    /// cold-starts a replacement).
+    pub crash_per_mille: u64,
+    /// Per-mille of requests that fail with a typed `Poisoned` error —
+    /// the "fails every Nth invocation" bad deploy, food for the circuit
+    /// breaker.
+    pub poison_per_mille: u64,
+    /// Per-mille of requests charged `slow_io_ns` of extra virtual I/O
+    /// latency (the PR 8 transient-I/O taxonomy, on the virtual clock).
+    pub slow_io_per_mille: u64,
+    /// Virtual nanoseconds one slow-I/O fault charges.
+    pub slow_io_ns: u64,
+    /// Per-mille of anticipatory inflation (wake) jobs that hang: the job
+    /// charges `hang_ns` of virtual time and the pipeline watchdog
+    /// cancels it.
+    pub hang_per_mille: u64,
+    /// Per-mille of deflation/teardown jobs that stall the same way.
+    pub stall_per_mille: u64,
+    /// Per-mille of pipeline jobs that panic mid-job (exercises the
+    /// `catch_unwind` fence; the reservation must still release and
+    /// `drain` must still complete).
+    pub panic_per_mille: u64,
+    /// Virtual nanoseconds a hung/stalled job burns before the watchdog
+    /// sees it (must exceed `resilience.watchdog_budget_ms` to trip).
+    pub hang_ns: u64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            seed: 0xC4A0_5EED,
+            crash_per_mille: 0,
+            poison_per_mille: 0,
+            slow_io_per_mille: 0,
+            slow_io_ns: 2_000_000,
+            hang_per_mille: 0,
+            stall_per_mille: 0,
+            panic_per_mille: 0,
+            hang_ns: 120_000_000_000,
+        }
+    }
+}
+
+impl ChaosConfig {
+    /// Enable the plan under `seed`, filling in the default fault mix for
+    /// any per-mille knob left at 0 — the `--chaos-seed` CLI path, which
+    /// must light up every fault family without a config file.
+    pub fn enable_with_seed(&mut self, seed: u64) {
+        self.enabled = true;
+        self.seed = seed;
+        if self.crash_per_mille == 0
+            && self.poison_per_mille == 0
+            && self.slow_io_per_mille == 0
+            && self.hang_per_mille == 0
+            && self.stall_per_mille == 0
+            && self.panic_per_mille == 0
+        {
+            self.crash_per_mille = 40;
+            self.poison_per_mille = 60;
+            self.slow_io_per_mille = 80;
+            self.hang_per_mille = 120;
+            self.stall_per_mille = 80;
+            self.panic_per_mille = 60;
+        }
+    }
+
+    /// Any fault family active?
+    pub fn any_faults(&self) -> bool {
+        self.enabled
+            && (self.crash_per_mille > 0
+                || self.poison_per_mille > 0
+                || self.slow_io_per_mille > 0
+                || self.hang_per_mille > 0
+                || self.stall_per_mille > 0
+                || self.panic_per_mille > 0)
+    }
+}
+
+/// Self-healing knobs (`[resilience]` section): request deadlines, the
+/// pipeline watchdog, and the per-function circuit breaker. All state
+/// these feed is deterministic on the virtual clock; all counters stay
+/// outside the replay fingerprint (like `DurabilityStats`).
+#[derive(Debug, Clone)]
+pub struct ResilienceConfig {
+    /// Server-side request deadline (wall-clock milliseconds): a queued
+    /// submission older than this is shed with a typed `TimedOut` error
+    /// instead of being served. `0` = no deadline.
+    pub request_deadline_ms: u64,
+    /// Pipeline watchdog budget (virtual milliseconds): a pipeline job
+    /// whose charged virtual time exceeds this is cancelled — its
+    /// reservation releases and its instance retires through the degrade
+    /// ladder. `0` = watchdog off.
+    pub watchdog_budget_ms: u64,
+    /// Circuit-breaker sliding window: the breaker looks at the last
+    /// `breaker_window` request outcomes per function (clamped to ≥ 1).
+    pub breaker_window: u64,
+    /// Failures within the window that open the breaker (quarantine the
+    /// function). `0` = breaker off.
+    pub breaker_failures: u64,
+    /// Quarantine duration in virtual milliseconds; after it the breaker
+    /// goes half-open and admits probe requests.
+    pub quarantine_ms: u64,
+    /// Consecutive half-open probe successes that close the breaker
+    /// (clamped to ≥ 1). A probe failure re-opens for another
+    /// `quarantine_ms`.
+    pub probe_successes: u64,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        Self {
+            request_deadline_ms: 0,
+            watchdog_budget_ms: 30_000,
+            breaker_window: 16,
+            breaker_failures: 8,
+            quarantine_ms: 2_000,
+            probe_successes: 2,
+        }
+    }
+}
+
 /// Memory-sharing policy (§3.5): the paper shares the Quark runtime binary
 /// across sandboxes and keeps language-runtime binaries private per tenant.
 #[derive(Debug, Clone)]
@@ -306,6 +442,8 @@ pub struct PlatformConfig {
     pub io: IoConfig,
     pub obs: ObsConfig,
     pub durability: DurabilityConfig,
+    pub chaos: ChaosConfig,
+    pub resilience: ResilienceConfig,
     pub cost: CostModel,
 }
 
@@ -328,6 +466,8 @@ impl Default for PlatformConfig {
             io: IoConfig::default(),
             obs: ObsConfig::default(),
             durability: DurabilityConfig::default(),
+            chaos: ChaosConfig::default(),
+            resilience: ResilienceConfig::default(),
             cost: CostModel::paper(),
         }
     }
@@ -531,6 +671,46 @@ impl PlatformConfig {
             &mut self.durability.compact_min_live_frac,
         )?;
 
+        get_bool(t, "chaos", "enabled", &mut self.chaos.enabled)?;
+        get_u64(t, "chaos", "seed", &mut self.chaos.seed)?;
+        get_u64(t, "chaos", "crash_per_mille", &mut self.chaos.crash_per_mille)?;
+        get_u64(t, "chaos", "poison_per_mille", &mut self.chaos.poison_per_mille)?;
+        get_u64(t, "chaos", "slow_io_per_mille", &mut self.chaos.slow_io_per_mille)?;
+        get_u64(t, "chaos", "slow_io_ns", &mut self.chaos.slow_io_ns)?;
+        get_u64(t, "chaos", "hang_per_mille", &mut self.chaos.hang_per_mille)?;
+        get_u64(t, "chaos", "stall_per_mille", &mut self.chaos.stall_per_mille)?;
+        get_u64(t, "chaos", "panic_per_mille", &mut self.chaos.panic_per_mille)?;
+        get_u64(t, "chaos", "hang_ns", &mut self.chaos.hang_ns)?;
+
+        get_u64(
+            t,
+            "resilience",
+            "request_deadline_ms",
+            &mut self.resilience.request_deadline_ms,
+        )?;
+        get_u64(
+            t,
+            "resilience",
+            "watchdog_budget_ms",
+            &mut self.resilience.watchdog_budget_ms,
+        )?;
+        get_u64(t, "resilience", "breaker_window", &mut self.resilience.breaker_window)?;
+        self.resilience.breaker_window = self.resilience.breaker_window.max(1);
+        get_u64(
+            t,
+            "resilience",
+            "breaker_failures",
+            &mut self.resilience.breaker_failures,
+        )?;
+        get_u64(t, "resilience", "quarantine_ms", &mut self.resilience.quarantine_ms)?;
+        get_u64(
+            t,
+            "resilience",
+            "probe_successes",
+            &mut self.resilience.probe_successes,
+        )?;
+        self.resilience.probe_successes = self.resilience.probe_successes.max(1);
+
         get_bool(t, "sharing", "share_runtime_binary", &mut self.sharing.share_runtime_binary)?;
         get_bool(
             t,
@@ -557,6 +737,27 @@ impl PlatformConfig {
         }
         if !(0.0..=1.0).contains(&self.durability.compact_min_live_frac) {
             bail!("durability.compact_min_live_frac must be in [0, 1]");
+        }
+        for (name, v) in [
+            ("crash_per_mille", self.chaos.crash_per_mille),
+            ("poison_per_mille", self.chaos.poison_per_mille),
+            ("slow_io_per_mille", self.chaos.slow_io_per_mille),
+            ("hang_per_mille", self.chaos.hang_per_mille),
+            ("stall_per_mille", self.chaos.stall_per_mille),
+            ("panic_per_mille", self.chaos.panic_per_mille),
+        ] {
+            // 1000‰ crashes would retry-crash every recovered request
+            // forever; cap every family below certainty.
+            if v >= 1000 {
+                bail!("chaos.{name} must be < 1000, got {v}");
+            }
+        }
+        if self.resilience.breaker_failures > self.resilience.breaker_window {
+            bail!(
+                "resilience.breaker_failures ({}) cannot exceed breaker_window ({})",
+                self.resilience.breaker_failures,
+                self.resilience.breaker_window
+            );
         }
         Ok(())
     }
@@ -771,6 +972,96 @@ mod tests {
         assert!(!c.durability.verify_checksums);
         assert!(!c.durability.adopt_on_start);
         assert_eq!(c.durability.compact_min_live_frac, 0.25);
+    }
+
+    #[test]
+    fn chaos_and_resilience_sections_parse_with_defaults() {
+        let c = PlatformConfig::default();
+        assert!(!c.chaos.enabled, "chaos off by default");
+        assert!(!c.chaos.any_faults());
+        assert_eq!(c.chaos.slow_io_ns, 2_000_000);
+        assert_eq!(c.resilience.request_deadline_ms, 0, "no deadline by default");
+        assert_eq!(c.resilience.watchdog_budget_ms, 30_000);
+        assert_eq!(c.resilience.breaker_window, 16);
+        assert_eq!(c.resilience.breaker_failures, 8);
+        assert_eq!(c.resilience.quarantine_ms, 2_000);
+        assert_eq!(c.resilience.probe_successes, 2);
+
+        let c = PlatformConfig::from_str(
+            r#"
+            [chaos]
+            enabled = true
+            seed = 99
+            crash_per_mille = 10
+            poison_per_mille = 20
+            slow_io_per_mille = 30
+            slow_io_ns = 500000
+            hang_per_mille = 40
+            stall_per_mille = 50
+            panic_per_mille = 60
+            hang_ns = 7000000
+
+            [resilience]
+            request_deadline_ms = 250
+            watchdog_budget_ms = 5000
+            breaker_window = 8
+            breaker_failures = 4
+            quarantine_ms = 1000
+            probe_successes = 3
+            "#,
+        )
+        .unwrap();
+        assert!(c.chaos.enabled);
+        assert!(c.chaos.any_faults());
+        assert_eq!(c.chaos.seed, 99);
+        assert_eq!(c.chaos.crash_per_mille, 10);
+        assert_eq!(c.chaos.poison_per_mille, 20);
+        assert_eq!(c.chaos.slow_io_per_mille, 30);
+        assert_eq!(c.chaos.slow_io_ns, 500_000);
+        assert_eq!(c.chaos.hang_per_mille, 40);
+        assert_eq!(c.chaos.stall_per_mille, 50);
+        assert_eq!(c.chaos.panic_per_mille, 60);
+        assert_eq!(c.chaos.hang_ns, 7_000_000);
+        assert_eq!(c.resilience.request_deadline_ms, 250);
+        assert_eq!(c.resilience.watchdog_budget_ms, 5_000);
+        assert_eq!(c.resilience.breaker_window, 8);
+        assert_eq!(c.resilience.breaker_failures, 4);
+        assert_eq!(c.resilience.quarantine_ms, 1_000);
+        assert_eq!(c.resilience.probe_successes, 3);
+
+        // Clamps: a zero window or zero probe bar cannot make progress.
+        let c =
+            PlatformConfig::from_str("[resilience]\nbreaker_window = 0\nbreaker_failures = 0\n")
+                .unwrap();
+        assert_eq!(c.resilience.breaker_window, 1);
+        let c = PlatformConfig::from_str("[resilience]\nprobe_successes = 0\n").unwrap();
+        assert_eq!(c.resilience.probe_successes, 1);
+    }
+
+    #[test]
+    fn chaos_enable_with_seed_fills_default_mix_once() {
+        let mut c = ChaosConfig::default();
+        c.enable_with_seed(7);
+        assert!(c.enabled && c.any_faults());
+        assert_eq!(c.seed, 7);
+        assert!(c.crash_per_mille > 0 && c.panic_per_mille > 0);
+        // An explicit mix is respected, not overwritten.
+        let mut c = ChaosConfig {
+            poison_per_mille: 5,
+            ..ChaosConfig::default()
+        };
+        c.enable_with_seed(9);
+        assert_eq!(c.poison_per_mille, 5);
+        assert_eq!(c.crash_per_mille, 0, "explicit mix left alone");
+    }
+
+    #[test]
+    fn rejects_certain_chaos_and_inverted_breaker() {
+        assert!(PlatformConfig::from_str("[chaos]\ncrash_per_mille = 1000\n").is_err());
+        assert!(
+            PlatformConfig::from_str("[resilience]\nbreaker_window = 4\nbreaker_failures = 9\n")
+                .is_err()
+        );
     }
 
     #[test]

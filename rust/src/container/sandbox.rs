@@ -1012,10 +1012,44 @@ impl Sandbox {
         self.release_everything()
     }
 
+    /// Simulate the sandbox process dying out from under the platform
+    /// (chaos `Crash` fault). Releases every in-memory resource like
+    /// [`Self::retire`], but with one difference that recovery hinges on:
+    /// if the instance was hibernated its on-disk image is still exactly
+    /// what the persisted manifest describes, so the manifest is salvaged
+    /// *before* teardown and the swap/REAP files are left on disk with
+    /// persist still set. The platform can then re-adopt the image into a
+    /// fresh instance (the same [`Self::adopt_hibernated`] path a host
+    /// restart uses) instead of paying a full cold start. Returns the
+    /// salvaged manifest, or `None` when the image was already stale
+    /// (running/woken instances mutate memory past the manifest) and only
+    /// a cold start can replace the instance.
+    pub fn crash(&mut self) -> Result<Option<ImageManifest>> {
+        if self.state == ContainerState::Dead {
+            return Ok(None);
+        }
+        let salvaged = if self.state == ContainerState::Hibernate {
+            ImageManifest::load(&self.swap.files().manifest_path()).ok()
+        } else {
+            None
+        };
+        self.state = ContainerState::Dead;
+        self.release_everything_inner(salvaged.is_some())?;
+        Ok(salvaged)
+    }
+
     fn release_everything(&mut self) -> Result<()> {
+        self.release_everything_inner(false)
+    }
+
+    fn release_everything_inner(&mut self, preserve_image: bool) -> Result<()> {
         // A dead image must never be adopted: drop the manifest and
-        // revert the files to delete-on-drop.
-        self.swap.files_mut().discard_manifest();
+        // revert the files to delete-on-drop. The one exception is a
+        // crash whose manifest was salvaged for re-adoption — there the
+        // files must outlive this sandbox (persist stays set).
+        if !preserve_image {
+            self.swap.files_mut().discard_manifest();
+        }
         self.release_file_pages(false)?;
         self.svc.cache.trim_unmapped();
         // Release the QKernel heap.

@@ -9,6 +9,7 @@
 //! repro replay --scenario NAME [--funcs N] [--workers N] [--seed S]
 //!              [--duration-ms N] [--policy NAME] [--report FILE.json]
 //!              [--trace-out FILE.json]         # parallel replay
+//!              [--chaos-seed S]   # inject a seeded, deterministic fault plan
 //! repro replay --list-scenarios
 //! repro fig6   [--quick]          # Figure 6: latency per container state
 //! repro fig7   [--quick]          # Figure 7: PSS per container state
@@ -203,6 +204,16 @@ fn cmd_replay_scenario(args: &Args, name: &str) -> Result<()> {
         cfg.policy.kind = kind.to_string();
     }
     cfg.seed = args.get_u64("seed", cfg.seed)?;
+    // `--chaos-seed S` arms the deterministic chaos engine: a default
+    // fault mix (unless the config set explicit per-mille rates) drawn
+    // from a plan that is a pure function of (S, workload, domain).
+    if let Some(s) = args.get("chaos-seed") {
+        let s = s
+            .parse::<u64>()
+            .or_else(|_| u64::from_str_radix(s.trim_start_matches("0x"), 16))
+            .with_context(|| format!("invalid --chaos-seed `{s}`"))?;
+        cfg.chaos.enable_with_seed(s);
+    }
     let funcs = args.get_u64("funcs", 1000)? as usize;
     let duration_ms = args.get_u64("duration-ms", 300_000)?;
     let workers = args.get_u64("workers", 0)? as usize; // 0 = auto
@@ -215,6 +226,29 @@ fn cmd_replay_scenario(args: &Args, name: &str) -> Result<()> {
     );
     let (report, platform) = replay::run_scenario(&cfg, &run, workers)?;
     print!("{}", report.summary());
+    if cfg.chaos.enabled {
+        // The CI chaos-smoke job greps this line: zero leaked
+        // reservations and a non-zero recovered-instances counter are
+        // the self-healing acceptance gates.
+        let r = &platform.metrics.resilience;
+        let ld = std::sync::atomic::Ordering::Relaxed;
+        println!(
+            "chaos: faults={} crashes={} poison={} hangs={} stalls={} panics={} \
+             watchdog_cancels={} breaker_opens={} quarantined={} \
+             recovered_instances={} leaked_reservations={}",
+            r.faults_injected.load(ld),
+            r.injected_crashes.load(ld),
+            r.injected_poison.load(ld),
+            r.injected_hangs.load(ld),
+            r.injected_stalls.load(ld),
+            r.injected_panics.load(ld),
+            r.watchdog_cancels.load(ld),
+            r.breaker_opens.load(ld),
+            r.requests_quarantined.load(ld),
+            r.recovered_instances(),
+            platform.leaked_reservations(),
+        );
+    }
     if let Some(path) = args.get("report") {
         report.save(path)?;
         println!("report written to {path}");

@@ -115,6 +115,21 @@ pub enum EventKind {
     /// A manifest failed validation or adoption and its image was
     /// discarded (arg: manifest generation, 0 when unparseable).
     ManifestReject = 21,
+    /// The chaos plan injected a fault (arg: fault code — 1 = sandbox
+    /// crash, 2 = poisoned request, 3 = slow I/O, 4 = hung inflation,
+    /// 5 = stalled deflation/teardown, 6 = pipeline job panic).
+    FaultInject = 22,
+    /// Self-healing timeout fired (arg: 1 = server deadline shed a
+    /// queued request, 2 = the pipeline watchdog cancelled an
+    /// over-budget job).
+    Timeout = 23,
+    /// Circuit-breaker transition for a function (arg: 1 = opened /
+    /// quarantined, 2 = half-open probing, 0 = closed / healthy again).
+    Quarantine = 24,
+    /// A crashed instance was recovered without operator input (arg:
+    /// 1 = its hibernated image was re-adopted, 0 = replaced by cold
+    /// start).
+    InstanceRecover = 25,
 }
 
 impl EventKind {
@@ -142,6 +157,10 @@ impl EventKind {
             EventKind::ManifestWrite => "manifest_write",
             EventKind::ManifestAdopt => "manifest_adopt",
             EventKind::ManifestReject => "manifest_reject",
+            EventKind::FaultInject => "fault_inject",
+            EventKind::Timeout => "timeout",
+            EventKind::Quarantine => "quarantine",
+            EventKind::InstanceRecover => "instance_recover",
         }
     }
 }

@@ -1,0 +1,364 @@
+//! Per-function health: a circuit breaker over request outcomes.
+//!
+//! Each function carries a sliding window of its last
+//! `resilience.breaker_window` request outcomes. When
+//! `resilience.breaker_failures` of them are failures the breaker
+//! **opens**: the function is quarantined for `resilience.quarantine_ms`
+//! *virtual* milliseconds — requests are rejected with a typed
+//! [`Quarantined`] error and the policy layer stops spending anticipatory
+//! wakes on it. When the quarantine expires the breaker goes **half-open**
+//! and admits probe requests; `resilience.probe_successes` consecutive
+//! probe successes close it again, a single probe failure re-opens it for
+//! another quarantine period.
+//!
+//! ## Determinism
+//!
+//! All timing is virtual (`now_vns` from the replay clock), and each
+//! function's breaker is only ever touched from the replay worker that
+//! owns its control-plane shard — the same serialization argument the
+//! chaos plan rests on ([`crate::replay::chaos`]) — so breaker
+//! transitions are bit-identical at any worker count. The counters these
+//! transitions feed live in
+//! [`ResilienceStats`](super::metrics::ResilienceStats), outside the
+//! replay fingerprint.
+
+use crate::config::ResilienceConfig;
+use std::collections::{HashMap, VecDeque};
+use std::sync::Mutex;
+
+/// Typed reject for a quarantined function: the breaker is open.
+#[derive(Debug)]
+pub struct Quarantined {
+    pub workload: String,
+    /// Virtual nanosecond at which the quarantine expires.
+    pub until_ns: u64,
+}
+
+impl std::fmt::Display for Quarantined {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "workload {} is quarantined (circuit open until t={}ns)",
+            self.workload, self.until_ns
+        )
+    }
+}
+
+impl std::error::Error for Quarantined {}
+
+/// Typed reject for a queued request that outlived its deadline before a
+/// server worker could serve it.
+#[derive(Debug)]
+pub struct TimedOut {
+    pub workload: String,
+    /// How long the submission waited before being shed (wall ns).
+    pub waited_ns: u64,
+}
+
+impl std::fmt::Display for TimedOut {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "request for {} timed out in queue after {} ns",
+            self.workload, self.waited_ns
+        )
+    }
+}
+
+impl std::error::Error for TimedOut {}
+
+/// What [`HealthRegistry::admit`] decided for one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Breaker closed: serve normally.
+    Allow,
+    /// Breaker half-open: serve as a probe. `entered` is true when this
+    /// admission performed the open → half-open transition (emit the
+    /// half-open event exactly once).
+    Probe { entered: bool },
+    /// Breaker open: reject with [`Quarantined`].
+    Reject { until_ns: u64 },
+}
+
+/// A state-machine transition [`HealthRegistry::record`] performed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transition {
+    /// The breaker opened (or re-opened from half-open): quarantined.
+    Opened { until_ns: u64 },
+    /// The breaker closed: the function is healthy again.
+    Closed,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum BreakerState {
+    Closed,
+    Open { until_ns: u64 },
+    HalfOpen { successes: u64 },
+}
+
+#[derive(Debug)]
+struct FnHealth {
+    /// Last `breaker_window` outcomes, `true` = success.
+    window: VecDeque<bool>,
+    state: BreakerState,
+}
+
+/// Sharded-by-nothing registry: one mutex over the per-function map. The
+/// map is touched once per request outcome — far off any inner loop — and
+/// each key's state is only advanced from one replay worker (see the
+/// module docs), so the lock serializes nothing that wasn't already
+/// serial.
+pub struct HealthRegistry {
+    cfg: ResilienceConfig,
+    funcs: Mutex<HashMap<String, FnHealth>>,
+}
+
+impl HealthRegistry {
+    pub fn new(cfg: &ResilienceConfig) -> Self {
+        Self {
+            cfg: cfg.clone(),
+            funcs: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Breaker active at all? (`breaker_failures = 0` disables it.)
+    pub fn enabled(&self) -> bool {
+        self.cfg.breaker_failures > 0
+    }
+
+    /// Should `workload`'s next request be served, probed, or rejected?
+    pub fn admit(&self, workload: &str, now_vns: u64) -> Admission {
+        if !self.enabled() {
+            return Admission::Allow;
+        }
+        let mut funcs = self.funcs.lock().unwrap();
+        let Some(h) = funcs.get_mut(workload) else {
+            return Admission::Allow;
+        };
+        match h.state {
+            BreakerState::Closed => Admission::Allow,
+            BreakerState::Open { until_ns } if now_vns < until_ns => {
+                Admission::Reject { until_ns }
+            }
+            BreakerState::Open { .. } => {
+                // Quarantine expired: half-open, admit this as a probe.
+                h.state = BreakerState::HalfOpen { successes: 0 };
+                Admission::Probe { entered: true }
+            }
+            BreakerState::HalfOpen { .. } => Admission::Probe { entered: false },
+        }
+    }
+
+    /// Record one served request's outcome and advance the machine.
+    pub fn record(&self, workload: &str, now_vns: u64, ok: bool) -> Option<Transition> {
+        if !self.enabled() {
+            return None;
+        }
+        let mut funcs = self.funcs.lock().unwrap();
+        let h = funcs.entry(workload.to_string()).or_insert_with(|| FnHealth {
+            window: VecDeque::with_capacity(self.cfg.breaker_window as usize),
+            state: BreakerState::Closed,
+        });
+        let quarantine_ns = self.cfg.quarantine_ms.saturating_mul(1_000_000);
+        match h.state {
+            BreakerState::Closed => {
+                h.window.push_back(ok);
+                while h.window.len() as u64 > self.cfg.breaker_window {
+                    h.window.pop_front();
+                }
+                let failures = h.window.iter().filter(|&&v| !v).count() as u64;
+                if failures >= self.cfg.breaker_failures {
+                    let until_ns = now_vns + quarantine_ns;
+                    h.state = BreakerState::Open { until_ns };
+                    h.window.clear();
+                    return Some(Transition::Opened { until_ns });
+                }
+                None
+            }
+            BreakerState::HalfOpen { successes } => {
+                if ok {
+                    let successes = successes + 1;
+                    if successes >= self.cfg.probe_successes {
+                        h.state = BreakerState::Closed;
+                        h.window.clear();
+                        return Some(Transition::Closed);
+                    }
+                    h.state = BreakerState::HalfOpen { successes };
+                    None
+                } else {
+                    // One failed probe re-opens for a full quarantine.
+                    let until_ns = now_vns + quarantine_ns;
+                    h.state = BreakerState::Open { until_ns };
+                    return Some(Transition::Opened { until_ns });
+                }
+            }
+            // A late outcome for a request admitted before the breaker
+            // opened: the quarantine decision already stands.
+            BreakerState::Open { .. } => None,
+        }
+    }
+
+    /// Is `workload` currently unhealthy (open or probing)? The policy
+    /// layer uses this to stop spending anticipatory wakes on it — wakes
+    /// resume only once the breaker fully closes.
+    pub fn is_unhealthy(&self, workload: &str) -> bool {
+        if !self.enabled() {
+            return false;
+        }
+        let funcs = self.funcs.lock().unwrap();
+        funcs
+            .get(workload)
+            .map(|h| h.state != BreakerState::Closed)
+            .unwrap_or(false)
+    }
+
+    /// Functions currently quarantined or probing (diagnostics).
+    pub fn unhealthy_count(&self) -> usize {
+        self.funcs
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|h| h.state != BreakerState::Closed)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ResilienceConfig {
+        ResilienceConfig {
+            breaker_window: 4,
+            breaker_failures: 3,
+            quarantine_ms: 10, // 10 ms = 10_000_000 vns
+            probe_successes: 2,
+            ..ResilienceConfig::default()
+        }
+    }
+
+    const Q: u64 = 10_000_000;
+
+    #[test]
+    fn window_accounting_opens_on_kth_failure_and_slides() {
+        let reg = HealthRegistry::new(&cfg());
+        // Two failures among four outcomes: under the bar, stays closed.
+        assert_eq!(reg.record("w", 0, false), None);
+        assert_eq!(reg.record("w", 1, true), None);
+        assert_eq!(reg.record("w", 2, false), None);
+        assert_eq!(reg.record("w", 3, true), None);
+        assert_eq!(reg.admit("w", 4), Admission::Allow);
+        // The window slides: the first failure (t=0) falls out, so two
+        // more failures are needed — the second of them is the 3rd in
+        // window and opens the breaker.
+        assert_eq!(reg.record("w", 5, false), None);
+        assert_eq!(
+            reg.record("w", 6, false),
+            Some(Transition::Opened { until_ns: 6 + Q })
+        );
+        assert!(reg.is_unhealthy("w"));
+        // Other functions are unaffected.
+        assert_eq!(reg.admit("other", 7), Admission::Allow);
+        assert!(!reg.is_unhealthy("other"));
+    }
+
+    #[test]
+    fn quarantine_rejects_until_expiry_then_probes() {
+        let reg = HealthRegistry::new(&cfg());
+        for t in 0..3 {
+            reg.record("w", t, false);
+        }
+        let until = 2 + Q;
+        assert_eq!(reg.admit("w", 3), Admission::Reject { until_ns: until });
+        assert_eq!(
+            reg.admit("w", until - 1),
+            Admission::Reject { until_ns: until }
+        );
+        // Expiry: the first admission transitions to half-open…
+        assert_eq!(reg.admit("w", until), Admission::Probe { entered: true });
+        // …and later admissions are plain probes.
+        assert_eq!(
+            reg.admit("w", until + 1),
+            Admission::Probe { entered: false }
+        );
+        assert!(reg.is_unhealthy("w"), "half-open still suppresses wakes");
+    }
+
+    #[test]
+    fn probe_successes_close_and_probe_failure_reopens() {
+        let reg = HealthRegistry::new(&cfg());
+        for t in 0..3 {
+            reg.record("w", t, false);
+        }
+        let until = 2 + Q;
+        // Close path: two consecutive probe successes.
+        assert_eq!(reg.admit("w", until), Admission::Probe { entered: true });
+        assert_eq!(reg.record("w", until, true), None, "one probe not enough");
+        assert_eq!(reg.record("w", until + 1, true), Some(Transition::Closed));
+        assert_eq!(reg.admit("w", until + 2), Admission::Allow);
+        assert!(!reg.is_unhealthy("w"));
+        // The close cleared the window: it takes a full K new failures to
+        // open again, not K minus the pre-quarantine backlog.
+        assert_eq!(reg.record("w", until + 3, false), None);
+        assert_eq!(reg.record("w", until + 4, false), None);
+        assert!(matches!(
+            reg.record("w", until + 5, false),
+            Some(Transition::Opened { .. })
+        ));
+        // Reopen path: a failed probe quarantines again immediately.
+        let until2 = until + 5 + Q;
+        assert_eq!(reg.admit("w", until2), Admission::Probe { entered: true });
+        assert_eq!(
+            reg.record("w", until2 + 1, false),
+            Some(Transition::Opened {
+                until_ns: until2 + 1 + Q
+            })
+        );
+        assert!(matches!(reg.admit("w", until2 + 2), Admission::Reject { .. }));
+    }
+
+    #[test]
+    fn disabled_breaker_is_inert() {
+        let reg = HealthRegistry::new(&ResilienceConfig {
+            breaker_failures: 0,
+            ..cfg()
+        });
+        assert!(!reg.enabled());
+        for t in 0..50 {
+            assert_eq!(reg.record("w", t, false), None);
+        }
+        assert_eq!(reg.admit("w", 100), Admission::Allow);
+        assert!(!reg.is_unhealthy("w"));
+        assert_eq!(reg.unhealthy_count(), 0);
+    }
+
+    #[test]
+    fn late_outcomes_during_quarantine_do_not_perturb_the_machine() {
+        let reg = HealthRegistry::new(&cfg());
+        for t in 0..3 {
+            reg.record("w", t, false);
+        }
+        let until = 2 + Q;
+        // In-flight requests admitted before the open report afterwards:
+        // ignored — the machine stays Open with its original deadline.
+        assert_eq!(reg.record("w", 4, true), None);
+        assert_eq!(reg.record("w", 5, false), None);
+        assert_eq!(reg.admit("w", 6), Admission::Reject { until_ns: until });
+    }
+
+    #[test]
+    fn quarantined_and_timed_out_errors_downcast_through_anyhow() {
+        let q = anyhow::Error::new(Quarantined {
+            workload: "w".into(),
+            until_ns: 9,
+        });
+        assert!(q.chain().any(|c| c.downcast_ref::<Quarantined>().is_some()));
+        assert!(q.to_string().contains("quarantined"));
+        let t = anyhow::Error::new(TimedOut {
+            workload: "w".into(),
+            waited_ns: 5,
+        });
+        assert!(t.chain().any(|c| c.downcast_ref::<TimedOut>().is_some()));
+        assert!(t.to_string().contains("timed out"));
+    }
+}

@@ -226,6 +226,97 @@ impl DurabilityStats {
     }
 }
 
+/// Resilience counters: chaos fault injections, self-healing actions
+/// (watchdog cancels, deadline sheds, breaker transitions), and crash
+/// recoveries — see `docs/resilience.md` for the machinery these
+/// instrument.
+///
+/// **Deliberately not part of [`Counters::snapshot`]** (and therefore not
+/// part of the replay fingerprint), same contract as [`DurabilityStats`]:
+/// whether faults are injected is a property of the chaos plan, not the
+/// workload, and the same trace replayed with and without chaos must
+/// disagree only in outcomes the fingerprint already captures. They are
+/// surfaced in [`Metrics::report`] / [`Metrics::to_json`] as a separate
+/// section instead.
+#[derive(Debug, Default)]
+pub struct ResilienceStats {
+    /// Chaos faults injected, total (sum of the per-family counters).
+    pub faults_injected: AtomicU64,
+    /// Sandbox crashes injected mid-request.
+    pub injected_crashes: AtomicU64,
+    /// Requests failed with a typed `Poisoned` error.
+    pub injected_poison: AtomicU64,
+    /// Requests charged extra virtual slow-I/O latency.
+    pub injected_slow_io: AtomicU64,
+    /// Inflation (wake) jobs hung until the watchdog cancelled them.
+    pub injected_hangs: AtomicU64,
+    /// Deflation/teardown jobs stalled until the watchdog cancelled them.
+    pub injected_stalls: AtomicU64,
+    /// Pipeline jobs panicked mid-job (chaos-injected).
+    pub injected_panics: AtomicU64,
+    /// Pipeline worker panics contained by the `catch_unwind` fence
+    /// (chaos-injected and genuine alike) — the reservation released and
+    /// `drain` stayed live every time.
+    pub panics_fenced: AtomicU64,
+    /// Pipeline jobs cancelled by the virtual-clock watchdog; each one
+    /// retired its instance through the degrade ladder.
+    pub watchdog_cancels: AtomicU64,
+    /// Queued server submissions shed past their deadline with a typed
+    /// `TimedOut` error.
+    pub requests_timed_out: AtomicU64,
+    /// Requests rejected with a typed `Quarantined` error while their
+    /// function's breaker was open.
+    pub requests_quarantined: AtomicU64,
+    /// Circuit-breaker open transitions (function quarantined).
+    pub breaker_opens: AtomicU64,
+    /// Circuit-breaker close transitions (function healthy again after
+    /// its half-open probes passed).
+    pub breaker_closes: AtomicU64,
+    /// Crashed instances recovered by re-adopting their still-valid
+    /// hibernated image — no cold start paid.
+    pub recovered_readopt: AtomicU64,
+    /// Crashed instances replaced by a cold start (no adoptable image).
+    pub recovered_cold: AtomicU64,
+}
+
+impl ResilienceStats {
+    /// Count one injected fault in its family counter and the total.
+    pub fn count_fault(&self, family: &AtomicU64) {
+        self.faults_injected.fetch_add(1, Ordering::Relaxed);
+        family.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Instances recovered without operator input, however recovered —
+    /// the CI chaos-smoke gate greps this.
+    pub fn recovered_instances(&self) -> u64 {
+        self.recovered_readopt.load(Ordering::Relaxed)
+            + self.recovered_cold.load(Ordering::Relaxed)
+    }
+
+    /// Name/value pairs for reporting (kept out of the replay fingerprint —
+    /// see the type docs).
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        counter_snapshot!(
+            self,
+            faults_injected,
+            injected_crashes,
+            injected_poison,
+            injected_slow_io,
+            injected_hangs,
+            injected_stalls,
+            injected_panics,
+            panics_fenced,
+            watchdog_cancels,
+            requests_timed_out,
+            requests_quarantined,
+            breaker_opens,
+            breaker_closes,
+            recovered_readopt,
+            recovered_cold
+        )
+    }
+}
+
 /// One (workload, serving-path) latency cell: the raw-sample [`Summary`]
 /// that backs the text report's mean/max columns, plus the fixed-edge
 /// [`Histogram`] that backs p50/p99/p999. Histogram merges are exact
@@ -304,6 +395,10 @@ pub struct Metrics {
     /// Durability counters, shared with every sandbox's swap manager and
     /// the platform's adoption scan. Fingerprint-excluded like [`IoStats`].
     pub durability: Arc<DurabilityStats>,
+    /// Resilience counters, shared with the chaos plan, the pipeline
+    /// watchdog/fence, the circuit breaker, and the server's deadline
+    /// shedder. Fingerprint-excluded like [`DurabilityStats`].
+    pub resilience: Arc<ResilienceStats>,
 }
 
 impl Default for Metrics {
@@ -328,6 +423,7 @@ impl Metrics {
             recorder,
             wake: WakeHistograms::default(),
             durability: Arc::new(DurabilityStats::default()),
+            resilience: Arc::new(ResilienceStats::default()),
         }
     }
 
@@ -458,6 +554,11 @@ impl Metrics {
             out.push_str(&format!(" {k}={v}"));
         }
         out.push('\n');
+        out.push_str("resilience:");
+        for (k, v) in self.resilience.snapshot() {
+            out.push_str(&format!(" {k}={v}"));
+        }
+        out.push('\n');
         for (name, hist) in [
             ("queue_wait", &self.wake.queue_wait),
             ("inflate", &self.wake.inflate),
@@ -532,6 +633,12 @@ impl Metrics {
             .into_iter()
             .map(|(k, v)| (k, Json::Num(v as f64)))
             .collect();
+        let resilience: Vec<(&str, Json)> = self
+            .resilience
+            .snapshot()
+            .into_iter()
+            .map(|(k, v)| (k, Json::Num(v as f64)))
+            .collect();
         obj(vec![
             ("latencies", Json::Arr(rows)),
             ("paths", Json::Arr(paths)),
@@ -539,6 +646,7 @@ impl Metrics {
             ("counters", obj(counters)),
             ("io", obj(io)),
             ("durability", obj(durability)),
+            ("resilience", obj(resilience)),
         ])
     }
 }
@@ -681,6 +789,56 @@ mod tests {
                     && k != "reap_rescues"
                     && k != "manifests_written",
                 "durability stat `{k}` leaked into the fingerprint snapshot"
+            );
+        }
+    }
+
+    #[test]
+    fn resilience_stats_render_but_stay_out_of_the_fingerprint_snapshot() {
+        let m = Metrics::new();
+        let before = m.counters.snapshot();
+        m.resilience.count_fault(&m.resilience.injected_crashes);
+        m.resilience.count_fault(&m.resilience.injected_panics);
+        m.resilience.panics_fenced.fetch_add(1, Ordering::Relaxed);
+        m.resilience.watchdog_cancels.fetch_add(2, Ordering::Relaxed);
+        m.resilience.requests_quarantined.fetch_add(4, Ordering::Relaxed);
+        m.resilience.breaker_opens.fetch_add(1, Ordering::Relaxed);
+        m.resilience.recovered_readopt.fetch_add(1, Ordering::Relaxed);
+        m.resilience.recovered_cold.fetch_add(2, Ordering::Relaxed);
+        assert_eq!(m.resilience.recovered_instances(), 3);
+        // Rendered in both exports…
+        let r = m.report();
+        assert!(r.contains("resilience: faults_injected=2"), "{r}");
+        assert!(r.contains("injected_crashes=1"), "{r}");
+        assert!(r.contains("watchdog_cancels=2"), "{r}");
+        assert!(r.contains("recovered_readopt=1"), "{r}");
+        let j = m.to_json().to_string();
+        let back = crate::util::json::parse(&j).unwrap();
+        assert_eq!(
+            back.get("resilience")
+                .unwrap()
+                .get("requests_quarantined")
+                .unwrap()
+                .as_u64(),
+            Some(4)
+        );
+        // …but NEVER in the counter snapshot the replay fingerprint folds:
+        // the same trace replayed with and without a chaos plan must
+        // disagree only where the fingerprint already looks, so leaking
+        // any resilience key here would break the chaos-vs-clean and
+        // 1-vs-N determinism contracts (same contract as DurabilityStats).
+        assert_eq!(m.counters.snapshot(), before);
+        for (k, _) in m.counters.snapshot() {
+            assert!(
+                !k.starts_with("injected")
+                    && !k.starts_with("breaker")
+                    && !k.starts_with("recovered")
+                    && k != "faults_injected"
+                    && k != "panics_fenced"
+                    && k != "watchdog_cancels"
+                    && k != "requests_timed_out"
+                    && k != "requests_quarantined",
+                "resilience stat `{k}` leaked into the fingerprint snapshot"
             );
         }
     }

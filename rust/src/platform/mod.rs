@@ -29,6 +29,7 @@
 //! per container; concurrency comes from more containers).
 
 pub mod density;
+pub mod health;
 pub mod io_backend;
 pub mod metrics;
 pub mod pipeline;
@@ -47,11 +48,13 @@ use crate::container::sandbox::{PendingIo, RequestOutcome, Sandbox, SandboxServi
 use crate::container::state::ContainerState;
 use crate::container::PayloadRunner;
 use crate::obs::{pack_decision, EventKind, Recorder};
+use crate::replay::chaos::{self, ChaosPlan, RequestFault};
 use crate::simtime::Clock;
 use crate::swap::file::SwapFileSet;
 use crate::swap::{is_integrity, ImageManifest};
 use crate::workloads::WorkloadSpec;
 use anyhow::{bail, Context, Result};
+use health::{Admission, HealthRegistry, Quarantined, Transition};
 use metrics::{Metrics, ServedFrom};
 use policy::{tenant_of, AppliedAction, BudgetFrame, Decision, Policy, Verb, WakeLeads};
 use predictor::Predictor;
@@ -119,6 +122,28 @@ pub struct Platform {
     /// adopted into its pool. Empty when `durability.adopt_on_start` is
     /// off or nothing survived.
     adoptable: Mutex<HashMap<String, Vec<ImageManifest>>>,
+    /// Deterministic fault plan (`[chaos]` config), `None` when chaos is
+    /// off. Faults are drawn per (workload, domain) — see
+    /// [`crate::replay::chaos`] for the determinism contract.
+    chaos: Option<Arc<ChaosPlan>>,
+    /// Per-function circuit breakers (`[resilience]` config): quarantine
+    /// after repeated failures, half-open probes, typed rejects.
+    health: HealthRegistry,
+}
+
+/// Is `err` one of the self-healing layer's *typed rejects* — a
+/// quarantined function ([`health::Quarantined`]), a shed deadline
+/// ([`health::TimedOut`]) or a chaos-poisoned invocation
+/// ([`chaos::Poisoned`])? These are deterministic per-request outcomes the
+/// platform already counted, not platform failures: the replay engine
+/// drops the event's report instead of aborting the run, and the server
+/// forwards them to the submitter.
+pub fn is_resilience_reject(err: &anyhow::Error) -> bool {
+    err.chain().any(|c| {
+        c.downcast_ref::<Quarantined>().is_some()
+            || c.downcast_ref::<health::TimedOut>().is_some()
+            || c.downcast_ref::<chaos::Poisoned>().is_some()
+    })
 }
 
 impl Platform {
@@ -200,8 +225,11 @@ impl Platform {
                 cfg.policy.pipeline_workers,
                 metrics.clone(),
                 wake_leads.clone(),
+                cfg.resilience.watchdog_budget_ms.saturating_mul(1_000_000),
             ),
             wake_leads,
+            chaos: ChaosPlan::from_cfg(&cfg.chaos),
+            health: HealthRegistry::new(&cfg.resilience),
             metrics,
             svc,
             cfg,
@@ -437,6 +465,87 @@ impl Platform {
     /// function's shard lock is taken, and only for the route/insert steps
     /// — never across the cold start or the request execution.
     pub fn request_at(&self, workload: &str, now_vns: u64) -> Result<RequestReport> {
+        self.request_at_impl(workload, now_vns, true)
+    }
+
+    /// [`Self::request_at`] with the chaos consultation explicit:
+    /// internal retries (crash recovery, the integrity degrade ladder)
+    /// pass `consult_chaos = false` so one arrival draws at most one
+    /// request-domain fault — the retry is plumbing, not a new arrival.
+    fn request_at_impl(
+        &self,
+        workload: &str,
+        now_vns: u64,
+        consult_chaos: bool,
+    ) -> Result<RequestReport> {
+        // Circuit breaker first: a quarantined function is rejected before
+        // it touches the router, the predictor or the chaos plan — an
+        // arrival the platform refuses to serve must not shape anticipation
+        // or advance fault counters.
+        match self.health.admit(workload, now_vns) {
+            Admission::Reject { until_ns } => {
+                self.metrics
+                    .resilience
+                    .requests_quarantined
+                    .fetch_add(1, Ordering::Relaxed);
+                return Err(anyhow::Error::new(Quarantined {
+                    workload: workload.to_string(),
+                    until_ns,
+                }));
+            }
+            Admission::Probe { entered: true } => {
+                // Open → half-open: announce once, then serve as a probe.
+                if self.metrics.recorder.is_enabled() {
+                    self.metrics.recorder.emit_workload(
+                        EventKind::Quarantine,
+                        0,
+                        crate::util::fnv1a(workload),
+                        2,
+                        now_vns,
+                    );
+                }
+            }
+            Admission::Probe { entered: false } | Admission::Allow => {}
+        }
+        let fault = if consult_chaos {
+            self.chaos.as_ref().and_then(|c| c.request_fault(workload))
+        } else {
+            None
+        };
+        match fault {
+            // The sandbox process dies out from under the request — before
+            // any of its memory mutates, so a hibernated victim's persisted
+            // image is still manifest-exact and recovery can re-adopt it
+            // instead of cold-starting. The retried request then serves
+            // from whatever recovery produced.
+            Some(RequestFault::Crash) => {
+                if self.crash_routed_instance(workload, now_vns)? {
+                    return self.request_at_impl(workload, now_vns, false);
+                }
+                // Nothing running to crash: the fault has no target.
+            }
+            // The invocation itself fails (a modeled function bug): typed
+            // error to the caller, a failure into the breaker window.
+            Some(RequestFault::Poison) => {
+                let r = &self.metrics.resilience;
+                r.count_fault(&r.injected_poison);
+                if self.metrics.recorder.is_enabled() {
+                    self.metrics.recorder.emit_workload(
+                        EventKind::FaultInject,
+                        0,
+                        crate::util::fnv1a(workload),
+                        chaos::FAULT_POISON,
+                        now_vns,
+                    );
+                }
+                self.note_health(workload, self.health.record(workload, now_vns, false));
+                return Err(anyhow::Error::new(chaos::Poisoned {
+                    workload: workload.to_string(),
+                }));
+            }
+            Some(RequestFault::SlowIo { .. }) | None => {}
+        }
+
         let shard_idx = self.shards.index_for(workload);
         let shard = self.shards.get(shard_idx);
 
@@ -445,6 +554,24 @@ impl Platform {
         // flight-recorder event emitted under it stamps absolute virtual
         // nanoseconds (deterministic across replay worker counts).
         clock.set_base(now_vns);
+        if let Some(RequestFault::SlowIo { ns }) = fault {
+            // Degraded storage under this request: the extra latency is
+            // charged virtual time, so it lands in the report, the latency
+            // histograms and the idleness bookkeeping identically at any
+            // worker count.
+            clock.charge(ns);
+            let r = &self.metrics.resilience;
+            r.count_fault(&r.injected_slow_io);
+            if self.metrics.recorder.is_enabled() {
+                self.metrics.recorder.emit_workload(
+                    EventKind::FaultInject,
+                    0,
+                    crate::util::fnv1a(workload),
+                    chaos::FAULT_SLOW_IO,
+                    now_vns,
+                );
+            }
+        }
         // Route — and reserve the chosen instance — under the shard lock;
         // run outside it. The warm path allocates nothing under the lock;
         // the spec is cloned only when a cold start actually needs it.
@@ -554,11 +681,17 @@ impl Platform {
                         now_vns,
                     );
                 }
-                return self.request_at(workload, now_vns);
+                return self.request_at_impl(workload, now_vns, false);
             }
-            Err(e) => return Err(e),
+            Err(e) => {
+                // A terminal serve failure is a breaker-window failure; the
+                // internal integrity retry above is not (it self-heals).
+                self.note_health(workload, self.health.record(workload, now_vns, false));
+                return Err(e);
+            }
         };
 
+        self.note_health(workload, self.health.record(workload, now_vns, true));
         self.metrics.record_latency(workload, served_from, latency_ns);
         if outcome.admission_ns > 0 {
             self.metrics.record_admission(outcome.admission_ns);
@@ -614,6 +747,173 @@ impl Platform {
         }
         let outcome = sb.handle_request(clock)?;
         Ok((outcome, sb.live_bytes(), sb.id))
+    }
+
+    /// Fold a breaker transition into counters + the flight recorder.
+    fn note_health(&self, workload: &str, transition: Option<Transition>) {
+        let (arg, hint) = match transition {
+            Some(Transition::Opened { until_ns }) => {
+                self.metrics
+                    .resilience
+                    .breaker_opens
+                    .fetch_add(1, Ordering::Relaxed);
+                (1, until_ns)
+            }
+            Some(Transition::Closed) => {
+                self.metrics
+                    .resilience
+                    .breaker_closes
+                    .fetch_add(1, Ordering::Relaxed);
+                (0, 0)
+            }
+            None => return,
+        };
+        if self.metrics.recorder.is_enabled() {
+            self.metrics.recorder.emit_workload(
+                EventKind::Quarantine,
+                0,
+                crate::util::fnv1a(workload),
+                arg,
+                hint,
+            );
+        }
+    }
+
+    /// Chaos `Crash`: kill the instance the router would have served this
+    /// request from, then recover it — by re-adopting its still-valid
+    /// hibernated image when the victim was deflated (its on-disk image is
+    /// exactly what the manifest describes until a wake mutates memory),
+    /// by leaving the retried request to cold-start otherwise. Returns
+    /// `false` when the pool has no routable instance (nothing to crash).
+    fn crash_routed_instance(&self, workload: &str, now_vns: u64) -> Result<bool> {
+        let shard = self.shards.shard_for(workload);
+        let (sandbox, reservation, spec) = {
+            let guard = shard.lock();
+            let Some(pool) = guard.pools.get(workload) else {
+                // Not deployed: let the normal path produce its error.
+                return Ok(false);
+            };
+            match router::route(pool) {
+                router::Route::Existing { idx, .. } => {
+                    let inst = &pool.instances[idx];
+                    let reservation = inst
+                        .try_reserve()
+                        .expect("routed instance must be reservable under the shard lock");
+                    (
+                        inst.sandbox.clone(),
+                        reservation,
+                        guard.specs.get(workload).cloned(),
+                    )
+                }
+                router::Route::ColdStart => return Ok(false),
+            }
+        };
+        let (salvaged, victim_id) = {
+            let mut sb = sandbox.lock().unwrap();
+            let id = sb.id;
+            (sb.crash()?, id)
+        };
+        drop(reservation); // the Dead victim is swept at the next tick
+        let r = &self.metrics.resilience;
+        r.count_fault(&r.injected_crashes);
+        if self.metrics.recorder.is_enabled() {
+            self.metrics.recorder.emit_workload(
+                EventKind::FaultInject,
+                victim_id,
+                crate::util::fnv1a(workload),
+                chaos::FAULT_CRASH,
+                now_vns,
+            );
+        }
+        // The crash is a failure of this function in the breaker's eyes.
+        self.note_health(workload, self.health.record(workload, now_vns, false));
+        let readopted = match salvaged {
+            Some(m) => {
+                let spec = spec.expect("deployed workload must have a spec");
+                match self.adopt_one(&spec, &m) {
+                    Ok(()) => true,
+                    Err(e) => {
+                        eprintln!(
+                            "resilience: crashed instance {victim_id} of \
+                             `{workload}` left image {} but re-adoption \
+                             failed ({e:#}); recovering via cold start",
+                            m.file_id
+                        );
+                        Self::discard_image_files(
+                            std::path::Path::new(&self.cfg.swap_dir),
+                            m.file_id,
+                        );
+                        false
+                    }
+                }
+            }
+            None => false,
+        };
+        if readopted {
+            r.recovered_readopt.fetch_add(1, Ordering::Relaxed);
+        } else {
+            r.recovered_cold.fetch_add(1, Ordering::Relaxed);
+        }
+        if self.metrics.recorder.is_enabled() {
+            self.metrics.recorder.emit_workload(
+                EventKind::InstanceRecover,
+                victim_id,
+                crate::util::fnv1a(workload),
+                u64::from(readopted),
+                now_vns,
+            );
+        }
+        Ok(true)
+    }
+
+    /// Draw (and announce) a pipeline-domain chaos fault for a job being
+    /// dispatched for `workload`. Called from the policy apply path — on
+    /// the shard owner's worker under replay — so the per-(workload,
+    /// domain) draw sequence is deterministic at any worker count.
+    fn assign_job_fault(
+        &self,
+        workload: &str,
+        inflate: bool,
+        instance_id: u64,
+        now_vns: u64,
+    ) -> Option<chaos::JobFault> {
+        let fault = self.chaos.as_ref()?.job_fault(workload, inflate)?;
+        let r = &self.metrics.resilience;
+        match fault {
+            chaos::JobFault::Hang { .. } if inflate => r.count_fault(&r.injected_hangs),
+            chaos::JobFault::Hang { .. } => r.count_fault(&r.injected_stalls),
+            chaos::JobFault::Panic => r.count_fault(&r.injected_panics),
+        }
+        if self.metrics.recorder.is_enabled() {
+            self.metrics.recorder.emit_workload(
+                EventKind::FaultInject,
+                instance_id,
+                crate::util::fnv1a(workload),
+                fault.code(inflate),
+                now_vns,
+            );
+        }
+        Some(fault)
+    }
+
+    /// Reservations still held across all pools. At quiescence (no request
+    /// in flight, pipeline drained) every one of these is a leak — a
+    /// self-healing path that released an instance's resources without
+    /// releasing its reservation would strand it unroutable forever. The
+    /// chaos-smoke CI gate pins this at zero after a fault-riddled replay.
+    pub fn leaked_reservations(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| {
+                let guard = s.lock();
+                guard
+                    .pools
+                    .values()
+                    .flat_map(|p| p.instances.iter())
+                    .filter(|i| i.is_reserved())
+                    .count() as u64
+            })
+            .sum()
     }
 
     /// Run one policy tick at virtual time `now_vns`: hibernate idle
@@ -868,6 +1168,14 @@ impl Platform {
         let mut applied = Vec::new();
         for (w, decisions) in decided {
             for d in decisions {
+                // Quarantined (or probing) functions get no anticipatory
+                // wakes: the breaker already judged their requests failing,
+                // so prefetching their images only burns memory and I/O.
+                // Deflations and evictions still apply — reclaiming a sick
+                // function's instances is exactly right.
+                if d.verb == Verb::Wake && self.health.is_unhealthy(&w) {
+                    continue;
+                }
                 if self.apply(&w, d, now_vns)? {
                     self.metrics.record_decision(d.reason);
                     if self.metrics.recorder.is_enabled() {
@@ -1009,6 +1317,7 @@ impl Platform {
             instance_id,
             submitted_vns: now_vns,
             enqueued_wall: std::time::Instant::now(),
+            chaos_fault: self.assign_job_fault(workload, false, instance_id, now_vns),
         })?;
         Ok(true)
     }
@@ -1080,6 +1389,7 @@ impl Platform {
             instance_id,
             submitted_vns: now_vns,
             enqueued_wall: std::time::Instant::now(),
+            chaos_fault: self.assign_job_fault(workload, true, instance_id, now_vns),
         })?;
         Ok(true)
     }
@@ -1114,6 +1424,7 @@ impl Platform {
             instance_id,
             submitted_vns: now_vns,
             enqueued_wall: std::time::Instant::now(),
+            chaos_fault: self.assign_job_fault(workload, false, instance_id, now_vns),
         })?;
         Ok(true)
     }

@@ -64,9 +64,10 @@ use super::policy::WakeLeads;
 use super::pool::Reservation;
 use crate::container::sandbox::Sandbox;
 use crate::obs::EventKind;
+use crate::replay::chaos::{ChaosPanic, JobFault};
 use crate::simtime::Clock;
 use crate::util::fnv1a;
-use anyhow::{Context as _, Result};
+use anyhow::{anyhow, Context as _, Result};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -126,6 +127,11 @@ pub struct PipelineJob {
     /// Wall-clock submission instant — the wake-path queue-wait sample
     /// ([`Metrics::record_queue_wait`]).
     pub enqueued_wall: Instant,
+    /// Chaos fault assigned at dispatch time (on the shard owner's worker,
+    /// so the assignment is deterministic at any pipeline/replay worker
+    /// count): `Hang` burns virtual time into the job clock — watchdog
+    /// food — and `Panic` unwinds mid-job — `catch_unwind`-fence food.
+    pub chaos_fault: Option<JobFault>,
 }
 
 /// Test-only hook invoked by a worker before it starts a job — lets a
@@ -168,6 +174,10 @@ struct Shared {
     metrics: Arc<Metrics>,
     wake_leads: Arc<WakeLeads>,
     gate: Mutex<Option<PipelineGate>>,
+    /// Watchdog budget in *virtual* nanoseconds (0 = off): a job whose
+    /// charged clock exceeds this is cancelled — its instance retires and
+    /// its reservation releases — instead of being trusted.
+    watchdog_budget_ns: u64,
 }
 
 /// The instance-I/O worker pool. With zero workers it is a pass-through:
@@ -180,7 +190,12 @@ pub struct InstancePipeline {
 }
 
 impl InstancePipeline {
-    pub fn new(workers: usize, metrics: Arc<Metrics>, wake_leads: Arc<WakeLeads>) -> Self {
+    pub fn new(
+        workers: usize,
+        metrics: Arc<Metrics>,
+        wake_leads: Arc<WakeLeads>,
+        watchdog_budget_ns: u64,
+    ) -> Self {
         let shared = Arc::new(Shared {
             state: Mutex::new(PoolState::default()),
             idle: Condvar::new(),
@@ -188,6 +203,7 @@ impl InstancePipeline {
             metrics,
             wake_leads,
             gate: Mutex::new(None),
+            watchdog_budget_ns,
         });
         let handles = (0..workers)
             .map(|_| {
@@ -270,9 +286,10 @@ impl InstancePipeline {
     }
 
     /// Synchronous fallback (`pipeline_workers = 0`, or a shed job): run
-    /// the finish inline on the caller's thread. Same accounting, no queue.
+    /// the finish inline on the caller's thread. Same accounting — panic
+    /// fence and watchdog included — no queue.
     pub fn run_sync(&self, job: PipelineJob) -> Result<()> {
-        let result = run_one(&self.shared.metrics, &self.shared.wake_leads, &job);
+        let result = execute(&self.shared, &job);
         drop(job.reservation);
         result
     }
@@ -390,7 +407,7 @@ fn run_job(shared: &Shared, job: PipelineJob) {
 /// Error stashing shares the completion critical section, so a drainer
 /// can never observe the completion without the error.
 fn finish_job(shared: &Shared, job: PipelineJob, stash: bool) -> Result<()> {
-    let result = run_one(&shared.metrics, &shared.wake_leads, &job);
+    let result = execute(shared, &job);
     // Release the instance before announcing completion: a drainer must
     // observe the transitioned instance as routable the moment pending
     // drops.
@@ -415,17 +432,135 @@ fn finish_job(shared: &Shared, job: PipelineJob, stash: bool) -> Result<()> {
     out
 }
 
+/// The fenced job executor every mode funnels through (async workers via
+/// [`finish_job`], the inline shed path, the sync fallback): runs the
+/// finish inside a `catch_unwind` fence, then holds the job's charged
+/// virtual time against the watchdog budget. The caller still owes the
+/// reservation drop and the pending-gauge bookkeeping — which is exactly
+/// why the fence lives here: no matter how the finish dies, control
+/// returns to the caller and the instance can never stay reserved or
+/// `drain` hang on a decrement that never comes.
+fn execute(shared: &Shared, job: &PipelineJob) -> Result<()> {
+    // Lifecycle I/O's charged time belongs to no request — it runs on the
+    // platform's dime, like kernel writeback. Anchoring at the submitting
+    // tick's virtual time makes the job's trace events stamp absolute
+    // virtual nanoseconds (worker-count independent). Created here, not in
+    // `run_one`, so the watchdog can read the charge even when the finish
+    // itself never returns.
+    let clock = Clock::new();
+    clock.set_base(job.submitted_vns);
+    let metrics = &shared.metrics;
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_one(metrics, &shared.wake_leads, job, &clock)
+    }));
+    match result {
+        Ok(finish) => {
+            let budget = shared.watchdog_budget_ns;
+            if budget > 0 && clock.charged_ns() > budget && finish.is_ok() {
+                // The job blew its virtual budget (a hung inflation, a
+                // stalled deflation): cancel it. In this model the overrun
+                // is only observable once the finish returns, so "cancel"
+                // means refusing to trust the result — the instance
+                // retires through the degrade ladder and the platform
+                // replaces it. Self-healed: not a pipeline error.
+                metrics
+                    .resilience
+                    .watchdog_cancels
+                    .fetch_add(1, Ordering::Relaxed);
+                if metrics.recorder.is_enabled() {
+                    metrics.recorder.emit_workload(
+                        EventKind::Timeout,
+                        job.instance_id,
+                        fnv1a(&job.workload),
+                        2,
+                        clock.stamp_ns(),
+                    );
+                }
+                retire_job_instance(job);
+                return Ok(());
+            }
+            finish
+        }
+        Err(payload) => {
+            // The finish unwound. The fence already saved the invariants
+            // (reservation + gauge bookkeeping happen in our caller); the
+            // instance itself is in an unknown state — retire it.
+            metrics
+                .resilience
+                .panics_fenced
+                .fetch_add(1, Ordering::Relaxed);
+            retire_job_instance(job);
+            if payload.downcast_ref::<ChaosPanic>().is_some() {
+                // An injected panic proves the fence; recovery is the
+                // outcome, not an error to surface.
+                Ok(())
+            } else {
+                Err(anyhow!(
+                    "pipeline worker panicked {} an instance of `{}`: {}",
+                    job.kind.verb(),
+                    job.workload,
+                    panic_text(payload.as_ref())
+                ))
+            }
+        }
+    }
+}
+
+/// Post-fence cleanup: force the job's instance to `Dead` (releasing its
+/// pages, swap files and host objects) and zero its gauge, so the next
+/// sweep removes it and the platform cold-starts a replacement.
+fn retire_job_instance(job: &PipelineJob) {
+    // A panicking finish may have poisoned the sandbox mutex; the sandbox
+    // is being retired either way, so the poison flag carries no
+    // information — take the inner value.
+    let mut sb = job
+        .sandbox
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner());
+    if let Err(e) = sb.retire() {
+        eprintln!(
+            "pipeline: retiring instance {} of `{}` failed ({e:#})",
+            sb.id, job.workload
+        );
+    }
+    job.live_gauge.store(sb.live_bytes(), Ordering::Relaxed);
+}
+
+fn panic_text(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(c) = p.downcast_ref::<ChaosPanic>() {
+        format!("chaos panic (workload {})", c.workload)
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Run one finish and fold its counters into the metrics. Used by the
 /// async workers, the inline shed path and the sync fallback, so all
 /// modes are observationally identical. The caller keeps ownership of
 /// the job (it still owes the reservation drop).
-fn run_one(metrics: &Metrics, wake_leads: &WakeLeads, job: &PipelineJob) -> Result<()> {
-    // Lifecycle I/O's charged time belongs to no request — it runs on the
-    // platform's dime, like kernel writeback. Anchoring at the submitting
-    // tick's virtual time makes the job's trace events stamp absolute
-    // virtual nanoseconds (worker-count independent).
-    let clock = Clock::new();
-    clock.set_base(job.submitted_vns);
+fn run_one(
+    metrics: &Metrics,
+    wake_leads: &WakeLeads,
+    job: &PipelineJob,
+    clock: &Clock,
+) -> Result<()> {
+    // Chaos faults fire first, *before* the sandbox lock: an injected
+    // panic that unwound while holding the instance mutex would poison it
+    // for every later requester — the fault models a dying worker, not a
+    // lock-corruption bug. A hang charges its stall onto the job clock
+    // (virtual, so deterministic), which is what the watchdog in
+    // [`execute`] measures.
+    match job.chaos_fault {
+        Some(JobFault::Panic) => std::panic::panic_any(ChaosPanic {
+            workload: job.workload.clone(),
+        }),
+        Some(JobFault::Hang { ns }) => clock.charge(ns),
+        None => {}
+    }
     let kind = job.kind;
     let workload = job.workload.as_str();
     let whash = fnv1a(workload);
@@ -534,6 +669,7 @@ mod tests {
             instance_id: idx as u64,
             submitted_vns: 0,
             enqueued_wall: Instant::now(),
+            chaos_fault: None,
         }
     }
 
@@ -567,7 +703,7 @@ mod tests {
         let leads = Arc::new(WakeLeads::new(true));
         // One worker, parked on the gate with a sacrificial job so the
         // queue contents are deterministic.
-        let pipeline = InstancePipeline::new(1, metrics.clone(), leads);
+        let pipeline = InstancePipeline::new(1, metrics.clone(), leads, 0);
         let (entered_tx, entered_rx) = mpsc::channel::<()>();
         let (release_tx, release_rx) = mpsc::channel::<()>();
         let entered_tx = Mutex::new(entered_tx);
@@ -639,7 +775,7 @@ mod tests {
         pool.add(sb, 0);
         let metrics = Arc::new(Metrics::new());
         let leads = Arc::new(WakeLeads::new(true));
-        let pipeline = InstancePipeline::new(1, metrics, leads.clone());
+        let pipeline = InstancePipeline::new(1, metrics, leads.clone(), 0);
         let submit_wake = |pool: &FunctionPool| {
             let inst = &pool.instances[0];
             let reservation = inst.try_reserve().unwrap();
@@ -658,6 +794,7 @@ mod tests {
                 instance_id: 0,
                 submitted_vns: 0,
                 enqueued_wall: Instant::now(),
+                chaos_fault: None,
             });
         };
 
@@ -721,7 +858,7 @@ mod tests {
         let leads = Arc::new(WakeLeads::new(true));
         // One worker, parked on the gate with a sacrificial deflation so
         // the queue contents at release time are deterministic.
-        let pipeline = InstancePipeline::new(1, metrics.clone(), leads);
+        let pipeline = InstancePipeline::new(1, metrics.clone(), leads, 0);
         let (entered_tx, entered_rx) = mpsc::channel::<()>();
         let (release_tx, release_rx) = mpsc::channel::<()>();
         let entered_tx = Mutex::new(entered_tx);
@@ -756,6 +893,7 @@ mod tests {
                 instance_id: 3,
                 submitted_vns: 0,
                 enqueued_wall: Instant::now(),
+                chaos_fault: None,
             });
         }
         assert_eq!(pipeline.pending(), 4);
@@ -785,5 +923,92 @@ mod tests {
             !pool.instances[3].is_reserved(),
             "the completed wake releases its reservation"
         );
+    }
+
+    #[test]
+    fn a_panicking_job_cannot_leak_its_reservation_or_hang_drain() {
+        let (svc, mut pool) = rig("pipe-panic");
+        let clock = crate::simtime::Clock::new();
+        let sb = crate::container::sandbox::Sandbox::cold_start(
+            1,
+            scaled_for_test(golang_hello(), 64),
+            svc.clone(),
+            &clock,
+        )
+        .unwrap();
+        pool.add(sb, 0);
+        let metrics = Arc::new(Metrics::new());
+        let leads = Arc::new(WakeLeads::new(true));
+        let pipeline = InstancePipeline::new(1, metrics.clone(), leads, 0);
+        let mut job = deflate_job(&pool, 0, "boom");
+        job.chaos_fault = Some(JobFault::Panic);
+        pipeline.submit(job);
+        // The regression this pins: before the fence, the panic unwound
+        // through the worker without ever decrementing `pending`, so this
+        // drain hung forever. It must now complete — and without an error,
+        // because an injected chaos panic is a self-healed outcome.
+        pipeline.drain().unwrap();
+        assert_eq!(pipeline.pending(), 0);
+        assert_eq!(metrics.resilience.panics_fenced.load(Ordering::Relaxed), 1);
+        assert!(
+            !pool.instances[0].is_reserved(),
+            "the fence must release the panicked job's reservation"
+        );
+        assert_eq!(
+            pool.instances[0].sandbox.lock().unwrap().state(),
+            crate::container::state::ContainerState::Dead,
+            "the panicked job's instance retires"
+        );
+        // After the sweep the pool routes again — a fresh cold start, not
+        // a permanently unroutable function.
+        assert_eq!(pool.sweep_dead(), 1);
+        assert!(matches!(
+            crate::platform::router::route(&pool),
+            crate::platform::router::Route::ColdStart
+        ));
+    }
+
+    #[test]
+    fn watchdog_cancels_a_job_exceeding_its_virtual_budget() {
+        let (svc, mut pool) = rig("pipe-watchdog");
+        let clock = crate::simtime::Clock::new();
+        for id in 1..=2 {
+            let sb = crate::container::sandbox::Sandbox::cold_start(
+                id,
+                scaled_for_test(golang_hello(), 64),
+                svc.clone(),
+                &clock,
+            )
+            .unwrap();
+            pool.add(sb, 0);
+        }
+        let metrics = Arc::new(Metrics::new());
+        let leads = Arc::new(WakeLeads::new(true));
+        // 1 s virtual budget: a healthy small deflation charges far less,
+        // a chaos hang burns 2 s and must trip the watchdog.
+        let pipeline = InstancePipeline::new(1, metrics.clone(), leads, 1_000_000_000);
+        let mut hung = deflate_job(&pool, 0, "hung");
+        hung.chaos_fault = Some(JobFault::Hang { ns: 2_000_000_000 });
+        pipeline.submit(hung);
+        pipeline.submit(deflate_job(&pool, 1, "healthy"));
+        pipeline.drain().unwrap();
+        assert_eq!(
+            metrics.resilience.watchdog_cancels.load(Ordering::Relaxed),
+            1,
+            "exactly the hung job is cancelled"
+        );
+        assert_eq!(
+            pool.instances[0].sandbox.lock().unwrap().state(),
+            crate::container::state::ContainerState::Dead,
+            "the cancelled job's instance retires through the degrade ladder"
+        );
+        assert!(!pool.instances[0].is_reserved());
+        assert_eq!(
+            pool.instances[1].sandbox.lock().unwrap().state(),
+            crate::container::state::ContainerState::Hibernate,
+            "the healthy deflation completes untouched"
+        );
+        assert!(!pool.instances[1].is_reserved());
+        assert_eq!(pool.sweep_dead(), 1);
     }
 }

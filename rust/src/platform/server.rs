@@ -29,7 +29,9 @@
 //! Wall-clock time doubles as the virtual timeline (1 ns = 1 ns): idleness
 //! for the hibernate policy is real idleness.
 
+use super::health::TimedOut;
 use super::{Platform, RequestReport};
+use crate::obs::EventKind;
 use crate::util::fnv1a;
 use anyhow::{bail, Result};
 use std::collections::VecDeque;
@@ -43,6 +45,12 @@ pub struct Submission {
     pub workload: String,
     /// Filled with the report when done.
     pub reply: mpsc::Sender<Result<RequestReport>>,
+    /// When the submission entered a queue — the age the per-request
+    /// deadline (`resilience.request_deadline_ms`) is measured against. A
+    /// submission a worker picks up past its deadline is shed with a typed
+    /// [`TimedOut`] instead of served: under overload, serving requests the
+    /// client has already given up on only deepens the backlog.
+    pub enqueued: Instant,
 }
 
 /// Server tuning knobs.
@@ -230,6 +238,7 @@ impl Server {
         q.queue.lock().unwrap().push_back(Submission {
             workload: workload.to_string(),
             reply,
+            enqueued: Instant::now(),
         });
         q.cv.notify_one();
         Ok(rx)
@@ -320,7 +329,35 @@ fn worker_loop(
 ) {
     let serve = |sub: Submission| {
         let now_vns = epoch_ns(epoch);
-        let report = platform.request_at(&sub.workload, now_vns);
+        // Deadline-aware shedding: a submission that aged past the
+        // configured deadline while queued is answered with a typed
+        // `TimedOut` instead of being served — wall clock, because queue
+        // wait is a real scheduling delay (this path is never part of the
+        // replay fingerprint).
+        let deadline_ms = platform.cfg.resilience.request_deadline_ms;
+        let waited = sub.enqueued.elapsed();
+        let report = if deadline_ms > 0 && waited > Duration::from_millis(deadline_ms) {
+            platform
+                .metrics
+                .resilience
+                .requests_timed_out
+                .fetch_add(1, Ordering::Relaxed);
+            if platform.metrics.recorder.is_enabled() {
+                platform.metrics.recorder.emit_workload(
+                    EventKind::Timeout,
+                    0,
+                    fnv1a(&sub.workload),
+                    1,
+                    now_vns,
+                );
+            }
+            Err(anyhow::Error::new(TimedOut {
+                workload: sub.workload.clone(),
+                waited_ns: waited.as_nanos() as u64,
+            }))
+        } else {
+            platform.request_at(&sub.workload, now_vns)
+        };
         queues[me].depth.fetch_sub(1, Ordering::Release);
         let _ = sub.reply.send(report);
     };
@@ -492,6 +529,55 @@ mod tests {
             saved.iter().any(|(w, _, _, n)| w == "golang-hello" && *n >= 2),
             "shutdown must persist the learned track: {saved:?}"
         );
+    }
+
+    #[test]
+    fn stale_queued_submissions_are_shed_with_a_typed_timeout() {
+        let mut cfg = PlatformConfig::default();
+        cfg.host_memory = 512 << 20;
+        cfg.cost = CostModel::free();
+        cfg.policy.predictive_wakeup = false;
+        cfg.resilience.request_deadline_ms = 50;
+        cfg.swap_dir = std::env::temp_dir()
+            .join(format!("qh-server-deadline-{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let p = Arc::new(Platform::new(cfg, Arc::new(NoopRunner)).unwrap());
+        p.deploy(scaled_for_test(golang_hello(), 32)).unwrap();
+        let mut server = Server::start(p.clone(), 1, Duration::from_secs(3600));
+        // A fresh submission is comfortably inside the deadline.
+        server.call("golang-hello").unwrap();
+        // A submission that aged 200 ms in queue (hand-planted: real queue
+        // waits that long are timing-dependent) is picked up past its 50 ms
+        // deadline and shed.
+        let (reply, rx) = mpsc::channel();
+        let q = &server.queues[0];
+        q.depth.fetch_add(1, Ordering::AcqRel);
+        q.queue.lock().unwrap().push_back(Submission {
+            workload: "golang-hello".into(),
+            reply,
+            enqueued: Instant::now() - Duration::from_millis(200),
+        });
+        q.cv.notify_one();
+        let err = rx
+            .recv()
+            .expect("a shed submission still gets an answer")
+            .unwrap_err();
+        assert!(
+            crate::platform::is_resilience_reject(&err),
+            "the shed must be typed, got: {err}"
+        );
+        assert!(err.to_string().contains("timed out"), "{err}");
+        assert_eq!(
+            p.metrics
+                .resilience
+                .requests_timed_out
+                .load(Ordering::Relaxed),
+            1
+        );
+        server.shutdown();
+        // Exactly the served request reached the platform.
+        assert_eq!(p.metrics.counters.requests.load(Ordering::Relaxed), 1);
     }
 
     #[test]

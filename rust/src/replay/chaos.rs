@@ -1,0 +1,327 @@
+//! Deterministic chaos engine: a seeded fault plan that is a pure
+//! function of `(seed, workload, fault domain, invocation index)`.
+//!
+//! ## Determinism contract
+//!
+//! The plan holds one invocation counter per `(workload, domain)` key.
+//! Every call site that consults the plan for a workload is serialized by
+//! the replay model — requests and policy decisions for a workload only
+//! ever run on the replay worker owning its control-plane shard, in
+//! virtual-time order — so each counter advances identically at any
+//! worker count, and the fault sequence each workload experiences is
+//! bit-identical at `--workers 1` vs `--workers 8`. Faults themselves are
+//! stamped on the *virtual* clock (a slow-I/O fault charges virtual
+//! nanoseconds, a hung job burns virtual budget), never on wall time, so
+//! chaos runs join the replay fingerprint sweep unchanged.
+//!
+//! Fault families (see [`crate::config::ChaosConfig`]):
+//! - **Crash** — the sandbox dies mid-request; the platform salvages the
+//!   hibernated image's manifest when one still describes the on-disk
+//!   image and re-adopts it, else cold-starts a replacement.
+//! - **Poison** — the request fails with a typed [`Poisoned`] error (a
+//!   bad deploy failing every Nth invocation); food for the circuit
+//!   breaker.
+//! - **SlowIo** — the request is charged extra virtual I/O latency (the
+//!   PR 8 transient-I/O taxonomy, without the wall-clock sleep).
+//! - **Hang / Stall** — a pipeline inflation (resp. deflation/teardown)
+//!   job burns virtual time past the watchdog budget and is cancelled.
+//! - **Panic** — a pipeline job panics mid-job via
+//!   [`std::panic::panic_any`] with a [`ChaosPanic`] payload; the
+//!   worker's `catch_unwind` fence must contain it.
+
+use crate::config::ChaosConfig;
+use crate::util::fnv1a;
+use crate::util::rng::SplitMix64;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Fault codes carried in [`crate::obs::EventKind::FaultInject`] args.
+pub const FAULT_CRASH: u64 = 1;
+pub const FAULT_POISON: u64 = 2;
+pub const FAULT_SLOW_IO: u64 = 3;
+pub const FAULT_HANG: u64 = 4;
+pub const FAULT_STALL: u64 = 5;
+pub const FAULT_PANIC: u64 = 6;
+
+/// A fault the plan injects on the request path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestFault {
+    /// The sandbox serving this request dies.
+    Crash,
+    /// The request fails with a typed [`Poisoned`] error.
+    Poison,
+    /// The request is charged this many extra virtual nanoseconds.
+    SlowIo { ns: u64 },
+}
+
+/// A fault the plan injects on a pipeline job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobFault {
+    /// The job burns this much virtual time (watchdog food).
+    Hang { ns: u64 },
+    /// The job panics mid-job (`catch_unwind` fence food).
+    Panic,
+}
+
+impl JobFault {
+    /// The [`FaultInject`](crate::obs::EventKind::FaultInject) arg code,
+    /// split by pipeline direction (a hung inflation and a stalled
+    /// deflation are distinct families).
+    pub fn code(self, inflate: bool) -> u64 {
+        match self {
+            JobFault::Hang { .. } if inflate => FAULT_HANG,
+            JobFault::Hang { .. } => FAULT_STALL,
+            JobFault::Panic => FAULT_PANIC,
+        }
+    }
+}
+
+/// Typed payload a chaos-injected pipeline panic unwinds with
+/// ([`std::panic::panic_any`]): the fence downcasts it to tell an
+/// injected panic from a genuine bug.
+#[derive(Debug)]
+pub struct ChaosPanic {
+    pub workload: String,
+}
+
+/// Typed request error for a poisoned function: the chaos plan's "fails
+/// every Nth invocation" deploy. Recognized (downcast) by the circuit
+/// breaker as a failure outcome and by replay as a non-fatal reject.
+#[derive(Debug)]
+pub struct Poisoned {
+    pub workload: String,
+}
+
+impl std::fmt::Display for Poisoned {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request poisoned by the chaos plan (workload {})", self.workload)
+    }
+}
+
+impl std::error::Error for Poisoned {}
+
+/// Per-`(workload, domain)` fault-plan state domains.
+const DOMAIN_REQUEST: u64 = 0;
+const DOMAIN_INFLATE: u64 = 1;
+const DOMAIN_DEFLATE: u64 = 2;
+
+/// The seeded fault plan. Construct via [`ChaosPlan::from_cfg`]; a
+/// disabled config yields `None` so the hot path pays one `Option` check.
+pub struct ChaosPlan {
+    cfg: ChaosConfig,
+    /// Invocation counters keyed by `(fnv1a(workload), domain)`. Each key
+    /// is only ever advanced from the replay worker owning the workload's
+    /// shard (see the module docs), so the map's lock is contention-only —
+    /// the values it guards evolve deterministically.
+    counters: Mutex<HashMap<(u64, u64), u64>>,
+    /// Faults handed out (all families) — cheap liveness signal for
+    /// assertions; authoritative counts live in
+    /// [`crate::platform::metrics::ResilienceStats`].
+    pub injected: AtomicU64,
+}
+
+impl ChaosPlan {
+    /// Build the plan, or `None` when the config injects nothing.
+    pub fn from_cfg(cfg: &ChaosConfig) -> Option<Arc<Self>> {
+        if !cfg.any_faults() {
+            return None;
+        }
+        Some(Arc::new(Self {
+            cfg: cfg.clone(),
+            counters: Mutex::new(HashMap::new()),
+            injected: AtomicU64::new(0),
+        }))
+    }
+
+    pub fn cfg(&self) -> &ChaosConfig {
+        &self.cfg
+    }
+
+    /// Advance and return the invocation index for `(workload, domain)`.
+    fn bump(&self, workload_hash: u64, domain: u64) -> u64 {
+        let mut map = self.counters.lock().unwrap();
+        let c = map.entry((workload_hash, domain)).or_insert(0);
+        let idx = *c;
+        *c += 1;
+        idx
+    }
+
+    /// The pure draw: does fault `kind` fire for invocation `index` of
+    /// `workload` in `domain`? A stateless hash of the full key against
+    /// the family's per-mille threshold.
+    fn draw(&self, workload_hash: u64, domain: u64, kind: u64, index: u64, per_mille: u64) -> bool {
+        if per_mille == 0 {
+            return false;
+        }
+        let key = self
+            .cfg
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ workload_hash.rotate_left(17)
+            ^ (domain << 56)
+            ^ (kind << 48)
+            ^ index.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        SplitMix64::new(key).next_u64() % 1000 < per_mille
+    }
+
+    /// Consult the plan for one routed request of `workload`. At most one
+    /// fault fires per request; crash outranks poison outranks slow I/O.
+    pub fn request_fault(&self, workload: &str) -> Option<RequestFault> {
+        let h = fnv1a(workload);
+        let idx = self.bump(h, DOMAIN_REQUEST);
+        let fault = if self.draw(h, DOMAIN_REQUEST, 0, idx, self.cfg.crash_per_mille) {
+            Some(RequestFault::Crash)
+        } else if self.draw(h, DOMAIN_REQUEST, 1, idx, self.cfg.poison_per_mille) {
+            Some(RequestFault::Poison)
+        } else if self.draw(h, DOMAIN_REQUEST, 2, idx, self.cfg.slow_io_per_mille) {
+            Some(RequestFault::SlowIo {
+                ns: self.cfg.slow_io_ns,
+            })
+        } else {
+            None
+        };
+        if fault.is_some() {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        fault
+    }
+
+    /// Consult the plan for one dispatched pipeline job of `workload`.
+    /// `inflate` selects the hang family (anticipatory wakes) vs the
+    /// stall family (deflations/teardowns); panics can hit either.
+    pub fn job_fault(&self, workload: &str, inflate: bool) -> Option<JobFault> {
+        let h = fnv1a(workload);
+        let domain = if inflate { DOMAIN_INFLATE } else { DOMAIN_DEFLATE };
+        let idx = self.bump(h, domain);
+        let per_mille = if inflate {
+            self.cfg.hang_per_mille
+        } else {
+            self.cfg.stall_per_mille
+        };
+        let fault = if self.draw(h, domain, 0, idx, self.cfg.panic_per_mille) {
+            Some(JobFault::Panic)
+        } else if self.draw(h, domain, 1, idx, per_mille) {
+            Some(JobFault::Hang {
+                ns: self.cfg.hang_ns,
+            })
+        } else {
+            None
+        };
+        if fault.is_some() {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        fault
+    }
+
+    /// Total faults handed out so far (all families).
+    pub fn injected_total(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(mix: impl FnOnce(&mut ChaosConfig)) -> Arc<ChaosPlan> {
+        let mut cfg = ChaosConfig {
+            enabled: true,
+            seed: 0xD15EA5E,
+            ..ChaosConfig::default()
+        };
+        mix(&mut cfg);
+        ChaosPlan::from_cfg(&cfg).expect("faults configured")
+    }
+
+    #[test]
+    fn disabled_or_faultless_config_builds_no_plan() {
+        assert!(ChaosPlan::from_cfg(&ChaosConfig::default()).is_none());
+        let enabled_but_empty = ChaosConfig {
+            enabled: true,
+            ..ChaosConfig::default()
+        };
+        assert!(ChaosPlan::from_cfg(&enabled_but_empty).is_none());
+    }
+
+    #[test]
+    fn fault_sequence_is_a_pure_function_of_seed_and_workload() {
+        let mk = || {
+            plan(|c| {
+                c.crash_per_mille = 50;
+                c.poison_per_mille = 100;
+                c.slow_io_per_mille = 200;
+                c.hang_per_mille = 150;
+                c.stall_per_mille = 150;
+                c.panic_per_mille = 80;
+            })
+        };
+        let (a, b) = (mk(), mk());
+        for w in ["fn-0001", "fn-0002", "t03-fn-0007"] {
+            for _ in 0..500 {
+                assert_eq!(a.request_fault(w), b.request_fault(w));
+                assert_eq!(a.job_fault(w, true), b.job_fault(w, true));
+                assert_eq!(a.job_fault(w, false), b.job_fault(w, false));
+            }
+        }
+        assert_eq!(a.injected_total(), b.injected_total());
+        assert!(a.injected_total() > 0, "mix dense enough to fire");
+    }
+
+    #[test]
+    fn interleaving_across_workloads_cannot_perturb_a_workloads_sequence() {
+        // Workload A's fault sequence must not depend on how B's calls
+        // interleave — the cross-worker-count determinism argument.
+        let solo = plan(|c| c.poison_per_mille = 300);
+        let seq_a: Vec<_> = (0..200).map(|_| solo.request_fault("a")).collect();
+        let mixed = plan(|c| c.poison_per_mille = 300);
+        let mut seq_b = Vec::new();
+        for i in 0..200 {
+            for _ in 0..(i % 3) {
+                mixed.request_fault("b");
+            }
+            seq_b.push(mixed.request_fault("a"));
+        }
+        assert_eq!(seq_a, seq_b);
+    }
+
+    #[test]
+    fn rates_land_near_the_configured_per_mille() {
+        let p = plan(|c| c.poison_per_mille = 250);
+        let n = 4000u64;
+        let fired = (0..n)
+            .filter(|_| p.request_fault("steady").is_some())
+            .count() as u64;
+        // 250‰ of 4000 = 1000 expected; accept a generous band.
+        assert!((700..=1300).contains(&fired), "fired {fired}/4000");
+    }
+
+    #[test]
+    fn crash_outranks_poison_and_families_stay_separated() {
+        // With certainty-adjacent rates, every request faults and the
+        // highest-priority family wins; job domains never see request
+        // faults and hang/stall respect the pipeline direction.
+        let p = plan(|c| {
+            c.crash_per_mille = 999;
+            c.poison_per_mille = 999;
+        });
+        for _ in 0..100 {
+            assert_eq!(p.request_fault("w"), Some(RequestFault::Crash));
+            assert_eq!(p.job_fault("w", true), None, "no hang family configured");
+        }
+        let p = plan(|c| c.hang_per_mille = 999);
+        for _ in 0..100 {
+            assert!(matches!(p.job_fault("w", true), Some(JobFault::Hang { .. })));
+            assert_eq!(p.job_fault("w", false), None, "stall family separate");
+        }
+    }
+
+    #[test]
+    fn poisoned_error_downcasts_through_anyhow() {
+        let err = anyhow::Error::new(Poisoned {
+            workload: "w".into(),
+        });
+        assert!(err.chain().any(|c| c.downcast_ref::<Poisoned>().is_some()));
+        assert!(err.to_string().contains("poisoned"));
+    }
+}

@@ -62,6 +62,7 @@
 //!
 //! [`Platform::run_trace`] is this engine at `workers = 1`.
 
+pub mod chaos;
 pub mod report;
 pub mod scenario;
 
@@ -333,7 +334,17 @@ impl<'p> ReplayEngine<'p> {
                 // progress — the off-tick pipeline's determinism contract.
                 self.platform.drain_pipeline()?;
             }
-            out.push((idx, self.platform.request_at(&ev.workload, ev.at_ns)?));
+            match self.platform.request_at(&ev.workload, ev.at_ns) {
+                Ok(rep) => out.push((idx, rep)),
+                // Typed self-healing rejects (quarantined function,
+                // poisoned invocation, shed deadline) are outcomes, not
+                // replay failures: the platform already counted them, and
+                // whether they fire is deterministic (breaker state and
+                // the chaos plan both advance per-workload, serialized on
+                // this worker). The event simply yields no report.
+                Err(e) if crate::platform::is_resilience_reject(&e) => {}
+                Err(e) => return Err(e),
+            }
             *cursor += 1;
         }
         while let Some(t) = sched.pop_before(epoch_end) {

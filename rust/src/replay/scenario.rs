@@ -24,6 +24,16 @@
 //!   evaluated on. The `tNN-` name prefix is load-bearing: it is the
 //!   convention [`crate::platform::policy::tenant_of`] parses tenancy
 //!   from (and what the `[tenants]` config sections key on).
+//! * `churn` — tenant cohorts arrive and depart mid-trace: one cohort's
+//!   traffic stops at 60% of the trace (departure), another's starts at
+//!   40% (arrival), and the two overlap in the middle. The replay
+//!   harness deploys all specs up front (trace events carry no verbs),
+//!   so churn is modeled as deterministic per-cohort activity windows —
+//!   a departed tenant's functions go permanently idle and must ride the
+//!   degrade ladder down, an arriving tenant's functions cold-start as a
+//!   surge against a warm fleet. The chaos smoke job runs on this
+//!   scenario because the fleet's instance population turns over
+//!   mid-trace, exercising recovery against both fresh and aged images.
 //! * `paper-mix` — just the 8 paper workloads with idle-heavy Poisson
 //!   arrivals (the original small-scale replay, for continuity).
 
@@ -63,6 +73,10 @@ pub const SCENARIOS: &[(&str, &str)] = &[
         "fat-footprint functions under steady load — drives committed memory across the pressure watermark",
     ),
     (
+        "churn",
+        "tenant cohorts arrive/depart mid-trace (deploy/delete churn under load)",
+    ),
+    (
         "paper-mix",
         "the 8 paper workloads, idle-heavy Poisson (small-scale continuity)",
     ),
@@ -87,6 +101,7 @@ pub fn build(name: &str, funcs: usize, duration_ns: u64, seed: u64) -> Result<Sc
         "flash-crowd" => flash_crowd(funcs, duration_ns, seed),
         "tenant-skewed" => tenant_skewed(funcs, duration_ns, seed),
         "memory-heavy" => memory_heavy(funcs, duration_ns, seed),
+        "churn" => churn(funcs, duration_ns, seed),
         "paper-mix" => paper_mix(duration_ns, seed),
         _ => {
             let known: Vec<&str> = SCENARIOS.iter().map(|(n, _)| *n).collect();
@@ -306,6 +321,65 @@ fn memory_heavy(
     (specs, events)
 }
 
+/// Tenant cohort boundaries for `churn`: departing tenants fall silent at
+/// 60% of the trace, arriving tenants start at 40% — the overlap is the
+/// peak-population middle.
+pub const CHURN_ARRIVE_FRAC: (u64, u64) = (4, 10);
+/// See [`CHURN_ARRIVE_FRAC`].
+pub const CHURN_DEPART_FRAC: (u64, u64) = (6, 10);
+
+fn churn(funcs: usize, duration_ns: u64, seed: u64) -> (Vec<WorkloadSpec>, Vec<TraceEvent>) {
+    // Tenant cohorts by tenant id: 0–3 resident for the whole trace,
+    // 4–6 departing (traffic stops at 60%), 7–9 arriving (traffic starts
+    // at 40%). The `tNN-` prefix keeps the tenancy machinery engaged, so
+    // an arriving tenant is a *tenant-level* event for the budget policy,
+    // not just N unrelated cold starts.
+    let mut specs = synth_functions(funcs);
+    for (i, s) in specs.iter_mut().enumerate() {
+        s.name = format!("t{:02}-{}", i % TENANTS, s.name);
+    }
+    let arrive_ns = duration_ns / CHURN_ARRIVE_FRAC.1 * CHURN_ARRIVE_FRAC.0;
+    let depart_ns = duration_ns / CHURN_DEPART_FRAC.1 * CHURN_DEPART_FRAC.0;
+    let traces: Vec<TraceSpec> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            // Arriving tenants are hot (they show up as a surge); the
+            // standing population idles enough to hibernate between calls.
+            let arrival = if i % TENANTS >= 7 {
+                Arrival::Poisson {
+                    mean_gap_ns: 600_000_000,
+                }
+            } else {
+                Arrival::Poisson {
+                    mean_gap_ns: 2_500_000_000,
+                }
+            };
+            TraceSpec {
+                workload: s.name.clone(),
+                arrival,
+            }
+        })
+        .collect();
+    let mut events = generate(&traces, duration_ns, seed);
+    // Apply the activity windows. Cohort is a pure function of the name's
+    // tenant prefix, so the filter is deterministic and order-preserving.
+    let cohort = |w: &str| -> u8 {
+        let t: usize = w[1..3].parse().unwrap_or(0);
+        match t % TENANTS {
+            0..=3 => 0, // resident
+            4..=6 => 1, // departing
+            _ => 2,     // arriving
+        }
+    };
+    events.retain(|e| match cohort(&e.workload) {
+        1 => e.at_ns < depart_ns,
+        2 => e.at_ns >= arrive_ns,
+        _ => true,
+    });
+    (specs, events)
+}
+
 fn paper_mix(duration_ns: u64, seed: u64) -> (Vec<WorkloadSpec>, Vec<TraceEvent>) {
     let specs: Vec<WorkloadSpec> = all_workloads()
         .into_iter()
@@ -461,6 +535,42 @@ mod tests {
         let plain = build("azure-heavy-tail", 16, 10_000_000_000, 9).unwrap();
         for s in &plain.specs {
             assert_eq!(tenant_of(&s.name), None, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn churn_cohorts_respect_their_activity_windows() {
+        let run = build("churn", 100, 60_000_000_000, 13).unwrap();
+        let arrive_ns = run.duration_ns / 10 * 4;
+        let depart_ns = run.duration_ns / 10 * 6;
+        let tenant = |w: &str| w[1..3].parse::<usize>().unwrap();
+        let mut seen = [false; 3];
+        for e in &run.events {
+            match tenant(&e.workload) {
+                0..=3 => seen[0] = true,
+                t @ 4..=6 => {
+                    seen[1] = true;
+                    assert!(
+                        e.at_ns < depart_ns,
+                        "departed tenant t{t:02} invoked at {} ≥ {depart_ns}",
+                        e.at_ns
+                    );
+                }
+                t => {
+                    seen[2] = true;
+                    assert!(
+                        e.at_ns >= arrive_ns,
+                        "unarrived tenant t{t:02} invoked at {} < {arrive_ns}",
+                        e.at_ns
+                    );
+                }
+            }
+        }
+        assert_eq!(seen, [true; 3], "all three cohorts must carry traffic");
+        // Every name still parses as a tenant (the budget policy engages).
+        use crate::platform::policy::tenant_of;
+        for s in &run.specs {
+            assert!(tenant_of(&s.name).is_some(), "{}", s.name);
         }
     }
 

@@ -12,6 +12,7 @@
 //! still drops its reservation, so the platform drains and serves
 //! afterwards.
 
+use quark_hibernate::bench_support::flaky_io::FlakyBackend;
 use quark_hibernate::config::{PlatformConfig, SharingConfig};
 use quark_hibernate::container::sandbox::{Sandbox, SandboxServices};
 use quark_hibernate::container::NoopRunner;
@@ -20,10 +21,7 @@ use quark_hibernate::mem::buddy::BuddyAllocator;
 use quark_hibernate::mem::host::HostMemory;
 use quark_hibernate::mem::page_table::{PageTable, Pte};
 use quark_hibernate::mem::{Gpa, Gva};
-use quark_hibernate::platform::io_backend::{
-    BatchedBackend, IoBackend, IoClass, IoDir, IoRun, TransientIo,
-};
-use quark_hibernate::platform::metrics::{DurabilityStats, IoStats, Metrics, ServedFrom};
+use quark_hibernate::platform::metrics::{DurabilityStats, Metrics, ServedFrom};
 use quark_hibernate::platform::pipeline::{InstancePipeline, JobKind, PipelineJob};
 use quark_hibernate::platform::policy::WakeLeads;
 use quark_hibernate::platform::pool::FunctionPool;
@@ -32,137 +30,12 @@ use quark_hibernate::simtime::{Clock, CostModel};
 use quark_hibernate::swap::file::SwapFileSet;
 use quark_hibernate::swap::{fsck_dir, is_integrity, DurabilityCtx, FsckStatus, SwapMgr};
 use quark_hibernate::workloads::functionbench::{golang_hello, scaled_for_test};
-use std::fs::File;
-use std::os::unix::fs::FileExt;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
-/// Wraps the batched backend; injects batch write/read failures and
-/// silent corruption on demand. When a batch of several runs fails, the
-/// first run is landed before the error — a genuinely *partial* batch,
-/// the worst case the recovery contracts have to absorb.
-///
-/// Corruption modes (each proves a different detection path of the
-/// durability ladder):
-/// * **transient** — the first N writes fail with the [`TransientIo`]
-///   marker (a flaky-but-recoverable device): the swap layer must retry
-///   with backoff and succeed without invalidating anything.
-/// * **bit flip** — the write lands, then one bit of the first slot
-///   rots on the medium: the recorded checksum must catch it at read
-///   time (typed integrity error, never served).
-/// * **torn write** — only the first run of the batch reaches the disk
-///   but the device *reports full success* (a lying write cache): the
-///   unlanded slots' checksums must catch it at read time.
-struct FlakyBackend {
-    inner: BatchedBackend,
-    fail_writes: AtomicBool,
-    fail_reads: AtomicBool,
-    /// Fail this many upcoming writes with the transient marker.
-    transient_writes: AtomicU64,
-    /// Corrupt (bit-flip) the first slot of the next write batch.
-    flip_next_write: AtomicBool,
-    /// Tear the next write batch: land the first run only, report success.
-    tear_next_write: AtomicBool,
-}
-
-impl FlakyBackend {
-    fn new() -> Arc<Self> {
-        Arc::new(Self {
-            inner: BatchedBackend::new(2, 1 << 20, 8, Arc::new(IoStats::default())),
-            fail_writes: AtomicBool::new(false),
-            fail_reads: AtomicBool::new(false),
-            transient_writes: AtomicU64::new(0),
-            flip_next_write: AtomicBool::new(false),
-            tear_next_write: AtomicBool::new(false),
-        })
-    }
-
-    fn fail_writes(&self, on: bool) {
-        self.fail_writes.store(on, Ordering::Relaxed);
-    }
-
-    fn fail_reads(&self, on: bool) {
-        self.fail_reads.store(on, Ordering::Relaxed);
-    }
-
-    fn transient_writes(&self, n: u64) {
-        self.transient_writes.store(n, Ordering::Relaxed);
-    }
-
-    fn flip_next_write(&self) {
-        self.flip_next_write.store(true, Ordering::Relaxed);
-    }
-
-    fn tear_next_write(&self) {
-        self.tear_next_write.store(true, Ordering::Relaxed);
-    }
-}
-
-impl IoBackend for FlakyBackend {
-    fn execute(
-        &self,
-        file: &Arc<File>,
-        runs: Vec<IoRun>,
-        dir: IoDir,
-        class: IoClass,
-    ) -> anyhow::Result<u64> {
-        if dir == IoDir::Write && self.transient_writes.load(Ordering::Relaxed) > 0 {
-            self.transient_writes.fetch_sub(1, Ordering::Relaxed);
-            return Err(anyhow::Error::new(TransientIo)
-                .context("injected transient pwritev failure"));
-        }
-        let (failing, verb) = match dir {
-            IoDir::Write => (self.fail_writes.load(Ordering::Relaxed), "pwritev"),
-            IoDir::Read => (self.fail_reads.load(Ordering::Relaxed), "preadv"),
-        };
-        if failing {
-            if runs.len() > 1 {
-                // Partial batch: the first run lands, the rest never do.
-                let first = runs.into_iter().next().unwrap();
-                self.inner.execute(file, vec![first], dir, class)?;
-            }
-            anyhow::bail!("injected {verb} failure");
-        }
-        if dir == IoDir::Write && self.tear_next_write.swap(false, Ordering::Relaxed) {
-            // Torn (short) write: only the tail of the first run reaches
-            // the disk — the head slots stay a sparse hole — but the
-            // device claims the whole batch landed (a lying write cache
-            // losing power mid-flush). The hole reads back as zeros, so
-            // only the recorded checksums can catch it.
-            let claimed: u64 = runs.iter().map(|r| r.bytes()).sum();
-            let mut first = runs.into_iter().next().unwrap();
-            let drop_n = first.pages.len() - first.pages.len() / 2;
-            first.offset += (drop_n * quark_hibernate::PAGE_SIZE) as u64;
-            first.pages.drain(..drop_n);
-            if !first.pages.is_empty() {
-                self.inner.execute(file, vec![first], dir, class)?;
-            }
-            return Ok(claimed);
-        }
-        let flip = dir == IoDir::Write && self.flip_next_write.swap(false, Ordering::Relaxed);
-        let corrupt_at = flip.then(|| runs[0].offset);
-        let n = self.inner.execute(file, runs, dir, class)?;
-        if let Some(off) = corrupt_at {
-            // Silent media corruption after the write was acknowledged.
-            let mut b = [0u8; 1];
-            file.read_exact_at(&mut b, off)?;
-            b[0] ^= 0x01;
-            file.write_all_at(&b, off)?;
-        }
-        Ok(n)
-    }
-
-    fn name(&self) -> &'static str {
-        "flaky"
-    }
-
-    fn stats(&self) -> &Arc<IoStats> {
-        self.inner.stats()
-    }
-}
-
-/// SwapMgr-level rig over a [`FlakyBackend`].
+/// SwapMgr-level rig over a [`FlakyBackend`] (the shared fault-injecting
+/// backend in `bench_support::flaky_io`).
 struct IoRig {
     host: Arc<HostMemory>,
     alloc: BitmapPageAllocator,
@@ -641,7 +514,7 @@ fn injected_pipeline_failure_drops_reservation_and_keeps_draining() {
     }
     let metrics = Arc::new(Metrics::new());
     let leads = Arc::new(WakeLeads::new(true));
-    let pipeline = InstancePipeline::new(1, metrics, leads);
+    let pipeline = InstancePipeline::new(1, metrics, leads, 0);
     let deflate_job = |idx: usize, name: &str| {
         let inst = &pool.instances[idx];
         let reservation = inst.try_reserve().expect("instance must be free");
@@ -656,6 +529,7 @@ fn injected_pipeline_failure_drops_reservation_and_keeps_draining() {
             instance_id: idx as u64,
             submitted_vns: 0,
             enqueued_wall: Instant::now(),
+            chaos_fault: None,
         }
     };
 

@@ -435,6 +435,106 @@ fn durability_machinery_is_fingerprint_neutral_and_bit_identical() {
 }
 
 #[test]
+fn chaos_replay_is_bit_identical_and_self_heals() {
+    // The chaos tentpole's two contracts at once. (1) Determinism: the
+    // fault plan is a pure function of (seed, workload, domain, index)
+    // and every injected fault lands on the faulted workload's shard
+    // owner, so a chaos replay joins the 1-vs-N bit-identity sweep like
+    // any other scenario. (2) Self-healing: every injected failure —
+    // sandbox crashes mid-request, poisoned invocations, hung and
+    // panicking pipeline workers — is absorbed without operator input:
+    // the replay completes, no reservation leaks, crashed instances are
+    // recovered (re-adopted from their hibernated image or cold-started),
+    // and the breaker opens and closes around poisoned functions.
+    let run = scenario::build("churn", 96, 30_000_000_000, 0xC4A0).unwrap();
+    assert!(run.events.len() > 500, "scenario too small to be meaningful");
+    let mk = |tag: &str| {
+        let mut cfg = det_cfg(tag);
+        cfg.chaos.enable_with_seed(0x5EED);
+        // Tighter breaker than the production default so the quarantine
+        // machinery demonstrably cycles inside a 30 s virtual window.
+        cfg.resilience.breaker_window = 4;
+        cfg.resilience.breaker_failures = 2;
+        cfg.resilience.quarantine_ms = 2_000;
+        cfg.resilience.probe_successes = 1;
+        cfg
+    };
+    let (r1, p1) = replay::run_scenario(&mk("chaos1"), &run, 1).unwrap();
+    let (r8, p8) = replay::run_scenario(&mk("chaos8"), &run, 8).unwrap();
+    assert_eq!(r8.workers, 8, "8 workers must actually be used");
+
+    // Chaos rejects (poison, quarantine) yield no report, so served <
+    // submitted — but the SAME events are rejected at any worker count.
+    assert_eq!(r1.events, r8.events, "served-event count diverged");
+    assert!(r1.events < run.events.len(), "chaos must reject some requests");
+
+    // Field-by-field first, so a regression names what moved.
+    assert_eq!(r1.functions, r8.functions);
+    assert_eq!(r1.aggregate, r8.aggregate);
+    assert_eq!(r1.counters, r8.counters);
+    assert_eq!(r1.mem_timeline, r8.mem_timeline, "density timeline diverged");
+    assert_eq!(r1.final_states, r8.final_states);
+    assert_eq!(r1.final_committed, r8.final_committed);
+    assert_eq!(p1.pool_snapshot(), p8.pool_snapshot(), "final pools diverged");
+    assert_eq!(r1.fingerprint(), r8.fingerprint());
+
+    // The resilience counters are NOT part of the fingerprint (guarded in
+    // metrics.rs) — but under replay they are deterministic, so the whole
+    // block must agree across worker counts too.
+    let resilience = |p: &quark_hibernate::platform::Platform| {
+        p.metrics.resilience.snapshot()
+    };
+    assert_eq!(resilience(&p1), resilience(&p8), "resilience counters diverged");
+
+    // And the chaos actually happened — every family of havoc fired…
+    let snap = resilience(&p1);
+    let stat = |k: &str| snap.iter().find(|(n, _)| *n == k).map(|(_, v)| *v).unwrap();
+    assert!(stat("faults_injected") > 0, "no faults injected: {snap:?}");
+    assert!(stat("injected_crashes") > 0, "no crashes: {snap:?}");
+    assert!(stat("injected_poison") > 0, "no poison: {snap:?}");
+    assert!(stat("injected_panics") > 0, "no worker panics: {snap:?}");
+    // …and every family was healed: panics fenced, hung jobs cancelled by
+    // the watchdog, crashed instances recovered, the breaker cycled.
+    assert_eq!(stat("panics_fenced"), stat("injected_panics"));
+    assert!(stat("watchdog_cancels") > 0, "hangs must trip the watchdog");
+    assert!(
+        p1.metrics.resilience.recovered_instances() > 0,
+        "crashed instances must be recovered: {snap:?}"
+    );
+    assert!(stat("breaker_opens") > 0, "the breaker must open: {snap:?}");
+    assert!(stat("breaker_closes") > 0, "the breaker must close: {snap:?}");
+    assert!(
+        stat("requests_quarantined") > 0,
+        "open breakers must reject arrivals: {snap:?}"
+    );
+    assert_eq!(p1.leaked_reservations(), 0, "reservation leaked at 1 worker");
+    assert_eq!(p8.leaked_reservations(), 0, "reservation leaked at 8 workers");
+}
+
+#[test]
+fn chaos_off_is_the_null_perturbation() {
+    // A [chaos] section with enabled = false (the default) must be
+    // byte-for-byte invisible: same fingerprint as a config that never
+    // mentions chaos, and zero resilience counters moved.
+    let run = scenario::build("churn", 64, 15_000_000_000, 0x0FF).unwrap();
+    let (plain, p_plain) = replay::run_scenario(&det_cfg("nochaos-a"), &run, 4).unwrap();
+    let mut cfg = det_cfg("nochaos-b");
+    cfg.chaos.seed = 0xDEAD_BEEF; // a seed alone must change nothing
+    let (seeded, p_seeded) = replay::run_scenario(&cfg, &run, 4).unwrap();
+    assert_eq!(plain.fingerprint(), seeded.fingerprint());
+    assert_eq!(
+        p_plain.metrics.resilience.snapshot(),
+        p_seeded.metrics.resilience.snapshot()
+    );
+    let faults = p_plain
+        .metrics
+        .resilience
+        .faults_injected
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(faults, 0, "disabled chaos must inject nothing");
+}
+
+#[test]
 fn determinism_holds_across_scenarios_and_seeds() {
     // Property: for any seed and any scenario shape, 1 worker ≡ 4 workers.
     let names = [
@@ -443,12 +543,13 @@ fn determinism_holds_across_scenarios_and_seeds() {
         "flash-crowd",
         "tenant-skewed",
         "memory-heavy",
+        "churn",
     ];
     let mut case = 0usize;
     prop::check(
         "replay-determinism",
         prop::PropConfig {
-            cases: 5,
+            cases: 6,
             seed: 0xD0D0,
         },
         |rng| {

@@ -16,10 +16,11 @@
 //!   thread and bound it with `recv_timeout`, so a priority inversion or
 //!   a backend deadlock fails the suite loudly instead of wedging it.
 
+use quark_hibernate::bench_support::flaky_io::FlakyBackend;
 use quark_hibernate::config::PlatformConfig;
 use quark_hibernate::container::NoopRunner;
 use quark_hibernate::mem::Gpa;
-use quark_hibernate::platform::io_backend::{BatchedBackend, IoBackend};
+use quark_hibernate::platform::io_backend::IoBackend;
 use quark_hibernate::platform::metrics::{IoStats, ServedFrom};
 use quark_hibernate::platform::Platform;
 use quark_hibernate::simtime::CostModel;
@@ -42,9 +43,15 @@ fn wake_read_bypasses_a_deflation_storm_at_the_backend() {
     // submitted into that backlog must be served ahead of the queued
     // chunks — `priority_bypasses` records the overtake — and must read
     // back exactly the images written before the storm began.
+    //
+    // The backend is the shared flaky wrapper in slow-write mode (50 µs
+    // per write submission — a degraded device, not a broken one): the
+    // storm queues even deeper, and the priority contract must hold on a
+    // slow disk exactly as on a fast one.
     let stats = Arc::new(IoStats::default());
-    let io: Arc<dyn IoBackend> =
-        Arc::new(BatchedBackend::new(1, 1 << 30, 8, stats.clone()));
+    let flaky = FlakyBackend::with_inner(1, 1 << 30, 8, stats.clone());
+    flaky.slow_writes(50_000);
+    let io: Arc<dyn IoBackend> = flaky;
     let dir = tmpdir("backend-storm");
 
     // Victim: 32 REAP page images written before the storm starts.
