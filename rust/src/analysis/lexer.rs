@@ -1,0 +1,364 @@
+//! A minimal, hand-rolled Rust source lexer for the determinism linter.
+//!
+//! [`lex`] splits every source line into the text the compiler sees
+//! (`code`) and the text it ignores (`comment`). String, byte-string, raw
+//! string and char literal *contents* are blanked out of `code` (the
+//! delimiters remain), block comments may nest, and char literals are
+//! distinguished from lifetimes — so a rule needle such as a wall-clock
+//! call inside a string literal or a comment can never fire.
+//!
+//! The lexer also marks every line that lies inside a `#[cfg(test)]` item
+//! (`in_test`), so rules bind production code only: virtually all test
+//! modules legitimately sleep, read wall clocks, and unwrap.
+
+/// One source line, split into compiled text and ignored text.
+#[derive(Debug, Default, Clone)]
+pub struct LexedLine {
+    /// The text the compiler sees, with literal contents blanked.
+    pub code: String,
+    /// Concatenated comment text opened or continued on this line.
+    pub comment: String,
+}
+
+/// A fully lexed source file.
+#[derive(Debug, Default)]
+pub struct LexedFile {
+    pub lines: Vec<LexedLine>,
+    /// `in_test[i]` — line `i` (0-based) lies inside a `#[cfg(test)]` item.
+    pub in_test: Vec<bool>,
+}
+
+pub fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// The identifier ending at the end of `s` (empty if `s` ends elsewhere).
+pub fn trailing_ident(s: &str) -> &str {
+    let mut start = s.len();
+    for (p, c) in s.char_indices().rev() {
+        if is_ident_char(c) {
+            start = p;
+        } else {
+            break;
+        }
+    }
+    &s[start..]
+}
+
+/// The identifier starting at the beginning of `s` (empty if none).
+pub fn leading_ident(s: &str) -> &str {
+    let end = s
+        .char_indices()
+        .find(|(_, c)| !is_ident_char(*c))
+        .map(|(p, _)| p)
+        .unwrap_or(s.len());
+    &s[..end]
+}
+
+/// True when `needle` occurs in `hay` delimited by non-identifier chars.
+pub fn contains_token(hay: &str, needle: &str) -> bool {
+    for (pos, _) in hay.match_indices(needle) {
+        let before_ok = !hay[..pos].ends_with(is_ident_char);
+        let after_ok = !hay[pos + needle.len()..].starts_with(is_ident_char);
+        if before_ok && after_ok {
+            return true;
+        }
+    }
+    false
+}
+
+/// Like [`contains_token`], but rejects occurrences immediately followed by
+/// `(` — a call to a *function* that merely shares the name (`.map(...)`)
+/// is not a use of the tainted binding.
+pub fn token_used(hay: &str, name: &str) -> bool {
+    for (pos, _) in hay.match_indices(name) {
+        if hay[..pos].ends_with(is_ident_char) {
+            continue;
+        }
+        let rest = &hay[pos + name.len()..];
+        if rest.starts_with(is_ident_char) || rest.trim_start().starts_with('(') {
+            continue;
+        }
+        return true;
+    }
+    false
+}
+
+#[derive(Clone, Copy)]
+enum Mode {
+    Code,
+    Block(u32),
+    Str,
+    RawStr(usize),
+    Char,
+}
+
+/// Number of `#`s if a raw (byte) string literal starts at `chars[i]`
+/// (which must be `r`), `None` otherwise.
+fn raw_string_hashes(chars: &[char], i: usize) -> Option<usize> {
+    let prev_ok = match i.checked_sub(1).and_then(|p| chars.get(p)) {
+        None => true,
+        Some(&p) if !is_ident_char(p) => true,
+        // `br"..."` byte strings: the `b` itself must start the token.
+        Some(&'b') => !matches!(
+            i.checked_sub(2).and_then(|p| chars.get(p)),
+            Some(&c) if is_ident_char(c)
+        ),
+        _ => false,
+    };
+    if !prev_ok {
+        return None;
+    }
+    let mut j = i + 1;
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some(j - i - 1)
+    } else {
+        None
+    }
+}
+
+/// True when the `'` at `chars[i]` opens a char literal (vs a lifetime).
+fn is_char_literal_start(chars: &[char], i: usize) -> bool {
+    match chars.get(i + 1) {
+        Some('\\') => true,
+        Some(&n) if n != '\'' => chars.get(i + 2) == Some(&'\''),
+        _ => false,
+    }
+}
+
+/// Lex `src` into per-line code/comment records with test-mod flags.
+pub fn lex(src: &str) -> LexedFile {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines: Vec<LexedLine> = vec![LexedLine::default()];
+    let mut mode = Mode::Code;
+    let mut line_comment = false;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            line_comment = false;
+            lines.push(LexedLine::default());
+            i += 1;
+            continue;
+        }
+        let cur = lines.last_mut().expect("lines is never empty");
+        if line_comment {
+            cur.comment.push(c);
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    line_comment = true;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    mode = Mode::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    mode = Mode::Str;
+                    i += 1;
+                } else if c == 'r' {
+                    if let Some(hashes) = raw_string_hashes(&chars, i) {
+                        cur.code.push_str("r\"");
+                        mode = Mode::RawStr(hashes);
+                        i += hashes + 2;
+                    } else {
+                        cur.code.push('r');
+                        i += 1;
+                    }
+                } else if c == '\'' && is_char_literal_start(&chars, i) {
+                    cur.code.push('\'');
+                    mode = Mode::Char;
+                    i += 1;
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Block(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    mode = Mode::Block(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    mode = if depth == 1 {
+                        Mode::Code
+                    } else {
+                        Mode::Block(depth - 1)
+                    };
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    // Keep `\<newline>` continuations visible to the line
+                    // counter at the top of the loop.
+                    i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else if c == '"' {
+                    cur.code.push('"');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' && (1..=hashes).all(|k| chars.get(i + k) == Some(&'#')) {
+                    cur.code.push('"');
+                    mode = Mode::Code;
+                    i += 1 + hashes;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::Char => {
+                if c == '\\' {
+                    i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else if c == '\'' {
+                    cur.code.push('\'');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    let in_test = compute_in_test(&lines);
+    LexedFile { lines, in_test }
+}
+
+/// Mark every line covered by a `#[cfg(test)]` item: from the attribute
+/// through the brace-matched block of the item it annotates (or through
+/// the terminating `;` for brace-less items). Works on lexed code text,
+/// so braces inside strings or comments never confuse the matcher.
+fn compute_in_test(lines: &[LexedLine]) -> Vec<bool> {
+    let mut flags = vec![false; lines.len()];
+    if lines.is_empty() {
+        return flags;
+    }
+    let mut i = 0;
+    while i < lines.len() {
+        if !lines[i].code.contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        let mut depth: i64 = 0;
+        let mut opened = false;
+        let mut end = lines.len() - 1;
+        'scan: for (j, line) in lines.iter().enumerate().skip(start) {
+            for c in line.code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if opened && depth == 0 {
+                            end = j;
+                            break 'scan;
+                        }
+                    }
+                    ';' if !opened => {
+                        end = j;
+                        break 'scan;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        for f in flags.iter_mut().take(end + 1).skip(start) {
+            *f = true;
+        }
+        i = end + 1;
+    }
+    flags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_line_and_block_comments() {
+        let f = lex("let x = 1; // Instant::now\n/* a /* nested */ b */ let y = 2;\n");
+        assert_eq!(f.lines[0].code, "let x = 1; ");
+        assert!(f.lines[0].comment.contains("Instant::now"));
+        assert_eq!(f.lines[1].code, " let y = 2;");
+        assert!(f.lines[1].comment.contains("a "));
+    }
+
+    #[test]
+    fn blanks_string_contents_keeps_delimiters() {
+        let f = lex("let s = \"Instant::now()\"; call();\n");
+        assert_eq!(f.lines[0].code, "let s = \"\"; call();");
+    }
+
+    #[test]
+    fn handles_escapes_in_strings() {
+        let f = lex("let s = \"a\\\"b\"; let t = 1;\n");
+        assert_eq!(f.lines[0].code, "let s = \"\"; let t = 1;");
+    }
+
+    #[test]
+    fn blanks_raw_strings() {
+        let f = lex("let s = r#\"thread::sleep \"quoted\" text\"#; done();\n");
+        assert_eq!(f.lines[0].code, "let s = r\"\"; done();");
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let f = lex("fn f<'a>(x: &'a str) -> char { '{' }\n");
+        assert_eq!(f.lines[0].code, "fn f<'a>(x: &'a str) -> char { '' }");
+        // The blanked `{` must not unbalance brace matching.
+        let g = lex("#[cfg(test)]\nmod t {\n    let c = '}';\n    fn x() {}\n}\nfn prod() {}\n");
+        assert!(g.in_test[2] && g.in_test[4]);
+        assert!(!g.in_test[5]);
+    }
+
+    #[test]
+    fn multiline_block_comment_spans_lines() {
+        let f = lex("/* one\ntwo Instant::now\nthree */ code();\n");
+        assert_eq!(f.lines[0].code, "");
+        assert!(f.lines[1].comment.contains("Instant::now"));
+        assert_eq!(f.lines[2].code, " code();");
+    }
+
+    #[test]
+    fn marks_cfg_test_mod() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}\n";
+        let f = lex(src);
+        assert!(!f.in_test[0]);
+        assert!(f.in_test[1] && f.in_test[2] && f.in_test[3] && f.in_test[4]);
+        assert!(!f.in_test[5]);
+    }
+
+    #[test]
+    fn token_boundaries() {
+        assert!(contains_token("std::time::Instant::now()", "Instant::now"));
+        assert!(!contains_token("my_Instant::nowish", "Instant::now"));
+        assert!(contains_token("x.keys()", "keys"));
+        assert!(token_used("guard.pools.values()", "pools"));
+        assert!(!token_used("list.pools(3)", "pools"));
+        assert!(!token_used("spools.len()", "pools"));
+    }
+
+    #[test]
+    fn ident_helpers() {
+        assert_eq!(trailing_ident("let mut pools"), "pools");
+        assert_eq!(trailing_ident("x + "), "");
+        assert_eq!(leading_ident("name: Type"), "name");
+        assert_eq!(leading_ident("(a, b)"), "");
+    }
+}

@@ -1,0 +1,598 @@
+//! `repro lint` — a determinism-contract static analyzer.
+//!
+//! The replay pipeline is bit-identical at any worker count only because
+//! a handful of source-level contracts hold: no wall-clock reads or
+//! blocking sleeps in replay-eligible code (D1/D4), no iteration over
+//! hash-ordered containers in replay-reachable modules (D2), every
+//! `Counters` field folded into the fingerprint with the wall-time stats
+//! structs explicitly excluded (D3), every `unsafe` justified by a
+//! SAFETY comment (D5), and no `mem::forget` or request-path panics
+//! (D6). This module checks those contracts statically: a hand-rolled
+//! lexer ([`lexer`]) blanks literals and comments so needles cannot
+//! false-fire, and the rule engine ([`rules`]) walks the lexed lines.
+//!
+//! Exemptions are inline pragmas of the form
+//! `// lint:allow(map-iteration): keys are folded commutatively`
+//! — a real rule name and a mandatory reason, so every suppression is
+//! self-documenting. A pragma on a code line covers that line; a pragma
+//! on its own line covers the next few lines (multi-line iterator
+//! chains). See docs/static_analysis.md for the full catalog.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fmt;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{obj, Json};
+pub use rules::FingerprintAudit;
+
+/// The rule catalog. `Pragma` is the pseudo-rule for malformed pragmas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    WallClock,
+    MapIteration,
+    Fingerprint,
+    Sleep,
+    SafetyComment,
+    ForbiddenCall,
+    Pragma,
+}
+
+impl Rule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::WallClock => "wall-clock",
+            Rule::MapIteration => "map-iteration",
+            Rule::Fingerprint => "fingerprint",
+            Rule::Sleep => "sleep",
+            Rule::SafetyComment => "safety-comment",
+            Rule::ForbiddenCall => "forbidden-call",
+            Rule::Pragma => "pragma",
+        }
+    }
+
+    /// The short code used in docs (D1..D6).
+    pub fn code(self) -> &'static str {
+        match self {
+            Rule::WallClock => "D1",
+            Rule::MapIteration => "D2",
+            Rule::Fingerprint => "D3",
+            Rule::Sleep => "D4",
+            Rule::SafetyComment => "D5",
+            Rule::ForbiddenCall => "D6",
+            Rule::Pragma => "P0",
+        }
+    }
+
+    fn from_name(name: &str) -> Option<Rule> {
+        Some(match name {
+            "wall-clock" | "D1" => Rule::WallClock,
+            "map-iteration" | "D2" => Rule::MapIteration,
+            "fingerprint" | "D3" => Rule::Fingerprint,
+            "sleep" | "D4" => Rule::Sleep,
+            "safety-comment" | "D5" => Rule::SafetyComment,
+            "forbidden-call" | "D6" => Rule::ForbiddenCall,
+            _ => return None,
+        })
+    }
+}
+
+/// One lint finding, printed as `file:line [rule] message`.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl Finding {
+    pub(crate) fn new(file: &SourceFile, line: usize, rule: Rule, message: String) -> Self {
+        Finding {
+            file: file.path.clone(),
+            line,
+            rule,
+            message,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("file", Json::Str(self.file.clone())),
+            ("line", Json::Num(self.line as f64)),
+            ("rule", Json::Str(self.rule.name().to_string())),
+            ("code", Json::Str(self.rule.code().to_string())),
+            ("message", Json::Str(self.message.clone())),
+        ])
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{} [{}] {}",
+            self.file,
+            self.line,
+            self.rule.name(),
+            self.message
+        )
+    }
+}
+
+/// A parsed suppression pragma.
+#[derive(Debug, Clone)]
+pub struct SuppressPragma {
+    pub file: String,
+    pub line: usize,
+    pub rules: Vec<Rule>,
+    /// True when the pragma sits on a comment-only line: it then covers
+    /// the following `pragma_scope` lines instead of its own line.
+    pub standalone: bool,
+}
+
+/// Linter configuration: path allowlists and pragma reach.
+#[derive(Debug, Clone)]
+pub struct LintConfig {
+    /// D1 allowlist: modules whose wall-clock reads are by design.
+    pub wall_clock_allow: &'static [&'static str],
+    /// D4 allowlist: modules allowed to block on real time.
+    pub sleep_allow: &'static [&'static str],
+    /// D2 scope: modules executed under deterministic replay.
+    pub replay_reachable: &'static [&'static str],
+    /// D6 scope: modules on the per-request hot path.
+    pub request_path: &'static [&'static str],
+    /// Lines a standalone pragma covers below itself.
+    pub pragma_scope: usize,
+}
+
+impl Default for LintConfig {
+    fn default() -> Self {
+        LintConfig {
+            wall_clock_allow: &["platform/server.rs", "obs/mod.rs", "main.rs", "bench_support/"],
+            sleep_allow: &["platform/server.rs", "main.rs", "bench_support/"],
+            replay_reachable: &[
+                "platform/policy.rs",
+                "platform/pool.rs",
+                "platform/mod.rs",
+                "platform/pipeline.rs",
+                "replay/",
+            ],
+            request_path: &["platform/router.rs", "platform/pool.rs"],
+            pragma_scope: 6,
+        }
+    }
+}
+
+/// A lexed source file, path-normalized relative to the scan root.
+pub struct SourceFile {
+    pub path: String,
+    pub lexed: lexer::LexedFile,
+}
+
+/// The result of a lint run.
+pub struct Report {
+    /// Number of files scanned.
+    pub files: usize,
+    /// Findings that survived pragma suppression, sorted by location.
+    pub findings: Vec<Finding>,
+    /// Every pragma parsed from the tree (used or not).
+    pub pragmas: Vec<SuppressPragma>,
+    /// The D3 structural audit, when `platform/metrics.rs` was in scope.
+    pub fingerprint: Option<FingerprintAudit>,
+}
+
+impl Report {
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&f.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let findings = self.findings.iter().map(Finding::to_json).collect();
+        let pragmas = self
+            .pragmas
+            .iter()
+            .map(|p| {
+                obj(vec![
+                    ("file", Json::Str(p.file.clone())),
+                    ("line", Json::Num(p.line as f64)),
+                    (
+                        "rules",
+                        Json::Arr(
+                            p.rules
+                                .iter()
+                                .map(|r| Json::Str(r.name().to_string()))
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("files_scanned", Json::Num(self.files as f64)),
+            ("findings", Json::Arr(findings)),
+            ("pragmas", Json::Arr(pragmas)),
+        ])
+    }
+}
+
+/// Lint in-memory sources: `(path, contents)` pairs. Paths should be
+/// `/`-separated and relative to the scan root (e.g. `platform/mod.rs`).
+pub fn lint_files(inputs: &[(String, String)], cfg: &LintConfig) -> Report {
+    let files: Vec<SourceFile> = inputs
+        .iter()
+        .map(|(path, src)| SourceFile {
+            path: path.replace('\\', "/"),
+            lexed: lexer::lex(src),
+        })
+        .collect();
+    let mut findings = Vec::new();
+    let mut pragmas = Vec::new();
+    for f in &files {
+        parse_pragmas(f, &mut pragmas, &mut findings);
+    }
+    let taint = rules::collect_taint(&files);
+    for f in &files {
+        rules::check_wall_clock(f, cfg, &mut findings);
+        rules::check_sleep(f, cfg, &mut findings);
+        rules::check_map_iteration(f, &taint, cfg, &mut findings);
+        rules::check_safety(f, &mut findings);
+        rules::check_forbidden(f, cfg, &mut findings);
+    }
+    let fingerprint = rules::check_fingerprint(&files, &mut findings);
+    findings.retain(|fi| !suppressed(fi, &pragmas, cfg.pragma_scope));
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule.name()).cmp(&(b.file.as_str(), b.line, b.rule.name()))
+    });
+    Report {
+        files: files.len(),
+        findings,
+        pragmas,
+        fingerprint,
+    }
+}
+
+/// Lint every `.rs` file under `root` with the default config.
+pub fn lint_tree(root: &Path) -> Result<Report> {
+    lint_tree_with(root, &LintConfig::default())
+}
+
+/// Lint every `.rs` file under `root`. The walk order is sorted, so the
+/// report is byte-identical across runs and platforms.
+pub fn lint_tree_with(root: &Path, cfg: &LintConfig) -> Result<Report> {
+    let mut inputs = Vec::new();
+    collect_inputs(root, root, &mut inputs)?;
+    if inputs.is_empty() {
+        bail!("no .rs files under {}", root.display());
+    }
+    inputs.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(lint_files(&inputs, cfg))
+}
+
+fn collect_inputs(root: &Path, dir: &Path, out: &mut Vec<(String, String)>) -> Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .collect::<std::io::Result<_>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_inputs(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            let src =
+                fs::read_to_string(&path).with_context(|| format!("reading {}", path.display()))?;
+            out.push((rel, src));
+        }
+    }
+    Ok(())
+}
+
+/// Parse suppression pragmas from comment text. A comment that mentions
+/// the `lint:allow` marker without opening a parenthesized rule list is
+/// treated as prose; one that opens the list but fails to parse (unknown
+/// rule, missing reason) is reported as a malformed-pragma finding.
+fn parse_pragmas(file: &SourceFile, out: &mut Vec<SuppressPragma>, findings: &mut Vec<Finding>) {
+    for (idx, line) in file.lexed.lines.iter().enumerate() {
+        let Some(pos) = line.comment.find("lint:allow") else {
+            continue;
+        };
+        let body = &line.comment[pos + "lint:allow".len()..];
+        if !body.starts_with('(') {
+            continue;
+        }
+        match parse_pragma_rules(body) {
+            Some(rules) => out.push(SuppressPragma {
+                file: file.path.clone(),
+                line: idx + 1,
+                rules,
+                standalone: line.code.trim().is_empty(),
+            }),
+            None => findings.push(Finding::new(
+                file,
+                idx + 1,
+                Rule::Pragma,
+                "malformed pragma; expected a rule list and a reason".to_string(),
+            )),
+        }
+    }
+}
+
+fn parse_pragma_rules(body: &str) -> Option<Vec<Rule>> {
+    let body = body.strip_prefix('(')?;
+    let (names, rest) = body.split_once(')')?;
+    let reason = rest.trim_start().strip_prefix(':')?.trim();
+    if reason.is_empty() {
+        return None;
+    }
+    let mut rules = Vec::new();
+    for n in names.split(',') {
+        rules.push(Rule::from_name(n.trim())?);
+    }
+    Some(rules)
+}
+
+fn suppressed(finding: &Finding, pragmas: &[SuppressPragma], scope: usize) -> bool {
+    pragmas.iter().any(|p| {
+        if p.file != finding.file || !p.rules.contains(&finding.rule) {
+            return false;
+        }
+        if p.standalone {
+            finding.line > p.line && finding.line - p.line <= scope
+        } else {
+            finding.line == p.line
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(path: &str, src: &str) -> Report {
+        lint_files(&[(path.to_string(), src.to_string())], &LintConfig::default())
+    }
+
+    fn run_many(inputs: &[(&str, &str)]) -> Report {
+        let owned: Vec<(String, String)> = inputs
+            .iter()
+            .map(|(p, s)| (p.to_string(), s.to_string()))
+            .collect();
+        lint_files(&owned, &LintConfig::default())
+    }
+
+    fn rule_list(r: &Report) -> Vec<Rule> {
+        r.findings.iter().map(|f| f.rule).collect()
+    }
+
+    // ---- D1 wall-clock ----
+
+    #[test]
+    fn d1_fails_on_wall_clock_read() {
+        let r = run("mem/x.rs", "fn f() -> u64 {\n    let t = std::time::Instant::now();\n    0\n}\n");
+        assert_eq!(rule_list(&r), vec![Rule::WallClock]);
+        assert_eq!(r.findings[0].line, 2);
+    }
+
+    #[test]
+    fn d1_ignores_strings_comments_tests_and_allowlist() {
+        let in_string = "fn f() { let s = \"Instant::now()\"; }\n";
+        assert!(run("mem/x.rs", in_string).findings.is_empty());
+        let in_comment = "fn f() {} // call Instant::now here? never\n";
+        assert!(run("mem/x.rs", in_comment).findings.is_empty());
+        let in_test = "#[cfg(test)]\nmod tests {\n    fn f() { let t = Instant::now(); }\n}\n";
+        assert!(run("mem/x.rs", in_test).findings.is_empty());
+        let allowed = "fn f() { let t = Instant::now(); }\n";
+        assert!(run("platform/server.rs", allowed).findings.is_empty());
+    }
+
+    // ---- D2 map iteration ----
+
+    #[test]
+    fn d2_fails_on_hash_iteration_in_replay_module() {
+        let src = r#"
+use std::collections::HashMap;
+struct S {
+    pools: HashMap<String, u64>,
+}
+fn f(s: &S) -> u64 {
+    s.pools.values().sum()
+}
+"#;
+        let r = run("platform/policy.rs", src);
+        assert_eq!(rule_list(&r), vec![Rule::MapIteration]);
+        assert_eq!(r.findings[0].line, 7);
+    }
+
+    #[test]
+    fn d2_passes_with_sort_evidence() {
+        let src = r#"
+use std::collections::HashMap;
+struct S {
+    pools: HashMap<String, u64>,
+}
+fn f(s: &S) -> Vec<u64> {
+    let mut v: Vec<u64> = s.pools.values().copied().collect();
+    v.sort();
+    v
+}
+"#;
+        assert!(run("platform/policy.rs", src).findings.is_empty());
+    }
+
+    #[test]
+    fn d2_ignores_modules_outside_replay_scope() {
+        let src = "struct S { pools: std::collections::HashMap<String, u64> }\nfn f(s: &S) -> u64 { s.pools.values().sum() }\n";
+        assert!(run("obs/x.rs", src).findings.is_empty());
+    }
+
+    #[test]
+    fn d2_taint_crosses_files_and_respects_shadowing() {
+        let decl = "pub struct Shard {\n    pub pools: std::collections::HashMap<String, u64>,\n}\n";
+        let user = "fn f(shard: &Shard) -> u64 {\n    shard.pools.values().sum()\n}\n";
+        let r = run_many(&[("platform/mod.rs", decl), ("platform/policy.rs", user)]);
+        assert_eq!(rule_list(&r), vec![Rule::MapIteration]);
+        assert_eq!(r.findings[0].file, "platform/policy.rs");
+
+        // A same-named Vec field in another file shadows the taint there.
+        let report = "pub struct Report {\n    pub pools: Vec<u64>,\n}\nfn g(r: &Report) -> u64 {\n    r.pools.iter().sum()\n}\n";
+        let r2 = run_many(&[("platform/mod.rs", decl), ("replay/report.rs", report)]);
+        assert!(r2.findings.is_empty(), "{}", r2.to_text());
+    }
+
+    // ---- D3 fingerprint hygiene ----
+
+    const METRICS_OK: &str = r#"
+pub struct Counters {
+    pub requests: AtomicU64,
+    pub evictions: AtomicU64,
+}
+impl Counters {
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        counter_snapshot!(self, requests, evictions)
+    }
+}
+/// Wall-time telemetry; deliberately not part of [`Counters::snapshot`].
+pub struct IoStats {}
+/// Wall-time telemetry; deliberately not part of [`Counters::snapshot`].
+pub struct DurabilityStats {}
+/// Wall-time telemetry; deliberately not part of [`Counters::snapshot`].
+pub struct ResilienceStats {}
+"#;
+
+    #[test]
+    fn d3_passes_on_consistent_metrics() {
+        let r = run("platform/metrics.rs", METRICS_OK);
+        assert!(r.findings.is_empty(), "{}", r.to_text());
+        let audit = r.fingerprint.expect("metrics.rs was in scope");
+        assert_eq!(audit.counter_fields, vec!["requests", "evictions"]);
+        assert_eq!(audit.snapshot_fields, vec!["requests", "evictions"]);
+        assert_eq!(audit.guarded.len(), 3);
+    }
+
+    #[test]
+    fn d3_fails_on_missing_snapshot_field() {
+        let src = METRICS_OK.replace("counter_snapshot!(self, requests, evictions)", "counter_snapshot!(self, requests)");
+        let r = run("platform/metrics.rs", &src);
+        assert_eq!(rule_list(&r), vec![Rule::Fingerprint]);
+        assert!(r.findings[0].message.contains("evictions"));
+    }
+
+    #[test]
+    fn d3_fails_on_missing_exclusion_guard() {
+        let src = METRICS_OK.replace(
+            "/// Wall-time telemetry; deliberately not part of [`Counters::snapshot`].\npub struct IoStats {}",
+            "pub struct IoStats {}",
+        );
+        let r = run("platform/metrics.rs", &src);
+        assert_eq!(rule_list(&r), vec![Rule::Fingerprint]);
+        assert!(r.findings[0].message.contains("IoStats"));
+    }
+
+    // ---- D4 sleep ----
+
+    #[test]
+    fn d4_fails_on_sleep_outside_allowlist() {
+        let src = "fn f() { std::thread::sleep(d); }\n";
+        let r = run("swap/x.rs", src);
+        assert_eq!(rule_list(&r), vec![Rule::Sleep]);
+        assert!(run("main.rs", src).findings.is_empty());
+    }
+
+    // ---- D5 safety comments ----
+
+    #[test]
+    fn d5_fails_on_uncommented_unsafe() {
+        let src = "pub fn f(p: *mut u8) {\n    unsafe {\n        *p = 0;\n    }\n}\n";
+        let r = run("mem/x.rs", src);
+        assert_eq!(rule_list(&r), vec![Rule::SafetyComment]);
+        assert_eq!(r.findings[0].line, 2);
+    }
+
+    #[test]
+    fn d5_passes_with_safety_comment_and_shared_impl_pair() {
+        let src = "pub fn f(p: *mut u8) {\n    // SAFETY: caller guarantees p is valid.\n    unsafe {\n        *p = 0;\n    }\n}\n";
+        assert!(run("mem/x.rs", src).findings.is_empty());
+        let pair = "// SAFETY: the pointer is only dereferenced on one thread.\nunsafe impl Send for X {}\nunsafe impl Sync for X {}\n";
+        assert!(run("mem/x.rs", pair).findings.is_empty());
+    }
+
+    // ---- D6 forbidden calls ----
+
+    #[test]
+    fn d6_fails_on_mem_forget_and_request_path_unwrap() {
+        let r = run("swap/x.rs", "fn f(g: Guard) { std::mem::forget(g); }\n");
+        assert_eq!(rule_list(&r), vec![Rule::ForbiddenCall]);
+        let r2 = run("platform/router.rs", "fn f() { let x = map.get(&k).unwrap(); }\n");
+        assert_eq!(rule_list(&r2), vec![Rule::ForbiddenCall]);
+    }
+
+    #[test]
+    fn d6_allows_lock_poisoning_unwrap() {
+        let one_line = "fn f() { let g = self.inner.lock().unwrap(); }\n";
+        assert!(run("platform/router.rs", one_line).findings.is_empty());
+        let split = "fn f() {\n    let g = self.inner.lock()\n        .unwrap();\n}\n";
+        assert!(run("platform/router.rs", split).findings.is_empty());
+        // Outside the request path, unwrap is not flagged at all.
+        let elsewhere = "fn f() { let x = map.get(&k).unwrap(); }\n";
+        assert!(run("swap/x.rs", elsewhere).findings.is_empty());
+    }
+
+    // ---- pragmas ----
+
+    #[test]
+    fn pragma_suppresses_trailing_and_standalone() {
+        let trailing = "fn f() { let t = Instant::now(); } // lint:allow(wall-clock): startup only, never replayed\n";
+        assert!(run("mem/x.rs", trailing).findings.is_empty());
+        let standalone = "// lint:allow(wall-clock): startup only, never replayed\nfn f() { let t = Instant::now(); }\n";
+        assert!(run("mem/x.rs", standalone).findings.is_empty());
+    }
+
+    #[test]
+    fn pragma_scope_is_bounded() {
+        let far = "// lint:allow(wall-clock): startup only, never replayed\n\n\n\n\n\n\nfn f() { let t = Instant::now(); }\n";
+        let r = run("mem/x.rs", far);
+        assert_eq!(rule_list(&r), vec![Rule::WallClock]);
+    }
+
+    #[test]
+    fn pragma_must_name_the_right_rule() {
+        let wrong = "// lint:allow(sleep): wrong rule for this finding\nfn f() { let t = Instant::now(); }\n";
+        let r = run("mem/x.rs", wrong);
+        assert_eq!(rule_list(&r), vec![Rule::WallClock]);
+    }
+
+    #[test]
+    fn malformed_pragma_is_reported_and_prose_is_ignored() {
+        let no_reason = "fn f() {} // lint:allow(wall-clock)\n";
+        assert_eq!(rule_list(&run("mem/x.rs", no_reason)), vec![Rule::Pragma]);
+        let bad_rule = "fn f() {} // lint:allow(bogus): whatever\n";
+        assert_eq!(rule_list(&run("mem/x.rs", bad_rule)), vec![Rule::Pragma]);
+        let prose = "fn f() {} // the lint:allow marker is documented elsewhere\n";
+        assert!(run("mem/x.rs", prose).findings.is_empty());
+    }
+
+    // ---- report shape ----
+
+    #[test]
+    fn findings_print_file_line_rule_message() {
+        let r = run("mem/x.rs", "fn f() { let t = std::time::Instant::now(); }\n");
+        let text = r.to_text();
+        assert!(text.starts_with("mem/x.rs:1 [wall-clock] "), "{text}");
+        let json = r.to_json().to_string();
+        assert!(json.contains("\"rule\":\"wall-clock\""), "{json}");
+    }
+}

@@ -1,0 +1,583 @@
+//! The determinism-contract rules (see docs/static_analysis.md).
+//!
+//! Every rule reads [`lexer::LexedFile`] records: comment and literal
+//! contents are already stripped from the `code` text, so a needle such
+//! as a wall-clock call inside a string literal or a comment can never
+//! fire, and lines inside `#[cfg(test)]` items are skipped outright.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{contains_token, leading_ident, token_used, trailing_ident, LexedLine};
+use super::{Finding, LintConfig, Rule, SourceFile};
+
+/// Iterator-producing methods whose order is undefined on hash maps/sets.
+const ITER_METHODS: [&str; 10] = [
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".into_iter()",
+    ".into_keys()",
+    ".into_values()",
+    ".drain(",
+    ".retain(",
+];
+
+/// `unwrap`/`expect` shapes that only fire on lock poisoning, which is
+/// already fatal; these stay legal on the request path.
+const POISON_OK: [&str; 6] = [
+    ".lock().unwrap(",
+    ".lock().expect(",
+    ".read().unwrap(",
+    ".read().expect(",
+    ".write().unwrap(",
+    ".write().expect(",
+];
+
+/// `pat` ending in `/` matches any path under that directory; otherwise
+/// the path must equal `pat` or end with `/pat`.
+pub(crate) fn path_matches(path: &str, pat: &str) -> bool {
+    if pat.ends_with('/') {
+        path.starts_with(pat) || path.contains(&format!("/{pat}"))
+    } else {
+        path == pat || path.ends_with(&format!("/{pat}"))
+    }
+}
+
+fn in_any(path: &str, pats: &[&str]) -> bool {
+    pats.iter().any(|p| path_matches(path, p))
+}
+
+/// D1: wall-clock reads outside the allowlist.
+pub(crate) fn check_wall_clock(file: &SourceFile, cfg: &LintConfig, out: &mut Vec<Finding>) {
+    if in_any(&file.path, cfg.wall_clock_allow) {
+        return;
+    }
+    for (idx, line) in file.lexed.lines.iter().enumerate() {
+        if file.lexed.in_test[idx] {
+            continue;
+        }
+        for needle in ["Instant::now", "SystemTime"] {
+            if contains_token(&line.code, needle) {
+                out.push(Finding::new(
+                    file,
+                    idx + 1,
+                    Rule::WallClock,
+                    format!("wall-clock read `{needle}`; replay-eligible code must use simtime"),
+                ));
+                break;
+            }
+        }
+    }
+}
+
+/// D4: blocking sleeps outside the allowlist.
+pub(crate) fn check_sleep(file: &SourceFile, cfg: &LintConfig, out: &mut Vec<Finding>) {
+    if in_any(&file.path, cfg.sleep_allow) {
+        return;
+    }
+    for (idx, line) in file.lexed.lines.iter().enumerate() {
+        if file.lexed.in_test[idx] {
+            continue;
+        }
+        if contains_token(&line.code, "thread::sleep") {
+            out.push(Finding::new(
+                file,
+                idx + 1,
+                Rule::Sleep,
+                "blocking `thread::sleep`; delays must charge the virtual clock".to_string(),
+            ));
+        }
+    }
+}
+
+/// D5: `unsafe` without a preceding `// SAFETY:` comment.
+pub(crate) fn check_safety(file: &SourceFile, out: &mut Vec<Finding>) {
+    let lines = &file.lexed.lines;
+    for (idx, line) in lines.iter().enumerate() {
+        if file.lexed.in_test[idx] || !contains_token(&line.code, "unsafe") {
+            continue;
+        }
+        let mut ok = line.comment.contains("SAFETY");
+        let mut j = idx;
+        while !ok && j > 0 {
+            j -= 1;
+            let prev = &lines[j];
+            let code = prev.code.trim();
+            // Walk up through blank lines, attributes, and sibling
+            // `unsafe impl` items (a Send/Sync pair shares one comment).
+            let walkable =
+                code.is_empty() || code.starts_with("#[") || code.starts_with("unsafe impl");
+            if prev.comment.contains("SAFETY") {
+                ok = true;
+            }
+            if !walkable {
+                break;
+            }
+        }
+        if !ok {
+            out.push(Finding::new(
+                file,
+                idx + 1,
+                Rule::SafetyComment,
+                "`unsafe` without a preceding SAFETY comment".to_string(),
+            ));
+        }
+    }
+}
+
+/// D6: `mem::forget` anywhere; `unwrap()`/`expect()` on the request path.
+pub(crate) fn check_forbidden(file: &SourceFile, cfg: &LintConfig, out: &mut Vec<Finding>) {
+    let lines = &file.lexed.lines;
+    let request_path = in_any(&file.path, cfg.request_path);
+    for (idx, line) in lines.iter().enumerate() {
+        if file.lexed.in_test[idx] {
+            continue;
+        }
+        if contains_token(&line.code, "mem::forget") {
+            out.push(Finding::new(
+                file,
+                idx + 1,
+                Rule::ForbiddenCall,
+                "`mem::forget` leaks RAII guards and breaks reservation accounting".to_string(),
+            ));
+        }
+        if !request_path {
+            continue;
+        }
+        if !line.code.contains(".unwrap()") && !line.code.contains(".expect(") {
+            continue;
+        }
+        // Join with the previous line so `.lock()\n.unwrap()` chains are
+        // still recognized as the poisoning carve-out.
+        let mut joined = String::new();
+        if idx > 0 {
+            joined.push_str(&lines[idx - 1].code);
+        }
+        joined.push_str(&line.code);
+        joined.retain(|c| !c.is_whitespace());
+        if !POISON_OK.iter().any(|p| joined.contains(p)) {
+            out.push(Finding::new(
+                file,
+                idx + 1,
+                Rule::ForbiddenCall,
+                "`unwrap()`/`expect()` on the request path; surface an error instead".to_string(),
+            ));
+        }
+    }
+}
+
+/// Identifiers known (or locally shown) to be backed by hash containers.
+#[derive(Debug, Default)]
+pub(crate) struct Taint {
+    /// Names declared with a hash-container type anywhere in the tree.
+    global: BTreeSet<String>,
+    /// Per-file `let` bindings with hash-container types.
+    local: BTreeMap<String, BTreeSet<String>>,
+    /// Per-file non-`let` declarations with a *different* concrete type —
+    /// these shadow a same-named global taint within that file.
+    shadowed: BTreeMap<String, BTreeSet<String>>,
+}
+
+impl Taint {
+    fn active(&self, path: &str) -> Vec<&str> {
+        let mut names: BTreeSet<&str> = self.global.iter().map(String::as_str).collect();
+        if let Some(sh) = self.shadowed.get(path) {
+            for n in sh {
+                names.remove(n.as_str());
+            }
+        }
+        if let Some(lo) = self.local.get(path) {
+            for n in lo {
+                names.insert(n);
+            }
+        }
+        names.into_iter().collect()
+    }
+}
+
+/// Peel smart-pointer / sync wrappers off a type (or constructor) string.
+fn strip_wrappers(ty: &str) -> &str {
+    let mut t = ty.trim_start();
+    loop {
+        let before = t;
+        for pre in [
+            "&",
+            "mut ",
+            "'static ",
+            "std::sync::",
+            "std::cell::",
+            "std::collections::",
+            "Mutex<",
+            "RwLock<",
+            "Arc<",
+            "Rc<",
+            "RefCell<",
+            "Box<",
+            "Mutex::new(",
+            "RwLock::new(",
+            "Arc::new(",
+            "RefCell::new(",
+        ] {
+            if let Some(rest) = t.strip_prefix(pre) {
+                t = rest.trim_start();
+                break;
+            }
+        }
+        if t == before {
+            return t;
+        }
+    }
+}
+
+/// True when the declared type (after unwrapping) is a hash container.
+/// `Vec<Mutex<HashMap>>` stays untainted: iterating the *vector* is fine.
+fn is_hash_type(ty: &str) -> bool {
+    let t = strip_wrappers(ty);
+    for name in ["HashMap", "HashSet"] {
+        if let Some(rest) = t.strip_prefix(name) {
+            if !rest.starts_with(super::lexer::is_ident_char) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Collect hash-container taint from every non-test declaration in the
+/// tree: struct fields, fn params, struct-literal inits, and `let`s.
+pub(crate) fn collect_taint(files: &[SourceFile]) -> Taint {
+    let mut taint = Taint::default();
+    for file in files {
+        for (idx, line) in file.lexed.lines.iter().enumerate() {
+            if file.lexed.in_test[idx] {
+                continue;
+            }
+            scan_decl_line(&file.path, &line.code, &mut taint);
+        }
+    }
+    taint
+}
+
+fn scan_decl_line(path: &str, code: &str, taint: &mut Taint) {
+    let trimmed = code.trim_start();
+    let is_let = trimmed.starts_with("let ");
+    let bytes = code.as_bytes();
+    let mut k = 0;
+    while k < bytes.len() {
+        if bytes[k] != b':' {
+            k += 1;
+            continue;
+        }
+        if k + 1 < bytes.len() && bytes[k + 1] == b':' {
+            k += 2;
+            continue;
+        }
+        let name = trailing_ident(code[..k].trim_end());
+        let ty = &code[k + 1..];
+        k += 1;
+        if name.is_empty() || name.starts_with(|c: char| c.is_ascii_digit()) {
+            continue;
+        }
+        if is_hash_type(ty) {
+            if is_let {
+                record(&mut taint.local, path, name);
+            } else {
+                taint.global.insert(name.to_string());
+            }
+        } else if !is_let && !ty.trim().is_empty() {
+            // A concrete non-hash declaration: within this file the name
+            // refers to that binding, not to a hash container elsewhere.
+            // `let` lines never shadow — a sorted local view of a global
+            // map must not mask later uses of the map itself.
+            record(&mut taint.shadowed, path, name);
+        }
+    }
+    // Untyped `let` whose initializer mentions a hash container.
+    if is_let && (contains_token(code, "HashMap") || contains_token(code, "HashSet")) {
+        let rest = trimmed.strip_prefix("let ").unwrap_or(trimmed).trim_start();
+        let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+        let name = leading_ident(rest);
+        if !name.is_empty() {
+            record(&mut taint.local, path, name);
+        }
+    }
+}
+
+fn record(map: &mut BTreeMap<String, BTreeSet<String>>, path: &str, name: &str) {
+    map.entry(path.to_string()).or_default().insert(name.to_string());
+}
+
+/// D2: iteration over hash-keyed state in replay-reachable modules,
+/// unless deterministic-order evidence (a sort, or a BTree view) appears
+/// within the next few lines.
+pub(crate) fn check_map_iteration(
+    file: &SourceFile,
+    taint: &Taint,
+    cfg: &LintConfig,
+    out: &mut Vec<Finding>,
+) {
+    if !in_any(&file.path, cfg.replay_reachable) {
+        return;
+    }
+    let names = taint.active(&file.path);
+    if names.is_empty() {
+        return;
+    }
+    let lines = &file.lexed.lines;
+    for (idx, line) in lines.iter().enumerate() {
+        if file.lexed.in_test[idx] {
+            continue;
+        }
+        if !ITER_METHODS.iter().any(|m| line.code.contains(m)) {
+            continue;
+        }
+        let lo = idx.saturating_sub(2);
+        let hit = (lo..=idx).find_map(|j| {
+            if file.lexed.in_test[j] {
+                return None;
+            }
+            names.iter().copied().find(|n| token_used(&lines[j].code, n))
+        });
+        let Some(name) = hit else {
+            continue;
+        };
+        let hi = (idx + 3).min(lines.len() - 1);
+        let sorted = (idx..=hi)
+            .any(|j| lines[j].code.contains(".sort") || lines[j].code.contains("BTree"));
+        if sorted {
+            continue;
+        }
+        out.push(Finding::new(
+            file,
+            idx + 1,
+            Rule::MapIteration,
+            format!("iteration near hash-keyed `{name}`; sort first or justify with a pragma"),
+        ));
+    }
+}
+
+/// The D3 fingerprint audit: what the linter proved about `Counters`.
+#[derive(Debug)]
+pub struct FingerprintAudit {
+    /// Fields of `struct Counters`, in declaration order.
+    pub counter_fields: Vec<String>,
+    /// Idents folded into the fingerprint by `Counters::snapshot`.
+    pub snapshot_fields: Vec<String>,
+    /// Stats structs whose docs carry the exclusion guard.
+    pub guarded: Vec<String>,
+}
+
+const EXCLUDED_STATS: [&str; 3] = ["IoStats", "DurabilityStats", "ResilienceStats"];
+
+/// D3: every `Counters` field folds into `snapshot()`, and the wall-time
+/// stats structs stay documented as deliberately excluded.
+pub(crate) fn check_fingerprint(
+    files: &[SourceFile],
+    out: &mut Vec<Finding>,
+) -> Option<FingerprintAudit> {
+    let file = files
+        .iter()
+        .find(|f| path_matches(&f.path, "platform/metrics.rs"))?;
+    let lines = &file.lexed.lines;
+
+    let counter_fields = struct_fields(file, "Counters");
+    if counter_fields.is_empty() {
+        out.push(Finding::new(
+            file,
+            1,
+            Rule::Fingerprint,
+            "could not parse any `struct Counters` fields".to_string(),
+        ));
+    }
+    let (snapshot_fields, mac_line) = snapshot_idents(file, out);
+    for (name, line) in &counter_fields {
+        if !snapshot_fields.contains(name) {
+            out.push(Finding::new(
+                file,
+                *line,
+                Rule::Fingerprint,
+                format!("`Counters::{name}` is missing from `snapshot()`"),
+            ));
+        }
+    }
+    let field_names: BTreeSet<&String> = counter_fields.iter().map(|(n, _)| n).collect();
+    for name in &snapshot_fields {
+        if !field_names.contains(name) {
+            out.push(Finding::new(
+                file,
+                mac_line,
+                Rule::Fingerprint,
+                format!("`snapshot()` names `{name}`, which is not a `Counters` field"),
+            ));
+        }
+    }
+
+    let mut guarded = Vec::new();
+    for stat in EXCLUDED_STATS {
+        match find_struct_line(file, stat) {
+            None => out.push(Finding::new(
+                file,
+                1,
+                Rule::Fingerprint,
+                format!("exclusion guard: `struct {stat}` not found"),
+            )),
+            Some(idx) => {
+                if has_exclusion_marker(lines, idx) {
+                    guarded.push(stat.to_string());
+                } else {
+                    out.push(Finding::new(
+                        file,
+                        idx + 1,
+                        Rule::Fingerprint,
+                        format!("`{stat}` docs must state it is not part of `Counters::snapshot`"),
+                    ));
+                }
+            }
+        }
+    }
+    Some(FingerprintAudit {
+        counter_fields: counter_fields.into_iter().map(|(n, _)| n).collect(),
+        snapshot_fields,
+        guarded,
+    })
+}
+
+/// 0-based line of the first non-test `struct <name>` declaration.
+fn find_struct_line(file: &SourceFile, name: &str) -> Option<usize> {
+    let needle = format!("struct {name}");
+    file.lexed
+        .lines
+        .iter()
+        .enumerate()
+        .find(|(idx, l)| !file.lexed.in_test[*idx] && contains_token(&l.code, &needle))
+        .map(|(idx, _)| idx)
+}
+
+/// Field names of `struct <name>`, with their 1-based source lines.
+fn struct_fields(file: &SourceFile, name: &str) -> Vec<(String, usize)> {
+    let Some(start) = find_struct_line(file, name) else {
+        return Vec::new();
+    };
+    let lines = &file.lexed.lines;
+    let mut fields = Vec::new();
+    let mut depth: i64 = 0;
+    let mut opened = false;
+    for (j, line) in lines.iter().enumerate().skip(start) {
+        let code = line.code.trim();
+        if opened && depth == 1 {
+            let item = code.strip_prefix("pub ").unwrap_or(code);
+            let field = leading_ident(item);
+            if !field.is_empty() && item[field.len()..].trim_start().starts_with(':') {
+                fields.push((field.to_string(), j + 1));
+            }
+        }
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => {
+                    depth -= 1;
+                    if opened && depth == 0 {
+                        return fields;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    fields
+}
+
+/// Last line index of the brace-matched block opening at/after `start`.
+fn block_end(lines: &[LexedLine], start: usize) -> usize {
+    let mut depth: i64 = 0;
+    let mut opened = false;
+    for (j, line) in lines.iter().enumerate().skip(start) {
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => {
+                    depth -= 1;
+                    if opened && depth == 0 {
+                        return j;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    lines.len().saturating_sub(1)
+}
+
+/// Idents listed in the `counter_snapshot!` call inside `impl Counters`,
+/// plus the 1-based line of that call (for finding attribution).
+fn snapshot_idents(file: &SourceFile, out: &mut Vec<Finding>) -> (Vec<String>, usize) {
+    let lines = &file.lexed.lines;
+    let Some(start) = lines
+        .iter()
+        .enumerate()
+        .find(|(idx, l)| !file.lexed.in_test[*idx] && contains_token(&l.code, "impl Counters"))
+        .map(|(idx, _)| idx)
+    else {
+        out.push(Finding::new(
+            file,
+            1,
+            Rule::Fingerprint,
+            "no `impl Counters` block found".to_string(),
+        ));
+        return (Vec::new(), 1);
+    };
+    let end = block_end(lines, start);
+    let Some(mac) = (start..=end).find(|&j| lines[j].code.contains("counter_snapshot!")) else {
+        out.push(Finding::new(
+            file,
+            start + 1,
+            Rule::Fingerprint,
+            "no `counter_snapshot!` call inside `impl Counters`".to_string(),
+        ));
+        return (Vec::new(), start + 1);
+    };
+    let mut acc = lines[mac]
+        .code
+        .split_once("counter_snapshot!")
+        .map(|(_, tail)| tail.to_string())
+        .unwrap_or_default();
+    let mut j = mac;
+    while !acc.contains(')') && j < end {
+        j += 1;
+        acc.push(' ');
+        acc.push_str(&lines[j].code);
+    }
+    let args = acc.split(')').next().unwrap_or("");
+    let idents = args
+        .split(|c: char| !super::lexer::is_ident_char(c))
+        .filter(|s| !s.is_empty() && *s != "self")
+        .map(str::to_string)
+        .collect();
+    (idents, mac + 1)
+}
+
+/// The exclusion guard: contiguous docs/attrs above `struct` line `idx`
+/// must say the struct is deliberately outside `Counters::snapshot`.
+fn has_exclusion_marker(lines: &[LexedLine], idx: usize) -> bool {
+    let mut acc = String::new();
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        let code = l.code.trim();
+        if code.is_empty() || code.starts_with("#[") {
+            acc.push_str(&l.comment);
+            continue;
+        }
+        break;
+    }
+    acc.contains("not part of") && acc.contains("Counters::snapshot")
+}

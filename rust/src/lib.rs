@@ -37,6 +37,7 @@
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every figure/table of the paper to a bench target.
 
+pub mod analysis;
 pub mod bench_support;
 pub mod config;
 pub mod container;

@@ -15,6 +15,7 @@
 //! repro fig7   [--quick]          # Figure 7: PSS per container state
 //! repro density [--budget-mib N]  # deployment-density experiment
 //! repro fsck   [--dir DIR] [--config FILE]   # offline image validation
+//! repro lint   [--dir rust/src] [--json]     # determinism-contract linter
 //! repro list-artifacts            # show what the runtime can load
 //! ```
 
@@ -297,6 +298,31 @@ fn cmd_fsck(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro lint` — run the determinism-contract static analyzer over a
+/// source tree (docs/static_analysis.md). Prints one `file:line [rule]
+/// message` line per finding and exits non-zero if any survive pragma
+/// suppression, so CI can gate on a clean tree.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let dir = args.get("dir").unwrap_or("rust/src");
+    let report = quark_hibernate::analysis::lint_tree(std::path::Path::new(dir))?;
+    if args.has("json") {
+        println!("{}", report.to_json());
+    } else {
+        print!("{}", report.to_text());
+        if report.findings.is_empty() {
+            println!(
+                "lint: clean — {} file(s) scanned, {} pragma(s) in effect",
+                report.files,
+                report.pragmas.len()
+            );
+        }
+    }
+    if !report.findings.is_empty() {
+        bail!("{} lint finding(s) under {dir}", report.findings.len());
+    }
+    Ok(())
+}
+
 fn cmd_list_artifacts(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let m = quark_hibernate::runtime::Manifest::load(&cfg.artifacts_dir)?;
@@ -331,13 +357,14 @@ fn main() -> Result<()> {
             Ok(())
         }
         Some("fsck") => cmd_fsck(&args),
+        Some("lint") => cmd_lint(&args),
         Some("list-artifacts") => cmd_list_artifacts(&args),
         Some(other) => bail!(
-            "unknown command `{other}` (try serve|replay|fig6|fig7|density|fsck|list-artifacts)"
+            "unknown command `{other}` (try serve|replay|fig6|fig7|density|fsck|lint|list-artifacts)"
         ),
         None => {
             eprintln!(
-                "usage: repro <serve|replay|fig6|fig7|density|fsck|list-artifacts> [--config FILE] [-o key=value]"
+                "usage: repro <serve|replay|fig6|fig7|density|fsck|lint|list-artifacts> [--config FILE] [-o key=value]"
             );
             Ok(())
         }

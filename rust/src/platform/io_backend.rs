@@ -138,6 +138,9 @@ impl IoDir {
 #[derive(Copy, Clone)]
 pub struct PagePtr(pub *const u8);
 
+// SAFETY: per the contract above, the pointee is exclusive, valid, and
+// unaliased for the duration of the blocking execute call, so handing the
+// pointer to a worker thread cannot race.
 unsafe impl Send for PagePtr {}
 unsafe impl Sync for PagePtr {}
 

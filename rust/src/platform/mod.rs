@@ -906,6 +906,7 @@ impl Platform {
             .iter()
             .map(|s| {
                 let guard = s.lock();
+                // lint:allow(map-iteration): commutative count over all pools
                 guard
                     .pools
                     .values()
@@ -983,6 +984,7 @@ impl Platform {
         let mut tenant_used: BTreeMap<String, Vec<u64>> = BTreeMap::new();
         for si in 0..n {
             let guard = self.shards.get(si).lock();
+            // lint:allow(map-iteration): commutative sums into a BTreeMap
             for (w, pool) in guard.pools.iter() {
                 let bytes: u64 = pool.instances.iter().map(|i| i.live_bytes()).sum();
                 shard_committed[si] += bytes;
@@ -1018,6 +1020,7 @@ impl Platform {
         let guard = self.shards.get(si).lock();
         let mut committed = 0u64;
         let mut tenant_used: Vec<(String, u64)> = Vec::new();
+        // lint:allow(map-iteration): commutative sums; tenant list sorted below
         for (w, pool) in guard.pools.iter() {
             let bytes: u64 = pool.instances.iter().map(|i| i.live_bytes()).sum();
             committed += bytes;
@@ -1132,10 +1135,10 @@ impl Platform {
         let mut decided: Vec<(String, Vec<Decision>)> = Vec::new();
         {
             let guard = shard.lock();
-            let mut pools: Vec<(&String, &pool::FunctionPool)> = guard.pools.iter().collect();
-            pools.sort_by(|a, b| a.0.cmp(b.0));
+            let mut sorted: Vec<(&String, &pool::FunctionPool)> = guard.pools.iter().collect();
+            sorted.sort_by(|a, b| a.0.cmp(b.0));
             let mut views: Vec<policy::InstanceView> = Vec::new();
-            for (w, fp) in pools {
+            for (w, fp) in sorted {
                 views.clear();
                 for (idx, inst) in fp.instances.iter().enumerate() {
                     // Reserved = request/policy action in flight: not
@@ -1199,6 +1202,7 @@ impl Platform {
         }
         {
             let mut guard = shard.lock();
+            // lint:allow(map-iteration): per-pool sweep; order is unobservable
             for p in guard.pools.values_mut() {
                 p.sweep_dead();
             }
@@ -1316,6 +1320,7 @@ impl Platform {
             est_bytes,
             instance_id,
             submitted_vns: now_vns,
+            // lint:allow(wall-clock): queue-wait telemetry only (IoStats wall domain)
             enqueued_wall: std::time::Instant::now(),
             chaos_fault: self.assign_job_fault(workload, false, instance_id, now_vns),
         })?;
@@ -1388,6 +1393,7 @@ impl Platform {
             est_bytes,
             instance_id,
             submitted_vns: now_vns,
+            // lint:allow(wall-clock): queue-wait telemetry only (IoStats wall domain)
             enqueued_wall: std::time::Instant::now(),
             chaos_fault: self.assign_job_fault(workload, true, instance_id, now_vns),
         })?;
@@ -1423,6 +1429,7 @@ impl Platform {
             est_bytes,
             instance_id,
             submitted_vns: now_vns,
+            // lint:allow(wall-clock): queue-wait telemetry only (IoStats wall domain)
             enqueued_wall: std::time::Instant::now(),
             chaos_fault: self.assign_job_fault(workload, false, instance_id, now_vns),
         })?;
@@ -1532,6 +1539,7 @@ impl Platform {
             // dropping it.
             let handles: Vec<(String, Vec<Arc<Mutex<Sandbox>>>)> = {
                 let guard = shard.lock();
+                // lint:allow(map-iteration): the snapshot is sorted by name below
                 guard
                     .pools
                     .iter()

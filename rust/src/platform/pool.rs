@@ -102,6 +102,7 @@ impl FunctionPool {
 
     pub fn add(&mut self, sandbox: Sandbox, now_vns: u64) -> &Instance {
         let live = sandbox.live_bytes();
+        let idx = self.instances.len();
         self.instances.push(Instance {
             sandbox: Arc::new(Mutex::new(sandbox)),
             last_active: Arc::new(AtomicU64::new(now_vns)),
@@ -109,7 +110,7 @@ impl FunctionPool {
             live_gauge: Arc::new(AtomicU64::new(live)),
             busy: Arc::new(AtomicBool::new(false)),
         });
-        self.instances.last().unwrap()
+        &self.instances[idx]
     }
 
     /// Count instances by state.

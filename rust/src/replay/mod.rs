@@ -153,6 +153,7 @@ impl<'p> ReplayEngine<'p> {
     /// its events in input order, like the old single-threaded loop —
     /// but the determinism contract is only stated for sorted input.
     pub fn run(&self, events: &[TraceEvent]) -> Result<ReplayOutcome> {
+        // lint:allow(wall-clock): reporting-only wall_ns; never in the fingerprint
         let t0 = Instant::now();
         if events.is_empty() {
             return Ok(ReplayOutcome {

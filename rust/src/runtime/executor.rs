@@ -28,10 +28,10 @@ pub struct PjrtRunner {
     loaded: Mutex<HashMap<String, &'static Loaded>>,
 }
 
-// The xla crate's client/executable types wrap PJRT handles that are safe
-// to share across threads (PJRT CPU client is thread-safe); the crate just
-// doesn't declare it. We serialize compilation behind the mutex and PJRT
-// serializes execution internally.
+// SAFETY: the xla crate's client/executable types wrap PJRT handles that
+// are safe to share across threads (the PJRT CPU client is thread-safe);
+// the crate just doesn't declare it. We serialize compilation behind the
+// mutex and PJRT serializes execution internally.
 unsafe impl Send for PjrtRunner {}
 unsafe impl Sync for PjrtRunner {}
 

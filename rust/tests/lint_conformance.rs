@@ -1,0 +1,75 @@
+//! Tier-1 conformance: the determinism-contract linter must be clean on
+//! the real source tree (docs/static_analysis.md).
+//!
+//! A wall-clock read, an unsorted hash-map walk in a replay-reachable
+//! module, a `Counters` field left out of the fingerprint, an
+//! uncommented `unsafe`, or a request-path `unwrap()` all fail this test
+//! — the same findings `repro lint` and the CI `lint` job report.
+
+use std::path::Path;
+
+use quark_hibernate::analysis;
+
+fn src_root() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src")
+}
+
+#[test]
+fn tree_is_lint_clean() {
+    let report = analysis::lint_tree(&src_root()).expect("scan rust/src");
+    assert!(
+        report.files >= 40,
+        "suspiciously small scan: {} files — wrong root?",
+        report.files
+    );
+    assert!(
+        report.findings.is_empty(),
+        "determinism-contract findings in the tree:\n{}",
+        report.to_text()
+    );
+}
+
+/// The D3 audit must actually have parsed the metrics module — an empty
+/// finding list because the parser silently matched nothing would make
+/// `tree_is_lint_clean` vacuous for fingerprint hygiene.
+#[test]
+fn fingerprint_contract_is_parsed() {
+    let report = analysis::lint_tree(&src_root()).expect("scan rust/src");
+    let audit = report
+        .fingerprint
+        .expect("platform/metrics.rs was scanned and parsed");
+    assert!(
+        audit.counter_fields.len() >= 17,
+        "Counters parse lost fields: {:?}",
+        audit.counter_fields
+    );
+    assert_eq!(
+        audit.counter_fields.len(),
+        audit.snapshot_fields.len(),
+        "field/snapshot mismatch"
+    );
+    assert_eq!(
+        audit.guarded,
+        vec!["IoStats", "DurabilityStats", "ResilienceStats"],
+        "exclusion guards missing"
+    );
+}
+
+/// The `mem/` unsafe audit holds without suppressions: every `unsafe`
+/// there carries a real SAFETY comment, not a pragma.
+#[test]
+fn mem_carries_no_safety_pragmas() {
+    let report = analysis::lint_tree(&src_root()).expect("scan rust/src");
+    let offenders: Vec<String> = report
+        .pragmas
+        .iter()
+        .filter(|p| {
+            p.file.starts_with("mem/") && p.rules.contains(&analysis::Rule::SafetyComment)
+        })
+        .map(|p| format!("{}:{}", p.file, p.line))
+        .collect();
+    assert!(
+        offenders.is_empty(),
+        "safety-comment pragmas under mem/: {offenders:?}"
+    );
+}
